@@ -1,0 +1,59 @@
+//! MoE dispatch/combine over the TransferEngine (paper §6), plus the
+//! actual expert computation via the AOT-compiled Pallas MoE block.
+//!
+//! Runs a decode-shaped all-to-all epoch at EP=16 comparing our
+//! proxy-based kernels against the DeepEP-like and NVSHMEM-proxy-like
+//! baselines, then feeds a batch through the real `moe_block`
+//! executable (L1 Pallas kernel inside, loaded via PJRT) to show the
+//! compute side the dispatch feeds.
+//!
+//! Run: cargo run --release --example moe_routing
+
+use fabric_lib::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};
+use fabric_lib::fabric::profile::NicProfile;
+use fabric_lib::runtime::{ArgValue, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // --- communication: dispatch/combine latencies ---
+    let cfg = MoeConfig::decode(16, 128);
+    println!(
+        "MoE all-to-all: EP={}, {} experts (top-{}), {} tokens/rank, {}B/token",
+        cfg.ranks, cfg.experts, cfg.top_k, cfg.tokens, cfg.dispatch_token_bytes
+    );
+    for (imp, nic, nics, label) in [
+        (MoeImpl::Ours, NicProfile::connectx7(), 1u8, "ours @ CX-7"),
+        (MoeImpl::DeepEp, NicProfile::connectx7(), 1, "DeepEP-like @ CX-7"),
+        (MoeImpl::Ours, NicProfile::efa(), 2, "ours @ EFA (2 NICs)"),
+        (MoeImpl::Pplx, NicProfile::efa(), 2, "pplx-like @ EFA"),
+    ] {
+        let mut lat = run_decode_epoch(&cfg, imp, nic, nics, 4);
+        println!(
+            "  {label:22} dispatch p50 {:>6.0} us   combine p50 {:>6.0} us",
+            lat.dispatch.percentile(50.0) as f64 / 1e3,
+            lat.combine.percentile(50.0) as f64 / 1e3,
+        );
+    }
+
+    // --- compute: the dispatched tokens hit the real expert kernels ---
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::load(&dir)?;
+        let shape = rt.output_shape("moe_block", 0)?;
+        let n: usize = shape.iter().product();
+        let x: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.01).sin() * 0.1).collect();
+        let t0 = std::time::Instant::now();
+        let out = rt.execute("moe_block", &[ArgValue::F32(&x, &shape)])?;
+        let dt = t0.elapsed();
+        let sum: f32 = out[0].iter().map(|v| v.abs()).sum();
+        println!(
+            "\nmoe_block (AOT Pallas expert FFN via PJRT): {:?} tokens in {:.2} ms, |out|_1 = {:.3}",
+            shape[0],
+            dt.as_secs_f64() * 1e3,
+            sum
+        );
+    } else {
+        println!("\n(artifacts not built — skipping the PJRT expert-compute demo)");
+    }
+    println!("moe_routing OK");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! RL rollout weight update (paper §5): P2P pipelined transfer vs the
+//! rank0 gather+broadcast path existing frameworks use.
+//!
+//! Runs the simulated deployment at a 16-rank slice of the Kimi-K2-1T
+//! shape and prints the per-rank stage breakdown + the baseline
+//! comparison.
+//!
+//! Run: cargo run --release --example rl_weight_update [-- --full]
+
+use fabric_lib::apps::rlweights::{run_p2p_transfer, run_rank0_broadcast, RlModelSpec};
+use fabric_lib::fabric::profile::NicProfile;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let spec = if full {
+        RlModelSpec::kimi_k2_1t()
+    } else {
+        RlModelSpec {
+            t_ranks: 16,
+            r_ranks: 8,
+            total_params: 1_000_000_000_000 / 16,
+            ..RlModelSpec::kimi_k2_1t()
+        }
+    };
+    println!(
+        "model {}: {} training ranks (bf16) -> {} inference ranks (fp8), \
+         {} params/rank, {} mesh groups",
+        spec.name, spec.t_ranks, spec.r_ranks, spec.params_per_rank, spec.mesh_groups
+    );
+
+    let p2p = run_p2p_transfer(&spec, NicProfile::connectx7(), 1.0);
+    let t = p2p.rank0;
+    println!("\nP2P pipelined transfer: total {:.0} ms", p2p.total_ms);
+    println!("  rank0 stages (overlapped):");
+    println!("    H2D memcpy      {:>6.0} ms  ({} calls)", t.h2d as f64 / 1e6, t.h2d_calls);
+    println!("    full_tensor()   {:>6.0} ms  ({} calls)", t.full_tensor as f64 / 1e6, t.full_tensor_calls);
+    println!("    fuse projections{:>6.0} ms", t.fuse as f64 / 1e6);
+    println!("    quantize fp8    {:>6.0} ms  ({} calls)", t.quantize as f64 / 1e6, t.quantize_calls);
+    println!("    RDMA submit     {:>6.0} ms  ({} writes)", t.rdma_submit as f64 / 1e6, t.rdma_calls);
+    println!("    barrier wait    {:>6.0} ms", t.wait_ranks as f64 / 1e6);
+    println!(
+        "  fabric: {:.1} GiB written, aggregate {:.0} Gbps",
+        p2p.bytes as f64 / (1u64 << 30) as f64,
+        p2p.agg_gbps
+    );
+
+    let base = run_rank0_broadcast(&spec, NicProfile::connectx7(), 1);
+    println!(
+        "\nrank0 gather+broadcast baseline: gather {:.0} ms + broadcast {:.0} ms = {:.0} ms",
+        base.gather_ms, base.broadcast_ms, base.total_ms
+    );
+    println!(
+        "\nP2P speedup: {:.0}x  (paper: >100x at full 1T scale — every byte \
+         of the baseline squeezes through one NIC)",
+        base.total_ms / p2p.total_ms
+    );
+}

@@ -1,0 +1,153 @@
+"""AOT pipeline: lower the L2/L1 graph to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT serialized protos: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the rust `xla` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Model weights are baked into the HLO as constants: the rust runtime
+loads a self-contained executable per entry point and never imports
+Python. A `manifest.json` describes every artifact's I/O signature.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.quantize import quantize_fp8
+
+# Entry-point shape choices (static HLO per shape).
+PREFILL_LENS = (32, 64, 128)
+MOE_BLOCK_TOKENS = 128
+QUANT_SHAPE = (64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so
+    the rust side unwraps a single tuple).
+
+    `print_large_constants` is essential: the default printer elides
+    big weight tensors as `constant({...})`, which the rust-side text
+    parser would reject (or worse, mis-parse). Metadata is dropped to
+    keep artifacts small.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _sig(args, outs):
+    def one(x):
+        return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+    return {
+        "inputs": [one(a) for a in args],
+        "outputs": [one(o) for o in jax.tree.leaves(outs)],
+    }
+
+
+def build_artifacts(out_dir: str, cfg: M.ModelConfig, seed: int = 0):
+    """Lower all entry points; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    params = M.init_params(cfg, seed)
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "n_experts": cfg.n_experts,
+            "top_k": cfg.top_k,
+            "max_seq": cfg.max_seq,
+            "param_count": cfg.param_count(),
+            "seed": seed,
+        },
+        "entries": {},
+    }
+
+    def emit(name, fn, example_args):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *example_args)
+        manifest["entries"][name] = {"file": fname, **_sig(example_args, outs)}
+        print(f"  {name}: {len(text)} chars -> {fname}")
+
+    # Prefill at several static lengths (chunked-prefill buckets).
+    for s in PREFILL_LENS:
+        if s > cfg.max_seq:
+            continue
+        emit(
+            f"prefill_{s}",
+            lambda toks: M.prefill(cfg, params, toks),
+            (jax.ShapeDtypeStruct((s,), jnp.int32),),
+        )
+
+    # Single-token decode against the padded cache.
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head), jnp.float32
+    )
+    emit(
+        "decode",
+        lambda tok, kc, vc, pos: M.decode_step(cfg, params, tok, kc, vc, pos),
+        (
+            jax.ShapeDtypeStruct((), jnp.int32),
+            cache,
+            cache,
+            jax.ShapeDtypeStruct((), jnp.int32),
+        ),
+    )
+
+    # Standalone MoE block (expert compute for the MoE example).
+    emit(
+        "moe_block",
+        lambda x: M.moe_block(cfg, params, x),
+        (jax.ShapeDtypeStruct((MOE_BLOCK_TOKENS, cfg.d_model), jnp.float32),),
+    )
+
+    # fp8 quantize round-trip (RL weight-transfer stage 2); returns
+    # dequantized f32 + scales so the PJRT I/O stays in f32.
+    def quant_roundtrip(x):
+        q, s = quantize_fp8(x)
+        return q.astype(jnp.float32) * s, s
+
+    emit(
+        "quantize_roundtrip",
+        quant_roundtrip,
+        (jax.ShapeDtypeStruct(QUANT_SHAPE, jnp.float32),),
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = M.ModelConfig()
+    print(f"AOT-lowering MoE transformer ({cfg.param_count()} params)")
+    build_artifacts(args.out_dir, cfg, args.seed)
+    print(f"manifest + artifacts in {os.path.abspath(args.out_dir)}")
+
+
+if __name__ == "__main__":
+    main()

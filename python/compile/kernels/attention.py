@@ -1,0 +1,71 @@
+"""Pallas kernel: single-token decode attention over the KV cache.
+
+One grid step per (batch, head): the query row stays resident in VMEM
+while K/V panels stream from HBM; softmax runs in f32 (numerically
+safe for long prefixes). The cache is padded to `max_seq`; a validity
+count masks padded rows to -inf inside the kernel, so the same static
+HLO serves every sequence length — required for AOT export.
+
+Grid/BlockSpec choices (TPU idiom, not a CUDA port): a warp-per-row
+reduction in the paper's CUDA world becomes a lane-dimension reduction
+over the VMEM tile here.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(n_valid_ref, q_ref, k_ref, v_ref, o_ref):
+    # q_ref: [1, Dh]; k_ref/v_ref: [1, S, Dh]; n_valid_ref: [1].
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    n_valid = n_valid_ref[0]
+    s = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # [S]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (s,), 0)
+    scores = jnp.where(idx < n_valid, scores, NEG_INF)
+    m = jnp.max(scores)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p)
+    o = jnp.dot(p, v, preferred_element_type=jnp.float32) / denom  # [Dh]
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@jax.jit
+def decode_attention(q, k, v, n_valid=None):
+    """Decode attention via Pallas.
+
+    Args:
+      q: [B, H, Dh]; k, v: [B, H, S, Dh].
+      n_valid: scalar i32 — number of valid cache rows (defaults to S).
+
+    Returns:
+      [B, H, Dh], dtype of ``q``.
+    """
+    b, h, dh = q.shape
+    s = k.shape[2]
+    if n_valid is None:
+        n_valid = jnp.asarray(s, jnp.int32)
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (b * h,))
+    qf = q.reshape(b * h, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, dh), lambda i: (i, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, dh), q.dtype),
+        interpret=True,
+    )(nv, qf, kf, vf)
+    return out.reshape(b, h, dh)

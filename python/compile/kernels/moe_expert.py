@@ -1,0 +1,77 @@
+"""Pallas kernel: grouped expert FFN (the MoE compute hot spot).
+
+Hardware adaptation (paper targets CUDA SMs; see DESIGN.md
+§Hardware-Adaptation): instead of balancing tokens across threadblocks,
+the grid iterates (expert, token-tile) with `BlockSpec`s that stream
+one expert's weight panels HBM→VMEM while the MXU consumes the previous
+tile — the double-buffered schedule Pallas derives from the index maps.
+Matmuls accumulate in f32 via `preferred_element_type` (MXU-style).
+
+VMEM budget per grid step (see DESIGN.md §Perf for the roofline
+estimate): x tile `TILE_C×D` + w1 panel `D×F` + w2 panel `F×D` +
+h scratch `TILE_C×F` + out tile `TILE_C×D`.
+
+Must run with `interpret=True` on CPU PJRT (Mosaic custom-calls are
+TPU-only); the AOT pipeline inherits that flag.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_C = 32
+
+
+def _kernel(x_ref, w1_ref, w2_ref, o_ref):
+    # x_ref: [1, TILE_C, D]; w1_ref: [1, D, F]; w2_ref: [1, F, D].
+    x = x_ref[0]
+    w1 = w1_ref[0]
+    w2 = w2_ref[0]
+    h = x.astype(jnp.float32) @ w1.astype(jnp.float32)
+    h = h * jax.nn.sigmoid(h)  # SiLU in f32
+    o = jnp.dot(h, w2.astype(jnp.float32), preferred_element_type=jnp.float32)
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c",))
+def moe_expert(x, w1, w2, tile_c: int = DEFAULT_TILE_C):
+    """Grouped expert FFN via Pallas.
+
+    Args:
+      x:  [E, C, D] tokens packed per expert (C = capacity, padded).
+      w1: [E, D, F]; w2: [E, F, D].
+      tile_c: token-tile size (capacity must be divisible or smaller).
+
+    Returns:
+      [E, C, D] outputs, same dtype as ``x``.
+    """
+    e, c, d = x.shape
+    _, _, f = w1.shape
+    tc = min(tile_c, c)
+    if c % tc != 0:
+        # Pad capacity to a tile multiple; padded rows compute garbage
+        # that the caller ignores (they are padding tokens anyway).
+        pad = tc - c % tc
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        out = moe_expert(x, w1, w2, tile_c=tc)
+        return out[:, :c, :]
+    grid = (e, c // tc)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tc, d), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((1, d, f), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda ei, ti: (ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tc, d), lambda ei, ti: (ei, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def vmem_bytes(tile_c: int, d: int, f: int, itemsize: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (perf reporting)."""
+    return itemsize * (tile_c * d * 2 + d * f + f * d + tile_c * f)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; the
+pytest suite asserts allclose between kernel and oracle across shape /
+dtype sweeps (hypothesis). These oracles are also used directly by
+`model.py` when a dimension is too small to tile.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def moe_expert_ref(x, w1, w2):
+    """Grouped expert FFN: per-expert 2-layer MLP with SiLU.
+
+    Args:
+      x:  [E, C, D]  tokens packed per expert (padded to capacity C).
+      w1: [E, D, F]  up-projection per expert.
+      w2: [E, F, D]  down-projection per expert.
+
+    Returns:
+      [E, C, D] expert outputs.
+    """
+    h = silu(jnp.einsum("ecd,edf->ecf", x, w1))
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def decode_attention_ref(q, k, v, n_valid=None):
+    """Single-token decode attention.
+
+    Args:
+      q: [B, H, Dh]      query for the new token.
+      k: [B, H, S, Dh]   key cache (padded).
+      v: [B, H, S, Dh]   value cache.
+      n_valid: scalar — number of valid cache rows (default S).
+
+    Returns:
+      [B, H, Dh] attention output.
+    """
+    s = k.shape[2]
+    if n_valid is None:
+        n_valid = s
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    mask = jnp.arange(s) < n_valid
+    scores = jnp.where(mask[None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhs,bhsd->bhd", p, v)
+
+
+FP8_MAX = 448.0  # float8_e4m3fn max normal
+
+
+def quantize_fp8_ref(x):
+    """Row-wise fp8-e4m3 quantization (RL weight transfer path).
+
+    Args:
+      x: [R, C] float32/bfloat16.
+
+    Returns:
+      (q, scale): q [R, C] float8_e4m3fn, scale [R, 1] float32 with
+      x ≈ q.astype(f32) * scale.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / FP8_MAX
+    q = (x.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+    return q, scale
+
+
+def dequantize_fp8_ref(q, scale):
+    """Inverse of :func:`quantize_fp8_ref` (up to fp8 rounding)."""
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,228 @@
+"""L2: MoE transformer (prefill + decode) in JAX, calling the L1
+Pallas kernels.
+
+This is the model served by the disaggregated-inference example: the
+prefiller node runs :func:`prefill` (producing the KV cache that
+fabric-lib transfers), the decoder node runs :func:`decode_step`
+against the received cache. A deterministic seed builds synthetic
+weights, so prefiller, decoder and the non-disaggregated reference all
+agree bit-for-bit — which is how the end-to-end test validates the
+transfer path.
+
+Everything here runs at build time only: `aot.py` lowers these
+functions to HLO text executed from Rust via PJRT.
+"""
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention
+from .kernels.moe_expert import moe_expert
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Small MoE transformer; defaults sized for CPU-PJRT serving."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 256
+    n_experts: int = 4
+    top_k: int = 2
+    max_seq: int = 160
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def kv_bytes_per_token_layer(self) -> int:
+        """f32 K+V bytes per (token, layer) — the transfer unit maths
+        used by the KvCache app."""
+        return 2 * self.d_model * 4
+
+    def param_count(self) -> int:
+        c = self
+        per_layer = (
+            4 * c.d_model * c.d_model  # qkv + out proj
+            + c.n_experts * 2 * c.d_model * c.d_ff  # expert mlps
+            + c.d_model * c.n_experts  # router
+        )
+        return c.vocab * c.d_model * 2 + c.n_layers * per_layer
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic synthetic weights (shared by all nodes)."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 3 + cfg.n_layers)
+    scale = 0.1
+
+    def rnd(key, shape, s=scale):
+        return (jax.random.normal(key, shape, jnp.float32) * s)
+
+    params = {
+        "embed": rnd(ks[0], (cfg.vocab, cfg.d_model), 1.0 / cfg.d_model**0.5),
+        "unembed": rnd(ks[1], (cfg.d_model, cfg.vocab)),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(ks[3 + li], 6)
+        params["layers"].append(
+            {
+                "wqkv": rnd(lk[0], (cfg.d_model, 3 * cfg.d_model)),
+                "wo": rnd(lk[1], (cfg.d_model, cfg.d_model)),
+                "router": rnd(lk[2], (cfg.d_model, cfg.n_experts)),
+                "w1": rnd(lk[3], (cfg.n_experts, cfg.d_model, cfg.d_ff)),
+                "w2": rnd(lk[4], (cfg.n_experts, cfg.d_ff, cfg.d_model)),
+                "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _rms_norm(x, g):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _moe_ffn(cfg: ModelConfig, layer, x):
+    """Top-k routed MoE FFN over [N, D] tokens.
+
+    Dense-capacity formulation: every expert computes every token via
+    the grouped Pallas kernel; the router's top-k gates mask the
+    combine. At these sizes the dense form is MXU-friendly and keeps
+    the AOT graph static (no dynamic shapes in HLO).
+    """
+    n, d = x.shape
+    logits = x @ layer["router"]  # [N, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    # Top-k via sort: xla_extension 0.5.1's HLO text parser predates
+    # the dedicated `topk` op jax.lax.top_k now lowers to, but it
+    # parses `sort` fine.
+    thresh = jnp.sort(gates, axis=-1)[:, cfg.n_experts - cfg.top_k][:, None]
+    mask = (gates >= thresh).astype(x.dtype)  # [N, E]
+    gates = gates * mask
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    xe = jnp.broadcast_to(x[None], (cfg.n_experts, n, d))
+    ye = moe_expert(xe, layer["w1"], layer["w2"])  # [E, N, D]
+    return jnp.einsum("end,ne->nd", ye, gates)
+
+
+def _attn_prefill(cfg: ModelConfig, layer, x):
+    """Causal self-attention over [S, D]; returns (out, k, v) with
+    k/v shaped [H, S, Dh] for the cache."""
+    s, d = x.shape
+    qkv = x @ layer["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    k = k.reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    v = v.reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", p, v)
+    o = o.transpose(1, 0, 2).reshape(s, d) @ layer["wo"]
+    return o, k, v
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    """Run the prefill phase over ``tokens`` [S].
+
+    Returns:
+      (logits [vocab] for the last position,
+       k_cache [L, H, S, Dh], v_cache [L, H, S, Dh]).
+    """
+    x = params["embed"][tokens]  # [S, D]
+    ks, vs = [], []
+    for layer in params["layers"]:
+        a, k, v = _attn_prefill(cfg, layer, _rms_norm(x, layer["ln1"]))
+        x = x + a
+        x = x + _moe_ffn(cfg, layer, _rms_norm(x, layer["ln2"]))
+        ks.append(k)
+        vs.append(v)
+    logits = _rms_norm(x[-1], jnp.ones((cfg.d_model,))) @ params["unembed"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(cfg: ModelConfig, params, token, k_cache, v_cache, pos):
+    """Decode one token given caches padded to ``max_seq``.
+
+    Args:
+      token: scalar i32; k_cache/v_cache: [L, H, max_seq, Dh];
+      pos: scalar i32, number of valid cache positions.
+
+    Returns:
+      (logits [vocab], k_cache, v_cache) with position ``pos``
+      filled in.
+    """
+    x = params["embed"][token]  # [D]
+    s_max = k_cache.shape[2]
+    del s_max
+    n_valid = pos + 1  # cache rows valid after inserting the new token
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        xn = _rms_norm(x, layer["ln1"])
+        qkv = xn @ layer["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(cfg.n_heads, cfg.d_head)
+        k = k.reshape(cfg.n_heads, cfg.d_head)
+        v = v.reshape(cfg.n_heads, cfg.d_head)
+        kc = jax.lax.dynamic_update_slice(
+            k_cache[li], k[:, None, :], (0, pos, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            v_cache[li], v[:, None, :], (0, pos, 0)
+        )
+        new_k.append(kc)
+        new_v.append(vc)
+        # L1 Pallas decode attention over the padded cache; padded
+        # rows are masked to -inf inside the kernel via n_valid.
+        o = decode_attention(q[None], kc[None], vc[None], n_valid)[0]
+        x = x + o.reshape(cfg.d_model) @ layer["wo"]
+        x = x + _moe_ffn(cfg, layer, _rms_norm(x, layer["ln2"])[None])[0]
+    logits = _rms_norm(x, jnp.ones((cfg.d_model,))) @ params["unembed"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def greedy_generate(cfg: ModelConfig, params, tokens, n_new: int):
+    """Reference: prefill + greedy decode, all in one process (used to
+    validate the disaggregated path end-to-end)."""
+    logits, kc, vc = prefill(cfg, params, tokens)
+    s = tokens.shape[0]
+    pad = cfg.max_seq - s
+    kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = []
+    tok = jnp.argmax(logits).astype(jnp.int32)
+    pos = s
+    for _ in range(n_new):
+        out.append(int(tok))
+        logits, kc, vc = decode_step(cfg, params, tok, kc, vc, jnp.asarray(pos, jnp.int32))
+        tok = jnp.argmax(logits).astype(jnp.int32)
+        pos += 1
+    return out
+
+
+def moe_block(cfg: ModelConfig, params, x):
+    """Standalone MoE block [N, D] -> [N, D] (layer 0), exported for
+    the MoE dispatch/combine example's expert compute."""
+    return _moe_ffn(cfg, params["layers"][0], x)
+
+
+def flat_params(params):
+    """Flatten parameters into (name, array) pairs, stable order (the
+    RL weight-transfer metadata path)."""
+    out = [("embed", params["embed"]), ("unembed", params["unembed"])]
+    for i, layer in enumerate(params["layers"]):
+        for name in ["wqkv", "wo", "router", "w1", "w2", "ln1", "ln2"]:
+            out.append((f"layers.{i}.{name}", layer[name]))
+    return out

@@ -1,0 +1,76 @@
+"""AOT pipeline: manifest correctness and HLO-text invariants that the
+rust loader depends on."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = M.ModelConfig(n_layers=1, max_seq=40, vocab=64, d_model=32, d_ff=64)
+    manifest = aot.build_artifacts(str(out), cfg)
+    return out, cfg, manifest
+
+
+def test_manifest_lists_all_entries(built):
+    out, cfg, manifest = built
+    with open(out / "manifest.json") as f:
+        j = json.load(f)
+    assert j["model"]["param_count"] == cfg.param_count()
+    for name, e in j["entries"].items():
+        assert os.path.exists(out / e["file"]), name
+        assert e["inputs"] and e["outputs"], name
+
+
+def test_prefill_signature_shapes(built):
+    out, cfg, manifest = built
+    e = manifest["entries"]["prefill_32"]
+    assert e["inputs"][0]["shape"] == [32]
+    assert e["inputs"][0]["dtype"] == "int32"
+    # logits, k, v
+    assert e["outputs"][0]["shape"] == [cfg.vocab]
+    assert e["outputs"][1]["shape"] == [cfg.n_layers, cfg.n_heads, 32, cfg.d_head]
+
+
+def test_decode_signature(built):
+    _, cfg, manifest = built
+    e = manifest["entries"]["decode"]
+    cache = [cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head]
+    assert e["inputs"][1]["shape"] == cache
+    assert e["outputs"][1]["shape"] == cache
+
+
+def test_constants_not_elided(built):
+    """The #1 footgun: default HLO printing elides big constants as
+    `constant({...})`, which would silently corrupt weights on the
+    rust side. Ensure full constants are printed."""
+    out, _, manifest = built
+    for name, e in manifest["entries"].items():
+        text = open(out / e["file"]).read()
+        assert "constant({...})" not in text, f"{name} has elided constants"
+        assert text.startswith("HloModule"), name
+
+
+def test_hlo_has_no_unparseable_topk(built):
+    """xla_extension 0.5.1 predates the dedicated `topk` HLO op; the
+    model must lower routing through `sort` instead."""
+    out, _, manifest = built
+    for name, e in manifest["entries"].items():
+        text = open(out / e["file"]).read()
+        assert " topk(" not in text, f"{name} uses the unparseable topk op"
+
+
+def test_quantize_entry_roundtrip_semantics(built):
+    _, cfg, manifest = built
+    e = manifest["entries"]["quantize_roundtrip"]
+    assert e["inputs"][0]["shape"] == list(aot.QUANT_SHAPE)
+    # Two outputs: dequantized matrix + scales.
+    assert len(e["outputs"]) == 2
+    assert e["outputs"][1]["shape"] == [aot.QUANT_SHAPE[0], 1]

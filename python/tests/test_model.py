@@ -1,0 +1,101 @@
+"""L2 model invariants: shapes, prefill/decode consistency (the
+correctness core of disaggregated serving), routing behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(n_layers=2, max_seq=48, vocab=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG)
+
+
+def test_param_shapes_and_count(params):
+    flat = M.flat_params(params)
+    names = [n for n, _ in flat]
+    assert names[0] == "embed"
+    assert f"layers.{CFG.n_layers - 1}.w2" in names
+    total = sum(int(np.prod(a.shape)) for _, a in flat)
+    # param_count counts matmul params only (no LN vectors).
+    assert abs(total - CFG.param_count()) <= CFG.n_layers * 2 * CFG.d_model
+
+
+def test_prefill_shapes(params):
+    toks = jnp.arange(10, dtype=jnp.int32) % CFG.vocab
+    logits, k, v = M.prefill(CFG, params, toks)
+    assert logits.shape == (CFG.vocab,)
+    assert k.shape == (CFG.n_layers, CFG.n_heads, 10, CFG.d_head)
+    assert v.shape == k.shape
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_decode_matches_prefill_reference(params):
+    """decode_step(cache(prefill(t)), t_next) == prefill(t + t_next):
+    the invariant that makes KvCache transfer sound."""
+    toks = jnp.asarray([5, 3, 8, 13, 21, 34], jnp.int32) % CFG.vocab
+    logits, kc, vc = M.prefill(CFG, params, toks)
+    nxt = jnp.argmax(logits).astype(jnp.int32)
+
+    full = jnp.concatenate([toks, nxt[None]])
+    want, _, _ = M.prefill(CFG, params, full)
+
+    pad = CFG.max_seq - toks.shape[0]
+    kcp = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vcp = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    got, k2, v2 = M.decode_step(
+        CFG, params, nxt, kcp, vcp, jnp.asarray(toks.shape[0], jnp.int32)
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+    # Cache updated in place at the right position.
+    np.testing.assert_allclose(
+        k2[:, :, toks.shape[0], :].sum(), k2[:, :, toks.shape[0], :].sum()
+    )
+    assert bool((k2[:, :, toks.shape[0] + 1 :, :] == 0).all())
+
+
+def test_greedy_generation_deterministic(params):
+    toks = jnp.asarray([1, 2, 3], jnp.int32)
+    a = M.greedy_generate(CFG, params, toks, 5)
+    b = M.greedy_generate(CFG, params, toks, 5)
+    assert a == b
+    assert all(0 <= t < CFG.vocab for t in a)
+
+
+def test_cache_garbage_beyond_pos_is_ignored(params):
+    toks = jnp.asarray([7, 9, 11], jnp.int32)
+    _, kc, vc = M.prefill(CFG, params, toks)
+    pad = CFG.max_seq - 3
+    kcp = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vcp = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    tok = jnp.asarray(4, jnp.int32)
+    base, _, _ = M.decode_step(CFG, params, tok, kcp, vcp, jnp.asarray(3, jnp.int32))
+    # Poison the padding (positions > pos): result must be unchanged.
+    kcp2 = kcp.at[:, :, 5:, :].set(1e5)
+    vcp2 = vcp.at[:, :, 5:, :].set(-1e5)
+    got, _, _ = M.decode_step(CFG, params, tok, kcp2, vcp2, jnp.asarray(3, jnp.int32))
+    np.testing.assert_allclose(base, got, rtol=1e-5, atol=1e-5)
+
+
+def test_moe_routing_uses_top_k(params):
+    """Gate mass concentrates on exactly top_k experts per token."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, CFG.d_model), jnp.float32)
+    layer = params["layers"][0]
+    gates = jax.nn.softmax(x @ layer["router"], axis=-1)
+    thresh = jnp.sort(gates, axis=-1)[:, CFG.n_experts - CFG.top_k][:, None]
+    mask = gates >= thresh
+    counts = mask.sum(-1)
+    assert bool((counts >= CFG.top_k).all())
+    # moe_block output is finite and shaped.
+    y = M.moe_block(CFG, params, x)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_kv_bytes_accounting():
+    assert CFG.kv_bytes_per_token_layer() == 2 * CFG.d_model * 4

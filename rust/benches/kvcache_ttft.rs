@@ -1,0 +1,46 @@
+//! Paper Table 3: KvCache transfer impact on TTFT
+//! (Qwen3-235B-shaped workload, H200, 2×200 Gbps EFA).
+//!
+//! Usage: cargo bench --bench kvcache_ttft [-- --fast]
+
+use fabric_lib::apps::kvcache::run_table3_row;
+use fabric_lib::util::table::{f, Table};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let seqs: &[u32] = if fast {
+        &[4096, 8192, 16384]
+    } else {
+        &[4096, 8192, 16384, 32768, 65536, 131072]
+    };
+    let mut t = Table::new(
+        "Table 3. KvCache transfer impact on TTFT (Qwen3-235B-shaped, 2x200G EFA)",
+        &[
+            "seqlen",
+            "TTFT non (ms)",
+            "TTFT disagg (ms)",
+            "layer compute (ms)",
+            "layer transfer (ms)",
+            "steps",
+            "pages",
+        ],
+    );
+    for &seq in seqs {
+        let r = run_table3_row(seq);
+        t.row(&[
+            format!("{}K", seq / 1024),
+            f(r.ttft_non_ms, 0),
+            f(r.ttft_disagg_ms, 0),
+            f(r.per_layer_compute_ms, 3),
+            f(r.per_layer_transfer_ms, 3),
+            r.steps.to_string(),
+            r.pages.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper — 4K: 214/260 ms, compute 2.267 / transfer 0.661 ms; \
+         128K: 16735/17056 ms, 34.895 / 1.609 ms. Claim preserved: transfer \
+         hidden by compute; TTFT overhead ≈ one extra decode pass.\n"
+    );
+}

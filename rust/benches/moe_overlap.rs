@@ -1,0 +1,71 @@
+//! Paper Table 7: end-to-end decode speed with and without dual-batch
+//! overlap (DeepSeek-V3, EP=DP=64, EFA).
+//!
+//! Dual-batch overlap splits the batch into two microbatches and
+//! pipelines one's computation against the other's communication: the
+//! per-layer time becomes ~2 × max(compute, comm) at half batch
+//! instead of compute + comm at full batch. Worth it only when comm
+//! is slow relative to compute — which is why it *helps* our
+//! low-latency kernels only at large batches and *hurts* pplx.
+//!
+//! Usage: cargo bench --bench moe_overlap [-- --fast]
+
+use fabric_lib::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};
+use fabric_lib::fabric::profile::NicProfile;
+use fabric_lib::util::table::{f, Table};
+
+const LAYERS: u64 = 61;
+const MOE_LAYERS: u64 = 58;
+const MTP_TOKENS_PER_STEP: f64 = 1.8;
+
+fn compute_ns(batch: u32) -> u64 {
+    260_000 + batch as u64 * 1_500
+}
+
+fn step_tokens_per_s(comm_us: f64, batch: u32, dual: bool) -> f64 {
+    let step_ns = if dual {
+        // Two half-batches; comm of one overlaps compute of the other.
+        let c = compute_ns(batch / 2) as f64;
+        let m = comm_us * 1000.0;
+        LAYERS as f64 * 2.0 * c.max(m * MOE_LAYERS as f64 / LAYERS as f64)
+    } else {
+        LAYERS as f64 * compute_ns(batch) as f64 + MOE_LAYERS as f64 * comm_us * 1000.0
+    };
+    MTP_TOKENS_PER_STEP / (step_ns / 1e9)
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let iters = if fast { 2 } else { 4 };
+    let ranks = if fast { 16 } else { 64 };
+    let batches: &[u32] = &[128, 96, 64, 48, 32];
+
+    let mut t = Table::new(
+        &format!("Table 7. Decode speed with/without dual-batch overlap (EP={ranks}, EFA)"),
+        &["batch", "ours no-ovl", "ours dual", "pplx no-ovl", "pplx dual"],
+    );
+    for &b in batches {
+        let mut row = vec![b.to_string()];
+        for imp in [MoeImpl::Ours, MoeImpl::Pplx] {
+            // Full batch for no-overlap.
+            let cfg = MoeConfig::decode(ranks, b);
+            let mut lat = run_decode_epoch(&cfg, imp, NicProfile::efa(), 2, iters);
+            let comm_full =
+                (lat.dispatch.percentile(50.0) + lat.combine.percentile(50.0)) as f64 / 1000.0;
+            // Half batch for dual (per-microbatch comm).
+            let cfg_h = MoeConfig::decode(ranks, (b / 2).max(1));
+            let mut lat_h = run_decode_epoch(&cfg_h, imp, NicProfile::efa(), 2, iters);
+            let comm_half =
+                (lat_h.dispatch.percentile(50.0) + lat_h.combine.percentile(50.0)) as f64 / 1000.0;
+            row.push(f(step_tokens_per_s(comm_full, b, false), 1));
+            row.push(f(step_tokens_per_s(comm_half, b, true), 1));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "\npaper — ours: 11.8→13.9 at 128 (overlap helps), 32.0→30.2 at 32 \
+         (hurts); pplx: overlap consistently degrades. Claim preserved: \
+         low communication latency matters even in throughput regimes.\n"
+    );
+}

@@ -1,0 +1,51 @@
+//! Paper Fig 12: separate send/receive kernel latencies at EP=64.
+//!
+//! Measured by letting transfers settle in the gap between the send
+//! and receive halves (a long artificial delay stands in for shared
+//! experts / overlapped work), then reporting kernel execution times.
+//!
+//! Usage: cargo bench --bench moe_send_recv [-- --fast]
+
+use fabric_lib::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};
+use fabric_lib::fabric::profile::NicProfile;
+use fabric_lib::sim::stats::Histogram;
+use fabric_lib::sim::time::US;
+use fabric_lib::util::table::{f, Table};
+
+fn p50_us(h: &mut Histogram) -> String {
+    f(h.percentile(50.0) as f64 / 1000.0, 1)
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let iters = if fast { 2 } else { 6 };
+    let ranks = if fast { 16 } else { 64 };
+
+    let mut t = Table::new(
+        &format!("Figure 12. Send and receive kernel latency, EP={ranks} (p50, us)"),
+        &["impl", "disp send", "disp recv", "comb send", "comb recv"],
+    );
+    for (imp, nic, nics, name) in [
+        (MoeImpl::Ours, NicProfile::connectx7(), 1u8, "ours CX7"),
+        (MoeImpl::DeepEp, NicProfile::connectx7(), 1, "DeepEP CX7"),
+        (MoeImpl::Ours, NicProfile::efa(), 2, "ours EFA"),
+    ] {
+        let mut cfg = MoeConfig::decode(ranks, 128);
+        // Long artificial gap so transfers settle before receive.
+        cfg.gemm_gap_ns = 400 * US;
+        let mut lat = run_decode_epoch(&cfg, imp, nic, nics, iters);
+        t.row(&[
+            name.to_string(),
+            p50_us(&mut lat.d_send_kernel),
+            p50_us(&mut lat.d_recv_kernel),
+            p50_us(&mut lat.c_send_kernel),
+            p50_us(&mut lat.c_recv_kernel),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper — dispatch/combine send outperform DeepEP (memcpy only); \
+         combine receive faster (pipelined accumulation); dispatch receive \
+         is the outlier (NVLink loads). Kernel time ≲15% of transfer time.\n"
+    );
+}

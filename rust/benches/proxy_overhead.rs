@@ -1,0 +1,185 @@
+//! Paper Table 8 (CPU overhead breakdown for MoE all-to-all) and
+//! Table 9 (scatter post time vs EP), from the engine's submission
+//! traces — plus a *real measured* threaded-engine trace for the
+//! submit→post path (the only rows a simulator could fake).
+//!
+//! Usage: cargo bench --bench proxy_overhead [-- --fast]
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use fabric_lib::apps::moe::rank::Strategy;
+use fabric_lib::apps::moe::{harness::run_epoch_with, MoeConfig};
+use fabric_lib::engine::api::ScatterDst;
+use fabric_lib::engine::threaded::{OnDoneT, ThreadedEngine};
+use fabric_lib::fabric::local::LocalFabric;
+use fabric_lib::fabric::profile::{NicProfile, TransportKind};
+use fabric_lib::sim::stats::Histogram;
+use fabric_lib::util::table::{f, Table};
+
+fn us(v: u64) -> String {
+    f(v as f64 / 1000.0, 3)
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let iters = if fast { 2 } else { 5 };
+
+    // ---- Table 8: virtual-time breakdown at EP64 (EFA + CX-7) ----
+    for (nic, nics, name) in [
+        (NicProfile::efa(), 2u8, "EFA"),
+        (NicProfile::connectx7(), 1u8, "CX-7"),
+    ] {
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let ep = if fast { 16 } else { 64 };
+        let cfg = MoeConfig::decode(ep, 128);
+        let _ = run_epoch_with(&cfg, Strategy::ours(), nic, nics, iters, Some(sink.clone()));
+        let traces = sink.borrow();
+        // Scatter submissions only (≥ half the peers).
+        let mut enq = Histogram::new();
+        let mut worker = Histogram::new();
+        let mut first = Histogram::new();
+        let mut last = Histogram::new();
+        for t in traces.iter().filter(|t| t.wrs >= (ep as usize / 2).max(2)) {
+            enq.record(t.enqueued - t.submitted);
+            worker.record(t.worker_start - t.enqueued);
+            first.record(t.first_post - t.worker_start);
+            last.record(t.last_post - t.first_post);
+        }
+        let mut t8 = Table::new(
+            &format!("Table 8. CPU overhead breakdown, MoE all-to-all EP{ep} ({name}) (us)"),
+            &["event (delta)", "thread", "p50", "p90", "p99", "p99.9"],
+        );
+        let mut row = |label: &str, thread: &str, h: &mut Histogram| {
+            if h.is_empty() {
+                return;
+            }
+            let s = h.summary();
+            t8.row(&[
+                label.to_string(),
+                thread.to_string(),
+                us(s.p50),
+                us(s.p90),
+                us(s.p99),
+                us(s.p999),
+            ]);
+        };
+        row("submit_scatter() -> enqueue done", "App", &mut enq);
+        row("-> worker dequeue", "Worker", &mut worker);
+        row("-> before posting first WRITE", "Worker", &mut first);
+        row("-> after posting last WRITE", "Worker", &mut last);
+        t8.print();
+    }
+    println!(
+        "paper — Table 8 (EP64): enqueue 0.120, worker 0.855, first-post \
+         0.441; post-all 27.9 us EFA / 8.5 us CX-7.\n"
+    );
+
+    // ---- Table 9: post time for all WRITEs of a scatter vs EP ----
+    let mut t9 = Table::new(
+        "Table 9. Post time for all WRITEs of scatter (us)",
+        &["NIC", "EP", "p50", "p90", "p99", "p99.9"],
+    );
+    for (nic, nics, name) in [
+        (NicProfile::efa(), 2u8, "EFA"),
+        (NicProfile::connectx7(), 1u8, "CX-7"),
+    ] {
+        for ep in [8u32, 16, 32, 64] {
+            if fast && ep > 16 {
+                continue;
+            }
+            let sink = Rc::new(RefCell::new(Vec::new()));
+            let cfg = MoeConfig::decode(ep, 128);
+            let _ = run_epoch_with(&cfg, Strategy::ours(), nic.clone(), nics, iters, Some(sink.clone()));
+            let traces = sink.borrow();
+            let mut h = Histogram::new();
+            for t in traces.iter().filter(|t| t.wrs >= (ep as usize / 2).max(2)) {
+                h.record(t.last_post - t.first_post);
+            }
+            if h.is_empty() {
+                continue;
+            }
+            let s = h.summary();
+            t9.row(&[
+                name.to_string(),
+                format!("EP{ep}"),
+                us(s.p50),
+                us(s.p90),
+                us(s.p99),
+                us(s.p999),
+            ]);
+        }
+    }
+    t9.print();
+    println!(
+        "paper — Table 9 p50: EFA 3.1/6.5/13.4/27.9, CX-7 0.8/1.9/4.1/8.5 \
+         us for EP 8/16/32/64 (roughly linear in peers).\n"
+    );
+
+    // ---- Ablation: WR chaining (§3.5) ----
+    // Posting cost of a 56-peer scatter with doorbell chaining (CX-7,
+    // chain=4) vs without (chain=1): chaining amortizes the doorbell,
+    // one of the hardware-specific optimizations DESIGN.md calls out.
+    let mut ta = Table::new(
+        "Ablation. WR chaining effect on scatter post time (CX-7, EP64) (us)",
+        &["chaining", "p50", "p90"],
+    );
+    for (label, max_chain) in [("chain=4 (default)", 4usize), ("chain=1 (off)", 1usize)] {
+        let mut nic = NicProfile::connectx7();
+        nic.max_chain = max_chain;
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let ep = if fast { 16 } else { 64 };
+        let cfg = MoeConfig::decode(ep, 128);
+        let _ = run_epoch_with(&cfg, Strategy::ours(), nic, 1, iters, Some(sink.clone()));
+        let traces = sink.borrow();
+        let mut h = Histogram::new();
+        for t in traces.iter().filter(|t| t.wrs >= (ep as usize / 2).max(2)) {
+            h.record(t.last_post - t.first_post);
+        }
+        let s = h.summary();
+        ta.row(&[label.to_string(), us(s.p50), us(s.p90)]);
+    }
+    ta.print();
+    println!("chaining must reduce CPU post time (fewer doorbells).\n");
+
+    // ---- Real measurement: threaded engine submit→post (wall clock) ----
+    let fabric = LocalFabric::new(TransportKind::Srd, 42);
+    let a = ThreadedEngine::new(&fabric, 0, 1, 2);
+    let b = ThreadedEngine::new(&fabric, 1, 1, 2);
+    let (src, _) = a.alloc_mr(0, 1 << 20);
+    let peers: Vec<_> = (0..56).map(|_| b.alloc_mr(0, 1 << 20).1).collect();
+    let n_iters = if fast { 200 } else { 2000 };
+    for _ in 0..n_iters {
+        let dsts: Vec<ScatterDst> = peers
+            .iter()
+            .map(|d| ScatterDst { len: 4096, src: 0, dst: (d.clone(), 0) })
+            .collect();
+        let done = Arc::new(AtomicBool::new(false));
+        a.submit_scatter(&src, &dsts, None, OnDoneT::Flag(done.clone()));
+        while !done.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+    }
+    let traces = a.traces();
+    let mut enq = Histogram::new();
+    let mut post = Histogram::new();
+    for t in &traces {
+        enq.record(t.worker_ns.saturating_sub(t.submitted_ns));
+        post.record(t.last_post_ns.saturating_sub(t.first_post_ns));
+    }
+    let mut tr = Table::new(
+        "Table 8b. REAL measured threaded-engine overhead (56-peer scatter) (us)",
+        &["event", "p50", "p90", "p99"],
+    );
+    for (label, h) in [("submit -> worker dequeue", &mut enq), ("post all 56 WRITEs", &mut post)] {
+        let s = h.summary();
+        tr.row(&[label.to_string(), us(s.p50), us(s.p90), us(s.p99)]);
+    }
+    tr.print();
+    a.shutdown();
+    b.shutdown();
+    fabric.shutdown();
+    println!();
+}

@@ -1,0 +1,95 @@
+//! Paper Table 5 + Fig 4: RL rollout weight-transfer latency breakdown
+//! and the P2P vs rank0-broadcast comparison.
+//!
+//! Usage: cargo bench --bench rl_weight_transfer [-- --fast] [-- --full]
+//!   default: 16-rank slice of the Kimi-K2 deployment (bytes scaled
+//!   per-rank identically, so the per-rank Table 5 breakdown is
+//!   representative); --full runs all 256 training ranks.
+
+use fabric_lib::apps::rlweights::{run_p2p_transfer, run_rank0_broadcast, RlModelSpec};
+use fabric_lib::fabric::profile::NicProfile;
+use fabric_lib::util::table::{f, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let full = args.iter().any(|a| a == "--full");
+
+    let spec = if full {
+        RlModelSpec::kimi_k2_1t()
+    } else {
+        // 16-rank slice with proportional bytes: identical per-rank
+        // load and schedule, 16× fewer events.
+        RlModelSpec {
+            t_ranks: 16,
+            r_ranks: 8,
+            total_params: 1_000_000_000_000 / 16,
+            ..RlModelSpec::kimi_k2_1t()
+        }
+    };
+    let scale = if fast { 0.25 } else { 1.0 };
+    let report = run_p2p_transfer(&spec, NicProfile::connectx7(), scale);
+    let t = report.rank0;
+
+    let ms = |v: u64| f(v as f64 / 1e6, 0);
+    let us_per = |tot: u64, n: u32| {
+        if n == 0 {
+            "-".to_string()
+        } else {
+            f(tot as f64 / n as f64 / 1e3, 0)
+        }
+    };
+    let mut table = Table::new(
+        &format!(
+            "Table 5. RL weight transfer breakdown, one rank ({}, {} t-ranks, scale {scale})",
+            report.model, spec.t_ranks
+        ),
+        &["operation", "time (ms)", "avg/call (us)", "count"],
+    );
+    table.row(&["Total".into(), f(report.total_ms, 0), "-".into(), "-".into()]);
+    table.row(&["Memcpy H2D".into(), ms(t.h2d), us_per(t.h2d, t.h2d_calls), t.h2d_calls.to_string()]);
+    table.row(&[
+        "full_tensor()".into(),
+        ms(t.full_tensor),
+        us_per(t.full_tensor, t.full_tensor_calls),
+        t.full_tensor_calls.to_string(),
+    ]);
+    table.row(&["Fuse projections".into(), ms(t.fuse), us_per(t.fuse, t.fuse_calls), t.fuse_calls.to_string()]);
+    table.row(&["Quantize".into(), ms(t.quantize), us_per(t.quantize, t.quantize_calls), t.quantize_calls.to_string()]);
+    table.row(&[
+        "RDMA submit".into(),
+        ms(t.rdma_submit),
+        us_per(t.rdma_submit, t.rdma_calls),
+        t.rdma_calls.to_string(),
+    ]);
+    table.row(&["Waiting for other ranks".into(), ms(t.wait_ranks), "-".into(), "-".into()]);
+    table.print();
+    println!(
+        "aggregate fabric bandwidth: {:.0} Gbps over {:.1} GiB",
+        report.agg_gbps,
+        report.bytes as f64 / (1 << 30) as f64
+    );
+    println!(
+        "\npaper — total 1233 ms: H2D 184 (378us x487), full_tensor 518 \
+         (532us x974), fuse 18, quantize 88, RDMA submit 26 (23us x1144), \
+         wait 357 ms."
+    );
+
+    // ---- Fig 4: P2P vs rank0 gather+broadcast ----
+    let base = run_rank0_broadcast(&spec, NicProfile::connectx7(), if full { 1 } else { 1 });
+    let mut cmp = Table::new(
+        "Figure 4. Weight transfer data path comparison",
+        &["approach", "total (ms)", "speedup"],
+    );
+    cmp.row(&["rank0 gather+broadcast".into(), f(base.total_ms, 0), "1.0x".into()]);
+    cmp.row(&[
+        "fabric-lib P2P".into(),
+        f(report.total_ms, 0),
+        format!("{:.0}x", base.total_ms / report.total_ms),
+    ]);
+    cmp.print();
+    println!(
+        "\npaper claim: P2P is >100x faster than collective-based frameworks \
+         (1.3 s vs 10-100+ s at 1T scale).\n"
+    );
+}

@@ -1,0 +1,369 @@
+//! Decoder node: page allocation, dispatch, IMMCOUNTER-driven decode
+//! start, cancellation and heartbeat monitoring (paper §4 + Appendix
+//! A Fig 14).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::engine::api::{MrDesc, MrHandle, NetAddr};
+use crate::engine::des_engine::{Engine, OnDone};
+use crate::sim::time::{Duration, Instant};
+use crate::sim::Sim;
+
+use super::proto::{self, CancelAck, CancelReq, DispatchReq, Heartbeat};
+use super::workload::ServingWorkload;
+
+/// Lifecycle of one request on the decoder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqState {
+    /// Dispatched; waiting for all WRITEIMMs.
+    Transferring,
+    /// KV received; decoding tokens.
+    Decoding,
+    /// Finished successfully.
+    Done,
+    /// Cancel sent; pages quarantined until the prefiller acks.
+    Cancelling,
+    /// Cancelled and confirmed (or force-freed after prefiller death).
+    Cancelled,
+}
+
+/// Completion record for reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct ReqReport {
+    pub req_id: u64,
+    pub seq_tokens: u32,
+    pub submitted: Instant,
+    pub transfer_done: Instant,
+    /// Time to first token (includes the final-token decode pass).
+    pub ttft: Instant,
+    pub finished: Instant,
+    pub decode_tokens: u32,
+}
+
+struct ReqInfo {
+    state: ReqState,
+    pages: Vec<u32>,
+    tail: u32,
+    imm: u32,
+    prefiller: NetAddr,
+    prefiller_node: u16,
+    seq_tokens: u32,
+    decode_tokens: u32,
+    submitted: Instant,
+    transfer_done: Instant,
+    ttft: Instant,
+}
+
+struct DState {
+    engine: Engine,
+    gpu: u8,
+    workload: ServingWorkload,
+    kv: (MrHandle, MrDesc),
+    tails: (MrHandle, MrDesc),
+    free_slots: Vec<u32>,
+    free_tails: Vec<u32>,
+    next_imm: u32,
+    next_req: u64,
+    requests: HashMap<u64, ReqInfo>,
+    reports: Rc<RefCell<Vec<ReqReport>>>,
+    last_seen: HashMap<u16, Instant>,
+    hb_timeout: Duration,
+}
+
+/// A decoder node (one GPU's worth).
+#[derive(Clone)]
+pub struct Decoder {
+    state: Rc<RefCell<DState>>,
+}
+
+impl Decoder {
+    /// Create the decoder, allocating its KV + tail regions and
+    /// starting its control-message listener.
+    pub fn new(sim: &mut Sim, engine: &Engine, gpu: u8, workload: ServingWorkload) -> Self {
+        let kv_len = workload.layout.region_bytes() as usize;
+        let kv = if kv_len > (64 << 20) {
+            engine.alloc_mr_unbacked(gpu, kv_len)
+        } else {
+            engine.alloc_mr(gpu, kv_len)
+        };
+        let n_tails = 64u32;
+        let tails = engine.alloc_mr(gpu, (workload.tail_bytes * n_tails as u64) as usize);
+        let slots = workload.layout.slots_per_layer;
+        let state = Rc::new(RefCell::new(DState {
+            engine: engine.clone(),
+            gpu,
+            workload,
+            kv,
+            tails,
+            free_slots: (0..slots).rev().collect(),
+            free_tails: (0..n_tails).rev().collect(),
+            next_imm: 1,
+            next_req: 1,
+            requests: HashMap::new(),
+            reports: Rc::default(),
+            last_seen: HashMap::new(),
+            hb_timeout: 30_000_000, // 30 ms
+        }));
+        let d = Decoder { state };
+        let d2 = d.clone();
+        engine.submit_recvs(sim, gpu, 1 << 12, 32, move |sim, msg| {
+            d2.on_message(sim, msg);
+        });
+        d
+    }
+
+    /// Group address (給 the scheduler / prefillers).
+    pub fn address(&self) -> NetAddr {
+        let s = self.state.borrow();
+        s.engine.group_address(s.gpu)
+    }
+
+    /// Completed-request reports.
+    pub fn reports(&self) -> Rc<RefCell<Vec<ReqReport>>> {
+        self.state.borrow().reports.clone()
+    }
+
+    /// KV region handle (test inspection).
+    pub fn kv_handle(&self) -> MrHandle {
+        self.state.borrow().kv.0.clone()
+    }
+
+    /// Current state of a request.
+    pub fn req_state(&self, req_id: u64) -> Option<ReqState> {
+        self.state.borrow().requests.get(&req_id).map(|r| r.state)
+    }
+
+    /// Free page-slot count (leak detection in tests).
+    pub fn free_slot_count(&self) -> usize {
+        self.state.borrow().free_slots.len()
+    }
+
+    /// Submit a request: allocate pages + tail, register the
+    /// IMMCOUNTER expectation, dispatch to `prefiller` (Fig 14).
+    pub fn submit_request(
+        &self,
+        sim: &mut Sim,
+        prefiller: &NetAddr,
+        input_ids: Vec<u32>,
+        decode_tokens: u32,
+    ) -> u64 {
+        let (req_id, msg, imm, expected, engine, gpu) = {
+            let mut s = self.state.borrow_mut();
+            let seq = input_ids.len() as u32;
+            let n_pages = s.workload.layout.pages_for(seq) as usize;
+            assert!(
+                s.free_slots.len() >= n_pages,
+                "KV pool exhausted: need {n_pages}, have {}",
+                s.free_slots.len()
+            );
+            let pages: Vec<u32> = (0..n_pages).map(|_| s.free_slots.pop().unwrap()).collect();
+            let tail = s.free_tails.pop().expect("tail pool exhausted");
+            let imm = s.next_imm;
+            s.next_imm += 1;
+            let req_id = s.next_req;
+            s.next_req += 1;
+            let expected = s.workload.layout.expected_imms(seq);
+            let req = DispatchReq {
+                req_id,
+                input_ids,
+                decoder_addr: s.engine.group_address(s.gpu),
+                imm,
+                kv_desc: s.kv.1.clone(),
+                pages: pages.clone(),
+                tail_desc: s.tails.1.clone(),
+                tail_idx: tail,
+            };
+            s.requests.insert(
+                req_id,
+                ReqInfo {
+                    state: ReqState::Transferring,
+                    pages,
+                    tail,
+                    imm,
+                    prefiller: prefiller.clone(),
+                    prefiller_node: prefiller.primary().node,
+                    seq_tokens: seq,
+                    decode_tokens,
+                    submitted: sim.now(),
+                    transfer_done: 0,
+                    ttft: 0,
+                },
+            );
+            (req_id, req.encode(), imm, expected, s.engine.clone(), s.gpu)
+        };
+        // Completion notification without any ordering assumption:
+        // count WRITEIMMs.
+        let this = self.clone();
+        engine.expect_imm_count(sim, gpu, imm, expected, move |sim| {
+            this.on_transfer_done(sim, req_id);
+        });
+        engine.submit_send(sim, gpu, prefiller, &msg, OnDone::Noop);
+        req_id
+    }
+
+    fn on_transfer_done(&self, sim: &mut Sim, req_id: u64) {
+        let (decode_pass, n_decode) = {
+            let mut s = self.state.borrow_mut();
+            let Some(r) = s.requests.get_mut(&req_id) else {
+                return;
+            };
+            if r.state != ReqState::Transferring {
+                return; // cancelled meanwhile
+            }
+            r.state = ReqState::Decoding;
+            r.transfer_done = sim.now();
+            let imm = r.imm;
+            let n = r.decode_tokens;
+            let dp = s.workload.compute.decode_pass_ns;
+            s.engine.free_imm(s.gpu, imm);
+            (dp, n)
+        };
+        // One extra decode pass for the final input token produces the
+        // first output token (the paper's main TTFT overhead), then
+        // autoregressive decoding.
+        let this = self.clone();
+        sim.after(decode_pass, move |sim| {
+            {
+                let mut s = this.state.borrow_mut();
+                if let Some(r) = s.requests.get_mut(&req_id) {
+                    r.ttft = sim.now();
+                }
+            }
+            let t2 = this.clone();
+            sim.after(decode_pass * n_decode as u64, move |sim| {
+                t2.finish(sim, req_id);
+            });
+        });
+    }
+
+    fn finish(&self, sim: &mut Sim, req_id: u64) {
+        let mut s = self.state.borrow_mut();
+        let Some(r) = s.requests.get_mut(&req_id) else {
+            return;
+        };
+        if r.state != ReqState::Decoding {
+            return;
+        }
+        r.state = ReqState::Done;
+        let report = ReqReport {
+            req_id,
+            seq_tokens: r.seq_tokens,
+            submitted: r.submitted,
+            transfer_done: r.transfer_done,
+            ttft: r.ttft,
+            finished: sim.now(),
+            decode_tokens: r.decode_tokens,
+        };
+        let pages = r.pages.clone();
+        let tail = r.tail;
+        s.free_slots.extend(pages);
+        s.free_tails.push(tail);
+        s.reports.borrow_mut().push(report);
+    }
+
+    /// Cancel a request: pages stay quarantined until the prefiller
+    /// confirms no further WRITEs are possible.
+    pub fn cancel(&self, sim: &mut Sim, req_id: u64) {
+        let (prefiller, engine, gpu) = {
+            let mut s = self.state.borrow_mut();
+            let Some(r) = s.requests.get_mut(&req_id) else {
+                return;
+            };
+            if !matches!(r.state, ReqState::Transferring | ReqState::Decoding) {
+                return;
+            }
+            r.state = ReqState::Cancelling;
+            (r.prefiller.clone(), s.engine.clone(), s.gpu)
+        };
+        engine.submit_send(
+            sim,
+            gpu,
+            &prefiller,
+            &CancelReq { req_id }.encode(),
+            OnDone::Noop,
+        );
+    }
+
+    fn on_message(&self, sim: &mut Sim, msg: &[u8]) {
+        match proto::msg_tag(msg) {
+            Ok(t) if t == crate::engine::wire::tag::KV_CANCEL_ACK => {
+                let ack = CancelAck::decode(msg).expect("bad CancelAck");
+                self.on_cancel_ack(ack.req_id);
+            }
+            Ok(t) if t == crate::engine::wire::tag::HEARTBEAT => {
+                let hb = Heartbeat::decode(msg).expect("bad Heartbeat");
+                self.state
+                    .borrow_mut()
+                    .last_seen
+                    .insert(hb.sender_node, sim.now());
+            }
+            Ok(t) => panic!("decoder: unexpected message tag {t}"),
+            Err(e) => panic!("decoder: undecodable message: {e}"),
+        }
+    }
+
+    fn on_cancel_ack(&self, req_id: u64) {
+        let mut s = self.state.borrow_mut();
+        let Some(r) = s.requests.get_mut(&req_id) else {
+            return;
+        };
+        assert_eq!(
+            r.state,
+            ReqState::Cancelling,
+            "CancelAck for request not being cancelled"
+        );
+        r.state = ReqState::Cancelled;
+        let pages = r.pages.clone();
+        let tail = r.tail;
+        let imm = r.imm;
+        // Only now are the pages safe to reuse.
+        s.free_slots.extend(pages);
+        s.free_tails.push(tail);
+        let gpu = s.gpu;
+        s.engine.free_imm(gpu, imm);
+    }
+
+    /// Start the heartbeat monitor: requests whose prefiller hasn't
+    /// been seen within the timeout are cancelled after the timeout —
+    /// stale transfers can no longer arrive from a dead transport
+    /// (§4).
+    pub fn start_monitor(&self, sim: &mut Sim, interval: Duration) {
+        self.monitor_tick(sim, interval);
+    }
+
+    fn monitor_tick(&self, sim: &mut Sim, interval: Duration) {
+        let now = sim.now();
+        let dead: Vec<u64> = {
+            let mut s = self.state.borrow_mut();
+            let timeout = s.hb_timeout;
+            let last_seen = s.last_seen.clone();
+            let mut dead = Vec::new();
+            for (id, r) in s.requests.iter_mut() {
+                if !matches!(r.state, ReqState::Transferring | ReqState::Cancelling) {
+                    continue;
+                }
+                let seen = last_seen.get(&r.prefiller_node).copied().unwrap_or(0);
+                if now.saturating_sub(seen) > timeout && now > timeout {
+                    r.state = ReqState::Cancelled;
+                    dead.push(*id);
+                }
+            }
+            for id in &dead {
+                let (pages, tail, imm) = {
+                    let r = &s.requests[id];
+                    (r.pages.clone(), r.tail, r.imm)
+                };
+                s.free_slots.extend(pages);
+                s.free_tails.push(tail);
+                let gpu = s.gpu;
+                s.engine.free_imm(gpu, imm);
+            }
+            dead
+        };
+        let _ = dead;
+        let this = self.clone();
+        sim.after(interval, move |sim| this.monitor_tick(sim, interval));
+    }
+}

@@ -1,0 +1,137 @@
+//! Scenario harness for the KvCache app: builds a prefiller/decoder
+//! pair on a simulated EFA cluster and reproduces paper Table 3 rows.
+
+use crate::engine::api::EngineCosts;
+use crate::engine::des_engine::Engine;
+use crate::fabric::gpu::GpuSim;
+use crate::fabric::topology::{ClusterSpec, DeviceId};
+use crate::sim::time::{Instant, MS};
+use crate::sim::Sim;
+
+use super::decoder::Decoder;
+use super::prefiller::Prefiller;
+use super::workload::ServingWorkload;
+
+/// One Table 3 row: TTFT and per-layer breakdown.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub seq: u32,
+    /// Non-disaggregated TTFT (prefill + first decode pass), ms.
+    pub ttft_non_ms: f64,
+    /// Disaggregated TTFT, ms.
+    pub ttft_disagg_ms: f64,
+    /// Mean per-layer compute of the last chunk, ms.
+    pub per_layer_compute_ms: f64,
+    /// Mean per-layer transfer time, ms.
+    pub per_layer_transfer_ms: f64,
+    /// Chunked-prefill steps.
+    pub steps: u32,
+    /// Pages transferred per layer (capped at chunk size).
+    pub pages: u32,
+}
+
+/// Simulate one disaggregated request of `seq` tokens on an
+/// H200+2×EFA pair (paper Table 3 testbed) and report the row.
+pub fn run_table3_row(seq: u32) -> Table3Row {
+    let workload = ServingWorkload::qwen3_235b(seq);
+    let spec = ClusterSpec::h200_efa(2);
+    let cluster = spec.build();
+    let mut sim = Sim::new();
+
+    let eng_p = Engine::new(
+        &cluster.net,
+        0,
+        1,
+        spec.nics_per_gpu,
+        spec.gpu_profile.clone(),
+        EngineCosts::default(),
+        1,
+    );
+    let eng_d = Engine::new(
+        &cluster.net,
+        1,
+        1,
+        spec.nics_per_gpu,
+        spec.gpu_profile.clone(),
+        EngineCosts::default(),
+        2,
+    );
+    let gpu_p: &GpuSim = cluster.gpu(DeviceId { node: 0, gpu: 0 });
+
+    let prefiller = Prefiller::new(&mut sim, &eng_p, 0, gpu_p, workload.clone(), 0);
+    let decoder = Decoder::new(&mut sim, &eng_d, 0, workload.clone());
+
+    let input: Vec<u32> = (0..seq).map(|i| i % 1000).collect();
+    decoder.submit_request(&mut sim, &eng_p.group_address(0), input, 1);
+    sim.run();
+
+    let reports = decoder.reports();
+    let reports = reports.borrow();
+    assert_eq!(reports.len(), 1, "request must complete");
+    let r = reports[0];
+
+    // Non-disaggregated reference: same compute model, no transfer, no
+    // extra decode pass for the final input token.
+    let ttft_non: Instant = workload.total_prefill_ns(seq);
+
+    let stats = prefiller.stats();
+    let stats = stats.borrow();
+    let mean_transfer = stats
+        .layer_transfers
+        .iter()
+        .map(|&(s, e)| (e - s) as f64)
+        .sum::<f64>()
+        / stats.layer_transfers.len().max(1) as f64;
+    // Last chunk's per-layer compute (the paper reports the steady
+    // chunk).
+    let last_layer_compute = *stats.layer_compute.last().unwrap() as f64;
+
+    let chunks = workload.chunks(seq);
+    let last_chunk_tokens = chunks.last().unwrap().1;
+    Table3Row {
+        seq,
+        ttft_non_ms: ttft_non as f64 / MS as f64,
+        ttft_disagg_ms: r.ttft as f64 / MS as f64,
+        per_layer_compute_ms: last_layer_compute / MS as f64,
+        per_layer_transfer_ms: mean_transfer / MS as f64,
+        steps: chunks.len() as u32,
+        pages: workload.layout.pages_for(last_chunk_tokens),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_row_4k_shape() {
+        let row = run_table3_row(4096);
+        // Paper: non-disagg 214 ms, disagg 260 ms, per-layer compute
+        // 2.267 ms, transfer 0.661 ms, 1 step, 32 pages (paper's 256
+        // pages count is per 4 TP ranks at a finer page grain; ours is
+        // seq/128). Check shape, not equality.
+        assert_eq!(row.steps, 1);
+        assert_eq!(row.pages, 32);
+        assert!(row.ttft_non_ms > 100.0 && row.ttft_non_ms < 400.0, "{row:?}");
+        assert!(row.ttft_disagg_ms > row.ttft_non_ms, "disagg pays an extra pass");
+        let overhead = row.ttft_disagg_ms / row.ttft_non_ms;
+        assert!(overhead < 1.4, "overhead must stay small: {row:?}");
+        assert!(
+            row.per_layer_transfer_ms < row.per_layer_compute_ms,
+            "transfer hidden by compute: {row:?}"
+        );
+    }
+
+    #[test]
+    fn table3_overhead_shrinks_with_seqlen() {
+        let short = run_table3_row(4096);
+        let long = run_table3_row(32768);
+        let o_short = short.ttft_disagg_ms / short.ttft_non_ms;
+        let o_long = long.ttft_disagg_ms / long.ttft_non_ms;
+        assert!(
+            o_long < o_short,
+            "relative TTFT overhead must shrink with seqlen: {o_short} vs {o_long}"
+        );
+        assert_eq!(long.steps, 2);
+    }
+}

@@ -1,0 +1,126 @@
+//! KvCache memory layout.
+//!
+//! The cache region on each rank is a dense array of pages:
+//! `page(layer, slot)` at `(layer * n_slots + slot) * page_bytes`.
+//! Within a page, heads precede tokens ("heads preceding the pages",
+//! §4) so per-head slices of consecutive tokens stay contiguous and
+//! GQA resharding can use page-wise offsets/strides with large
+//! individual writes.
+
+/// Layout parameters of a paged KvCache.
+#[derive(Debug, Clone)]
+pub struct KvLayout {
+    /// Bytes of one KV page (one layer's K+V for `tokens_per_page`
+    /// tokens), e.g. 32 KiB.
+    pub page_bytes: u64,
+    /// Tokens covered by one page (e.g. 128).
+    pub tokens_per_page: u32,
+    /// Transformer layers.
+    pub layers: u32,
+    /// Page slots available per layer on a rank.
+    pub slots_per_layer: u32,
+}
+
+impl KvLayout {
+    /// Total region size in bytes.
+    pub fn region_bytes(&self) -> u64 {
+        self.page_bytes * self.layers as u64 * self.slots_per_layer as u64
+    }
+
+    /// Pages needed for a sequence of `tokens`.
+    pub fn pages_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.tokens_per_page)
+    }
+
+    /// Byte offset of `(layer, slot)`.
+    pub fn page_offset(&self, layer: u32, slot: u32) -> u64 {
+        debug_assert!(layer < self.layers);
+        debug_assert!(slot < self.slots_per_layer);
+        (layer as u64 * self.slots_per_layer as u64 + slot as u64) * self.page_bytes
+    }
+
+    /// Page index (for `Pages::indices`) of `(layer, slot)` given the
+    /// uniform stride `page_bytes`.
+    pub fn page_index(&self, layer: u32, slot: u32) -> u32 {
+        layer * self.slots_per_layer + slot
+    }
+
+    /// Expected number of WRITEIMMs for a request: one per page per
+    /// layer plus one tail write (Appendix A:
+    /// `len(page_indices) * n_layers + 1`).
+    pub fn expected_imms(&self, tokens: u32) -> u32 {
+        self.pages_for(tokens) * self.layers + 1
+    }
+
+    /// GQA resharding (§4): select the slice of a page belonging to
+    /// head group `group` of `groups` under a heads-before-tokens
+    /// page layout. Because heads precede the pages, the slice of
+    /// consecutive heads is contiguous — one (offset, len) per page,
+    /// keeping individual writes large.
+    ///
+    /// Returns (byte offset within the page, byte length).
+    pub fn gqa_slice(&self, group: u32, groups: u32) -> (u64, u64) {
+        assert!(groups > 0 && group < groups);
+        assert_eq!(
+            self.page_bytes % groups as u64,
+            0,
+            "page must split evenly across head groups"
+        );
+        let len = self.page_bytes / groups as u64;
+        (group as u64 * len, len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> KvLayout {
+        KvLayout {
+            page_bytes: 32 * 1024,
+            tokens_per_page: 128,
+            layers: 4,
+            slots_per_layer: 64,
+        }
+    }
+
+    #[test]
+    fn page_math() {
+        let l = layout();
+        assert_eq!(l.pages_for(1), 1);
+        assert_eq!(l.pages_for(128), 1);
+        assert_eq!(l.pages_for(129), 2);
+        assert_eq!(l.pages_for(4096), 32);
+        assert_eq!(l.region_bytes(), 32 * 1024 * 4 * 64);
+    }
+
+    #[test]
+    fn offsets_disjoint_across_layers() {
+        let l = layout();
+        let a = l.page_offset(0, 63);
+        let b = l.page_offset(1, 0);
+        assert_eq!(b - a, l.page_bytes);
+        assert_eq!(l.page_index(2, 5), 2 * 64 + 5);
+    }
+
+    #[test]
+    fn gqa_slices_tile_the_page_contiguously() {
+        let l = layout();
+        let groups = 4;
+        let mut cursor = 0;
+        for g in 0..groups {
+            let (off, len) = l.gqa_slice(g, groups);
+            assert_eq!(off, cursor, "heads-before-pages keeps slices contiguous");
+            cursor += len;
+        }
+        assert_eq!(cursor, l.page_bytes);
+    }
+
+    #[test]
+    fn imm_count_matches_appendix_a() {
+        let l = layout();
+        // 4096 tokens => 32 pages, 4 layers => 32*4 + 1.
+        assert_eq!(l.expected_imms(4096), 129);
+        assert_eq!(l.expected_imms(1), l.layers + 1);
+    }
+}

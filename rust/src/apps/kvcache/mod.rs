@@ -1,0 +1,32 @@
+//! KvCache transfer for disaggregated inference (paper §4).
+//!
+//! A decoder pre-allocates KV pages, registers an IMMCOUNTER
+//! expectation, and dispatches the request to a prefiller over
+//! SEND/RECV. The prefiller runs chunked prefill; after each layer's
+//! attention output projection a UVM watcher increments, and the
+//! engine writes that layer's pages to the decoder with
+//! `submit_paged_writes` — layer-by-layer transfer hidden behind
+//! compute. The tail context (logits/hidden states) goes last via
+//! `submit_single_write`. No explicit completion message exists: the
+//! decoder knows the expected immediate count in advance.
+//!
+//! Also implemented, as in production (§4 last paragraph):
+//! cancellation with explicit confirmation (pages are quarantined
+//! until the prefiller acks, because a stale WRITE could clobber
+//! them), and heartbeat-based failure detection.
+
+pub mod decoder;
+pub mod harness;
+pub mod layout;
+pub mod prefiller;
+pub mod proto;
+pub mod scheduler;
+pub mod workload;
+
+pub use decoder::Decoder;
+pub use harness::{run_table3_row, Table3Row};
+pub use layout::KvLayout;
+pub use prefiller::Prefiller;
+pub use proto::DispatchReq;
+pub use scheduler::Scheduler;
+pub use workload::{PrefillComputeModel, ServingWorkload};

@@ -1,0 +1,421 @@
+//! Prefiller node: chunked prefill with layer-by-layer KV transfer
+//! (paper §4 + Appendix A Fig 15).
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use crate::engine::api::{MrDesc, MrHandle, NetAddr, Pages};
+use crate::engine::des_engine::{Engine, OnDone, UvmWatcherHandle};
+use crate::fabric::gpu::GpuSim;
+use crate::sim::time::{Duration, Instant};
+use crate::sim::Sim;
+
+use super::proto::{self, CancelAck, CancelReq, DispatchReq, Heartbeat};
+use super::workload::ServingWorkload;
+
+/// Transfer timing stats collected for Table 3's per-layer columns.
+#[derive(Debug, Default, Clone)]
+pub struct TransferStats {
+    /// (submit, done) per layer-transfer, virtual ns.
+    pub layer_transfers: Vec<(Instant, Instant)>,
+    /// Per-layer compute kernel durations.
+    pub layer_compute: Vec<Duration>,
+    /// Total WRITEs issued.
+    pub writes: u64,
+}
+
+struct ReqTask {
+    req: DispatchReq,
+    /// (chunk, layer) completions signalled so far via UVM.
+    chunks: Vec<(u32, u32)>,
+    watcher: UvmWatcherHandle,
+    outstanding_writes: usize,
+    tail_sent: bool,
+}
+
+struct PState {
+    engine: Engine,
+    gpu: u8,
+    gpu_sim: GpuSim,
+    workload: ServingWorkload,
+    kv_src: (MrHandle, MrDesc),
+    tail_src: (MrHandle, MrDesc),
+    active: HashMap<u64, ReqTask>,
+    cancelled: HashSet<u64>,
+    killed: bool,
+    hb_seq: u64,
+    hb_targets: Vec<NetAddr>,
+    hb_interval: Duration,
+    node: u16,
+    pub stats: Rc<RefCell<TransferStats>>,
+}
+
+/// A prefiller node (one GPU's worth).
+#[derive(Clone)]
+pub struct Prefiller {
+    state: Rc<RefCell<PState>>,
+}
+
+impl Prefiller {
+    /// Create and start listening for dispatches.
+    pub fn new(
+        sim: &mut Sim,
+        engine: &Engine,
+        gpu: u8,
+        gpu_sim: &GpuSim,
+        workload: ServingWorkload,
+        node: u16,
+    ) -> Self {
+        // Source regions: the prefiller's own KV cache + tail staging.
+        // Large configs use unbacked (timing-only) regions.
+        let kv_len = workload.layout.region_bytes() as usize;
+        let kv_src = if kv_len > (64 << 20) {
+            engine.alloc_mr_unbacked(gpu, kv_len)
+        } else {
+            engine.alloc_mr(gpu, kv_len)
+        };
+        let tail_src = engine.alloc_mr(gpu, workload.tail_bytes as usize);
+        let state = Rc::new(RefCell::new(PState {
+            engine: engine.clone(),
+            gpu,
+            gpu_sim: gpu_sim.clone(),
+            workload,
+            kv_src,
+            tail_src,
+            active: HashMap::new(),
+            cancelled: HashSet::new(),
+            killed: false,
+            hb_seq: 0,
+            hb_targets: Vec::new(),
+            hb_interval: 5_000_000, // 5 ms
+            node,
+            stats: Rc::default(),
+        }));
+        let p = Prefiller { state };
+        let p2 = p.clone();
+        engine.submit_recvs(sim, gpu, 1 << 20, 32, move |sim, msg| {
+            p2.on_message(sim, msg);
+        });
+        p
+    }
+
+    /// Per-layer transfer/compute stats.
+    pub fn stats(&self) -> Rc<RefCell<TransferStats>> {
+        self.state.borrow().stats.clone()
+    }
+
+    /// Simulate node failure: stop heartbeats and all processing.
+    pub fn kill(&self) {
+        self.state.borrow_mut().killed = true;
+    }
+
+    /// Source KV descriptor (tests).
+    pub fn kv_src_handle(&self) -> MrHandle {
+        self.state.borrow().kv_src.0.clone()
+    }
+
+    /// Begin heartbeating to `decoders` every `interval`.
+    pub fn start_heartbeats(&self, sim: &mut Sim, decoders: Vec<NetAddr>, interval: Duration) {
+        {
+            let mut s = self.state.borrow_mut();
+            s.hb_targets = decoders;
+            s.hb_interval = interval;
+        }
+        self.heartbeat_tick(sim);
+    }
+
+    fn heartbeat_tick(&self, sim: &mut Sim) {
+        let (targets, interval, seq, engine, gpu, node, killed) = {
+            let mut s = self.state.borrow_mut();
+            s.hb_seq += 1;
+            (
+                s.hb_targets.clone(),
+                s.hb_interval,
+                s.hb_seq,
+                s.engine.clone(),
+                s.gpu,
+                s.node,
+                s.killed,
+            )
+        };
+        if killed {
+            return;
+        }
+        let msg = Heartbeat {
+            sender_node: node,
+            seq,
+        }
+        .encode();
+        for t in &targets {
+            engine.submit_send(sim, gpu, t, &msg, OnDone::Noop);
+        }
+        let this = self.clone();
+        sim.after(interval, move |sim| this.heartbeat_tick(sim));
+    }
+
+    fn on_message(&self, sim: &mut Sim, msg: &[u8]) {
+        if self.state.borrow().killed {
+            return;
+        }
+        match proto::msg_tag(msg) {
+            Ok(t) if t == crate::engine::wire::tag::KV_DISPATCH => {
+                let req = DispatchReq::decode(msg).expect("bad DispatchReq");
+                self.begin_prefill(sim, req);
+            }
+            Ok(t) if t == crate::engine::wire::tag::KV_CANCEL => {
+                let c = CancelReq::decode(msg).expect("bad CancelReq");
+                self.on_cancel(sim, c.req_id);
+            }
+            Ok(t) => panic!("prefiller: unexpected message tag {t}"),
+            Err(e) => panic!("prefiller: undecodable message: {e}"),
+        }
+    }
+
+    /// Start chunked prefill for a request (Appendix A Fig 15).
+    fn begin_prefill(&self, sim: &mut Sim, req: DispatchReq) {
+        let req_id = req.req_id;
+        let chunks_layers: Vec<(u32, u32)>;
+        let watcher;
+        {
+            let s = self.state.borrow();
+            let w = &s.workload;
+            let seq = req.input_ids.len() as u32;
+            let chunks = w.chunks(seq);
+            chunks_layers = chunks
+                .iter()
+                .enumerate()
+                .flat_map(|(ci, _)| (0..w.layout.layers).map(move |l| (ci as u32, l)))
+                .collect();
+            let this = self.clone();
+            // UVM watcher: incremented after each layer's attention
+            // output projection (CUDA-graph compatible). The callback
+            // receives (old, new) and may observe coalesced updates.
+            watcher = s.engine.alloc_uvm_watcher(move |sim, old, new| {
+                for v in old..new {
+                    this.on_layer_done(sim, req_id, v);
+                }
+            });
+        }
+        // Enqueue all layer kernels on the GPU stream now; they run
+        // back-to-back (chunk-major), each bumping the watcher.
+        {
+            let s = self.state.borrow();
+            let w = &s.workload;
+            let seq = req.input_ids.len() as u32;
+            let mut counter = 0u64;
+            for (start, len) in w.chunks(seq) {
+                for _l in 0..w.layout.layers {
+                    counter += 1;
+                    let dur = w.compute.layer_ns(len, start);
+                    s.stats.borrow_mut().layer_compute.push(dur);
+                    let wh = watcher.clone();
+                    let c = counter;
+                    s.gpu_sim
+                        .launch(sim, 0, dur, true, move |sim, _end| wh.device_write(sim, c));
+                }
+            }
+        }
+        self.state.borrow_mut().active.insert(
+            req_id,
+            ReqTask {
+                req,
+                chunks: chunks_layers,
+                watcher,
+                outstanding_writes: 0,
+                tail_sent: false,
+            },
+        );
+    }
+
+    /// One (chunk, layer) finished on the GPU: transfer its pages.
+    fn on_layer_done(&self, sim: &mut Sim, req_id: u64, v: u64) {
+        let submit_t = sim.now();
+        let (engine, plan) = {
+            let mut s = self.state.borrow_mut();
+            if s.killed || s.cancelled.contains(&req_id) {
+                return;
+            }
+            let w = s.workload.clone();
+            let engine = s.engine.clone();
+            let Some(task) = s.active.get_mut(&req_id) else {
+                return;
+            };
+            let (chunk, layer) = task.chunks[v as usize];
+            let seq = task.req.input_ids.len() as u32;
+            let chunks = w.chunks(seq);
+            let (start, len) = chunks[chunk as usize];
+            // Pages of this chunk.
+            let ppc = w.chunk_tokens / w.layout.tokens_per_page;
+            let first_page = (start / w.layout.tokens_per_page) as usize;
+            let n_pages = w.layout.pages_for(len).min(ppc) as usize;
+            // Source: prefiller's own (layer, slot) pages; destination:
+            // decoder's slots from the request, adjusted to `layer`.
+            let src_idx: Vec<u32> = (0..n_pages)
+                .map(|i| w.layout.page_index(layer, (first_page + i) as u32))
+                .collect();
+            let dst_idx: Vec<u32> = (0..n_pages)
+                .map(|i| {
+                    let slot = task.req.pages[first_page + i];
+                    w.layout.page_index(layer, slot)
+                })
+                .collect();
+            task.outstanding_writes += 1;
+            let is_last = v as usize + 1 == task.chunks.len();
+            (
+                engine,
+                Some((
+                    w.layout.page_bytes,
+                    src_idx,
+                    dst_idx,
+                    task.req.imm,
+                    task.req.kv_desc.clone(),
+                    is_last,
+                )),
+            )
+        };
+        let Some((page_bytes, src_idx, dst_idx, imm, kv_desc, is_last)) = plan else {
+            return;
+        };
+        let (kv_src_handle, stats) = {
+            let s = self.state.borrow();
+            (s.kv_src.0.clone(), s.stats.clone())
+        };
+        stats.borrow_mut().writes += src_idx.len() as u64;
+        let this = self.clone();
+        let n_pages = src_idx.len();
+        engine.submit_paged_writes(
+            sim,
+            page_bytes,
+            (
+                &kv_src_handle,
+                &Pages {
+                    indices: src_idx,
+                    stride: page_bytes,
+                    offset: 0,
+                },
+            ),
+            (
+                &kv_desc,
+                &Pages {
+                    indices: dst_idx,
+                    stride: page_bytes,
+                    offset: 0,
+                },
+            ),
+            Some(imm),
+            OnDone::Callback(Box::new(move |sim| {
+                stats
+                    .borrow_mut()
+                    .layer_transfers
+                    .push((submit_t, sim.now()));
+                this.on_write_done(sim, req_id, n_pages);
+            })),
+        );
+        if is_last {
+            self.send_tail(sim, req_id);
+        }
+    }
+
+    /// Tail context: final single write carrying the +1 immediate.
+    fn send_tail(&self, sim: &mut Sim, req_id: u64) {
+        let (engine, tail_src, tail_bytes, desc, off, imm) = {
+            let mut s = self.state.borrow_mut();
+            if s.cancelled.contains(&req_id) {
+                return;
+            }
+            let engine = s.engine.clone();
+            let tail_buf = s.tail_src.0.clone();
+            let tb = s.workload.tail_bytes;
+            let task = s.active.get_mut(&req_id).expect("tail for unknown req");
+            task.tail_sent = true;
+            task.outstanding_writes += 1;
+            (
+                engine,
+                tail_buf,
+                tb,
+                task.req.tail_desc.clone(),
+                task.req.tail_idx as u64 * tb,
+                task.req.imm,
+            )
+        };
+        let this = self.clone();
+        engine.submit_single_write(
+            sim,
+            (&tail_src, 0),
+            tail_bytes,
+            (&desc, off),
+            Some(imm),
+            OnDone::Callback(Box::new(move |sim| this.on_write_done(sim, req_id, 1))),
+        );
+    }
+
+    fn on_write_done(&self, sim: &mut Sim, req_id: u64, _wrs: usize) {
+        let ack = {
+            let mut s = self.state.borrow_mut();
+            let Some(task) = s.active.get_mut(&req_id) else {
+                return;
+            };
+            task.outstanding_writes -= 1;
+            let finished = task.outstanding_writes == 0 && task.tail_sent;
+            let cancelled = s.cancelled.contains(&req_id);
+            if finished || (cancelled && s.active[&req_id].outstanding_writes == 0) {
+                let task = s.active.remove(&req_id).unwrap();
+                task.watcher.free();
+                if cancelled {
+                    s.cancelled.remove(&req_id);
+                    Some(task.req.decoder_addr.clone())
+                } else {
+                    None
+                }
+            } else {
+                None
+            }
+        };
+        // Cancellation confirmed only after every pending WRITE has
+        // completed — a stale write could otherwise clobber reused
+        // pages (§4).
+        if let Some(decoder) = ack {
+            let (engine, gpu) = {
+                let s = self.state.borrow();
+                (s.engine.clone(), s.gpu)
+            };
+            engine.submit_send(
+                sim,
+                gpu,
+                &decoder,
+                &CancelAck { req_id }.encode(),
+                OnDone::Noop,
+            );
+        }
+    }
+
+    fn on_cancel(&self, sim: &mut Sim, req_id: u64) {
+        let immediate_ack = {
+            let mut s = self.state.borrow_mut();
+            match s.active.get(&req_id) {
+                Some(task) if task.outstanding_writes > 0 => {
+                    // Writes in flight: ack once they drain.
+                    s.cancelled.insert(req_id);
+                    None
+                }
+                Some(task) => {
+                    let addr = task.req.decoder_addr.clone();
+                    s.cancelled.insert(req_id);
+                    // No writes in flight but kernels may still bump
+                    // the watcher; the cancelled set suppresses future
+                    // transfers. Ack now.
+                    Some(addr)
+                }
+                None => None, // already finished; ack anyway? No: done.
+            }
+        };
+        if let Some(addr) = immediate_ack {
+            let (engine, gpu) = {
+                let s = self.state.borrow();
+                (s.engine.clone(), s.gpu)
+            };
+            engine.submit_send(sim, gpu, &addr, &CancelAck { req_id }.encode(), OnDone::Noop);
+        }
+    }
+}

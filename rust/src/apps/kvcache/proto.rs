@@ -1,0 +1,236 @@
+//! Control-plane messages between decoder and prefiller (Appendix A,
+//! Fig 13), serialized with the engine wire format.
+
+use anyhow::{bail, Result};
+
+use crate::engine::api::{MrDesc, NetAddr};
+use crate::engine::wire::{self, tag, Dec, Enc};
+
+/// Decoder → prefiller: run prefill, WRITE results into my memory
+/// (paper Fig 13 `DispatchReq`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchReq {
+    /// Request id (for cancellation and bookkeeping).
+    pub req_id: u64,
+    /// Input token ids.
+    pub input_ids: Vec<u32>,
+    /// Decoder's domain-group address (for the prefiller's replies).
+    pub decoder_addr: NetAddr,
+    /// Immediate value the decoder's IMMCOUNTER expects.
+    pub imm: u32,
+    /// Descriptor of the decoder's KV region.
+    pub kv_desc: MrDesc,
+    /// Page slot indices (per layer addressing is derived from the
+    /// layout; slot i holds tokens [i*tokens_per_page, ...)).
+    pub pages: Vec<u32>,
+    /// Descriptor of the decoder's tail-context region.
+    pub tail_desc: MrDesc,
+    /// Tail slot index.
+    pub tail_idx: u32,
+}
+
+impl DispatchReq {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new(tag::KV_DISPATCH);
+        e.u64(self.req_id);
+        e.u32(self.input_ids.len() as u32);
+        for &t in &self.input_ids {
+            e.u32(t);
+        }
+        e.bytes(&wire::encode_net_addr(&self.decoder_addr));
+        e.u32(self.imm);
+        e.bytes(&wire::encode_mr_desc(&self.kv_desc));
+        e.u32(self.pages.len() as u32);
+        for &p in &self.pages {
+            e.u32(p);
+        }
+        e.bytes(&wire::encode_mr_desc(&self.tail_desc));
+        e.u32(self.tail_idx);
+        e.finish()
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<DispatchReq> {
+        let (t, mut d) = Dec::open(buf)?;
+        if t != tag::KV_DISPATCH {
+            bail!("expected KV_DISPATCH, got {t}");
+        }
+        let req_id = d.u64()?;
+        let n = d.u32()? as usize;
+        let mut input_ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            input_ids.push(d.u32()?);
+        }
+        let decoder_addr = wire::decode_net_addr(&d.bytes()?)?;
+        let imm = d.u32()?;
+        let kv_desc = wire::decode_mr_desc(&d.bytes()?)?;
+        let np = d.u32()? as usize;
+        let mut pages = Vec::with_capacity(np);
+        for _ in 0..np {
+            pages.push(d.u32()?);
+        }
+        let tail_desc = wire::decode_mr_desc(&d.bytes()?)?;
+        let tail_idx = d.u32()?;
+        d.done()?;
+        Ok(DispatchReq {
+            req_id,
+            input_ids,
+            decoder_addr,
+            imm,
+            kv_desc,
+            pages,
+            tail_desc,
+            tail_idx,
+        })
+    }
+}
+
+/// Decoder → prefiller: stop writing for `req_id` and confirm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CancelReq {
+    pub req_id: u64,
+}
+
+impl CancelReq {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new(tag::KV_CANCEL);
+        e.u64(self.req_id);
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<CancelReq> {
+        let (t, mut d) = Dec::open(buf)?;
+        if t != tag::KV_CANCEL {
+            bail!("expected KV_CANCEL");
+        }
+        let req_id = d.u64()?;
+        d.done()?;
+        Ok(CancelReq { req_id })
+    }
+}
+
+/// Prefiller → decoder: no further WRITEs for `req_id` will be
+/// issued; its pages may be reused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CancelAck {
+    pub req_id: u64,
+}
+
+impl CancelAck {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new(tag::KV_CANCEL_ACK);
+        e.u64(self.req_id);
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<CancelAck> {
+        let (t, mut d) = Dec::open(buf)?;
+        if t != tag::KV_CANCEL_ACK {
+            bail!("expected KV_CANCEL_ACK");
+        }
+        let req_id = d.u64()?;
+        d.done()?;
+        Ok(CancelAck { req_id })
+    }
+}
+
+/// Liveness probe, both directions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Heartbeat {
+    pub sender_node: u16,
+    pub seq: u64,
+}
+
+impl Heartbeat {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new(tag::HEARTBEAT);
+        e.u16(self.sender_node);
+        e.u64(self.seq);
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Heartbeat> {
+        let (t, mut d) = Dec::open(buf)?;
+        if t != tag::HEARTBEAT {
+            bail!("expected HEARTBEAT");
+        }
+        let sender_node = d.u16()?;
+        let seq = d.u64()?;
+        d.done()?;
+        Ok(Heartbeat { sender_node, seq })
+    }
+}
+
+/// Peek the tag of an incoming control message.
+pub fn msg_tag(buf: &[u8]) -> Result<u8> {
+    Ok(Dec::open(buf)?.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::nic::NicAddr;
+
+    fn addr() -> NetAddr {
+        NetAddr {
+            nics: vec![NicAddr { node: 1, gpu: 2, nic: 0 }],
+        }
+    }
+
+    fn desc() -> MrDesc {
+        MrDesc {
+            ptr: 0xABCD,
+            len: 1 << 20,
+            rkeys: vec![(NicAddr { node: 1, gpu: 2, nic: 0 }, 7)],
+        }
+    }
+
+    #[test]
+    fn dispatch_roundtrip() {
+        let req = DispatchReq {
+            req_id: 42,
+            input_ids: vec![1, 2, 3, 500],
+            decoder_addr: addr(),
+            imm: 99,
+            kv_desc: desc(),
+            pages: vec![5, 9, 0],
+            tail_desc: desc(),
+            tail_idx: 3,
+        };
+        let bytes = req.encode();
+        assert_eq!(DispatchReq::decode(&bytes).unwrap(), req);
+        assert_eq!(msg_tag(&bytes).unwrap(), tag::KV_DISPATCH);
+    }
+
+    #[test]
+    fn cancel_roundtrip_and_tag_dispatch() {
+        let c = CancelReq { req_id: 7 };
+        assert_eq!(CancelReq::decode(&c.encode()).unwrap(), c);
+        let a = CancelAck { req_id: 7 };
+        assert_eq!(CancelAck::decode(&a.encode()).unwrap(), a);
+        let h = Heartbeat { sender_node: 3, seq: 12 };
+        assert_eq!(Heartbeat::decode(&h.encode()).unwrap(), h);
+        // Cross-decoding fails loudly.
+        assert!(DispatchReq::decode(&c.encode()).is_err());
+        assert!(CancelReq::decode(&a.encode()).is_err());
+    }
+
+    #[test]
+    fn truncated_dispatch_fails() {
+        let req = DispatchReq {
+            req_id: 1,
+            input_ids: vec![1],
+            decoder_addr: addr(),
+            imm: 1,
+            kv_desc: desc(),
+            pages: vec![1],
+            tail_desc: desc(),
+            tail_idx: 0,
+        };
+        let bytes = req.encode();
+        for cut in [3, 10, bytes.len() - 1] {
+            assert!(DispatchReq::decode(&bytes[..cut]).is_err());
+        }
+    }
+}

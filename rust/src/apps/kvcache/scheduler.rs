@@ -1,0 +1,254 @@
+//! Global scheduler (paper Fig 3): selects a prefiller and a decoder
+//! for each incoming request and forwards it to the decoder.
+//!
+//! Placement policy is least-outstanding-work with capacity guards —
+//! the disaggregated fleet scales elastically (no fixed membership:
+//! prefillers/decoders join and leave between requests, which is the
+//! point of P2P over collectives, §1).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::engine::api::NetAddr;
+use crate::sim::Sim;
+
+use super::decoder::Decoder;
+
+/// A prefiller fleet entry.
+#[derive(Clone)]
+struct PrefillerSlot {
+    addr: NetAddr,
+    /// Outstanding prefill tokens assigned.
+    load: u64,
+    alive: bool,
+}
+
+struct SchedState {
+    prefillers: Vec<PrefillerSlot>,
+    decoders: Vec<(Decoder, u64)>,
+    dispatched: u64,
+}
+
+/// The global scheduler.
+#[derive(Clone)]
+pub struct Scheduler {
+    s: Rc<RefCell<SchedState>>,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler {
+    /// Empty fleet.
+    pub fn new() -> Self {
+        Scheduler {
+            s: Rc::new(RefCell::new(SchedState {
+                prefillers: Vec::new(),
+                decoders: Vec::new(),
+                dispatched: 0,
+            })),
+        }
+    }
+
+    /// Register a prefiller (dynamic scaling: callable at any time).
+    pub fn add_prefiller(&self, addr: NetAddr) {
+        self.s.borrow_mut().prefillers.push(PrefillerSlot {
+            addr,
+            load: 0,
+            alive: true,
+        });
+    }
+
+    /// Register a decoder.
+    pub fn add_decoder(&self, d: Decoder) {
+        self.s.borrow_mut().decoders.push((d, 0));
+    }
+
+    /// Mark a prefiller dead (heartbeat loss escalated by a decoder);
+    /// it receives no further requests until re-registered.
+    pub fn mark_prefiller_dead(&self, addr: &NetAddr) {
+        for p in &mut self.s.borrow_mut().prefillers {
+            if p.addr == *addr {
+                p.alive = false;
+            }
+        }
+    }
+
+    /// Requests dispatched so far.
+    pub fn dispatched(&self) -> u64 {
+        self.s.borrow().dispatched
+    }
+
+    /// Schedule one request: pick the least-loaded live prefiller and
+    /// the least-loaded decoder, then dispatch (paper: "a global
+    /// scheduler selects a prefiller node and a decoder node ... and
+    /// forwards the request to the decoder"). Returns
+    /// (request id, decoder index, prefiller address).
+    pub fn submit(
+        &self,
+        sim: &mut Sim,
+        input_ids: Vec<u32>,
+        decode_tokens: u32,
+    ) -> (u64, usize, NetAddr) {
+        let (pi, di, prefiller, decoder) = {
+            let mut s = self.s.borrow_mut();
+            let pi = s
+                .prefillers
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.alive)
+                .min_by_key(|(_, p)| p.load)
+                .map(|(i, _)| i)
+                .expect("no live prefillers");
+            let di = s
+                .decoders
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, load))| *load)
+                .map(|(i, _)| i)
+                .expect("no decoders");
+            s.prefillers[pi].load += input_ids.len() as u64;
+            s.decoders[di].1 += decode_tokens as u64;
+            s.dispatched += 1;
+            (
+                pi,
+                di,
+                s.prefillers[pi].addr.clone(),
+                s.decoders[di].0.clone(),
+            )
+        };
+        let _ = pi;
+        let id = decoder.submit_request(sim, &prefiller, input_ids, decode_tokens);
+        (id, di, prefiller)
+    }
+}
+
+/// MLA replica matching (§4): under tensor parallelism MLA replicates
+/// the compressed KvCache on every prefiller rank; to balance the
+/// transfer load, prefiller TP ranks are matched with decoder TP ranks
+/// by a seeded random permutation (fresh per request).
+pub fn mla_replica_matching(
+    tp: u32,
+    seed: u64,
+) -> Vec<(u32, u32)> {
+    let mut rng = crate::sim::Rng::new(seed ^ 0x41A);
+    let mut decoder_ranks: Vec<u32> = (0..tp).collect();
+    rng.shuffle(&mut decoder_ranks);
+    (0..tp).map(|p| (p, decoder_ranks[p as usize])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::kvcache::{Prefiller, ServingWorkload};
+    use crate::engine::api::EngineCosts;
+    use crate::engine::des_engine::Engine;
+    use crate::fabric::gpu::GpuSim;
+    use crate::fabric::nic::NicAddr;
+    use crate::fabric::profile::{GpuProfile, NicProfile};
+    use crate::fabric::simnet::SimNet;
+    use crate::fabric::topology::DeviceId;
+    use crate::sim::Sim;
+
+    fn fleet(n_prefill: u16, n_decode: u16) -> (Sim, Scheduler, Vec<Decoder>) {
+        let net = SimNet::new(8);
+        let total = n_prefill + n_decode;
+        for node in 0..total {
+            net.add_nic(NicAddr { node, gpu: 0, nic: 0 }, NicProfile::connectx7());
+        }
+        let mut sim = Sim::new();
+        let sched = Scheduler::new();
+        let w = ServingWorkload::tiny();
+        for node in 0..n_prefill {
+            let e = Engine::new(
+                &net,
+                node,
+                1,
+                1,
+                GpuProfile::h100(),
+                EngineCosts::default(),
+                node as u64,
+            );
+            let gpu = GpuSim::new(DeviceId { node, gpu: 0 }, GpuProfile::h100());
+            let _p = Prefiller::new(&mut sim, &e, 0, &gpu, w.clone(), node);
+            sched.add_prefiller(e.group_address(0));
+        }
+        let mut decoders = Vec::new();
+        for i in 0..n_decode {
+            let node = n_prefill + i;
+            let e = Engine::new(
+                &net,
+                node,
+                1,
+                1,
+                GpuProfile::h100(),
+                EngineCosts::default(),
+                node as u64,
+            );
+            let d = Decoder::new(&mut sim, &e, 0, w.clone());
+            sched.add_decoder(d.clone());
+            decoders.push(d);
+        }
+        (sim, sched, decoders)
+    }
+
+    #[test]
+    fn balances_across_fleet_and_completes() {
+        let (mut sim, sched, decoders) = fleet(2, 2);
+        let mut prefiller_hits = std::collections::HashMap::new();
+        for i in 0..8 {
+            let input: Vec<u32> = (0..32 + i).collect();
+            let (_, _, p) = sched.submit(&mut sim, input, 1);
+            *prefiller_hits.entry(p.primary().node).or_insert(0u32) += 1;
+        }
+        sim.run();
+        let total: usize = decoders.iter().map(|d| d.reports().borrow().len()).sum();
+        assert_eq!(total, 8, "all requests served");
+        // Both prefillers used (least-load balancing).
+        assert_eq!(prefiller_hits.len(), 2);
+        assert!(prefiller_hits.values().all(|&v| v >= 3));
+        assert_eq!(sched.dispatched(), 8);
+    }
+
+    #[test]
+    fn dead_prefiller_excluded_elastically() {
+        let (mut sim, sched, decoders) = fleet(2, 1);
+        let (_, _, first) = sched.submit(&mut sim, (0..16).collect(), 1);
+        sched.mark_prefiller_dead(&first);
+        for _ in 0..4 {
+            let (_, _, p) = sched.submit(&mut sim, (0..16).collect(), 1);
+            assert_ne!(p, first, "dead prefiller must not be selected");
+        }
+        sim.run();
+        assert_eq!(decoders[0].reports().borrow().len(), 5);
+    }
+
+    #[test]
+    fn mla_matching_is_a_balanced_bijection() {
+        for seed in 0..32 {
+            let m = mla_replica_matching(4, seed);
+            let mut dsts: Vec<u32> = m.iter().map(|&(_, d)| d).collect();
+            dsts.sort_unstable();
+            assert_eq!(dsts, vec![0, 1, 2, 3], "each decoder rank used once");
+        }
+        // Randomized across requests: not always identity.
+        let distinct: std::collections::HashSet<Vec<u32>> = (0..32)
+            .map(|s| mla_replica_matching(4, s).iter().map(|&(_, d)| d).collect())
+            .collect();
+        assert!(distinct.len() > 1, "matching must vary to balance load");
+    }
+
+    #[test]
+    #[should_panic(expected = "no live prefillers")]
+    fn empty_fleet_rejects() {
+        let (mut sim, sched, _d) = fleet(1, 1);
+        sched.mark_prefiller_dead(&{
+            let s = sched.s.borrow();
+            s.prefillers[0].addr.clone()
+        });
+        sched.submit(&mut sim, vec![1], 1);
+    }
+}

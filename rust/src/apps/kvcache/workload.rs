@@ -1,0 +1,154 @@
+//! Serving workload description + prefill compute model.
+//!
+//! The timing model stands in for the Qwen3-235B / H200-TP4 testbed of
+//! paper Table 3. Per-layer prefill time for a chunk of `C` tokens at
+//! context depth `ctx` follows a linear+attention roofline
+//! `C * (alpha + beta * (ctx + C/2))`, calibrated to the paper's
+//! per-layer compute column (2.27 ms at 4K → 34.9 ms at 128K with
+//! 16K chunks).
+
+use crate::sim::time::Duration;
+
+use super::layout::KvLayout;
+
+/// Calibrated per-layer prefill compute model.
+#[derive(Debug, Clone)]
+pub struct PrefillComputeModel {
+    /// ns per token (MLP + projections).
+    pub alpha_ns: f64,
+    /// ns per token per context token (attention).
+    pub beta_ns: f64,
+    /// Decode-pass time for one token (the extra final-token decode
+    /// pass the paper attributes most TTFT overhead to).
+    pub decode_pass_ns: Duration,
+}
+
+impl PrefillComputeModel {
+    /// Qwen3-235B on H200 TP4 (paper Table 3 calibration).
+    pub fn qwen3_235b_tp4() -> Self {
+        PrefillComputeModel {
+            alpha_ns: 540.0,
+            beta_ns: 0.0145,
+            decode_pass_ns: 40_000_000, // ~40 ms forward pass
+        }
+    }
+
+    /// Per-layer time for a chunk of `chunk` tokens whose context
+    /// (tokens before the chunk) is `ctx` tokens.
+    pub fn layer_ns(&self, chunk: u32, ctx: u32) -> Duration {
+        let c = chunk as f64;
+        let t = c * (self.alpha_ns + self.beta_ns * (ctx as f64 + c / 2.0));
+        t.ceil() as Duration
+    }
+}
+
+/// A Table-3-style serving workload.
+#[derive(Debug, Clone)]
+pub struct ServingWorkload {
+    pub layout: KvLayout,
+    pub compute: PrefillComputeModel,
+    /// Max chunk length for chunked prefill (paper: 16384).
+    pub chunk_tokens: u32,
+    /// Tail context bytes (last hidden state + logits).
+    pub tail_bytes: u64,
+}
+
+impl ServingWorkload {
+    /// The paper's Table 3 configuration: 32 KiB pages of 128 tokens,
+    /// 94 layers (Qwen3-235B), chunked prefill at 16 K tokens.
+    pub fn qwen3_235b(seq_tokens: u32) -> Self {
+        let layout = KvLayout {
+            page_bytes: 32 * 1024,
+            tokens_per_page: 128,
+            layers: 94,
+            slots_per_layer: (seq_tokens / 128).max(16) * 2,
+        };
+        ServingWorkload {
+            layout,
+            compute: PrefillComputeModel::qwen3_235b_tp4(),
+            chunk_tokens: 16384,
+            tail_bytes: 256 * 1024,
+        }
+    }
+
+    /// Tiny configuration for integration tests (backed buffers).
+    pub fn tiny() -> Self {
+        ServingWorkload {
+            layout: KvLayout {
+                page_bytes: 4096,
+                tokens_per_page: 16,
+                layers: 3,
+                slots_per_layer: 32,
+            },
+            compute: PrefillComputeModel {
+                alpha_ns: 100.0,
+                beta_ns: 0.001,
+                decode_pass_ns: 50_000,
+            },
+            chunk_tokens: 64,
+            tail_bytes: 1024,
+        }
+    }
+
+    /// Chunk boundaries for a sequence: (start, len) pairs.
+    pub fn chunks(&self, seq: u32) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < seq {
+            let len = (seq - start).min(self.chunk_tokens);
+            out.push((start, len));
+            start += len;
+        }
+        out
+    }
+
+    /// Total prefill compute across layers and chunks.
+    pub fn total_prefill_ns(&self, seq: u32) -> Duration {
+        self.chunks(seq)
+            .iter()
+            .map(|&(start, len)| self.compute.layer_ns(len, start) * self.layout.layers as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::MS;
+
+    #[test]
+    fn chunking() {
+        let w = ServingWorkload::qwen3_235b(40_000);
+        let chunks = w.chunks(40_000);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0], (0, 16384));
+        assert_eq!(chunks[2], (32768, 40_000 - 32768));
+        assert_eq!(w.chunks(100), vec![(0, 100)]);
+    }
+
+    #[test]
+    fn compute_model_matches_paper_shape() {
+        let m = PrefillComputeModel::qwen3_235b_tp4();
+        // Table 3 per-layer compute: 4K → 2.267 ms, 16K → 9.860 ms,
+        // 128K (last chunk at ctx 112K) → 34.895 ms. Allow 30%.
+        let t4k = m.layer_ns(4096, 0);
+        assert!((t4k as f64) > 1.5 * MS as f64 && (t4k as f64) < 3.2 * MS as f64, "{t4k}");
+        let t16k = m.layer_ns(16384, 0);
+        assert!((t16k as f64) > 7.0 * MS as f64 && (t16k as f64) < 13.0 * MS as f64, "{t16k}");
+        let t128k_last = m.layer_ns(16384, 112 * 1024);
+        assert!(
+            (t128k_last as f64) > 25.0 * MS as f64 && (t128k_last as f64) < 45.0 * MS as f64,
+            "{t128k_last}"
+        );
+        // Monotonic in context depth.
+        assert!(m.layer_ns(16384, 65536) > m.layer_ns(16384, 16384));
+    }
+
+    #[test]
+    fn total_prefill_grows_superlinearly() {
+        let w = ServingWorkload::qwen3_235b(131072);
+        let t32 = w.total_prefill_ns(32768);
+        let t128 = w.total_prefill_ns(131072);
+        assert!(t128 > 4 * t32, "attention term must bite: {t32} {t128}");
+    }
+}

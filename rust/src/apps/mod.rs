@@ -1,0 +1,5 @@
+//! Production systems built on the TransferEngine (paper §4–6).
+
+pub mod kvcache;
+pub mod moe;
+pub mod rlweights;

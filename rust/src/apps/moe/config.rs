@@ -1,0 +1,118 @@
+//! MoE workload configuration (DeepSeek-V3/R1 microbenchmark shapes,
+//! paper §7.4.3).
+
+use crate::sim::time::{Duration, US};
+
+/// Configuration of one MoE all-to-all scenario.
+#[derive(Debug, Clone)]
+pub struct MoeConfig {
+    /// Expert-parallel world size.
+    pub ranks: u32,
+    /// GPUs per node (NVLink domain size).
+    pub gpus_per_node: u32,
+    /// Total experts.
+    pub experts: u32,
+    /// Experts each token routes to (R).
+    pub top_k: u32,
+    /// Tokens per rank per iteration (decode: ≤128; prefill: 4096).
+    pub tokens: u32,
+    /// Dispatch payload per token: 7168 fp8 + 56 f32 scales.
+    pub dispatch_token_bytes: u32,
+    /// Combine payload per token: 7168 bf16.
+    pub combine_token_bytes: u32,
+    /// Private per-source buffer capacity in tokens (Fig 11 ablation).
+    pub private_tokens: u32,
+    /// Simulated overlapped work between dispatch-recv and combine
+    /// (grouped GEMM and shared experts).
+    pub gemm_gap_ns: Duration,
+    /// Seed for routing generation.
+    pub seed: u64,
+}
+
+impl MoeConfig {
+    /// Decode-shaped config (DeepSeek-V3: 7168 hidden, 56 scales,
+    /// top-8, 256 experts).
+    pub fn decode(ranks: u32, tokens: u32) -> Self {
+        MoeConfig {
+            ranks,
+            gpus_per_node: 8,
+            experts: 256,
+            top_k: 8,
+            tokens,
+            dispatch_token_bytes: 7168 + 56 * 4,
+            combine_token_bytes: 7168 * 2,
+            private_tokens: 48,
+            gemm_gap_ns: 30 * US,
+            seed: 0x30E,
+        }
+    }
+
+    /// Prefill-shaped config (4096-token chunks).
+    pub fn prefill(ranks: u32) -> Self {
+        MoeConfig {
+            tokens: 4096,
+            gemm_gap_ns: 300 * US,
+            ..Self::decode(ranks, 4096)
+        }
+    }
+
+    /// Tiny config for integration tests (backed buffers).
+    pub fn tiny() -> Self {
+        MoeConfig {
+            ranks: 4,
+            gpus_per_node: 2,
+            experts: 8,
+            top_k: 2,
+            tokens: 8,
+            dispatch_token_bytes: 64,
+            combine_token_bytes: 128,
+            private_tokens: 2,
+            gemm_gap_ns: 5 * US,
+            seed: 0x71,
+        }
+    }
+
+    /// Local experts per rank.
+    pub fn local_experts(&self) -> u32 {
+        self.experts / self.ranks
+    }
+
+    /// Receive-buffer token bound: `N * T * max(R, E/N)` (paper §6.1).
+    pub fn recv_buffer_tokens(&self) -> u64 {
+        self.ranks as u64 * self.tokens as u64 * self.top_k.max(self.local_experts()) as u64
+    }
+
+    /// Node of a rank.
+    pub fn node_of(&self, rank: u32) -> u32 {
+        rank / self.gpus_per_node
+    }
+
+    /// True when two ranks share an NVLink domain.
+    pub fn same_node(&self, a: u32, b: u32) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_shapes() {
+        let c = MoeConfig::decode(64, 128);
+        assert_eq!(c.local_experts(), 4);
+        assert_eq!(c.dispatch_token_bytes, 7392);
+        // Bound: 64 * 128 * max(8, 4).
+        assert_eq!(c.recv_buffer_tokens(), 64 * 128 * 8);
+        assert!(c.same_node(0, 7));
+        assert!(!c.same_node(7, 8));
+    }
+
+    #[test]
+    fn prefill_tokens() {
+        let c = MoeConfig::prefill(32);
+        assert_eq!(c.tokens, 4096);
+        assert_eq!(c.local_experts(), 8);
+        assert_eq!(c.recv_buffer_tokens(), 32 * 4096 * 8);
+    }
+}

@@ -1,0 +1,39 @@
+//! DeepEP-like baseline (paper §6.4).
+//!
+//! GPU-initiated RDMA (IBGDA) over RC queue pairs: tokens stream out
+//! one WR per token balanced across SMs, counts and completion are
+//! signalled through writes whose visibility relies on RC's *in-order*
+//! delivery — precisely the assumption that locks the design to
+//! ConnectX. Configured via [`super::rank::Strategy::deepep`]; this
+//! module pins the baseline's contract in tests.
+
+pub use super::rank::Strategy;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};
+    use crate::fabric::profile::NicProfile;
+
+    #[test]
+    fn deepep_strategy_contract() {
+        let s = Strategy::deepep();
+        assert!(s.gpu_initiated, "IBGDA: no host proxy");
+        assert!(s.per_token_writes, "per-token WRs");
+        assert!(!s.route_exchange, "relies on RC ordering, not routes");
+        assert_eq!(s.proxy_per_wr_ns, 0);
+    }
+
+    #[test]
+    fn deepep_time_to_first_transfer_beats_proxy() {
+        // DeepEP's strength: lower latency to the first transfer
+        // (§6.4). At tiny token counts where bulk transfers can't
+        // amortize, DeepEP should not lose badly.
+        let cfg = MoeConfig::decode(16, 8);
+        let ours = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::connectx7(), 1, 3);
+        let deepep = run_decode_epoch(&cfg, MoeImpl::DeepEp, NicProfile::connectx7(), 1, 3);
+        let (mut o, mut d) = (ours.dispatch, deepep.dispatch);
+        let (om, dm) = (o.percentile(50.0) as f64, d.percentile(50.0) as f64);
+        assert!(dm < om * 1.5, "deepep {dm} vs ours {om}");
+    }
+}

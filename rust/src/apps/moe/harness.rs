@@ -1,0 +1,236 @@
+//! MoE scenario harness: builds a cluster, runs iterations, collects
+//! the latency distributions the paper's Figures 9–12 and Tables 6–9
+//! report.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::engine::api::EngineCosts;
+use crate::engine::des_engine::Engine;
+use crate::fabric::nic::NicAddr;
+use crate::fabric::profile::{GpuProfile, NicProfile};
+use crate::fabric::simnet::SimNet;
+use crate::fabric::gpu::{GpuSim, NvlinkFabric};
+use crate::fabric::topology::DeviceId;
+use crate::sim::stats::Histogram;
+use crate::sim::Sim;
+
+use super::config::MoeConfig;
+use super::rank::{IterSample, MoeRank, Strategy};
+use super::routing::RoutingPlan;
+
+/// Which implementation to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MoeImpl {
+    Ours,
+    DeepEp,
+    Pplx,
+}
+
+impl MoeImpl {
+    pub fn strategy(self) -> Strategy {
+        match self {
+            MoeImpl::Ours => Strategy::ours(),
+            MoeImpl::DeepEp => Strategy::deepep(),
+            MoeImpl::Pplx => Strategy::pplx(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.strategy().name
+    }
+}
+
+/// Latency distributions across ranks × iterations (ns).
+#[derive(Default)]
+pub struct MoeLatencies {
+    pub dispatch: Histogram,
+    pub combine: Histogram,
+    pub d_send_kernel: Histogram,
+    pub d_recv_kernel: Histogram,
+    pub c_send_kernel: Histogram,
+    pub c_recv_kernel: Histogram,
+}
+
+/// Run `iters` decode iterations of `imp` on a cluster with `nic`
+/// NICs per GPU (×`nics_per_gpu`) and collect latency distributions.
+pub fn run_decode_epoch(
+    cfg: &MoeConfig,
+    imp: MoeImpl,
+    nic: NicProfile,
+    nics_per_gpu: u8,
+    iters: u64,
+) -> MoeLatencies {
+    run_epoch_with(cfg, imp.strategy(), nic, nics_per_gpu, iters, None)
+}
+
+/// Full-control variant: custom strategy + optional engine trace sink
+/// (Table 8/9).
+pub fn run_epoch_with(
+    cfg: &MoeConfig,
+    strat: Strategy,
+    nic: NicProfile,
+    nics_per_gpu: u8,
+    iters: u64,
+    trace_sink: Option<Rc<RefCell<Vec<crate::engine::des_engine::SubmitTrace>>>>,
+) -> MoeLatencies {
+    let n = cfg.ranks as usize;
+    let nodes = cfg.ranks.div_ceil(cfg.gpus_per_node) as u16;
+    let net = SimNet::new(cfg.seed);
+    for node in 0..nodes {
+        for gpu in 0..cfg.gpus_per_node as u8 {
+            for x in 0..nics_per_gpu {
+                net.add_nic(NicAddr { node, gpu, nic: x }, nic.clone());
+            }
+        }
+    }
+    let mut engines = Vec::new();
+    let mut nvlinks = Vec::new();
+    for node in 0..nodes {
+        let e = Engine::new(
+            &net,
+            node,
+            cfg.gpus_per_node as u8,
+            nics_per_gpu,
+            GpuProfile::h100(),
+            EngineCosts::default(),
+            node as u64 ^ cfg.seed,
+        );
+        if node == 0 {
+            if let Some(sink) = &trace_sink {
+                e.set_trace_sink(sink.clone());
+            }
+        }
+        engines.push(e);
+        nvlinks.push(NvlinkFabric::new());
+    }
+    let mut sim = Sim::new();
+
+    // Receive regions (contiguous buffer + private region + route
+    // mailboxes), unbacked at production sizes.
+    let region_len = ((cfg.recv_buffer_tokens() * cfg.dispatch_token_bytes as u64)
+        .max(cfg.recv_buffer_tokens() * cfg.combine_token_bytes as u64)
+        + (8 << 20)) as usize;
+    let mut recv_descs = Vec::with_capacity(n);
+    let mut gpus: Vec<GpuSim> = Vec::with_capacity(n);
+    let mut send_bufs = Vec::with_capacity(n);
+    for r in 0..n {
+        let node = cfg.node_of(r as u32) as usize;
+        let gpu = (r as u32 % cfg.gpus_per_node) as u8;
+        let e = &engines[node];
+        let (_h, d) = if region_len > (16 << 20) {
+            e.alloc_mr_unbacked(gpu, region_len)
+        } else {
+            e.alloc_mr(gpu, region_len)
+        };
+        recv_descs.push(d);
+        let (sb, _) = if region_len > (16 << 20) {
+            e.alloc_mr_unbacked(gpu, region_len)
+        } else {
+            e.alloc_mr(gpu, region_len)
+        };
+        send_bufs.push(sb);
+        gpus.push(GpuSim::new(
+            DeviceId {
+                node: node as u16,
+                gpu,
+            },
+            GpuProfile::h100(),
+        ));
+    }
+    let recv_descs = Rc::new(recv_descs);
+
+    let ranks: Vec<MoeRank> = (0..n)
+        .map(|r| {
+            let node = cfg.node_of(r as u32) as usize;
+            let gpu = (r as u32 % cfg.gpus_per_node) as u8;
+            MoeRank::new(
+                cfg,
+                strat.clone(),
+                r,
+                &engines[node],
+                gpu,
+                &gpus[r],
+                &nvlinks[node],
+                recv_descs.clone(),
+                send_bufs[r].clone(),
+            )
+        })
+        .collect();
+    let peer_registry = Rc::new(RefCell::new(ranks.clone()));
+    for r in &ranks {
+        r.set_peers(peer_registry.clone());
+    }
+
+    let mut out = MoeLatencies::default();
+    for iter in 0..iters {
+        let plan = Rc::new(RoutingPlan::generate(cfg, iter));
+        let samples: Rc<RefCell<Vec<IterSample>>> = Rc::default();
+        for rank in &ranks {
+            let sink = samples.clone();
+            rank.start_iteration(&mut sim, iter, plan.clone(), move |_sim, s| {
+                sink.borrow_mut().push(s);
+            });
+        }
+        sim.run();
+        let samples = samples.borrow();
+        assert_eq!(
+            samples.len(),
+            n,
+            "iteration {iter}: all ranks must finish (deadlock?)"
+        );
+        for s in samples.iter() {
+            out.dispatch.record(s.dispatch_ns);
+            out.combine.record(s.combine_ns);
+            out.d_send_kernel.record(s.d_send_kernel_ns);
+            out.d_recv_kernel.record(s.d_recv_kernel_ns);
+            out.c_send_kernel.record(s.c_send_kernel_ns);
+            out.c_recv_kernel.record(s.c_recv_kernel_ns);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{MS, US};
+
+    #[test]
+    fn tiny_epoch_completes_all_impls() {
+        let cfg = MoeConfig::tiny();
+        for imp in [MoeImpl::Ours, MoeImpl::DeepEp, MoeImpl::Pplx] {
+            let lat = run_decode_epoch(&cfg, imp, NicProfile::connectx7(), 1, 3);
+            assert_eq!(lat.dispatch.len(), 3 * 4, "{:?}", imp);
+            let mut d = lat.dispatch;
+            assert!(d.max() < MS, "{imp:?} dispatch too slow: {}", d.max());
+        }
+    }
+
+    #[test]
+    fn decode_ep16_ordering_matches_paper() {
+        // Fig 9 inter-node shape on CX-7: ours ≲ DeepEP ≪ pplx.
+        let cfg = MoeConfig::decode(16, 128);
+        let ours = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::connectx7(), 1, 4);
+        let deepep = run_decode_epoch(&cfg, MoeImpl::DeepEp, NicProfile::connectx7(), 1, 4);
+        let pplx = run_decode_epoch(&cfg, MoeImpl::Pplx, NicProfile::connectx7(), 1, 4);
+        let (mut o, mut d, mut p) = (ours.dispatch, deepep.dispatch, pplx.dispatch);
+        let (om, dm, pm) = (o.percentile(50.0), d.percentile(50.0), p.percentile(50.0));
+        assert!(om < 2 * dm, "ours {om} vs deepep {dm} must be comparable");
+        assert!(pm > 3 * om, "pplx {pm} must be far slower than ours {om}");
+        // Decode dispatch at EP16 lands in the tens-to-hundreds of µs.
+        assert!(om > 20 * US && om < 800 * US, "{om}");
+    }
+
+    #[test]
+    fn efa_trails_cx7_moderately() {
+        // §7.4.3: EFA latencies trail CX-7 by ~30% (decode, ours).
+        let cfg = MoeConfig::decode(16, 128);
+        let cx7 = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::connectx7(), 1, 4);
+        let efa = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::efa(), 2, 4);
+        let (mut c, mut e) = (cx7.dispatch, efa.dispatch);
+        let (cm, em) = (c.percentile(50.0) as f64, e.percentile(50.0) as f64);
+        assert!(em > cm, "EFA should be slower ({em} vs {cm})");
+        assert!(em < cm * 2.2, "but not catastrophically ({em} vs {cm})");
+    }
+}

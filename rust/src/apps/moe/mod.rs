@@ -1,0 +1,26 @@
+//! MoE dispatch/combine kernels around the TransferEngine (paper §6).
+//!
+//! Split send/receive kernels coordinate with a host proxy thread via
+//! UVM watchers and GDRCopy-polled IMMCOUNTERs. Dispatch first
+//! exchanges routing information (per-expert token counts) so every
+//! sender can compute its unique range in each receiver's contiguous
+//! buffer; the latency of that exchange is hidden by speculatively
+//! scattering the first tokens into private per-source buffers.
+//! Combine reuses the routing and issues a single scatter. Intra-node
+//! payloads ride NVLink. Up to 2 WRITEs per inter-node peer for
+//! dispatch and 1 for combine.
+//!
+//! Baselines: [`deepep`] (GPU-initiated, RC-ordered, per-token — the
+//! ConnectX-only comparator) and [`pplx`] (NVSHMEM-style generic
+//! host proxy with per-token synchronization).
+
+pub mod config;
+pub mod deepep;
+pub mod harness;
+pub mod pplx;
+pub mod rank;
+pub mod routing;
+
+pub use config::MoeConfig;
+pub use harness::{run_decode_epoch, MoeImpl, MoeLatencies};
+pub use routing::RoutingPlan;

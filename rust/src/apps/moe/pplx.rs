@@ -1,0 +1,35 @@
+//! pplx-kernels / NVSHMEM-IBRC-like baseline (paper §7.4).
+//!
+//! The portable comparator: a *generic* host proxy posts one WR per
+//! token with fine-grained per-token synchronization over NVLink —
+//! an order of magnitude slower than specialized bulk transfers,
+//! which is exactly what Fig 9 shows for pplx-kernels. Configured via
+//! [`super::rank::Strategy::pplx`].
+
+pub use super::rank::Strategy;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};
+    use crate::fabric::profile::NicProfile;
+
+    #[test]
+    fn pplx_strategy_contract() {
+        let s = Strategy::pplx();
+        assert!(!s.gpu_initiated, "generic host proxy");
+        assert!(s.per_token_writes);
+        assert!(s.proxy_per_wr_ns > 0, "per-WR generic proxy cost");
+        assert!(s.nvlink_per_token_ns > 0, "fine-grained NVLink sync");
+    }
+
+    #[test]
+    fn pplx_is_order_of_magnitude_slower_at_scale() {
+        let cfg = MoeConfig::decode(32, 128);
+        let ours = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::efa(), 2, 3);
+        let pplx = run_decode_epoch(&cfg, MoeImpl::Pplx, NicProfile::efa(), 2, 3);
+        let (mut o, mut p) = (ours.dispatch, pplx.dispatch);
+        let ratio = p.percentile(50.0) as f64 / o.percentile(50.0) as f64;
+        assert!(ratio > 4.0, "pplx/ours dispatch ratio {ratio} too small");
+    }
+}

@@ -1,0 +1,875 @@
+//! Per-rank MoE all-to-all state machine (dispatch → GEMM → combine).
+//!
+//! One code path serves the three compared implementations through a
+//! [`Strategy`]:
+//!
+//! * **ours** — host proxy + TransferEngine: route scatter, private
+//!   speculative tokens, bulk second-round scatter, engine barrier
+//!   (paper §6.1–6.3);
+//! * **DeepEP-like** — GPU-initiated, RC-ordered per-token writes with
+//!   count markers relying on in-order delivery (§6.4);
+//! * **pplx/NVSHMEM-like** — generic host proxy issuing per-token
+//!   writes with fine-grained synchronization.
+//!
+//! All three move the same token matrix over the same fabric; they
+//! differ in write granularity, CPU involvement and synchronization.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::engine::api::{MrDesc, MrHandle, ScatterDst};
+use crate::engine::des_engine::{Engine, OnDone};
+use crate::fabric::gpu::{GpuSim, NvlinkFabric};
+use crate::sim::time::{Duration, Instant, US};
+use crate::sim::Sim;
+
+use super::config::MoeConfig;
+use super::routing::RoutingPlan;
+
+/// Implementation strategy knobs.
+#[derive(Debug, Clone)]
+pub struct Strategy {
+    pub name: &'static str,
+    /// GPU-initiated RDMA: no UVM/proxy handoff before the first
+    /// transfer.
+    pub gpu_initiated: bool,
+    /// One WR per token instead of bulk writes.
+    pub per_token_writes: bool,
+    /// Exchange routes first + speculative private tokens (ours).
+    pub route_exchange: bool,
+    /// Generic-proxy CPU cost per posted WR (pplx's IBRC proxy).
+    pub proxy_per_wr_ns: Duration,
+    /// Extra per-token NVLink synchronization cost (pplx).
+    pub nvlink_per_token_ns: Duration,
+    /// Host-side route processing before the second dispatch round.
+    pub route_proc_ns: Duration,
+}
+
+impl Strategy {
+    /// fabric-lib's proxy-based kernels.
+    pub fn ours() -> Self {
+        Strategy {
+            name: "ours",
+            gpu_initiated: false,
+            per_token_writes: false,
+            route_exchange: true,
+            proxy_per_wr_ns: 0,
+            nvlink_per_token_ns: 0,
+            route_proc_ns: 12 * US,
+        }
+    }
+
+    /// DeepEP-like: IBGDA, per-token, RC ordering for count markers.
+    pub fn deepep() -> Self {
+        Strategy {
+            name: "DeepEP",
+            gpu_initiated: true,
+            per_token_writes: true,
+            route_exchange: false,
+            proxy_per_wr_ns: 0,
+            nvlink_per_token_ns: 0,
+            route_proc_ns: 0,
+        }
+    }
+
+    /// pplx-kernels-like: NVSHMEM generic host proxy (IBRC).
+    pub fn pplx() -> Self {
+        Strategy {
+            name: "pplx",
+            gpu_initiated: false,
+            per_token_writes: true,
+            route_exchange: false,
+            proxy_per_wr_ns: 1400,
+            nvlink_per_token_ns: 500,
+            route_proc_ns: 0,
+        }
+    }
+}
+
+/// Immediate-value kinds, scoped per iteration (same value used by all
+/// senders so receivers just count).
+fn imm_for(iter: u64, kind: u32) -> u32 {
+    (iter as u32) * 4 + kind
+}
+const IMM_ROUTE: u32 = 0;
+const IMM_TOKEN: u32 = 1;
+const IMM_BARRIER: u32 = 2;
+const IMM_COMBINE: u32 = 3;
+
+/// Latency samples of one rank for one iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterSample {
+    pub dispatch_ns: u64,
+    pub combine_ns: u64,
+    pub d_send_kernel_ns: u64,
+    pub d_recv_kernel_ns: u64,
+    pub c_send_kernel_ns: u64,
+    pub c_recv_kernel_ns: u64,
+}
+
+/// GPU kernel-time model for the MoE kernels (HBM roofline + launch
+/// fixed costs; §6.2 "fully utilize all SMs and the memory bandwidth").
+#[derive(Debug, Clone)]
+pub struct KernelModel {
+    pub fixed_ns: Duration,
+    pub hbm_bytes_per_ns: f64,
+}
+
+impl KernelModel {
+    pub fn h100() -> Self {
+        KernelModel {
+            fixed_ns: 3_500,
+            hbm_bytes_per_ns: 3350.0,
+        }
+    }
+
+    fn t(&self, bytes: u64) -> Duration {
+        self.fixed_ns + (bytes as f64 / self.hbm_bytes_per_ns) as Duration
+    }
+}
+
+struct RankState {
+    cfg: MoeConfig,
+    strat: Strategy,
+    rank: usize,
+    engine: Engine,
+    gpu: u8,
+    gpu_sim: GpuSim,
+    nvlink: NvlinkFabric,
+    km: KernelModel,
+    /// Send staging + contiguous receive buffers (+ private region).
+    send_buf: MrHandle,
+    recv_desc_of: Rc<Vec<MrDesc>>,
+    /// Current iteration state.
+    iter: u64,
+    plan: Rc<RoutingPlan>,
+    t0: Instant,
+    /// Gate for dispatch receive: engine tokens done + NVLink arrivals
+    /// + own pack kernel done.
+    rdma_tokens_done: bool,
+    nvlink_pending: usize,
+    pack_done: bool,
+    recv_started: bool,
+    /// Gate for combine receive.
+    c_rdma_done: bool,
+    c_nvlink_pending: usize,
+    c_pack_done: bool,
+    c_recv_started: bool,
+    combine_t0: Instant,
+    barrier_done: bool,
+    gemm_done_at: Instant,
+    sample: IterSample,
+    on_iter_done: Option<Box<dyn FnOnce(&mut Sim, IterSample)>>,
+    /// All ranks in the world (for NVLink delivery); set by the
+    /// harness after construction.
+    peers: Rc<RefCell<Vec<MoeRank>>>,
+}
+
+/// One MoE rank.
+#[derive(Clone)]
+pub struct MoeRank {
+    s: Rc<RefCell<RankState>>,
+}
+
+impl MoeRank {
+    pub fn new(
+        cfg: &MoeConfig,
+        strat: Strategy,
+        rank: usize,
+        engine: &Engine,
+        gpu: u8,
+        gpu_sim: &GpuSim,
+        nvlink: &NvlinkFabric,
+        recv_desc_of: Rc<Vec<MrDesc>>,
+        send_buf: MrHandle,
+    ) -> Self {
+        MoeRank {
+            s: Rc::new(RefCell::new(RankState {
+                cfg: cfg.clone(),
+                strat,
+                rank,
+                engine: engine.clone(),
+                gpu,
+                gpu_sim: gpu_sim.clone(),
+                nvlink: nvlink.clone(),
+                km: KernelModel::h100(),
+                send_buf,
+                recv_desc_of,
+                iter: 0,
+                plan: Rc::new(RoutingPlan {
+                    tokens_to: vec![],
+                    recv_totals: vec![],
+                }),
+                t0: 0,
+                rdma_tokens_done: false,
+                nvlink_pending: 0,
+                pack_done: false,
+                recv_started: false,
+                c_rdma_done: false,
+                c_nvlink_pending: 0,
+                c_pack_done: false,
+                c_recv_started: false,
+                combine_t0: 0,
+                barrier_done: false,
+                gemm_done_at: 0,
+                sample: IterSample::default(),
+                on_iter_done: None,
+                peers: Rc::default(),
+            })),
+        }
+    }
+
+    /// Wire the world's rank list (NVLink delivery targets).
+    pub fn set_peers(&self, peers: Rc<RefCell<Vec<MoeRank>>>) {
+        self.s.borrow_mut().peers = peers;
+    }
+
+    /// Start one dispatch+combine iteration; `on_done` fires when this
+    /// rank's combine receive kernel finishes.
+    pub fn start_iteration(
+        &self,
+        sim: &mut Sim,
+        iter: u64,
+        plan: Rc<RoutingPlan>,
+        on_done: impl FnOnce(&mut Sim, IterSample) + 'static,
+    ) {
+        let (gpu_sim, count_dur) = {
+            let mut s = self.s.borrow_mut();
+            s.iter = iter;
+            s.plan = plan;
+            s.t0 = sim.now();
+            s.rdma_tokens_done = false;
+            s.pack_done = false;
+            s.recv_started = false;
+            s.c_rdma_done = false;
+            s.c_pack_done = false;
+            s.c_recv_started = false;
+            s.barrier_done = false;
+            s.sample = IterSample::default();
+            s.on_iter_done = Some(Box::new(on_done));
+            // NVLink arrivals expected from intra-node peers.
+            // Dispatch: NVLink tokens arrive from intra srcs that
+            // route to me; combine: returned tokens arrive from intra
+            // peers I dispatched to.
+            let intra_in: usize = (0..s.plan.ranks())
+                .filter(|&src| {
+                    src != s.rank
+                        && s.cfg.same_node(src as u32, s.rank as u32)
+                        && s.plan.count(src, s.rank) > 0
+                })
+                .count();
+            let intra_back: usize = (0..s.plan.ranks())
+                .filter(|&dst| {
+                    dst != s.rank
+                        && s.cfg.same_node(dst as u32, s.rank as u32)
+                        && s.plan.count(s.rank, dst) > 0
+                })
+                .count();
+            s.nvlink_pending = intra_in;
+            s.c_nvlink_pending = intra_back;
+            // Counting kernel: histogram of T tokens over local-expert
+            // bins in shared memory, then UVM transfer.
+            let count_dur = s.km.fixed_ns + (s.cfg.tokens as u64 * 16) / 100;
+            (s.gpu_sim.clone(), count_dur)
+        };
+        // Register receiver-side expectations for this iteration.
+        self.register_expectations(sim);
+
+        let this = self.clone();
+        gpu_sim.launch(sim, 0, count_dur, true, move |sim, _| {
+            this.on_counts_ready(sim);
+        });
+    }
+
+    /// Receiver-side: expectations derivable before any data arrives
+    /// (counts come from the routing plan; in the real system the
+    /// route exchange provides them — the DES registers them up front
+    /// and the engine's ImmCounter tolerates early arrivals either
+    /// way).
+    fn register_expectations(&self, sim: &mut Sim) {
+        let (engine, gpu, iter, route_exchange, n_routes, token_writes, combine_writes, barrier_n) = {
+            let s = self.s.borrow();
+            let n = s.plan.ranks();
+            let me = s.rank;
+            // Inter-node sources sending ≥1 token to me.
+            let inter_srcs: Vec<usize> = (0..n)
+                .filter(|&src| {
+                    src != me
+                        && !s.cfg.same_node(src as u32, me as u32)
+                        && s.plan.count(src, me) > 0
+                })
+                .collect();
+            let token_writes: u32 = if s.strat.per_token_writes {
+                // One WR per token copy (+1 ordered count marker per
+                // src for DeepEP/pplx).
+                inter_srcs
+                    .iter()
+                    .map(|&src| s.plan.count(src, me) + 1)
+                    .sum()
+            } else {
+                // Ours: ≤2 bulk writes per src — the speculative
+                // private write (absent when the budget is 0) and the
+                // placement-dependent remainder.
+                inter_srcs
+                    .iter()
+                    .map(|&src| {
+                        let c = s.plan.count(src, me);
+                        u32::from(c.min(s.cfg.private_tokens) > 0)
+                            + u32::from(c > s.cfg.private_tokens)
+                    })
+                    .sum()
+            };
+            // Combine: tokens I dispatched come back from each peer I
+            // sent to (reverse direction).
+            let combine_inter: Vec<usize> = (0..n)
+                .filter(|&dst| {
+                    dst != me
+                        && !s.cfg.same_node(dst as u32, me as u32)
+                        && s.plan.count(me, dst) > 0
+                })
+                .collect();
+            let combine_writes: u32 = if s.strat.per_token_writes {
+                combine_inter
+                    .iter()
+                    .map(|&dst| s.plan.count(me, dst) + 1)
+                    .sum()
+            } else {
+                combine_inter.len() as u32
+            };
+            (
+                s.engine.clone(),
+                s.gpu,
+                s.iter,
+                s.strat.route_exchange,
+                (n - 1) as u32,
+                token_writes,
+                combine_writes,
+                (n - 1) as u32,
+            )
+        };
+        // Routes (ours only).
+        if route_exchange {
+            let this = self.clone();
+            engine.expect_imm_count(sim, gpu, imm_for(iter, IMM_ROUTE), n_routes, move |sim| {
+                this.on_routes_complete(sim);
+            });
+        }
+        // Dispatch token payloads.
+        if token_writes > 0 {
+            let this = self.clone();
+            engine.expect_imm_count(sim, gpu, imm_for(iter, IMM_TOKEN), token_writes, move |sim| {
+                this.on_rdma_tokens_done(sim);
+            });
+        } else {
+            self.s.borrow_mut().rdma_tokens_done = true;
+        }
+        // Barrier.
+        let this = self.clone();
+        engine.expect_imm_count(sim, gpu, imm_for(iter, IMM_BARRIER), barrier_n, move |sim| {
+            this.on_barrier_done(sim);
+        });
+        // Combine payloads.
+        if combine_writes > 0 {
+            let this = self.clone();
+            engine.expect_imm_count(
+                sim,
+                gpu,
+                imm_for(iter, IMM_COMBINE),
+                combine_writes,
+                move |sim| this.on_combine_rdma_done(sim),
+            );
+        } else {
+            self.s.borrow_mut().c_rdma_done = true;
+        }
+    }
+
+    /// Counting kernel finished: the proxy (or the GPU itself when
+    /// GPU-initiated) launches route + speculative-token transfers;
+    /// the pack kernel runs next on the stream.
+    fn on_counts_ready(&self, sim: &mut Sim) {
+        let handoff = {
+            let s = self.s.borrow();
+            if s.strat.gpu_initiated {
+                0
+            } else {
+                // UVM watcher visibility + GDRCopy poll + proxy wake.
+                s.gpu_sim.profile().pcie_ns + 1_500
+            }
+        };
+        let this = self.clone();
+        sim.after(handoff, move |sim| this.proxy_first_round(sim));
+
+        // Pack kernel (signal host first, then NVLink pushes after a
+        // grid barrier — §6.2 write-ordering strategy).
+        let (gpu_sim, pack_dur) = {
+            let mut s = self.s.borrow_mut();
+            let total_send_tokens: u64 = (0..s.plan.ranks())
+                .filter(|&d| d != s.rank)
+                .map(|d| s.plan.count(s.rank, d) as u64)
+                .sum();
+            let bytes = total_send_tokens * s.cfg.dispatch_token_bytes as u64 * 2;
+            let d = s.km.t(bytes);
+            s.sample.d_send_kernel_ns = d;
+            (s.gpu_sim.clone(), d)
+        };
+        let this = self.clone();
+        gpu_sim.launch(sim, 0, pack_dur, true, move |sim, _| {
+            this.on_pack_done(sim);
+        });
+    }
+
+    /// First proxy round: scatter routes to every peer + private
+    /// tokens to inter-node peers.
+    fn proxy_first_round(&self, sim: &mut Sim) {
+        let (engine, send_buf, route_dsts, private_dsts, iter, extra_cpu) = {
+            let s = self.s.borrow();
+            let me = s.rank;
+            let route_bytes = s.cfg.local_experts() as u64 * 4;
+            let mut route_dsts = Vec::new();
+            for d in 0..s.plan.ranks() {
+                if d == me {
+                    continue;
+                }
+                route_dsts.push(ScatterDst {
+                    len: route_bytes,
+                    src: 0,
+                    dst: (s.recv_desc_of[d].clone(), (me as u64) * 64),
+                });
+            }
+            let mut private_dsts = Vec::new();
+            if s.strat.route_exchange {
+                for &d in &s.plan.inter_peers_with_tokens(&s.cfg, me) {
+                    let c = s.plan.count(me, d).min(s.cfg.private_tokens) as u64;
+                    if c == 0 {
+                        continue;
+                    }
+                    private_dsts.push(ScatterDst {
+                        len: c * s.cfg.dispatch_token_bytes as u64,
+                        src: 4096,
+                        dst: (
+                            s.recv_desc_of[d].clone(),
+                            // Private per-source region: fixed slot per src.
+                            4096 + (me as u64) * s.cfg.private_tokens as u64
+                                * s.cfg.dispatch_token_bytes as u64,
+                        ),
+                    });
+                }
+            }
+            let extra = s.strat.proxy_per_wr_ns * route_dsts.len() as u64;
+            (
+                s.engine.clone(),
+                s.send_buf.clone(),
+                route_dsts,
+                private_dsts,
+                s.iter,
+                extra,
+            )
+        };
+        // Generic-proxy implementations pay extra CPU per WR.
+        let this = self.clone();
+        sim.after(extra_cpu, move |sim| {
+            let s = this.s.borrow();
+            let engine = engine.clone();
+            drop(s);
+            engine.submit_scatter(
+                sim,
+                None,
+                &send_buf,
+                &route_dsts,
+                Some(imm_for(iter, IMM_ROUTE)),
+                OnDone::Noop,
+            );
+            if !private_dsts.is_empty() {
+                engine.submit_scatter(
+                    sim,
+                    None,
+                    &send_buf,
+                    &private_dsts,
+                    Some(imm_for(iter, IMM_TOKEN)),
+                    OnDone::Noop,
+                );
+            }
+            // Non-route-exchange strategies send ALL tokens now,
+            // per-token (DeepEP straight from the GPU; pplx through
+            // its proxy).
+            this.maybe_send_all_tokens_per_token(sim);
+        });
+    }
+
+    /// DeepEP/pplx path: every token copy is its own WRITEIMM, plus an
+    /// RC-ordered count marker per destination.
+    fn maybe_send_all_tokens_per_token(&self, sim: &mut Sim) {
+        let (engine, send_buf, writes, iter, per_wr_cpu) = {
+            let s = self.s.borrow();
+            if !s.strat.per_token_writes {
+                return;
+            }
+            let me = s.rank;
+            let mut writes = Vec::new();
+            for d in s.plan.inter_peers_with_tokens(&s.cfg, me) {
+                let c = s.plan.count(me, d);
+                for t in 0..c {
+                    writes.push(ScatterDst {
+                        len: s.cfg.dispatch_token_bytes as u64,
+                        src: (t as u64 % 512) * s.cfg.dispatch_token_bytes as u64,
+                        dst: (
+                            s.recv_desc_of[d].clone(),
+                            65536 + (t as u64) * s.cfg.dispatch_token_bytes as u64,
+                        ),
+                    });
+                }
+                // Count marker (zero-ish payload), ordered after the
+                // tokens on the same QP under RC.
+                writes.push(ScatterDst {
+                    len: 8,
+                    src: 0,
+                    dst: (s.recv_desc_of[d].clone(), (me as u64) * 64),
+                });
+            }
+            (
+                s.engine.clone(),
+                s.send_buf.clone(),
+                writes,
+                s.iter,
+                s.strat.proxy_per_wr_ns,
+            )
+        };
+        if writes.is_empty() {
+            return;
+        }
+        let cpu = per_wr_cpu * writes.len() as u64;
+        let this = self.clone();
+        sim.after(cpu, move |sim| {
+            let engine = engine.clone();
+            engine.submit_scatter(
+                sim,
+                None,
+                &send_buf,
+                &writes,
+                Some(imm_for(iter, IMM_TOKEN)),
+                OnDone::Noop,
+            );
+            let _ = &this;
+        });
+    }
+
+    /// All routes arrived (ours): process them and scatter the
+    /// remaining (non-private) tokens.
+    fn on_routes_complete(&self, sim: &mut Sim) {
+        let (engine, send_buf, rest_dsts, iter, proc) = {
+            let s = self.s.borrow();
+            let me = s.rank;
+            let mut rest = Vec::new();
+            for &d in &s.plan.inter_peers_with_tokens(&s.cfg, me) {
+                let c = s.plan.count(me, d);
+                if c > s.cfg.private_tokens {
+                    rest.push(ScatterDst {
+                        len: (c - s.cfg.private_tokens) as u64
+                            * s.cfg.dispatch_token_bytes as u64,
+                        src: 8192,
+                        dst: (s.recv_desc_of[d].clone(), 1 << 20),
+                    });
+                }
+            }
+            (
+                s.engine.clone(),
+                s.send_buf.clone(),
+                rest,
+                s.iter,
+                s.strat.route_proc_ns,
+            )
+        };
+        if rest_dsts.is_empty() {
+            return;
+        }
+        // Host-side route processing (tens of µs, off the critical
+        // path when private buffers hide it — Fig 11).
+        sim.after(proc, move |sim| {
+            engine.submit_scatter(
+                sim,
+                None,
+                &send_buf,
+                &rest_dsts,
+                Some(imm_for(iter, IMM_TOKEN)),
+                OnDone::Noop,
+            );
+        });
+    }
+
+    /// Pack kernel done: push intra-node tokens over NVLink.
+    fn on_pack_done(&self, sim: &mut Sim) {
+        let pushes = {
+            let mut s = self.s.borrow_mut();
+            s.pack_done = true;
+            let me = s.rank;
+            let prof = s.gpu_sim.profile();
+            let mut pushes = Vec::new();
+            for d in s.plan.intra_peers_with_tokens(&s.cfg, me) {
+                let bytes =
+                    s.plan.count(me, d) as u64 * s.cfg.dispatch_token_bytes as u64;
+                let sync = s.strat.nvlink_per_token_ns * s.plan.count(me, d) as u64;
+                let arrive = s.nvlink.push(
+                    sim,
+                    &prof,
+                    (me as u32 % s.cfg.gpus_per_node) as u8,
+                    (d as u32 % s.cfg.gpus_per_node) as u8,
+                    bytes,
+                ) + sync;
+                pushes.push((d, arrive));
+            }
+            pushes
+        };
+        let peers = self.s.borrow().peers.clone();
+        for (d, arrive) in &pushes {
+            let peer = peers.borrow()[*d].clone();
+            sim.at(*arrive, move |sim| peer.on_nvlink_arrival(sim, false));
+        }
+        // Ranks with no intra outputs still complete their local
+        // "self" tokens at pack end.
+        self.maybe_start_dispatch_recv(sim);
+    }
+
+    fn on_nvlink_arrival(&self, sim: &mut Sim, combine: bool) {
+        {
+            let mut s = self.s.borrow_mut();
+            if combine {
+                s.c_nvlink_pending = s.c_nvlink_pending.saturating_sub(1);
+            } else {
+                s.nvlink_pending = s.nvlink_pending.saturating_sub(1);
+            }
+        }
+        if combine {
+            self.maybe_start_combine_recv(sim);
+        } else {
+            self.maybe_start_dispatch_recv(sim);
+        }
+    }
+
+    fn on_rdma_tokens_done(&self, sim: &mut Sim) {
+        self.s.borrow_mut().rdma_tokens_done = true;
+        self.maybe_start_dispatch_recv(sim);
+    }
+
+    /// Gate: RDMA tokens + NVLink tokens + own pack kernel → launch
+    /// the receive (shuffle) kernel.
+    fn maybe_start_dispatch_recv(&self, sim: &mut Sim) {
+        let (gpu_sim, dur, gdr) = {
+            let mut s = self.s.borrow_mut();
+            if s.recv_started
+                || !s.rdma_tokens_done
+                || s.nvlink_pending > 0
+                || !s.pack_done
+            {
+                return;
+            }
+            s.recv_started = true;
+            let recv_tokens = s.plan.recv_totals[s.rank];
+            let bytes = recv_tokens * s.cfg.dispatch_token_bytes as u64 * 2;
+            let d = s.km.t(bytes) + s.km.fixed_ns; // shuffle reads+writes
+            s.sample.d_recv_kernel_ns = d;
+            // GDRCopy-visible flag latency before the kernel observes
+            // readiness.
+            (s.gpu_sim.clone(), d, s.gpu_sim.profile().pcie_ns / 2)
+        };
+        let this = self.clone();
+        sim.after(gdr, move |sim| {
+            let gpu_sim = gpu_sim.clone();
+            let t2 = this.clone();
+            gpu_sim.launch(sim, 0, dur, true, move |sim, _| {
+                t2.on_dispatch_recv_done(sim);
+            });
+        });
+    }
+
+    fn on_dispatch_recv_done(&self, sim: &mut Sim) {
+        let (engine, gpu, barrier_dsts, iter, gap) = {
+            let mut s = self.s.borrow_mut();
+            s.sample.dispatch_ns = sim.now() - s.t0;
+            let me = s.rank;
+            let dsts: Vec<MrDesc> = (0..s.plan.ranks())
+                .filter(|&d| d != me)
+                .map(|d| s.recv_desc_of[d].clone())
+                .collect();
+            s.gemm_done_at = sim.now() + s.cfg.gemm_gap_ns;
+            (s.engine.clone(), s.gpu, dsts, s.iter, s.cfg.gemm_gap_ns)
+        };
+        // Barrier: all incoming writes accounted for; proxies sync so
+        // buffers can be reused by combine (§6.2 end).
+        engine.submit_barrier(
+            sim,
+            gpu,
+            None,
+            &barrier_dsts,
+            imm_for(iter, IMM_BARRIER),
+            OnDone::Noop,
+        );
+        // Grouped GEMM + shared experts run in the gap.
+        let this = self.clone();
+        sim.after(gap, move |sim| this.maybe_start_combine_send(sim));
+    }
+
+    fn on_barrier_done(&self, sim: &mut Sim) {
+        self.s.borrow_mut().barrier_done = true;
+        self.maybe_start_combine_send(sim);
+    }
+
+    /// Combine send starts when the GEMM gap elapsed AND the barrier
+    /// confirmed buffer reuse is safe.
+    fn maybe_start_combine_send(&self, sim: &mut Sim) {
+        let (gpu_sim, dur) = {
+            let mut s = self.s.borrow_mut();
+            if s.combine_t0 != 0 || !s.barrier_done || sim.now() < s.gemm_done_at {
+                return;
+            }
+            s.combine_t0 = sim.now();
+            let me = s.rank;
+            let send_tokens: u64 = (0..s.plan.ranks())
+                .filter(|&d| d != me)
+                .map(|d| s.plan.count(d, me) as u64) // combine returns received tokens
+                .sum();
+            let bytes = send_tokens * s.cfg.combine_token_bytes as u64 * 2;
+            let d = s.km.t(bytes);
+            s.sample.c_send_kernel_ns = d;
+            (s.gpu_sim.clone(), d)
+        };
+        let this = self.clone();
+        gpu_sim.launch(sim, 0, dur, true, move |sim, _| {
+            this.on_combine_pack_done(sim);
+        });
+    }
+
+    /// Combine pack done: proxy sends one scatter (bulk) or per-token
+    /// writes; NVLink pushes intra-node.
+    fn on_combine_pack_done(&self, sim: &mut Sim) {
+        let (engine, send_buf, dsts, iter, handoff, nv_pushes) = {
+            let mut s = self.s.borrow_mut();
+            s.c_pack_done = true;
+            let me = s.rank;
+            let mut dsts = Vec::new();
+            for d in 0..s.plan.ranks() {
+                if d == me || s.cfg.same_node(me as u32, d as u32) {
+                    continue;
+                }
+                // Return tokens that `d` dispatched to me.
+                let c = s.plan.count(d, me);
+                if c == 0 {
+                    continue;
+                }
+                if s.strat.per_token_writes {
+                    for t in 0..c {
+                        dsts.push(ScatterDst {
+                            len: s.cfg.combine_token_bytes as u64,
+                            src: (t as u64 % 512) * s.cfg.combine_token_bytes as u64,
+                            dst: (
+                                s.recv_desc_of[d].clone(),
+                                (2 << 20) + t as u64 * s.cfg.combine_token_bytes as u64,
+                            ),
+                        });
+                    }
+                    dsts.push(ScatterDst {
+                        len: 8,
+                        src: 0,
+                        dst: (s.recv_desc_of[d].clone(), (me as u64) * 64),
+                    });
+                } else {
+                    dsts.push(ScatterDst {
+                        len: c as u64 * s.cfg.combine_token_bytes as u64,
+                        src: 0,
+                        dst: (s.recv_desc_of[d].clone(), 2 << 20),
+                    });
+                }
+            }
+            let handoff = if s.strat.gpu_initiated {
+                0
+            } else {
+                s.gpu_sim.profile().pcie_ns + 1_500 + s.strat.proxy_per_wr_ns * dsts.len() as u64
+            };
+            // NVLink pushes.
+            let prof = s.gpu_sim.profile();
+            let mut nv = Vec::new();
+            for d in 0..s.plan.ranks() {
+                if d == me || !s.cfg.same_node(me as u32, d as u32) {
+                    continue;
+                }
+                // Tokens d sent to me go back to d.
+                let c = s.plan.count(d, me);
+                if c == 0 {
+                    continue;
+                }
+                let bytes = c as u64 * s.cfg.combine_token_bytes as u64;
+                let sync = s.strat.nvlink_per_token_ns * c as u64;
+                let arrive = s.nvlink.push(
+                    sim,
+                    &prof,
+                    (me as u32 % s.cfg.gpus_per_node) as u8,
+                    (d as u32 % s.cfg.gpus_per_node) as u8,
+                    bytes,
+                ) + sync;
+                nv.push((d, arrive));
+            }
+            (
+                s.engine.clone(),
+                s.send_buf.clone(),
+                dsts,
+                s.iter,
+                handoff,
+                nv,
+            )
+        };
+        let peers = self.s.borrow().peers.clone();
+        for (d, arrive) in nv_pushes {
+            let peer = peers.borrow()[d].clone();
+            sim.at(arrive, move |sim| peer.on_nvlink_arrival(sim, true));
+        }
+        if !dsts.is_empty() {
+            sim.after(handoff, move |sim| {
+                engine.submit_scatter(
+                    sim,
+                    None,
+                    &send_buf,
+                    &dsts,
+                    Some(imm_for(iter, IMM_COMBINE)),
+                    OnDone::Noop,
+                );
+            });
+        }
+        self.maybe_start_combine_recv(sim);
+    }
+
+    fn on_combine_rdma_done(&self, sim: &mut Sim) {
+        self.s.borrow_mut().c_rdma_done = true;
+        self.maybe_start_combine_recv(sim);
+    }
+
+    fn maybe_start_combine_recv(&self, sim: &mut Sim) {
+        let (gpu_sim, dur) = {
+            let mut s = self.s.borrow_mut();
+            if s.c_recv_started
+                || !s.c_rdma_done
+                || s.c_nvlink_pending > 0
+                || !s.c_pack_done
+            {
+                return;
+            }
+            s.c_recv_started = true;
+            // Weighted average over T×top_k returned copies.
+            let bytes =
+                s.cfg.tokens as u64 * s.cfg.top_k as u64 * s.cfg.combine_token_bytes as u64;
+            let d = s.km.t(bytes) + s.km.fixed_ns;
+            s.sample.c_recv_kernel_ns = d;
+            (s.gpu_sim.clone(), d)
+        };
+        let this = self.clone();
+        gpu_sim.launch(sim, 0, dur, true, move |sim, _| {
+            let (sample, cb) = {
+                let mut s = this.s.borrow_mut();
+                s.sample.combine_ns = sim.now() - s.combine_t0;
+                s.combine_t0 = 0;
+                (s.sample, s.on_iter_done.take())
+            };
+            if let Some(cb) = cb {
+                cb(sim, sample);
+            }
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! Token→expert routing generation and the derived transfer matrix.
+//!
+//! Each token picks `top_k` distinct random experts (the paper's
+//! microbenchmark routes each token to 8 random experts). From the
+//! assignment we derive, per (src, dst) rank pair, how many token
+//! copies flow — the quantity that sizes every buffer and write.
+
+use crate::sim::Rng;
+
+use super::config::MoeConfig;
+
+/// Routing outcome for one iteration.
+#[derive(Debug, Clone)]
+pub struct RoutingPlan {
+    /// `tokens_to[src][dst]` = token copies src must deliver to dst.
+    pub tokens_to: Vec<Vec<u32>>,
+    /// Per-destination total received tokens.
+    pub recv_totals: Vec<u64>,
+}
+
+impl RoutingPlan {
+    /// Generate routing for `cfg` with `iter_seed` mixed into the
+    /// config seed.
+    pub fn generate(cfg: &MoeConfig, iter_seed: u64) -> RoutingPlan {
+        let n = cfg.ranks as usize;
+        let mut rng = Rng::new(cfg.seed ^ iter_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut tokens_to = vec![vec![0u32; n]; n];
+        for src in 0..n {
+            for _tok in 0..cfg.tokens {
+                // top_k distinct experts; a token is sent once per
+                // *rank* owning at least one of its experts.
+                let experts = rng.choose_distinct(cfg.experts as usize, cfg.top_k as usize);
+                let mut dst_ranks: Vec<usize> = experts
+                    .iter()
+                    .map(|&e| e / cfg.local_experts() as usize)
+                    .collect();
+                dst_ranks.sort_unstable();
+                dst_ranks.dedup();
+                for d in dst_ranks {
+                    tokens_to[src][d] += 1;
+                }
+            }
+        }
+        let recv_totals = (0..n)
+            .map(|d| tokens_to.iter().map(|row| row[d] as u64).sum())
+            .collect();
+        RoutingPlan {
+            tokens_to,
+            recv_totals,
+        }
+    }
+
+    /// Ranks count.
+    pub fn ranks(&self) -> usize {
+        self.tokens_to.len()
+    }
+
+    /// Copies src sends to dst.
+    pub fn count(&self, src: usize, dst: usize) -> u32 {
+        self.tokens_to[src][dst]
+    }
+
+    /// Inter-node peers of `rank` that receive at least one token.
+    pub fn inter_peers_with_tokens(&self, cfg: &MoeConfig, rank: usize) -> Vec<usize> {
+        (0..self.ranks())
+            .filter(|&d| {
+                d != rank
+                    && !cfg.same_node(rank as u32, d as u32)
+                    && self.count(rank, d) > 0
+            })
+            .collect()
+    }
+
+    /// Intra-node peers (NVLink) of `rank` with tokens.
+    pub fn intra_peers_with_tokens(&self, cfg: &MoeConfig, rank: usize) -> Vec<usize> {
+        (0..self.ranks())
+            .filter(|&d| {
+                d != rank
+                    && cfg.same_node(rank as u32, d as u32)
+                    && self.count(rank, d) > 0
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation_and_bounds() {
+        let cfg = MoeConfig::decode(16, 128);
+        let plan = RoutingPlan::generate(&cfg, 1);
+        // Every token lands on between 1 and top_k ranks.
+        for src in 0..16 {
+            let copies: u32 = plan.tokens_to[src].iter().sum();
+            assert!(copies >= cfg.tokens, "at least one dst per token");
+            assert!(copies <= cfg.tokens * cfg.top_k);
+        }
+        // recv totals consistent with the matrix.
+        for d in 0..16 {
+            let col: u64 = (0..16).map(|s| plan.count(s, d) as u64).sum();
+            assert_eq!(col, plan.recv_totals[d]);
+        }
+        // Receive bound from §6.1 holds.
+        for d in 0..16 {
+            assert!(plan.recv_totals[d] <= cfg.recv_buffer_tokens());
+        }
+    }
+
+    #[test]
+    fn roughly_uniform_across_ranks() {
+        let cfg = MoeConfig::decode(64, 128);
+        let plan = RoutingPlan::generate(&cfg, 7);
+        let mean = plan.recv_totals.iter().sum::<u64>() as f64 / 64.0;
+        for &r in &plan.recv_totals {
+            assert!(
+                (r as f64) > mean * 0.6 && (r as f64) < mean * 1.4,
+                "recv load {r} vs mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_iter() {
+        let cfg = MoeConfig::decode(8, 32);
+        let a = RoutingPlan::generate(&cfg, 3);
+        let b = RoutingPlan::generate(&cfg, 3);
+        assert_eq!(a.tokens_to, b.tokens_to);
+        let c = RoutingPlan::generate(&cfg, 4);
+        assert_ne!(a.tokens_to, c.tokens_to);
+    }
+
+    #[test]
+    fn peer_classification() {
+        let cfg = MoeConfig::decode(16, 64);
+        let plan = RoutingPlan::generate(&cfg, 0);
+        let inter = plan.inter_peers_with_tokens(&cfg, 0);
+        let intra = plan.intra_peers_with_tokens(&cfg, 0);
+        assert!(inter.iter().all(|&d| d >= 8));
+        assert!(intra.iter().all(|&d| d < 8 && d != 0));
+    }
+}

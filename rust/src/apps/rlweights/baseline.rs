@@ -1,0 +1,108 @@
+//! Rank0 gather-broadcast baseline (paper §5.1, Fig 4 left).
+//!
+//! Existing RL frameworks form one collective world over training and
+//! inference GPUs: weights are gathered to training Rank0, then
+//! broadcast to each inference sub-group's Rank0 — every byte of the
+//! model squeezes through Rank0's NIC (twice), which is why weight
+//! sync takes tens to hundreds of seconds at trillion-parameter
+//! scale.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use crate::collectives::CollectiveWorld;
+use crate::engine::api::EngineCosts;
+use crate::engine::des_engine::Engine;
+use crate::fabric::nic::NicAddr;
+use crate::fabric::profile::{GpuProfile, NicProfile};
+use crate::fabric::simnet::SimNet;
+use crate::sim::time::MS;
+use crate::sim::Sim;
+
+use super::spec::RlModelSpec;
+
+/// Result of the baseline run.
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineReport {
+    pub gather_ms: f64,
+    pub broadcast_ms: f64,
+    pub total_ms: f64,
+}
+
+/// Run the gather→broadcast weight sync for `spec` and report wall
+/// times. `world_scale` shrinks the simulated world (ranks) while
+/// keeping total bytes — the bottleneck is Rank0's NIC, so the time
+/// is world-size-insensitive (which this models faithfully).
+pub fn run_rank0_broadcast(spec: &RlModelSpec, nic: NicProfile, world_scale: u32) -> BaselineReport {
+    let t_ranks = (spec.t_ranks / world_scale).max(2) as usize;
+    let r_groups = (spec.r_ranks / world_scale).max(2) as usize;
+
+    let net = SimNet::new(0xBA5E);
+    let n_nodes = (t_ranks + r_groups) as u16;
+    let mut ranks = Vec::new();
+    for node in 0..n_nodes {
+        net.add_nic(NicAddr { node, gpu: 0, nic: 0 }, nic.clone());
+        ranks.push((
+            Engine::new(
+                &net,
+                node,
+                1,
+                1,
+                GpuProfile::h200(),
+                EngineCosts::default(),
+                node as u64,
+            ),
+            0u8,
+        ));
+    }
+    let mut sim = Sim::new();
+
+    // Training world: gather bf16 shards to rank0.
+    let total_bf16 = spec.total_params * 2;
+    let shard = total_bf16 / t_ranks as u64;
+    let region = 48usize << 30;
+    let t_world = CollectiveWorld::new(ranks[..t_ranks].to_vec(), region);
+
+    let gather_done = Rc::new(Cell::new(0u64));
+    let gd = gather_done.clone();
+    t_world.gather(&mut sim, 0, shard, move |_s, t| gd.set(t));
+    sim.run();
+    let gather_ns = gather_done.get();
+
+    // Broadcast the full (quantized fp8) model from training rank0 to
+    // every inference sub-group rank0, ring-pipelined.
+    let mut bcast_ranks = vec![ranks[0].clone()];
+    bcast_ranks.extend_from_slice(&ranks[t_ranks..t_ranks + r_groups]);
+    let b_world = CollectiveWorld::new(bcast_ranks, region);
+    let bcast_done = Rc::new(Cell::new(0u64));
+    let bd = bcast_done.clone();
+    let total_fp8 = spec.total_params;
+    b_world.broadcast_ring(&mut sim, 0, total_fp8, 8 << 20, move |_s, t| bd.set(t));
+    sim.run();
+    let bcast_ns = bcast_done.get() - gather_ns;
+
+    BaselineReport {
+        gather_ms: gather_ns as f64 / MS as f64,
+        broadcast_ms: bcast_ns as f64 / MS as f64,
+        total_ms: bcast_done.get() as f64 / MS as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_is_nic_bound_at_rank0() {
+        let spec = RlModelSpec {
+            total_params: 10_000_000_000, // 10B for test speed
+            ..RlModelSpec::kimi_k2_1t()
+        };
+        let r = run_rank0_broadcast(&spec, NicProfile::connectx7(), 16);
+        // Gather: 20 GB bf16 through one 400 Gbps NIC ≥ 400 ms.
+        assert!(r.gather_ms > 350.0, "{r:?}");
+        // Broadcast: 10 GB fp8 ≥ 200 ms.
+        assert!(r.broadcast_ms > 180.0, "{r:?}");
+        assert!(r.total_ms >= r.gather_ms + r.broadcast_ms - 1.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! RL rollout weight transfer (paper §5).
+//!
+//! After each training step, new weights must reach the inference
+//! cluster. Existing frameworks funnel everything through training
+//! Rank0 and broadcast — bottlenecked by one NIC. fabric-lib's P2P
+//! approach has every training GPU WRITE directly into inference GPU
+//! memory using the full cluster bandwidth, with a 4-stage pipeline
+//! (H2D memcpy → parameter preparation → RDMA → barrier) and a GPU
+//! memory watermark (§5.2).
+
+pub mod baseline;
+pub mod pipeline;
+pub mod spec;
+
+pub use baseline::run_rank0_broadcast;
+pub use pipeline::{run_p2p_transfer, RlReport, StageTotals};
+pub use spec::{compute_routing, ParamMeta, RlModelSpec, TransferTask};

@@ -1,0 +1,241 @@
+//! Parameter metadata and the static transfer routing (paper §5.1 +
+//! Appendix B).
+//!
+//! The controller gathers parameter metadata (name, shape, dtype,
+//! DTensor sharding) from training and inference workers, computes a
+//! static schedule mapping which training GPU sends which parameter
+//! to which inference GPUs, and broadcasts it to trainers. Here the
+//! metadata is generated synthetically to match the Kimi-K2-1T
+//! deployment shape (256 training GPUs bf16, FSDP/PP/EP = 16/2/8 →
+//! 128 inference GPUs fp8, EP=32); actual tensor payloads are
+//! size-faithful but unbacked.
+
+use crate::sim::Rng;
+
+/// One parameter tensor's metadata.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub id: u32,
+    /// Elements in the **full** (unsharded) tensor.
+    pub elems: u64,
+    /// MoE expert weight (vs dense/attention).
+    pub moe: bool,
+    /// Mesh group (FSDP sharding strategy partition, §5.2): groups
+    /// transfer sequentially, params within a group in parallel.
+    pub mesh_group: u32,
+    /// Owning training rank (the rank that reconstructs + sends it).
+    pub owner: u32,
+}
+
+impl ParamMeta {
+    /// bf16 bytes of the full tensor (training side).
+    pub fn bf16_bytes(&self) -> u64 {
+        self.elems * 2
+    }
+
+    /// fp8 bytes (inference side).
+    pub fn fp8_bytes(&self) -> u64 {
+        self.elems
+    }
+}
+
+/// Deployment-shape description.
+#[derive(Debug, Clone)]
+pub struct RlModelSpec {
+    pub name: &'static str,
+    /// Total parameters (elements) across the model.
+    pub total_params: u64,
+    /// Training ranks.
+    pub t_ranks: u32,
+    /// Inference ranks.
+    pub r_ranks: u32,
+    /// Params owned (sent) per training rank.
+    pub params_per_rank: u32,
+    /// Fraction of parameters in MoE experts.
+    pub moe_frac: f64,
+    /// Inference replication factor (how many r_ranks receive each
+    /// param; DP replicas at EP=32 over 128 GPUs → 4).
+    pub replicas: u32,
+    /// Mesh groups (different FSDP sharding strategies).
+    pub mesh_groups: u32,
+    /// FSDP shard group size (full_tensor allgather width).
+    pub fsdp: u32,
+}
+
+impl RlModelSpec {
+    /// Kimi-K2-1T (paper Table 5 headline).
+    pub fn kimi_k2_1t() -> Self {
+        RlModelSpec {
+            name: "Kimi-K2-1T",
+            total_params: 1_000_000_000_000,
+            t_ranks: 256,
+            r_ranks: 128,
+            params_per_rank: 487,
+            moe_frac: 0.96,
+            replicas: 4,
+            mesh_groups: 2,
+            fsdp: 16,
+        }
+    }
+
+    /// DeepSeek-V3-671B shape.
+    pub fn deepseek_v3_671b() -> Self {
+        RlModelSpec {
+            total_params: 671_000_000_000,
+            name: "DeepSeek-V3-671B",
+            ..Self::kimi_k2_1t()
+        }
+    }
+
+    /// Qwen3-235B shape.
+    pub fn qwen3_235b() -> Self {
+        RlModelSpec {
+            total_params: 235_000_000_000,
+            name: "Qwen3-235B",
+            t_ranks: 128,
+            r_ranks: 64,
+            params_per_rank: 380,
+            ..Self::kimi_k2_1t()
+        }
+    }
+
+    /// Tiny spec for integration tests (backed buffers, few events).
+    pub fn tiny() -> Self {
+        RlModelSpec {
+            name: "tiny",
+            total_params: 4 << 20,
+            t_ranks: 4,
+            r_ranks: 2,
+            params_per_rank: 8,
+            moe_frac: 0.5,
+            replicas: 1,
+            mesh_groups: 2,
+            fsdp: 2,
+        }
+    }
+
+    /// Mean full-tensor size in elements.
+    pub fn mean_elems(&self) -> u64 {
+        self.total_params / (self.t_ranks as u64 * self.params_per_rank as u64)
+    }
+
+    /// Generate the synthetic parameter set for one training rank.
+    ///
+    /// Sizes are log-spread around the mean (big expert blocks, small
+    /// norms) and deterministic per rank.
+    pub fn params_of_rank(&self, rank: u32) -> Vec<ParamMeta> {
+        let mut rng = Rng::new(0xB16_B00B5 ^ rank as u64);
+        let mean = self.mean_elems() as f64;
+        let mut out = Vec::with_capacity(self.params_per_rank as usize);
+        // Budget-preserving sizes: alternate big/small around the mean.
+        let mut budget = (mean * self.params_per_rank as f64) as i64;
+        for i in 0..self.params_per_rank {
+            let remaining = (self.params_per_rank - i) as i64;
+            let size = if remaining == 1 {
+                budget.max(1) as u64
+            } else {
+                let f = 0.5 + rng.f64(); // 0.5x..1.5x mean
+                let s = ((mean * f) as i64).min(budget - (remaining - 1)).max(1);
+                s as u64
+            };
+            budget -= size as i64;
+            out.push(ParamMeta {
+                id: rank * self.params_per_rank + i,
+                elems: size,
+                moe: rng.f64() < self.moe_frac,
+                mesh_group: i % self.mesh_groups,
+                owner: rank,
+            });
+        }
+        out
+    }
+}
+
+/// One scheduled transfer: `param` (full tensor, fp8) from its owner
+/// to inference rank `dst`.
+#[derive(Debug, Clone)]
+pub struct TransferTask {
+    pub param: ParamMeta,
+    pub dst: u32,
+    /// Byte offset inside `dst`'s weight region.
+    pub dst_offset: u64,
+}
+
+/// Compute the static routing for one training rank: each owned param
+/// goes to `replicas` inference ranks, chosen round-robin so load
+/// balances across the inference cluster; destination offsets are
+/// assigned densely per destination region (paper: static schedule,
+/// no re-planning per step).
+pub fn compute_routing(spec: &RlModelSpec, rank: u32) -> Vec<TransferTask> {
+    let params = spec.params_of_rank(rank);
+    let mut tasks = Vec::new();
+    // Per-destination offset cursors must be deterministic across the
+    // cluster: derive from (param id, replica index).
+    for p in &params {
+        let stride = spec.r_ranks / spec.replicas.min(spec.r_ranks);
+        for r in 0..spec.replicas.min(spec.r_ranks) {
+            let dst = (p.id + r * stride.max(1)) % spec.r_ranks;
+            tasks.push(TransferTask {
+                param: p.clone(),
+                dst,
+                // Dense per-dst placement is computed by the receiver
+                // in reality; here a hash-spread offset inside a
+                // region sized for the full model keeps writes
+                // disjoint enough for the simulator.
+                dst_offset: (p.id as u64 % 1024) * (spec.mean_elems() * 2),
+            });
+        }
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_params_preserve_budget() {
+        let spec = RlModelSpec::kimi_k2_1t();
+        let params = spec.params_of_rank(3);
+        assert_eq!(params.len(), 487);
+        let total: u64 = params.iter().map(|p| p.elems).sum();
+        let expect = spec.mean_elems() * 487;
+        let err = (total as f64 - expect as f64).abs() / expect as f64;
+        assert!(err < 0.01, "rank budget drift {err}");
+    }
+
+    #[test]
+    fn params_deterministic_per_rank() {
+        let spec = RlModelSpec::kimi_k2_1t();
+        let a = spec.params_of_rank(7);
+        let b = spec.params_of_rank(7);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.elems == y.elems));
+        let c = spec.params_of_rank(8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.elems != y.elems));
+    }
+
+    #[test]
+    fn routing_covers_all_replicas_and_balances() {
+        let spec = RlModelSpec::kimi_k2_1t();
+        let tasks = compute_routing(&spec, 0);
+        assert_eq!(tasks.len(), 487 * spec.replicas as usize);
+        // Destination load across the inference cluster from this one
+        // rank is roughly balanced.
+        let mut load = vec![0u64; spec.r_ranks as usize];
+        for t in &tasks {
+            load[t.dst as usize] += t.param.fp8_bytes();
+        }
+        let max = *load.iter().max().unwrap() as f64;
+        let mean = load.iter().sum::<u64>() as f64 / load.len() as f64;
+        assert!(max < mean * 3.0, "dst imbalance: max {max} mean {mean}");
+    }
+
+    #[test]
+    fn moe_fraction_respected() {
+        let spec = RlModelSpec::kimi_k2_1t();
+        let params = spec.params_of_rank(0);
+        let moe = params.iter().filter(|p| p.moe).count() as f64 / params.len() as f64;
+        assert!((moe - spec.moe_frac).abs() < 0.08, "moe frac {moe}");
+    }
+}

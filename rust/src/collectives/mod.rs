@@ -1,0 +1,4 @@
+//! Baseline collective layer (gather/broadcast world) — the approach
+//! the paper's P2P weight transfer replaces (Fig 4 left).
+pub mod world;
+pub use world::CollectiveWorld;

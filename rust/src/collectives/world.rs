@@ -1,0 +1,219 @@
+//! Minimal collective world over the simulated fabric: the
+//! fixed-membership gather/broadcast path existing RL frameworks use
+//! for weight sync (paper §5.1, Fig 4 left). Serves as the baseline
+//! the P2P transfer is compared against.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use crate::engine::api::{MrDesc, MrHandle};
+use crate::engine::des_engine::{Engine, OnDone};
+use crate::sim::time::Instant;
+use crate::sim::Sim;
+
+/// A static communicator: rank i ↔ (engine, gpu, region).
+pub struct CollectiveWorld {
+    pub ranks: Vec<(Engine, u8)>,
+    regions: Vec<(MrHandle, MrDesc)>,
+}
+
+impl CollectiveWorld {
+    /// Build a world whose ranks each own a registered region of
+    /// `region_len` bytes (unbacked when large).
+    pub fn new(ranks: Vec<(Engine, u8)>, region_len: usize) -> Self {
+        let regions = ranks
+            .iter()
+            .map(|(e, g)| {
+                if region_len > (64 << 20) {
+                    e.alloc_mr_unbacked(*g, region_len)
+                } else {
+                    e.alloc_mr(*g, region_len)
+                }
+            })
+            .collect();
+        CollectiveWorld { ranks, regions }
+    }
+
+    /// World size.
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Region descriptor of `rank`.
+    pub fn desc(&self, rank: usize) -> &MrDesc {
+        &self.regions[rank].1
+    }
+
+    /// Gather: every rank writes its `shard_bytes` to `root`'s region
+    /// (incast serializes at the root NIC — the bottleneck the paper
+    /// calls out). `on_done(sim, t)` fires when all shards landed.
+    pub fn gather(
+        &self,
+        sim: &mut Sim,
+        root: usize,
+        shard_bytes: u64,
+        on_done: impl FnOnce(&mut Sim, Instant) + 'static,
+    ) {
+        let remaining = Rc::new(Cell::new(self.size() - 1));
+        let cb: Rc<RefCell<Option<Box<dyn FnOnce(&mut Sim, Instant)>>>> =
+            Rc::new(RefCell::new(Some(Box::new(on_done))));
+        for (i, (e, _g)) in self.ranks.iter().enumerate() {
+            if i == root {
+                continue;
+            }
+            let dst = self.regions[root].1.clone();
+            let off = (i as u64) * shard_bytes % (dst.len - shard_bytes).max(1);
+            let rem = remaining.clone();
+            let cb = cb.clone();
+            let src = self.regions[i].0.clone();
+            e.submit_single_write(
+                sim,
+                (&src, 0),
+                shard_bytes,
+                (&dst, off),
+                None,
+                OnDone::Callback(Box::new(move |sim| {
+                    rem.set(rem.get() - 1);
+                    if rem.get() == 0 {
+                        if let Some(f) = cb.borrow_mut().take() {
+                            f(sim, sim.now());
+                        }
+                    }
+                })),
+            );
+        }
+    }
+
+    /// Pipelined ring broadcast of `total_bytes` from `root` through
+    /// all ranks in `chunk` slices: rank i forwards each chunk to
+    /// i+1 as soon as it arrives. Completion when the last rank holds
+    /// every chunk.
+    pub fn broadcast_ring(
+        &self,
+        sim: &mut Sim,
+        root: usize,
+        total_bytes: u64,
+        chunk: u64,
+        on_done: impl FnOnce(&mut Sim, Instant) + 'static,
+    ) {
+        let n = self.size();
+        assert!(n >= 2);
+        let chunks = total_bytes.div_ceil(chunk);
+        let order: Vec<usize> = (0..n).map(|i| (root + i) % n).collect();
+        let last = *order.last().unwrap();
+        let remaining = Rc::new(Cell::new(chunks));
+        let cb: Rc<RefCell<Option<Box<dyn FnOnce(&mut Sim, Instant)>>>> =
+            Rc::new(RefCell::new(Some(Box::new(on_done))));
+
+        struct Ctx {
+            world_ranks: Vec<(Engine, u8)>,
+            regions: Vec<(MrHandle, MrDesc)>,
+            order: Vec<usize>,
+            last: usize,
+            chunk: u64,
+            remaining: Rc<Cell<u64>>,
+            cb: Rc<RefCell<Option<Box<dyn FnOnce(&mut Sim, Instant)>>>>,
+        }
+        let ctx = Rc::new(Ctx {
+            world_ranks: self.ranks.clone(),
+            regions: self.regions.clone(),
+            order,
+            last,
+            chunk,
+            remaining: remaining.clone(),
+            cb,
+        });
+
+        /// Forward chunk `chunk_idx` along hop `hop` of the ring.
+        fn forward(ctx: Rc<Ctx>, sim: &mut Sim, hop: usize, chunk_idx: u64) {
+            let from = ctx.order[hop];
+            let to = ctx.order[hop + 1];
+            let (e, _g) = &ctx.world_ranks[from];
+            let src = ctx.regions[from].0.clone();
+            let dst = ctx.regions[to].1.clone();
+            let off = (chunk_idx * ctx.chunk) % (dst.len - ctx.chunk).max(1);
+            let ctx2 = ctx.clone();
+            let is_last_hop = to == ctx.last;
+            e.submit_single_write(
+                sim,
+                (&src, 0),
+                ctx.chunk,
+                (&dst, off),
+                None,
+                OnDone::Callback(Box::new(move |sim| {
+                    if is_last_hop {
+                        ctx2.remaining.set(ctx2.remaining.get() - 1);
+                        if ctx2.remaining.get() == 0 {
+                            if let Some(f) = ctx2.cb.borrow_mut().take() {
+                                f(sim, sim.now());
+                            }
+                        }
+                    } else {
+                        forward(ctx2.clone(), sim, hop + 1, chunk_idx);
+                    }
+                })),
+            );
+        }
+        for c in 0..chunks {
+            forward(ctx.clone(), sim, 0, c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::api::EngineCosts;
+    use crate::fabric::nic::NicAddr;
+    use crate::fabric::profile::{GpuProfile, NicProfile};
+    use crate::fabric::simnet::SimNet;
+    use crate::sim::time::US;
+
+    fn world(n: u16, region: usize) -> (Sim, CollectiveWorld) {
+        let net = SimNet::new(4);
+        let mut ranks = Vec::new();
+        for node in 0..n {
+            net.add_nic(NicAddr { node, gpu: 0, nic: 0 }, NicProfile::connectx7());
+            ranks.push((
+                Engine::new(
+                    &net,
+                    node,
+                    1,
+                    1,
+                    GpuProfile::h100(),
+                    EngineCosts::default(),
+                    node as u64,
+                ),
+                0u8,
+            ));
+        }
+        (Sim::new(), CollectiveWorld::new(ranks, region))
+    }
+
+    #[test]
+    fn gather_incast_serializes_at_root() {
+        let (mut sim, w) = world(5, 8 << 20);
+        let done = Rc::new(Cell::new(0u64));
+        let d = done.clone();
+        w.gather(&mut sim, 0, 1 << 20, move |_s, t| d.set(t));
+        sim.run();
+        let t = done.get();
+        // 4 MiB through one 400 Gbps NIC ≥ ~84 µs.
+        assert!(t >= 83 * US, "root must serialize: {t}");
+    }
+
+    #[test]
+    fn ring_broadcast_is_pipelined() {
+        let (mut sim, w) = world(6, 32 << 20);
+        let done = Rc::new(Cell::new(0u64));
+        let d = done.clone();
+        let total: u64 = 16 << 20;
+        w.broadcast_ring(&mut sim, 0, total, 1 << 20, move |_s, t| d.set(t));
+        sim.run();
+        let t = done.get();
+        // Pipelining: much less than hops × serialized-total.
+        let serial_per_hop = (total as f64 / 50.0) as u64; // 400 Gbps
+        assert!(t < 3 * serial_per_hop, "pipelined ring too slow: {t}");
+        assert!(t > serial_per_hop, "can't beat one full serialization: {t}");
+    }
+}

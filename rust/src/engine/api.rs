@@ -1,0 +1,249 @@
+//! Public API vocabulary of the TransferEngine (paper Figure 2).
+//!
+//! These types are shared by both engine runtimes (the deterministic
+//! DES engine used by benchmarks and the threaded engine used by the
+//! examples): `NetAddr`, `MrDesc`, `Pages`, `ScatterDst`,
+//! `PeerGroupHandle`, and the calibrated CPU-cost model for the hot
+//! path.
+
+use crate::fabric::mem::DmaBuf;
+use crate::fabric::nic::NicAddr;
+use crate::fabric::topology::DeviceId;
+use crate::sim::rng::Jitter;
+use crate::sim::time::Duration;
+
+/// Serializable network address of a domain group (one GPU's NICs).
+///
+/// Exchanged between peers out-of-band (e.g. via an RPC layer or the
+/// engine's own SEND/RECV) for identification and discovery. All peers
+/// must use the same number of NICs per GPU (§3.2), which lets any
+/// transfer pair local NIC *i* with remote NIC *i*.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct NetAddr {
+    pub nics: Vec<NicAddr>,
+}
+
+impl NetAddr {
+    /// The representative address (first NIC), used for SEND/RECV
+    /// traffic and for display.
+    pub fn primary(&self) -> NicAddr {
+        self.nics[0]
+    }
+
+    /// Number of NICs backing this domain group.
+    pub fn fanout(&self) -> usize {
+        self.nics.len()
+    }
+
+    /// True when the peer shares a node with `other` (NVLink
+    /// reachable).
+    pub fn same_node(&self, other: &NetAddr) -> bool {
+        self.primary().same_node(&other.primary())
+    }
+}
+
+impl std::fmt::Display for NetAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.primary())
+    }
+}
+
+/// Serializable descriptor of a registered memory region, exchangeable
+/// with peers who may then WRITE through it (paper Fig 2: `MrDesc`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MrDesc {
+    /// Virtual base address of the region on the owning device.
+    pub ptr: u64,
+    /// Region length in bytes.
+    pub len: u64,
+    /// Remote keys: one per NIC of the owning domain group, in NIC
+    /// order.
+    pub rkeys: Vec<(NicAddr, u64)>,
+}
+
+impl MrDesc {
+    /// The rkey to use when targeting this region through remote NIC
+    /// index `i`.
+    pub fn rkey_for(&self, i: usize) -> (NicAddr, u64) {
+        self.rkeys[i % self.rkeys.len()]
+    }
+
+    /// The domain-group address owning this region.
+    pub fn owner(&self) -> NetAddr {
+        NetAddr {
+            nics: self.rkeys.iter().map(|&(n, _)| n).collect(),
+        }
+    }
+}
+
+/// Local handle to a registered region: the source side of transfers.
+#[derive(Clone, Debug)]
+pub struct MrHandle {
+    pub buf: DmaBuf,
+    pub device: DeviceId,
+}
+
+/// Indirect paged addressing: `indices[i] * stride + offset` addresses
+/// page `i` within a region (paper Fig 2: `Pages`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pages {
+    pub indices: Vec<u32>,
+    pub stride: u64,
+    pub offset: u64,
+}
+
+impl Pages {
+    /// Byte offset of the `i`-th page.
+    pub fn at(&self, i: usize) -> u64 {
+        self.indices[i] as u64 * self.stride + self.offset
+    }
+
+    /// Number of pages.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// True when no pages are addressed.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Contiguous run of `n` pages starting at page index `first`.
+    pub fn contiguous(first: u32, n: u32, stride: u64) -> Self {
+        Pages {
+            indices: (first..first + n).collect(),
+            stride,
+            offset: 0,
+        }
+    }
+}
+
+/// One destination of a scatter: `len` bytes from source offset `src`
+/// into `(desc, offset)` on a peer (paper Fig 2: `ScatterDst`).
+#[derive(Debug, Clone)]
+pub struct ScatterDst {
+    pub len: u64,
+    pub src: u64,
+    pub dst: (MrDesc, u64),
+}
+
+/// Handle to a pre-registered peer group for scatter/barrier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PeerGroupHandle(pub u64);
+
+/// Calibrated CPU costs of the engine hot path, charged on the worker
+/// in simulated time. Calibration targets: paper Table 8 (µs from
+/// `submit_scatter()` to the last posted WRITE at EP64) and Table 9
+/// (post-time scaling).
+#[derive(Debug, Clone)]
+pub struct EngineCosts {
+    /// App-thread cost of `submit_*`: validate + enqueue onto the
+    /// lock-free queue (Table 8 row 1: 0.120 µs p50).
+    pub submit_ns: Duration,
+    pub submit_jitter: Jitter,
+    /// Cross-thread handoff until the worker dequeues (Table 8 row 2:
+    /// 0.855 µs p50).
+    pub handoff_ns: Duration,
+    pub handoff_jitter: Jitter,
+    /// Worker-side preparation before the first WRITE is posted
+    /// (Table 8 row 3: 0.441 µs p50): WR templating fills in the
+    /// per-transfer fields only.
+    pub prep_ns: Duration,
+    pub prep_jitter: Jitter,
+    /// Dispatch latency of a completion callback onto the dedicated
+    /// callback thread.
+    pub callback_ns: Duration,
+    /// Interval of the UVM-watcher polling thread (GDRCopy read per
+    /// watcher per tick).
+    pub uvm_poll_ns: Duration,
+}
+
+impl Default for EngineCosts {
+    fn default() -> Self {
+        EngineCosts {
+            submit_ns: 110,
+            submit_jitter: Jitter {
+                median_ns: 15.0,
+                sigma: 0.6,
+                spike_p: 0.01,
+                spike_mean_ns: 1800.0,
+            },
+            handoff_ns: 700,
+            handoff_jitter: Jitter {
+                median_ns: 160.0,
+                sigma: 0.4,
+                spike_p: 0.002,
+                spike_mean_ns: 3000.0,
+            },
+            prep_ns: 380,
+            prep_jitter: Jitter {
+                median_ns: 60.0,
+                sigma: 0.5,
+                spike_p: 0.002,
+                spike_mean_ns: 3000.0,
+            },
+            callback_ns: 250,
+            uvm_poll_ns: 1000,
+        }
+    }
+}
+
+/// Writes carrying an immediate are never split across NICs: the
+/// receiver's IMMCOUNTER expectation counts one increment per
+/// submitted write (see `expect_imm_count` call sites in §4/§6), so
+/// the engine must not change the count behind the caller's back.
+/// Imm-less writes larger than this are sharded across all NICs of the
+/// group.
+pub const SPLIT_THRESHOLD: u64 = 128 * 1024;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nic(n: u16, x: u8) -> NicAddr {
+        NicAddr { node: n, gpu: 0, nic: x }
+    }
+
+    #[test]
+    fn pages_addressing() {
+        let p = Pages {
+            indices: vec![3, 0, 7],
+            stride: 4096,
+            offset: 128,
+        };
+        assert_eq!(p.at(0), 3 * 4096 + 128);
+        assert_eq!(p.at(1), 128);
+        assert_eq!(p.at(2), 7 * 4096 + 128);
+        assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn pages_contiguous() {
+        let p = Pages::contiguous(4, 3, 100);
+        assert_eq!(p.indices, vec![4, 5, 6]);
+        assert_eq!(p.at(2), 600);
+    }
+
+    #[test]
+    fn mrdesc_rkey_pairing() {
+        let d = MrDesc {
+            ptr: 0x1000,
+            len: 4096,
+            rkeys: vec![(nic(2, 0), 11), (nic(2, 1), 22)],
+        };
+        assert_eq!(d.rkey_for(0), (nic(2, 0), 11));
+        assert_eq!(d.rkey_for(1), (nic(2, 1), 22));
+        // Wraps for mismatched counts (defensive).
+        assert_eq!(d.rkey_for(2), (nic(2, 0), 11));
+        assert_eq!(d.owner().fanout(), 2);
+    }
+
+    #[test]
+    fn netaddr_same_node() {
+        let a = NetAddr { nics: vec![nic(1, 0), nic(1, 1)] };
+        let b = NetAddr { nics: vec![nic(1, 0)] };
+        let c = NetAddr { nics: vec![nic(2, 0)] };
+        assert!(a.same_node(&b));
+        assert!(!a.same_node(&c));
+    }
+}

@@ -1,0 +1,1110 @@
+//! The TransferEngine over the discrete-event fabric.
+//!
+//! This is the timing-faithful engine used by every benchmark and most
+//! integration tests; `engine::threaded` exposes the same API over
+//! real threads for the runnable examples. Architecture mirrors the
+//! paper (§3.2–3.4):
+//!
+//! * one engine instance per node, managing all of its GPUs;
+//! * a **DomainGroup** per GPU with a pinned worker, coordinating 1–4
+//!   **Domains** (one per NIC);
+//! * submissions flow app-thread → lock-free queue → worker, with
+//!   calibrated CPU costs charged along the way (Table 8);
+//! * writes are sharded/rotated across the group's NICs
+//!   ([`super::sharding`]);
+//! * completions feed per-group [`ImmCounter`]s and transfer-level
+//!   `OnDone` notifications;
+//! * no ordering is assumed anywhere — only counters.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, VecDeque};
+
+use crate::util::fasthash::FastMap;
+use std::rc::Rc;
+
+use super::api::{EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
+use super::imm_counter::{ImmCounter, ImmEvent};
+use super::sharding::{plan_paged_writes, plan_scatter, plan_single_write, PlannedWrite};
+use crate::fabric::mem::{DmaBuf, DmaSlice, RKey};
+use crate::fabric::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
+use crate::fabric::profile::GpuProfile;
+use crate::fabric::simnet::SimNet;
+use crate::fabric::topology::DeviceId;
+use crate::sim::time::Instant;
+use crate::sim::{Rng, Sim};
+
+/// Sender-side completion notification (paper Fig 2 `OnDone`).
+pub enum OnDone {
+    /// Run on the engine's callback thread.
+    Callback(Box<dyn FnOnce(&mut Sim)>),
+    /// Set an atomic flag (polled by the app / GPU via GDRCopy).
+    Flag(Rc<Cell<bool>>),
+    /// Fire-and-forget.
+    Noop,
+}
+
+/// Timing trace of one submission, for the Table 8 breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct SubmitTrace {
+    /// `submit_*()` entered (app thread).
+    pub submitted: Instant,
+    /// App-side enqueue finished.
+    pub enqueued: Instant,
+    /// Worker dequeued the command.
+    pub worker_start: Instant,
+    /// First WRITE posted to a NIC.
+    pub first_post: Instant,
+    /// Last WRITE posted.
+    pub last_post: Instant,
+    /// Number of WRs posted.
+    pub wrs: usize,
+}
+
+struct Transfer {
+    remaining: usize,
+    on_done: OnDone,
+}
+
+struct RecvSlot {
+    buf: DmaBuf,
+    len: usize,
+}
+
+/// Per-GPU domain group state.
+struct Group {
+    nics: Vec<NicAddr>,
+    /// Worker-thread CPU availability (one pinned worker per group).
+    worker_free: Instant,
+    /// NIC rotation cursor for load balancing.
+    rotation: usize,
+    /// Back-pressured WRs per NIC index.
+    pending: Vec<VecDeque<WorkRequest>>,
+    /// Posted receive buffers by wr_id.
+    recv_slots: FastMap<u64, RecvSlot>,
+    /// Receive callback (rotating pool semantics).
+    recv_cb: Option<Rc<dyn Fn(&mut Sim, &[u8])>>,
+    imm: ImmCounter,
+    imm_waiters: HashMap<u32, Box<dyn FnOnce(&mut Sim)>>,
+}
+
+struct State {
+    net: SimNet,
+    node: u16,
+    nics_per_gpu: u8,
+    costs: EngineCosts,
+    gpu_profile: GpuProfile,
+    rng: Rng,
+    groups: Vec<Group>,
+    transfers: FastMap<u64, Transfer>,
+    /// wr_id -> transfer id, for sender-side accounting.
+    wr_transfer: FastMap<u64, u64>,
+    next_wr: u64,
+    next_transfer: u64,
+    peer_groups: HashMap<u64, Vec<NetAddr>>,
+    next_peer_group: u64,
+    next_watcher: u64,
+    watchers: HashMap<u64, Watcher>,
+    /// Optional submission-trace sink (Table 8 benches).
+    trace_sink: Option<Rc<RefCell<Vec<SubmitTrace>>>>,
+}
+
+struct Watcher {
+    value: u64,
+    cb: Rc<dyn Fn(&mut Sim, u64, u64)>,
+}
+
+/// The DES TransferEngine. Clone handles freely.
+#[derive(Clone)]
+pub struct Engine {
+    state: Rc<RefCell<State>>,
+}
+
+impl Engine {
+    /// Create an engine for `node`, managing `gpus` GPUs with
+    /// `nics_per_gpu` NICs each (which must already exist in `net`).
+    pub fn new(
+        net: &SimNet,
+        node: u16,
+        gpus: u8,
+        nics_per_gpu: u8,
+        gpu_profile: GpuProfile,
+        costs: EngineCosts,
+        seed: u64,
+    ) -> Self {
+        let groups = (0..gpus)
+            .map(|gpu| {
+                let nics: Vec<NicAddr> = (0..nics_per_gpu)
+                    .map(|nic| NicAddr { node, gpu, nic })
+                    .collect();
+                Group {
+                    pending: nics.iter().map(|_| VecDeque::new()).collect(),
+                    nics,
+                    worker_free: 0,
+                    rotation: 0,
+                    recv_slots: FastMap::default(),
+                    recv_cb: None,
+                    imm: ImmCounter::new(),
+                    imm_waiters: HashMap::new(),
+                }
+            })
+            .collect();
+        let engine = Engine {
+            state: Rc::new(RefCell::new(State {
+                net: net.clone(),
+                node,
+                nics_per_gpu,
+                costs,
+                gpu_profile,
+                rng: Rng::new(seed ^ 0x5EED_ECAF),
+                groups,
+                transfers: FastMap::default(),
+                wr_transfer: FastMap::default(),
+                next_wr: 1,
+                next_transfer: 1,
+                peer_groups: HashMap::new(),
+                next_peer_group: 1,
+                next_watcher: 1,
+                watchers: HashMap::new(),
+                trace_sink: None,
+            })),
+        };
+        // Hook every NIC's completion queue to the owning group's
+        // progress function.
+        for gpu in 0..gpus {
+            for nic in 0..nics_per_gpu {
+                let addr = NicAddr { node, gpu, nic };
+                let e = engine.clone();
+                net.set_cq_hook(
+                    addr,
+                    Rc::new(move |sim: &mut Sim| e.progress(sim, gpu as usize, addr)),
+                );
+            }
+        }
+        engine
+    }
+
+    /// Install a trace sink recording every submission's timing
+    /// breakdown (Table 8 / Table 9 benches).
+    pub fn set_trace_sink(&self, sink: Rc<RefCell<Vec<SubmitTrace>>>) {
+        self.state.borrow_mut().trace_sink = Some(sink);
+    }
+
+    /// The engine's main address (paper: single address for discovery;
+    /// we expose per-GPU group addresses, `main_address` is group 0's).
+    pub fn main_address(&self) -> NetAddr {
+        self.group_address(0)
+    }
+
+    /// Address of GPU `gpu`'s domain group.
+    pub fn group_address(&self, gpu: u8) -> NetAddr {
+        let s = self.state.borrow();
+        NetAddr {
+            nics: s.groups[gpu as usize].nics.clone(),
+        }
+    }
+
+    /// NICs per GPU on this engine.
+    pub fn nics_per_gpu(&self) -> u8 {
+        self.state.borrow().nics_per_gpu
+    }
+
+    /// Device id of GPU `gpu` on this engine's node.
+    pub fn device(&self, gpu: u8) -> DeviceId {
+        DeviceId {
+            node: self.state.borrow().node,
+            gpu,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Memory region management
+    // ------------------------------------------------------------------
+
+    /// Allocate + register `len` bytes on `gpu`'s device memory.
+    /// Returns the local handle and the serializable descriptor
+    /// (paper Fig 2 `reg_mr`, allocation fused in for the simulator).
+    pub fn alloc_mr(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
+        let s = self.state.borrow();
+        let (buf, _rkey0) = s.net.mem().alloc(len);
+        drop(s);
+        self.reg_mr(gpu, &buf)
+    }
+
+    /// Allocate + register an **unbacked** (timing-only) region; see
+    /// [`crate::fabric::mem::DmaBuf::unbacked`].
+    pub fn alloc_mr_unbacked(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
+        let s = self.state.borrow();
+        let (buf, _rkey0) = s.net.mem().alloc_unbacked(len);
+        drop(s);
+        self.reg_mr(gpu, &buf)
+    }
+
+    /// Register an existing buffer on `gpu`, producing one rkey per
+    /// NIC of the domain group.
+    pub fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc) {
+        let s = self.state.borrow();
+        let mem = s.net.mem();
+        let rkeys: Vec<(NicAddr, u64)> = s.groups[gpu as usize]
+            .nics
+            .iter()
+            .map(|&nic| (nic, mem.register(buf).0))
+            .collect();
+        let desc = MrDesc {
+            ptr: buf.base(),
+            len: buf.len() as u64,
+            rkeys,
+        };
+        let handle = MrHandle {
+            buf: buf.clone(),
+            device: DeviceId { node: s.node, gpu },
+        };
+        (handle, desc)
+    }
+
+    // ------------------------------------------------------------------
+    // Two-sided SEND / RECV
+    // ------------------------------------------------------------------
+
+    /// Send a small message to a peer's posted RECV pool
+    /// (copy-on-submit: the caller may reuse `msg` immediately).
+    /// Uses only the first NIC of the group (paper §3.3).
+    pub fn submit_send(
+        &self,
+        sim: &mut Sim,
+        gpu: u8,
+        addr: &NetAddr,
+        msg: &[u8],
+        on_done: OnDone,
+    ) {
+        let payload = msg.to_vec();
+        let dst = addr.primary();
+        let (wr_id, tid, post_at, local) = {
+            let mut s = self.state.borrow_mut();
+            let wr_id = s.alloc_wr();
+            let tid = s.alloc_transfer(Transfer {
+                remaining: 1,
+                on_done,
+            });
+            s.wr_transfer.insert(wr_id, tid);
+            let (t, _trace) = s.charge_submission(sim.now(), gpu as usize);
+            let prof_post = s.net.profile(s.groups[gpu as usize].nics[0]).post_ns;
+            s.groups[gpu as usize].worker_free = t + prof_post;
+            let local = s.groups[gpu as usize].nics[0];
+            (wr_id, tid, t + prof_post, local)
+        };
+        let _ = tid;
+        let this = self.clone();
+        sim.at(post_at, move |sim| {
+            let net = this.state.borrow().net.clone();
+            let ok = net.post(
+                sim,
+                local,
+                WorkRequest {
+                    id: wr_id,
+                    qp: QpId(0), // SEND/RECV QP class
+                    op: WrOp::Send { dst, payload },
+                    chained: false,
+                },
+            );
+            assert!(ok, "send queue full on SEND path");
+        });
+    }
+
+    /// Post a rotating pool of `cnt` receive buffers of `len` bytes on
+    /// `gpu`'s first NIC; `cb` runs for each received message and the
+    /// buffer is re-posted afterwards.
+    pub fn submit_recvs(
+        &self,
+        sim: &mut Sim,
+        gpu: u8,
+        len: usize,
+        cnt: usize,
+        cb: impl Fn(&mut Sim, &[u8]) + 'static,
+    ) {
+        let (bufs, local) = {
+            let mut s = self.state.borrow_mut();
+            s.groups[gpu as usize].recv_cb = Some(Rc::new(cb));
+            let mem = s.net.mem();
+            let bufs: Vec<(u64, DmaBuf)> = (0..cnt)
+                .map(|_| (s.alloc_wr(), mem.alloc(len).0))
+                .collect();
+            let local = s.groups[gpu as usize].nics[0];
+            for (id, buf) in &bufs {
+                s.groups[gpu as usize].recv_slots.insert(
+                    *id,
+                    RecvSlot {
+                        buf: buf.clone(),
+                        len,
+                    },
+                );
+            }
+            (bufs, local)
+        };
+        let net = self.state.borrow().net.clone();
+        for (id, buf) in bufs {
+            net.post(
+                sim,
+                local,
+                WorkRequest {
+                    id,
+                    qp: QpId(0),
+                    op: WrOp::Recv {
+                        buf: DmaSlice::whole(&buf),
+                    },
+                    chained: false,
+                },
+            );
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // One-sided WRITE family
+    // ------------------------------------------------------------------
+
+    /// Contiguous one-sided write (paper `submit_single_write`).
+    /// Sharded across NICs when large and imm-less; see
+    /// [`super::api::SPLIT_THRESHOLD`].
+    pub fn submit_single_write(
+        &self,
+        sim: &mut Sim,
+        src: (&MrHandle, u64),
+        len: u64,
+        dst: (&MrDesc, u64),
+        imm: Option<u32>,
+        on_done: OnDone,
+    ) {
+        let (handle, src_off) = src;
+        let (desc, dst_off) = dst;
+        let fanout = desc.rkeys.len().min(self.fanout(handle.device.gpu));
+        let rotation = self.bump_rotation(handle.device.gpu);
+        let plans = plan_single_write(len, src_off, desc.ptr + dst_off, imm, fanout, rotation);
+        self.execute_plans(sim, handle, desc, plans, on_done);
+    }
+
+    /// Paged writes: page `i` of `src_pages` (each `page_len` bytes)
+    /// lands at page `i` of `dst_pages` (paper `submit_paged_writes`).
+    pub fn submit_paged_writes(
+        &self,
+        sim: &mut Sim,
+        page_len: u64,
+        src: (&MrHandle, &Pages),
+        dst: (&MrDesc, &Pages),
+        imm: Option<u32>,
+        on_done: OnDone,
+    ) {
+        let (handle, src_pages) = src;
+        let (desc, dst_pages) = dst;
+        let src_offs: Vec<u64> = (0..src_pages.len()).map(|i| src_pages.at(i)).collect();
+        let dst_vas: Vec<u64> = (0..dst_pages.len())
+            .map(|i| desc.ptr + dst_pages.at(i))
+            .collect();
+        let fanout = desc.rkeys.len().min(self.fanout(handle.device.gpu));
+        let rotation = self.bump_rotation(handle.device.gpu);
+        let plans = plan_paged_writes(page_len, &src_offs, &dst_vas, imm, fanout, rotation);
+        self.execute_plans(sim, handle, desc, plans, on_done);
+    }
+
+    /// Register a peer group for scatter/barrier fast paths.
+    pub fn add_peer_group(&self, addrs: Vec<NetAddr>) -> PeerGroupHandle {
+        let mut s = self.state.borrow_mut();
+        let id = s.next_peer_group;
+        s.next_peer_group += 1;
+        s.peer_groups.insert(id, addrs);
+        PeerGroupHandle(id)
+    }
+
+    /// Scatter slices of `src` to many peers (paper `submit_scatter`).
+    /// One WR per destination; `imm` delivered to each peer.
+    pub fn submit_scatter(
+        &self,
+        sim: &mut Sim,
+        _group: Option<PeerGroupHandle>,
+        src: &MrHandle,
+        dsts: &[ScatterDst],
+        imm: Option<u32>,
+        on_done: OnDone,
+    ) {
+        // Scatter fans out to *different* peers: plan per peer, NIC
+        // rotated per entry; WR templating pre-fills common fields
+        // (modeled inside the cost constants).
+        let gpu = src.device.gpu;
+        let fanout = self.fanout(gpu);
+        let rotation = self.bump_rotation(gpu);
+        let entries: Vec<(u64, u64, u64)> = dsts
+            .iter()
+            .map(|d| (d.len, d.src, d.dst.0.ptr + d.dst.1))
+            .collect();
+        let plans = plan_scatter(&entries, imm, fanout, rotation);
+        // Pair each plan with its destination's (NIC, rkey) — avoids
+        // cloning whole descriptors per WR on the hot path.
+        let pairs = plans
+            .into_iter()
+            .zip(dsts.iter())
+            .map(|(p, d)| {
+                let rk = d.dst.0.rkey_for(p.nic);
+                (p, rk)
+            })
+            .collect();
+        self.execute_plans_multi(sim, src, pairs, on_done);
+    }
+
+    /// Immediate-only notification to every peer (paper
+    /// `submit_barrier`). `dsts` supplies a valid descriptor per peer
+    /// — required on EFA even for zero-sized writes (§3.5).
+    pub fn submit_barrier(
+        &self,
+        sim: &mut Sim,
+        gpu: u8,
+        _group: Option<PeerGroupHandle>,
+        dsts: &[MrDesc],
+        imm: u32,
+        on_done: OnDone,
+    ) {
+        // Zero-length writes need a 1-byte-capable source; use a tiny
+        // scratch region (templated once in the real engine).
+        let (scratch, _) = self.alloc_mr(gpu, 1);
+        let fanout = self.fanout(gpu);
+        let rotation = self.bump_rotation(gpu);
+        let entries: Vec<(u64, u64, u64)> =
+            dsts.iter().map(|d| (0u64, 0u64, d.ptr)).collect();
+        let plans = plan_scatter(&entries, Some(imm), fanout, rotation);
+        let pairs = plans
+            .into_iter()
+            .zip(dsts.iter())
+            .map(|(p, d)| {
+                let rk = d.rkey_for(p.nic);
+                (p, rk)
+            })
+            .collect();
+        self.execute_plans_multi(sim, &scratch, pairs, on_done);
+    }
+
+    // ------------------------------------------------------------------
+    // Completion notification
+    // ------------------------------------------------------------------
+
+    /// Notify `cb` when `imm` has been received `count` times on
+    /// `gpu`'s domain group (paper `expect_imm_count`).
+    pub fn expect_imm_count(
+        &self,
+        sim: &mut Sim,
+        gpu: u8,
+        imm: u32,
+        count: u32,
+        cb: impl FnOnce(&mut Sim) + 'static,
+    ) {
+        let event = {
+            let mut s = self.state.borrow_mut();
+            let g = &mut s.groups[gpu as usize];
+            let ev = g.imm.expect(imm, count);
+            if ev == ImmEvent::Pending {
+                g.imm_waiters.insert(imm, Box::new(cb));
+                return;
+            }
+            ev
+        };
+        debug_assert_eq!(event, ImmEvent::Satisfied);
+        let dispatch = self.state.borrow().costs.callback_ns;
+        sim.after(dispatch, cb);
+    }
+
+    /// Poll the current counter value (CPU-side read; GPU-side reads
+    /// add GDRCopy latency at the call site).
+    pub fn imm_value(&self, gpu: u8, imm: u32) -> u32 {
+        self.state.borrow().groups[gpu as usize].imm.value(imm)
+    }
+
+    /// Release counter state for `imm` (paper `free_imm`).
+    pub fn free_imm(&self, gpu: u8, imm: u32) {
+        self.state.borrow_mut().groups[gpu as usize].imm.free(imm);
+    }
+
+    // ------------------------------------------------------------------
+    // UVM watcher
+    // ------------------------------------------------------------------
+
+    /// Allocate a UVM watcher: `cb(old, new)` fires when the engine's
+    /// polling thread observes a changed value (paper
+    /// `alloc_uvm_watcher`).
+    ///
+    /// The polling thread is modeled event-wise: each device-side
+    /// write schedules the observation at
+    /// `write + PCIe + U(0, poll) + dispatch jitter`, statistically
+    /// identical to a GDRCopy poll loop at `uvm_poll_ns` without
+    /// simulating idle iterations.
+    pub fn alloc_uvm_watcher(
+        &self,
+        cb: impl Fn(&mut Sim, u64, u64) + 'static,
+    ) -> UvmWatcherHandle {
+        let mut s = self.state.borrow_mut();
+        let id = s.next_watcher;
+        s.next_watcher += 1;
+        s.watchers.insert(
+            id,
+            Watcher {
+                value: 0,
+                cb: Rc::new(cb),
+            },
+        );
+        UvmWatcherHandle {
+            engine: self.clone(),
+            id,
+        }
+    }
+
+    fn uvm_device_write(&self, sim: &mut Sim, id: u64, value: u64) {
+        let (cb, old, delay) = {
+            let mut s = self.state.borrow_mut();
+            let pcie = s.gpu_profile.pcie_ns;
+            let poll = s.costs.uvm_poll_ns;
+            let phase = s.rng.below(poll.max(1));
+            let jit = s.costs.submit_jitter.clone();
+            let extra = jit.sample(&mut s.rng); // dispatch tail
+            let w = s.watchers.get_mut(&id).expect("freed UVM watcher");
+            let old = w.value;
+            w.value = value;
+            (w.cb.clone(), old, pcie + phase + 500 + extra)
+        };
+        // Watcher coalescing: the poll may miss intermediate values;
+        // the callback receives (old, new) exactly as the paper
+        // specifies so it can catch up.
+        sim.after(delay, move |s| cb(s, old, value));
+    }
+
+    // ------------------------------------------------------------------
+    // Internals
+    // ------------------------------------------------------------------
+
+    fn fanout(&self, gpu: u8) -> usize {
+        self.state.borrow().groups[gpu as usize].nics.len()
+    }
+
+    fn bump_rotation(&self, gpu: u8) -> usize {
+        let mut s = self.state.borrow_mut();
+        let g = &mut s.groups[gpu as usize];
+        g.rotation = g.rotation.wrapping_add(1);
+        g.rotation
+    }
+
+    /// Execute a plan against a single destination descriptor.
+    fn execute_plans(
+        &self,
+        sim: &mut Sim,
+        src: &MrHandle,
+        desc: &MrDesc,
+        plans: Vec<PlannedWrite>,
+        on_done: OnDone,
+    ) {
+        let pairs = plans
+            .into_iter()
+            .map(|p| {
+                let rk = desc.rkey_for(p.nic);
+                (p, rk)
+            })
+            .collect::<Vec<_>>();
+        self.execute_plans_multi(sim, src, pairs, on_done);
+    }
+
+    /// Execute planned writes, each paired with its destination
+    /// `(NIC, rkey)`; charges worker CPU and posts WRs at the modeled
+    /// times (chained where the NIC supports it).
+    fn execute_plans_multi(
+        &self,
+        sim: &mut Sim,
+        src: &MrHandle,
+        plans: Vec<(PlannedWrite, (NicAddr, u64))>,
+        on_done: OnDone,
+    ) {
+        assert!(!plans.is_empty(), "empty transfer");
+        let gpu = src.device.gpu as usize;
+        let now = sim.now();
+        let (posts, trace) = {
+            let mut s = self.state.borrow_mut();
+            let tid = s.alloc_transfer(Transfer {
+                remaining: plans.len(),
+                on_done,
+            });
+            // Worker-cost model: submit → handoff → prep → per-WR post.
+            let (first_post_at, mut trace) = s.charge_submission(now, gpu);
+            let nic0 = s.groups[gpu].nics[0];
+            let prof = s.net.profile(nic0);
+            let mut posts = Vec::with_capacity(plans.len());
+            let mut t = first_post_at;
+            for (i, (p, (dst_nic, rkey))) in plans.into_iter().enumerate() {
+                let wr_id = s.alloc_wr();
+                s.wr_transfer.insert(wr_id, tid);
+                // Chaining: on RC up to `max_chain` WRs share a
+                // doorbell; the chained ones cost less CPU.
+                let chained = prof.max_chain > 1 && i % prof.max_chain != 0;
+                t += if chained {
+                    prof.post_chained_ns
+                } else {
+                    prof.post_ns
+                };
+                let wr = WorkRequest {
+                    id: wr_id,
+                    qp: QpId(1), // WRITE QP class (two-QP split, §3.5)
+                    op: WrOp::Write {
+                        dst: dst_nic,
+                        dst_rkey: RKey(rkey),
+                        dst_va: p.dst_va,
+                        src: DmaSlice::new(&src.buf, p.src_off as usize, p.len as usize),
+                        imm: p.imm,
+                    },
+                    chained,
+                };
+                posts.push((t, p.nic, wr));
+            }
+            let g = &mut s.groups[gpu];
+            g.worker_free = t;
+            trace.last_post = t;
+            trace.wrs = posts.len();
+            if let Some(sink) = &s.trace_sink {
+                sink.borrow_mut().push(trace);
+            }
+            (posts, trace)
+        };
+        let _ = trace;
+        // Post each WR at its worker-time; back-pressured WRs queue on
+        // the group and retry on completion events.
+        for (at, nic_idx, wr) in posts {
+            let this = self.clone();
+            sim.at(at, move |sim| {
+                let (net, local) = {
+                    let s = this.state.borrow();
+                    (s.net.clone(), s.groups[gpu].nics[nic_idx])
+                };
+                if !net.post(sim, local, wr.clone()) {
+                    this.state.borrow_mut().groups[gpu].pending[nic_idx].push_back(wr);
+                }
+            });
+        }
+    }
+
+    /// Domain progress: runs when a NIC signals completions (stands in
+    /// for one worker poll iteration).
+    fn progress(&self, sim: &mut Sim, gpu: usize, addr: NicAddr) {
+        let mut cqes = Vec::with_capacity(16);
+        let net = self.state.borrow().net.clone();
+        loop {
+            cqes.clear();
+            net.poll_cq(addr, 64, &mut cqes);
+            if cqes.is_empty() {
+                break;
+            }
+            for cqe in cqes.drain(..) {
+                self.handle_cqe(sim, gpu, addr, cqe);
+            }
+        }
+        // Retry back-pressured WRs now that SQ slots may have freed.
+        let nic_idx = addr.nic as usize;
+        loop {
+            let wr = {
+                let mut s = self.state.borrow_mut();
+                match s.groups[gpu].pending[nic_idx].pop_front() {
+                    Some(wr) => wr,
+                    None => break,
+                }
+            };
+            if !net.post(sim, addr, wr.clone()) {
+                self.state.borrow_mut().groups[gpu].pending[nic_idx].push_front(wr);
+                break;
+            }
+        }
+    }
+
+    fn handle_cqe(&self, sim: &mut Sim, gpu: usize, addr: NicAddr, cqe: Cqe) {
+        match cqe.kind {
+            CqeKind::SendDone | CqeKind::WriteDone => {
+                let done = {
+                    let mut s = self.state.borrow_mut();
+                    let Some(tid) = s.wr_transfer.remove(&cqe.wr_id) else {
+                        return;
+                    };
+                    let t = s.transfers.get_mut(&tid).expect("transfer state");
+                    t.remaining -= 1;
+                    if t.remaining == 0 {
+                        Some(s.transfers.remove(&tid).unwrap())
+                    } else {
+                        None
+                    }
+                };
+                if let Some(t) = done {
+                    self.fire_on_done(sim, t.on_done);
+                }
+            }
+            CqeKind::ImmRecvd { imm, .. } => {
+                let (satisfied, dispatch) = {
+                    let mut s = self.state.borrow_mut();
+                    let g = &mut s.groups[gpu];
+                    let ev = g.imm.increment(imm);
+                    let waiter = if ev == ImmEvent::Satisfied {
+                        g.imm_waiters.remove(&imm)
+                    } else {
+                        None
+                    };
+                    (waiter, s.costs.callback_ns)
+                };
+                if let Some(cb) = satisfied {
+                    sim.after(dispatch, cb);
+                }
+            }
+            CqeKind::RecvDone { len, src: _src } => {
+                let (payload, cb, repost, dispatch) = {
+                    let mut s = self.state.borrow_mut();
+                    let g = &mut s.groups[gpu];
+                    let slot = g
+                        .recv_slots
+                        .remove(&cqe.wr_id)
+                        .expect("RecvDone for unknown buffer");
+                    assert!(
+                        len as usize <= slot.len,
+                        "SEND of {len} B overflows the {} B recv buffer \
+                         (size the submit_recvs pool for the largest message)",
+                        slot.len
+                    );
+                    let mut data = vec![0u8; (len as usize).min(slot.len)];
+                    slot.buf.read(0, &mut data);
+                    let cb = g.recv_cb.clone();
+                    // Rotating pool: re-post the buffer with a fresh id.
+                    let new_id = s.alloc_wr();
+                    s.groups[gpu].recv_slots.insert(
+                        new_id,
+                        RecvSlot {
+                            buf: slot.buf.clone(),
+                            len: slot.len,
+                        },
+                    );
+                    (data, cb, (new_id, slot.buf), s.costs.callback_ns)
+                };
+                let net = self.state.borrow().net.clone();
+                net.post(
+                    sim,
+                    addr,
+                    WorkRequest {
+                        id: repost.0,
+                        qp: QpId(0),
+                        op: WrOp::Recv {
+                            buf: DmaSlice::whole(&repost.1),
+                        },
+                        chained: false,
+                    },
+                );
+                if let Some(cb) = cb {
+                    sim.after(dispatch, move |s| cb(s, &payload));
+                }
+            }
+        }
+    }
+
+    fn fire_on_done(&self, sim: &mut Sim, on_done: OnDone) {
+        match on_done {
+            OnDone::Callback(cb) => {
+                let dispatch = self.state.borrow().costs.callback_ns;
+                sim.after(dispatch, cb);
+            }
+            OnDone::Flag(f) => f.set(true),
+            OnDone::Noop => {}
+        }
+    }
+}
+
+impl State {
+    fn alloc_wr(&mut self) -> u64 {
+        let id = self.next_wr;
+        self.next_wr += 1;
+        id
+    }
+
+    fn alloc_transfer(&mut self, t: Transfer) -> u64 {
+        let id = self.next_transfer;
+        self.next_transfer += 1;
+        self.transfers.insert(id, t);
+        id
+    }
+
+    /// Charge the submit → handoff → prep pipeline, returning the
+    /// worker time at which the first WR may post plus a trace. The
+    /// worker is a single pinned thread per group: a submission waits
+    /// for it to drain earlier work (`worker_free`).
+    fn charge_submission(&mut self, now: Instant, gpu: usize) -> (Instant, SubmitTrace) {
+        let c = self.costs.clone();
+        let enq = now + c.submit_ns + c.submit_jitter.sample(&mut self.rng);
+        let handoff = enq + c.handoff_ns + c.handoff_jitter.sample(&mut self.rng);
+        let worker_start = handoff.max(self.groups[gpu].worker_free);
+        let first_post = worker_start + c.prep_ns + c.prep_jitter.sample(&mut self.rng);
+        (
+            first_post,
+            SubmitTrace {
+                submitted: now,
+                enqueued: enq,
+                worker_start,
+                first_post,
+                last_post: first_post,
+                wrs: 0,
+            },
+        )
+    }
+}
+
+/// Handle to a UVM watcher; device code calls
+/// [`UvmWatcherHandle::device_write`] when a GPU kernel updates the
+/// watched word.
+#[derive(Clone)]
+pub struct UvmWatcherHandle {
+    engine: Engine,
+    id: u64,
+}
+
+impl UvmWatcherHandle {
+    /// Record a device-side write of `value` at the current sim time;
+    /// the watcher callback fires after PCIe + poll-phase latency.
+    pub fn device_write(&self, sim: &mut Sim, value: u64) {
+        self.engine.uvm_device_write(sim, self.id, value);
+    }
+
+    /// Drop the watcher (later writes panic).
+    pub fn free(&self) {
+        self.engine.state.borrow_mut().watchers.remove(&self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::profile::NicProfile;
+    use crate::fabric::topology::ClusterSpec;
+
+    /// Two-node EFA-like setup: 1 GPU per node, 2 NICs per GPU.
+    fn setup(profile: fn() -> NicProfile) -> (Sim, SimNet, Engine, Engine) {
+        let net = SimNet::new(11);
+        for node in 0..2u16 {
+            for nic in 0..2u8 {
+                net.add_nic(NicAddr { node, gpu: 0, nic }, profile());
+            }
+        }
+        let gp = GpuProfile::h200();
+        let a = Engine::new(&net, 0, 1, 2, gp.clone(), EngineCosts::default(), 1);
+        let b = Engine::new(&net, 1, 1, 2, gp, EngineCosts::default(), 2);
+        (Sim::new(), net, a, b)
+    }
+
+    #[test]
+    fn single_write_with_imm_counter() {
+        let (mut sim, _net, a, b) = setup(NicProfile::efa);
+        let (src, _) = a.alloc_mr(0, 4096);
+        let (_dst_h, dst_d) = b.alloc_mr(0, 4096);
+        src.buf.write(0, b"engine write path");
+
+        let got = Rc::new(Cell::new(false));
+        let done = Rc::new(Cell::new(false));
+        let g = got.clone();
+        b.expect_imm_count(&mut sim, 0, 77, 1, move |_| g.set(true));
+        a.submit_single_write(
+            &mut sim,
+            (&src, 0),
+            17,
+            (&dst_d, 100),
+            Some(77),
+            OnDone::Flag(done.clone()),
+        );
+        sim.run();
+        assert!(got.get(), "receiver notified via ImmCounter");
+        assert!(done.get(), "sender OnDone flag set");
+        // Payload landed at the right offset. Reading through the
+        // descriptor's region (dst handle buf is the same region).
+        let (h, _) = (_dst_h, ());
+        assert_eq!(&h.buf.to_vec()[100..117], b"engine write path");
+    }
+
+    #[test]
+    fn large_write_shards_across_both_nics() {
+        let (mut sim, net, a, b) = setup(NicProfile::efa);
+        let len = 4 << 20;
+        let (src, _) = a.alloc_mr(0, len);
+        let (dst_h, dst_d) = b.alloc_mr(0, len);
+        let pattern: Vec<u8> = (0..len).map(|i| (i * 31 % 251) as u8).collect();
+        src.buf.write(0, &pattern);
+
+        a.submit_single_write(&mut sim, (&src, 0), len as u64, (&dst_d, 0), None, OnDone::Noop);
+        sim.run();
+        assert_eq!(dst_h.buf.to_vec(), pattern, "payload integrity after sharding");
+        // Both local NICs carried traffic.
+        let (tx0, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 0 });
+        let (tx1, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 1 });
+        assert!(tx0 > 0 && tx1 > 0, "sharded across NICs: {tx0} {tx1}");
+        assert_eq!(tx0 + tx1, len as u64);
+    }
+
+    #[test]
+    fn paged_writes_land_at_indexed_pages() {
+        let (mut sim, _net, a, b) = setup(NicProfile::connectx7);
+        let page = 4096u64;
+        let (src, _) = a.alloc_mr(0, (page * 8) as usize);
+        let (dst_h, dst_d) = b.alloc_mr(0, (page * 16) as usize);
+        for i in 0..8u8 {
+            src.buf.write((i as u64 * page) as usize, &[i + 1; 16]);
+        }
+        // Scatter source pages 0..8 to destination pages [3,9,1,12,0,7,5,14].
+        let dst_idx = vec![3u32, 9, 1, 12, 0, 7, 5, 14];
+        let done = Rc::new(Cell::new(false));
+        a.submit_paged_writes(
+            &mut sim,
+            page,
+            (&src, &Pages::contiguous(0, 8, page)),
+            (&dst_d, &Pages { indices: dst_idx.clone(), stride: page, offset: 0 }),
+            Some(5),
+            OnDone::Flag(done.clone()),
+        );
+        sim.run();
+        assert!(done.get());
+        let v = dst_h.buf.to_vec();
+        for (i, &di) in dst_idx.iter().enumerate() {
+            let off = (di as u64 * page) as usize;
+            assert_eq!(v[off..off + 16], [(i as u8) + 1; 16], "page {i} -> slot {di}");
+        }
+        // One imm per page.
+        assert_eq!(b.imm_value(0, 5), 8);
+    }
+
+    #[test]
+    fn send_recv_rpc_roundtrip() {
+        let (mut sim, _net, a, b) = setup(NicProfile::efa);
+        let inbox: Rc<RefCell<Vec<Vec<u8>>>> = Rc::default();
+        let sink = inbox.clone();
+        b.submit_recvs(&mut sim, 0, 256, 4, move |_s, msg| {
+            sink.borrow_mut().push(msg.to_vec());
+        });
+        // More messages than posted buffers: rotation must re-post.
+        for i in 0..10u8 {
+            a.submit_send(&mut sim, 0, &b.group_address(0), &[i; 5], OnDone::Noop);
+        }
+        sim.run();
+        let got = inbox.borrow();
+        assert_eq!(got.len(), 10, "rotating pool re-posts buffers");
+        // SRD: arrival order may differ; check the set.
+        let mut firsts: Vec<u8> = got.iter().map(|m| m[0]).collect();
+        firsts.sort_unstable();
+        assert_eq!(firsts, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scatter_and_barrier_to_many_peers() {
+        // 1 sender node + 4 peer nodes on CX-7.
+        let net = SimNet::new(5);
+        for node in 0..5u16 {
+            net.add_nic(NicAddr { node, gpu: 0, nic: 0 }, NicProfile::connectx7());
+        }
+        let gp = GpuProfile::h100();
+        let engines: Vec<Engine> = (0..5)
+            .map(|n| Engine::new(&net, n, 1, 1, gp.clone(), EngineCosts::default(), n as u64))
+            .collect();
+        let mut sim = Sim::new();
+        let (src, _) = engines[0].alloc_mr(0, 1024);
+        src.buf.write(0, &[7u8; 1024]);
+        let peers: Vec<(MrHandle, MrDesc)> =
+            (1..5).map(|i| engines[i].alloc_mr(0, 1024)).collect();
+        let dsts: Vec<ScatterDst> = peers
+            .iter()
+            .enumerate()
+            .map(|(i, (_, d))| ScatterDst {
+                len: 256,
+                src: (i as u64) * 256,
+                dst: (d.clone(), 64),
+            })
+            .collect();
+        let done = Rc::new(Cell::new(false));
+        engines[0].submit_scatter(&mut sim, None, &src, &dsts, Some(9), OnDone::Flag(done.clone()));
+        sim.run();
+        assert!(done.get());
+        for (i, (h, _)) in peers.iter().enumerate() {
+            assert_eq!(&h.buf.to_vec()[64..64 + 256], &[7u8; 256], "peer {i}");
+            assert_eq!(engines[i + 1].imm_value(0, 9), 1);
+        }
+        // Barrier: imm-only writes.
+        let descs: Vec<MrDesc> = peers.iter().map(|(_, d)| d.clone()).collect();
+        engines[0].submit_barrier(&mut sim, 0, None, &descs, 33, OnDone::Noop);
+        sim.run();
+        for i in 1..5 {
+            assert_eq!(engines[i].imm_value(0, 33), 1, "barrier imm at peer {i}");
+        }
+    }
+
+    #[test]
+    fn expect_after_arrival_fires_immediately() {
+        let (mut sim, _net, a, b) = setup(NicProfile::efa);
+        let (src, _) = a.alloc_mr(0, 64);
+        let (_dh, dd) = b.alloc_mr(0, 64);
+        a.submit_single_write(&mut sim, (&src, 0), 64, (&dd, 0), Some(4), OnDone::Noop);
+        sim.run();
+        assert_eq!(b.imm_value(0, 4), 1);
+        // Register the expectation after the write landed.
+        let fired = Rc::new(Cell::new(false));
+        let f = fired.clone();
+        b.expect_imm_count(&mut sim, 0, 4, 1, move |_| f.set(true));
+        sim.run();
+        assert!(fired.get(), "late expectation satisfied from recorded count");
+    }
+
+    #[test]
+    fn uvm_watcher_sees_coalesced_progress() {
+        let (mut sim, _net, a, _b) = setup(NicProfile::efa);
+        let log: Rc<RefCell<Vec<(u64, u64)>>> = Rc::default();
+        let l = log.clone();
+        let w = a.alloc_uvm_watcher(move |_s, old, new| l.borrow_mut().push((old, new)));
+        let w2 = w.clone();
+        sim.at(10_000, move |s| w2.device_write(s, 3));
+        let w3 = w.clone();
+        sim.at(20_000_000, move |s| w3.device_write(s, 7));
+        sim.run();
+        let log = log.borrow();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0], (0, 3), "callback gets old and new value");
+        assert_eq!(log[1], (3, 7));
+    }
+
+    #[test]
+    fn submission_trace_orders_events() {
+        let (mut sim, _net, a, b) = setup(NicProfile::efa);
+        let sink: Rc<RefCell<Vec<SubmitTrace>>> = Rc::default();
+        a.set_trace_sink(sink.clone());
+        let (src, _) = a.alloc_mr(0, 1 << 16);
+        let descs: Vec<(MrHandle, MrDesc)> = (0..4).map(|_| b.alloc_mr(0, 4096)).collect();
+        let dsts: Vec<ScatterDst> = descs
+            .iter()
+            .map(|(_, d)| ScatterDst { len: 1024, src: 0, dst: (d.clone(), 0) })
+            .collect();
+        a.submit_scatter(&mut sim, None, &src, &dsts, Some(1), OnDone::Noop);
+        sim.run();
+        let traces = sink.borrow();
+        assert_eq!(traces.len(), 1);
+        let t = traces[0];
+        assert!(t.submitted < t.enqueued);
+        assert!(t.enqueued < t.worker_start);
+        assert!(t.worker_start < t.first_post);
+        assert!(t.first_post < t.last_post, "4 posts take time");
+        assert_eq!(t.wrs, 4);
+        // Table 8 ballpark: submit->enqueue ~0.1 µs, ->first post
+        // within a few µs.
+        assert!(t.enqueued - t.submitted < 5_000);
+        assert!(t.first_post - t.submitted < 20_000);
+    }
+
+    #[test]
+    fn engine_cluster_builder_compatible() {
+        // Engines attach onto topology-built fabrics.
+        let spec = ClusterSpec::h100_cx7(1);
+        let cluster = spec.build();
+        let e = Engine::new(
+            &cluster.net,
+            0,
+            spec.gpus_per_node,
+            spec.nics_per_gpu,
+            spec.gpu_profile.clone(),
+            EngineCosts::default(),
+            3,
+        );
+        assert_eq!(e.nics_per_gpu(), 1);
+        assert_eq!(e.group_address(3).primary(), NicAddr { node: 0, gpu: 3, nic: 0 });
+    }
+}

@@ -1,0 +1,171 @@
+//! The IMMCOUNTER: order-agnostic completion notification (paper §3.3).
+//!
+//! All synchronization in fabric-lib reduces to per-immediate counters
+//! incremented from completion-queue events. Because the transport
+//! gives no ordering guarantees, a receiver that expects N writes
+//! simply registers `expect(imm, N)` and is notified when the N-th
+//! WRITEIMM (in *any* order) has fully landed — the fabric guarantees
+//! payload-before-immediate, so at notification time all N payloads
+//! are readable.
+//!
+//! This component is pure logic shared by both engine runtimes.
+
+use std::collections::HashMap;
+
+/// Outcome of an increment.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ImmEvent {
+    /// Counter advanced; expectation (if any) not yet met.
+    Pending,
+    /// A registered expectation was satisfied by this increment; the
+    /// expectation and counter have been retired.
+    Satisfied,
+}
+
+struct Slot {
+    count: u32,
+    expected: Option<u32>,
+}
+
+/// Per-immediate counters plus registered expectations.
+#[derive(Default)]
+pub struct ImmCounter {
+    slots: HashMap<u32, Slot>,
+}
+
+impl ImmCounter {
+    /// Fresh counter table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an expectation: notify when `imm` has been received
+    /// `count` times (counting increments that already happened —
+    /// writes may land before the receiver registers, which is routine
+    /// under one-sided semantics).
+    ///
+    /// Returns `Satisfied` immediately if already met. Panics if an
+    /// expectation is already registered for `imm` (an alloc/free
+    /// protocol bug in the caller).
+    pub fn expect(&mut self, imm: u32, count: u32) -> ImmEvent {
+        let slot = self.slots.entry(imm).or_insert(Slot {
+            count: 0,
+            expected: None,
+        });
+        assert!(
+            slot.expected.is_none(),
+            "imm {imm} already has a registered expectation"
+        );
+        if slot.count >= count {
+            self.slots.remove(&imm);
+            return ImmEvent::Satisfied;
+        }
+        slot.expected = Some(count);
+        ImmEvent::Pending
+    }
+
+    /// Record one received immediate. Returns `Satisfied` when this
+    /// increment completes a registered expectation.
+    pub fn increment(&mut self, imm: u32) -> ImmEvent {
+        let slot = self.slots.entry(imm).or_insert(Slot {
+            count: 0,
+            expected: None,
+        });
+        slot.count += 1;
+        if let Some(exp) = slot.expected {
+            if slot.count >= exp {
+                self.slots.remove(&imm);
+                return ImmEvent::Satisfied;
+            }
+        }
+        ImmEvent::Pending
+    }
+
+    /// Current count for `imm` (polling interface; GDRCopy-style flag
+    /// reads go through the engine which adds visibility latency).
+    pub fn value(&self, imm: u32) -> u32 {
+        self.slots.get(&imm).map(|s| s.count).unwrap_or(0)
+    }
+
+    /// Drop all state for `imm` (the paper's `free_imm`).
+    pub fn free(&mut self, imm: u32) {
+        self.slots.remove(&imm);
+    }
+
+    /// Number of live slots (leak check in tests).
+    pub fn live(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expectation_satisfied_in_any_order() {
+        let mut c = ImmCounter::new();
+        assert_eq!(c.expect(7, 3), ImmEvent::Pending);
+        assert_eq!(c.increment(7), ImmEvent::Pending);
+        assert_eq!(c.increment(7), ImmEvent::Pending);
+        assert_eq!(c.increment(7), ImmEvent::Satisfied);
+        // Slot retired.
+        assert_eq!(c.live(), 0);
+        assert_eq!(c.value(7), 0);
+    }
+
+    #[test]
+    fn increments_before_expect_count() {
+        // One-sided writes can land before the receiver registers.
+        let mut c = ImmCounter::new();
+        c.increment(9);
+        c.increment(9);
+        assert_eq!(c.expect(9, 2), ImmEvent::Satisfied);
+        assert_eq!(c.live(), 0);
+    }
+
+    #[test]
+    fn partial_pre_increment() {
+        let mut c = ImmCounter::new();
+        c.increment(5);
+        assert_eq!(c.expect(5, 3), ImmEvent::Pending);
+        c.increment(5);
+        assert_eq!(c.increment(5), ImmEvent::Satisfied);
+    }
+
+    #[test]
+    fn independent_imms() {
+        let mut c = ImmCounter::new();
+        c.expect(1, 1);
+        c.expect(2, 2);
+        assert_eq!(c.increment(2), ImmEvent::Pending);
+        assert_eq!(c.increment(1), ImmEvent::Satisfied);
+        assert_eq!(c.increment(2), ImmEvent::Satisfied);
+    }
+
+    #[test]
+    #[should_panic(expected = "already has a registered expectation")]
+    fn double_expect_is_a_bug() {
+        let mut c = ImmCounter::new();
+        c.expect(3, 2);
+        c.expect(3, 1);
+    }
+
+    #[test]
+    fn free_clears() {
+        let mut c = ImmCounter::new();
+        c.increment(4);
+        c.free(4);
+        assert_eq!(c.value(4), 0);
+        assert_eq!(c.live(), 0);
+    }
+
+    #[test]
+    fn value_polling() {
+        let mut c = ImmCounter::new();
+        for i in 0..10 {
+            assert_eq!(c.value(8), i);
+            c.increment(8);
+        }
+    }
+}

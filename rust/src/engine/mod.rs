@@ -1,0 +1,19 @@
+//! The TransferEngine: fabric-lib's core component (paper §3).
+//!
+//! Two runtimes share the same vocabulary and pure logic:
+//! * [`des_engine::Engine`] — deterministic, timing-faithful engine on
+//!   the discrete-event fabric (benchmarks, integration tests);
+//! * [`threaded::ThreadedEngine`] — real pinned threads over the
+//!   in-process fabric (runnable examples, real CPU-overhead
+//!   measurements).
+
+pub mod api;
+pub mod des_engine;
+pub mod imm_counter;
+pub mod sharding;
+pub mod threaded;
+pub mod wire;
+
+pub use api::{EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
+pub use des_engine::{Engine, OnDone, SubmitTrace, UvmWatcherHandle};
+pub use imm_counter::{ImmCounter, ImmEvent};

@@ -1,0 +1,234 @@
+//! Sharding planner: turns API-level transfers into per-NIC write
+//! plans (paper §3.4: "requests are sharded and load-balanced across
+//! the available DOMAINs").
+//!
+//! Pure functions — property-tested invariants:
+//! * **coverage**: planned writes tile the requested byte range
+//!   exactly, no gaps, no overlap;
+//! * **imm-count preservation**: a transfer submitted with an
+//!   immediate produces exactly the number of immediate-carrying
+//!   writes the receiver's `expect_imm_count` was told about;
+//! * **balance**: large imm-less transfers spread within one
+//!   write-size of even across NICs.
+
+use super::api::SPLIT_THRESHOLD;
+
+/// One planned one-sided write on a specific NIC of the domain group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlannedWrite {
+    /// NIC index within the domain group (pairs with the same index on
+    /// the remote group).
+    pub nic: usize,
+    /// Source offset within the source region.
+    pub src_off: u64,
+    /// Destination virtual address.
+    pub dst_va: u64,
+    pub len: u64,
+    pub imm: Option<u32>,
+}
+
+/// Plan a single contiguous write.
+///
+/// Imm-carrying writes are never split (the IMMCOUNTER count is part
+/// of the application protocol); imm-less writes above
+/// [`SPLIT_THRESHOLD`] are sharded evenly across all NICs.
+/// `rotation` rotates NIC choice across successive transfers.
+pub fn plan_single_write(
+    len: u64,
+    src_off: u64,
+    dst_va: u64,
+    imm: Option<u32>,
+    fanout: usize,
+    rotation: usize,
+) -> Vec<PlannedWrite> {
+    assert!(fanout > 0);
+    if imm.is_some() || len <= SPLIT_THRESHOLD || fanout == 1 {
+        return vec![PlannedWrite {
+            nic: rotation % fanout,
+            src_off,
+            dst_va,
+            len,
+            imm,
+        }];
+    }
+    // Split evenly; remainder spread one byte at a time from the
+    // front so shard sizes differ by at most 1.
+    let n = fanout as u64;
+    let base = len / n;
+    let rem = len % n;
+    let mut plans = Vec::with_capacity(fanout);
+    let mut off = 0u64;
+    for i in 0..fanout {
+        let l = base + u64::from((i as u64) < rem);
+        if l == 0 {
+            continue;
+        }
+        plans.push(PlannedWrite {
+            nic: (rotation + i) % fanout,
+            src_off: src_off + off,
+            dst_va: dst_va + off,
+            len: l,
+            imm: None,
+        });
+        off += l;
+    }
+    plans
+}
+
+/// Plan a paged write: one WR per page, source page `i` → destination
+/// page `i`, round-robin across NICs starting at `rotation`.
+///
+/// Each page carries the immediate (the receiver expects one increment
+/// per page — see the KvCache `imm_count` computation, Appendix A).
+pub fn plan_paged_writes(
+    page_len: u64,
+    src_offsets: &[u64],
+    dst_vas: &[u64],
+    imm: Option<u32>,
+    fanout: usize,
+    rotation: usize,
+) -> Vec<PlannedWrite> {
+    assert_eq!(
+        src_offsets.len(),
+        dst_vas.len(),
+        "paged write: src/dst page counts differ"
+    );
+    assert!(fanout > 0);
+    src_offsets
+        .iter()
+        .zip(dst_vas)
+        .enumerate()
+        .map(|(i, (&src_off, &dst_va))| PlannedWrite {
+            nic: (rotation + i) % fanout,
+            src_off,
+            dst_va,
+            len: page_len,
+            imm,
+        })
+        .collect()
+}
+
+/// Plan a scatter: entry `i` (peer-specific length/offsets) goes out
+/// on NIC `(rotation + i) % fanout`. Returns plans in submission
+/// order; lengths may be zero only when the transport allows
+/// immediate-only writes without descriptors (validated by the
+/// domain).
+pub fn plan_scatter(
+    entries: &[(u64, u64, u64)], // (len, src_off, dst_va)
+    imm: Option<u32>,
+    fanout: usize,
+    rotation: usize,
+) -> Vec<PlannedWrite> {
+    assert!(fanout > 0);
+    entries
+        .iter()
+        .enumerate()
+        .map(|(i, &(len, src_off, dst_va))| PlannedWrite {
+            nic: (rotation + i) % fanout,
+            src_off,
+            dst_va,
+            len,
+            imm,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_tiles(plans: &[PlannedWrite], src_off: u64, dst_va: u64, len: u64) {
+        let mut ranges: Vec<(u64, u64)> = plans.iter().map(|p| (p.src_off, p.len)).collect();
+        ranges.sort_unstable();
+        let mut cursor = src_off;
+        for (off, l) in &ranges {
+            assert_eq!(*off, cursor, "gap or overlap at {off}");
+            cursor += l;
+        }
+        assert_eq!(cursor, src_off + len, "total coverage");
+        // dst mirrors src offsets
+        for p in plans {
+            assert_eq!(p.dst_va - dst_va, p.src_off - src_off);
+        }
+    }
+
+    #[test]
+    fn small_write_single_nic() {
+        let plans = plan_single_write(4096, 0, 0x1000, None, 4, 2);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].nic, 2);
+        assert_tiles(&plans, 0, 0x1000, 4096);
+    }
+
+    #[test]
+    fn large_write_splits_across_nics() {
+        let len = 1 << 20;
+        let plans = plan_single_write(len, 100, 0x1000, None, 4, 0);
+        assert_eq!(plans.len(), 4);
+        assert_tiles(&plans, 100, 0x1000, len);
+        // Balance within 1 byte.
+        let lens: Vec<u64> = plans.iter().map(|p| p.len).collect();
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+        // All NICs used.
+        let mut nics: Vec<usize> = plans.iter().map(|p| p.nic).collect();
+        nics.sort_unstable();
+        assert_eq!(nics, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn imm_write_never_splits() {
+        let plans = plan_single_write(64 << 20, 0, 0, Some(9), 4, 1);
+        assert_eq!(plans.len(), 1, "imm writes must not be split");
+        assert_eq!(plans[0].imm, Some(9));
+        assert_eq!(plans[0].nic, 1);
+    }
+
+    #[test]
+    fn rotation_rotates() {
+        for r in 0..8 {
+            let p = plan_single_write(64, 0, 0, None, 2, r);
+            assert_eq!(p[0].nic, r % 2);
+        }
+    }
+
+    #[test]
+    fn paged_round_robin_and_count() {
+        let srcs: Vec<u64> = (0..10).map(|i| i * 32768).collect();
+        let dsts: Vec<u64> = (0..10).map(|i| 0x100000 + i * 32768).collect();
+        let plans = plan_paged_writes(32768, &srcs, &dsts, Some(5), 2, 1);
+        assert_eq!(plans.len(), 10, "one WR per page: imm count preserved");
+        assert!(plans.iter().all(|p| p.imm == Some(5)));
+        // Round robin starting at 1.
+        let nics: Vec<usize> = plans.iter().map(|p| p.nic).collect();
+        assert_eq!(&nics[..4], &[1, 0, 1, 0]);
+        // Page i maps to dst page i.
+        for (i, p) in plans.iter().enumerate() {
+            assert_eq!(p.src_off, srcs[i]);
+            assert_eq!(p.dst_va, dsts[i]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "page counts differ")]
+    fn paged_mismatch_panics() {
+        plan_paged_writes(4096, &[0, 1], &[0], None, 1, 0);
+    }
+
+    #[test]
+    fn scatter_one_wr_per_peer() {
+        let entries: Vec<(u64, u64, u64)> =
+            (0..7).map(|i| (256, i * 256, 0x9000 + i * 4096)).collect();
+        let plans = plan_scatter(&entries, Some(3), 2, 0);
+        assert_eq!(plans.len(), 7);
+        assert!(plans.iter().all(|p| p.imm == Some(3)));
+        let on0 = plans.iter().filter(|p| p.nic == 0).count();
+        let on1 = plans.iter().filter(|p| p.nic == 1).count();
+        assert!(on0.abs_diff(on1) <= 1, "balanced across NICs");
+    }
+
+    #[test]
+    fn zero_fanout_guard() {
+        let r = std::panic::catch_unwind(|| plan_single_write(10, 0, 0, None, 0, 0));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! Hand-rolled binary wire format for descriptors and control
+//! messages.
+//!
+//! `NetAddr` and `MrDesc` must be serializable so peers can exchange
+//! them out-of-band (paper Fig 2 marks both `#[serde]`); the KvCache
+//! app also ships a `DispatchReq` over SEND/RECV. The format is a
+//! compact little-endian TLV-free layout with explicit counts and a
+//! magic/version prefix; golden tests pin the byte layout.
+
+use anyhow::{bail, Context, Result};
+
+use super::api::{MrDesc, NetAddr};
+use crate::fabric::nic::NicAddr;
+
+const MAGIC: u8 = 0xFB; // "fabric"
+const VERSION: u8 = 1;
+
+/// Growable little-endian encoder.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Start a message of the given type tag.
+    pub fn new(tag: u8) -> Self {
+        let mut e = Enc { buf: Vec::with_capacity(64) };
+        e.buf.extend_from_slice(&[MAGIC, VERSION, tag]);
+        e
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u16(&mut self, v: u16) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    pub fn nic(&mut self, a: NicAddr) -> &mut Self {
+        self.buf.extend_from_slice(&a.pack());
+        self
+    }
+
+    /// Finish, returning the encoded bytes.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Checked little-endian decoder.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Open a message, validating magic/version and returning the tag.
+    pub fn open(buf: &'a [u8]) -> Result<(u8, Dec<'a>)> {
+        if buf.len() < 3 {
+            bail!("message too short: {} bytes", buf.len());
+        }
+        if buf[0] != MAGIC {
+            bail!("bad magic {:#x}", buf[0]);
+        }
+        if buf[1] != VERSION {
+            bail!("unsupported wire version {}", buf[1]);
+        }
+        Ok((buf[2], Dec { buf, pos: 3 }))
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated message: need {} bytes at {}, have {}",
+                n,
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn nic(&mut self) -> Result<NicAddr> {
+        Ok(NicAddr::unpack(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Assert the message is fully consumed.
+    pub fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+/// Message tags.
+pub mod tag {
+    pub const NET_ADDR: u8 = 1;
+    pub const MR_DESC: u8 = 2;
+    pub const KV_DISPATCH: u8 = 3;
+    pub const KV_CANCEL: u8 = 4;
+    pub const KV_CANCEL_ACK: u8 = 5;
+    pub const HEARTBEAT: u8 = 6;
+}
+
+/// Serialize a `NetAddr`.
+pub fn encode_net_addr(a: &NetAddr) -> Vec<u8> {
+    let mut e = Enc::new(tag::NET_ADDR);
+    e.u8(a.nics.len() as u8);
+    for &n in &a.nics {
+        e.nic(n);
+    }
+    e.finish()
+}
+
+/// Deserialize a `NetAddr`.
+pub fn decode_net_addr(buf: &[u8]) -> Result<NetAddr> {
+    let (t, mut d) = Dec::open(buf)?;
+    if t != tag::NET_ADDR {
+        bail!("expected NET_ADDR, got tag {t}");
+    }
+    let n = d.u8()? as usize;
+    let mut nics = Vec::with_capacity(n);
+    for _ in 0..n {
+        nics.push(d.nic()?);
+    }
+    d.done()?;
+    if nics.is_empty() {
+        bail!("NetAddr with zero NICs");
+    }
+    Ok(NetAddr { nics })
+}
+
+/// Serialize an `MrDesc`.
+pub fn encode_mr_desc(m: &MrDesc) -> Vec<u8> {
+    let mut e = Enc::new(tag::MR_DESC);
+    e.u64(m.ptr).u64(m.len).u8(m.rkeys.len() as u8);
+    for &(nic, rkey) in &m.rkeys {
+        e.nic(nic).u64(rkey);
+    }
+    e.finish()
+}
+
+/// Deserialize an `MrDesc`.
+pub fn decode_mr_desc(buf: &[u8]) -> Result<MrDesc> {
+    let (t, mut d) = Dec::open(buf)?;
+    if t != tag::MR_DESC {
+        bail!("expected MR_DESC, got tag {t}");
+    }
+    let ptr = d.u64()?;
+    let len = d.u64()?;
+    let n = d.u8()? as usize;
+    let mut rkeys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let nic = d.nic()?;
+        let rkey = d.u64().context("rkey")?;
+        rkeys.push((nic, rkey));
+    }
+    d.done()?;
+    Ok(MrDesc { ptr, len, rkeys })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nic(node: u16, gpu: u8, x: u8) -> NicAddr {
+        NicAddr { node, gpu, nic: x }
+    }
+
+    #[test]
+    fn net_addr_roundtrip() {
+        let a = NetAddr {
+            nics: vec![nic(3, 1, 0), nic(3, 1, 1)],
+        };
+        let bytes = encode_net_addr(&a);
+        assert_eq!(decode_net_addr(&bytes).unwrap(), a);
+    }
+
+    #[test]
+    fn net_addr_golden_bytes() {
+        let a = NetAddr { nics: vec![nic(0x0102, 7, 1)] };
+        assert_eq!(
+            encode_net_addr(&a),
+            vec![0xFB, 1, tag::NET_ADDR, 1, 0x02, 0x01, 7, 1]
+        );
+    }
+
+    #[test]
+    fn mr_desc_roundtrip() {
+        let m = MrDesc {
+            ptr: 0xDEAD_BEEF_0000,
+            len: 1 << 30,
+            rkeys: vec![(nic(1, 0, 0), 42), (nic(1, 0, 1), 43)],
+        };
+        let bytes = encode_mr_desc(&m);
+        assert_eq!(decode_mr_desc(&bytes).unwrap(), m);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_tag() {
+        assert!(decode_net_addr(&[0x00, 1, 1, 0]).is_err());
+        assert!(decode_net_addr(&[0xFB, 9, 1, 0]).is_err());
+        // Valid NET_ADDR bytes presented as MR_DESC:
+        let a = NetAddr { nics: vec![nic(0, 0, 0)] };
+        assert!(decode_mr_desc(&encode_net_addr(&a)).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let a = NetAddr { nics: vec![nic(1, 2, 3)] };
+        let bytes = encode_net_addr(&a);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_net_addr(&bytes[..cut]).is_err(),
+                "truncation at {cut} must fail"
+            );
+        }
+        let mut extended = bytes.clone();
+        extended.push(0);
+        assert!(decode_net_addr(&extended).is_err(), "trailing bytes must fail");
+    }
+
+    #[test]
+    fn rejects_zero_nic_netaddr() {
+        let e = {
+            let mut e = Enc::new(tag::NET_ADDR);
+            e.u8(0);
+            e.finish()
+        };
+        assert!(decode_net_addr(&e).is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Simulated GPU: streams, kernel timing, UVM watch words, GDRCopy
+//! visibility, and the intra-node NVLink fabric.
+//!
+//! The engine and the MoE/KvCache apps interact with GPUs exactly the
+//! way the paper's do: they launch kernels (whose runtimes follow an
+//! HBM roofline), watch UVM words for GPU-side progress (visible to the
+//! CPU only after a PCIe delay — GDRCopy semantics), and move intra-node
+//! payloads over NVLink with store/flag synchronization.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::profile::GpuProfile;
+use super::topology::DeviceId;
+use crate::sim::time::{Duration, Instant};
+use crate::sim::Sim;
+
+/// A UVM word: written by device-side code at virtual times, observed
+/// by the CPU with PCIe visibility delay (GDRCopy-style polling).
+#[derive(Clone, Default)]
+pub struct UvmWord {
+    hist: Rc<RefCell<Vec<(Instant, u64)>>>,
+}
+
+impl UvmWord {
+    /// New word, initial value 0 at t=0.
+    pub fn new() -> Self {
+        UvmWord {
+            hist: Rc::new(RefCell::new(vec![(0, 0)])),
+        }
+    }
+
+    /// Device-side write of `value` at time `at`.
+    ///
+    /// Writes must be appended in nondecreasing time order (device
+    /// streams are ordered); out-of-order appends panic.
+    pub fn write_at(&self, at: Instant, value: u64) {
+        let mut h = self.hist.borrow_mut();
+        if let Some(&(t, _)) = h.last() {
+            assert!(at >= t, "UVM writes must be time-ordered ({at} < {t})");
+        }
+        h.push((at, value));
+    }
+
+    /// Device-side increment at time `at`; returns the new value.
+    pub fn inc_at(&self, at: Instant, by: u64) -> u64 {
+        let cur = self.hist.borrow().last().unwrap().1;
+        let new = cur + by;
+        self.write_at(at, new);
+        new
+    }
+
+    /// CPU-side read at time `now` with PCIe visibility delay
+    /// `pcie_ns`: returns the newest value written at or before
+    /// `now - pcie_ns`.
+    pub fn read_visible(&self, now: Instant, pcie_ns: Duration) -> u64 {
+        let cutoff = now.saturating_sub(pcie_ns);
+        let h = self.hist.borrow();
+        h.iter()
+            .rev()
+            .find(|&&(t, _)| t <= cutoff)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
+
+    /// Latest device-side value regardless of visibility (device-side
+    /// reads).
+    pub fn device_value(&self) -> u64 {
+        self.hist.borrow().last().unwrap().1
+    }
+}
+
+struct GpuState {
+    profile: GpuProfile,
+    /// Per-stream availability (in-order execution within a stream).
+    streams: HashMap<u32, Instant>,
+}
+
+/// One simulated GPU.
+#[derive(Clone)]
+pub struct GpuSim {
+    id: DeviceId,
+    state: Rc<RefCell<GpuState>>,
+}
+
+impl GpuSim {
+    /// Create a GPU with the given profile.
+    pub fn new(id: DeviceId, profile: GpuProfile) -> Self {
+        GpuSim {
+            id,
+            state: Rc::new(RefCell::new(GpuState {
+                profile,
+                streams: HashMap::new(),
+            })),
+        }
+    }
+
+    /// Device identity.
+    pub fn id(&self) -> DeviceId {
+        self.id
+    }
+
+    /// Timing profile.
+    pub fn profile(&self) -> GpuProfile {
+        self.state.borrow().profile.clone()
+    }
+
+    /// Enqueue a kernel of `duration` on `stream`; `on_done(sim, end)`
+    /// fires at completion. Returns the scheduled (start, end).
+    ///
+    /// `graph_launch` skips the host launch overhead (CUDA-graph
+    /// captured kernels, which the KvCache path relies on).
+    pub fn launch(
+        &self,
+        sim: &mut Sim,
+        stream: u32,
+        duration: Duration,
+        graph_launch: bool,
+        on_done: impl FnOnce(&mut Sim, Instant) + 'static,
+    ) -> (Instant, Instant) {
+        let (start, end) = {
+            let mut s = self.state.borrow_mut();
+            let launch = if graph_launch { 0 } else { s.profile.launch_ns };
+            let free = s.streams.entry(stream).or_insert(0);
+            let start = (sim.now() + launch).max(*free);
+            let end = start + duration;
+            *free = end;
+            (start, end)
+        };
+        sim.at(end, move |s| on_done(s, end));
+        (start, end)
+    }
+
+    /// Convenience: HBM-roofline kernel moving `bytes` through HBM.
+    pub fn launch_hbm(
+        &self,
+        sim: &mut Sim,
+        stream: u32,
+        bytes: u64,
+        graph_launch: bool,
+        on_done: impl FnOnce(&mut Sim, Instant) + 'static,
+    ) -> (Instant, Instant) {
+        let d = self.profile().hbm_ns(bytes);
+        self.launch(sim, stream, d, graph_launch, on_done)
+    }
+
+    /// Time when `stream` becomes idle.
+    pub fn stream_free(&self, stream: u32) -> Instant {
+        *self.state.borrow().streams.get(&stream).unwrap_or(&0)
+    }
+}
+
+/// Intra-node NVLink fabric: point-to-point serialized links between
+/// GPU pairs, plus release/acquire flag words.
+///
+/// The paper's kernels push payloads (stores are fire-and-forget) and
+/// synchronize via flags; loads from peers stall. We model the
+/// bandwidth/latency of pushes and expose flag words with the same
+/// visibility rule as UVM (but NVLink latency, not PCIe).
+#[derive(Clone, Default)]
+pub struct NvlinkFabric {
+    /// (src_gpu, dst_gpu) -> link availability.
+    links: Rc<RefCell<HashMap<(u8, u8), Instant>>>,
+}
+
+impl NvlinkFabric {
+    /// Fresh fabric (one per node).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Push `bytes` from `src` to `dst`; returns the completion time
+    /// (stores visible at the peer).
+    pub fn push(
+        &self,
+        sim: &Sim,
+        profile: &GpuProfile,
+        src: u8,
+        dst: u8,
+        bytes: u64,
+    ) -> Instant {
+        let mut links = self.links.borrow_mut();
+        let free = links.entry((src, dst)).or_insert(0);
+        let start = sim.now().max(*free);
+        let end = start + profile.nvlink_transfer_ns(bytes);
+        *free = end;
+        end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::topology::DeviceId;
+    use crate::sim::time::US;
+
+    fn gpu() -> GpuSim {
+        GpuSim::new(DeviceId { node: 0, gpu: 0 }, GpuProfile::h100())
+    }
+
+    #[test]
+    fn uvm_visibility_delay() {
+        let w = UvmWord::new();
+        w.write_at(1000, 1);
+        w.write_at(2000, 2);
+        // Before any write is visible.
+        assert_eq!(w.read_visible(500, 2000), 0);
+        // First write visible only after +pcie.
+        assert_eq!(w.read_visible(2999, 2000), 0);
+        assert_eq!(w.read_visible(3000, 2000), 1);
+        assert_eq!(w.read_visible(4000, 2000), 2);
+        // Device sees its own writes immediately.
+        assert_eq!(w.device_value(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "time-ordered")]
+    fn uvm_rejects_time_travel() {
+        let w = UvmWord::new();
+        w.write_at(100, 1);
+        w.write_at(50, 2);
+    }
+
+    #[test]
+    fn kernels_serialize_per_stream() {
+        let g = gpu();
+        let mut sim = Sim::new();
+        let mut ends = Vec::new();
+        let (s1, e1) = g.launch(&mut sim, 0, 10 * US, true, |_, _| {});
+        let (s2, e2) = g.launch(&mut sim, 0, 5 * US, true, |_, _| {});
+        ends.push((s1, e1, s2, e2));
+        assert_eq!(s1, 0);
+        assert_eq!(e1, 10 * US);
+        assert_eq!(s2, e1, "same stream is in-order");
+        assert_eq!(e2, 15 * US);
+        // Different stream runs concurrently.
+        let (s3, _) = g.launch(&mut sim, 1, 5 * US, true, |_, _| {});
+        assert_eq!(s3, 0);
+        sim.run();
+    }
+
+    #[test]
+    fn launch_overhead_outside_graphs() {
+        let g = gpu();
+        let mut sim = Sim::new();
+        let (start, _) = g.launch(&mut sim, 0, 1000, false, |_, _| {});
+        assert_eq!(start, g.profile().launch_ns);
+        sim.run();
+    }
+
+    #[test]
+    fn nvlink_serializes_per_link() {
+        let nv = NvlinkFabric::new();
+        let sim = Sim::new();
+        let p = GpuProfile::h100();
+        let t1 = nv.push(&sim, &p, 0, 1, 450_000); // ~1.55 µs
+        let t2 = nv.push(&sim, &p, 0, 1, 450_000);
+        assert!(t2 >= t1 + 1000, "same link serializes");
+        let t3 = nv.push(&sim, &p, 0, 2, 450_000);
+        assert!(t3 < t2, "different link is independent");
+    }
+}

@@ -1,0 +1,35 @@
+//! Simulated RDMA fabric substrate.
+//!
+//! This module rebuilds, in simulation, every piece of hardware the
+//! paper's TransferEngine talks to:
+//!
+//! * NICs with send/completion queues, work-request posting and
+//!   doorbells ([`nic`]);
+//! * the two transport families the paper bridges: ConnectX-style
+//!   **RC** (reliable, connection-oriented, in-order) and EFA-style
+//!   **SRD** (reliable, connectionless, out-of-order, packet-sprayed)
+//!   ([`profile`], [`simnet`]);
+//! * registered memory regions with rkeys and DMA semantics ([`mem`]);
+//! * GPUs: device memory, kernel timing, UVM watch words, GDRCopy,
+//!   NVLink ([`gpu`]);
+//! * cluster topology: nodes × GPUs × NICs ([`topology`]).
+//!
+//! The contract exposed upward is exactly the verbs-level contract the
+//! real library consumes: post a work request, poll a completion queue.
+//! The keystone invariant — a WRITEIMM's payload commits to target
+//! memory *before* its immediate completion is observable (PCIe
+//! ordering, §3.3 of the paper) — is enforced by construction in the
+//! event schedule and checked by tests.
+
+pub mod local;
+pub mod mem;
+pub mod nic;
+pub mod profile;
+pub mod simnet;
+pub mod topology;
+pub mod gpu;
+
+pub use mem::{DmaBuf, DmaSlice, MemRegistry, RKey};
+pub use nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
+pub use profile::{GpuProfile, NicProfile, TransportKind};
+pub use topology::{ClusterSpec, DeviceId, NicId};

@@ -1,0 +1,198 @@
+//! Verbs-level vocabulary: NIC addresses, queue pairs, work requests
+//! and completion queue entries.
+//!
+//! This is the contract boundary between the TransferEngine (which only
+//! posts WRs and polls CQs, like the real library does through
+//! libibverbs/libfabric) and the simulated hardware underneath.
+
+use super::mem::{DmaSlice, RKey};
+
+/// Physical address of one NIC port: node × GPU × NIC index.
+///
+/// Serialized inside `NetAddr`s exchanged between peers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NicAddr {
+    pub node: u16,
+    pub gpu: u8,
+    pub nic: u8,
+}
+
+impl NicAddr {
+    /// Pack into 4 bytes for the wire format.
+    pub fn pack(&self) -> [u8; 4] {
+        let n = self.node.to_le_bytes();
+        [n[0], n[1], self.gpu, self.nic]
+    }
+
+    /// Unpack from 4 bytes.
+    pub fn unpack(b: [u8; 4]) -> Self {
+        NicAddr {
+            node: u16::from_le_bytes([b[0], b[1]]),
+            gpu: b[2],
+            nic: b[3],
+        }
+    }
+
+    /// True when both NICs sit in the same node (NVLink reachable).
+    pub fn same_node(&self, other: &NicAddr) -> bool {
+        self.node == other.node
+    }
+}
+
+impl std::fmt::Display for NicAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}g{}x{}", self.node, self.gpu, self.nic)
+    }
+}
+
+/// Queue-pair identifier, scoped to a NIC.
+///
+/// The ConnectX domain creates two RC QPs per peer — one for two-sided
+/// SEND/RECV, one for one-sided WRITE/WRITEIMM — because both RECV and
+/// WRITEIMM completions consume work requests in posting order (§3.5).
+/// SRD is connectionless; the QP id is still used to key such posting
+/// bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QpId(pub u32);
+
+/// QP channel class: mirrors the paper's two-QP-per-peer split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QpClass {
+    /// Two-sided SEND/RECV traffic.
+    SendRecv,
+    /// One-sided WRITE / WRITEIMM traffic.
+    Write,
+}
+
+/// One work request, as posted to a NIC send (or recv) queue.
+#[derive(Debug, Clone)]
+pub struct WorkRequest {
+    /// Caller-chosen id returned in the matching CQE.
+    pub id: u64,
+    /// Queue pair this WR is posted on.
+    pub qp: QpId,
+    pub op: WrOp,
+    /// True when this WR is chained onto the previous one (shares its
+    /// doorbell; RC only, §3.5 WR chaining).
+    pub chained: bool,
+}
+
+/// Work request operations. READ and atomics are deliberately absent:
+/// fabric-lib's contract (paper Table 1) excludes them.
+#[derive(Debug, Clone)]
+pub enum WrOp {
+    /// Two-sided send of a small payload to the peer's posted RECV.
+    Send { dst: NicAddr, payload: Vec<u8> },
+    /// Post a receive buffer for incoming SENDs.
+    Recv { buf: DmaSlice },
+    /// One-sided write of `src` into `(dst_rkey, dst_va)` on the peer,
+    /// optionally delivering a 32-bit immediate.
+    Write {
+        dst: NicAddr,
+        dst_rkey: RKey,
+        dst_va: u64,
+        src: DmaSlice,
+        imm: Option<u32>,
+    },
+}
+
+impl WrOp {
+    /// Payload size in bytes.
+    pub fn len(&self) -> usize {
+        match self {
+            WrOp::Send { payload, .. } => payload.len(),
+            WrOp::Recv { buf } => buf.len,
+            WrOp::Write { src, .. } => src.len,
+        }
+    }
+
+    /// True for zero-length operations (immediate-only writes).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Destination NIC for outgoing ops; `None` for RECV postings.
+    pub fn dst(&self) -> Option<NicAddr> {
+        match self {
+            WrOp::Send { dst, .. } | WrOp::Write { dst, .. } => Some(*dst),
+            WrOp::Recv { .. } => None,
+        }
+    }
+}
+
+/// Completion queue entry.
+#[derive(Debug, Clone)]
+pub struct Cqe {
+    /// The `WorkRequest::id` this completion refers to. For
+    /// receiver-side imm completions this is the id of the consumed
+    /// RECV WQE (RC) or 0 (SRD, no WQE consumed in our model).
+    pub wr_id: u64,
+    pub kind: CqeKind,
+}
+
+/// Completion kinds, split by which side observes them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CqeKind {
+    /// Sender: SEND delivered (buffer reusable).
+    SendDone,
+    /// Sender: WRITE fully acknowledged by the peer NIC.
+    WriteDone,
+    /// Receiver: a SEND landed in the posted buffer identified by
+    /// `wr_id`, carrying `len` bytes from `src`.
+    RecvDone { len: u32, src: NicAddr },
+    /// Receiver: a WRITEIMM's payload is fully in memory and its
+    /// immediate is now visible. The fabric guarantees the payload DMA
+    /// committed *before* this CQE exists (PCIe ordering invariant).
+    ImmRecvd { imm: u32, len: u32, src: NicAddr },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::mem::DmaBuf;
+
+    #[test]
+    fn nic_addr_pack_roundtrip() {
+        let a = NicAddr {
+            node: 513,
+            gpu: 7,
+            nic: 3,
+        };
+        assert_eq!(NicAddr::unpack(a.pack()), a);
+        assert_eq!(format!("{a}"), "n513g7x3");
+    }
+
+    #[test]
+    fn same_node_detection() {
+        let a = NicAddr { node: 1, gpu: 0, nic: 0 };
+        let b = NicAddr { node: 1, gpu: 5, nic: 1 };
+        let c = NicAddr { node: 2, gpu: 0, nic: 0 };
+        assert!(a.same_node(&b));
+        assert!(!a.same_node(&c));
+    }
+
+    #[test]
+    fn wr_op_lengths() {
+        let buf = DmaBuf::new(0, 64);
+        let dst = NicAddr { node: 0, gpu: 0, nic: 0 };
+        let send = WrOp::Send {
+            dst,
+            payload: vec![0; 10],
+        };
+        assert_eq!(send.len(), 10);
+        assert_eq!(send.dst(), Some(dst));
+        let write = WrOp::Write {
+            dst,
+            dst_rkey: RKey(1),
+            dst_va: 0,
+            src: DmaSlice::new(&buf, 8, 0),
+            imm: Some(7),
+        };
+        assert!(write.is_empty());
+        let recv = WrOp::Recv {
+            buf: DmaSlice::whole(&buf),
+        };
+        assert_eq!(recv.len(), 64);
+        assert_eq!(recv.dst(), None);
+    }
+}

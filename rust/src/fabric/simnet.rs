@@ -1,0 +1,839 @@
+//! Discrete-event simulated fabric: NIC pipelines, wire, transports.
+//!
+//! Timing model (calibrated in [`super::profile`]):
+//!
+//! ```text
+//! post ──► WQE pipeline ──► TX serializer ──► wire(+jitter) ──► RX serializer ──► commit
+//!          (wr_process)      (len/rate)        (base lat)        (len/rate,        │
+//!                                                                 incast queue)    ├─► DMA payload copy
+//!                                                                                  ├─► receiver CQE (imm / recv)
+//!                                                                                  └─► +wire: sender CQE (ack)
+//! ```
+//!
+//! * **RC** (ConnectX): one serialization unit per message; delivery
+//!   per-QP **in-order** (a message never commits before an earlier one
+//!   on the same QP).
+//! * **SRD** (EFA): messages are packetized at MTU and sprayed — each
+//!   packet takes independent wire jitter, so messages commit
+//!   **out of order**; a message commits when its last packet lands.
+//!
+//! The PCIe ordering invariant (payload before immediate) holds by
+//! construction: the payload DMA copy executes in the same event that
+//! enqueues the receiver's imm CQE, before it.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+use super::mem::{DmaSlice, MemRegistry};
+use super::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
+use super::profile::NicProfile;
+use crate::sim::time::Instant;
+use crate::sim::{Rng, Sim};
+
+/// Cap on per-message packet events: very large messages are modeled in
+/// fewer, larger chunks to bound event counts (ordering statistics are
+/// preserved; serialization time is identical).
+const MAX_CHUNKS: usize = 32;
+
+/// Per-NIC simulator state.
+struct NicState {
+    profile: NicProfile,
+    /// WQE-processing pipeline availability.
+    pipe_free: Instant,
+    /// TX link availability.
+    tx_free: Instant,
+    /// RX link availability (incast serialization).
+    rx_free: Instant,
+    /// WRs in flight (posted, sender CQE not yet generated).
+    inflight: usize,
+    /// Completion queue.
+    cq: VecDeque<Cqe>,
+    /// Posted receive buffers: (wr_id, buffer).
+    recvs: VecDeque<(u64, DmaSlice)>,
+    /// SENDs that arrived before a RECV was posted (RNR queue).
+    pending_sends: VecDeque<(Vec<u8>, NicAddr)>,
+    /// Sender-side RC sequence counters per (QP class, destination) —
+    /// mirroring one RC connection per peer per class (§3.5).
+    qp_tx_seq: HashMap<(QpId, NicAddr), u64>,
+    /// Receiver-side RC in-order state per (source NIC, QP).
+    qp_rx: HashMap<(NicAddr, QpId), QpRx>,
+    /// Totals for utilization reports.
+    bytes_tx: u64,
+    bytes_rx: u64,
+}
+
+impl NicState {
+    fn new(profile: NicProfile) -> Self {
+        NicState {
+            profile,
+            pipe_free: 0,
+            tx_free: 0,
+            rx_free: 0,
+            inflight: 0,
+            cq: VecDeque::new(),
+            recvs: VecDeque::new(),
+            pending_sends: VecDeque::new(),
+            qp_tx_seq: HashMap::new(),
+            qp_rx: HashMap::new(),
+            bytes_tx: 0,
+            bytes_rx: 0,
+        }
+    }
+}
+
+/// In-flight message bookkeeping shared by its chunk-arrival events.
+struct MsgProgress {
+    remaining: usize,
+    last_end: Instant,
+    op: Option<WrOp>,
+}
+
+/// A ready RC message waiting for its per-QP predecessors.
+struct PendingRc {
+    ready_at: Instant,
+    wr_id: u64,
+    op: WrOp,
+    wire_back: Instant,
+    ack_kind: CqeKind,
+}
+
+/// Receiver-side per-(source, QP) in-order state.
+#[derive(Default)]
+struct QpRx {
+    next_seq: u64,
+    last_commit: Instant,
+    waiting: HashMap<u64, PendingRc>,
+}
+
+struct State {
+    nics: HashMap<NicAddr, NicState>,
+    mem: MemRegistry,
+    rng: Rng,
+    /// Completion notification hooks: called (deferred) after CQEs are
+    /// pushed to a NIC's CQ. The DES TransferEngine registers its
+    /// domain-progress function here; this stands in for the worker
+    /// thread noticing completions on its next poll iteration without
+    /// simulating millions of idle poll events.
+    cq_hooks: HashMap<NicAddr, Rc<dyn Fn(&mut Sim)>>,
+}
+
+/// The simulated fabric. Clone freely; all clones share state.
+#[derive(Clone)]
+pub struct SimNet {
+    state: Rc<RefCell<State>>,
+}
+
+impl SimNet {
+    /// Create an empty fabric with a seeded RNG.
+    pub fn new(seed: u64) -> Self {
+        SimNet {
+            state: Rc::new(RefCell::new(State {
+                nics: HashMap::new(),
+                mem: MemRegistry::new(),
+                rng: Rng::new(seed),
+                cq_hooks: HashMap::new(),
+            })),
+        }
+    }
+
+    /// Install a NIC at `addr` with the given profile.
+    pub fn add_nic(&self, addr: NicAddr, profile: NicProfile) {
+        self.state
+            .borrow_mut()
+            .nics
+            .insert(addr, NicState::new(profile));
+    }
+
+    /// The shared memory registry (translation/protection table).
+    pub fn mem(&self) -> MemRegistry {
+        self.state.borrow().mem.clone()
+    }
+
+    /// Profile of the NIC at `addr`.
+    pub fn profile(&self, addr: NicAddr) -> NicProfile {
+        self.state.borrow().nics[&addr].profile.clone()
+    }
+
+    /// Bytes transmitted / received by a NIC so far.
+    pub fn nic_bytes(&self, addr: NicAddr) -> (u64, u64) {
+        let s = self.state.borrow();
+        let n = &s.nics[&addr];
+        (n.bytes_tx, n.bytes_rx)
+    }
+
+    /// Outstanding WRs on a NIC (posted, not yet sender-completed).
+    pub fn inflight(&self, addr: NicAddr) -> usize {
+        self.state.borrow().nics[&addr].inflight
+    }
+
+    /// Send-queue headroom: how many more WRs `addr` can accept.
+    pub fn sq_headroom(&self, addr: NicAddr) -> usize {
+        let s = self.state.borrow();
+        let n = &s.nics[&addr];
+        n.profile.sq_depth.saturating_sub(n.inflight)
+    }
+
+    /// Drain up to `max` CQEs from `addr`'s completion queue.
+    pub fn poll_cq(&self, addr: NicAddr, max: usize, out: &mut Vec<Cqe>) {
+        let mut s = self.state.borrow_mut();
+        let nic = s.nics.get_mut(&addr).expect("unknown NIC");
+        for _ in 0..max {
+            match nic.cq.pop_front() {
+                Some(cqe) => out.push(cqe),
+                None => break,
+            }
+        }
+    }
+
+    /// Register a completion hook for `addr` (see `State::cq_hooks`).
+    pub fn set_cq_hook(&self, addr: NicAddr, hook: Rc<dyn Fn(&mut Sim)>) {
+        self.state.borrow_mut().cq_hooks.insert(addr, hook);
+    }
+
+    /// Invoke `addr`'s completion hook, if any, as a deferred event.
+    fn notify(&self, sim: &mut Sim, addr: NicAddr) {
+        let hook = self.state.borrow().cq_hooks.get(&addr).cloned();
+        if let Some(h) = hook {
+            sim.defer(move |s| h(s));
+        }
+    }
+
+    /// Post a work request to `local`'s send (or recv) queue.
+    ///
+    /// Returns `false` when the send queue is full (back-pressure); the
+    /// caller keeps the WR pending, as the paper's worker loop does.
+    pub fn post(&self, sim: &mut Sim, local: NicAddr, wr: WorkRequest) -> bool {
+        match wr.op {
+            WrOp::Recv { ref buf } => {
+                self.post_recv(sim, local, wr.id, buf.clone());
+                true
+            }
+            WrOp::Send { .. } | WrOp::Write { .. } => self.post_outgoing(sim, local, wr),
+        }
+    }
+
+    fn post_recv(&self, sim: &mut Sim, local: NicAddr, wr_id: u64, buf: DmaSlice) {
+        let pending = {
+            let mut s = self.state.borrow_mut();
+            let nic = s.nics.get_mut(&local).expect("unknown NIC");
+            if let Some((payload, src)) = nic.pending_sends.pop_front() {
+                Some((payload, src))
+            } else {
+                nic.recvs.push_back((wr_id, buf.clone()));
+                None
+            }
+        };
+        // A send was already waiting (RNR): deliver into this buffer
+        // now.
+        if let Some((payload, src)) = pending {
+            let this = self.clone();
+            sim.defer(move |s| {
+                let len = payload.len() as u32;
+                buf.buf.write(buf.offset, &payload[..payload.len().min(buf.len)]);
+                {
+                    let mut st = this.state.borrow_mut();
+                    let nic = st.nics.get_mut(&local).unwrap();
+                    nic.cq.push_back(Cqe {
+                        wr_id,
+                        kind: CqeKind::RecvDone { len, src },
+                    });
+                }
+                this.notify(s, local);
+            });
+        }
+    }
+
+    fn post_outgoing(&self, sim: &mut Sim, local: NicAddr, wr: WorkRequest) -> bool {
+        let now = sim.now();
+        // --- sender side, computed at post time: SQ depth, WQE
+        // pipeline, TX serializer, per-chunk wire jitter ---
+        let (arrivals, dst, transport, wire_back, seq) = {
+            let mut s = self.state.borrow_mut();
+            let nic = s.nics.get_mut(&local).expect("unknown NIC");
+            if nic.inflight >= nic.profile.sq_depth {
+                return false;
+            }
+            nic.inflight += 1;
+            let prof = nic.profile.clone();
+            let len = wr.op.len();
+            let dst = wr.op.dst().expect("outgoing WR needs a destination");
+
+            let pipe_start = now.max(nic.pipe_free);
+            let ready = pipe_start + prof.wr_process_ns;
+            nic.pipe_free = ready;
+            nic.bytes_tx += len as u64;
+            // RC: per-(QP, peer) sequence number in posting order.
+            let dst_peek = wr.op.dst().expect("outgoing WR needs a destination");
+            let seq = if prof.transport == super::profile::TransportKind::Rc {
+                let c = nic.qp_tx_seq.entry((wr.qp, dst_peek)).or_insert(0);
+                let s = *c;
+                *c += 1;
+                s
+            } else {
+                0
+            };
+
+            // Chunking: SRD packetizes at MTU (sprayed, independent
+            // jitter); RC streams the message as one unit.
+            let chunks: Vec<usize> = if prof.transport == super::profile::TransportKind::Srd
+                && len > prof.mtu
+            {
+                let n = len.div_ceil(prof.mtu).min(MAX_CHUNKS);
+                let base = len / n;
+                let rem = len % n;
+                (0..n).map(|i| base + usize::from(i < rem)).collect()
+            } else {
+                vec![len]
+            };
+
+            // TX serialization per chunk; cut-through: the first byte
+            // of a chunk is on the wire at tx_start.
+            let mut arrivals = Vec::with_capacity(chunks.len());
+            for &c in &chunks {
+                let tx_start = ready.max(nic.tx_free);
+                let tx_end = tx_start + prof.serialize_ns(c);
+                nic.tx_free = tx_end;
+                arrivals.push((tx_start, c));
+            }
+            // Per-chunk independent wire jitter (path spray).
+            let wire = prof.wire_ns;
+            let arrivals: Vec<(Instant, usize)> = arrivals
+                .into_iter()
+                .map(|(t, c)| (t + wire + prof.wire_jitter.sample(&mut s.rng), c))
+                .collect();
+            (arrivals, dst, prof.transport, wire, seq)
+        };
+
+        // --- receiver side, booked per chunk at arrival time so that
+        // arrival order (not post order) wins the RX serializer ---
+        let wr_id = wr.id;
+        let qp = wr.qp;
+        let ack_kind = match wr.op {
+            WrOp::Send { .. } => CqeKind::SendDone,
+            WrOp::Write { .. } => CqeKind::WriteDone,
+            WrOp::Recv { .. } => unreachable!(),
+        };
+        let msg = Rc::new(RefCell::new(MsgProgress {
+            remaining: arrivals.len(),
+            last_end: 0,
+            op: Some(wr.op),
+        }));
+        for (arrive_at, chunk_len) in arrivals {
+            let this = self.clone();
+            let msg = msg.clone();
+            sim.at(arrive_at, move |sim| {
+                // Book the RX link now (arrival-ordered incast queue).
+                let c_end = {
+                    let mut s = this.state.borrow_mut();
+                    let dnic = s
+                        .nics
+                        .get_mut(&dst)
+                        .unwrap_or_else(|| panic!("unknown destination NIC {dst}"));
+                    let rx_start = sim.now().max(dnic.rx_free);
+                    let c_end = rx_start + dnic.profile.serialize_ns(chunk_len);
+                    dnic.rx_free = c_end;
+                    dnic.bytes_rx += chunk_len as u64;
+                    c_end
+                };
+                let done = {
+                    let mut m = msg.borrow_mut();
+                    m.remaining -= 1;
+                    m.last_end = m.last_end.max(c_end);
+                    m.remaining == 0
+                };
+                if !done {
+                    return;
+                }
+                // All chunks landed: the message is *ready* at the last
+                // chunk's end. SRD commits immediately (no ordering);
+                // RC commits strictly in per-QP posting order.
+                let ready_at = msg.borrow().last_end;
+                let op = msg.borrow_mut().op.take().unwrap();
+                if transport == super::profile::TransportKind::Srd {
+                    this.schedule_commit(sim, local, dst, wr_id, op, ready_at, wire_back, ack_kind);
+                } else {
+                    this.rc_sequenced_commit(
+                        sim, local, dst, qp, seq, wr_id, op, ready_at, wire_back, ack_kind,
+                    );
+                }
+            });
+        }
+        true
+    }
+
+    /// Schedule a message's commit (delivery + sender ack).
+    #[allow(clippy::too_many_arguments)]
+    fn schedule_commit(
+        &self,
+        sim: &mut Sim,
+        local: NicAddr,
+        dst: NicAddr,
+        wr_id: u64,
+        op: WrOp,
+        commit: Instant,
+        wire_back: Instant,
+        ack_kind: CqeKind,
+    ) {
+        let deliver_net = self.clone();
+        sim.at(commit, move |s| deliver_net.deliver(s, local, dst, wr_id, op));
+        let ack_net = self.clone();
+        sim.at(commit + wire_back, move |s| {
+            {
+                let mut st = ack_net.state.borrow_mut();
+                let nic = st.nics.get_mut(&local).unwrap();
+                nic.inflight -= 1;
+                nic.cq.push_back(Cqe { wr_id, kind: ack_kind });
+            }
+            ack_net.notify(s, local);
+        });
+    }
+
+    /// RC: commit strictly in per-QP posting order. A message whose
+    /// predecessors haven't committed waits; committing a message
+    /// drains any ready successors.
+    #[allow(clippy::too_many_arguments)]
+    fn rc_sequenced_commit(
+        &self,
+        sim: &mut Sim,
+        local: NicAddr,
+        dst: NicAddr,
+        qp: QpId,
+        seq: u64,
+        wr_id: u64,
+        op: WrOp,
+        ready_at: Instant,
+        wire_back: Instant,
+        ack_kind: CqeKind,
+    ) {
+        let mut to_commit: Vec<(u64, WrOp, Instant, CqeKind)> = Vec::new();
+        {
+            let mut s = self.state.borrow_mut();
+            let dnic = s.nics.get_mut(&dst).unwrap();
+            let rx = dnic.qp_rx.entry((local, qp)).or_default();
+            if seq != rx.next_seq {
+                rx.waiting.insert(
+                    seq,
+                    PendingRc { ready_at, wr_id, op, wire_back, ack_kind },
+                );
+                return;
+            }
+            // Commit this message, then drain consecutive successors.
+            let mut t = ready_at.max(rx.last_commit.saturating_add(1));
+            rx.last_commit = t;
+            rx.next_seq += 1;
+            to_commit.push((wr_id, op, t, ack_kind));
+            while let Some(p) = rx.waiting.remove(&rx.next_seq) {
+                t = p.ready_at.max(t.saturating_add(1));
+                rx.last_commit = t;
+                rx.next_seq += 1;
+                to_commit.push((p.wr_id, p.op, t, p.ack_kind));
+            }
+        }
+        for (id, op, commit, kind) in to_commit {
+            self.schedule_commit(sim, local, dst, id, op, commit, wire_back, kind);
+        }
+    }
+
+    /// Delivery event at `commit` time: DMA the payload, then expose
+    /// the completion — in that order (PCIe invariant).
+    fn deliver(&self, sim: &mut Sim, src: NicAddr, dst: NicAddr, _wr_id: u64, op: WrOp) {
+        {
+        let mut s = self.state.borrow_mut();
+        match op {
+            WrOp::Write {
+                dst_rkey,
+                dst_va,
+                src: src_slice,
+                imm,
+                ..
+            } => {
+                let len = src_slice.len;
+                // Resolve through the protection table. EFA requires a
+                // valid descriptor even for zero-sized writes; the
+                // engine enforces that before posting, so a failure
+                // here is a genuine remote protection fault.
+                if len > 0 {
+                    let (dbuf, off) = s
+                        .mem
+                        .resolve(dst_rkey, dst_va, len)
+                        .expect("remote protection fault: bad rkey/va in WRITE");
+                    // 1) payload DMA commits...
+                    src_slice.buf.copy_to(src_slice.offset, &dbuf, off, len);
+                } else if self.requires_desc_locked(&s, dst) {
+                    s.mem
+                        .resolve(dst_rkey, dst_va, 0)
+                        .expect("SRD: immediate-only WRITE needs a valid descriptor");
+                }
+                // 2) ...then the immediate becomes visible.
+                if let Some(imm) = imm {
+                    let nic = s.nics.get_mut(&dst).unwrap();
+                    nic.cq.push_back(Cqe {
+                        wr_id: 0,
+                        kind: CqeKind::ImmRecvd {
+                            imm,
+                            len: len as u32,
+                            src,
+                        },
+                    });
+                }
+            }
+            WrOp::Send { payload, .. } => {
+                let nic = s.nics.get_mut(&dst).unwrap();
+                if let Some((rid, rbuf)) = nic.recvs.pop_front() {
+                    let n = payload.len().min(rbuf.len);
+                    rbuf.buf.write(rbuf.offset, &payload[..n]);
+                    nic.cq.push_back(Cqe {
+                        wr_id: rid,
+                        kind: CqeKind::RecvDone {
+                            len: payload.len() as u32,
+                            src,
+                        },
+                    });
+                } else {
+                    // Receiver-not-ready: queue until a RECV is posted.
+                    nic.pending_sends.push_back((payload, src));
+                }
+            }
+            WrOp::Recv { .. } => unreachable!("RECV is not an outgoing op"),
+        }
+        }
+        self.notify(sim, dst);
+    }
+
+    fn requires_desc_locked(&self, s: &State, dst: NicAddr) -> bool {
+        s.nics[&dst].profile.imm_requires_desc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::mem::DmaBuf;
+    use crate::fabric::profile::NicProfile;
+    use crate::sim::time::US;
+
+    fn pair(profile: fn() -> NicProfile) -> (SimNet, Sim, NicAddr, NicAddr) {
+        let net = SimNet::new(42);
+        let a = NicAddr { node: 0, gpu: 0, nic: 0 };
+        let b = NicAddr { node: 1, gpu: 0, nic: 0 };
+        net.add_nic(a, profile());
+        net.add_nic(b, profile());
+        (net, Sim::new(), a, b)
+    }
+
+    fn write_wr(id: u64, dst: NicAddr, src: DmaSlice, rkey: RKey, va: u64, imm: Option<u32>) -> WorkRequest {
+        WorkRequest {
+            id,
+            qp: QpId(1),
+            op: WrOp::Write {
+                dst,
+                dst_rkey: rkey,
+                dst_va: va,
+                src,
+                imm,
+            },
+            chained: false,
+        }
+    }
+
+    use crate::fabric::mem::RKey;
+
+    #[test]
+    fn write_moves_bytes_and_delivers_imm() {
+        let (net, mut sim, a, b) = pair(NicProfile::connectx7);
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(1024);
+        let (dbuf, drkey) = mem.alloc(1024);
+        sbuf.write(0, b"fabric-lib payload");
+
+        let wr = write_wr(7, b, DmaSlice::new(&sbuf, 0, 18), drkey, dbuf.base(), Some(99));
+        assert!(net.post(&mut sim, a, wr));
+        sim.run();
+
+        assert_eq!(&dbuf.to_vec()[..18], b"fabric-lib payload");
+        let mut cq = Vec::new();
+        net.poll_cq(b, 16, &mut cq);
+        assert_eq!(cq.len(), 1);
+        assert!(matches!(
+            cq[0].kind,
+            CqeKind::ImmRecvd { imm: 99, len: 18, src } if src == a
+        ));
+        // Sender got its ack.
+        let mut scq = Vec::new();
+        net.poll_cq(a, 16, &mut scq);
+        assert_eq!(scq.len(), 1);
+        assert_eq!(net.inflight(a), 0);
+    }
+
+    #[test]
+    fn send_recv_with_posted_buffer() {
+        let (net, mut sim, a, b) = pair(NicProfile::connectx7);
+        let rbuf = DmaBuf::new(0x9000, 64);
+        net.post(
+            &mut sim,
+            b,
+            WorkRequest {
+                id: 11,
+                qp: QpId(0),
+                op: WrOp::Recv {
+                    buf: DmaSlice::whole(&rbuf),
+                },
+                chained: false,
+            },
+        );
+        net.post(
+            &mut sim,
+            a,
+            WorkRequest {
+                id: 12,
+                qp: QpId(0),
+                op: WrOp::Send {
+                    dst: b,
+                    payload: b"rpc!".to_vec(),
+                },
+                chained: false,
+            },
+        );
+        sim.run();
+        let mut cq = Vec::new();
+        net.poll_cq(b, 16, &mut cq);
+        assert_eq!(cq.len(), 1);
+        assert_eq!(cq[0].wr_id, 11);
+        assert!(matches!(cq[0].kind, CqeKind::RecvDone { len: 4, .. }));
+        assert_eq!(&rbuf.to_vec()[..4], b"rpc!");
+    }
+
+    #[test]
+    fn send_before_recv_is_queued_rnr() {
+        let (net, mut sim, a, b) = pair(NicProfile::efa);
+        net.post(
+            &mut sim,
+            a,
+            WorkRequest {
+                id: 1,
+                qp: QpId(0),
+                op: WrOp::Send {
+                    dst: b,
+                    payload: vec![5; 16],
+                },
+                chained: false,
+            },
+        );
+        sim.run();
+        let mut cq = Vec::new();
+        net.poll_cq(b, 16, &mut cq);
+        assert!(cq.is_empty(), "no recv posted yet");
+        // Post the recv afterwards: the queued send is delivered.
+        let rbuf = DmaBuf::new(0x9000, 64);
+        net.post(
+            &mut sim,
+            b,
+            WorkRequest {
+                id: 2,
+                qp: QpId(0),
+                op: WrOp::Recv {
+                    buf: DmaSlice::whole(&rbuf),
+                },
+                chained: false,
+            },
+        );
+        sim.run();
+        net.poll_cq(b, 16, &mut cq);
+        assert_eq!(cq.len(), 1);
+        assert_eq!(&rbuf.to_vec()[..16], &[5u8; 16]);
+    }
+
+    #[test]
+    fn rc_delivery_is_in_order_per_qp() {
+        let (net, mut sim, a, b) = pair(NicProfile::connectx7);
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(1 << 20);
+        let (dbuf, drkey) = mem.alloc(1 << 20);
+        // Post a large write then a tiny one on the same QP: the tiny
+        // one must not commit first.
+        net.post(
+            &mut sim,
+            a,
+            write_wr(1, b, DmaSlice::new(&sbuf, 0, 512 * 1024), drkey, dbuf.base(), Some(1)),
+        );
+        net.post(
+            &mut sim,
+            a,
+            write_wr(2, b, DmaSlice::new(&sbuf, 0, 8), drkey, dbuf.base(), Some(2)),
+        );
+        sim.run();
+        let mut cq = Vec::new();
+        net.poll_cq(b, 16, &mut cq);
+        let imms: Vec<u32> = cq
+            .iter()
+            .filter_map(|c| match c.kind {
+                CqeKind::ImmRecvd { imm, .. } => Some(imm),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(imms, vec![1, 2], "RC must deliver in posting order");
+    }
+
+    #[test]
+    fn srd_can_deliver_out_of_order() {
+        // EFA reaches 400 Gbps by aggregating multiple NICs; WRs posted
+        // on different NICs of the same GPU have independent pipelines,
+        // so a tiny message overtakes a large one posted earlier.
+        // This is precisely why the engine may assume no ordering.
+        let net = SimNet::new(7);
+        let a0 = NicAddr { node: 0, gpu: 0, nic: 0 };
+        let a1 = NicAddr { node: 0, gpu: 0, nic: 1 };
+        let b = NicAddr { node: 1, gpu: 0, nic: 0 };
+        for n in [a0, a1, b] {
+            net.add_nic(n, NicProfile::efa());
+        }
+        let mut sim = Sim::new();
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(4 << 20);
+        let (dbuf, drkey) = mem.alloc(4 << 20);
+        net.post(
+            &mut sim,
+            a0,
+            write_wr(1, b, DmaSlice::new(&sbuf, 0, 2 << 20), drkey, dbuf.base(), Some(1)),
+        );
+        net.post(
+            &mut sim,
+            a1,
+            write_wr(2, b, DmaSlice::new(&sbuf, 0, 8), drkey, dbuf.base(), Some(2)),
+        );
+        sim.run();
+        let mut cq = Vec::new();
+        net.poll_cq(b, 16, &mut cq);
+        let imms: Vec<u32> = cq
+            .iter()
+            .filter_map(|c| match c.kind {
+                CqeKind::ImmRecvd { imm, .. } => Some(imm),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(imms, vec![2, 1], "tiny SRD message should overtake the 2 MiB one");
+    }
+
+    #[test]
+    fn bandwidth_saturates_near_line_rate() {
+        let (net, mut sim, a, b) = pair(NicProfile::connectx7);
+        let mem = net.mem();
+        let total: usize = 64 << 20;
+        let msg: usize = 1 << 20;
+        let (sbuf, _) = mem.alloc(msg);
+        let (dbuf, drkey) = mem.alloc(msg);
+        for i in 0..(total / msg) {
+            net.post(
+                &mut sim,
+                a,
+                write_wr(i as u64, b, DmaSlice::new(&sbuf, 0, msg), drkey, dbuf.base(), None),
+            );
+        }
+        let end = sim.run();
+        let gbps = (total as f64 * 8.0) / end as f64;
+        assert!(gbps > 350.0 && gbps <= 400.5, "{gbps} Gbps");
+    }
+
+    #[test]
+    fn small_single_writes_underutilize_efa() {
+        // Table 2 shape: 64 KiB single writes reach only ~16 Gbps on
+        // EFA when issued serially (latency-bound).
+        let (net, mut sim, a, b) = pair(NicProfile::efa);
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(64 << 10);
+        let (dbuf, drkey) = mem.alloc(64 << 10);
+        // One at a time: post, run to completion, repeat.
+        let mut total_ns = 0u64;
+        for i in 0..8 {
+            let t0 = sim.now();
+            net.post(
+                &mut sim,
+                a,
+                write_wr(i, b, DmaSlice::new(&sbuf, 0, 64 << 10), drkey, dbuf.base(), Some(1)),
+            );
+            sim.run();
+            total_ns += sim.now() - t0;
+        }
+        let gbps = (8.0 * (64 << 10) as f64 * 8.0) / total_ns as f64;
+        assert!(gbps < 80.0, "serial small writes must be latency-bound, got {gbps}");
+    }
+
+    #[test]
+    fn sq_depth_backpressure() {
+        let (net, mut sim, a, b) = pair(NicProfile::connectx7);
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(64);
+        let (dbuf, drkey) = mem.alloc(64);
+        let mut accepted = 0;
+        for i in 0..5000 {
+            if net.post(
+                &mut sim,
+                a,
+                write_wr(i, b, DmaSlice::new(&sbuf, 0, 64), drkey, dbuf.base(), None),
+            ) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 1024, "SQ depth must bound in-flight WRs");
+        sim.run();
+        assert_eq!(net.sq_headroom(a), 1024);
+    }
+
+    #[test]
+    fn zero_len_imm_requires_desc_on_efa_only() {
+        // RC: immediate-only write with a bogus rkey is fine.
+        let (net, mut sim, a, b) = pair(NicProfile::connectx7);
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(16);
+        net.post(
+            &mut sim,
+            a,
+            write_wr(1, b, DmaSlice::new(&sbuf, 0, 0), RKey(0xdead), 0, Some(3)),
+        );
+        sim.run();
+        let mut cq = Vec::new();
+        net.poll_cq(b, 4, &mut cq);
+        assert_eq!(cq.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "valid descriptor")]
+    fn zero_len_imm_faults_on_efa_without_desc() {
+        let (net, mut sim, a, b) = pair(NicProfile::efa);
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(16);
+        net.post(
+            &mut sim,
+            a,
+            write_wr(1, b, DmaSlice::new(&sbuf, 0, 0), RKey(0xdead), 0, Some(3)),
+        );
+        sim.run();
+    }
+
+    #[test]
+    fn incast_serializes_at_receiver() {
+        // 4 senders × 1 MiB into one receiver: total time ≥ 4 × the
+        // single-sender serialization time.
+        let net = SimNet::new(1);
+        let dst = NicAddr { node: 9, gpu: 0, nic: 0 };
+        net.add_nic(dst, NicProfile::connectx7());
+        let mem = net.mem();
+        let (dbuf, drkey) = mem.alloc(1 << 20);
+        let mut sim = Sim::new();
+        for i in 0..4u16 {
+            let src = NicAddr { node: i, gpu: 0, nic: 0 };
+            net.add_nic(src, NicProfile::connectx7());
+            let (sbuf, _) = mem.alloc(1 << 20);
+            net.post(
+                &mut sim,
+                src,
+                write_wr(i as u64, dst, DmaSlice::new(&sbuf, 0, 1 << 20), drkey, dbuf.base(), None),
+            );
+        }
+        let end = sim.run();
+        // 4 MiB at 50 B/ns ≈ 84 µs serialization minimum.
+        assert!(end >= 83 * US, "incast must serialize: {end} ns");
+        assert!(end < 120 * US, "but not be wildly slower: {end} ns");
+    }
+}

@@ -1,0 +1,214 @@
+//! Cluster topology: nodes × GPUs × NICs, NUMA placement, and the
+//! builders that instantiate a simulated cluster from a spec.
+//!
+//! Mirrors the paper's two evaluation clusters:
+//! * `ClusterSpec::h200_efa()` — 8×H200 nodes, 2×200 Gbps EFA per GPU;
+//! * `ClusterSpec::h100_cx7()` — 8×H100 nodes, 1×400 Gbps CX-7 per GPU.
+
+use super::gpu::{GpuSim, NvlinkFabric};
+use super::nic::NicAddr;
+use super::profile::{GpuProfile, NicProfile};
+use super::simnet::SimNet;
+
+/// One GPU's identity within the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId {
+    pub node: u16,
+    pub gpu: u8,
+}
+
+impl DeviceId {
+    /// Global linear rank given `gpus_per_node`.
+    pub fn rank(&self, gpus_per_node: u8) -> usize {
+        self.node as usize * gpus_per_node as usize + self.gpu as usize
+    }
+
+    /// Inverse of [`DeviceId::rank`].
+    pub fn from_rank(rank: usize, gpus_per_node: u8) -> Self {
+        DeviceId {
+            node: (rank / gpus_per_node as usize) as u16,
+            gpu: (rank % gpus_per_node as usize) as u8,
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}g{}", self.node, self.gpu)
+    }
+}
+
+/// NIC identity = device + NIC index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NicId {
+    pub device: DeviceId,
+    pub nic: u8,
+}
+
+impl NicId {
+    /// The fabric-level address of this NIC.
+    pub fn addr(&self) -> NicAddr {
+        NicAddr {
+            node: self.device.node,
+            gpu: self.device.gpu,
+            nic: self.nic,
+        }
+    }
+}
+
+/// Declarative description of a cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub nodes: u16,
+    pub gpus_per_node: u8,
+    pub nics_per_gpu: u8,
+    pub nic_profile: NicProfile,
+    pub gpu_profile: GpuProfile,
+    /// RNG seed for the fabric's jitter streams.
+    pub seed: u64,
+}
+
+impl ClusterSpec {
+    /// The paper's EFA cluster: H200, 2×200 Gbps EFA per GPU.
+    pub fn h200_efa(nodes: u16) -> Self {
+        ClusterSpec {
+            name: "H200-EFA",
+            nodes,
+            gpus_per_node: 8,
+            nics_per_gpu: 2,
+            nic_profile: NicProfile::efa(),
+            gpu_profile: GpuProfile::h200(),
+            seed: 0xEFA,
+        }
+    }
+
+    /// The paper's ConnectX cluster: H100, 1×400 Gbps CX-7 per GPU.
+    pub fn h100_cx7(nodes: u16) -> Self {
+        ClusterSpec {
+            name: "H100-CX7",
+            nodes,
+            gpus_per_node: 8,
+            nics_per_gpu: 1,
+            nic_profile: NicProfile::connectx7(),
+            gpu_profile: GpuProfile::h100(),
+            seed: 0xC87,
+        }
+    }
+
+    /// Total GPU count.
+    pub fn total_gpus(&self) -> usize {
+        self.nodes as usize * self.gpus_per_node as usize
+    }
+
+    /// Aggregate per-GPU network bandwidth in Gbps.
+    pub fn gpu_net_gbps(&self) -> f64 {
+        self.nics_per_gpu as f64 * self.nic_profile.rate_gbps
+    }
+
+    /// All device ids, rank order.
+    pub fn devices(&self) -> Vec<DeviceId> {
+        (0..self.total_gpus())
+            .map(|r| DeviceId::from_rank(r, self.gpus_per_node))
+            .collect()
+    }
+
+    /// NIC ids attached to `dev`.
+    pub fn nics_of(&self, dev: DeviceId) -> Vec<NicId> {
+        (0..self.nics_per_gpu)
+            .map(|n| NicId { device: dev, nic: n })
+            .collect()
+    }
+
+    /// Instantiate the simulated cluster.
+    pub fn build(&self) -> Cluster {
+        let net = SimNet::new(self.seed);
+        let mut gpus = Vec::new();
+        let mut nvlinks = Vec::new();
+        for node in 0..self.nodes {
+            nvlinks.push(NvlinkFabric::new());
+            for gpu in 0..self.gpus_per_node {
+                let dev = DeviceId { node, gpu };
+                gpus.push(GpuSim::new(dev, self.gpu_profile.clone()));
+                for nic in 0..self.nics_per_gpu {
+                    net.add_nic(
+                        NicAddr { node, gpu, nic },
+                        self.nic_profile.clone(),
+                    );
+                }
+            }
+        }
+        Cluster {
+            spec: self.clone(),
+            net,
+            gpus,
+            nvlinks,
+        }
+    }
+}
+
+/// An instantiated simulated cluster.
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    pub net: SimNet,
+    gpus: Vec<GpuSim>,
+    nvlinks: Vec<NvlinkFabric>,
+}
+
+impl Cluster {
+    /// GPU simulator for a device.
+    pub fn gpu(&self, dev: DeviceId) -> &GpuSim {
+        &self.gpus[dev.rank(self.spec.gpus_per_node)]
+    }
+
+    /// NVLink fabric of `node`.
+    pub fn nvlink(&self, node: u16) -> &NvlinkFabric {
+        &self.nvlinks[node as usize]
+    }
+
+    /// Rank-ordered devices.
+    pub fn devices(&self) -> Vec<DeviceId> {
+        self.spec.devices()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_roundtrip() {
+        for rank in 0..64 {
+            let d = DeviceId::from_rank(rank, 8);
+            assert_eq!(d.rank(8), rank);
+        }
+        assert_eq!(
+            DeviceId::from_rank(13, 8),
+            DeviceId { node: 1, gpu: 5 }
+        );
+    }
+
+    #[test]
+    fn efa_cluster_shape() {
+        let spec = ClusterSpec::h200_efa(8);
+        assert_eq!(spec.total_gpus(), 64);
+        assert_eq!(spec.nics_per_gpu, 2);
+        assert!((spec.gpu_net_gbps() - 400.0).abs() < 1e-9);
+        let cluster = spec.build();
+        assert_eq!(cluster.devices().len(), 64);
+        // every NIC exists in the fabric
+        for dev in cluster.devices() {
+            for nic in spec.nics_of(dev) {
+                let _ = cluster.net.profile(nic.addr());
+            }
+        }
+    }
+
+    #[test]
+    fn cx7_cluster_shape() {
+        let spec = ClusterSpec::h100_cx7(2);
+        assert_eq!(spec.total_gpus(), 16);
+        assert_eq!(spec.nics_per_gpu, 1);
+        assert!((spec.gpu_net_gbps() - 400.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! fabric-lib: portable point-to-point communication for LLM systems.
+//!
+//! Reproduction of "fabric-lib: RDMA Point-to-Point Communication for
+//! LLM Systems" (MLSys 2026) over a simulated multi-NIC fabric, with a
+//! PJRT-backed compute runtime. See DESIGN.md for the system map.
+#![allow(clippy::too_many_arguments)]
+
+pub mod apps;
+pub mod collectives;
+pub mod engine;
+pub mod fabric;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,112 @@
+//! fabricctl — launcher for fabric-lib's simulated systems.
+//!
+//! Subcommands:
+//!   p2p      point-to-point write throughput sweep (Fig 8 / Table 2 style)
+//!   kvcache  disaggregated TTFT for one sequence length (Table 3 row)
+//!   rl       RL weight transfer (P2P pipeline) with stage breakdown
+//!   moe      one MoE decode epoch, dispatch/combine latency summary
+//!   info     print engine/cluster configuration defaults
+//!
+//! Examples:
+//!   fabricctl kvcache --seq 8192
+//!   fabricctl moe --ep 32 --impl ours --nic efa --iters 4
+//!   fabricctl rl --ranks 16
+
+use anyhow::{bail, Result};
+
+use fabric_lib::apps::kvcache::run_table3_row;
+use fabric_lib::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};
+use fabric_lib::apps::rlweights::{run_p2p_transfer, RlModelSpec};
+use fabric_lib::fabric::profile::NicProfile;
+use fabric_lib::fabric::topology::ClusterSpec;
+use fabric_lib::util::cli::Args;
+
+fn nic_of(name: &str) -> Result<(NicProfile, u8)> {
+    match name {
+        "cx7" | "connectx7" => Ok((NicProfile::connectx7(), 1)),
+        "efa" => Ok((NicProfile::efa(), 2)),
+        other => bail!("unknown NIC '{other}' (cx7|efa)"),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand() {
+        Some("p2p") => {
+            let (nic, nics) = nic_of(&args.str_or("nic", "cx7"))?;
+            let _ = (nic, nics);
+            println!("run `cargo bench --bench p2p_bandwidth` for the full sweep");
+        }
+        Some("kvcache") => {
+            let seq = args.u64_or("seq", 4096)? as u32;
+            let row = run_table3_row(seq);
+            println!(
+                "seq {}: TTFT non-disagg {:.0} ms, disagg {:.0} ms \
+                 (per-layer compute {:.3} ms, transfer {:.3} ms, {} steps, {} pages)",
+                seq,
+                row.ttft_non_ms,
+                row.ttft_disagg_ms,
+                row.per_layer_compute_ms,
+                row.per_layer_transfer_ms,
+                row.steps,
+                row.pages
+            );
+        }
+        Some("rl") => {
+            let ranks = args.u64_or("ranks", 16)? as u32;
+            let spec = RlModelSpec {
+                t_ranks: ranks,
+                r_ranks: (ranks / 2).max(2),
+                total_params: 1_000_000_000_000 * ranks as u64 / 256,
+                ..RlModelSpec::kimi_k2_1t()
+            };
+            let r = run_p2p_transfer(&spec, NicProfile::connectx7(), 1.0);
+            println!(
+                "{}: total {:.0} ms, {:.1} GiB over fabric at {:.0} Gbps aggregate",
+                r.model,
+                r.total_ms,
+                r.bytes as f64 / (1u64 << 30) as f64,
+                r.agg_gbps
+            );
+        }
+        Some("moe") => {
+            let ep = args.u64_or("ep", 16)? as u32;
+            let iters = args.u64_or("iters", 4)?;
+            let tokens = args.u64_or("tokens", 128)? as u32;
+            let imp = match args.str_or("impl", "ours").as_str() {
+                "ours" => MoeImpl::Ours,
+                "deepep" => MoeImpl::DeepEp,
+                "pplx" => MoeImpl::Pplx,
+                other => bail!("unknown impl '{other}' (ours|deepep|pplx)"),
+            };
+            let (nic, nics) = nic_of(&args.str_or("nic", "cx7"))?;
+            let cfg = MoeConfig::decode(ep, tokens);
+            let mut lat = run_decode_epoch(&cfg, imp, nic, nics, iters);
+            println!(
+                "{:?} EP{ep} tokens={tokens}: dispatch p50 {:.0} us (p99 {:.0}), \
+                 combine p50 {:.0} us (p99 {:.0})",
+                imp,
+                lat.dispatch.percentile(50.0) as f64 / 1e3,
+                lat.dispatch.percentile(99.0) as f64 / 1e3,
+                lat.combine.percentile(50.0) as f64 / 1e3,
+                lat.combine.percentile(99.0) as f64 / 1e3,
+            );
+        }
+        Some("info") | None => {
+            for spec in [ClusterSpec::h200_efa(8), ClusterSpec::h100_cx7(8)] {
+                println!(
+                    "{}: {} nodes x {} GPUs, {} x {} ({} Gbps/GPU)",
+                    spec.name,
+                    spec.nodes,
+                    spec.gpus_per_node,
+                    spec.nics_per_gpu,
+                    spec.nic_profile.name,
+                    spec.gpu_net_gbps()
+                );
+            }
+            println!("\nsubcommands: p2p | kvcache | rl | moe | info");
+        }
+        Some(other) => bail!("unknown subcommand '{other}'"),
+    }
+    Ok(())
+}

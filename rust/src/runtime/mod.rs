@@ -1,0 +1,6 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them
+//! from the Rust hot path — Python never runs at request time.
+
+pub mod pjrt;
+
+pub use pjrt::{ArgValue, ModelInfo, Runtime};

@@ -1,0 +1,260 @@
+//! Single-threaded discrete-event executor.
+//!
+//! Events are boxed `FnOnce(&mut Sim)` closures keyed by `(time, seq)`;
+//! `seq` breaks ties so same-timestamp events fire in scheduling order,
+//! which keeps runs deterministic. Components live in `Rc<RefCell<..>>`
+//! cells captured by their event closures — the `Sim` itself owns only
+//! the clock and the queue.
+//!
+//! Events can be cancelled (timers, heartbeats) via their `EventId`.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+
+use super::time::{Duration, Instant};
+
+/// Identifier of a scheduled event; used to cancel timers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(u64);
+
+type Thunk = Box<dyn FnOnce(&mut Sim)>;
+
+struct Entry {
+    at: Instant,
+    seq: u64,
+    thunk: Thunk,
+}
+
+// Order by (time, seq): earliest first via Reverse in the heap.
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// The discrete-event simulator: a virtual clock plus an event queue.
+pub struct Sim {
+    now: Instant,
+    seq: u64,
+    queue: BinaryHeap<Reverse<Entry>>,
+    cancelled: HashSet<u64>,
+    executed: u64,
+    /// Hard cap on executed events; guards against runaway loops in
+    /// misconfigured scenarios (poll loops that never quiesce).
+    pub event_limit: u64,
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    /// Create an empty simulator at t = 0.
+    pub fn new() -> Self {
+        Sim {
+            now: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            cancelled: HashSet::new(),
+            executed: 0,
+            event_limit: u64::MAX,
+        }
+    }
+
+    /// Current virtual time.
+    #[inline]
+    pub fn now(&self) -> Instant {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Schedule `f` to run at absolute virtual time `at`.
+    ///
+    /// Scheduling in the past is clamped to `now` (fires next).
+    pub fn at(&mut self, at: Instant, f: impl FnOnce(&mut Sim) + 'static) -> EventId {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Reverse(Entry {
+            at,
+            seq,
+            thunk: Box::new(f),
+        }));
+        EventId(seq)
+    }
+
+    /// Schedule `f` to run `delay` ns from now.
+    pub fn after(&mut self, delay: Duration, f: impl FnOnce(&mut Sim) + 'static) -> EventId {
+        let at = self.now.saturating_add(delay);
+        self.at(at, f)
+    }
+
+    /// Schedule `f` to run at the current instant, after already-queued
+    /// same-time events.
+    pub fn defer(&mut self, f: impl FnOnce(&mut Sim) + 'static) -> EventId {
+        self.at(self.now, f)
+    }
+
+    /// Cancel a pending event. Cancelling an already-fired event is a
+    /// no-op.
+    pub fn cancel(&mut self, id: EventId) {
+        self.cancelled.insert(id.0);
+    }
+
+    /// Run until the event queue is empty. Returns the final time.
+    pub fn run(&mut self) -> Instant {
+        self.run_until(Instant::MAX)
+    }
+
+    /// Run events with `at <= deadline`. The clock never advances past
+    /// `deadline` even if later events remain queued.
+    pub fn run_until(&mut self, deadline: Instant) -> Instant {
+        while let Some(Reverse(entry)) = self.queue.peek() {
+            if entry.at > deadline {
+                self.now = self.now.max(deadline.min(entry.at));
+                break;
+            }
+            let Reverse(entry) = self.queue.pop().unwrap();
+            if self.cancelled.remove(&entry.seq) {
+                continue;
+            }
+            self.now = entry.at;
+            self.executed += 1;
+            if self.executed > self.event_limit {
+                panic!(
+                    "sim event limit ({}) exceeded at t={} — runaway loop?",
+                    self.event_limit, self.now
+                );
+            }
+            (entry.thunk)(self);
+        }
+        self.now
+    }
+
+    /// True if no events remain.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+/// Cloneable handle used by components to schedule follow-up events from
+/// outside an event callback (e.g. API-facing wrappers in the DES
+/// harness). It is a thin marker today; kept for API symmetry with the
+/// threaded runtime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimHandle;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim = Sim::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for &t in &[30u64, 10, 20] {
+            let log = log.clone();
+            sim.at(t, move |s| log.borrow_mut().push((s.now(), t)));
+        }
+        sim.run();
+        assert_eq!(*log.borrow(), vec![(10, 10), (20, 20), (30, 30)]);
+    }
+
+    #[test]
+    fn ties_fire_in_schedule_order() {
+        let mut sim = Sim::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..5 {
+            let log = log.clone();
+            sim.at(42, move |_| log.borrow_mut().push(i));
+        }
+        sim.run();
+        assert_eq!(*log.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn cascading_events() {
+        let mut sim = Sim::new();
+        let hits = Rc::new(RefCell::new(0u32));
+        let h = hits.clone();
+        sim.at(5, move |s| {
+            *h.borrow_mut() += 1;
+            let h2 = h.clone();
+            s.after(10, move |_| *h2.borrow_mut() += 1);
+        });
+        let end = sim.run();
+        assert_eq!(*hits.borrow(), 2);
+        assert_eq!(end, 15);
+    }
+
+    #[test]
+    fn cancel_pending() {
+        let mut sim = Sim::new();
+        let hits = Rc::new(RefCell::new(0u32));
+        let h = hits.clone();
+        let id = sim.at(5, move |_| *h.borrow_mut() += 1);
+        sim.cancel(id);
+        sim.run();
+        assert_eq!(*hits.borrow(), 0);
+    }
+
+    #[test]
+    fn run_until_stops_at_deadline() {
+        let mut sim = Sim::new();
+        let hits = Rc::new(RefCell::new(0u32));
+        for t in [1u64, 2, 3, 100] {
+            let h = hits.clone();
+            sim.at(t, move |_| *h.borrow_mut() += 1);
+        }
+        sim.run_until(10);
+        assert_eq!(*hits.borrow(), 3);
+        assert!(!sim.idle());
+        sim.run();
+        assert_eq!(*hits.borrow(), 4);
+        assert_eq!(sim.now(), 100);
+    }
+
+    #[test]
+    fn past_schedule_clamps_to_now() {
+        let mut sim = Sim::new();
+        let t = Rc::new(RefCell::new(0u64));
+        let tc = t.clone();
+        sim.at(50, move |s| {
+            let tc2 = tc.clone();
+            s.at(1, move |s2| *tc2.borrow_mut() = s2.now());
+        });
+        sim.run();
+        assert_eq!(*t.borrow(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "event limit")]
+    fn event_limit_trips() {
+        let mut sim = Sim::new();
+        sim.event_limit = 10;
+        fn rearm(s: &mut Sim) {
+            s.after(1, rearm);
+        }
+        sim.after(1, rearm);
+        sim.run();
+    }
+}

@@ -1,0 +1,17 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! Everything time-dependent in the simulated fabric (NIC serialization,
+//! wire latency, GPU kernels, PCIe transactions, CPU cost charging) runs
+//! on this executor with a virtual nanosecond clock. Runs are fully
+//! deterministic given a seed, which is what lets `cargo bench`
+//! regenerate the paper's tables bit-for-bit.
+
+pub mod des;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use des::{EventId, Sim, SimHandle};
+pub use rng::{Jitter, Rng};
+pub use stats::{Histogram, Summary};
+pub use time::{Duration, Instant, GBPS, GIB, KIB, MIB, MS, NS, SEC, US};

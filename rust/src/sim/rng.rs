@@ -1,0 +1,232 @@
+//! Seeded RNG + latency jitter distributions.
+//!
+//! xoshiro256++ (public-domain reference algorithm) — fast, decent
+//! quality, and fully deterministic across platforms, which matters for
+//! regenerating the paper's percentile tables.
+
+/// xoshiro256++ pseudo-random generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed the generator. A splitmix64 pass whitens the raw seed so
+    /// consecutive seeds give uncorrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire-style multiply-shift; bias is negligible for sim use.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast
+    /// here).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Exponential with mean `mean`.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.f64()).ln()
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices out of `n` (k <= n).
+    pub fn choose_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        // Partial Fisher–Yates: first k entries become the sample.
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// A latency jitter model: `base + lognormal-ish tail`, with a rare
+/// spike component to produce the long tails seen in the paper's p99.9
+/// columns (e.g. UvmWatcher callback latency, EFA post times).
+#[derive(Clone, Debug)]
+pub struct Jitter {
+    /// Median extra latency in ns (0 disables the component).
+    pub median_ns: f64,
+    /// Log-sigma of the lognormal body. ~0.3 = tight, ~1.0 = heavy.
+    pub sigma: f64,
+    /// Probability of a spike event per sample.
+    pub spike_p: f64,
+    /// Mean spike magnitude in ns (exponential).
+    pub spike_mean_ns: f64,
+}
+
+impl Jitter {
+    /// No jitter at all.
+    pub const NONE: Jitter = Jitter {
+        median_ns: 0.0,
+        sigma: 0.0,
+        spike_p: 0.0,
+        spike_mean_ns: 0.0,
+    };
+
+    /// A tight jitter with the given median and mild tail.
+    pub fn tight(median_ns: f64) -> Jitter {
+        Jitter {
+            median_ns,
+            sigma: 0.25,
+            spike_p: 0.001,
+            spike_mean_ns: median_ns * 4.0,
+        }
+    }
+
+    /// Sample one jitter value in ns.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.median_ns <= 0.0 {
+            return 0;
+        }
+        let body = self.median_ns * (self.sigma * rng.normal()).exp();
+        let spike = if self.spike_p > 0.0 && rng.f64() < self.spike_p {
+            rng.exp(self.spike_mean_ns)
+        } else {
+            0.0
+        };
+        (body + spike).max(0.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(Rng::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn choose_distinct_is_distinct() {
+        let mut r = Rng::new(4);
+        for _ in 0..100 {
+            let sample = r.choose_distinct(64, 8);
+            let mut s = sample.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 8);
+            assert!(sample.iter().all(|&i| i < 64));
+        }
+    }
+
+    #[test]
+    fn jitter_median_roughly_right() {
+        let j = Jitter::tight(1000.0);
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u64> = (0..10_000).map(|_| j.sample(&mut r)).collect();
+        xs.sort_unstable();
+        let med = xs[xs.len() / 2] as f64;
+        assert!((700.0..1400.0).contains(&med), "median {med}");
+    }
+
+    #[test]
+    fn jitter_none_is_zero() {
+        let mut r = Rng::new(6);
+        assert_eq!(Jitter::NONE.sample(&mut r), 0);
+    }
+}

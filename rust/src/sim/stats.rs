@@ -1,0 +1,199 @@
+//! Sample statistics used by the bench harness: exact-percentile
+//! histograms (store-all, fine at bench sample counts) and printable
+//! summaries matching the paper's percentile columns.
+
+/// A collection of samples with exact percentile queries.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<u64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            samples: Vec::new(),
+            sorted: true,
+        }
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True if no samples recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in `[0, 100]` (nearest-rank). Panics on empty.
+    pub fn percentile(&mut self, p: f64) -> u64 {
+        assert!(!self.samples.is_empty(), "percentile of empty histogram");
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+        self.samples[rank.min(n) - 1]
+    }
+
+    /// Minimum sample.
+    pub fn min(&mut self) -> u64 {
+        self.ensure_sorted();
+        self.samples[0]
+    }
+
+    /// Maximum sample.
+    pub fn max(&mut self) -> u64 {
+        self.ensure_sorted();
+        *self.samples.last().unwrap()
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|&v| v as f64).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Population standard deviation.
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|&v| (v as f64 - m).powi(2))
+            .sum::<f64>()
+            / self.samples.len() as f64;
+        var.sqrt()
+    }
+
+    /// Build a frozen `Summary`.
+    pub fn summary(&mut self) -> Summary {
+        assert!(!self.samples.is_empty(), "summary of empty histogram");
+        Summary {
+            n: self.samples.len(),
+            mean: self.mean(),
+            stddev: self.stddev(),
+            min: self.min(),
+            p01: self.percentile(1.0),
+            p25: self.percentile(25.0),
+            p50: self.percentile(50.0),
+            p75: self.percentile(75.0),
+            p90: self.percentile(90.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+            p999: self.percentile(99.9),
+            max: self.max(),
+        }
+    }
+}
+
+/// Frozen percentile summary (all values in the sample's native unit,
+/// ns for latencies).
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: u64,
+    pub p01: u64,
+    pub p25: u64,
+    pub p50: u64,
+    pub p75: u64,
+    pub p90: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max: u64,
+}
+
+impl Summary {
+    /// Format as the paper's latency-row style, converting ns → µs.
+    pub fn us_row(&self) -> String {
+        let us = |v: u64| v as f64 / 1000.0;
+        format!(
+            "{:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3}",
+            us(self.p50),
+            us(self.p90),
+            us(self.p99),
+            us(self.p999),
+            us(self.max),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(50.0), 50);
+        assert_eq!(h.percentile(90.0), 90);
+        assert_eq!(h.percentile(99.0), 99);
+        assert_eq!(h.percentile(100.0), 100);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 100);
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        let mut h = Histogram::new();
+        for v in [2u64, 4, 4, 4, 5, 5, 7, 9] {
+            h.record(v);
+        }
+        assert!((h.mean() - 5.0).abs() < 1e-9);
+        assert!((h.stddev() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut h = Histogram::new();
+        h.record(42);
+        let s = h.summary();
+        assert_eq!(s.p50, 42);
+        assert_eq!(s.p999, 42);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn unsorted_input() {
+        let mut h = Histogram::new();
+        for v in [9u64, 1, 5, 3, 7] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(50.0), 5);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_percentile_panics() {
+        Histogram::new().percentile(50.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Virtual time: nanoseconds as plain `u64`s with readable constructors.
+//!
+//! The simulator's clock is `Instant` (ns since sim start); intervals are
+//! `Duration` (ns). Plain integers keep the event loop allocation-free
+//! and trivially comparable.
+
+/// A point in virtual time, in nanoseconds since simulation start.
+pub type Instant = u64;
+/// A span of virtual time, in nanoseconds.
+pub type Duration = u64;
+
+/// One nanosecond.
+pub const NS: Duration = 1;
+/// One microsecond.
+pub const US: Duration = 1_000;
+/// One millisecond.
+pub const MS: Duration = 1_000_000;
+/// One second.
+pub const SEC: Duration = 1_000_000_000;
+
+/// One kibibyte.
+pub const KIB: u64 = 1024;
+/// One mebibyte.
+pub const MIB: u64 = 1024 * 1024;
+/// One gibibyte.
+pub const GIB: u64 = 1024 * 1024 * 1024;
+
+/// Gigabits per second expressed as bytes per nanosecond.
+///
+/// `rate_bytes_per_ns(400.0)` is the serialization rate of a 400 Gbps
+/// link.
+pub const GBPS: f64 = 1.0e9 / 8.0 / 1.0e9; // bytes per ns per Gbps = 0.125
+
+/// Convert a link rate in Gbps into bytes/ns.
+#[inline]
+pub fn gbps_to_bytes_per_ns(gbps: f64) -> f64 {
+    gbps * GBPS
+}
+
+/// Time to serialize `bytes` at `gbps`, in ns (rounded up, min 1 ns).
+#[inline]
+pub fn serialize_ns(bytes: u64, gbps: f64) -> Duration {
+    let ns = (bytes as f64) / gbps_to_bytes_per_ns(gbps);
+    ns.ceil().max(1.0) as Duration
+}
+
+/// Render a virtual duration as a human-readable string.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= SEC {
+        format!("{:.3} s", ns as f64 / SEC as f64)
+    } else if ns >= MS {
+        format!("{:.3} ms", ns as f64 / MS as f64)
+    } else if ns >= US {
+        format!("{:.3} us", ns as f64 / US as f64)
+    } else {
+        format!("{} ns", ns)
+    }
+}
+
+/// Render a throughput (bytes over a virtual duration) as Gbps.
+pub fn gbps(bytes: u64, ns: Duration) -> f64 {
+    if ns == 0 {
+        return 0.0;
+    }
+    (bytes as f64 * 8.0) / ns as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialize_rate_roundtrip() {
+        // 400 Gbps = 50 bytes/ns: 50_000 bytes take 1000 ns.
+        assert_eq!(serialize_ns(50_000, 400.0), 1_000);
+        // 100 Gbps = 12.5 bytes/ns.
+        assert_eq!(serialize_ns(125, 100.0), 10);
+    }
+
+    #[test]
+    fn gbps_of_transfer() {
+        // 50 bytes in 1 ns = 400 Gbps.
+        assert!((gbps(50, 1) - 400.0).abs() < 1e-9);
+        // 1 MiB over 21 us ~= 399.5 Gbps.
+        let g = gbps(MIB, 21 * US);
+        assert!(g > 380.0 && g < 420.0, "{g}");
+    }
+
+    #[test]
+    fn fmt_human() {
+        assert_eq!(fmt_ns(12), "12 ns");
+        assert_eq!(fmt_ns(1_500), "1.500 us");
+        assert_eq!(fmt_ns(2 * MS), "2.000 ms");
+        assert_eq!(fmt_ns(3 * SEC), "3.000 s");
+    }
+
+    #[test]
+    fn serialize_minimum_one_ns() {
+        assert_eq!(serialize_ns(0, 400.0), 1);
+        assert_eq!(serialize_ns(1, 400.0), 1);
+    }
+}

@@ -1,0 +1,167 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and generated usage text.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // "--" terminator: everything after is positional.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Boolean flag (present without value, or `--k=true/false`).
+    pub fn flag(&self, k: &str) -> bool {
+        matches!(self.flags.get(k).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, k: &str, default: &str) -> String {
+        self.flags.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn str_req(&self, k: &str) -> Result<String> {
+        self.flags
+            .get(k)
+            .cloned()
+            .with_context(|| format!("missing required --{k}"))
+    }
+
+    /// Integer option with default.
+    pub fn u64_or(&self, k: &str, default: u64) -> Result<u64> {
+        match self.flags.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} must be an integer")),
+        }
+    }
+
+    /// Float option with default.
+    pub fn f64_or(&self, k: &str, default: f64) -> Result<f64> {
+        match self.flags.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} must be a float")),
+        }
+    }
+
+    /// Comma-separated integer list with default.
+    pub fn u64_list_or(&self, k: &str, default: &[u64]) -> Result<Vec<u64>> {
+        match self.flags.get(k) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse().with_context(|| format!("--{k}: bad entry {x}")))
+                .collect(),
+        }
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (subcommand) if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Reject unknown flags (call after reading all known ones).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; known: {}", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let a = parse("serve --nodes 4 --verbose --rate=2.5 pos1");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.u64_or("nodes", 1).unwrap(), 4);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.positional(), &["serve", "pos1"]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("");
+        assert_eq!(a.u64_or("n", 7).unwrap(), 7);
+        assert_eq!(a.str_or("mode", "sim"), "sim");
+        assert!(a.str_req("missing").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--eps 8,16,32,64");
+        assert_eq!(a.u64_list_or("eps", &[1]).unwrap(), vec![8, 16, 32, 64]);
+        assert_eq!(parse("").u64_list_or("eps", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("--known 1 --oops 2");
+        assert!(a.check_known(&["known"]).is_err());
+        assert!(a.check_known(&["known", "oops"]).is_ok());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse("--k v -- --not-a-flag");
+        assert_eq!(a.str_or("k", ""), "v");
+        assert_eq!(a.positional(), &["--not-a-flag"]);
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse("--n abc");
+        assert!(a.u64_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared utilities: JSON parsing, CLI parsing, table rendering, and
+//! the bench/property-test harnesses (criterion/proptest are not
+//! available offline — see DESIGN.md §1).
+
+pub mod cli;
+pub mod fasthash;
+pub mod json;
+pub mod prop;
+pub mod table;
+
+pub use json::Json;

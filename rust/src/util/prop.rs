@@ -1,0 +1,76 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over N seeded random cases; on failure it
+//! reports the failing case number and seed so the case can be
+//! replayed exactly (`FABRIC_PROP_SEED=<seed> FABRIC_PROP_CASES=1`).
+//! Generators are plain closures over [`crate::sim::Rng`].
+
+use crate::sim::Rng;
+
+/// Number of cases per property (override with FABRIC_PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("FABRIC_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Base seed (override with FABRIC_PROP_SEED to replay).
+pub fn base_seed() -> u64 {
+    std::env::var("FABRIC_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xF0F0_1234)
+}
+
+/// Run `prop` over seeded cases. `gen` builds a case from an RNG;
+/// `prop` returns `Err(reason)` on violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(reason) = prop(&case) {
+            panic!(
+                "property '{name}' failed on case {i}/{cases} (seed {seed}):\n  \
+                 reason: {reason}\n  case: {case:#?}\n  \
+                 replay: FABRIC_PROP_SEED={seed} FABRIC_PROP_CASES=1"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        check(
+            "sum-commutes",
+            |rng| (rng.below(100), rng.below(100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", |rng| rng.below(10), |_| Err("nope".into()));
+    }
+}

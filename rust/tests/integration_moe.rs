@@ -1,0 +1,91 @@
+//! Integration: MoE dispatch/combine across implementations —
+//! completion, determinism, buffer-bound respect, private-buffer
+//! ablation monotonicity.
+
+use fabric_lib::apps::moe::rank::Strategy;
+use fabric_lib::apps::moe::routing::RoutingPlan;
+use fabric_lib::apps::moe::{harness::run_epoch_with, run_decode_epoch, MoeConfig, MoeImpl};
+use fabric_lib::fabric::profile::NicProfile;
+
+#[test]
+fn all_impls_complete_multiple_iterations() {
+    let cfg = MoeConfig::tiny();
+    for imp in [MoeImpl::Ours, MoeImpl::DeepEp, MoeImpl::Pplx] {
+        for (nic, nics) in [(NicProfile::connectx7(), 1u8), (NicProfile::efa(), 2u8)] {
+            let lat = run_decode_epoch(&cfg, imp, nic, nics, 4);
+            assert_eq!(lat.dispatch.len(), 4 * cfg.ranks as usize, "{imp:?}");
+            assert_eq!(lat.combine.len(), 4 * cfg.ranks as usize);
+        }
+    }
+}
+
+#[test]
+fn epochs_are_deterministic() {
+    let cfg = MoeConfig::decode(8, 32);
+    let mut a = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::efa(), 2, 3).dispatch;
+    let mut b = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::efa(), 2, 3).dispatch;
+    assert_eq!(a.summary().p50, b.summary().p50);
+    assert_eq!(a.max(), b.max());
+}
+
+#[test]
+fn routing_respects_receive_buffer_bound() {
+    // §6.1: receiver buffers sized to N·T·max(R, E/N) always suffice.
+    for ranks in [8u32, 16, 64] {
+        let cfg = MoeConfig::decode(ranks, 128);
+        for it in 0..5 {
+            let plan = RoutingPlan::generate(&cfg, it);
+            for &recv in &plan.recv_totals {
+                assert!(recv <= cfg.recv_buffer_tokens());
+            }
+        }
+    }
+}
+
+#[test]
+fn private_buffer_zero_is_slower_than_large() {
+    // Fig 11: no speculation => route exchange on the critical path.
+    let mut cfg0 = MoeConfig::decode(16, 128);
+    cfg0.private_tokens = 0;
+    let mut cfg_full = MoeConfig::decode(16, 128);
+    cfg_full.private_tokens = 128;
+    let mut none =
+        run_epoch_with(&cfg0, Strategy::ours(), NicProfile::connectx7(), 1, 3, None).dispatch;
+    let mut full =
+        run_epoch_with(&cfg_full, Strategy::ours(), NicProfile::connectx7(), 1, 3, None).dispatch;
+    assert!(
+        none.percentile(50.0) > full.percentile(50.0),
+        "no-speculation {} must exceed full-speculation {}",
+        none.percentile(50.0),
+        full.percentile(50.0)
+    );
+}
+
+#[test]
+fn kernel_times_are_small_fraction_of_dispatch() {
+    // §7.4.5: total kernel execution ≲ a modest fraction of transfer
+    // time at scale.
+    let cfg = MoeConfig::decode(16, 128);
+    let mut lat = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::connectx7(), 1, 3);
+    let kernels = lat.d_send_kernel.percentile(50.0) + lat.d_recv_kernel.percentile(50.0);
+    let dispatch = lat.dispatch.percentile(50.0);
+    assert!(
+        kernels < dispatch / 2,
+        "kernels {kernels} should be well under dispatch {dispatch}"
+    );
+}
+
+#[test]
+fn prefill_scales_latency_with_tokens() {
+    let d = {
+        let cfg = MoeConfig::decode(8, 128);
+        let mut l = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::connectx7(), 1, 2);
+        l.dispatch.percentile(50.0)
+    };
+    let p = {
+        let cfg = MoeConfig::prefill(8);
+        let mut l = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::connectx7(), 1, 2);
+        l.dispatch.percentile(50.0)
+    };
+    assert!(p > 4 * d, "prefill (4096 tok) {p} vs decode (128 tok) {d}");
+}

@@ -1,0 +1,98 @@
+//! Integration: PJRT runtime executes the AOT artifacts and the
+//! numerics match the JAX reference (prefill → decode consistency).
+//!
+//! Requires `make artifacts` to have run (skips otherwise, so plain
+//! `cargo test` works in a fresh checkout).
+
+use fabric_lib::runtime::{ArgValue, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("load runtime"))
+}
+
+#[test]
+fn manifest_describes_model() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.model.vocab >= 256);
+    assert_eq!(rt.model.d_model % rt.model.n_heads, 0);
+    assert!(rt.entries().iter().any(|e| e == "decode"));
+    assert!(rt.entries().iter().any(|e| e.starts_with("prefill_")));
+    assert_eq!(rt.output_count("decode").unwrap(), 3);
+}
+
+#[test]
+fn prefill_then_decode_is_deterministic_and_finite() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model.clone();
+    let toks: Vec<i32> = (0..32).map(|i| (i * 7 + 3) % m.vocab as i32).collect();
+    let (logits, k, v) = rt.prefill(&toks).expect("prefill");
+    assert_eq!(logits.len(), m.vocab);
+    let t1 = Runtime::argmax(&logits);
+
+    // Pad caches [L,H,32,Dh] -> [L,H,max_seq,Dh].
+    let dh = m.d_model / m.n_heads;
+    let (l, h, s, smax) = (m.n_layers, m.n_heads, 32usize, m.max_seq);
+    let pad = |c: &[f32]| -> Vec<f32> {
+        let mut out = vec![0f32; l * h * smax * dh];
+        for li in 0..l {
+            for hi in 0..h {
+                for si in 0..s {
+                    let src = ((li * h + hi) * s + si) * dh;
+                    let dst = ((li * h + hi) * smax + si) * dh;
+                    out[dst..dst + dh].copy_from_slice(&c[src..src + dh]);
+                }
+            }
+        }
+        out
+    };
+    let kp = pad(&k);
+    let vp = pad(&v);
+    let (dec_logits, _, _) = rt.decode(t1, &kp, &vp, s as i32).expect("decode");
+    assert!(dec_logits.iter().all(|x| x.is_finite()));
+    let (dec2, _, _) = rt.decode(t1, &kp, &vp, s as i32).expect("decode again");
+    assert_eq!(dec_logits, dec2, "decode must be deterministic");
+}
+
+#[test]
+fn moe_block_runs() {
+    let Some(rt) = runtime() else { return };
+    let shape = rt.output_shape("moe_block", 0).unwrap();
+    let n: usize = shape.iter().product();
+    let x = vec![0.01f32; n];
+    let out = rt
+        .execute("moe_block", &[ArgValue::F32(&x, &shape)])
+        .expect("moe_block");
+    assert_eq!(out[0].len(), n);
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn quantize_roundtrip_accuracy() {
+    let Some(rt) = runtime() else { return };
+    let shape = rt.output_shape("quantize_roundtrip", 0).unwrap();
+    let n: usize = shape.iter().product();
+    let x: Vec<f32> = (0..n).map(|i| ((i as f32 * 0.37).sin()) * 3.0).collect();
+    let out = rt
+        .execute("quantize_roundtrip", &[ArgValue::F32(&x, &shape)])
+        .expect("quantize");
+    let deq = &out[0];
+    // fp8-e4m3 relative error is bounded (~6% worst case for normals).
+    for (a, b) in x.iter().zip(deq) {
+        assert!(
+            (a - b).abs() <= 0.08 * a.abs().max(0.05),
+            "fp8 roundtrip too lossy: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.execute("decode", &[ArgValue::I32(0)]).is_err());
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}

@@ -1,0 +1,205 @@
+//! Property tests on the coordinator's pure logic: sharding coverage,
+//! IMMCOUNTER order-independence, wire-format fuzz.
+//!
+//! Uses the in-repo seeded property harness (`util::prop`); replay a
+//! failure with FABRIC_PROP_SEED=<seed> FABRIC_PROP_CASES=1.
+
+use fabric_lib::engine::api::{MrDesc, NetAddr, SPLIT_THRESHOLD};
+use fabric_lib::engine::imm_counter::{ImmCounter, ImmEvent};
+use fabric_lib::engine::sharding::{plan_paged_writes, plan_single_write, PlannedWrite};
+use fabric_lib::engine::wire;
+use fabric_lib::fabric::nic::NicAddr;
+use fabric_lib::sim::Rng;
+use fabric_lib::util::prop::check;
+
+fn tiles_exactly(plans: &[PlannedWrite], src_off: u64, len: u64) -> Result<(), String> {
+    let mut ranges: Vec<(u64, u64)> = plans.iter().map(|p| (p.src_off, p.len)).collect();
+    ranges.sort_unstable();
+    let mut cursor = src_off;
+    for (off, l) in &ranges {
+        if *off != cursor {
+            return Err(format!("gap/overlap at {off}, expected {cursor}"));
+        }
+        cursor += l;
+    }
+    if cursor != src_off + len {
+        return Err(format!("covered {} of {len}", cursor - src_off));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_single_write_tiles_and_balances() {
+    check(
+        "single-write coverage",
+        |rng: &mut Rng| {
+            let len = 1 + rng.below(64 << 20);
+            let src_off = rng.below(1 << 20);
+            let dst_va = 0x1000 + rng.below(1 << 30);
+            let fanout = 1 + rng.below(4) as usize;
+            let imm = if rng.f64() < 0.3 { Some(rng.next_u64() as u32) } else { None };
+            let rotation = rng.below(100) as usize;
+            (len, src_off, dst_va, imm, fanout, rotation)
+        },
+        |&(len, src_off, dst_va, imm, fanout, rotation)| {
+            let plans = plan_single_write(len, src_off, dst_va, imm, fanout, rotation);
+            tiles_exactly(&plans, src_off, len)?;
+            // dst offsets mirror src offsets.
+            for p in &plans {
+                if p.dst_va - dst_va != p.src_off - src_off {
+                    return Err("dst/src offset mismatch".into());
+                }
+                if p.nic >= fanout {
+                    return Err(format!("nic {} out of fanout {fanout}", p.nic));
+                }
+            }
+            // Imm preservation: exactly one imm-carrying write iff imm.
+            let n_imm = plans.iter().filter(|p| p.imm.is_some()).count();
+            if imm.is_some() && n_imm != 1 {
+                return Err(format!("imm write count {n_imm} != 1"));
+            }
+            if imm.is_none() && n_imm != 0 {
+                return Err("phantom imm".into());
+            }
+            // Balance: shards within 1 byte when split.
+            if imm.is_none() && len > SPLIT_THRESHOLD && fanout > 1 {
+                let max = plans.iter().map(|p| p.len).max().unwrap();
+                let min = plans.iter().map(|p| p.len).min().unwrap();
+                if max - min > 1 {
+                    return Err(format!("imbalance {max}-{min}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_paged_writes_preserve_count_and_mapping() {
+    check(
+        "paged-write mapping",
+        |rng: &mut Rng| {
+            let pages = 1 + rng.below(200) as usize;
+            let page_len = 1 + rng.below(64 << 10);
+            let fanout = 1 + rng.below(4) as usize;
+            let srcs: Vec<u64> = (0..pages).map(|_| rng.below(1 << 30)).collect();
+            let dsts: Vec<u64> = (0..pages).map(|_| rng.below(1 << 30)).collect();
+            let imm = if rng.f64() < 0.5 { Some(7u32) } else { None };
+            (page_len, srcs, dsts, imm, fanout)
+        },
+        |(page_len, srcs, dsts, imm, fanout)| {
+            let plans = plan_paged_writes(*page_len, srcs, dsts, *imm, *fanout, 3);
+            if plans.len() != srcs.len() {
+                return Err(format!("{} plans for {} pages", plans.len(), srcs.len()));
+            }
+            for (i, p) in plans.iter().enumerate() {
+                if p.src_off != srcs[i] || p.dst_va != dsts[i] {
+                    return Err(format!("page {i} mis-mapped"));
+                }
+                if p.imm != *imm {
+                    return Err("imm not preserved per page".into());
+                }
+            }
+            // NIC assignment is round-robin: consecutive pages differ
+            // when fanout > 1.
+            if *fanout > 1 && plans.len() > 1 && plans[0].nic == plans[1].nic {
+                return Err("not round-robin".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_imm_counter_order_independent() {
+    check(
+        "imm-counter order independence",
+        |rng: &mut Rng| {
+            // Several imms with target counts; a shuffled arrival
+            // order; a random point at which expectations register.
+            let n_imms = 1 + rng.below(5) as u32;
+            let targets: Vec<u32> = (0..n_imms).map(|_| 1 + rng.below(20) as u32).collect();
+            let mut arrivals: Vec<u32> = targets
+                .iter()
+                .enumerate()
+                .flat_map(|(i, &c)| std::iter::repeat(i as u32).take(c as usize))
+                .collect();
+            rng.shuffle(&mut arrivals);
+            let register_at = rng.below(arrivals.len() as u64 + 1) as usize;
+            (targets, arrivals, register_at)
+        },
+        |(targets, arrivals, register_at)| {
+            let mut c = ImmCounter::new();
+            let mut satisfied = vec![false; targets.len()];
+            for (step, &imm) in arrivals.iter().enumerate() {
+                if step == *register_at {
+                    for (i, &t) in targets.iter().enumerate() {
+                        if !satisfied[i] && c.expect(i as u32, t) == ImmEvent::Satisfied {
+                            satisfied[i] = true;
+                        }
+                    }
+                }
+                if c.increment(imm) == ImmEvent::Satisfied {
+                    satisfied[imm as usize] = true;
+                }
+            }
+            if *register_at >= arrivals.len() {
+                for (i, &t) in targets.iter().enumerate() {
+                    if !satisfied[i] && c.expect(i as u32, t) == ImmEvent::Satisfied {
+                        satisfied[i] = true;
+                    }
+                }
+            }
+            if satisfied.iter().all(|&s| s) {
+                Ok(())
+            } else {
+                Err(format!("unsatisfied expectations: {satisfied:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_wire_roundtrip_and_fuzz() {
+    check(
+        "wire roundtrip",
+        |rng: &mut Rng| {
+            let nics: Vec<NicAddr> = (0..1 + rng.below(4))
+                .map(|i| NicAddr {
+                    node: rng.below(1 << 16) as u16,
+                    gpu: rng.below(8) as u8,
+                    nic: i as u8,
+                })
+                .collect();
+            let desc = MrDesc {
+                ptr: rng.next_u64(),
+                len: rng.next_u64(),
+                rkeys: nics.iter().map(|&n| (n, rng.next_u64())).collect(),
+            };
+            let flip = rng.below(64);
+            (NetAddr { nics }, desc, flip)
+        },
+        |(addr, desc, flip)| {
+            let b = wire::encode_net_addr(addr);
+            if wire::decode_net_addr(&b).map_err(|e| e.to_string())? != *addr {
+                return Err("NetAddr roundtrip".into());
+            }
+            let b2 = wire::encode_mr_desc(desc);
+            if wire::decode_mr_desc(&b2).map_err(|e| e.to_string())? != *desc {
+                return Err("MrDesc roundtrip".into());
+            }
+            // Fuzz: flipping a header byte must never panic (errors ok).
+            let mut mutated = b2.clone();
+            let idx = (*flip as usize) % mutated.len().min(3);
+            mutated[idx] ^= 0xFF;
+            let _ = wire::decode_mr_desc(&mutated);
+            // Truncations must error, not panic.
+            for cut in 0..b2.len().min(16) {
+                if wire::decode_mr_desc(&b2[..cut]).is_ok() {
+                    return Err(format!("truncation at {cut} decoded"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,257 @@
+//! Property tests on the simulated transports: reliability (every
+//! posted WR completes exactly once at both ends), RC in-order
+//! delivery, payload integrity under random offsets/sizes, and the
+//! payload-before-immediate invariant.
+
+use fabric_lib::fabric::mem::DmaSlice;
+use fabric_lib::fabric::nic::{CqeKind, NicAddr, QpId, WorkRequest, WrOp};
+use fabric_lib::fabric::profile::NicProfile;
+use fabric_lib::fabric::simnet::SimNet;
+use fabric_lib::sim::{Rng, Sim};
+use fabric_lib::util::prop::check;
+
+struct Case {
+    efa: bool,
+    writes: Vec<(u64, u64)>, // (dst_off, len) disjoint
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Case(efa={}, {} writes)", self.efa, self.writes.len())
+    }
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let efa = rng.f64() < 0.5;
+    // Disjoint destination ranges (slot i gets a random length).
+    let n = 1 + rng.below(40) as usize;
+    let slot = 64 * 1024 / n as u64;
+    let writes = (0..n as u64)
+        .map(|i| (i * slot, 1 + rng.below(slot.min(4096))))
+        .collect();
+    Case { efa, writes }
+}
+
+#[test]
+fn prop_every_wr_completes_exactly_once_with_integrity() {
+    check("transport reliability + integrity", gen_case, |case| {
+        let net = SimNet::new(1234);
+        let a = NicAddr { node: 0, gpu: 0, nic: 0 };
+        let b = NicAddr { node: 1, gpu: 0, nic: 0 };
+        let prof = if case.efa {
+            NicProfile::efa()
+        } else {
+            NicProfile::connectx7()
+        };
+        net.add_nic(a, prof.clone());
+        net.add_nic(b, prof);
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(64 * 1024);
+        let (dbuf, drkey) = mem.alloc(64 * 1024);
+        let mut sim = Sim::new();
+        for (i, &(off, len)) in case.writes.iter().enumerate() {
+            let pat: Vec<u8> = (0..len).map(|j| ((i as u64 * 131 + j) % 251) as u8).collect();
+            sbuf.write(off as usize, &pat);
+            let ok = net.post(
+                &mut sim,
+                a,
+                WorkRequest {
+                    id: i as u64,
+                    qp: QpId(1),
+                    op: WrOp::Write {
+                        dst: b,
+                        dst_rkey: drkey,
+                        dst_va: dbuf.base() + off,
+                        src: DmaSlice::new(&sbuf, off as usize, len as usize),
+                        imm: Some(i as u32),
+                    },
+                    chained: false,
+                },
+            );
+            if !ok {
+                return Err("unexpected backpressure".into());
+            }
+        }
+        sim.run();
+        // Sender completions: exactly one per WR.
+        let mut cq = Vec::new();
+        net.poll_cq(a, usize::MAX, &mut cq);
+        let mut ids: Vec<u64> = cq
+            .iter()
+            .filter(|c| matches!(c.kind, CqeKind::WriteDone))
+            .map(|c| c.wr_id)
+            .collect();
+        ids.sort_unstable();
+        let want: Vec<u64> = (0..case.writes.len() as u64).collect();
+        if ids != want {
+            return Err(format!("sender completions {ids:?}"));
+        }
+        // Receiver imms: one per WR, any order.
+        let mut rcq = Vec::new();
+        net.poll_cq(b, usize::MAX, &mut rcq);
+        let mut imms: Vec<u32> = rcq
+            .iter()
+            .filter_map(|c| match c.kind {
+                CqeKind::ImmRecvd { imm, .. } => Some(imm),
+                _ => None,
+            })
+            .collect();
+        if imms.len() != case.writes.len() {
+            return Err(format!("{} imms for {} writes", imms.len(), case.writes.len()));
+        }
+        imms.sort_unstable();
+        if imms != (0..case.writes.len() as u32).collect::<Vec<_>>() {
+            return Err("imm set mismatch".into());
+        }
+        // Payload integrity at every destination range.
+        for (i, &(off, len)) in case.writes.iter().enumerate() {
+            let mut got = vec![0u8; len as usize];
+            dbuf.read(off as usize, &mut got);
+            for (j, &g) in got.iter().enumerate() {
+                let want = ((i as u64 * 131 + j as u64) % 251) as u8;
+                if g != want {
+                    return Err(format!("write {i} byte {j}: {g} != {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rc_delivers_in_posting_order_per_qp() {
+    check(
+        "RC in-order per QP",
+        |rng: &mut Rng| {
+            let n = 2 + rng.below(30) as usize;
+            let sizes: Vec<u64> = (0..n).map(|_| 1 + rng.below(256 << 10)).collect();
+            let qps: Vec<u32> = (0..n).map(|_| rng.below(3) as u32).collect();
+            (sizes, qps)
+        },
+        |(sizes, qps)| {
+            let net = SimNet::new(77);
+            let a = NicAddr { node: 0, gpu: 0, nic: 0 };
+            let b = NicAddr { node: 1, gpu: 0, nic: 0 };
+            net.add_nic(a, NicProfile::connectx7());
+            net.add_nic(b, NicProfile::connectx7());
+            let mem = net.mem();
+            let (sbuf, _) = mem.alloc(256 << 10);
+            let (dbuf, drkey) = mem.alloc(256 << 10);
+            let mut sim = Sim::new();
+            for (i, (&len, &qp)) in sizes.iter().zip(qps.iter()).enumerate() {
+                net.post(
+                    &mut sim,
+                    a,
+                    WorkRequest {
+                        id: i as u64,
+                        qp: QpId(qp),
+                        op: WrOp::Write {
+                            dst: b,
+                            dst_rkey: drkey,
+                            dst_va: dbuf.base(),
+                            src: DmaSlice::new(&sbuf, 0, len as usize),
+                            imm: Some(i as u32),
+                        },
+                        chained: false,
+                    },
+                );
+            }
+            sim.run();
+            let mut rcq = Vec::new();
+            net.poll_cq(b, usize::MAX, &mut rcq);
+            let arrival: Vec<u32> = rcq
+                .iter()
+                .filter_map(|c| match c.kind {
+                    CqeKind::ImmRecvd { imm, .. } => Some(imm),
+                    _ => None,
+                })
+                .collect();
+            // Within each QP, arrival order must equal posting order.
+            for q in 0..3u32 {
+                let posted: Vec<u32> =
+                    (0..sizes.len() as u32).filter(|&i| qps[i as usize] == q).collect();
+                let arrived: Vec<u32> = arrival
+                    .iter()
+                    .copied()
+                    .filter(|&i| qps[i as usize] == q)
+                    .collect();
+                if posted != arrived {
+                    return Err(format!("QP{q}: posted {posted:?}, arrived {arrived:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_payload_visible_before_imm_under_srd() {
+    // For every delivered immediate, the payload bytes must already be
+    // readable — the IMMCOUNTER correctness keystone (§3.3).
+    check(
+        "payload-before-imm",
+        |rng: &mut Rng| {
+            let n = 1 + rng.below(64) as usize;
+            (0..n).map(|_| 8 + rng.below(32 << 10)).collect::<Vec<u64>>()
+        },
+        |sizes| {
+            let net = SimNet::new(55);
+            let a = NicAddr { node: 0, gpu: 0, nic: 0 };
+            let b = NicAddr { node: 1, gpu: 0, nic: 0 };
+            net.add_nic(a, NicProfile::efa());
+            net.add_nic(b, NicProfile::efa());
+            let mem = net.mem();
+            let total: u64 = sizes.iter().sum();
+            let (sbuf, _) = mem.alloc(total as usize);
+            let (dbuf, drkey) = mem.alloc(total as usize);
+            let mut sim = Sim::new();
+            let mut off = 0u64;
+            let mut offs = Vec::new();
+            for (i, &len) in sizes.iter().enumerate() {
+                sbuf.write(off as usize, &vec![(i % 250 + 1) as u8; len as usize]);
+                net.post(
+                    &mut sim,
+                    a,
+                    WorkRequest {
+                        id: i as u64,
+                        qp: QpId(1),
+                        op: WrOp::Write {
+                            dst: b,
+                            dst_rkey: drkey,
+                            dst_va: dbuf.base() + off,
+                            src: DmaSlice::new(&sbuf, off as usize, len as usize),
+                            imm: Some(i as u32),
+                        },
+                        chained: false,
+                    },
+                );
+                offs.push(off);
+                off += len;
+            }
+            // Drain CQEs *during* the run (at 1 µs boundaries), not
+            // only at the end.
+            let mut seen = 0usize;
+            while !sim.idle() {
+                let t = sim.now();
+                sim.run_until(t + 1_000);
+                let mut rcq = Vec::new();
+                net.poll_cq(b, usize::MAX, &mut rcq);
+                for c in &rcq {
+                    if let CqeKind::ImmRecvd { imm, .. } = c.kind {
+                        let i = imm as usize;
+                        let mut got = vec![0u8; sizes[i] as usize];
+                        dbuf.read(offs[i] as usize, &mut got);
+                        if got.iter().any(|&g| g != (i % 250 + 1) as u8) {
+                            return Err(format!("imm {i} visible before payload"));
+                        }
+                        seen += 1;
+                    }
+                }
+            }
+            if seen != sizes.len() {
+                return Err(format!("saw {seen} of {} imms", sizes.len()));
+            }
+            Ok(())
+        },
+    );
+}
