@@ -26,7 +26,7 @@ use fabric_lib::fabric::local::LocalFabric;
 use fabric_lib::fabric::profile::TransportKind;
 use fabric_lib::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fabric_lib::util::err::Result<()> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("artifacts missing — run `make artifacts` first");

@@ -13,7 +13,7 @@ use fabric_lib::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};
 use fabric_lib::fabric::profile::NicProfile;
 use fabric_lib::runtime::{ArgValue, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fabric_lib::util::err::Result<()> {
     // --- communication: dispatch/combine latencies ---
     let cfg = MoeConfig::decode(16, 128);
     println!(

@@ -1,35 +1,43 @@
 //! Quickstart: the TransferEngine public API in five minutes.
 //!
-//! Two engines ("nodes") on an in-process fabric exchange descriptors,
-//! then move data with one-sided WRITEs, count completions with the
-//! IMMCOUNTER, and run an RPC over SEND/RECV — the same primitives the
-//! KvCache / RL / MoE systems are built from.
+//! Two engines ("nodes") exchange descriptors, then move data with
+//! one-sided WRITEs, count completions with the IMMCOUNTER, and run an
+//! RPC over SEND/RECV — the same primitives the KvCache / RL / MoE
+//! systems are built from. The whole demo is written once against
+//! `&dyn TransferEngine` and executed on BOTH runtimes.
+//!
+//! # Choosing a runtime
+//!
+//! fabric-lib ships one API (`engine::traits::TransferEngine`) with
+//! two interchangeable runtimes:
+//!
+//! * **DES** (`engine::des_engine::Engine`) — single-threaded,
+//!   deterministic, virtual-clock simulation of the multi-NIC fabric.
+//!   Choose it for benchmarks, latency modeling and reproducible
+//!   integration tests: a seed pins every byte and every nanosecond.
+//! * **Threaded** (`engine::threaded::ThreadedEngine`) — real pinned
+//!   worker threads over the in-process fabric, real memcpys, real
+//!   wall-clock overheads. Choose it for runnable end-to-end examples
+//!   and for *measuring* CPU costs (paper Table 8) rather than
+//!   modeling them.
+//!
+//! Code written against the trait — like `demo()` below — does not
+//! change between the two: `engine::traits::Cluster` builds either
+//! flavor behind the same handle, the `Cx` context carries the
+//! runtime-specific driving (event loop vs. thread waits), and
+//! `Notify`/`SharedFlag` give runtime-neutral completion signaling.
 //!
 //! Run: cargo run --release --example quickstart
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::sync::atomic::Ordering;
 
-use fabric_lib::engine::threaded::{OnDoneT, ThreadedEngine};
+use fabric_lib::engine::traits::{
+    expect_flag, new_flag, Cluster, Cx, Notify, RuntimeKind, TransferEngine,
+};
 use fabric_lib::engine::wire;
-use fabric_lib::fabric::local::LocalFabric;
-use fabric_lib::fabric::profile::TransportKind;
 
-fn wait(flag: &AtomicBool) {
-    let deadline = Instant::now() + Duration::from_secs(10);
-    while !flag.load(Ordering::Acquire) {
-        assert!(Instant::now() < deadline, "timeout");
-        std::thread::yield_now();
-    }
-}
-
-fn main() {
-    // SRD-style fabric: reliable, connectionless, NO ordering — the
-    // common ground fabric-lib standardizes on (paper Table 1).
-    let fabric = LocalFabric::new(TransportKind::Srd, 7);
-    let node_a = ThreadedEngine::new(&fabric, 0, /*gpus=*/ 1, /*nics per gpu=*/ 2);
-    let node_b = ThreadedEngine::new(&fabric, 1, 1, 2);
+/// The entire quickstart, written once against the trait.
+fn demo(cx: &mut Cx, node_a: &dyn TransferEngine, node_b: &dyn TransferEngine) {
     println!("node A main address: {}", node_a.main_address());
     println!("node B main address: {}", node_b.main_address());
 
@@ -48,34 +56,51 @@ fn main() {
 
     // --- One-sided WRITEIMM + IMMCOUNTER -------------------------------
     src.buf.write(0, b"hello, one-sided world");
-    let received = Arc::new(AtomicBool::new(false));
-    let r = received.clone();
     // B expects exactly one immediate 42 — no ordering assumptions,
     // just a count (paper §3.3).
-    node_b.expect_imm_count(0, 42, 1, move || r.store(true, Ordering::Release));
-    let sent = Arc::new(AtomicBool::new(false));
-    node_a.submit_single_write((&src, 0), 22, (&dst_desc, 128), Some(42), OnDoneT::Flag(sent.clone()));
-    wait(&sent);
-    wait(&received);
+    let received = expect_flag(node_b, cx, 0, 42, 1);
+    let sent = new_flag();
+    node_a.submit_single_write(
+        cx,
+        (&src, 0),
+        22,
+        (&dst_desc, 128),
+        Some(42),
+        Notify::Flag(sent.clone()),
+    );
+    cx.wait(&sent);
+    cx.wait(&received);
     let mut out = vec![0u8; 22];
     dst_handle.buf.read(128, &mut out);
     println!("B received via WRITEIMM: {:?}", String::from_utf8_lossy(&out));
 
     // --- Two-sided SEND/RECV RPC ----------------------------------------
-    let replies = Arc::new(AtomicU64::new(0));
+    let replies = new_flag();
     let rp = replies.clone();
-    node_b.submit_recvs(0, 256, 8, move |msg| {
-        println!("B got RPC: {:?}", String::from_utf8_lossy(msg));
-        rp.fetch_add(1, Ordering::Relaxed);
-    });
+    let seen = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let sn = seen.clone();
+    node_b.submit_recvs(
+        cx,
+        0,
+        256,
+        8,
+        std::sync::Arc::new(move |msg: &[u8]| {
+            println!("B got RPC: {:?}", String::from_utf8_lossy(msg));
+            if sn.fetch_add(1, Ordering::Relaxed) + 1 == 3 {
+                rp.store(true, Ordering::Release);
+            }
+        }),
+    );
     for i in 0..3 {
-        node_a.submit_send(0, &node_b.group_address(0), format!("request #{i}").as_bytes(), OnDoneT::Noop);
+        node_a.submit_send(
+            cx,
+            0,
+            &node_b.group_address(0),
+            format!("request #{i}").as_bytes(),
+            Notify::Noop,
+        );
     }
-    let deadline = Instant::now() + Duration::from_secs(10);
-    while replies.load(Ordering::Relaxed) < 3 {
-        assert!(Instant::now() < deadline, "timeout");
-        std::thread::yield_now();
-    }
+    cx.wait(&replies);
 
     // --- Sharded large write across both NICs --------------------------
     let len = 2 << 20;
@@ -83,14 +108,44 @@ fn main() {
     let (big_dst_h, big_dst_d) = node_b.alloc_mr(0, len);
     let pat: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
     big_src.buf.write(0, &pat);
-    let done = Arc::new(AtomicBool::new(false));
-    node_a.submit_single_write((&big_src, 0), len as u64, (&big_dst_d, 0), None, OnDoneT::Flag(done.clone()));
-    wait(&done);
+    let done = new_flag();
+    node_a.submit_single_write(
+        cx,
+        (&big_src, 0),
+        len as u64,
+        (&big_dst_d, 0),
+        None,
+        Notify::Flag(done.clone()),
+    );
+    cx.wait(&done);
     assert_eq!(big_dst_h.buf.to_vec(), pat);
-    println!("2 MiB write sharded across 2 NICs: payload verified");
+    println!(
+        "2 MiB write sharded across {} NICs: payload verified",
+        node_a.nics_per_gpu()
+    );
 
-    node_a.shutdown();
-    node_b.shutdown();
-    fabric.shutdown();
-    println!("quickstart OK");
+    // --- Scatter + barrier through a peer group ------------------------
+    let group = node_a.add_peer_group(vec![node_b.main_address()]);
+    let barried = expect_flag(node_b, cx, 0, 77, 1);
+    node_a.submit_barrier(cx, 0, Some(group), &[dst_desc], 77, Notify::Noop);
+    cx.wait(&barried);
+    println!("peer-group barrier delivered (imm-only write)");
+}
+
+fn main() {
+    for kind in [RuntimeKind::Des, RuntimeKind::Threaded] {
+        println!("==== runtime: {kind:?} ====");
+        // 2 nodes x 1 GPU x 2 NICs; SRD-style semantics: reliable,
+        // connectionless, NO ordering — the common ground fabric-lib
+        // standardizes on (paper Table 1).
+        let mut cluster = Cluster::new(kind, 2, 1, 2, 7);
+        {
+            let (mut cx, engines) = cluster.parts();
+            demo(&mut cx, engines[0], engines[1]);
+            cx.settle();
+        }
+        cluster.shutdown();
+        println!();
+    }
+    println!("quickstart OK on both runtimes");
 }

@@ -7,13 +7,12 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
 
 use fabric_lib::apps::moe::rank::Strategy;
 use fabric_lib::apps::moe::{harness::run_epoch_with, MoeConfig};
 use fabric_lib::engine::api::ScatterDst;
-use fabric_lib::engine::threaded::{OnDoneT, ThreadedEngine};
+use fabric_lib::engine::threaded::ThreadedEngine;
+use fabric_lib::engine::traits::{new_flag, Cx, Notify, TransferEngine};
 use fabric_lib::fabric::local::LocalFabric;
 use fabric_lib::fabric::profile::{NicProfile, TransportKind};
 use fabric_lib::sim::stats::Histogram;
@@ -145,22 +144,26 @@ fn main() {
     println!("chaining must reduce CPU post time (fewer doorbells).\n");
 
     // ---- Real measurement: threaded engine submit→post (wall clock) ----
+    // Driven through `&dyn TransferEngine` — the same trait the apps
+    // use — so the measured path includes the uniform-API dispatch
+    // (negligible against the µs-scale submit/post costs it verifies).
     let fabric = LocalFabric::new(TransportKind::Srd, 42);
     let a = ThreadedEngine::new(&fabric, 0, 1, 2);
     let b = ThreadedEngine::new(&fabric, 1, 1, 2);
-    let (src, _) = a.alloc_mr(0, 1 << 20);
+    let eng: &dyn TransferEngine = &a;
+    let mut cx = Cx::Threaded;
+    let (src, _) = eng.alloc_mr(0, 1 << 20);
     let peers: Vec<_> = (0..56).map(|_| b.alloc_mr(0, 1 << 20).1).collect();
+    let group = eng.add_peer_group(vec![b.main_address(); 56]);
     let n_iters = if fast { 200 } else { 2000 };
     for _ in 0..n_iters {
         let dsts: Vec<ScatterDst> = peers
             .iter()
             .map(|d| ScatterDst { len: 4096, src: 0, dst: (d.clone(), 0) })
             .collect();
-        let done = Arc::new(AtomicBool::new(false));
-        a.submit_scatter(&src, &dsts, None, OnDoneT::Flag(done.clone()));
-        while !done.load(Ordering::Acquire) {
-            std::thread::yield_now();
-        }
+        let done = new_flag();
+        eng.submit_scatter(&mut cx, Some(group), &src, &dsts, None, Notify::Flag(done.clone()));
+        cx.wait(&done);
     }
     let traces = a.traces();
     let mut enq = Histogram::new();

@@ -1,7 +1,8 @@
 //! Control-plane messages between decoder and prefiller (Appendix A,
 //! Fig 13), serialized with the engine wire format.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::err::Result;
 
 use crate::engine::api::{MrDesc, NetAddr};
 use crate::engine::wire::{self, tag, Dec, Enc};

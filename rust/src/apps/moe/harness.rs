@@ -1,12 +1,24 @@
 //! MoE scenario harness: builds a cluster, runs iterations, collects
 //! the latency distributions the paper's Figures 9–12 and Tables 6–9
 //! report.
+//!
+//! Two entry points at different fidelities:
+//!
+//! * [`run_decode_epoch`] / [`run_epoch_with`] — the timing-faithful
+//!   Fig-9..12 epochs. They need the DES fabric's GPU-kernel and
+//!   NVLink models and therefore run on the DES engine only.
+//! * [`run_generic_dispatch_round`] — the MoE *communication
+//!   protocol* (peer-group scatter of token payloads, count-based
+//!   completion, engine barrier for buffer reuse, §6.1–6.3) over
+//!   `&dyn TransferEngine`, so it runs bit-identical on both the DES
+//!   and threaded runtimes.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::engine::api::EngineCosts;
+use crate::engine::api::{EngineCosts, MrDesc, MrHandle, ScatterDst};
 use crate::engine::des_engine::Engine;
+use crate::engine::traits::{expect_flag, Cx, Notify, SharedFlag, TransferEngine};
 use crate::fabric::nic::NicAddr;
 use crate::fabric::profile::{GpuProfile, NicProfile};
 use crate::fabric::simnet::SimNet;
@@ -191,10 +203,114 @@ pub fn run_epoch_with(
     out
 }
 
+/// Runtime-agnostic MoE all-to-all round (§6.1–6.3 protocol): every
+/// rank scatters `tokens_per_peer` tokens of `token_bytes` to each
+/// peer through a registered peer group, receivers gate on one
+/// `expect_imm_count` per round, and a handle-based engine barrier
+/// confirms buffer reuse — scatter + barrier + imm counting end to
+/// end on whichever runtime backs `cx`.
+pub fn run_generic_dispatch_round(
+    cx: &mut Cx,
+    engines: &[&dyn TransferEngine],
+    tokens_per_peer: u32,
+    token_bytes: u64,
+) {
+    let n = engines.len();
+    assert!(n >= 2, "all-to-all needs at least two ranks");
+    let slot = tokens_per_peer as u64 * token_bytes;
+    const IMM_TOKEN: u32 = 0x301;
+    const IMM_BARRIER: u32 = 0x302;
+
+    // Per-rank receive region: one slot per source rank.
+    let regions: Vec<(MrHandle, MrDesc)> = engines
+        .iter()
+        .map(|e| e.alloc_mr(0, (slot * n as u64) as usize))
+        .collect();
+
+    // Receiver-side expectations, registered before any data moves.
+    let mut token_flags: Vec<SharedFlag> = Vec::with_capacity(n);
+    let mut barrier_flags: Vec<SharedFlag> = Vec::with_capacity(n);
+    for e in engines {
+        token_flags.push(expect_flag(*e, cx, 0, IMM_TOKEN, (n - 1) as u32));
+        barrier_flags.push(expect_flag(*e, cx, 0, IMM_BARRIER, (n - 1) as u32));
+    }
+
+    // Dispatch: each rank scatters its token block into its own slot
+    // of every peer's region, through a registered peer group.
+    let mut groups = Vec::with_capacity(n);
+    for (me, e) in engines.iter().enumerate() {
+        let peers = engines
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| *d != me)
+            .map(|(_, p)| p.main_address())
+            .collect();
+        let group = e.add_peer_group(peers);
+        groups.push(group);
+        let (src, _) = e.alloc_mr(0, slot as usize);
+        src.buf.write(0, &vec![me as u8 + 1; slot as usize]);
+        let dsts: Vec<ScatterDst> = regions
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| *d != me)
+            .map(|(_, (_, desc))| ScatterDst {
+                len: slot,
+                src: 0,
+                dst: (desc.clone(), me as u64 * slot),
+            })
+            .collect();
+        e.submit_scatter(cx, Some(group), &src, &dsts, Some(IMM_TOKEN), Notify::Noop);
+    }
+    cx.wait_all(&token_flags);
+
+    // Payload integrity: receiver `dst` sees `src + 1` bytes in slot
+    // `src` for every source rank.
+    for (dst, (h, _)) in regions.iter().enumerate() {
+        let v = h.buf.to_vec();
+        for src in 0..n {
+            if src == dst {
+                continue;
+            }
+            let seg = &v[(src as u64 * slot) as usize..((src as u64 + 1) * slot) as usize];
+            assert!(
+                seg.iter().all(|&b| b == src as u8 + 1),
+                "rank {dst}: slot from rank {src} corrupted"
+            );
+        }
+    }
+
+    // Barrier through the same group handles: buffers may be reused.
+    for (me, e) in engines.iter().enumerate() {
+        let descs: Vec<MrDesc> = regions
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| *d != me)
+            .map(|(_, (_, d))| d.clone())
+            .collect();
+        e.submit_barrier(cx, 0, Some(groups[me]), &descs, IMM_BARRIER, Notify::Noop);
+    }
+    cx.wait_all(&barrier_flags);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::traits::run_on_both;
     use crate::sim::time::{MS, US};
+
+    #[test]
+    fn generic_dispatch_round_runs_on_both_runtimes() {
+        run_on_both(4, 1, 1, 0x40E, |cx, engines| {
+            run_generic_dispatch_round(cx, engines, 8, 64);
+        });
+    }
+
+    #[test]
+    fn generic_dispatch_round_multi_nic() {
+        run_on_both(3, 1, 2, 0x40F, |cx, engines| {
+            run_generic_dispatch_round(cx, engines, 4, 128);
+        });
+    }
 
     #[test]
     fn tiny_epoch_completes_all_impls() {

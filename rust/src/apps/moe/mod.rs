@@ -22,5 +22,5 @@ pub mod rank;
 pub mod routing;
 
 pub use config::MoeConfig;
-pub use harness::{run_decode_epoch, MoeImpl, MoeLatencies};
+pub use harness::{run_decode_epoch, run_generic_dispatch_round, MoeImpl, MoeLatencies};
 pub use routing::RoutingPlan;

@@ -13,6 +13,7 @@ use std::rc::Rc;
 use crate::collectives::CollectiveWorld;
 use crate::engine::api::EngineCosts;
 use crate::engine::des_engine::Engine;
+use crate::engine::traits::{expect_flag, Cx, Notify, TransferEngine};
 use crate::fabric::nic::NicAddr;
 use crate::fabric::profile::{GpuProfile, NicProfile};
 use crate::fabric::simnet::SimNet;
@@ -88,9 +89,46 @@ pub fn run_rank0_broadcast(spec: &RlModelSpec, nic: NicProfile, world_scale: u32
     }
 }
 
+/// Runtime-agnostic rank0 fan-out (the baseline's broadcast leg as a
+/// pure transfer protocol): rank0 writes `bytes` of weights to every
+/// peer with a WRITEIMM, each peer gates on `expect_imm_count(_, 1)`
+/// — runs on whichever runtime backs `cx`, unlike the timing-bound
+/// [`run_rank0_broadcast`] which needs the DES collectives model.
+pub fn run_generic_rank0_fanout(cx: &mut Cx, engines: &[&dyn TransferEngine], bytes: u64) {
+    assert!(engines.len() >= 2);
+    const IMM_WEIGHTS: u32 = 0x510;
+    let rank0 = engines[0];
+    let (src, _) = rank0.alloc_mr(0, bytes as usize);
+    let fill: Vec<u8> = (0..bytes).map(|i| (i % 251) as u8).collect();
+    src.buf.write(0, &fill);
+
+    let mut flags = Vec::new();
+    let mut regions = Vec::new();
+    for peer in &engines[1..] {
+        let (h, d) = peer.alloc_mr(0, bytes as usize);
+        flags.push(expect_flag(*peer, cx, 0, IMM_WEIGHTS, 1));
+        regions.push((h, d));
+    }
+    for (_, d) in &regions {
+        rank0.submit_single_write(cx, (&src, 0), bytes, (d, 0), Some(IMM_WEIGHTS), Notify::Noop);
+    }
+    cx.wait_all(&flags);
+    for (i, (h, _)) in regions.iter().enumerate() {
+        assert_eq!(h.buf.to_vec(), fill, "peer {i} weight payload corrupted");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::traits::run_on_both;
+
+    #[test]
+    fn generic_rank0_fanout_runs_on_both_runtimes() {
+        run_on_both(4, 1, 1, 0xBA5E, |cx, engines| {
+            run_generic_rank0_fanout(cx, engines, 32 * 1024);
+        });
+    }
 
     #[test]
     fn baseline_is_nic_bound_at_rank0() {

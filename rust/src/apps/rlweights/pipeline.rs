@@ -17,6 +17,7 @@ use std::rc::Rc;
 
 use crate::engine::api::{EngineCosts, MrDesc, MrHandle};
 use crate::engine::des_engine::{Engine, OnDone};
+use crate::engine::traits::{expect_flag, new_flag, Cx, Notify, SharedFlag, TransferEngine};
 use crate::fabric::nic::NicAddr;
 use crate::fabric::profile::{GpuProfile, NicProfile};
 use crate::fabric::simnet::SimNet;
@@ -449,9 +450,94 @@ pub fn run_p2p_transfer(spec: &RlModelSpec, nic: NicProfile, scale: f64) -> RlRe
     }
 }
 
+/// Runtime-agnostic P2P weight sync (the §5.2 transfer protocol,
+/// stripped of the prep-pipeline cost model): every trainer
+/// zero-copy-writes its `shard_bytes` shard into a trainer-indexed
+/// slot of every replica's weight region (WRITEIMM per write), waits
+/// for its own write completions, then arrives at the engine-level
+/// barrier; each replica gates on count-based expectations for both.
+/// Runs on whichever runtime backs `cx`.
+pub fn run_generic_weight_sync(
+    cx: &mut Cx,
+    trainers: &[&dyn TransferEngine],
+    replicas: &[&dyn TransferEngine],
+    shard_bytes: u64,
+) {
+    assert!(!trainers.is_empty() && !replicas.is_empty());
+    const IMM_SHARD: u32 = 0x520;
+    const IMM_BARRIER: u32 = 0x521;
+    let t = trainers.len();
+
+    // Replica weight regions: one shard slot per trainer, plus the
+    // receive-side expectations (shards + barrier), registered first.
+    let mut regions = Vec::new();
+    let mut shard_flags: Vec<SharedFlag> = Vec::new();
+    let mut barrier_flags: Vec<SharedFlag> = Vec::new();
+    for r in replicas {
+        let (h, d) = r.alloc_mr(0, (shard_bytes * t as u64) as usize);
+        shard_flags.push(expect_flag(*r, cx, 0, IMM_SHARD, t as u32));
+        barrier_flags.push(expect_flag(*r, cx, 0, IMM_BARRIER, t as u32));
+        regions.push((h, d));
+    }
+
+    // Stage 3 (per trainer): one write per replica.
+    let mut write_flags: Vec<SharedFlag> = Vec::new();
+    let mut srcs = Vec::new();
+    for (ti, tr) in trainers.iter().enumerate() {
+        let (src, _) = tr.alloc_mr(0, shard_bytes as usize);
+        src.buf
+            .write(0, &vec![ti as u8 + 1; shard_bytes as usize]);
+        for (_, d) in &regions {
+            let f = new_flag();
+            tr.submit_single_write(
+                cx,
+                (&src, 0),
+                shard_bytes,
+                (d, ti as u64 * shard_bytes),
+                Some(IMM_SHARD),
+                Notify::Flag(f.clone()),
+            );
+            write_flags.push(f);
+        }
+        srcs.push(src);
+    }
+    // Stage 4: a trainer arrives at the barrier only once its own
+    // writes completed (the engine guarantees no ordering, so the
+    // barrier immediate must not overtake an unposted write).
+    cx.wait_all(&write_flags);
+    let replica_descs: Vec<MrDesc> = regions.iter().map(|(_, d)| d.clone()).collect();
+    for tr in trainers {
+        let group = tr.add_peer_group(replicas.iter().map(|r| r.main_address()).collect());
+        tr.submit_barrier(cx, 0, Some(group), &replica_descs, IMM_BARRIER, Notify::Noop);
+    }
+    cx.wait_all(&shard_flags);
+    cx.wait_all(&barrier_flags);
+
+    // Every replica holds every trainer's shard in the right slot.
+    for (ri, (h, _)) in regions.iter().enumerate() {
+        let v = h.buf.to_vec();
+        for ti in 0..t {
+            let seg = &v[(ti as u64 * shard_bytes) as usize..((ti as u64 + 1) * shard_bytes) as usize];
+            assert!(
+                seg.iter().all(|&b| b == ti as u8 + 1),
+                "replica {ri}: shard from trainer {ti} corrupted"
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::traits::run_on_both;
+
+    #[test]
+    fn generic_weight_sync_runs_on_both_runtimes() {
+        run_on_both(5, 1, 1, 0x51EE7, |cx, engines| {
+            let (trainers, replicas) = engines.split_at(3);
+            run_generic_weight_sync(cx, trainers, replicas, 4096);
+        });
+    }
 
     #[test]
     fn tiny_pipeline_completes_with_overlap() {

@@ -64,6 +64,13 @@ pub struct MrDesc {
 impl MrDesc {
     /// The rkey to use when targeting this region through remote NIC
     /// index `i`.
+    ///
+    /// Wraps modulo the rkey count as a release-mode defensive
+    /// fallback only: §3.2 requires local and remote domain groups to
+    /// run the same NIC count, and every submission path asserts that
+    /// invariant in debug builds (`engine::core::checked_fanout`)
+    /// before indexes reach this method — a silent wrap here would
+    /// otherwise misroute shards of a fanout-mismatched transfer.
     pub fn rkey_for(&self, i: usize) -> (NicAddr, u64) {
         self.rkeys[i % self.rkeys.len()]
     }
@@ -233,7 +240,9 @@ mod tests {
         };
         assert_eq!(d.rkey_for(0), (nic(2, 0), 11));
         assert_eq!(d.rkey_for(1), (nic(2, 1), 22));
-        // Wraps for mismatched counts (defensive).
+        // Release-mode defensive wrap only; submission paths
+        // debug_assert the §3.2 equal-NIC-count invariant first (see
+        // engine::core tests for the mismatch path).
         assert_eq!(d.rkey_for(2), (nic(2, 0), 11));
         assert_eq!(d.owner().fanout(), 2);
     }

@@ -1,0 +1,577 @@
+//! Runtime-independent submission core shared by both TransferEngine
+//! runtimes (paper §3.2–3.4).
+//!
+//! Before this module existed, `des_engine.rs` and `threaded.rs` each
+//! carried a private copy of the same submission-path state machines.
+//! Everything that does not depend on *how* work requests are driven
+//! (virtual clock vs. pinned threads) lives here exactly once:
+//!
+//! * [`PeerGroups`] — registry behind `add_peer_group` handles;
+//! * [`Rotation`] — per-group NIC rotation cursor for load balancing;
+//! * [`TransferTable`] — transfer-id allocation plus WR→transfer
+//!   completion accounting (generic over the runtime's `OnDone`);
+//! * [`ImmTable`] — IMMCOUNTER state plus expectation waiters
+//!   (generic over the runtime's callback type);
+//! * [`RecvPool`] — rotating receive-buffer matching and re-post
+//!   bookkeeping;
+//! * [`route_single_write`] / [`route_paged_writes`] /
+//!   [`route_scatter`] / [`route_barrier`] — the bridge from the Fig-2
+//!   API calls to [`super::sharding`] plans, with each planned write
+//!   paired to its destination `(NIC, rkey)`.
+//!
+//! The routing bridge also enforces the §3.2 equal-NIC-count
+//! invariant: in debug builds, submitting a transfer whose remote
+//! descriptor carries a different rkey count than the local domain
+//! group's fanout panics instead of silently wrapping rkey selection
+//! modulo the remote count (the `MrDesc::rkey_for` footgun).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::api::{MrDesc, NetAddr, Pages, PeerGroupHandle, ScatterDst};
+use super::imm_counter::{ImmCounter, ImmEvent};
+use super::sharding::{plan_paged_writes, plan_scatter, plan_single_write, PlannedWrite};
+use crate::fabric::mem::DmaBuf;
+use crate::fabric::nic::NicAddr;
+use crate::util::fasthash::FastMap;
+
+/// A planned write routed to its destination: the NIC-indexed plan
+/// plus the remote `(NIC, rkey)` pair it must target. Runtimes only
+/// have to wrap each entry in a `WorkRequest` and post it.
+pub type RoutedWrite = (PlannedWrite, (NicAddr, u64));
+
+// ---------------------------------------------------------------------
+// Peer groups
+// ---------------------------------------------------------------------
+
+/// Registry behind `add_peer_group` handles (paper Fig 2): a group is
+/// a pre-registered peer list that scatter/barrier may target without
+/// re-validating addresses per call.
+#[derive(Default)]
+pub struct PeerGroups {
+    next: u64,
+    groups: HashMap<u64, Vec<NetAddr>>,
+}
+
+impl PeerGroups {
+    /// Empty registry; handles start at 1.
+    pub fn new() -> Self {
+        PeerGroups {
+            next: 1,
+            groups: HashMap::new(),
+        }
+    }
+
+    /// Register a peer list, returning its handle.
+    pub fn add(&mut self, addrs: Vec<NetAddr>) -> PeerGroupHandle {
+        let id = self.next;
+        self.next += 1;
+        self.groups.insert(id, addrs);
+        PeerGroupHandle(id)
+    }
+
+    /// Look up a group's peer list.
+    pub fn get(&self, h: PeerGroupHandle) -> Option<&[NetAddr]> {
+        self.groups.get(&h.0).map(|v| v.as_slice())
+    }
+
+    /// Debug-check a scatter/barrier submission against its group: the
+    /// handle must be registered and the destination count must not
+    /// exceed the group size. The body is all `debug_assert!`s —
+    /// runtimes gate the call (and any lock it needs) behind
+    /// `cfg!(debug_assertions)` to keep it off the release hot path.
+    pub fn check(&self, group: Option<PeerGroupHandle>, n_dsts: usize) {
+        if let Some(h) = group {
+            let peers = self.get(h);
+            debug_assert!(peers.is_some(), "submission against unknown {h:?}");
+            if let Some(peers) = peers {
+                debug_assert!(
+                    n_dsts <= peers.len(),
+                    "{n_dsts} destinations exceed the {} peers of {h:?}",
+                    peers.len()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NIC rotation
+// ---------------------------------------------------------------------
+
+/// Per-group rotation cursor: successive transfers start on successive
+/// NICs so single-NIC-sized transfers still load-balance over time
+/// (§3.4). Atomic so the threaded runtime can bump it lock-free; the
+/// DES runtime uses it single-threaded.
+#[derive(Default)]
+pub struct Rotation(AtomicUsize);
+
+impl Rotation {
+    /// Cursor starting at zero.
+    pub fn new() -> Self {
+        Rotation(AtomicUsize::new(0))
+    }
+
+    /// Advance and return the new cursor value.
+    pub fn bump(&self) -> usize {
+        self.0.fetch_add(1, Ordering::Relaxed).wrapping_add(1)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Transfer accounting
+// ---------------------------------------------------------------------
+
+struct Inflight<D> {
+    remaining: usize,
+    on_done: D,
+}
+
+/// Transfer-id allocation plus WR→transfer completion accounting,
+/// generic over the runtime's completion payload (`OnDone` for the DES
+/// engine, `OnDoneT` for the threaded one).
+pub struct TransferTable<D> {
+    next: u64,
+    transfers: FastMap<u64, Inflight<D>>,
+    wr_transfer: FastMap<u64, u64>,
+}
+
+impl<D> Default for TransferTable<D> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<D> TransferTable<D> {
+    /// Empty table; transfer ids start at 1.
+    pub fn new() -> Self {
+        TransferTable {
+            next: 1,
+            transfers: FastMap::default(),
+            wr_transfer: FastMap::default(),
+        }
+    }
+
+    /// Open a transfer expecting `remaining` WR completions.
+    pub fn begin(&mut self, remaining: usize, on_done: D) -> u64 {
+        debug_assert!(remaining > 0, "empty transfer");
+        let id = self.next;
+        self.next += 1;
+        self.transfers.insert(
+            id,
+            Inflight {
+                remaining,
+                on_done,
+            },
+        );
+        id
+    }
+
+    /// Attribute a posted WR to a transfer.
+    pub fn bind_wr(&mut self, wr_id: u64, transfer: u64) {
+        self.wr_transfer.insert(wr_id, transfer);
+    }
+
+    /// Record a WR completion; returns the transfer's completion
+    /// payload when its last WR finished, `None` otherwise (including
+    /// for WRs the table never saw, e.g. receive reposts).
+    pub fn complete_wr(&mut self, wr_id: u64) -> Option<D> {
+        let tid = self.wr_transfer.remove(&wr_id)?;
+        let t = self.transfers.get_mut(&tid).expect("transfer state");
+        t.remaining -= 1;
+        if t.remaining == 0 {
+            Some(self.transfers.remove(&tid).unwrap().on_done)
+        } else {
+            None
+        }
+    }
+
+    /// Open transfers (leak check in tests).
+    pub fn in_flight(&self) -> usize {
+        self.transfers.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// IMMCOUNTER + waiters
+// ---------------------------------------------------------------------
+
+/// IMMCOUNTER slots plus the expectation waiters both runtimes kept
+/// separately, generic over the runtime's callback type.
+pub struct ImmTable<CB> {
+    counter: ImmCounter,
+    waiters: HashMap<u32, CB>,
+}
+
+impl<CB> Default for ImmTable<CB> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<CB> ImmTable<CB> {
+    /// Empty table.
+    pub fn new() -> Self {
+        ImmTable {
+            counter: ImmCounter::new(),
+            waiters: HashMap::new(),
+        }
+    }
+
+    /// Register `expect_imm_count(imm, count)`: returns `Some(cb)`
+    /// when the expectation is already satisfied (the caller must
+    /// dispatch it), or parks the callback and returns `None`.
+    pub fn expect(&mut self, imm: u32, count: u32, cb: CB) -> Option<CB> {
+        match self.counter.expect(imm, count) {
+            ImmEvent::Satisfied => Some(cb),
+            ImmEvent::Pending => {
+                self.waiters.insert(imm, cb);
+                None
+            }
+        }
+    }
+
+    /// Record one received immediate; returns the waiter to dispatch
+    /// when this increment satisfied its expectation.
+    pub fn on_imm(&mut self, imm: u32) -> Option<CB> {
+        match self.counter.increment(imm) {
+            ImmEvent::Satisfied => self.waiters.remove(&imm),
+            ImmEvent::Pending => None,
+        }
+    }
+
+    /// Current count for `imm`.
+    pub fn value(&self, imm: u32) -> u32 {
+        self.counter.value(imm)
+    }
+
+    /// Release all state for `imm`, including any parked waiter.
+    pub fn free(&mut self, imm: u32) {
+        self.counter.free(imm);
+        self.waiters.remove(&imm);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Receive matching
+// ---------------------------------------------------------------------
+
+struct RecvSlot {
+    buf: DmaBuf,
+    len: usize,
+}
+
+/// Rotating receive-buffer pool: posted buffers keyed by wr_id, with
+/// the payload-extraction + re-post bookkeeping both runtimes
+/// duplicated.
+#[derive(Default)]
+pub struct RecvPool {
+    slots: FastMap<u64, RecvSlot>,
+}
+
+impl RecvPool {
+    /// Empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Track a posted receive buffer of capacity `len`.
+    pub fn post(&mut self, wr_id: u64, buf: DmaBuf, len: usize) {
+        self.slots.insert(wr_id, RecvSlot { buf, len });
+    }
+
+    /// Complete a receive of `len` bytes on `wr_id`: extracts the
+    /// payload (truncated to the buffer's capacity), re-tracks the
+    /// buffer under `repost_id` (rotating-pool semantics) and returns
+    /// `(payload, buffer, overflowed)` so the runtime can re-post the
+    /// buffer and decide how to surface an oversized SEND. The pool
+    /// itself must not panic here: the threaded runtime calls this on
+    /// a worker thread, where a panic would poison the group lock and
+    /// hang waiters instead of diagnosing anything.
+    pub fn complete(&mut self, wr_id: u64, len: u32, repost_id: u64) -> (Vec<u8>, DmaBuf, bool) {
+        let slot = self
+            .slots
+            .remove(&wr_id)
+            .expect("RecvDone for unknown buffer");
+        let overflowed = len as usize > slot.len;
+        let mut data = vec![0u8; (len as usize).min(slot.len)];
+        slot.buf.read(0, &mut data);
+        let buf = slot.buf.clone();
+        self.slots.insert(repost_id, slot);
+        (data, buf, overflowed)
+    }
+
+    /// The message a runtime should raise when [`RecvPool::complete`]
+    /// reports an overflow.
+    pub fn overflow_msg(len: u32, capacity: usize) -> String {
+        format!(
+            "SEND of {len} B overflows the {capacity} B recv buffer \
+             (size the submit_recvs pool for the largest message)"
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// API → plan → rkey routing bridge
+// ---------------------------------------------------------------------
+
+/// Effective fanout for a transfer against `desc`, enforcing the §3.2
+/// invariant that local and remote domain groups run the same NIC
+/// count. Debug builds panic on a mismatch; release builds fall back
+/// to the defensive minimum so rkey selection never wraps.
+fn checked_fanout(local_fanout: usize, desc: &MrDesc) -> usize {
+    debug_assert_eq!(
+        desc.rkeys.len(),
+        local_fanout,
+        "§3.2 equal-NIC-count invariant: remote descriptor has {} rkeys \
+         but the local domain group has {local_fanout} NICs",
+        desc.rkeys.len()
+    );
+    local_fanout.min(desc.rkeys.len()).max(1)
+}
+
+/// Route a contiguous one-sided write (paper `submit_single_write`):
+/// plan sharding across NICs, then pair each shard with the remote
+/// rkey of its paired NIC.
+pub fn route_single_write(
+    local_fanout: usize,
+    rotation: usize,
+    src_off: u64,
+    len: u64,
+    dst: (&MrDesc, u64),
+    imm: Option<u32>,
+) -> Vec<RoutedWrite> {
+    let (desc, dst_off) = dst;
+    let fanout = checked_fanout(local_fanout, desc);
+    let plans = plan_single_write(len, src_off, desc.ptr + dst_off, imm, fanout, rotation);
+    pair_with_rkeys(plans, desc)
+}
+
+/// Route paged writes (paper `submit_paged_writes`): source page `i`
+/// lands at destination page `i`, one WR per page, round-robin across
+/// NICs.
+pub fn route_paged_writes(
+    local_fanout: usize,
+    rotation: usize,
+    page_len: u64,
+    src_pages: &Pages,
+    dst: (&MrDesc, &Pages),
+    imm: Option<u32>,
+) -> Vec<RoutedWrite> {
+    let (desc, dst_pages) = dst;
+    let fanout = checked_fanout(local_fanout, desc);
+    let src_offs: Vec<u64> = (0..src_pages.len()).map(|i| src_pages.at(i)).collect();
+    let dst_vas: Vec<u64> = (0..dst_pages.len())
+        .map(|i| desc.ptr + dst_pages.at(i))
+        .collect();
+    let plans = plan_paged_writes(page_len, &src_offs, &dst_vas, imm, fanout, rotation);
+    pair_with_rkeys(plans, desc)
+}
+
+/// Route a scatter (paper `submit_scatter`): one WR per destination,
+/// NIC-rotated per entry, each paired with its *own* destination's
+/// rkey (destinations live on different peers).
+pub fn route_scatter(
+    local_fanout: usize,
+    rotation: usize,
+    dsts: &[ScatterDst],
+    imm: Option<u32>,
+) -> Vec<RoutedWrite> {
+    let entries: Vec<(u64, u64, u64)> = dsts
+        .iter()
+        .map(|d| (d.len, d.src, d.dst.0.ptr + d.dst.1))
+        .collect();
+    let plans = plan_scatter(&entries, imm, local_fanout.max(1), rotation);
+    plans
+        .into_iter()
+        .zip(dsts.iter())
+        .map(|(p, d)| {
+            let fanout = checked_fanout(local_fanout, &d.dst.0);
+            let rk = d.dst.0.rkey_for(p.nic % fanout.max(1));
+            (p, rk)
+        })
+        .collect()
+}
+
+/// Route a barrier (paper `submit_barrier`): a zero-length
+/// immediate-only write per destination descriptor.
+pub fn route_barrier(
+    local_fanout: usize,
+    rotation: usize,
+    dsts: &[MrDesc],
+    imm: u32,
+) -> Vec<RoutedWrite> {
+    let entries: Vec<(u64, u64, u64)> = dsts.iter().map(|d| (0u64, 0u64, d.ptr)).collect();
+    let plans = plan_scatter(&entries, Some(imm), local_fanout.max(1), rotation);
+    plans
+        .into_iter()
+        .zip(dsts.iter())
+        .map(|(p, d)| {
+            let fanout = checked_fanout(local_fanout, d);
+            let rk = d.rkey_for(p.nic % fanout.max(1));
+            (p, rk)
+        })
+        .collect()
+}
+
+fn pair_with_rkeys(plans: Vec<PlannedWrite>, desc: &MrDesc) -> Vec<RoutedWrite> {
+    plans
+        .into_iter()
+        .map(|p| {
+            let rk = desc.rkey_for(p.nic);
+            (p, rk)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::api::SPLIT_THRESHOLD;
+
+    fn nic(node: u16, x: u8) -> NicAddr {
+        NicAddr { node, gpu: 0, nic: x }
+    }
+
+    fn desc(node: u16, nics: u8) -> MrDesc {
+        MrDesc {
+            ptr: 0x10_0000,
+            len: 1 << 30,
+            rkeys: (0..nics).map(|i| (nic(node, i), 100 + i as u64)).collect(),
+        }
+    }
+
+    #[test]
+    fn peer_groups_register_and_lookup() {
+        let mut pg = PeerGroups::new();
+        let addrs = vec![NetAddr { nics: vec![nic(1, 0)] }, NetAddr { nics: vec![nic(2, 0)] }];
+        let h = pg.add(addrs.clone());
+        assert_eq!(pg.get(h).unwrap(), addrs.as_slice());
+        let h2 = pg.add(vec![]);
+        assert_ne!(h, h2);
+        pg.check(Some(h), 2);
+        pg.check(None, 99);
+    }
+
+    #[test]
+    fn rotation_advances_monotonically() {
+        let r = Rotation::new();
+        assert_eq!(r.bump(), 1);
+        assert_eq!(r.bump(), 2);
+        assert_eq!(r.bump(), 3);
+    }
+
+    #[test]
+    fn transfer_table_completes_on_last_wr() {
+        let mut t: TransferTable<&'static str> = TransferTable::new();
+        let tid = t.begin(2, "done");
+        t.bind_wr(10, tid);
+        t.bind_wr(11, tid);
+        assert!(t.complete_wr(99).is_none(), "unknown WR ignored");
+        assert!(t.complete_wr(10).is_none());
+        assert_eq!(t.in_flight(), 1);
+        assert_eq!(t.complete_wr(11), Some("done"));
+        assert_eq!(t.in_flight(), 0);
+    }
+
+    #[test]
+    fn imm_table_parks_and_releases_waiters() {
+        let mut t: ImmTable<u32> = ImmTable::new();
+        assert!(t.expect(7, 2, 42).is_none());
+        assert!(t.on_imm(7).is_none());
+        assert_eq!(t.on_imm(7), Some(42));
+        // Early arrivals satisfy a late expectation immediately.
+        t.on_imm(9);
+        assert_eq!(t.expect(9, 1, 5), Some(5));
+        // free() drops parked waiters.
+        t.expect(3, 1, 8);
+        t.free(3);
+        assert!(t.on_imm(3).is_none());
+    }
+
+    #[test]
+    fn recv_pool_rotates_buffers() {
+        let mut pool = RecvPool::new();
+        let buf = DmaBuf::new(0x4000, 64);
+        buf.write(0, b"payload!");
+        pool.post(1, buf, 64);
+        let (data, rebuf, overflowed) = pool.complete(1, 8, 2);
+        assert_eq!(&data, b"payload!");
+        assert!(!overflowed);
+        // The buffer is re-tracked under the repost id.
+        rebuf.write(0, b"again");
+        let (data2, _, _) = pool.complete(2, 5, 3);
+        assert_eq!(&data2, b"again");
+    }
+
+    #[test]
+    fn recv_pool_reports_overflow_without_panicking() {
+        // No panic here: the threaded runtime completes receives on a
+        // worker thread, where a panic would poison the group lock.
+        let mut pool = RecvPool::new();
+        let buf = DmaBuf::new(0x4000, 8);
+        buf.write(0, b"12345678");
+        pool.post(1, buf, 8);
+        let (data, _, overflowed) = pool.complete(1, 9, 2);
+        assert!(overflowed);
+        assert_eq!(&data, b"12345678", "payload truncated to capacity");
+        assert!(RecvPool::overflow_msg(9, data.len()).contains("overflows"));
+    }
+
+    #[test]
+    fn single_write_routes_to_paired_rkeys() {
+        let d = desc(2, 2);
+        let routed = route_single_write(2, 0, 0, 4 * SPLIT_THRESHOLD, (&d, 0), None);
+        assert_eq!(routed.len(), 2, "large imm-less write shards");
+        for (p, (dst_nic, rkey)) in &routed {
+            assert_eq!(*dst_nic, nic(2, p.nic as u8), "NIC i pairs with remote NIC i");
+            assert_eq!(*rkey, 100 + p.nic as u64);
+        }
+    }
+
+    #[test]
+    fn paged_writes_route_one_wr_per_page() {
+        let d = desc(3, 2);
+        let pages = Pages::contiguous(0, 6, 4096);
+        let routed = route_paged_writes(2, 1, 4096, &pages, (&d, &pages), Some(9));
+        assert_eq!(routed.len(), 6, "imm count preserved: one WR per page");
+        assert!(routed.iter().all(|(p, _)| p.imm == Some(9)));
+    }
+
+    #[test]
+    fn scatter_and_barrier_use_each_peers_rkey() {
+        let peers: Vec<MrDesc> = (1..4).map(|n| desc(n, 1)).collect();
+        let dsts: Vec<ScatterDst> = peers
+            .iter()
+            .map(|d| ScatterDst { len: 128, src: 0, dst: (d.clone(), 0) })
+            .collect();
+        let routed = route_scatter(1, 0, &dsts, Some(4));
+        assert_eq!(routed.len(), 3);
+        for (i, (_, (dst_nic, _))) in routed.iter().enumerate() {
+            assert_eq!(dst_nic.node, (i + 1) as u16);
+        }
+        let routed = route_barrier(1, 0, &peers, 5);
+        assert_eq!(routed.len(), 3);
+        assert!(routed.iter().all(|(p, _)| p.len == 0 && p.imm == Some(5)));
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "equal-NIC-count invariant")]
+    fn fanout_mismatch_panics_in_debug() {
+        // Local group has 2 NICs, remote descriptor only 1 rkey: the
+        // old code silently wrapped `rkey_for` modulo 1; now the
+        // submission asserts (§3.2).
+        let d = desc(2, 1);
+        route_single_write(2, 0, 0, 4096, (&d, 0), None);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "equal-NIC-count invariant")]
+    fn scatter_fanout_mismatch_panics_in_debug() {
+        let d = desc(2, 3);
+        let dsts = vec![ScatterDst { len: 8, src: 0, dst: (d, 0) }];
+        route_scatter(2, 0, &dsts, None);
+    }
+}

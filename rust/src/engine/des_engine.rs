@@ -1,9 +1,13 @@
 //! The TransferEngine over the discrete-event fabric.
 //!
-//! This is the timing-faithful engine used by every benchmark and most
-//! integration tests; `engine::threaded` exposes the same API over
-//! real threads for the runnable examples. Architecture mirrors the
-//! paper (§3.2–3.4):
+//! This is the timing-faithful runtime behind the shared
+//! [`super::traits::TransferEngine`] trait, used by every benchmark
+//! and most integration tests; `engine::threaded` implements the same
+//! trait over real threads. All runtime-independent submission logic
+//! (peer groups, imm accounting, recv matching, NIC rotation, the
+//! plan→rkey routing bridge) lives in [`super::core`]; this file adds
+//! only what is DES-specific. Architecture mirrors the paper
+//! (§3.2–3.4):
 //!
 //! * one engine instance per node, managing all of its GPUs;
 //! * a **DomainGroup** per GPU with a pinned worker, coordinating 1–4
@@ -11,20 +15,25 @@
 //! * submissions flow app-thread → lock-free queue → worker, with
 //!   calibrated CPU costs charged along the way (Table 8);
 //! * writes are sharded/rotated across the group's NICs
-//!   ([`super::sharding`]);
-//! * completions feed per-group [`ImmCounter`]s and transfer-level
+//!   ([`super::sharding`] via [`super::core`]);
+//! * completions feed per-group imm counters and transfer-level
 //!   `OnDone` notifications;
 //! * no ordering is assumed anywhere — only counters.
 
 use std::cell::{Cell, RefCell};
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
+use std::collections::VecDeque;
 
-use crate::util::fasthash::FastMap;
 use std::rc::Rc;
 
 use super::api::{EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
-use super::imm_counter::{ImmCounter, ImmEvent};
-use super::sharding::{plan_paged_writes, plan_scatter, plan_single_write, PlannedWrite};
+use super::core::{
+    route_barrier, route_paged_writes, route_scatter, route_single_write, ImmTable, PeerGroups,
+    RecvPool, Rotation, RoutedWrite, TransferTable,
+};
+use super::traits::{
+    Cx, ImmHandler, Notify, RecvHandler, RuntimeKind, TransferEngine, UvmWatcher, WatchHandler,
+};
 use crate::fabric::mem::{DmaBuf, DmaSlice, RKey};
 use crate::fabric::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
 use crate::fabric::profile::GpuProfile;
@@ -60,31 +69,21 @@ pub struct SubmitTrace {
     pub wrs: usize,
 }
 
-struct Transfer {
-    remaining: usize,
-    on_done: OnDone,
-}
-
-struct RecvSlot {
-    buf: DmaBuf,
-    len: usize,
-}
-
 /// Per-GPU domain group state.
 struct Group {
     nics: Vec<NicAddr>,
     /// Worker-thread CPU availability (one pinned worker per group).
     worker_free: Instant,
     /// NIC rotation cursor for load balancing.
-    rotation: usize,
+    rotation: Rotation,
     /// Back-pressured WRs per NIC index.
     pending: Vec<VecDeque<WorkRequest>>,
     /// Posted receive buffers by wr_id.
-    recv_slots: FastMap<u64, RecvSlot>,
+    recvs: RecvPool,
     /// Receive callback (rotating pool semantics).
     recv_cb: Option<Rc<dyn Fn(&mut Sim, &[u8])>>,
-    imm: ImmCounter,
-    imm_waiters: HashMap<u32, Box<dyn FnOnce(&mut Sim)>>,
+    /// IMMCOUNTER slots + expectation waiters.
+    imm: ImmTable<Box<dyn FnOnce(&mut Sim)>>,
 }
 
 struct State {
@@ -95,13 +94,10 @@ struct State {
     gpu_profile: GpuProfile,
     rng: Rng,
     groups: Vec<Group>,
-    transfers: FastMap<u64, Transfer>,
-    /// wr_id -> transfer id, for sender-side accounting.
-    wr_transfer: FastMap<u64, u64>,
+    /// Transfer-id allocation + WR→transfer completion accounting.
+    transfers: TransferTable<OnDone>,
     next_wr: u64,
-    next_transfer: u64,
-    peer_groups: HashMap<u64, Vec<NetAddr>>,
-    next_peer_group: u64,
+    peer_groups: PeerGroups,
     next_watcher: u64,
     watchers: HashMap<u64, Watcher>,
     /// Optional submission-trace sink (Table 8 benches).
@@ -140,11 +136,10 @@ impl Engine {
                     pending: nics.iter().map(|_| VecDeque::new()).collect(),
                     nics,
                     worker_free: 0,
-                    rotation: 0,
-                    recv_slots: FastMap::default(),
+                    rotation: Rotation::new(),
+                    recvs: RecvPool::new(),
                     recv_cb: None,
-                    imm: ImmCounter::new(),
-                    imm_waiters: HashMap::new(),
+                    imm: ImmTable::new(),
                 }
             })
             .collect();
@@ -157,12 +152,9 @@ impl Engine {
                 gpu_profile,
                 rng: Rng::new(seed ^ 0x5EED_ECAF),
                 groups,
-                transfers: FastMap::default(),
-                wr_transfer: FastMap::default(),
+                transfers: TransferTable::new(),
                 next_wr: 1,
-                next_transfer: 1,
-                peer_groups: HashMap::new(),
-                next_peer_group: 1,
+                peer_groups: PeerGroups::new(),
                 next_watcher: 1,
                 watchers: HashMap::new(),
                 trace_sink: None,
@@ -278,21 +270,17 @@ impl Engine {
     ) {
         let payload = msg.to_vec();
         let dst = addr.primary();
-        let (wr_id, tid, post_at, local) = {
+        let (wr_id, post_at, local) = {
             let mut s = self.state.borrow_mut();
             let wr_id = s.alloc_wr();
-            let tid = s.alloc_transfer(Transfer {
-                remaining: 1,
-                on_done,
-            });
-            s.wr_transfer.insert(wr_id, tid);
+            let tid = s.transfers.begin(1, on_done);
+            s.transfers.bind_wr(wr_id, tid);
             let (t, _trace) = s.charge_submission(sim.now(), gpu as usize);
             let prof_post = s.net.profile(s.groups[gpu as usize].nics[0]).post_ns;
             s.groups[gpu as usize].worker_free = t + prof_post;
             let local = s.groups[gpu as usize].nics[0];
-            (wr_id, tid, t + prof_post, local)
+            (wr_id, t + prof_post, local)
         };
-        let _ = tid;
         let this = self.clone();
         sim.at(post_at, move |sim| {
             let net = this.state.borrow().net.clone();
@@ -330,13 +318,7 @@ impl Engine {
                 .collect();
             let local = s.groups[gpu as usize].nics[0];
             for (id, buf) in &bufs {
-                s.groups[gpu as usize].recv_slots.insert(
-                    *id,
-                    RecvSlot {
-                        buf: buf.clone(),
-                        len,
-                    },
-                );
+                s.groups[gpu as usize].recvs.post(*id, buf.clone(), len);
             }
             (bufs, local)
         };
@@ -374,11 +356,16 @@ impl Engine {
         on_done: OnDone,
     ) {
         let (handle, src_off) = src;
-        let (desc, dst_off) = dst;
-        let fanout = desc.rkeys.len().min(self.fanout(handle.device.gpu));
-        let rotation = self.bump_rotation(handle.device.gpu);
-        let plans = plan_single_write(len, src_off, desc.ptr + dst_off, imm, fanout, rotation);
-        self.execute_plans(sim, handle, desc, plans, on_done);
+        let gpu = handle.device.gpu;
+        let routed = route_single_write(
+            self.fanout(gpu),
+            self.bump_rotation(gpu),
+            src_off,
+            len,
+            dst,
+            imm,
+        );
+        self.execute_routed(sim, handle, routed, on_done);
     }
 
     /// Paged writes: page `i` of `src_pages` (each `page_len` bytes)
@@ -393,24 +380,26 @@ impl Engine {
         on_done: OnDone,
     ) {
         let (handle, src_pages) = src;
-        let (desc, dst_pages) = dst;
-        let src_offs: Vec<u64> = (0..src_pages.len()).map(|i| src_pages.at(i)).collect();
-        let dst_vas: Vec<u64> = (0..dst_pages.len())
-            .map(|i| desc.ptr + dst_pages.at(i))
-            .collect();
-        let fanout = desc.rkeys.len().min(self.fanout(handle.device.gpu));
-        let rotation = self.bump_rotation(handle.device.gpu);
-        let plans = plan_paged_writes(page_len, &src_offs, &dst_vas, imm, fanout, rotation);
-        self.execute_plans(sim, handle, desc, plans, on_done);
+        let gpu = handle.device.gpu;
+        let routed = route_paged_writes(
+            self.fanout(gpu),
+            self.bump_rotation(gpu),
+            page_len,
+            src_pages,
+            dst,
+            imm,
+        );
+        self.execute_routed(sim, handle, routed, on_done);
     }
 
     /// Register a peer group for scatter/barrier fast paths.
     pub fn add_peer_group(&self, addrs: Vec<NetAddr>) -> PeerGroupHandle {
-        let mut s = self.state.borrow_mut();
-        let id = s.next_peer_group;
-        s.next_peer_group += 1;
-        s.peer_groups.insert(id, addrs);
-        PeerGroupHandle(id)
+        self.state.borrow_mut().peer_groups.add(addrs)
+    }
+
+    /// The peer list behind a group handle.
+    pub fn peer_group(&self, group: PeerGroupHandle) -> Option<Vec<NetAddr>> {
+        self.state.borrow().peer_groups.get(group).map(|p| p.to_vec())
     }
 
     /// Scatter slices of `src` to many peers (paper `submit_scatter`).
@@ -418,7 +407,7 @@ impl Engine {
     pub fn submit_scatter(
         &self,
         sim: &mut Sim,
-        _group: Option<PeerGroupHandle>,
+        group: Option<PeerGroupHandle>,
         src: &MrHandle,
         dsts: &[ScatterDst],
         imm: Option<u32>,
@@ -428,24 +417,11 @@ impl Engine {
         // rotated per entry; WR templating pre-fills common fields
         // (modeled inside the cost constants).
         let gpu = src.device.gpu;
-        let fanout = self.fanout(gpu);
-        let rotation = self.bump_rotation(gpu);
-        let entries: Vec<(u64, u64, u64)> = dsts
-            .iter()
-            .map(|d| (d.len, d.src, d.dst.0.ptr + d.dst.1))
-            .collect();
-        let plans = plan_scatter(&entries, imm, fanout, rotation);
-        // Pair each plan with its destination's (NIC, rkey) — avoids
-        // cloning whole descriptors per WR on the hot path.
-        let pairs = plans
-            .into_iter()
-            .zip(dsts.iter())
-            .map(|(p, d)| {
-                let rk = d.dst.0.rkey_for(p.nic);
-                (p, rk)
-            })
-            .collect();
-        self.execute_plans_multi(sim, src, pairs, on_done);
+        if cfg!(debug_assertions) {
+            self.state.borrow().peer_groups.check(group, dsts.len());
+        }
+        let routed = route_scatter(self.fanout(gpu), self.bump_rotation(gpu), dsts, imm);
+        self.execute_routed(sim, src, routed, on_done);
     }
 
     /// Immediate-only notification to every peer (paper
@@ -455,7 +431,7 @@ impl Engine {
         &self,
         sim: &mut Sim,
         gpu: u8,
-        _group: Option<PeerGroupHandle>,
+        group: Option<PeerGroupHandle>,
         dsts: &[MrDesc],
         imm: u32,
         on_done: OnDone,
@@ -463,20 +439,11 @@ impl Engine {
         // Zero-length writes need a 1-byte-capable source; use a tiny
         // scratch region (templated once in the real engine).
         let (scratch, _) = self.alloc_mr(gpu, 1);
-        let fanout = self.fanout(gpu);
-        let rotation = self.bump_rotation(gpu);
-        let entries: Vec<(u64, u64, u64)> =
-            dsts.iter().map(|d| (0u64, 0u64, d.ptr)).collect();
-        let plans = plan_scatter(&entries, Some(imm), fanout, rotation);
-        let pairs = plans
-            .into_iter()
-            .zip(dsts.iter())
-            .map(|(p, d)| {
-                let rk = d.rkey_for(p.nic);
-                (p, rk)
-            })
-            .collect();
-        self.execute_plans_multi(sim, &scratch, pairs, on_done);
+        if cfg!(debug_assertions) {
+            self.state.borrow().peer_groups.check(group, dsts.len());
+        }
+        let routed = route_barrier(self.fanout(gpu), self.bump_rotation(gpu), dsts, imm);
+        self.execute_routed(sim, &scratch, routed, on_done);
     }
 
     // ------------------------------------------------------------------
@@ -493,19 +460,14 @@ impl Engine {
         count: u32,
         cb: impl FnOnce(&mut Sim) + 'static,
     ) {
-        let event = {
+        let ready = {
             let mut s = self.state.borrow_mut();
-            let g = &mut s.groups[gpu as usize];
-            let ev = g.imm.expect(imm, count);
-            if ev == ImmEvent::Pending {
-                g.imm_waiters.insert(imm, Box::new(cb));
-                return;
-            }
-            ev
+            s.groups[gpu as usize].imm.expect(imm, count, Box::new(cb))
         };
-        debug_assert_eq!(event, ImmEvent::Satisfied);
-        let dispatch = self.state.borrow().costs.callback_ns;
-        sim.after(dispatch, cb);
+        if let Some(cb) = ready {
+            let dispatch = self.state.borrow().costs.callback_ns;
+            sim.after(dispatch, cb);
+        }
     }
 
     /// Poll the current counter value (CPU-side read; GPU-side reads
@@ -580,59 +542,34 @@ impl Engine {
     }
 
     fn bump_rotation(&self, gpu: u8) -> usize {
-        let mut s = self.state.borrow_mut();
-        let g = &mut s.groups[gpu as usize];
-        g.rotation = g.rotation.wrapping_add(1);
-        g.rotation
+        self.state.borrow().groups[gpu as usize].rotation.bump()
     }
 
-    /// Execute a plan against a single destination descriptor.
-    fn execute_plans(
+    /// Execute routed writes (each already paired with its destination
+    /// `(NIC, rkey)` by [`super::core`]); charges worker CPU and posts
+    /// WRs at the modeled times (chained where the NIC supports it).
+    fn execute_routed(
         &self,
         sim: &mut Sim,
         src: &MrHandle,
-        desc: &MrDesc,
-        plans: Vec<PlannedWrite>,
+        routed: Vec<RoutedWrite>,
         on_done: OnDone,
     ) {
-        let pairs = plans
-            .into_iter()
-            .map(|p| {
-                let rk = desc.rkey_for(p.nic);
-                (p, rk)
-            })
-            .collect::<Vec<_>>();
-        self.execute_plans_multi(sim, src, pairs, on_done);
-    }
-
-    /// Execute planned writes, each paired with its destination
-    /// `(NIC, rkey)`; charges worker CPU and posts WRs at the modeled
-    /// times (chained where the NIC supports it).
-    fn execute_plans_multi(
-        &self,
-        sim: &mut Sim,
-        src: &MrHandle,
-        plans: Vec<(PlannedWrite, (NicAddr, u64))>,
-        on_done: OnDone,
-    ) {
-        assert!(!plans.is_empty(), "empty transfer");
+        assert!(!routed.is_empty(), "empty transfer");
         let gpu = src.device.gpu as usize;
         let now = sim.now();
-        let (posts, trace) = {
+        let posts = {
             let mut s = self.state.borrow_mut();
-            let tid = s.alloc_transfer(Transfer {
-                remaining: plans.len(),
-                on_done,
-            });
+            let tid = s.transfers.begin(routed.len(), on_done);
             // Worker-cost model: submit → handoff → prep → per-WR post.
             let (first_post_at, mut trace) = s.charge_submission(now, gpu);
             let nic0 = s.groups[gpu].nics[0];
             let prof = s.net.profile(nic0);
-            let mut posts = Vec::with_capacity(plans.len());
+            let mut posts = Vec::with_capacity(routed.len());
             let mut t = first_post_at;
-            for (i, (p, (dst_nic, rkey))) in plans.into_iter().enumerate() {
+            for (i, (p, (dst_nic, rkey))) in routed.into_iter().enumerate() {
                 let wr_id = s.alloc_wr();
-                s.wr_transfer.insert(wr_id, tid);
+                s.transfers.bind_wr(wr_id, tid);
                 // Chaining: on RC up to `max_chain` WRs share a
                 // doorbell; the chained ones cost less CPU.
                 let chained = prof.max_chain > 1 && i % prof.max_chain != 0;
@@ -662,9 +599,8 @@ impl Engine {
             if let Some(sink) = &s.trace_sink {
                 sink.borrow_mut().push(trace);
             }
-            (posts, trace)
+            posts
         };
-        let _ = trace;
         // Post each WR at its worker-time; back-pressured WRs queue on
         // the group and retry on completion events.
         for (at, nic_idx, wr) in posts {
@@ -716,66 +652,34 @@ impl Engine {
     fn handle_cqe(&self, sim: &mut Sim, gpu: usize, addr: NicAddr, cqe: Cqe) {
         match cqe.kind {
             CqeKind::SendDone | CqeKind::WriteDone => {
-                let done = {
-                    let mut s = self.state.borrow_mut();
-                    let Some(tid) = s.wr_transfer.remove(&cqe.wr_id) else {
-                        return;
-                    };
-                    let t = s.transfers.get_mut(&tid).expect("transfer state");
-                    t.remaining -= 1;
-                    if t.remaining == 0 {
-                        Some(s.transfers.remove(&tid).unwrap())
-                    } else {
-                        None
-                    }
-                };
-                if let Some(t) = done {
-                    self.fire_on_done(sim, t.on_done);
+                let done = self.state.borrow_mut().transfers.complete_wr(cqe.wr_id);
+                if let Some(on_done) = done {
+                    self.fire_on_done(sim, on_done);
                 }
             }
             CqeKind::ImmRecvd { imm, .. } => {
-                let (satisfied, dispatch) = {
+                let (waiter, dispatch) = {
                     let mut s = self.state.borrow_mut();
-                    let g = &mut s.groups[gpu];
-                    let ev = g.imm.increment(imm);
-                    let waiter = if ev == ImmEvent::Satisfied {
-                        g.imm_waiters.remove(&imm)
-                    } else {
-                        None
-                    };
-                    (waiter, s.costs.callback_ns)
+                    let w = s.groups[gpu].imm.on_imm(imm);
+                    (w, s.costs.callback_ns)
                 };
-                if let Some(cb) = satisfied {
+                if let Some(cb) = waiter {
                     sim.after(dispatch, cb);
                 }
             }
             CqeKind::RecvDone { len, src: _src } => {
                 let (payload, cb, repost, dispatch) = {
                     let mut s = self.state.borrow_mut();
-                    let g = &mut s.groups[gpu];
-                    let slot = g
-                        .recv_slots
-                        .remove(&cqe.wr_id)
-                        .expect("RecvDone for unknown buffer");
-                    assert!(
-                        len as usize <= slot.len,
-                        "SEND of {len} B overflows the {} B recv buffer \
-                         (size the submit_recvs pool for the largest message)",
-                        slot.len
-                    );
-                    let mut data = vec![0u8; (len as usize).min(slot.len)];
-                    slot.buf.read(0, &mut data);
-                    let cb = g.recv_cb.clone();
                     // Rotating pool: re-post the buffer with a fresh id.
                     let new_id = s.alloc_wr();
-                    s.groups[gpu].recv_slots.insert(
-                        new_id,
-                        RecvSlot {
-                            buf: slot.buf.clone(),
-                            len: slot.len,
-                        },
-                    );
-                    (data, cb, (new_id, slot.buf), s.costs.callback_ns)
+                    let dispatch = s.costs.callback_ns;
+                    let g = &mut s.groups[gpu];
+                    let (data, buf, overflowed) = g.recvs.complete(cqe.wr_id, len, new_id);
+                    // Single-threaded runtime: loud failure is safe
+                    // and points straight at the mis-sized pool.
+                    assert!(!overflowed, "{}", RecvPool::overflow_msg(len, data.len()));
+                    let cb = g.recv_cb.clone();
+                    (data, cb, (new_id, buf), dispatch)
                 };
                 let net = self.state.borrow().net.clone();
                 net.post(
@@ -813,13 +717,6 @@ impl State {
     fn alloc_wr(&mut self) -> u64 {
         let id = self.next_wr;
         self.next_wr += 1;
-        id
-    }
-
-    fn alloc_transfer(&mut self, t: Transfer) -> u64 {
-        let id = self.next_transfer;
-        self.next_transfer += 1;
-        self.transfers.insert(id, t);
         id
     }
 
@@ -866,6 +763,112 @@ impl UvmWatcherHandle {
     /// Drop the watcher (later writes panic).
     pub fn free(&self) {
         self.engine.state.borrow_mut().watchers.remove(&self.id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The uniform TransferEngine interface over the DES runtime
+// ---------------------------------------------------------------------
+
+impl TransferEngine for Engine {
+    fn runtime_kind(&self) -> RuntimeKind {
+        RuntimeKind::Des
+    }
+
+    fn group_address(&self, gpu: u8) -> NetAddr {
+        Engine::group_address(self, gpu)
+    }
+
+    fn nics_per_gpu(&self) -> u8 {
+        Engine::nics_per_gpu(self)
+    }
+
+    fn alloc_mr(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
+        Engine::alloc_mr(self, gpu, len)
+    }
+
+    fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc) {
+        Engine::reg_mr(self, gpu, buf)
+    }
+
+    fn submit_send(&self, cx: &mut Cx, gpu: u8, addr: &NetAddr, msg: &[u8], on_done: Notify) {
+        Engine::submit_send(self, cx.sim(), gpu, addr, msg, on_done.into_des());
+    }
+
+    fn submit_recvs(&self, cx: &mut Cx, gpu: u8, len: usize, cnt: usize, cb: RecvHandler) {
+        Engine::submit_recvs(self, cx.sim(), gpu, len, cnt, move |_sim, msg| cb(msg));
+    }
+
+    fn submit_single_write(
+        &self,
+        cx: &mut Cx,
+        src: (&MrHandle, u64),
+        len: u64,
+        dst: (&MrDesc, u64),
+        imm: Option<u32>,
+        on_done: Notify,
+    ) {
+        Engine::submit_single_write(self, cx.sim(), src, len, dst, imm, on_done.into_des());
+    }
+
+    fn submit_paged_writes(
+        &self,
+        cx: &mut Cx,
+        page_len: u64,
+        src: (&MrHandle, &Pages),
+        dst: (&MrDesc, &Pages),
+        imm: Option<u32>,
+        on_done: Notify,
+    ) {
+        Engine::submit_paged_writes(self, cx.sim(), page_len, src, dst, imm, on_done.into_des());
+    }
+
+    fn add_peer_group(&self, addrs: Vec<NetAddr>) -> PeerGroupHandle {
+        Engine::add_peer_group(self, addrs)
+    }
+
+    fn peer_group(&self, group: PeerGroupHandle) -> Option<Vec<NetAddr>> {
+        Engine::peer_group(self, group)
+    }
+
+    fn submit_scatter(
+        &self,
+        cx: &mut Cx,
+        group: Option<PeerGroupHandle>,
+        src: &MrHandle,
+        dsts: &[ScatterDst],
+        imm: Option<u32>,
+        on_done: Notify,
+    ) {
+        Engine::submit_scatter(self, cx.sim(), group, src, dsts, imm, on_done.into_des());
+    }
+
+    fn submit_barrier(
+        &self,
+        cx: &mut Cx,
+        gpu: u8,
+        group: Option<PeerGroupHandle>,
+        dsts: &[MrDesc],
+        imm: u32,
+        on_done: Notify,
+    ) {
+        Engine::submit_barrier(self, cx.sim(), gpu, group, dsts, imm, on_done.into_des());
+    }
+
+    fn expect_imm_count(&self, cx: &mut Cx, gpu: u8, imm: u32, count: u32, cb: ImmHandler) {
+        Engine::expect_imm_count(self, cx.sim(), gpu, imm, count, move |_sim| cb());
+    }
+
+    fn imm_value(&self, gpu: u8, imm: u32) -> u32 {
+        Engine::imm_value(self, gpu, imm)
+    }
+
+    fn free_imm(&self, gpu: u8, imm: u32) {
+        Engine::free_imm(self, gpu, imm)
+    }
+
+    fn alloc_uvm_watcher(&self, cb: WatchHandler) -> UvmWatcher {
+        UvmWatcher::Des(Engine::alloc_uvm_watcher(self, move |_sim, old, new| cb(old, new)))
     }
 }
 
@@ -1004,6 +1007,10 @@ mod tests {
         src.buf.write(0, &[7u8; 1024]);
         let peers: Vec<(MrHandle, MrDesc)> =
             (1..5).map(|i| engines[i].alloc_mr(0, 1024)).collect();
+        // Scatter/barrier through a registered peer group.
+        let group = engines[0].add_peer_group(
+            (1..5).map(|i| engines[i].group_address(0)).collect(),
+        );
         let dsts: Vec<ScatterDst> = peers
             .iter()
             .enumerate()
@@ -1014,7 +1021,14 @@ mod tests {
             })
             .collect();
         let done = Rc::new(Cell::new(false));
-        engines[0].submit_scatter(&mut sim, None, &src, &dsts, Some(9), OnDone::Flag(done.clone()));
+        engines[0].submit_scatter(
+            &mut sim,
+            Some(group),
+            &src,
+            &dsts,
+            Some(9),
+            OnDone::Flag(done.clone()),
+        );
         sim.run();
         assert!(done.get());
         for (i, (h, _)) in peers.iter().enumerate() {
@@ -1023,7 +1037,7 @@ mod tests {
         }
         // Barrier: imm-only writes.
         let descs: Vec<MrDesc> = peers.iter().map(|(_, d)| d.clone()).collect();
-        engines[0].submit_barrier(&mut sim, 0, None, &descs, 33, OnDone::Noop);
+        engines[0].submit_barrier(&mut sim, 0, Some(group), &descs, 33, OnDone::Noop);
         sim.run();
         for i in 1..5 {
             assert_eq!(engines[i].imm_value(0, 33), 1, "barrier imm at peer {i}");

@@ -1,19 +1,47 @@
 //! The TransferEngine: fabric-lib's core component (paper §3).
 //!
-//! Two runtimes share the same vocabulary and pure logic:
-//! * [`des_engine::Engine`] — deterministic, timing-faithful engine on
-//!   the discrete-event fabric (benchmarks, integration tests);
+//! One uniform API, two runtimes, zero duplicated submission logic —
+//! the module is layered exactly along that split:
+//!
+//! * [`traits`] — the [`traits::TransferEngine`] trait: the full
+//!   Fig-2 vocabulary (`alloc_mr`/`reg_mr`, SEND/RECV, single/paged
+//!   writes, peer groups, scatter/barrier, IMMCOUNTER expectations,
+//!   UVM watchers) as one dyn-safe interface, plus the [`traits::Cx`]
+//!   execution context and [`traits::Cluster`]/[`traits::run_on_both`]
+//!   harness that runs any scenario on both runtimes;
+//! * [`core`] — the shared submission core: peer-group registry, imm
+//!   accounting, transfer/WR completion tables, recv matching, NIC
+//!   rotation, and the bridge from API calls to [`sharding`] plans
+//!   paired with destination rkeys (where the §3.2 equal-NIC-count
+//!   invariant is enforced);
+//! * [`des_engine::Engine`] — deterministic, timing-faithful runtime
+//!   on the discrete-event fabric (benchmarks, integration tests);
 //! * [`threaded::ThreadedEngine`] — real pinned threads over the
 //!   in-process fabric (runnable examples, real CPU-overhead
-//!   measurements).
+//!   measurements);
+//! * [`api`], [`wire`], [`sharding`], [`imm_counter`] — the shared
+//!   vocabulary types, wire format, pure sharding planner and counter
+//!   logic underneath all of it.
+//!
+//! Apps and examples written against `&dyn TransferEngine` (or
+//! `impl TransferEngine`) run unchanged on either runtime; pick the
+//! DES engine for reproducible timing, the threaded engine for real
+//! wall-clock behavior.
 
 pub mod api;
+pub mod core;
 pub mod des_engine;
 pub mod imm_counter;
 pub mod sharding;
 pub mod threaded;
+pub mod traits;
 pub mod wire;
 
 pub use api::{EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
 pub use des_engine::{Engine, OnDone, SubmitTrace, UvmWatcherHandle};
 pub use imm_counter::{ImmCounter, ImmEvent};
+pub use threaded::{OnDoneT, ThreadedEngine, TraceT};
+pub use traits::{
+    expect_flag, new_flag, run_on_both, Cluster, Cx, Notify, RuntimeKind, SharedFlag,
+    TransferEngine, UvmWatcher,
+};

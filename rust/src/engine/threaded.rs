@@ -1,26 +1,37 @@
 //! Production-shaped TransferEngine: real pinned worker threads over
 //! the in-process fabric.
 //!
+//! Second runtime behind the shared [`super::traits::TransferEngine`]
+//! trait, at full API parity with the DES engine: peer groups,
+//! handle-based scatter/barrier, paged writes and per-group NIC
+//! rotation all included, with the runtime-independent submission
+//! logic (peer groups, imm accounting, recv matching, plan→rkey
+//! routing) shared through [`super::core`].
+//!
 //! Same architecture as the DES engine (§3.4): the app thread enqueues
 //! commands onto a queue; one worker per domain group dequeues,
 //! shards, posts WRs and polls completion queues in a tight loop,
-//! prioritizing new submissions; completions feed ImmCounters and
+//! prioritizing new submissions; completions feed imm counters and
 //! OnDone notifications. A dedicated watcher thread polls UVM words.
 //!
 //! This runtime backs the runnable examples and the *measured* CPU
 //! overhead numbers (Table 8): `TraceT` records real monotonic
 //! timestamps from `submit_*()` to the last posted WRITE.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::api::{MrDesc, MrHandle, NetAddr, Pages, ScatterDst};
-use super::imm_counter::{ImmCounter, ImmEvent};
-use super::sharding::{plan_paged_writes, plan_scatter, plan_single_write, PlannedWrite};
+use super::api::{MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
+use super::core::{
+    route_barrier, route_paged_writes, route_scatter, route_single_write, ImmTable, PeerGroups,
+    RecvPool, Rotation, RoutedWrite, TransferTable,
+};
+use super::traits::{
+    Cx, ImmHandler, Notify, RecvHandler, RuntimeKind, TransferEngine, UvmWatcher, WatchHandler,
+};
 use crate::fabric::local::LocalFabric;
 use crate::fabric::mem::{DmaBuf, DmaSlice, RKey};
 use crate::fabric::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
@@ -48,7 +59,7 @@ pub struct TraceT {
 
 enum Cmd {
     Writes {
-        plans: Vec<(PlannedWrite, MrDesc)>,
+        routed: Vec<RoutedWrite>,
         src: DmaBuf,
         tid: u64,
         submitted_ns: u64,
@@ -65,11 +76,9 @@ enum Cmd {
 }
 
 struct GroupShared {
-    imm: ImmCounter,
-    imm_waiters: HashMap<u32, Box<dyn FnOnce() + Send>>,
-    transfers: HashMap<u64, (usize, OnDoneT)>,
-    wr_transfer: HashMap<u64, u64>,
-    recv_slots: HashMap<u64, DmaBuf>,
+    imm: ImmTable<Box<dyn FnOnce() + Send>>,
+    transfers: TransferTable<OnDoneT>,
+    recvs: RecvPool,
     recv_cb: Option<Arc<dyn Fn(&[u8]) + Send + Sync>>,
     traces: Vec<TraceT>,
 }
@@ -78,6 +87,7 @@ struct Group {
     nics: Vec<NicAddr>,
     tx: Sender<Cmd>,
     shared: Arc<Mutex<GroupShared>>,
+    rotation: Rotation,
     worker: Mutex<Option<JoinHandle<()>>>,
 }
 
@@ -86,7 +96,7 @@ struct Inner {
     node: u16,
     groups: Vec<Group>,
     next_wr: AtomicU64,
-    next_transfer: AtomicU64,
+    peer_groups: Mutex<PeerGroups>,
     epoch: Instant,
     watchers: Mutex<Vec<(Arc<AtomicU64>, u64, Arc<dyn Fn(u64, u64) + Send + Sync>)>>,
     watcher_stop: Arc<AtomicBool>,
@@ -114,11 +124,9 @@ impl ThreadedEngine {
                 })
                 .collect();
             let shared = Arc::new(Mutex::new(GroupShared {
-                imm: ImmCounter::new(),
-                imm_waiters: HashMap::new(),
-                transfers: HashMap::new(),
-                wr_transfer: HashMap::new(),
-                recv_slots: HashMap::new(),
+                imm: ImmTable::new(),
+                transfers: TransferTable::new(),
+                recvs: RecvPool::new(),
                 recv_cb: None,
                 traces: Vec::new(),
             }));
@@ -134,6 +142,7 @@ impl ThreadedEngine {
                 nics,
                 tx,
                 shared,
+                rotation: Rotation::new(),
                 worker: Mutex::new(Some(worker)),
             });
         }
@@ -143,7 +152,7 @@ impl ThreadedEngine {
                 node,
                 groups,
                 next_wr: AtomicU64::new(1),
-                next_transfer: AtomicU64::new(1),
+                peer_groups: Mutex::new(PeerGroups::new()),
                 epoch,
                 watchers: Mutex::new(Vec::new()),
                 watcher_stop: Arc::new(AtomicBool::new(false)),
@@ -195,6 +204,11 @@ impl ThreadedEngine {
         NetAddr {
             nics: self.inner.groups[gpu as usize].nics.clone(),
         }
+    }
+
+    /// NICs per GPU on this engine.
+    pub fn nics_per_gpu(&self) -> u8 {
+        self.inner.groups[0].nics.len() as u8
     }
 
     /// Allocate + register a region on `gpu`.
@@ -257,7 +271,7 @@ impl ThreadedEngine {
             for _ in 0..cnt {
                 let id = self.inner.next_wr.fetch_add(1, Ordering::Relaxed);
                 let (buf, _) = mem.alloc(len);
-                sh.recv_slots.insert(id, buf.clone());
+                sh.recvs.post(id, buf.clone(), len);
                 bufs.push((id, buf));
             }
         }
@@ -275,17 +289,10 @@ impl ThreadedEngine {
     ) {
         let submitted_ns = self.now_ns();
         let (h, src_off) = src;
-        let (d, dst_off) = dst;
         let gpu = h.device.gpu;
-        let fanout = self.inner.groups[gpu as usize].nics.len().min(d.rkeys.len());
-        let plans = plan_single_write(len, src_off, d.ptr + dst_off, imm, fanout, 0);
-        self.dispatch_writes(
-            gpu,
-            h,
-            plans.into_iter().map(|p| (p, d.clone())).collect(),
-            on_done,
-            submitted_ns,
-        );
+        let g = &self.inner.groups[gpu as usize];
+        let routed = route_single_write(g.nics.len(), g.rotation.bump(), src_off, len, dst, imm);
+        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns);
     }
 
     /// Paged writes.
@@ -299,24 +306,31 @@ impl ThreadedEngine {
     ) {
         let submitted_ns = self.now_ns();
         let (h, sp) = src;
-        let (d, dp) = dst;
         let gpu = h.device.gpu;
-        let src_offs: Vec<u64> = (0..sp.len()).map(|i| sp.at(i)).collect();
-        let dst_vas: Vec<u64> = (0..dp.len()).map(|i| d.ptr + dp.at(i)).collect();
-        let fanout = self.inner.groups[gpu as usize].nics.len().min(d.rkeys.len());
-        let plans = plan_paged_writes(page_len, &src_offs, &dst_vas, imm, fanout, 0);
-        self.dispatch_writes(
-            gpu,
-            h,
-            plans.into_iter().map(|p| (p, d.clone())).collect(),
-            on_done,
-            submitted_ns,
-        );
+        let g = &self.inner.groups[gpu as usize];
+        let routed = route_paged_writes(g.nics.len(), g.rotation.bump(), page_len, sp, dst, imm);
+        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns);
     }
 
-    /// Scatter to many peers.
+    /// Register a peer group for scatter/barrier fast paths.
+    pub fn add_peer_group(&self, addrs: Vec<NetAddr>) -> PeerGroupHandle {
+        self.inner.peer_groups.lock().unwrap().add(addrs)
+    }
+
+    /// The peer list behind a group handle.
+    pub fn peer_group(&self, group: PeerGroupHandle) -> Option<Vec<NetAddr>> {
+        self.inner
+            .peer_groups
+            .lock()
+            .unwrap()
+            .get(group)
+            .map(|p| p.to_vec())
+    }
+
+    /// Scatter to many peers (one WR per destination, NIC-rotated).
     pub fn submit_scatter(
         &self,
+        group: Option<PeerGroupHandle>,
         src: &MrHandle,
         dsts: &[ScatterDst],
         imm: Option<u32>,
@@ -324,31 +338,42 @@ impl ThreadedEngine {
     ) {
         let submitted_ns = self.now_ns();
         let gpu = src.device.gpu;
-        let fanout = self.inner.groups[gpu as usize].nics.len();
-        let entries: Vec<(u64, u64, u64)> = dsts
-            .iter()
-            .map(|s| (s.len, s.src, s.dst.0.ptr + s.dst.1))
-            .collect();
-        let plans = plan_scatter(&entries, imm, fanout, 0);
-        let pairs = plans
-            .into_iter()
-            .zip(dsts.iter().map(|s| s.dst.0.clone()))
-            .collect();
-        self.dispatch_writes(gpu, src, pairs, on_done, submitted_ns);
+        if cfg!(debug_assertions) {
+            self.inner
+                .peer_groups
+                .lock()
+                .unwrap()
+                .check(group, dsts.len());
+        }
+        let g = &self.inner.groups[gpu as usize];
+        let routed = route_scatter(g.nics.len(), g.rotation.bump(), dsts, imm);
+        self.dispatch_writes(gpu, src, routed, on_done, submitted_ns);
     }
 
     /// Immediate-only barrier to every descriptor's owner.
-    pub fn submit_barrier(&self, gpu: u8, dsts: &[MrDesc], imm: u32, on_done: OnDoneT) {
+    pub fn submit_barrier(
+        &self,
+        gpu: u8,
+        group: Option<PeerGroupHandle>,
+        dsts: &[MrDesc],
+        imm: u32,
+        on_done: OnDoneT,
+    ) {
         let (scratch, _) = self.alloc_mr(gpu, 1);
         let submitted_ns = self.now_ns();
-        let fanout = self.inner.groups[gpu as usize].nics.len();
-        let entries: Vec<(u64, u64, u64)> = dsts.iter().map(|d| (0, 0, d.ptr)).collect();
-        let plans = plan_scatter(&entries, Some(imm), fanout, 0);
-        let pairs = plans.into_iter().zip(dsts.iter().cloned()).collect();
-        self.dispatch_writes(gpu, &scratch, pairs, on_done, submitted_ns);
+        if cfg!(debug_assertions) {
+            self.inner
+                .peer_groups
+                .lock()
+                .unwrap()
+                .check(group, dsts.len());
+        }
+        let g = &self.inner.groups[gpu as usize];
+        let routed = route_barrier(g.nics.len(), g.rotation.bump(), dsts, imm);
+        self.dispatch_writes(gpu, &scratch, routed, on_done, submitted_ns);
     }
 
-    /// Register an expectation on `gpu`'s ImmCounter.
+    /// Register an expectation on `gpu`'s imm counter.
     pub fn expect_imm_count(
         &self,
         gpu: u8,
@@ -356,23 +381,16 @@ impl ThreadedEngine {
         count: u32,
         cb: impl FnOnce() + Send + 'static,
     ) {
-        let g = &self.inner.groups[gpu as usize];
-        let sat = {
-            let mut sh = g.shared.lock().unwrap();
-            match sh.imm.expect(imm, count) {
-                ImmEvent::Satisfied => true,
-                ImmEvent::Pending => {
-                    sh.imm_waiters.insert(imm, Box::new(cb));
-                    return;
-                }
-            }
+        let ready = {
+            let mut sh = self.inner.groups[gpu as usize].shared.lock().unwrap();
+            sh.imm.expect(imm, count, Box::new(cb))
         };
-        if sat {
+        if let Some(cb) = ready {
             cb();
         }
     }
 
-    /// Poll an ImmCounter value.
+    /// Poll an imm counter value.
     pub fn imm_value(&self, gpu: u8, imm: u32) -> u32 {
         self.inner.groups[gpu as usize]
             .shared
@@ -433,30 +451,28 @@ impl ThreadedEngine {
     }
 
     fn alloc_transfer(&self, gpu: u8, remaining: usize, on_done: OnDoneT) -> u64 {
-        let tid = self.inner.next_transfer.fetch_add(1, Ordering::Relaxed);
         self.inner.groups[gpu as usize]
             .shared
             .lock()
             .unwrap()
             .transfers
-            .insert(tid, (remaining, on_done));
-        tid
+            .begin(remaining, on_done)
     }
 
     fn dispatch_writes(
         &self,
         gpu: u8,
         src: &MrHandle,
-        plans: Vec<(PlannedWrite, MrDesc)>,
+        routed: Vec<RoutedWrite>,
         on_done: OnDoneT,
         submitted_ns: u64,
     ) {
-        assert!(!plans.is_empty(), "empty transfer");
-        let tid = self.alloc_transfer(gpu, plans.len(), on_done);
+        assert!(!routed.is_empty(), "empty transfer");
+        let tid = self.alloc_transfer(gpu, routed.len(), on_done);
         self.inner.groups[gpu as usize]
             .tx
             .send(Cmd::Writes {
-                plans,
+                routed,
                 src: src.buf.clone(),
                 tid,
                 submitted_ns,
@@ -481,24 +497,23 @@ fn worker_loop(
         match rx.recv_timeout(Duration::from_micros(50)) {
             Ok(Cmd::Shutdown) | Err(RecvTimeoutError::Disconnected) => break,
             Ok(Cmd::Writes {
-                plans,
+                routed,
                 src,
                 tid,
                 submitted_ns,
             }) => {
                 let worker_ns = epoch.elapsed().as_nanos() as u64;
-                let n = plans.len();
+                let n = routed.len();
                 let base_id = next_wr;
                 {
                     let mut sh = shared.lock().unwrap();
                     for i in 0..n {
-                        sh.wr_transfer.insert(base_id + i as u64, tid);
+                        sh.transfers.bind_wr(base_id + i as u64, tid);
                     }
                 }
                 next_wr += n as u64;
                 let mut first_post_ns = 0;
-                for (i, (p, desc)) in plans.into_iter().enumerate() {
-                    let (dst_nic, rkey) = desc.rkey_for(p.nic);
+                for (i, (p, (dst_nic, rkey))) in routed.into_iter().enumerate() {
                     let wr = WorkRequest {
                         id: base_id + i as u64,
                         qp: QpId(1),
@@ -528,7 +543,7 @@ fn worker_loop(
             Ok(Cmd::Send { dst, payload, tid }) => {
                 let id = next_wr;
                 next_wr += 1;
-                shared.lock().unwrap().wr_transfer.insert(id, tid);
+                shared.lock().unwrap().transfers.bind_wr(id, tid);
                 fabric.post(
                     nics[0],
                     WorkRequest {
@@ -582,19 +597,7 @@ fn handle_cqe(
 ) {
     match cqe.kind {
         CqeKind::SendDone | CqeKind::WriteDone => {
-            let done = {
-                let mut sh = shared.lock().unwrap();
-                let Some(tid) = sh.wr_transfer.remove(&cqe.wr_id) else {
-                    return;
-                };
-                let (rem, _) = sh.transfers.get_mut(&tid).expect("transfer");
-                *rem -= 1;
-                if *rem == 0 {
-                    Some(sh.transfers.remove(&tid).unwrap().1)
-                } else {
-                    None
-                }
-            };
+            let done = shared.lock().unwrap().transfers.complete_wr(cqe.wr_id);
             match done {
                 Some(OnDoneT::Callback(cb)) => cb(),
                 Some(OnDoneT::Flag(f)) => f.store(true, Ordering::Release),
@@ -602,14 +605,7 @@ fn handle_cqe(
             }
         }
         CqeKind::ImmRecvd { imm, .. } => {
-            let waiter = {
-                let mut sh = shared.lock().unwrap();
-                if sh.imm.increment(imm) == ImmEvent::Satisfied {
-                    sh.imm_waiters.remove(&imm)
-                } else {
-                    None
-                }
-            };
+            let waiter = shared.lock().unwrap().imm.on_imm(imm);
             if let Some(cb) = waiter {
                 cb();
             }
@@ -617,16 +613,17 @@ fn handle_cqe(
         CqeKind::RecvDone { len, .. } => {
             let (payload, cb, repost) = {
                 let mut sh = shared.lock().unwrap();
-                let buf = sh
-                    .recv_slots
-                    .remove(&cqe.wr_id)
-                    .expect("RecvDone for unknown buffer");
-                let mut data = vec![0u8; (len as usize).min(buf.len())];
-                buf.read(0, &mut data);
-                let cb = sh.recv_cb.clone();
                 let new_id = *next_wr;
                 *next_wr += 1;
-                sh.recv_slots.insert(new_id, buf.clone());
+                let (data, buf, overflowed) = sh.recvs.complete(cqe.wr_id, len, new_id);
+                if overflowed {
+                    // Deliver truncated rather than panicking: this
+                    // runs on the worker thread, where a panic would
+                    // poison the group lock and hang waiters instead
+                    // of surfacing the diagnostic.
+                    eprintln!("fabric_lib: {}", RecvPool::overflow_msg(len, data.len()));
+                }
+                let cb = sh.recv_cb.clone();
                 (data, cb, (new_id, buf))
             };
             fabric.post(
@@ -644,6 +641,114 @@ fn handle_cqe(
                 cb(&payload);
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The uniform TransferEngine interface over the threaded runtime
+// ---------------------------------------------------------------------
+
+impl TransferEngine for ThreadedEngine {
+    fn runtime_kind(&self) -> RuntimeKind {
+        RuntimeKind::Threaded
+    }
+
+    fn group_address(&self, gpu: u8) -> NetAddr {
+        ThreadedEngine::group_address(self, gpu)
+    }
+
+    fn nics_per_gpu(&self) -> u8 {
+        ThreadedEngine::nics_per_gpu(self)
+    }
+
+    fn alloc_mr(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
+        ThreadedEngine::alloc_mr(self, gpu, len)
+    }
+
+    fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc) {
+        ThreadedEngine::reg_mr(self, gpu, buf)
+    }
+
+    fn submit_send(&self, _cx: &mut Cx, gpu: u8, addr: &NetAddr, msg: &[u8], on_done: Notify) {
+        ThreadedEngine::submit_send(self, gpu, addr, msg, on_done.into_threaded());
+    }
+
+    fn submit_recvs(&self, _cx: &mut Cx, gpu: u8, len: usize, cnt: usize, cb: RecvHandler) {
+        ThreadedEngine::submit_recvs(self, gpu, len, cnt, move |msg| cb(msg));
+    }
+
+    fn submit_single_write(
+        &self,
+        _cx: &mut Cx,
+        src: (&MrHandle, u64),
+        len: u64,
+        dst: (&MrDesc, u64),
+        imm: Option<u32>,
+        on_done: Notify,
+    ) {
+        ThreadedEngine::submit_single_write(self, src, len, dst, imm, on_done.into_threaded());
+    }
+
+    fn submit_paged_writes(
+        &self,
+        _cx: &mut Cx,
+        page_len: u64,
+        src: (&MrHandle, &Pages),
+        dst: (&MrDesc, &Pages),
+        imm: Option<u32>,
+        on_done: Notify,
+    ) {
+        ThreadedEngine::submit_paged_writes(self, page_len, src, dst, imm, on_done.into_threaded());
+    }
+
+    fn add_peer_group(&self, addrs: Vec<NetAddr>) -> PeerGroupHandle {
+        ThreadedEngine::add_peer_group(self, addrs)
+    }
+
+    fn peer_group(&self, group: PeerGroupHandle) -> Option<Vec<NetAddr>> {
+        ThreadedEngine::peer_group(self, group)
+    }
+
+    fn submit_scatter(
+        &self,
+        _cx: &mut Cx,
+        group: Option<PeerGroupHandle>,
+        src: &MrHandle,
+        dsts: &[ScatterDst],
+        imm: Option<u32>,
+        on_done: Notify,
+    ) {
+        ThreadedEngine::submit_scatter(self, group, src, dsts, imm, on_done.into_threaded());
+    }
+
+    fn submit_barrier(
+        &self,
+        _cx: &mut Cx,
+        gpu: u8,
+        group: Option<PeerGroupHandle>,
+        dsts: &[MrDesc],
+        imm: u32,
+        on_done: Notify,
+    ) {
+        ThreadedEngine::submit_barrier(self, gpu, group, dsts, imm, on_done.into_threaded());
+    }
+
+    fn expect_imm_count(&self, _cx: &mut Cx, gpu: u8, imm: u32, count: u32, cb: ImmHandler) {
+        ThreadedEngine::expect_imm_count(self, gpu, imm, count, cb);
+    }
+
+    fn imm_value(&self, gpu: u8, imm: u32) -> u32 {
+        ThreadedEngine::imm_value(self, gpu, imm)
+    }
+
+    fn free_imm(&self, gpu: u8, imm: u32) {
+        ThreadedEngine::free_imm(self, gpu, imm)
+    }
+
+    fn alloc_uvm_watcher(&self, cb: WatchHandler) -> UvmWatcher {
+        UvmWatcher::Threaded(ThreadedEngine::alloc_uvm_watcher(self, move |old, new| {
+            cb(old, new)
+        }))
     }
 }
 
@@ -723,6 +828,100 @@ mod tests {
                 hits.load(Ordering::Relaxed)
             );
             std::thread::yield_now();
+        }
+        a.shutdown();
+        b.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn threaded_scatter_and_barrier_via_peer_group() {
+        // Parity with the DES engine: handle-based scatter + barrier,
+        // counted by expect_imm_count on every peer.
+        let fabric = LocalFabric::new(TransportKind::Srd, 21);
+        let engines: Vec<ThreadedEngine> =
+            (0..4).map(|n| ThreadedEngine::new(&fabric, n, 1, 2)).collect();
+        let (src, _) = engines[0].alloc_mr(0, 1024);
+        src.buf.write(0, &[3u8; 1024]);
+        let peers: Vec<(MrHandle, MrDesc)> =
+            (1..4).map(|i| engines[i].alloc_mr(0, 1024)).collect();
+        let group = engines[0].add_peer_group(
+            (1..4).map(|i| engines[i].group_address(0)).collect(),
+        );
+        assert_eq!(engines[0].peer_group(group).unwrap().len(), 3);
+
+        let arrived: Vec<Arc<AtomicBool>> =
+            (0..3).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        for (i, f) in arrived.iter().enumerate() {
+            let f = f.clone();
+            engines[i + 1].expect_imm_count(0, 40, 1, move || f.store(true, Ordering::Release));
+        }
+        let dsts: Vec<ScatterDst> = peers
+            .iter()
+            .enumerate()
+            .map(|(i, (_, d))| ScatterDst {
+                len: 128,
+                src: (i as u64) * 128,
+                dst: (d.clone(), 32),
+            })
+            .collect();
+        let done = Arc::new(AtomicBool::new(false));
+        engines[0].submit_scatter(Some(group), &src, &dsts, Some(40), OnDoneT::Flag(done.clone()));
+        wait_flag(&done);
+        for f in &arrived {
+            wait_flag(f);
+        }
+        for (i, (h, _)) in peers.iter().enumerate() {
+            assert_eq!(&h.buf.to_vec()[32..32 + 128], &[3u8; 128], "peer {i}");
+        }
+
+        // Barrier through the same handle.
+        let released: Vec<Arc<AtomicBool>> =
+            (0..3).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        for (i, f) in released.iter().enumerate() {
+            let f = f.clone();
+            engines[i + 1].expect_imm_count(0, 41, 1, move || f.store(true, Ordering::Release));
+        }
+        let descs: Vec<MrDesc> = peers.iter().map(|(_, d)| d.clone()).collect();
+        engines[0].submit_barrier(0, Some(group), &descs, 41, OnDoneT::Noop);
+        for f in &released {
+            wait_flag(f);
+        }
+        for e in &engines {
+            e.shutdown();
+        }
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn threaded_paged_writes_parity() {
+        let fabric = LocalFabric::new(TransportKind::Srd, 22);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 2);
+        let b = ThreadedEngine::new(&fabric, 1, 1, 2);
+        let page = 512u64;
+        let (src, _) = a.alloc_mr(0, (page * 4) as usize);
+        let (dst_h, dst_d) = b.alloc_mr(0, (page * 8) as usize);
+        for i in 0..4u8 {
+            src.buf.write((i as u64 * page) as usize, &[i + 1; 32]);
+        }
+        let dst_idx = vec![6u32, 0, 3, 1];
+        let done = Arc::new(AtomicBool::new(false));
+        let counted = Arc::new(AtomicBool::new(false));
+        let c = counted.clone();
+        b.expect_imm_count(0, 8, 4, move || c.store(true, Ordering::Release));
+        a.submit_paged_writes(
+            page,
+            (&src, &Pages::contiguous(0, 4, page)),
+            (&dst_d, &Pages { indices: dst_idx.clone(), stride: page, offset: 0 }),
+            Some(8),
+            OnDoneT::Flag(done.clone()),
+        );
+        wait_flag(&done);
+        wait_flag(&counted);
+        let v = dst_h.buf.to_vec();
+        for (i, &slot) in dst_idx.iter().enumerate() {
+            let off = (slot as u64 * page) as usize;
+            assert_eq!(v[off..off + 32], [(i as u8) + 1; 32], "page {i} -> slot {slot}");
         }
         a.shutdown();
         b.shutdown();

@@ -1,0 +1,507 @@
+//! The [`TransferEngine`] trait: one Fig-2 API, two runtimes.
+//!
+//! The paper's central claim is a *uniform* interface over
+//! heterogeneous transports (§3, Fig 2). This module is that
+//! interface: a dyn-safe trait covering the full vocabulary —
+//! `alloc_mr`/`reg_mr`, `submit_send`/`submit_recvs`,
+//! `submit_single_write`/`submit_paged_writes`,
+//! `add_peer_group`/`submit_scatter`/`submit_barrier`,
+//! `expect_imm_count`/`imm_value`/`free_imm`, `alloc_uvm_watcher` —
+//! implemented by both the deterministic DES engine
+//! ([`super::des_engine::Engine`]) and the pinned-thread engine
+//! ([`super::threaded::ThreadedEngine`]), so every workload runs on
+//! either runtime from the same code path.
+//!
+//! The two runtimes drive progress differently (virtual event loop vs.
+//! real threads), which the trait absorbs with two small types:
+//!
+//! * [`Cx`] — the execution context threaded through every
+//!   submission: the DES variant carries `&mut Sim`, the threaded
+//!   variant nothing. `Cx::wait` is the runtime-appropriate "block
+//!   until this flag is set" (run the event loop to quiescence vs.
+//!   spin with a deadline).
+//! * [`Notify`] — runtime-neutral completion notification (atomic
+//!   flag, `Send` callback, or nothing), converted to each runtime's
+//!   native `OnDone` flavor at the boundary.
+//!
+//! [`Cluster`] builds an N-node cluster on either runtime behind the
+//! same handle and is how harness tests and examples run one scenario
+//! on both ([`run_on_both`]).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration as StdDuration;
+use std::time::Instant as StdInstant;
+
+use super::api::{EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
+use super::des_engine::{Engine, OnDone, UvmWatcherHandle};
+use super::threaded::{OnDoneT, ThreadedEngine};
+use super::wire;
+use crate::fabric::local::LocalFabric;
+use crate::fabric::mem::DmaBuf;
+use crate::fabric::nic::NicAddr;
+use crate::fabric::profile::{GpuProfile, NicProfile, TransportKind};
+use crate::fabric::simnet::SimNet;
+use crate::sim::Sim;
+
+/// Which runtime backs an engine or context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// Deterministic discrete-event runtime (virtual clock).
+    Des,
+    /// Pinned-worker-thread runtime (wall clock).
+    Threaded,
+}
+
+/// Completion flag shared between submitter and waiter; works on both
+/// runtimes (the DES engine sets it from the event loop, the threaded
+/// engine from a worker thread).
+pub type SharedFlag = Arc<AtomicBool>;
+
+/// Fresh unset [`SharedFlag`].
+pub fn new_flag() -> SharedFlag {
+    Arc::new(AtomicBool::new(false))
+}
+
+/// Register an `expect_imm_count(imm, count)` whose satisfaction sets
+/// the returned flag — the standard receiver-side gate in scenario
+/// code (pair with [`Cx::wait`]).
+pub fn expect_flag(
+    engine: &dyn TransferEngine,
+    cx: &mut Cx,
+    gpu: u8,
+    imm: u32,
+    count: u32,
+) -> SharedFlag {
+    let flag = new_flag();
+    let f = flag.clone();
+    engine.expect_imm_count(
+        cx,
+        gpu,
+        imm,
+        count,
+        Box::new(move || f.store(true, Ordering::Release)),
+    );
+    flag
+}
+
+/// Runtime-neutral receive callback (`submit_recvs`).
+pub type RecvHandler = Arc<dyn Fn(&[u8]) + Send + Sync>;
+
+/// Runtime-neutral `expect_imm_count` callback.
+pub type ImmHandler = Box<dyn FnOnce() + Send>;
+
+/// Runtime-neutral UVM-watcher callback (`cb(old, new)`).
+pub type WatchHandler = Box<dyn Fn(u64, u64) + Send + Sync>;
+
+/// Runtime-neutral sender-side completion notification; converted to
+/// the runtime's native flavor at the trait boundary.
+pub enum Notify {
+    /// Set an atomic flag (wait with [`Cx::wait`]).
+    Flag(SharedFlag),
+    /// Run a callback on the runtime's completion path.
+    Callback(Box<dyn FnOnce() + Send>),
+    /// Fire-and-forget.
+    Noop,
+}
+
+impl Notify {
+    /// Convert to the DES engine's native notification.
+    pub fn into_des(self) -> OnDone {
+        match self {
+            Notify::Flag(f) => {
+                OnDone::Callback(Box::new(move |_sim| f.store(true, Ordering::Release)))
+            }
+            Notify::Callback(cb) => OnDone::Callback(Box::new(move |_sim| cb())),
+            Notify::Noop => OnDone::Noop,
+        }
+    }
+
+    /// Convert to the threaded engine's native notification.
+    pub fn into_threaded(self) -> OnDoneT {
+        match self {
+            Notify::Flag(f) => OnDoneT::Flag(f),
+            Notify::Callback(cb) => OnDoneT::Callback(cb),
+            Notify::Noop => OnDoneT::Noop,
+        }
+    }
+}
+
+/// Handle to a UVM watcher allocated through the trait; device-side
+/// code reports progress with [`UvmWatcher::device_write`].
+pub enum UvmWatcher {
+    /// DES watcher (observation scheduled on the virtual clock).
+    Des(UvmWatcherHandle),
+    /// Threaded watcher word (polled by the engine's watcher thread).
+    Threaded(Arc<AtomicU64>),
+}
+
+impl UvmWatcher {
+    /// Record a device-side write of `value`.
+    pub fn device_write(&self, cx: &mut Cx, value: u64) {
+        match self {
+            UvmWatcher::Des(h) => h.device_write(cx.sim(), value),
+            UvmWatcher::Threaded(word) => word.store(value, Ordering::Release),
+        }
+    }
+}
+
+/// Execution context threaded through every submission call.
+pub enum Cx<'a> {
+    /// DES runtime: all progress happens inside this simulator.
+    Des(&'a mut Sim),
+    /// Threaded runtime: progress happens on background threads.
+    Threaded,
+}
+
+impl Cx<'_> {
+    /// Which runtime this context drives.
+    pub fn kind(&self) -> RuntimeKind {
+        match self {
+            Cx::Des(_) => RuntimeKind::Des,
+            Cx::Threaded => RuntimeKind::Threaded,
+        }
+    }
+
+    /// The simulator (panics on the threaded runtime — only engine
+    /// internals and DES-specific code paths may call this).
+    pub fn sim(&mut self) -> &mut Sim {
+        match self {
+            Cx::Des(sim) => sim,
+            Cx::Threaded => panic!("Cx::sim() on the threaded runtime"),
+        }
+    }
+
+    /// Drive the runtime until `flag` is set: the DES variant runs the
+    /// event loop to quiescence and asserts the flag (a clear signal
+    /// of a lost completion), the threaded variant spins with a 10 s
+    /// deadline.
+    pub fn wait(&mut self, flag: &SharedFlag) {
+        match self {
+            Cx::Des(sim) => {
+                sim.run();
+                assert!(
+                    flag.load(Ordering::Acquire),
+                    "DES run quiesced without satisfying the awaited flag"
+                );
+            }
+            Cx::Threaded => {
+                let deadline = StdInstant::now() + StdDuration::from_secs(10);
+                while !flag.load(Ordering::Acquire) {
+                    assert!(StdInstant::now() < deadline, "timeout awaiting flag");
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// [`Cx::wait`] over several flags.
+    pub fn wait_all(&mut self, flags: &[SharedFlag]) {
+        for f in flags {
+            self.wait(f);
+        }
+    }
+
+    /// Let in-flight work finish without a flag to key on: run the DES
+    /// event loop to quiescence; no-op on the threaded runtime (which
+    /// has no global quiescence signal — key on flags instead).
+    pub fn settle(&mut self) {
+        if let Cx::Des(sim) = self {
+            sim.run();
+        }
+    }
+}
+
+/// The uniform TransferEngine interface (paper Fig 2), dyn-safe so
+/// scenario code can hold `&dyn TransferEngine` regardless of runtime.
+pub trait TransferEngine {
+    /// Which runtime backs this engine.
+    fn runtime_kind(&self) -> RuntimeKind;
+
+    /// The engine's main (discovery) address: group 0's.
+    fn main_address(&self) -> NetAddr {
+        self.group_address(0)
+    }
+
+    /// Address of GPU `gpu`'s domain group.
+    fn group_address(&self, gpu: u8) -> NetAddr;
+
+    /// NICs per GPU on this engine.
+    fn nics_per_gpu(&self) -> u8;
+
+    /// Allocate + register `len` bytes on `gpu` (paper `reg_mr` with
+    /// allocation fused in).
+    fn alloc_mr(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc);
+
+    /// Register an existing buffer on `gpu`, one rkey per NIC.
+    fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc);
+
+    /// Two-sided send into the peer's posted RECV pool
+    /// (copy-on-submit).
+    fn submit_send(&self, cx: &mut Cx, gpu: u8, addr: &NetAddr, msg: &[u8], on_done: Notify);
+
+    /// Post a rotating pool of `cnt` receive buffers of `len` bytes.
+    fn submit_recvs(&self, cx: &mut Cx, gpu: u8, len: usize, cnt: usize, cb: RecvHandler);
+
+    /// Contiguous one-sided write, sharded across NICs when large and
+    /// imm-less.
+    fn submit_single_write(
+        &self,
+        cx: &mut Cx,
+        src: (&MrHandle, u64),
+        len: u64,
+        dst: (&MrDesc, u64),
+        imm: Option<u32>,
+        on_done: Notify,
+    );
+
+    /// Paged writes: source page `i` lands at destination page `i`.
+    fn submit_paged_writes(
+        &self,
+        cx: &mut Cx,
+        page_len: u64,
+        src: (&MrHandle, &Pages),
+        dst: (&MrDesc, &Pages),
+        imm: Option<u32>,
+        on_done: Notify,
+    );
+
+    /// Register a peer group for scatter/barrier fast paths.
+    fn add_peer_group(&self, addrs: Vec<NetAddr>) -> PeerGroupHandle;
+
+    /// The peer list behind a group handle.
+    fn peer_group(&self, group: PeerGroupHandle) -> Option<Vec<NetAddr>>;
+
+    /// Scatter slices of `src` to many peers; one WR per destination.
+    fn submit_scatter(
+        &self,
+        cx: &mut Cx,
+        group: Option<PeerGroupHandle>,
+        src: &MrHandle,
+        dsts: &[ScatterDst],
+        imm: Option<u32>,
+        on_done: Notify,
+    );
+
+    /// Immediate-only notification to every peer (zero-length writes;
+    /// `dsts` supplies a valid descriptor per peer, required on EFA).
+    fn submit_barrier(
+        &self,
+        cx: &mut Cx,
+        gpu: u8,
+        group: Option<PeerGroupHandle>,
+        dsts: &[MrDesc],
+        imm: u32,
+        on_done: Notify,
+    );
+
+    /// Notify `cb` once `imm` has been received `count` times on
+    /// `gpu`'s group.
+    fn expect_imm_count(&self, cx: &mut Cx, gpu: u8, imm: u32, count: u32, cb: ImmHandler);
+
+    /// Poll the current counter value for `imm`.
+    fn imm_value(&self, gpu: u8, imm: u32) -> u32;
+
+    /// Release counter state for `imm`.
+    fn free_imm(&self, gpu: u8, imm: u32);
+
+    /// Allocate a UVM watcher; `cb(old, new)` fires when the engine
+    /// observes a changed value.
+    fn alloc_uvm_watcher(&self, cb: WatchHandler) -> UvmWatcher;
+
+    // -- wire bridge (descriptor exchange over SEND/RECV) -------------
+
+    /// Send a wire-encoded [`MrDesc`] to a peer (out-of-band
+    /// descriptor exchange, paper Fig 2 `#[serde]`).
+    fn submit_send_mr_desc(&self, cx: &mut Cx, gpu: u8, addr: &NetAddr, desc: &MrDesc) {
+        self.submit_send(cx, gpu, addr, &wire::encode_mr_desc(desc), Notify::Noop);
+    }
+
+    /// Send this engine's wire-encoded group address to a peer.
+    fn submit_send_net_addr(&self, cx: &mut Cx, gpu: u8, addr: &NetAddr) {
+        let own = self.group_address(gpu);
+        self.submit_send(cx, gpu, addr, &wire::encode_net_addr(&own), Notify::Noop);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Both-runtime cluster harness
+// ---------------------------------------------------------------------
+
+enum ClusterInner {
+    Des {
+        // Keeps the fabric alive for the engines; also exposed for
+        // NIC-level assertions (e.g. per-NIC byte balance).
+        net: SimNet,
+        sim: Sim,
+        engines: Vec<Engine>,
+    },
+    Threaded {
+        fabric: LocalFabric,
+        engines: Vec<ThreadedEngine>,
+    },
+}
+
+/// An N-node × G-GPU × K-NIC cluster on either runtime behind one
+/// handle: the uniform way for tests, harnesses and examples to run a
+/// scenario on both runtimes.
+pub struct Cluster {
+    inner: ClusterInner,
+}
+
+impl Cluster {
+    /// Build a cluster of `nodes` engines with `gpus` GPUs ×
+    /// `nics_per_gpu` NICs each. The DES variant picks an EFA-like
+    /// profile for multi-NIC groups and CX-7 for single-NIC ones; the
+    /// threaded variant runs SRD semantics (reliable, unordered).
+    pub fn new(kind: RuntimeKind, nodes: u16, gpus: u8, nics_per_gpu: u8, seed: u64) -> Self {
+        let inner = match kind {
+            RuntimeKind::Des => {
+                let net = SimNet::new(seed);
+                for node in 0..nodes {
+                    for gpu in 0..gpus {
+                        for nic in 0..nics_per_gpu {
+                            let profile = if nics_per_gpu > 1 {
+                                NicProfile::efa()
+                            } else {
+                                NicProfile::connectx7()
+                            };
+                            net.add_nic(NicAddr { node, gpu, nic }, profile);
+                        }
+                    }
+                }
+                let engines = (0..nodes)
+                    .map(|node| {
+                        Engine::new(
+                            &net,
+                            node,
+                            gpus,
+                            nics_per_gpu,
+                            GpuProfile::h100(),
+                            EngineCosts::default(),
+                            seed ^ (node as u64),
+                        )
+                    })
+                    .collect();
+                ClusterInner::Des {
+                    net,
+                    sim: Sim::new(),
+                    engines,
+                }
+            }
+            RuntimeKind::Threaded => {
+                let fabric = LocalFabric::new(TransportKind::Srd, seed);
+                let engines = (0..nodes)
+                    .map(|node| ThreadedEngine::new(&fabric, node, gpus, nics_per_gpu))
+                    .collect();
+                ClusterInner::Threaded { fabric, engines }
+            }
+        };
+        Cluster { inner }
+    }
+
+    /// Which runtime this cluster runs.
+    pub fn kind(&self) -> RuntimeKind {
+        match &self.inner {
+            ClusterInner::Des { .. } => RuntimeKind::Des,
+            ClusterInner::Threaded { .. } => RuntimeKind::Threaded,
+        }
+    }
+
+    /// The simulated fabric, when on the DES runtime (NIC-level
+    /// assertions such as byte balance).
+    pub fn des_net(&self) -> Option<SimNet> {
+        match &self.inner {
+            ClusterInner::Des { net, .. } => Some(net.clone()),
+            ClusterInner::Threaded { .. } => None,
+        }
+    }
+
+    /// Borrow the execution context plus the engines as trait objects.
+    pub fn parts(&mut self) -> (Cx<'_>, Vec<&dyn TransferEngine>) {
+        match &mut self.inner {
+            ClusterInner::Des { sim, engines, .. } => (
+                Cx::Des(sim),
+                engines.iter().map(|e| e as &dyn TransferEngine).collect(),
+            ),
+            ClusterInner::Threaded { engines, .. } => (
+                Cx::Threaded,
+                engines.iter().map(|e| e as &dyn TransferEngine).collect(),
+            ),
+        }
+    }
+
+    /// Tear the cluster down (joins threads on the threaded runtime).
+    pub fn shutdown(self) {
+        if let ClusterInner::Threaded { fabric, engines } = self.inner {
+            for e in &engines {
+                e.shutdown();
+            }
+            fabric.shutdown();
+        }
+    }
+}
+
+/// Run `scenario` once per runtime on a fresh cluster each time — the
+/// standard shape of a runtime-agnostic integration test.
+pub fn run_on_both(
+    nodes: u16,
+    gpus: u8,
+    nics_per_gpu: u8,
+    seed: u64,
+    scenario: impl Fn(&mut Cx, &[&dyn TransferEngine]),
+) {
+    for kind in [RuntimeKind::Des, RuntimeKind::Threaded] {
+        let mut cluster = Cluster::new(kind, nodes, gpus, nics_per_gpu, seed);
+        {
+            let (mut cx, engines) = cluster.parts();
+            scenario(&mut cx, &engines);
+            cx.settle();
+        }
+        cluster.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The same scenario, byte-for-byte, on both runtimes: descriptor
+    /// exchange-shaped write + imm counting through `&dyn
+    /// TransferEngine`.
+    #[test]
+    fn both_runtimes_run_the_same_write_scenario() {
+        run_on_both(2, 1, 2, 0xC0FFEE, |cx, engines| {
+            let (a, b) = (engines[0], engines[1]);
+            assert_eq!(a.nics_per_gpu(), 2);
+            let (src, _) = a.alloc_mr(0, 4096);
+            let (dst_h, dst_d) = b.alloc_mr(0, 4096);
+            src.buf.write(0, b"one API, two runtimes");
+
+            let got = expect_flag(b, cx, 0, 7, 1);
+            let sent = new_flag();
+            a.submit_single_write(
+                cx,
+                (&src, 0),
+                21,
+                (&dst_d, 64),
+                Some(7),
+                Notify::Flag(sent.clone()),
+            );
+            cx.wait(&sent);
+            cx.wait(&got);
+            assert_eq!(&dst_h.buf.to_vec()[64..85], b"one API, two runtimes");
+        });
+    }
+
+    #[test]
+    fn peer_groups_resolve_on_both_runtimes() {
+        run_on_both(3, 1, 1, 9, |_cx, engines| {
+            let peers: Vec<NetAddr> =
+                engines[1..].iter().map(|e| e.main_address()).collect();
+            let h = engines[0].add_peer_group(peers.clone());
+            assert_eq!(engines[0].peer_group(h).unwrap(), peers);
+            assert!(engines[0].peer_group(PeerGroupHandle(9999)).is_none());
+        });
+    }
+}

@@ -7,7 +7,8 @@
 //! compact little-endian TLV-free layout with explicit counts and a
 //! magic/version prefix; golden tests pin the byte layout.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::err::{Context, Result};
 
 use super::api::{MrDesc, NetAddr};
 use crate::fabric::nic::NicAddr;

@@ -12,7 +12,8 @@
 //!   fabricctl moe --ep 32 --impl ours --nic efa --iters 4
 //!   fabricctl rl --ranks 16
 
-use anyhow::{bail, Result};
+use fabric_lib::bail;
+use fabric_lib::util::err::Result;
 
 use fabric_lib::apps::kvcache::run_table3_row;
 use fabric_lib::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};

@@ -1,6 +1,16 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them
 //! from the Rust hot path — Python never runs at request time.
+//!
+//! The real backend (`pjrt.rs`) needs the out-of-tree `xla` crate and
+//! is gated behind the `xla` feature; the default build compiles an
+//! API-compatible stub whose `Runtime::load` errors, so artifact-gated
+//! callers skip gracefully and the crate stays dependency-free.
 
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use pjrt::{ArgValue, ModelInfo, Runtime};

@@ -11,7 +11,8 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::err::{Context, Result};
 
 use crate::util::Json;
 

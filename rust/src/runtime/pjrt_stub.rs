@@ -1,0 +1,121 @@
+//! API-compatible stub for the PJRT runtime, compiled when the `xla`
+//! feature is off (the out-of-tree `xla` crate is not vendored, so the
+//! default build must not reference it).
+//!
+//! Every constructor fails with a clear message; the type/function
+//! surface matches `pjrt.rs` so callers compile unchanged and the
+//! artifact-gated integration tests skip exactly as they do when
+//! `artifacts/manifest.json` is absent.
+
+use std::path::Path;
+
+use crate::bail;
+use crate::util::err::Result;
+
+/// Model hyper-parameters recorded in the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub max_seq: usize,
+    pub param_count: usize,
+}
+
+impl ModelInfo {
+    /// f32 KV-cache bytes for `tokens` positions across all layers
+    /// (K and V), matching the cache shapes in `model.py`.
+    pub fn kv_bytes(&self, tokens: usize) -> usize {
+        2 * self.n_layers * self.n_heads * tokens * (self.d_model / self.n_heads) * 4
+    }
+}
+
+/// Input argument for execution.
+pub enum ArgValue<'a> {
+    /// Scalar i32 (token ids, positions).
+    I32(i32),
+    /// f32 tensor with shape.
+    F32(&'a [f32], &'a [usize]),
+}
+
+/// Stub executable cache: construction always fails.
+pub struct Runtime {
+    pub model: ModelInfo,
+}
+
+impl Runtime {
+    /// Always errors: the real backend needs `--features xla`.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Runtime> {
+        bail!(
+            "PJRT runtime unavailable: fabric_lib was built without the \
+             `xla` feature (the XLA/PJRT crate is not vendored offline)"
+        )
+    }
+
+    /// Entry names available.
+    pub fn entries(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Number of outputs of an entry.
+    pub fn output_count(&self, name: &str) -> Result<usize> {
+        bail!("stub runtime has no entry {name}")
+    }
+
+    /// Output shape of entry `name`, index `i`.
+    pub fn output_shape(&self, name: &str, _i: usize) -> Result<Vec<usize>> {
+        bail!("stub runtime has no entry {name}")
+    }
+
+    /// Execute `name` with typed args.
+    pub fn execute(&self, name: &str, _args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+        bail!("stub runtime cannot execute {name}")
+    }
+
+    /// Convenience: prefill at bucket length `tokens.len()`.
+    pub fn prefill(&self, _tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        bail!("stub runtime cannot prefill")
+    }
+
+    /// Convenience: one decode step.
+    pub fn decode(
+        &self,
+        _token: i32,
+        _k_cache: &[f32],
+        _v_cache: &[f32],
+        _pos: i32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        bail!("stub runtime cannot decode")
+    }
+
+    /// Argmax helper for greedy decoding.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_clear_message() {
+        let err = Runtime::load("artifacts").unwrap_err().to_string();
+        assert!(err.contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn argmax_matches_reference() {
+        assert_eq!(Runtime::argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(Runtime::argmax(&[]), 0);
+    }
+}

@@ -5,7 +5,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::err::{Context, Result};
 
 /// Parsed arguments.
 #[derive(Debug, Default)]

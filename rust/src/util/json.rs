@@ -7,7 +7,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::err::Result;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]

@@ -3,6 +3,7 @@
 //! available offline — see DESIGN.md §1).
 
 pub mod cli;
+pub mod err;
 pub mod fasthash;
 pub mod json;
 pub mod prop;

@@ -1,0 +1,109 @@
+//! Cross-runtime integration: the SAME scenario code, written against
+//! `&dyn TransferEngine`, exercising scatter + barrier +
+//! `expect_imm_count` end-to-end on each runtime (DES and threaded),
+//! plus the generic app harness entry points on both.
+
+use fabric_lib::apps::kvcache::harness::run_generic_kv_push;
+use fabric_lib::apps::moe::harness::run_generic_dispatch_round;
+use fabric_lib::apps::rlweights::{run_generic_rank0_fanout, run_generic_weight_sync};
+use fabric_lib::engine::api::{MrDesc, MrHandle, ScatterDst};
+use fabric_lib::engine::traits::{
+    expect_flag, new_flag, Cluster, Cx, Notify, RuntimeKind, TransferEngine,
+};
+
+/// Scatter to every peer through a registered group, count the
+/// per-peer immediates, then release everyone with a handle-based
+/// barrier — the §6 dispatch skeleton, runtime-agnostic.
+fn scatter_barrier_imm_scenario(cx: &mut Cx, engines: &[&dyn TransferEngine]) {
+    let n = engines.len();
+    let sender = engines[0];
+    let (src, _) = sender.alloc_mr(0, 256 * (n - 1));
+    src.buf.write(0, &vec![0xAB; 256 * (n - 1)]);
+    let peers: Vec<(MrHandle, MrDesc)> =
+        engines[1..].iter().map(|e| e.alloc_mr(0, 1024)).collect();
+    let group =
+        sender.add_peer_group(engines[1..].iter().map(|e| e.main_address()).collect());
+
+    // Receiver-side expectations: one scatter imm + one barrier imm.
+    let mut scattered = Vec::new();
+    let mut released = Vec::new();
+    for e in &engines[1..] {
+        scattered.push(expect_flag(*e, cx, 0, 11, 1));
+        released.push(expect_flag(*e, cx, 0, 12, 1));
+    }
+
+    let dsts: Vec<ScatterDst> = peers
+        .iter()
+        .enumerate()
+        .map(|(i, (_, d))| ScatterDst {
+            len: 256,
+            src: (i as u64) * 256,
+            dst: (d.clone(), 100),
+        })
+        .collect();
+    let sent = new_flag();
+    sender.submit_scatter(cx, Some(group), &src, &dsts, Some(11), Notify::Flag(sent.clone()));
+    cx.wait(&sent);
+    cx.wait_all(&scattered);
+    for (i, (h, _)) in peers.iter().enumerate() {
+        assert_eq!(&h.buf.to_vec()[100..356], &[0xAB; 256][..], "peer {i} payload");
+    }
+
+    // Barrier through the same handle.
+    let descs: Vec<MrDesc> = peers.iter().map(|(_, d)| d.clone()).collect();
+    sender.submit_barrier(cx, 0, Some(group), &descs, 12, Notify::Noop);
+    cx.wait_all(&released);
+
+    // Counters were retired by the satisfied expectations.
+    for e in &engines[1..] {
+        assert_eq!(e.imm_value(0, 11), 0);
+        assert_eq!(e.imm_value(0, 12), 0);
+    }
+}
+
+fn run_scenario_on(kind: RuntimeKind) {
+    let mut cluster = Cluster::new(kind, 4, 1, 2, 0x1A7E);
+    {
+        let (mut cx, engines) = cluster.parts();
+        assert!(engines.iter().all(|e| e.runtime_kind() == kind));
+        scatter_barrier_imm_scenario(&mut cx, &engines);
+        cx.settle();
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn scatter_barrier_imm_end_to_end_des() {
+    run_scenario_on(RuntimeKind::Des);
+}
+
+#[test]
+fn scatter_barrier_imm_end_to_end_threaded() {
+    run_scenario_on(RuntimeKind::Threaded);
+}
+
+/// All three app protocols, one runtime per test, from the same
+/// generic entry points the app harnesses expose.
+fn run_apps_on(kind: RuntimeKind) {
+    let mut cluster = Cluster::new(kind, 6, 1, 2, 0xA995);
+    {
+        let (mut cx, engines) = cluster.parts();
+        run_generic_kv_push(&mut cx, engines[0], engines[1], 8, 512);
+        run_generic_dispatch_round(&mut cx, &engines[..4], 4, 64);
+        run_generic_rank0_fanout(&mut cx, &engines[..4], 16 * 1024);
+        let (trainers, replicas) = engines.split_at(4);
+        run_generic_weight_sync(&mut cx, trainers, replicas, 2048);
+        cx.settle();
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn app_protocols_end_to_end_des() {
+    run_apps_on(RuntimeKind::Des);
+}
+
+#[test]
+fn app_protocols_end_to_end_threaded() {
+    run_apps_on(RuntimeKind::Threaded);
+}

@@ -1,12 +1,16 @@
 //! Property tests on the coordinator's pure logic: sharding coverage,
-//! IMMCOUNTER order-independence, wire-format fuzz.
+//! IMMCOUNTER order-independence, wire-format fuzz — plus end-to-end
+//! properties of the sharding invariants (coverage, imm-count
+//! preservation, NIC balance) exercised through the shared
+//! `TransferEngine` trait on BOTH runtimes.
 //!
 //! Uses the in-repo seeded property harness (`util::prop`); replay a
 //! failure with FABRIC_PROP_SEED=<seed> FABRIC_PROP_CASES=1.
 
-use fabric_lib::engine::api::{MrDesc, NetAddr, SPLIT_THRESHOLD};
+use fabric_lib::engine::api::{MrDesc, NetAddr, Pages, SPLIT_THRESHOLD};
 use fabric_lib::engine::imm_counter::{ImmCounter, ImmEvent};
 use fabric_lib::engine::sharding::{plan_paged_writes, plan_single_write, PlannedWrite};
+use fabric_lib::engine::traits::{expect_flag, new_flag, Cluster, Notify, RuntimeKind};
 use fabric_lib::engine::wire;
 use fabric_lib::fabric::nic::NicAddr;
 use fabric_lib::sim::Rng;
@@ -155,6 +159,116 @@ fn prop_imm_counter_order_independent() {
             } else {
                 Err(format!("unsatisfied expectations: {satisfied:?}"))
             }
+        },
+    );
+}
+
+/// Coverage + imm-count preservation THROUGH the engines: a random
+/// paged transfer submitted via the shared trait must land every page
+/// byte-exactly and deliver exactly one immediate per page (the
+/// `SPLIT_THRESHOLD` contract: imm writes are never split), on both
+/// runtimes.
+#[test]
+fn prop_paged_transfer_through_both_runtimes() {
+    for kind in [RuntimeKind::Des, RuntimeKind::Threaded] {
+        check(
+            &format!("paged transfer integrity ({kind:?})"),
+            |rng: &mut Rng| {
+                let pages = 1 + rng.below(12) as u32;
+                let page_len = 64 * (1 + rng.below(8));
+                // Random destination slot permutation.
+                let mut slots: Vec<u32> = (0..pages).collect();
+                rng.shuffle(&mut slots);
+                let seed = rng.next_u64();
+                (pages, page_len, slots, seed)
+            },
+            |(pages, page_len, slots, seed)| {
+                let mut cluster = Cluster::new(kind, 2, 1, 2, *seed);
+                let result = {
+                    let (mut cx, engines) = cluster.parts();
+                    let (a, b) = (engines[0], engines[1]);
+                    let bytes = (*pages as u64 * page_len) as usize;
+                    let (src, _) = a.alloc_mr(0, bytes);
+                    let (dst_h, dst_d) = b.alloc_mr(0, bytes);
+                    for p in 0..*pages {
+                        let fill = (p % 251) as u8 + 1;
+                        src.buf.write(
+                            (p as u64 * page_len) as usize,
+                            &vec![fill; *page_len as usize],
+                        );
+                    }
+                    let done = new_flag();
+                    let counted = expect_flag(b, &mut cx, 0, 9, *pages);
+                    a.submit_paged_writes(
+                        &mut cx,
+                        *page_len,
+                        (&src, &Pages::contiguous(0, *pages, *page_len)),
+                        (&dst_d, &Pages { indices: slots.clone(), stride: *page_len, offset: 0 }),
+                        Some(9),
+                        Notify::Flag(done.clone()),
+                    );
+                    cx.wait(&done);
+                    cx.wait(&counted);
+                    let v = dst_h.buf.to_vec();
+                    let mut result = Ok(());
+                    for (i, &slot) in slots.iter().enumerate() {
+                        let off = (slot as u64 * page_len) as usize;
+                        let fill = (i as u32 % 251) as u8 + 1;
+                        if !v[off..off + *page_len as usize].iter().all(|&b| b == fill) {
+                            result = Err(format!("page {i} corrupted in slot {slot}"));
+                            break;
+                        }
+                    }
+                    cx.settle();
+                    result
+                };
+                cluster.shutdown();
+                result
+            },
+        );
+    }
+}
+
+/// Balance through the engine: a large imm-less write sharded by the
+/// DES engine must put traffic on every NIC of the group within one
+/// byte of even (the sharding header's balance promise, observed at
+/// the fabric, not just in the plan).
+#[test]
+fn prop_sharded_write_balances_nic_bytes() {
+    check(
+        "sharded write NIC balance (Des)",
+        |rng: &mut Rng| {
+            let len = SPLIT_THRESHOLD + 1 + rng.below(4 << 20);
+            (len, rng.next_u64())
+        },
+        |&(len, seed)| {
+            let mut cluster = Cluster::new(RuntimeKind::Des, 2, 1, 2, seed);
+            let net = cluster.des_net().expect("DES cluster");
+            {
+                let (mut cx, engines) = cluster.parts();
+                let (src, _) = engines[0].alloc_mr(0, len as usize);
+                let (_dh, dd) = engines[1].alloc_mr(0, len as usize);
+                let done = new_flag();
+                engines[0].submit_single_write(
+                    &mut cx,
+                    (&src, 0),
+                    len,
+                    (&dd, 0),
+                    None,
+                    Notify::Flag(done.clone()),
+                );
+                cx.wait(&done);
+            }
+            let (tx0, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 0 });
+            let (tx1, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 1 });
+            cluster.shutdown();
+            if tx0 + tx1 != len {
+                return Err(format!("coverage: {tx0}+{tx1} != {len}"));
+            }
+            if tx0.abs_diff(tx1) > 1 {
+                return Err(format!("imbalance beyond one byte: {tx0} vs {tx1}"));
+            }
+            Ok(())
         },
     );
 }
