@@ -32,7 +32,7 @@
 use std::sync::atomic::Ordering;
 
 use fabric_lib::engine::traits::{
-    expect_flag, new_flag, Cluster, Cx, Notify, RuntimeKind, TransferEngine,
+    expect_flag, new_flag, Cluster, Cx, Notify, OnRecv, RuntimeKind, TransferEngine,
 };
 use fabric_lib::engine::wire;
 
@@ -84,7 +84,7 @@ fn demo(cx: &mut Cx, node_a: &dyn TransferEngine, node_b: &dyn TransferEngine) {
         0,
         256,
         8,
-        std::sync::Arc::new(move |msg: &[u8]| {
+        OnRecv::handler(move |msg: &[u8]| {
             println!("B got RPC: {:?}", String::from_utf8_lossy(msg));
             if sn.fetch_add(1, Ordering::Relaxed) + 1 == 3 {
                 rp.store(true, Ordering::Release);

@@ -11,6 +11,7 @@ use std::rc::Rc;
 use fabric_lib::apps::moe::rank::Strategy;
 use fabric_lib::apps::moe::{harness::run_epoch_with, MoeConfig};
 use fabric_lib::engine::api::ScatterDst;
+use fabric_lib::engine::model::Reactor;
 use fabric_lib::engine::threaded::ThreadedEngine;
 use fabric_lib::engine::traits::{new_flag, Cx, Notify, TransferEngine};
 use fabric_lib::fabric::local::LocalFabric;
@@ -151,7 +152,7 @@ fn main() {
     let a = ThreadedEngine::new(&fabric, 0, 1, 2);
     let b = ThreadedEngine::new(&fabric, 1, 1, 2);
     let eng: &dyn TransferEngine = &a;
-    let mut cx = Cx::Threaded;
+    let mut cx = Cx::Threaded(Reactor::new());
     let (src, _) = eng.alloc_mr(0, 1 << 20);
     let peers: Vec<_> = (0..56).map(|_| b.alloc_mr(0, 1 << 20).1).collect();
     let group = eng.add_peer_group(vec![b.main_address(); 56]);

@@ -1,15 +1,20 @@
 //! Decoder node: page allocation, dispatch, IMMCOUNTER-driven decode
 //! start, cancellation and heartbeat monitoring (paper §4 + Appendix
 //! A Fig 14).
+//!
+//! Runtime-neutral since the compute-model migration: the decoder
+//! holds `Rc<dyn TransferEngine>` and schedules decode passes on the
+//! shared clock (`Cx::after`), so the same state machine runs on the
+//! DES virtual clock and on the threaded runtime's reactor.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::engine::api::{MrDesc, MrHandle, NetAddr};
-use crate::engine::des_engine::{Engine, OnDone};
+use crate::engine::model::Fired;
+use crate::engine::traits::{Cx, Notify, OnRecv, TransferEngine};
 use crate::sim::time::{Duration, Instant};
-use crate::sim::Sim;
 
 use super::proto::{self, CancelAck, CancelReq, DispatchReq, Heartbeat};
 use super::workload::ServingWorkload;
@@ -57,7 +62,7 @@ struct ReqInfo {
 }
 
 struct DState {
-    engine: Engine,
+    engine: Rc<dyn TransferEngine>,
     gpu: u8,
     workload: ServingWorkload,
     kv: (MrHandle, MrDesc),
@@ -81,7 +86,12 @@ pub struct Decoder {
 impl Decoder {
     /// Create the decoder, allocating its KV + tail regions and
     /// starting its control-message listener.
-    pub fn new(sim: &mut Sim, engine: &Engine, gpu: u8, workload: ServingWorkload) -> Self {
+    pub fn new(
+        cx: &mut Cx,
+        engine: Rc<dyn TransferEngine>,
+        gpu: u8,
+        workload: ServingWorkload,
+    ) -> Self {
         let kv_len = workload.layout.region_bytes() as usize;
         let kv = if kv_len > (64 << 20) {
             engine.alloc_mr_unbacked(gpu, kv_len)
@@ -108,13 +118,14 @@ impl Decoder {
         }));
         let d = Decoder { state };
         let d2 = d.clone();
-        engine.submit_recvs(sim, gpu, 1 << 12, 32, move |sim, msg| {
-            d2.on_message(sim, msg);
-        });
+        let on_msg = OnRecv::Cont(cx.cont(move |cx: &mut Cx, fired: Fired| {
+            d2.on_message(cx, &fired.data);
+        }));
+        engine.submit_recvs(cx, gpu, 1 << 12, 32, on_msg);
         d
     }
 
-    /// Group address (給 the scheduler / prefillers).
+    /// Group address (for the scheduler / prefillers).
     pub fn address(&self) -> NetAddr {
         let s = self.state.borrow();
         s.engine.group_address(s.gpu)
@@ -144,7 +155,7 @@ impl Decoder {
     /// IMMCOUNTER expectation, dispatch to `prefiller` (Fig 14).
     pub fn submit_request(
         &self,
-        sim: &mut Sim,
+        cx: &mut Cx,
         prefiller: &NetAddr,
         input_ids: Vec<u32>,
         decode_tokens: u32,
@@ -186,7 +197,7 @@ impl Decoder {
                     prefiller_node: prefiller.primary().node,
                     seq_tokens: seq,
                     decode_tokens,
-                    submitted: sim.now(),
+                    submitted: cx.now(),
                     transfer_done: 0,
                     ttft: 0,
                 },
@@ -196,14 +207,15 @@ impl Decoder {
         // Completion notification without any ordering assumption:
         // count WRITEIMMs.
         let this = self.clone();
-        engine.expect_imm_count(sim, gpu, imm, expected, move |sim| {
-            this.on_transfer_done(sim, req_id);
+        let on_complete = cx.cont(move |cx: &mut Cx, _f: Fired| {
+            this.on_transfer_done(cx, req_id);
         });
-        engine.submit_send(sim, gpu, prefiller, &msg, OnDone::Noop);
+        engine.expect_imm_count(cx, gpu, imm, expected, Notify::Cont(on_complete));
+        engine.submit_send(cx, gpu, prefiller, &msg, Notify::Noop);
         req_id
     }
 
-    fn on_transfer_done(&self, sim: &mut Sim, req_id: u64) {
+    fn on_transfer_done(&self, cx: &mut Cx, req_id: u64) {
         let (decode_pass, n_decode) = {
             let mut s = self.state.borrow_mut();
             let Some(r) = s.requests.get_mut(&req_id) else {
@@ -213,7 +225,7 @@ impl Decoder {
                 return; // cancelled meanwhile
             }
             r.state = ReqState::Decoding;
-            r.transfer_done = sim.now();
+            r.transfer_done = cx.now();
             let imm = r.imm;
             let n = r.decode_tokens;
             let dp = s.workload.compute.decode_pass_ns;
@@ -224,21 +236,21 @@ impl Decoder {
         // first output token (the paper's main TTFT overhead), then
         // autoregressive decoding.
         let this = self.clone();
-        sim.after(decode_pass, move |sim| {
+        cx.after(decode_pass, move |cx: &mut Cx| {
             {
                 let mut s = this.state.borrow_mut();
                 if let Some(r) = s.requests.get_mut(&req_id) {
-                    r.ttft = sim.now();
+                    r.ttft = cx.now();
                 }
             }
             let t2 = this.clone();
-            sim.after(decode_pass * n_decode as u64, move |sim| {
-                t2.finish(sim, req_id);
+            cx.after(decode_pass * n_decode as u64, move |cx: &mut Cx| {
+                t2.finish(cx, req_id);
             });
         });
     }
 
-    fn finish(&self, sim: &mut Sim, req_id: u64) {
+    fn finish(&self, cx: &mut Cx, req_id: u64) {
         let mut s = self.state.borrow_mut();
         let Some(r) = s.requests.get_mut(&req_id) else {
             return;
@@ -253,7 +265,7 @@ impl Decoder {
             submitted: r.submitted,
             transfer_done: r.transfer_done,
             ttft: r.ttft,
-            finished: sim.now(),
+            finished: cx.now(),
             decode_tokens: r.decode_tokens,
         };
         let pages = r.pages.clone();
@@ -265,7 +277,7 @@ impl Decoder {
 
     /// Cancel a request: pages stay quarantined until the prefiller
     /// confirms no further WRITEs are possible.
-    pub fn cancel(&self, sim: &mut Sim, req_id: u64) {
+    pub fn cancel(&self, cx: &mut Cx, req_id: u64) {
         let (prefiller, engine, gpu) = {
             let mut s = self.state.borrow_mut();
             let Some(r) = s.requests.get_mut(&req_id) else {
@@ -278,15 +290,15 @@ impl Decoder {
             (r.prefiller.clone(), s.engine.clone(), s.gpu)
         };
         engine.submit_send(
-            sim,
+            cx,
             gpu,
             &prefiller,
             &CancelReq { req_id }.encode(),
-            OnDone::Noop,
+            Notify::Noop,
         );
     }
 
-    fn on_message(&self, sim: &mut Sim, msg: &[u8]) {
+    fn on_message(&self, cx: &mut Cx, msg: &[u8]) {
         match proto::msg_tag(msg) {
             Ok(t) if t == crate::engine::wire::tag::KV_CANCEL_ACK => {
                 let ack = CancelAck::decode(msg).expect("bad CancelAck");
@@ -294,10 +306,8 @@ impl Decoder {
             }
             Ok(t) if t == crate::engine::wire::tag::HEARTBEAT => {
                 let hb = Heartbeat::decode(msg).expect("bad Heartbeat");
-                self.state
-                    .borrow_mut()
-                    .last_seen
-                    .insert(hb.sender_node, sim.now());
+                let now = cx.now();
+                self.state.borrow_mut().last_seen.insert(hb.sender_node, now);
             }
             Ok(t) => panic!("decoder: unexpected message tag {t}"),
             Err(e) => panic!("decoder: undecodable message: {e}"),
@@ -329,12 +339,12 @@ impl Decoder {
     /// been seen within the timeout are cancelled after the timeout —
     /// stale transfers can no longer arrive from a dead transport
     /// (§4).
-    pub fn start_monitor(&self, sim: &mut Sim, interval: Duration) {
-        self.monitor_tick(sim, interval);
+    pub fn start_monitor(&self, cx: &mut Cx, interval: Duration) {
+        self.monitor_tick(cx, interval);
     }
 
-    fn monitor_tick(&self, sim: &mut Sim, interval: Duration) {
-        let now = sim.now();
+    fn monitor_tick(&self, cx: &mut Cx, interval: Duration) {
+        let now = cx.now();
         let dead: Vec<u64> = {
             let mut s = self.state.borrow_mut();
             let timeout = s.hb_timeout;
@@ -364,6 +374,6 @@ impl Decoder {
         };
         let _ = dead;
         let this = self.clone();
-        sim.after(interval, move |sim| this.monitor_tick(sim, interval));
+        cx.after(interval, move |cx: &mut Cx| this.monitor_tick(cx, interval));
     }
 }

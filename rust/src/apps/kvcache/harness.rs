@@ -1,23 +1,31 @@
 //! Scenario harness for the KvCache app: builds a prefiller/decoder
-//! pair on a simulated EFA cluster and reproduces paper Table 3 rows.
+//! pair and reproduces paper Table 3 rows.
 //!
-//! Two entry points at different fidelities:
+//! Entry points:
 //!
-//! * [`run_table3_row`] — the timing-faithful Table-3 scenario. It
-//!   needs the DES fabric's GPU/compute model and therefore runs on
-//!   the DES engine only.
-//! * [`run_generic_kv_push`] — the KvCache *transfer protocol*
+//! * [`run_table3_row_on`] — the full Table-3 scenario over any
+//!   runtime: `&mut Cx` + two `Rc<dyn TransferEngine>` peers, with the
+//!   GPU side scheduled on the runtime-neutral
+//!   [`crate::engine::model::ComputeModel`]. Timing-faithful on the
+//!   DES runtime; structurally identical (same pages, steps, writes)
+//!   on the threaded runtime.
+//! * [`run_table3_row`] — convenience wrapper reproducing the paper's
+//!   H200+2×EFA testbed on a DES [`Cluster`] (what the bench and the
+//!   numeric tests use).
+//! * [`run_generic_kv_push`] — the bare KvCache *transfer protocol*
 //!   (paged WRITEIMMs + tail write counted by `expect_imm_count`,
-//!   Appendix A) over `&dyn TransferEngine`, so it runs bit-identical
-//!   on both the DES and threaded runtimes.
+//!   Appendix A) over `&dyn TransferEngine`, as a protocol smoke test.
 
-use crate::engine::api::{EngineCosts, Pages};
-use crate::engine::des_engine::Engine;
-use crate::engine::traits::{expect_flag, Cx, Notify, TransferEngine};
-use crate::fabric::gpu::GpuSim;
-use crate::fabric::topology::{ClusterSpec, DeviceId};
+use std::rc::Rc;
+
+use crate::engine::api::Pages;
+use crate::engine::model::ComputeModel;
+use crate::engine::traits::{
+    expect_flag, Cluster, Cx, Notify, RuntimeKind, TransferEngine,
+};
+use crate::fabric::profile::GpuProfile;
+use crate::fabric::topology::ClusterSpec;
 use crate::sim::time::{Instant, MS};
-use crate::sim::Sim;
 
 use super::decoder::Decoder;
 use super::prefiller::Prefiller;
@@ -39,46 +47,36 @@ pub struct Table3Row {
     pub steps: u32,
     /// Pages transferred per layer (capped at chunk size).
     pub pages: u32,
+    /// Total WRITEs the prefiller issued (runtime-independent).
+    pub writes: u64,
 }
 
-/// Simulate one disaggregated request of `seq` tokens on an
-/// H200+2×EFA pair (paper Table 3 testbed) and report the row.
-pub fn run_table3_row(seq: u32) -> Table3Row {
+/// Run one disaggregated request of `seq` tokens on whatever runtime
+/// backs `cx`: the prefiller on `eng_p`, the decoder on `eng_d`, GPU
+/// kernels timed by `gpu_profile` through the compute model.
+pub fn run_table3_row_on(
+    cx: &mut Cx,
+    eng_p: Rc<dyn TransferEngine>,
+    eng_d: Rc<dyn TransferEngine>,
+    gpu_profile: GpuProfile,
+    seq: u32,
+) -> Table3Row {
     let workload = ServingWorkload::qwen3_235b(seq);
-    let spec = ClusterSpec::h200_efa(2);
-    let cluster = spec.build();
-    let mut sim = Sim::new();
+    let compute = ComputeModel::new(gpu_profile);
 
-    let eng_p = Engine::new(
-        &cluster.net,
-        0,
-        1,
-        spec.nics_per_gpu,
-        spec.gpu_profile.clone(),
-        EngineCosts::default(),
-        1,
-    );
-    let eng_d = Engine::new(
-        &cluster.net,
-        1,
-        1,
-        spec.nics_per_gpu,
-        spec.gpu_profile.clone(),
-        EngineCosts::default(),
-        2,
-    );
-    let gpu_p: &GpuSim = cluster.gpu(DeviceId { node: 0, gpu: 0 });
-
-    let prefiller = Prefiller::new(&mut sim, &eng_p, 0, gpu_p, workload.clone(), 0);
-    let decoder = Decoder::new(&mut sim, &eng_d, 0, workload.clone());
+    let prefiller = Prefiller::new(cx, eng_p.clone(), 0, &compute, workload.clone(), 0);
+    let decoder = Decoder::new(cx, eng_d.clone(), 0, workload.clone());
 
     let input: Vec<u32> = (0..seq).map(|i| i % 1000).collect();
-    decoder.submit_request(&mut sim, &eng_p.group_address(0), input, 1);
-    sim.run();
-
+    decoder.submit_request(cx, &eng_p.group_address(0), input, 1);
     let reports = decoder.reports();
+    {
+        let reports = reports.clone();
+        cx.drive_until("table3 request completion", move || {
+            reports.borrow().len() == 1
+        });
+    }
     let reports = reports.borrow();
-    assert_eq!(reports.len(), 1, "request must complete");
     let r = reports[0];
 
     // Non-disaggregated reference: same compute model, no transfer, no
@@ -102,12 +100,47 @@ pub fn run_table3_row(seq: u32) -> Table3Row {
     Table3Row {
         seq,
         ttft_non_ms: ttft_non as f64 / MS as f64,
-        ttft_disagg_ms: r.ttft as f64 / MS as f64,
+        // Relative to request submission: on DES the request starts at
+        // t=0, on the threaded runtime the reactor epoch includes
+        // cluster/scenario setup (and reuse on one cluster starts
+        // mid-clock), so the absolute reading would be wrong there.
+        ttft_disagg_ms: r.ttft.saturating_sub(r.submitted) as f64 / MS as f64,
         per_layer_compute_ms: last_layer_compute / MS as f64,
         per_layer_transfer_ms: mean_transfer / MS as f64,
         steps: chunks.len() as u32,
         pages: workload.layout.pages_for(last_chunk_tokens),
+        writes: stats.writes,
     }
+}
+
+/// Simulate one disaggregated request of `seq` tokens on an
+/// H200+2×EFA pair (paper Table 3 testbed) and report the row — the
+/// timing-faithful DES convenience wrapper around
+/// [`run_table3_row_on`].
+pub fn run_table3_row(seq: u32) -> Table3Row {
+    let spec = ClusterSpec::h200_efa(2);
+    let mut cluster = Cluster::new_with(
+        RuntimeKind::Des,
+        2,
+        1,
+        spec.nics_per_gpu,
+        spec.seed,
+        spec.nic_profile.clone(),
+        spec.gpu_profile.clone(),
+    );
+    let engines = cluster.engines_rc();
+    let row = {
+        let (mut cx, _) = cluster.parts();
+        run_table3_row_on(
+            &mut cx,
+            engines[0].clone(),
+            engines[1].clone(),
+            spec.gpu_profile.clone(),
+            seq,
+        )
+    };
+    cluster.shutdown();
+    row
 }
 
 /// Runtime-agnostic KV-cache page push (the §4 transfer protocol):
@@ -201,6 +234,9 @@ mod tests {
             row.per_layer_transfer_ms < row.per_layer_compute_ms,
             "transfer hidden by compute: {row:?}"
         );
+        // One paged write per (chunk, layer): 1 step × 94 layers × 32
+        // pages each.
+        assert_eq!(row.writes, 94 * 32);
     }
 
     #[test]

@@ -1,15 +1,19 @@
 //! Prefiller node: chunked prefill with layer-by-layer KV transfer
 //! (paper §4 + Appendix A Fig 15).
+//!
+//! Runtime-neutral since the compute-model migration: the prefiller
+//! holds `Rc<dyn TransferEngine>` and schedules its GPU kernels on a
+//! [`ComputeModel`], so the same state machine runs on the DES virtual
+//! clock and on the threaded runtime's reactor.
 
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
 use crate::engine::api::{MrDesc, MrHandle, NetAddr, Pages};
-use crate::engine::des_engine::{Engine, OnDone, UvmWatcherHandle};
-use crate::fabric::gpu::GpuSim;
+use crate::engine::model::{ComputeModel, Fired};
+use crate::engine::traits::{Cx, Notify, OnRecv, OnWatch, TransferEngine, UvmWatcher};
 use crate::sim::time::{Duration, Instant};
-use crate::sim::Sim;
 
 use super::proto::{self, CancelAck, CancelReq, DispatchReq, Heartbeat};
 use super::workload::ServingWorkload;
@@ -17,7 +21,7 @@ use super::workload::ServingWorkload;
 /// Transfer timing stats collected for Table 3's per-layer columns.
 #[derive(Debug, Default, Clone)]
 pub struct TransferStats {
-    /// (submit, done) per layer-transfer, virtual ns.
+    /// (submit, done) per layer-transfer, model-clock ns.
     pub layer_transfers: Vec<(Instant, Instant)>,
     /// Per-layer compute kernel durations.
     pub layer_compute: Vec<Duration>,
@@ -29,15 +33,15 @@ struct ReqTask {
     req: DispatchReq,
     /// (chunk, layer) completions signalled so far via UVM.
     chunks: Vec<(u32, u32)>,
-    watcher: UvmWatcherHandle,
+    watcher: UvmWatcher,
     outstanding_writes: usize,
     tail_sent: bool,
 }
 
 struct PState {
-    engine: Engine,
+    engine: Rc<dyn TransferEngine>,
     gpu: u8,
-    gpu_sim: GpuSim,
+    compute: ComputeModel,
     workload: ServingWorkload,
     kv_src: (MrHandle, MrDesc),
     tail_src: (MrHandle, MrDesc),
@@ -60,10 +64,10 @@ pub struct Prefiller {
 impl Prefiller {
     /// Create and start listening for dispatches.
     pub fn new(
-        sim: &mut Sim,
-        engine: &Engine,
+        cx: &mut Cx,
+        engine: Rc<dyn TransferEngine>,
         gpu: u8,
-        gpu_sim: &GpuSim,
+        compute: &ComputeModel,
         workload: ServingWorkload,
         node: u16,
     ) -> Self {
@@ -79,7 +83,7 @@ impl Prefiller {
         let state = Rc::new(RefCell::new(PState {
             engine: engine.clone(),
             gpu,
-            gpu_sim: gpu_sim.clone(),
+            compute: compute.clone(),
             workload,
             kv_src,
             tail_src,
@@ -94,9 +98,10 @@ impl Prefiller {
         }));
         let p = Prefiller { state };
         let p2 = p.clone();
-        engine.submit_recvs(sim, gpu, 1 << 20, 32, move |sim, msg| {
-            p2.on_message(sim, msg);
-        });
+        let on_msg = OnRecv::Cont(cx.cont(move |cx: &mut Cx, fired: Fired| {
+            p2.on_message(cx, &fired.data);
+        }));
+        engine.submit_recvs(cx, gpu, 1 << 20, 32, on_msg);
         p
     }
 
@@ -116,16 +121,16 @@ impl Prefiller {
     }
 
     /// Begin heartbeating to `decoders` every `interval`.
-    pub fn start_heartbeats(&self, sim: &mut Sim, decoders: Vec<NetAddr>, interval: Duration) {
+    pub fn start_heartbeats(&self, cx: &mut Cx, decoders: Vec<NetAddr>, interval: Duration) {
         {
             let mut s = self.state.borrow_mut();
             s.hb_targets = decoders;
             s.hb_interval = interval;
         }
-        self.heartbeat_tick(sim);
+        self.heartbeat_tick(cx);
     }
 
-    fn heartbeat_tick(&self, sim: &mut Sim) {
+    fn heartbeat_tick(&self, cx: &mut Cx) {
         let (targets, interval, seq, engine, gpu, node, killed) = {
             let mut s = self.state.borrow_mut();
             s.hb_seq += 1;
@@ -148,24 +153,24 @@ impl Prefiller {
         }
         .encode();
         for t in &targets {
-            engine.submit_send(sim, gpu, t, &msg, OnDone::Noop);
+            engine.submit_send(cx, gpu, t, &msg, Notify::Noop);
         }
         let this = self.clone();
-        sim.after(interval, move |sim| this.heartbeat_tick(sim));
+        cx.after(interval, move |cx: &mut Cx| this.heartbeat_tick(cx));
     }
 
-    fn on_message(&self, sim: &mut Sim, msg: &[u8]) {
+    fn on_message(&self, cx: &mut Cx, msg: &[u8]) {
         if self.state.borrow().killed {
             return;
         }
         match proto::msg_tag(msg) {
             Ok(t) if t == crate::engine::wire::tag::KV_DISPATCH => {
                 let req = DispatchReq::decode(msg).expect("bad DispatchReq");
-                self.begin_prefill(sim, req);
+                self.begin_prefill(cx, req);
             }
             Ok(t) if t == crate::engine::wire::tag::KV_CANCEL => {
                 let c = CancelReq::decode(msg).expect("bad CancelReq");
-                self.on_cancel(sim, c.req_id);
+                self.on_cancel(cx, c.req_id);
             }
             Ok(t) => panic!("prefiller: unexpected message tag {t}"),
             Err(e) => panic!("prefiller: undecodable message: {e}"),
@@ -173,47 +178,56 @@ impl Prefiller {
     }
 
     /// Start chunked prefill for a request (Appendix A Fig 15).
-    fn begin_prefill(&self, sim: &mut Sim, req: DispatchReq) {
+    fn begin_prefill(&self, cx: &mut Cx, req: DispatchReq) {
         let req_id = req.req_id;
-        let chunks_layers: Vec<(u32, u32)>;
-        let watcher;
-        {
+        let chunks_layers: Vec<(u32, u32)> = {
             let s = self.state.borrow();
             let w = &s.workload;
             let seq = req.input_ids.len() as u32;
-            let chunks = w.chunks(seq);
-            chunks_layers = chunks
+            w.chunks(seq)
                 .iter()
                 .enumerate()
                 .flat_map(|(ci, _)| (0..w.layout.layers).map(move |l| (ci as u32, l)))
-                .collect();
-            let this = self.clone();
-            // UVM watcher: incremented after each layer's attention
-            // output projection (CUDA-graph compatible). The callback
-            // receives (old, new) and may observe coalesced updates.
-            watcher = s.engine.alloc_uvm_watcher(move |sim, old, new| {
-                for v in old..new {
-                    this.on_layer_done(sim, req_id, v);
-                }
-            });
-        }
+                .collect()
+        };
+        // UVM watcher: incremented after each layer's attention output
+        // projection (CUDA-graph compatible). The continuation receives
+        // (old, new) and may observe coalesced updates.
+        let this = self.clone();
+        let on_watch = OnWatch::Cont(cx.cont(move |cx: &mut Cx, f: Fired| {
+            for v in f.a..f.b {
+                this.on_layer_done(cx, req_id, v);
+            }
+        }));
+        let watcher = {
+            let s = self.state.borrow();
+            s.engine.alloc_uvm_watcher(on_watch)
+        };
         // Enqueue all layer kernels on the GPU stream now; they run
         // back-to-back (chunk-major), each bumping the watcher.
         {
-            let s = self.state.borrow();
-            let w = &s.workload;
-            let seq = req.input_ids.len() as u32;
-            let mut counter = 0u64;
-            for (start, len) in w.chunks(seq) {
-                for _l in 0..w.layout.layers {
-                    counter += 1;
-                    let dur = w.compute.layer_ns(len, start);
-                    s.stats.borrow_mut().layer_compute.push(dur);
-                    let wh = watcher.clone();
-                    let c = counter;
-                    s.gpu_sim
-                        .launch(sim, 0, dur, true, move |sim, _end| wh.device_write(sim, c));
+            let (compute, kernel_plan) = {
+                let s = self.state.borrow();
+                let w = &s.workload;
+                let seq = req.input_ids.len() as u32;
+                let mut plan = Vec::new();
+                for (start, len) in w.chunks(seq) {
+                    for _l in 0..w.layout.layers {
+                        let dur = w.compute.layer_ns(len, start);
+                        s.stats.borrow_mut().layer_compute.push(dur);
+                        plan.push(dur);
+                    }
                 }
+                (s.compute.clone(), plan)
+            };
+            let mut counter = 0u64;
+            for dur in kernel_plan {
+                counter += 1;
+                let wh = watcher.clone();
+                let c = counter;
+                compute.launch(cx, 0, dur, true, move |cx: &mut Cx, _end| {
+                    wh.device_write(cx, c)
+                });
             }
         }
         self.state.borrow_mut().active.insert(
@@ -229,8 +243,8 @@ impl Prefiller {
     }
 
     /// One (chunk, layer) finished on the GPU: transfer its pages.
-    fn on_layer_done(&self, sim: &mut Sim, req_id: u64, v: u64) {
-        let submit_t = sim.now();
+    fn on_layer_done(&self, cx: &mut Cx, req_id: u64, v: u64) {
+        let submit_t = cx.now();
         let (engine, plan) = {
             let mut s = self.state.borrow_mut();
             if s.killed || s.cancelled.contains(&req_id) {
@@ -284,8 +298,15 @@ impl Prefiller {
         stats.borrow_mut().writes += src_idx.len() as u64;
         let this = self.clone();
         let n_pages = src_idx.len();
+        let on_done = cx.cont(move |cx: &mut Cx, _f: Fired| {
+            stats
+                .borrow_mut()
+                .layer_transfers
+                .push((submit_t, cx.now()));
+            this.on_write_done(cx, req_id, n_pages);
+        });
         engine.submit_paged_writes(
-            sim,
+            cx,
             page_bytes,
             (
                 &kv_src_handle,
@@ -304,21 +325,15 @@ impl Prefiller {
                 },
             ),
             Some(imm),
-            OnDone::Callback(Box::new(move |sim| {
-                stats
-                    .borrow_mut()
-                    .layer_transfers
-                    .push((submit_t, sim.now()));
-                this.on_write_done(sim, req_id, n_pages);
-            })),
+            Notify::Cont(on_done),
         );
         if is_last {
-            self.send_tail(sim, req_id);
+            self.send_tail(cx, req_id);
         }
     }
 
     /// Tail context: final single write carrying the +1 immediate.
-    fn send_tail(&self, sim: &mut Sim, req_id: u64) {
+    fn send_tail(&self, cx: &mut Cx, req_id: u64) {
         let (engine, tail_src, tail_bytes, desc, off, imm) = {
             let mut s = self.state.borrow_mut();
             if s.cancelled.contains(&req_id) {
@@ -340,17 +355,18 @@ impl Prefiller {
             )
         };
         let this = self.clone();
+        let on_done = cx.cont(move |cx: &mut Cx, _f: Fired| this.on_write_done(cx, req_id, 1));
         engine.submit_single_write(
-            sim,
+            cx,
             (&tail_src, 0),
             tail_bytes,
             (&desc, off),
             Some(imm),
-            OnDone::Callback(Box::new(move |sim| this.on_write_done(sim, req_id, 1))),
+            Notify::Cont(on_done),
         );
     }
 
-    fn on_write_done(&self, sim: &mut Sim, req_id: u64, _wrs: usize) {
+    fn on_write_done(&self, cx: &mut Cx, req_id: u64, _wrs: usize) {
         let ack = {
             let mut s = self.state.borrow_mut();
             let Some(task) = s.active.get_mut(&req_id) else {
@@ -361,6 +377,9 @@ impl Prefiller {
             let cancelled = s.cancelled.contains(&req_id);
             if finished || (cancelled && s.active[&req_id].outstanding_writes == 0) {
                 let task = s.active.remove(&req_id).unwrap();
+                // On cancellation, still-enqueued kernels may bump the
+                // watcher after this free; both engines ignore writes
+                // to a freed watcher.
                 task.watcher.free();
                 if cancelled {
                     s.cancelled.remove(&req_id);
@@ -381,16 +400,16 @@ impl Prefiller {
                 (s.engine.clone(), s.gpu)
             };
             engine.submit_send(
-                sim,
+                cx,
                 gpu,
                 &decoder,
                 &CancelAck { req_id }.encode(),
-                OnDone::Noop,
+                Notify::Noop,
             );
         }
     }
 
-    fn on_cancel(&self, sim: &mut Sim, req_id: u64) {
+    fn on_cancel(&self, cx: &mut Cx, req_id: u64) {
         let immediate_ack = {
             let mut s = self.state.borrow_mut();
             match s.active.get(&req_id) {
@@ -415,7 +434,7 @@ impl Prefiller {
                 let s = self.state.borrow();
                 (s.engine.clone(), s.gpu)
             };
-            engine.submit_send(sim, gpu, &addr, &CancelAck { req_id }.encode(), OnDone::Noop);
+            engine.submit_send(cx, gpu, &addr, &CancelAck { req_id }.encode(), Notify::Noop);
         }
     }
 }

@@ -4,13 +4,14 @@
 //! Placement policy is least-outstanding-work with capacity guards —
 //! the disaggregated fleet scales elastically (no fixed membership:
 //! prefillers/decoders join and leave between requests, which is the
-//! point of P2P over collectives, §1).
+//! point of P2P over collectives, §1). Runtime-neutral: dispatch goes
+//! through the decoder's `Cx`-based entry point.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::engine::api::NetAddr;
-use crate::sim::Sim;
+use crate::engine::traits::Cx;
 
 use super::decoder::Decoder;
 
@@ -89,7 +90,7 @@ impl Scheduler {
     /// (request id, decoder index, prefiller address).
     pub fn submit(
         &self,
-        sim: &mut Sim,
+        cx: &mut Cx,
         input_ids: Vec<u32>,
         decode_tokens: u32,
     ) -> (u64, usize, NetAddr) {
@@ -121,7 +122,7 @@ impl Scheduler {
             )
         };
         let _ = pi;
-        let id = decoder.submit_request(sim, &prefiller, input_ids, decode_tokens);
+        let id = decoder.submit_request(cx, &prefiller, input_ids, decode_tokens);
         (id, di, prefiller)
     }
 }
@@ -144,67 +145,56 @@ pub fn mla_replica_matching(
 mod tests {
     use super::*;
     use crate::apps::kvcache::{Prefiller, ServingWorkload};
-    use crate::engine::api::EngineCosts;
-    use crate::engine::des_engine::Engine;
-    use crate::fabric::gpu::GpuSim;
-    use crate::fabric::nic::NicAddr;
+    use crate::engine::model::ComputeModel;
+    use crate::engine::traits::{Cluster, RuntimeKind};
     use crate::fabric::profile::{GpuProfile, NicProfile};
-    use crate::fabric::simnet::SimNet;
-    use crate::fabric::topology::DeviceId;
-    use crate::sim::Sim;
 
-    fn fleet(n_prefill: u16, n_decode: u16) -> (Sim, Scheduler, Vec<Decoder>) {
-        let net = SimNet::new(8);
+    fn fleet(n_prefill: u16, n_decode: u16) -> (Cluster, Scheduler, Vec<Decoder>) {
         let total = n_prefill + n_decode;
-        for node in 0..total {
-            net.add_nic(NicAddr { node, gpu: 0, nic: 0 }, NicProfile::connectx7());
-        }
-        let mut sim = Sim::new();
+        let mut cluster = Cluster::new_with(
+            RuntimeKind::Des,
+            total,
+            1,
+            1,
+            8,
+            NicProfile::connectx7(),
+            GpuProfile::h100(),
+        );
+        let engines = cluster.engines_rc();
         let sched = Scheduler::new();
         let w = ServingWorkload::tiny();
-        for node in 0..n_prefill {
-            let e = Engine::new(
-                &net,
-                node,
-                1,
-                1,
-                GpuProfile::h100(),
-                EngineCosts::default(),
-                node as u64,
-            );
-            let gpu = GpuSim::new(DeviceId { node, gpu: 0 }, GpuProfile::h100());
-            let _p = Prefiller::new(&mut sim, &e, 0, &gpu, w.clone(), node);
-            sched.add_prefiller(e.group_address(0));
-        }
         let mut decoders = Vec::new();
-        for i in 0..n_decode {
-            let node = n_prefill + i;
-            let e = Engine::new(
-                &net,
-                node,
-                1,
-                1,
-                GpuProfile::h100(),
-                EngineCosts::default(),
-                node as u64,
-            );
-            let d = Decoder::new(&mut sim, &e, 0, w.clone());
-            sched.add_decoder(d.clone());
-            decoders.push(d);
+        {
+            let (mut cx, _) = cluster.parts();
+            for node in 0..n_prefill {
+                let e = engines[node as usize].clone();
+                let compute = ComputeModel::new(GpuProfile::h100());
+                let _p = Prefiller::new(&mut cx, e.clone(), 0, &compute, w.clone(), node);
+                sched.add_prefiller(e.group_address(0));
+            }
+            for i in 0..n_decode {
+                let node = n_prefill + i;
+                let d = Decoder::new(&mut cx, engines[node as usize].clone(), 0, w.clone());
+                sched.add_decoder(d.clone());
+                decoders.push(d);
+            }
         }
-        (sim, sched, decoders)
+        (cluster, sched, decoders)
     }
 
     #[test]
     fn balances_across_fleet_and_completes() {
-        let (mut sim, sched, decoders) = fleet(2, 2);
+        let (mut cluster, sched, decoders) = fleet(2, 2);
         let mut prefiller_hits = std::collections::HashMap::new();
-        for i in 0..8 {
-            let input: Vec<u32> = (0..32 + i).collect();
-            let (_, _, p) = sched.submit(&mut sim, input, 1);
-            *prefiller_hits.entry(p.primary().node).or_insert(0u32) += 1;
+        {
+            let (mut cx, _) = cluster.parts();
+            for i in 0..8 {
+                let input: Vec<u32> = (0..32 + i).collect();
+                let (_, _, p) = sched.submit(&mut cx, input, 1);
+                *prefiller_hits.entry(p.primary().node).or_insert(0u32) += 1;
+            }
+            cx.settle();
         }
-        sim.run();
         let total: usize = decoders.iter().map(|d| d.reports().borrow().len()).sum();
         assert_eq!(total, 8, "all requests served");
         // Both prefillers used (least-load balancing).
@@ -215,14 +205,17 @@ mod tests {
 
     #[test]
     fn dead_prefiller_excluded_elastically() {
-        let (mut sim, sched, decoders) = fleet(2, 1);
-        let (_, _, first) = sched.submit(&mut sim, (0..16).collect(), 1);
-        sched.mark_prefiller_dead(&first);
-        for _ in 0..4 {
-            let (_, _, p) = sched.submit(&mut sim, (0..16).collect(), 1);
-            assert_ne!(p, first, "dead prefiller must not be selected");
+        let (mut cluster, sched, decoders) = fleet(2, 1);
+        {
+            let (mut cx, _) = cluster.parts();
+            let (_, _, first) = sched.submit(&mut cx, (0..16).collect(), 1);
+            sched.mark_prefiller_dead(&first);
+            for _ in 0..4 {
+                let (_, _, p) = sched.submit(&mut cx, (0..16).collect(), 1);
+                assert_ne!(p, first, "dead prefiller must not be selected");
+            }
+            cx.settle();
         }
-        sim.run();
         assert_eq!(decoders[0].reports().borrow().len(), 5);
     }
 
@@ -244,11 +237,12 @@ mod tests {
     #[test]
     #[should_panic(expected = "no live prefillers")]
     fn empty_fleet_rejects() {
-        let (mut sim, sched, _d) = fleet(1, 1);
+        let (mut cluster, sched, _d) = fleet(1, 1);
         sched.mark_prefiller_dead(&{
             let s = sched.s.borrow();
             s.prefillers[0].addr.clone()
         });
-        sched.submit(&mut sim, vec![1], 1);
+        let (mut cx, _) = cluster.parts();
+        sched.submit(&mut cx, vec![1], 1);
     }
 }

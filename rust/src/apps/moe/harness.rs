@@ -2,30 +2,33 @@
 //! the latency distributions the paper's Figures 9–12 and Tables 6–9
 //! report.
 //!
-//! Two entry points at different fidelities:
+//! Entry points:
 //!
-//! * [`run_decode_epoch`] / [`run_epoch_with`] — the timing-faithful
-//!   Fig-9..12 epochs. They need the DES fabric's GPU-kernel and
-//!   NVLink models and therefore run on the DES engine only.
-//! * [`run_generic_dispatch_round`] — the MoE *communication
+//! * [`run_epoch_on`] — the full dispatch/combine epochs over any
+//!   runtime: `&mut Cx` + one `Rc<dyn TransferEngine>` per node, with
+//!   the GPU-kernel and NVLink side scheduled on the runtime-neutral
+//!   [`crate::engine::model`] types. Timing-faithful on the DES
+//!   runtime; structurally identical (same routing plan, same kernel
+//!   durations) on the threaded runtime.
+//! * [`run_decode_epoch`] / [`run_epoch_with`] — convenience wrappers
+//!   reproducing the paper's testbeds on a DES [`Cluster`] (what the
+//!   benches and the numeric tests use; `run_epoch_with` can install a
+//!   Table-8/9 trace sink on node 0's DES engine).
+//! * [`run_generic_dispatch_round`] — the bare MoE *communication
 //!   protocol* (peer-group scatter of token payloads, count-based
 //!   completion, engine barrier for buffer reuse, §6.1–6.3) over
-//!   `&dyn TransferEngine`, so it runs bit-identical on both the DES
-//!   and threaded runtimes.
+//!   `&dyn TransferEngine`, as a protocol smoke test.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::engine::api::{EngineCosts, MrDesc, MrHandle, ScatterDst};
-use crate::engine::des_engine::Engine;
-use crate::engine::traits::{expect_flag, Cx, Notify, SharedFlag, TransferEngine};
-use crate::fabric::nic::NicAddr;
+use crate::engine::api::{MrDesc, MrHandle, ScatterDst};
+use crate::engine::model::{ComputeModel, NvlinkModel};
+use crate::engine::traits::{
+    expect_flag, Cluster, Cx, Notify, RuntimeKind, SharedFlag, TransferEngine,
+};
 use crate::fabric::profile::{GpuProfile, NicProfile};
-use crate::fabric::simnet::SimNet;
-use crate::fabric::gpu::{GpuSim, NvlinkFabric};
-use crate::fabric::topology::DeviceId;
 use crate::sim::stats::Histogram;
-use crate::sim::Sim;
 
 use super::config::MoeConfig;
 use super::rank::{IterSample, MoeRank, Strategy};
@@ -64,59 +67,24 @@ pub struct MoeLatencies {
     pub c_recv_kernel: Histogram,
 }
 
-/// Run `iters` decode iterations of `imp` on a cluster with `nic`
-/// NICs per GPU (×`nics_per_gpu`) and collect latency distributions.
-pub fn run_decode_epoch(
-    cfg: &MoeConfig,
-    imp: MoeImpl,
-    nic: NicProfile,
-    nics_per_gpu: u8,
-    iters: u64,
-) -> MoeLatencies {
-    run_epoch_with(cfg, imp.strategy(), nic, nics_per_gpu, iters, None)
-}
-
-/// Full-control variant: custom strategy + optional engine trace sink
-/// (Table 8/9).
-pub fn run_epoch_with(
+/// Run `iters` decode iterations of `strat` on whatever runtime backs
+/// `cx`, with one engine per node (rank r lives on node
+/// `cfg.node_of(r)`, GPU `r % cfg.gpus_per_node`); `gpu_profile`
+/// times the per-rank compute models (keep it consistent with the
+/// cluster's).
+pub fn run_epoch_on(
+    cx: &mut Cx,
+    engines: &[Rc<dyn TransferEngine>],
     cfg: &MoeConfig,
     strat: Strategy,
-    nic: NicProfile,
-    nics_per_gpu: u8,
+    gpu_profile: GpuProfile,
     iters: u64,
-    trace_sink: Option<Rc<RefCell<Vec<crate::engine::des_engine::SubmitTrace>>>>,
 ) -> MoeLatencies {
     let n = cfg.ranks as usize;
-    let nodes = cfg.ranks.div_ceil(cfg.gpus_per_node) as u16;
-    let net = SimNet::new(cfg.seed);
-    for node in 0..nodes {
-        for gpu in 0..cfg.gpus_per_node as u8 {
-            for x in 0..nics_per_gpu {
-                net.add_nic(NicAddr { node, gpu, nic: x }, nic.clone());
-            }
-        }
-    }
-    let mut engines = Vec::new();
-    let mut nvlinks = Vec::new();
-    for node in 0..nodes {
-        let e = Engine::new(
-            &net,
-            node,
-            cfg.gpus_per_node as u8,
-            nics_per_gpu,
-            GpuProfile::h100(),
-            EngineCosts::default(),
-            node as u64 ^ cfg.seed,
-        );
-        if node == 0 {
-            if let Some(sink) = &trace_sink {
-                e.set_trace_sink(sink.clone());
-            }
-        }
-        engines.push(e);
-        nvlinks.push(NvlinkFabric::new());
-    }
-    let mut sim = Sim::new();
+    let nodes = cfg.ranks.div_ceil(cfg.gpus_per_node) as usize;
+    assert_eq!(engines.len(), nodes, "one engine per node");
+
+    let nvlinks: Vec<NvlinkModel> = (0..nodes).map(|_| NvlinkModel::new()).collect();
 
     // Receive regions (contiguous buffer + private region + route
     // mailboxes), unbacked at production sizes.
@@ -124,7 +92,7 @@ pub fn run_epoch_with(
         .max(cfg.recv_buffer_tokens() * cfg.combine_token_bytes as u64)
         + (8 << 20)) as usize;
     let mut recv_descs = Vec::with_capacity(n);
-    let mut gpus: Vec<GpuSim> = Vec::with_capacity(n);
+    let mut computes: Vec<ComputeModel> = Vec::with_capacity(n);
     let mut send_bufs = Vec::with_capacity(n);
     for r in 0..n {
         let node = cfg.node_of(r as u32) as usize;
@@ -142,13 +110,7 @@ pub fn run_epoch_with(
             e.alloc_mr(gpu, region_len)
         };
         send_bufs.push(sb);
-        gpus.push(GpuSim::new(
-            DeviceId {
-                node: node as u16,
-                gpu,
-            },
-            GpuProfile::h100(),
-        ));
+        computes.push(ComputeModel::new(gpu_profile.clone()));
     }
     let recv_descs = Rc::new(recv_descs);
 
@@ -160,9 +122,9 @@ pub fn run_epoch_with(
                 cfg,
                 strat.clone(),
                 r,
-                &engines[node],
+                engines[node].clone(),
                 gpu,
-                &gpus[r],
+                &computes[r],
                 &nvlinks[node],
                 recv_descs.clone(),
                 send_bufs[r].clone(),
@@ -180,17 +142,16 @@ pub fn run_epoch_with(
         let samples: Rc<RefCell<Vec<IterSample>>> = Rc::default();
         for rank in &ranks {
             let sink = samples.clone();
-            rank.start_iteration(&mut sim, iter, plan.clone(), move |_sim, s| {
+            rank.start_iteration(cx, iter, plan.clone(), move |_cx: &mut Cx, s| {
                 sink.borrow_mut().push(s);
             });
         }
-        sim.run();
+        {
+            let what = format!("iteration {iter}: all ranks must finish (deadlock?)");
+            let samples = samples.clone();
+            cx.drive_until(&what, move || samples.borrow().len() == n);
+        }
         let samples = samples.borrow();
-        assert_eq!(
-            samples.len(),
-            n,
-            "iteration {iter}: all ranks must finish (deadlock?)"
-        );
         for s in samples.iter() {
             out.dispatch.record(s.dispatch_ns);
             out.combine.record(s.combine_ns);
@@ -203,12 +164,60 @@ pub fn run_epoch_with(
     out
 }
 
+/// Run `iters` decode iterations of `imp` on a DES cluster with `nic`
+/// NICs per GPU (×`nics_per_gpu`) and collect latency distributions.
+pub fn run_decode_epoch(
+    cfg: &MoeConfig,
+    imp: MoeImpl,
+    nic: NicProfile,
+    nics_per_gpu: u8,
+    iters: u64,
+) -> MoeLatencies {
+    run_epoch_with(cfg, imp.strategy(), nic, nics_per_gpu, iters, None)
+}
+
+/// Full-control variant: custom strategy + optional engine trace sink
+/// (Table 8/9), on a DES cluster built through [`Cluster`].
+pub fn run_epoch_with(
+    cfg: &MoeConfig,
+    strat: Strategy,
+    nic: NicProfile,
+    nics_per_gpu: u8,
+    iters: u64,
+    trace_sink: Option<Rc<RefCell<Vec<crate::engine::des_engine::SubmitTrace>>>>,
+) -> MoeLatencies {
+    let nodes = cfg.ranks.div_ceil(cfg.gpus_per_node) as u16;
+    let mut cluster = Cluster::new_with(
+        RuntimeKind::Des,
+        nodes,
+        cfg.gpus_per_node as u8,
+        nics_per_gpu,
+        cfg.seed,
+        nic,
+        GpuProfile::h100(),
+    );
+    if let Some(sink) = &trace_sink {
+        if let Some(e) = cluster.des_engine(0) {
+            e.set_trace_sink(sink.clone());
+        }
+    }
+    let engines = cluster.engines_rc();
+    let out = {
+        let (mut cx, _) = cluster.parts();
+        run_epoch_on(&mut cx, &engines, cfg, strat, GpuProfile::h100(), iters)
+    };
+    cluster.shutdown();
+    out
+}
+
 /// Runtime-agnostic MoE all-to-all round (§6.1–6.3 protocol): every
 /// rank scatters `tokens_per_peer` tokens of `token_bytes` to each
 /// peer through a registered peer group, receivers gate on one
 /// `expect_imm_count` per round, and a handle-based engine barrier
 /// confirms buffer reuse — scatter + barrier + imm counting end to
-/// end on whichever runtime backs `cx`.
+/// end on whichever runtime backs `cx`. Peer groups are request-scoped
+/// and freed on exit (`remove_peer_group`), so repeated rounds on a
+/// long-lived engine don't leak registry entries.
 pub fn run_generic_dispatch_round(
     cx: &mut Cx,
     engines: &[&dyn TransferEngine],
@@ -290,6 +299,12 @@ pub fn run_generic_dispatch_round(
         e.submit_barrier(cx, 0, Some(groups[me]), &descs, IMM_BARRIER, Notify::Noop);
     }
     cx.wait_all(&barrier_flags);
+
+    // Round over: free the request-scoped groups (registry hygiene on
+    // long-lived engines).
+    for (me, e) in engines.iter().enumerate() {
+        assert!(e.remove_peer_group(groups[me]), "group registered above");
+    }
 }
 
 #[cfg(test)]

@@ -22,5 +22,7 @@ pub mod rank;
 pub mod routing;
 
 pub use config::MoeConfig;
-pub use harness::{run_decode_epoch, run_generic_dispatch_round, MoeImpl, MoeLatencies};
+pub use harness::{
+    run_decode_epoch, run_epoch_on, run_generic_dispatch_round, MoeImpl, MoeLatencies,
+};
 pub use routing::RoutingPlan;

@@ -13,15 +13,19 @@
 //!
 //! All three move the same token matrix over the same fabric; they
 //! differ in write granularity, CPU involvement and synchronization.
+//!
+//! Runtime-neutral since the compute-model migration: the rank holds
+//! `Rc<dyn TransferEngine>` and schedules kernels/NVLink pushes on the
+//! [`ComputeModel`]/[`NvlinkModel`], so the same state machine runs on
+//! the DES virtual clock and on the threaded runtime's reactor.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::engine::api::{MrDesc, MrHandle, ScatterDst};
-use crate::engine::des_engine::{Engine, OnDone};
-use crate::fabric::gpu::{GpuSim, NvlinkFabric};
+use crate::engine::model::{ComputeModel, Fired, NvlinkModel};
+use crate::engine::traits::{Cx, Notify, TransferEngine};
 use crate::sim::time::{Duration, Instant, US};
-use crate::sim::Sim;
 
 use super::config::MoeConfig;
 use super::routing::RoutingPlan;
@@ -132,10 +136,10 @@ struct RankState {
     cfg: MoeConfig,
     strat: Strategy,
     rank: usize,
-    engine: Engine,
+    engine: Rc<dyn TransferEngine>,
     gpu: u8,
-    gpu_sim: GpuSim,
-    nvlink: NvlinkFabric,
+    compute: ComputeModel,
+    nvlink: NvlinkModel,
     km: KernelModel,
     /// Send staging + contiguous receive buffers (+ private region).
     send_buf: MrHandle,
@@ -159,7 +163,7 @@ struct RankState {
     barrier_done: bool,
     gemm_done_at: Instant,
     sample: IterSample,
-    on_iter_done: Option<Box<dyn FnOnce(&mut Sim, IterSample)>>,
+    on_iter_done: Option<Box<dyn FnOnce(&mut Cx, IterSample)>>,
     /// All ranks in the world (for NVLink delivery); set by the
     /// harness after construction.
     peers: Rc<RefCell<Vec<MoeRank>>>,
@@ -172,14 +176,15 @@ pub struct MoeRank {
 }
 
 impl MoeRank {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: &MoeConfig,
         strat: Strategy,
         rank: usize,
-        engine: &Engine,
+        engine: Rc<dyn TransferEngine>,
         gpu: u8,
-        gpu_sim: &GpuSim,
-        nvlink: &NvlinkFabric,
+        compute: &ComputeModel,
+        nvlink: &NvlinkModel,
         recv_desc_of: Rc<Vec<MrDesc>>,
         send_buf: MrHandle,
     ) -> Self {
@@ -188,9 +193,9 @@ impl MoeRank {
                 cfg: cfg.clone(),
                 strat,
                 rank,
-                engine: engine.clone(),
+                engine,
                 gpu,
-                gpu_sim: gpu_sim.clone(),
+                compute: compute.clone(),
                 nvlink: nvlink.clone(),
                 km: KernelModel::h100(),
                 send_buf,
@@ -228,16 +233,16 @@ impl MoeRank {
     /// rank's combine receive kernel finishes.
     pub fn start_iteration(
         &self,
-        sim: &mut Sim,
+        cx: &mut Cx,
         iter: u64,
         plan: Rc<RoutingPlan>,
-        on_done: impl FnOnce(&mut Sim, IterSample) + 'static,
+        on_done: impl FnOnce(&mut Cx, IterSample) + 'static,
     ) {
-        let (gpu_sim, count_dur) = {
+        let (compute, count_dur) = {
             let mut s = self.s.borrow_mut();
             s.iter = iter;
             s.plan = plan;
-            s.t0 = sim.now();
+            s.t0 = cx.now();
             s.rdma_tokens_done = false;
             s.pack_done = false;
             s.recv_started = false;
@@ -270,23 +275,23 @@ impl MoeRank {
             // Counting kernel: histogram of T tokens over local-expert
             // bins in shared memory, then UVM transfer.
             let count_dur = s.km.fixed_ns + (s.cfg.tokens as u64 * 16) / 100;
-            (s.gpu_sim.clone(), count_dur)
+            (s.compute.clone(), count_dur)
         };
         // Register receiver-side expectations for this iteration.
-        self.register_expectations(sim);
+        self.register_expectations(cx);
 
         let this = self.clone();
-        gpu_sim.launch(sim, 0, count_dur, true, move |sim, _| {
-            this.on_counts_ready(sim);
+        compute.launch(cx, 0, count_dur, true, move |cx: &mut Cx, _| {
+            this.on_counts_ready(cx);
         });
     }
 
     /// Receiver-side: expectations derivable before any data arrives
     /// (counts come from the routing plan; in the real system the
-    /// route exchange provides them — the DES registers them up front
-    /// and the engine's ImmCounter tolerates early arrivals either
-    /// way).
-    fn register_expectations(&self, sim: &mut Sim) {
+    /// route exchange provides them — the harness registers them up
+    /// front and the engine's ImmCounter tolerates early arrivals
+    /// either way).
+    fn register_expectations(&self, cx: &mut Cx) {
         let (engine, gpu, iter, route_exchange, n_routes, token_writes, combine_writes, barrier_n) = {
             let s = self.s.borrow();
             let n = s.plan.ranks();
@@ -350,34 +355,34 @@ impl MoeRank {
         // Routes (ours only).
         if route_exchange {
             let this = self.clone();
-            engine.expect_imm_count(sim, gpu, imm_for(iter, IMM_ROUTE), n_routes, move |sim| {
-                this.on_routes_complete(sim);
-            });
+            let on = Notify::Cont(cx.cont(move |cx: &mut Cx, _f: Fired| {
+                this.on_routes_complete(cx);
+            }));
+            engine.expect_imm_count(cx, gpu, imm_for(iter, IMM_ROUTE), n_routes, on);
         }
         // Dispatch token payloads.
         if token_writes > 0 {
             let this = self.clone();
-            engine.expect_imm_count(sim, gpu, imm_for(iter, IMM_TOKEN), token_writes, move |sim| {
-                this.on_rdma_tokens_done(sim);
-            });
+            let on = Notify::Cont(cx.cont(move |cx: &mut Cx, _f: Fired| {
+                this.on_rdma_tokens_done(cx);
+            }));
+            engine.expect_imm_count(cx, gpu, imm_for(iter, IMM_TOKEN), token_writes, on);
         } else {
             self.s.borrow_mut().rdma_tokens_done = true;
         }
         // Barrier.
         let this = self.clone();
-        engine.expect_imm_count(sim, gpu, imm_for(iter, IMM_BARRIER), barrier_n, move |sim| {
-            this.on_barrier_done(sim);
-        });
+        let on = Notify::Cont(cx.cont(move |cx: &mut Cx, _f: Fired| {
+            this.on_barrier_done(cx);
+        }));
+        engine.expect_imm_count(cx, gpu, imm_for(iter, IMM_BARRIER), barrier_n, on);
         // Combine payloads.
         if combine_writes > 0 {
             let this = self.clone();
-            engine.expect_imm_count(
-                sim,
-                gpu,
-                imm_for(iter, IMM_COMBINE),
-                combine_writes,
-                move |sim| this.on_combine_rdma_done(sim),
-            );
+            let on = Notify::Cont(cx.cont(move |cx: &mut Cx, _f: Fired| {
+                this.on_combine_rdma_done(cx);
+            }));
+            engine.expect_imm_count(cx, gpu, imm_for(iter, IMM_COMBINE), combine_writes, on);
         } else {
             self.s.borrow_mut().c_rdma_done = true;
         }
@@ -386,22 +391,22 @@ impl MoeRank {
     /// Counting kernel finished: the proxy (or the GPU itself when
     /// GPU-initiated) launches route + speculative-token transfers;
     /// the pack kernel runs next on the stream.
-    fn on_counts_ready(&self, sim: &mut Sim) {
+    fn on_counts_ready(&self, cx: &mut Cx) {
         let handoff = {
             let s = self.s.borrow();
             if s.strat.gpu_initiated {
                 0
             } else {
                 // UVM watcher visibility + GDRCopy poll + proxy wake.
-                s.gpu_sim.profile().pcie_ns + 1_500
+                s.compute.profile().pcie_ns + 1_500
             }
         };
         let this = self.clone();
-        sim.after(handoff, move |sim| this.proxy_first_round(sim));
+        cx.after(handoff, move |cx: &mut Cx| this.proxy_first_round(cx));
 
         // Pack kernel (signal host first, then NVLink pushes after a
         // grid barrier — §6.2 write-ordering strategy).
-        let (gpu_sim, pack_dur) = {
+        let (compute, pack_dur) = {
             let mut s = self.s.borrow_mut();
             let total_send_tokens: u64 = (0..s.plan.ranks())
                 .filter(|&d| d != s.rank)
@@ -410,17 +415,17 @@ impl MoeRank {
             let bytes = total_send_tokens * s.cfg.dispatch_token_bytes as u64 * 2;
             let d = s.km.t(bytes);
             s.sample.d_send_kernel_ns = d;
-            (s.gpu_sim.clone(), d)
+            (s.compute.clone(), d)
         };
         let this = self.clone();
-        gpu_sim.launch(sim, 0, pack_dur, true, move |sim, _| {
-            this.on_pack_done(sim);
+        compute.launch(cx, 0, pack_dur, true, move |cx: &mut Cx, _| {
+            this.on_pack_done(cx);
         });
     }
 
     /// First proxy round: scatter routes to every peer + private
     /// tokens to inter-node peers.
-    fn proxy_first_round(&self, sim: &mut Sim) {
+    fn proxy_first_round(&self, cx: &mut Cx) {
         let (engine, send_buf, route_dsts, private_dsts, iter, extra_cpu) = {
             let s = self.s.borrow();
             let me = s.rank;
@@ -467,38 +472,35 @@ impl MoeRank {
         };
         // Generic-proxy implementations pay extra CPU per WR.
         let this = self.clone();
-        sim.after(extra_cpu, move |sim| {
-            let s = this.s.borrow();
-            let engine = engine.clone();
-            drop(s);
+        cx.after(extra_cpu, move |cx: &mut Cx| {
             engine.submit_scatter(
-                sim,
+                cx,
                 None,
                 &send_buf,
                 &route_dsts,
                 Some(imm_for(iter, IMM_ROUTE)),
-                OnDone::Noop,
+                Notify::Noop,
             );
             if !private_dsts.is_empty() {
                 engine.submit_scatter(
-                    sim,
+                    cx,
                     None,
                     &send_buf,
                     &private_dsts,
                     Some(imm_for(iter, IMM_TOKEN)),
-                    OnDone::Noop,
+                    Notify::Noop,
                 );
             }
             // Non-route-exchange strategies send ALL tokens now,
             // per-token (DeepEP straight from the GPU; pplx through
             // its proxy).
-            this.maybe_send_all_tokens_per_token(sim);
+            this.maybe_send_all_tokens_per_token(cx);
         });
     }
 
     /// DeepEP/pplx path: every token copy is its own WRITEIMM, plus an
     /// RC-ordered count marker per destination.
-    fn maybe_send_all_tokens_per_token(&self, sim: &mut Sim) {
+    fn maybe_send_all_tokens_per_token(&self, cx: &mut Cx) {
         let (engine, send_buf, writes, iter, per_wr_cpu) = {
             let s = self.s.borrow();
             if !s.strat.per_token_writes {
@@ -538,24 +540,21 @@ impl MoeRank {
             return;
         }
         let cpu = per_wr_cpu * writes.len() as u64;
-        let this = self.clone();
-        sim.after(cpu, move |sim| {
-            let engine = engine.clone();
+        cx.after(cpu, move |cx: &mut Cx| {
             engine.submit_scatter(
-                sim,
+                cx,
                 None,
                 &send_buf,
                 &writes,
                 Some(imm_for(iter, IMM_TOKEN)),
-                OnDone::Noop,
+                Notify::Noop,
             );
-            let _ = &this;
         });
     }
 
     /// All routes arrived (ours): process them and scatter the
     /// remaining (non-private) tokens.
-    fn on_routes_complete(&self, sim: &mut Sim) {
+    fn on_routes_complete(&self, cx: &mut Cx) {
         let (engine, send_buf, rest_dsts, iter, proc) = {
             let s = self.s.borrow();
             let me = s.rank;
@@ -584,32 +583,33 @@ impl MoeRank {
         }
         // Host-side route processing (tens of µs, off the critical
         // path when private buffers hide it — Fig 11).
-        sim.after(proc, move |sim| {
+        cx.after(proc, move |cx: &mut Cx| {
             engine.submit_scatter(
-                sim,
+                cx,
                 None,
                 &send_buf,
                 &rest_dsts,
                 Some(imm_for(iter, IMM_TOKEN)),
-                OnDone::Noop,
+                Notify::Noop,
             );
         });
     }
 
     /// Pack kernel done: push intra-node tokens over NVLink.
-    fn on_pack_done(&self, sim: &mut Sim) {
+    fn on_pack_done(&self, cx: &mut Cx) {
         let pushes = {
             let mut s = self.s.borrow_mut();
             s.pack_done = true;
             let me = s.rank;
-            let prof = s.gpu_sim.profile();
+            let prof = s.compute.profile();
+            let nvlink = s.nvlink.clone();
             let mut pushes = Vec::new();
             for d in s.plan.intra_peers_with_tokens(&s.cfg, me) {
                 let bytes =
                     s.plan.count(me, d) as u64 * s.cfg.dispatch_token_bytes as u64;
                 let sync = s.strat.nvlink_per_token_ns * s.plan.count(me, d) as u64;
-                let arrive = s.nvlink.push(
-                    sim,
+                let arrive = nvlink.push(
+                    cx,
                     &prof,
                     (me as u32 % s.cfg.gpus_per_node) as u8,
                     (d as u32 % s.cfg.gpus_per_node) as u8,
@@ -622,14 +622,14 @@ impl MoeRank {
         let peers = self.s.borrow().peers.clone();
         for (d, arrive) in &pushes {
             let peer = peers.borrow()[*d].clone();
-            sim.at(*arrive, move |sim| peer.on_nvlink_arrival(sim, false));
+            cx.at(*arrive, move |cx: &mut Cx| peer.on_nvlink_arrival(cx, false));
         }
         // Ranks with no intra outputs still complete their local
         // "self" tokens at pack end.
-        self.maybe_start_dispatch_recv(sim);
+        self.maybe_start_dispatch_recv(cx);
     }
 
-    fn on_nvlink_arrival(&self, sim: &mut Sim, combine: bool) {
+    fn on_nvlink_arrival(&self, cx: &mut Cx, combine: bool) {
         {
             let mut s = self.s.borrow_mut();
             if combine {
@@ -639,21 +639,21 @@ impl MoeRank {
             }
         }
         if combine {
-            self.maybe_start_combine_recv(sim);
+            self.maybe_start_combine_recv(cx);
         } else {
-            self.maybe_start_dispatch_recv(sim);
+            self.maybe_start_dispatch_recv(cx);
         }
     }
 
-    fn on_rdma_tokens_done(&self, sim: &mut Sim) {
+    fn on_rdma_tokens_done(&self, cx: &mut Cx) {
         self.s.borrow_mut().rdma_tokens_done = true;
-        self.maybe_start_dispatch_recv(sim);
+        self.maybe_start_dispatch_recv(cx);
     }
 
     /// Gate: RDMA tokens + NVLink tokens + own pack kernel → launch
     /// the receive (shuffle) kernel.
-    fn maybe_start_dispatch_recv(&self, sim: &mut Sim) {
-        let (gpu_sim, dur, gdr) = {
+    fn maybe_start_dispatch_recv(&self, cx: &mut Cx) {
+        let (compute, dur, gdr) = {
             let mut s = self.s.borrow_mut();
             if s.recv_started
                 || !s.rdma_tokens_done
@@ -669,59 +669,58 @@ impl MoeRank {
             s.sample.d_recv_kernel_ns = d;
             // GDRCopy-visible flag latency before the kernel observes
             // readiness.
-            (s.gpu_sim.clone(), d, s.gpu_sim.profile().pcie_ns / 2)
+            (s.compute.clone(), d, s.compute.profile().pcie_ns / 2)
         };
         let this = self.clone();
-        sim.after(gdr, move |sim| {
-            let gpu_sim = gpu_sim.clone();
+        cx.after(gdr, move |cx: &mut Cx| {
             let t2 = this.clone();
-            gpu_sim.launch(sim, 0, dur, true, move |sim, _| {
-                t2.on_dispatch_recv_done(sim);
+            compute.launch(cx, 0, dur, true, move |cx: &mut Cx, _| {
+                t2.on_dispatch_recv_done(cx);
             });
         });
     }
 
-    fn on_dispatch_recv_done(&self, sim: &mut Sim) {
+    fn on_dispatch_recv_done(&self, cx: &mut Cx) {
         let (engine, gpu, barrier_dsts, iter, gap) = {
             let mut s = self.s.borrow_mut();
-            s.sample.dispatch_ns = sim.now() - s.t0;
+            s.sample.dispatch_ns = cx.now() - s.t0;
             let me = s.rank;
             let dsts: Vec<MrDesc> = (0..s.plan.ranks())
                 .filter(|&d| d != me)
                 .map(|d| s.recv_desc_of[d].clone())
                 .collect();
-            s.gemm_done_at = sim.now() + s.cfg.gemm_gap_ns;
+            s.gemm_done_at = cx.now() + s.cfg.gemm_gap_ns;
             (s.engine.clone(), s.gpu, dsts, s.iter, s.cfg.gemm_gap_ns)
         };
         // Barrier: all incoming writes accounted for; proxies sync so
         // buffers can be reused by combine (§6.2 end).
         engine.submit_barrier(
-            sim,
+            cx,
             gpu,
             None,
             &barrier_dsts,
             imm_for(iter, IMM_BARRIER),
-            OnDone::Noop,
+            Notify::Noop,
         );
         // Grouped GEMM + shared experts run in the gap.
         let this = self.clone();
-        sim.after(gap, move |sim| this.maybe_start_combine_send(sim));
+        cx.after(gap, move |cx: &mut Cx| this.maybe_start_combine_send(cx));
     }
 
-    fn on_barrier_done(&self, sim: &mut Sim) {
+    fn on_barrier_done(&self, cx: &mut Cx) {
         self.s.borrow_mut().barrier_done = true;
-        self.maybe_start_combine_send(sim);
+        self.maybe_start_combine_send(cx);
     }
 
     /// Combine send starts when the GEMM gap elapsed AND the barrier
     /// confirmed buffer reuse is safe.
-    fn maybe_start_combine_send(&self, sim: &mut Sim) {
-        let (gpu_sim, dur) = {
+    fn maybe_start_combine_send(&self, cx: &mut Cx) {
+        let (compute, dur) = {
             let mut s = self.s.borrow_mut();
-            if s.combine_t0 != 0 || !s.barrier_done || sim.now() < s.gemm_done_at {
+            if s.combine_t0 != 0 || !s.barrier_done || cx.now() < s.gemm_done_at {
                 return;
             }
-            s.combine_t0 = sim.now();
+            s.combine_t0 = cx.now();
             let me = s.rank;
             let send_tokens: u64 = (0..s.plan.ranks())
                 .filter(|&d| d != me)
@@ -730,17 +729,17 @@ impl MoeRank {
             let bytes = send_tokens * s.cfg.combine_token_bytes as u64 * 2;
             let d = s.km.t(bytes);
             s.sample.c_send_kernel_ns = d;
-            (s.gpu_sim.clone(), d)
+            (s.compute.clone(), d)
         };
         let this = self.clone();
-        gpu_sim.launch(sim, 0, dur, true, move |sim, _| {
-            this.on_combine_pack_done(sim);
+        compute.launch(cx, 0, dur, true, move |cx: &mut Cx, _| {
+            this.on_combine_pack_done(cx);
         });
     }
 
     /// Combine pack done: proxy sends one scatter (bulk) or per-token
     /// writes; NVLink pushes intra-node.
-    fn on_combine_pack_done(&self, sim: &mut Sim) {
+    fn on_combine_pack_done(&self, cx: &mut Cx) {
         let (engine, send_buf, dsts, iter, handoff, nv_pushes) = {
             let mut s = self.s.borrow_mut();
             s.c_pack_done = true;
@@ -782,10 +781,11 @@ impl MoeRank {
             let handoff = if s.strat.gpu_initiated {
                 0
             } else {
-                s.gpu_sim.profile().pcie_ns + 1_500 + s.strat.proxy_per_wr_ns * dsts.len() as u64
+                s.compute.profile().pcie_ns + 1_500 + s.strat.proxy_per_wr_ns * dsts.len() as u64
             };
             // NVLink pushes.
-            let prof = s.gpu_sim.profile();
+            let prof = s.compute.profile();
+            let nvlink = s.nvlink.clone();
             let mut nv = Vec::new();
             for d in 0..s.plan.ranks() {
                 if d == me || !s.cfg.same_node(me as u32, d as u32) {
@@ -798,8 +798,8 @@ impl MoeRank {
                 }
                 let bytes = c as u64 * s.cfg.combine_token_bytes as u64;
                 let sync = s.strat.nvlink_per_token_ns * c as u64;
-                let arrive = s.nvlink.push(
-                    sim,
+                let arrive = nvlink.push(
+                    cx,
                     &prof,
                     (me as u32 % s.cfg.gpus_per_node) as u8,
                     (d as u32 % s.cfg.gpus_per_node) as u8,
@@ -819,30 +819,30 @@ impl MoeRank {
         let peers = self.s.borrow().peers.clone();
         for (d, arrive) in nv_pushes {
             let peer = peers.borrow()[d].clone();
-            sim.at(arrive, move |sim| peer.on_nvlink_arrival(sim, true));
+            cx.at(arrive, move |cx: &mut Cx| peer.on_nvlink_arrival(cx, true));
         }
         if !dsts.is_empty() {
-            sim.after(handoff, move |sim| {
+            cx.after(handoff, move |cx: &mut Cx| {
                 engine.submit_scatter(
-                    sim,
+                    cx,
                     None,
                     &send_buf,
                     &dsts,
                     Some(imm_for(iter, IMM_COMBINE)),
-                    OnDone::Noop,
+                    Notify::Noop,
                 );
             });
         }
-        self.maybe_start_combine_recv(sim);
+        self.maybe_start_combine_recv(cx);
     }
 
-    fn on_combine_rdma_done(&self, sim: &mut Sim) {
+    fn on_combine_rdma_done(&self, cx: &mut Cx) {
         self.s.borrow_mut().c_rdma_done = true;
-        self.maybe_start_combine_recv(sim);
+        self.maybe_start_combine_recv(cx);
     }
 
-    fn maybe_start_combine_recv(&self, sim: &mut Sim) {
-        let (gpu_sim, dur) = {
+    fn maybe_start_combine_recv(&self, cx: &mut Cx) {
+        let (compute, dur) = {
             let mut s = self.s.borrow_mut();
             if s.c_recv_started
                 || !s.c_rdma_done
@@ -857,18 +857,18 @@ impl MoeRank {
                 s.cfg.tokens as u64 * s.cfg.top_k as u64 * s.cfg.combine_token_bytes as u64;
             let d = s.km.t(bytes) + s.km.fixed_ns;
             s.sample.c_recv_kernel_ns = d;
-            (s.gpu_sim.clone(), d)
+            (s.compute.clone(), d)
         };
         let this = self.clone();
-        gpu_sim.launch(sim, 0, dur, true, move |sim, _| {
+        compute.launch(cx, 0, dur, true, move |cx: &mut Cx, _| {
             let (sample, cb) = {
                 let mut s = this.s.borrow_mut();
-                s.sample.combine_ns = sim.now() - s.combine_t0;
+                s.sample.combine_ns = cx.now() - s.combine_t0;
                 s.combine_t0 = 0;
                 (s.sample, s.on_iter_done.take())
             };
             if let Some(cb) = cb {
-                cb(sim, sample);
+                cb(cx, sample);
             }
         });
     }

@@ -11,14 +11,10 @@ use std::cell::Cell;
 use std::rc::Rc;
 
 use crate::collectives::CollectiveWorld;
-use crate::engine::api::EngineCosts;
 use crate::engine::des_engine::Engine;
-use crate::engine::traits::{expect_flag, Cx, Notify, TransferEngine};
-use crate::fabric::nic::NicAddr;
+use crate::engine::traits::{expect_flag, Cluster, Cx, Notify, RuntimeKind, TransferEngine};
 use crate::fabric::profile::{GpuProfile, NicProfile};
-use crate::fabric::simnet::SimNet;
 use crate::sim::time::MS;
-use crate::sim::Sim;
 
 use super::spec::RlModelSpec;
 
@@ -38,25 +34,23 @@ pub fn run_rank0_broadcast(spec: &RlModelSpec, nic: NicProfile, world_scale: u32
     let t_ranks = (spec.t_ranks / world_scale).max(2) as usize;
     let r_groups = (spec.r_ranks / world_scale).max(2) as usize;
 
-    let net = SimNet::new(0xBA5E);
+    // The collectives model needs the DES fabric's timing; build the
+    // cluster through the shared harness and borrow its simulator.
     let n_nodes = (t_ranks + r_groups) as u16;
-    let mut ranks = Vec::new();
-    for node in 0..n_nodes {
-        net.add_nic(NicAddr { node, gpu: 0, nic: 0 }, nic.clone());
-        ranks.push((
-            Engine::new(
-                &net,
-                node,
-                1,
-                1,
-                GpuProfile::h200(),
-                EngineCosts::default(),
-                node as u64,
-            ),
-            0u8,
-        ));
-    }
-    let mut sim = Sim::new();
+    let mut cluster = Cluster::new_with(
+        RuntimeKind::Des,
+        n_nodes,
+        1,
+        1,
+        0xBA5E,
+        nic,
+        GpuProfile::h200(),
+    );
+    let ranks: Vec<(Engine, u8)> = (0..n_nodes as usize)
+        .map(|n| (cluster.des_engine(n).expect("DES cluster"), 0u8))
+        .collect();
+    let (mut cx, _) = cluster.parts();
+    let sim = cx.sim();
 
     // Training world: gather bf16 shards to rank0.
     let total_bf16 = spec.total_params * 2;
@@ -66,7 +60,7 @@ pub fn run_rank0_broadcast(spec: &RlModelSpec, nic: NicProfile, world_scale: u32
 
     let gather_done = Rc::new(Cell::new(0u64));
     let gd = gather_done.clone();
-    t_world.gather(&mut sim, 0, shard, move |_s, t| gd.set(t));
+    t_world.gather(sim, 0, shard, move |_s, t| gd.set(t));
     sim.run();
     let gather_ns = gather_done.get();
 
@@ -78,7 +72,7 @@ pub fn run_rank0_broadcast(spec: &RlModelSpec, nic: NicProfile, world_scale: u32
     let bcast_done = Rc::new(Cell::new(0u64));
     let bd = bcast_done.clone();
     let total_fp8 = spec.total_params;
-    b_world.broadcast_ring(&mut sim, 0, total_fp8, 8 << 20, move |_s, t| bd.set(t));
+    b_world.broadcast_ring(sim, 0, total_fp8, 8 << 20, move |_s, t| bd.set(t));
     sim.run();
     let bcast_ns = bcast_done.get() - gather_ns;
 

@@ -13,5 +13,7 @@ pub mod pipeline;
 pub mod spec;
 
 pub use baseline::{run_generic_rank0_fanout, run_rank0_broadcast};
-pub use pipeline::{run_generic_weight_sync, run_p2p_transfer, RlReport, StageTotals};
+pub use pipeline::{
+    run_generic_weight_sync, run_p2p_transfer, run_p2p_transfer_on, RlReport, StageTotals,
+};
 pub use spec::{compute_routing, ParamMeta, RlModelSpec, TransferTask};

@@ -10,19 +10,24 @@
 //! Stage costs are calibrated against paper Table 5 (per-call means:
 //! H2D 378 µs, full_tensor 532 µs, fuse 37 µs, quantize 137 µs, RDMA
 //! submit 23 µs) via byte-roofline + fixed-overhead terms.
+//!
+//! Runtime-neutral since the compute-model migration: the pipeline
+//! holds `Rc<dyn TransferEngine>` per rank and charges its stage
+//! costs on [`SerialResource`]s / the [`BarrierModel`], so the same
+//! state machine runs on the DES virtual clock and on the threaded
+//! runtime's reactor.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use crate::engine::api::{EngineCosts, MrDesc, MrHandle};
-use crate::engine::des_engine::{Engine, OnDone};
-use crate::engine::traits::{expect_flag, new_flag, Cx, Notify, SharedFlag, TransferEngine};
-use crate::fabric::nic::NicAddr;
+use crate::engine::api::{MrDesc, MrHandle};
+use crate::engine::model::{BarrierModel, Fired, SerialResource};
+use crate::engine::traits::{
+    expect_flag, new_flag, Cluster, Cx, Notify, RuntimeKind, SharedFlag, TransferEngine,
+};
 use crate::fabric::profile::{GpuProfile, NicProfile};
-use crate::fabric::simnet::SimNet;
 use crate::sim::time::{Duration, Instant, MS};
-use crate::sim::Sim;
 
 use super::spec::{compute_routing, RlModelSpec, TransferTask};
 
@@ -95,34 +100,18 @@ pub struct RlReport {
     pub agg_gbps: f64,
 }
 
-struct GroupBarrier {
-    expected: usize,
-    arrived: Vec<(u32, Instant)>,
-    waiters: Vec<(u32, Box<dyn FnOnce(&mut Sim, Instant)>)>,
-}
-
-impl GroupBarrier {
-    fn new(expected: usize) -> Self {
-        GroupBarrier {
-            expected,
-            arrived: Vec::new(),
-            waiters: Vec::new(),
-        }
-    }
-}
-
 struct RankState {
     rank: u32,
-    engine: Engine,
-    gpu: u8,
+    engine: Rc<dyn TransferEngine>,
     /// Tasks grouped per mesh group; entry = (param tasks to all
     /// replicas).
     groups: Vec<Vec<Vec<TransferTask>>>,
     group: usize,
     next: usize,
-    h2d_free: Instant,
-    prep_free: Instant,
-    submit_free: Instant,
+    /// Serial engines: H2D copy engine, prep stream, submit thread.
+    h2d: SerialResource,
+    prep: SerialResource,
+    submit: SerialResource,
     inflight: u64,
     /// Write completions still expected for the current mesh group
     /// (initialized to the group's total replica-write count so early
@@ -132,7 +121,7 @@ struct RankState {
     costs: RlCosts,
     src: MrHandle,
     dst_regions: Rc<Vec<MrDesc>>,
-    barriers: Rc<Vec<RefCell<GroupBarrier>>>,
+    barriers: Rc<Vec<BarrierModel>>,
     started_at: Instant,
     done: Rc<RefCell<HashMap<u32, Instant>>>,
 }
@@ -144,7 +133,7 @@ struct RankSim {
 }
 
 impl RankSim {
-    fn pump(&self, sim: &mut Sim) {
+    fn pump(&self, cx: &mut Cx) {
         loop {
             let plan = {
                 let mut s = self.s.borrow_mut();
@@ -167,22 +156,20 @@ impl RankSim {
                 // Stage 1: H2D memcpy (serial copy engine).
                 let h2d_cost =
                     (tasks[0].param.bf16_bytes() as f64 / s.costs.h2d_bytes_per_ns) as Duration;
-                let start = sim.now().max(s.h2d_free);
-                let end = start + h2d_cost;
-                s.h2d_free = end;
+                let (_, end) = s.h2d.reserve(cx, h2d_cost);
                 s.totals.h2d += h2d_cost;
                 s.totals.h2d_calls += 1;
                 Some((tasks, end))
             };
             let Some((tasks, h2d_end)) = plan else { return };
             let this = self.clone();
-            sim.at(h2d_end, move |sim| this.on_h2d_done(sim, tasks));
+            cx.at(h2d_end, move |cx: &mut Cx| this.on_h2d_done(cx, tasks));
         }
     }
 
     /// Stage 2: preparation on the GPU (serial prep stream).
-    fn on_h2d_done(&self, sim: &mut Sim, tasks: Vec<TransferTask>) {
-        let (prep_end,) = {
+    fn on_h2d_done(&self, cx: &mut Cx, tasks: Vec<TransferTask>) {
+        let prep_end = {
             let mut s = self.s.borrow_mut();
             let p = &tasks[0].param;
             let c = &s.costs;
@@ -197,30 +184,27 @@ impl RankSim {
                 + (2 * p.bf16_bytes() as u64) / (c.hbm_bytes_per_ns as u64))
                 * q_calls as u64;
             let total = ft_total + fuse + quant;
-            let start = sim.now().max(s.prep_free);
-            let end = start + total;
-            s.prep_free = end;
+            let (_, end) = s.prep.reserve(cx, total);
             s.totals.full_tensor += ft_total;
             s.totals.full_tensor_calls += s.costs.full_tensor_calls;
             s.totals.fuse += fuse;
             s.totals.fuse_calls += 1;
             s.totals.quantize += quant;
             s.totals.quantize_calls += q_calls;
-            (end,)
+            end
         };
         let this = self.clone();
-        sim.at(prep_end, move |sim| this.on_prepared(sim, tasks));
+        cx.at(prep_end, move |cx: &mut Cx| this.on_prepared(cx, tasks));
     }
 
     /// Stage 3: RDMA WRITE to every replica (framework submit cost +
     /// engine).
-    fn on_prepared(&self, sim: &mut Sim, tasks: Vec<TransferTask>) {
+    fn on_prepared(&self, cx: &mut Cx, tasks: Vec<TransferTask>) {
         let (engine, src, submits) = {
             let mut s = self.s.borrow_mut();
             let mut submits = Vec::with_capacity(tasks.len());
-            let mut t = sim.now().max(s.submit_free);
             for task in &tasks {
-                t += s.costs.rdma_submit_ns;
+                let (_, t) = s.submit.reserve(cx, s.costs.rdma_submit_ns);
                 s.totals.rdma_submit += s.costs.rdma_submit_ns;
                 s.totals.rdma_calls += 1;
                 let desc = s.dst_regions[task.dst as usize].clone();
@@ -228,7 +212,6 @@ impl RankSim {
                 let off = task.dst_offset % (desc.len - len).max(1);
                 submits.push((t, desc, off, len));
             }
-            s.submit_free = t;
             (s.engine.clone(), s.src.clone(), submits)
         };
         let bytes_back = tasks[0].param.bf16_bytes() + tasks[0].param.fp8_bytes();
@@ -239,76 +222,56 @@ impl RankSim {
             let src = src.clone();
             // Memory released when the last replica write completes.
             let release = if i == n - 1 { bytes_back } else { 0 };
-            sim.at(at, move |sim| {
+            cx.at(at, move |cx: &mut Cx| {
                 let t2 = this.clone();
+                let on_done = cx.cont(move |cx: &mut Cx, _f: Fired| {
+                    t2.on_write_done(cx, release);
+                });
                 engine.submit_single_write(
-                    sim,
+                    cx,
                     (&src, 0),
                     len,
                     (&desc, off),
                     None,
-                    OnDone::Callback(Box::new(move |sim| t2.on_write_done(sim, release))),
+                    Notify::Cont(on_done),
                 );
             });
         }
     }
 
-    fn on_write_done(&self, sim: &mut Sim, release: u64) {
+    fn on_write_done(&self, cx: &mut Cx, release: u64) {
         let group_done = {
             let mut s = self.s.borrow_mut();
             s.inflight = s.inflight.saturating_sub(release);
             s.group_writes_left -= 1;
             s.group_writes_left == 0
         };
-        self.pump(sim);
+        self.pump(cx);
         if group_done {
-            self.arrive_barrier(sim);
+            self.arrive_barrier(cx);
         }
     }
 
     /// Stage 4: global barrier across mesh groups.
-    fn arrive_barrier(&self, sim: &mut Sim) {
-        let (rank, group, barriers, gloo) = {
+    fn arrive_barrier(&self, cx: &mut Cx) {
+        let (rank, group, barriers) = {
             let s = self.s.borrow();
-            (s.rank, s.group, s.barriers.clone(), s.costs.gloo_ns)
+            (s.rank, s.group, s.barriers.clone())
         };
-        let arrive_t = sim.now();
-        let release = {
-            let mut b = barriers[group].borrow_mut();
-            b.arrived.push((rank, arrive_t));
-            let this = self.clone();
-            b.waiters.push((
-                rank,
-                Box::new(move |sim, released_at| this.on_barrier_release(sim, released_at)),
-            ));
-            if b.arrived.len() == b.expected {
-                let max_t = b.arrived.iter().map(|&(_, t)| t).max().unwrap();
-                Some((max_t + gloo, std::mem::take(&mut b.waiters)))
-            } else {
-                None
-            }
-        };
-        // Record this rank's wait when released.
-        if let Some((release_at, waiters)) = release {
-            for (_, w) in waiters {
-                sim.at(release_at, move |sim| w(sim, release_at));
-            }
-        }
+        let this = self.clone();
+        barriers[group].arrive(cx, rank, move |cx: &mut Cx, released_at| {
+            this.on_barrier_release(cx, released_at);
+        });
     }
 
-    fn on_barrier_release(&self, sim: &mut Sim, _released_at: Instant) {
+    fn on_barrier_release(&self, cx: &mut Cx, _released_at: Instant) {
         {
             let mut s = self.s.borrow_mut();
             // wait time = release - own arrival.
-            let b = s.barriers[s.group].borrow();
-            let own = b
-                .arrived
-                .iter()
-                .find(|&&(r, _)| r == s.rank)
-                .map(|&(_, t)| t)
-                .unwrap();
-            drop(b);
-            s.totals.wait_ranks += sim.now() - own;
+            let own = s.barriers[s.group]
+                .arrival_of(s.rank)
+                .expect("released rank must have arrived");
+            s.totals.wait_ranks += cx.now().saturating_sub(own);
             s.group += 1;
             s.next = 0;
             if s.group < s.groups.len() {
@@ -323,58 +286,50 @@ impl RankSim {
         };
         if finished {
             let mut s = self.s.borrow_mut();
-            s.totals.total = sim.now() - s.started_at;
+            s.totals.total = cx.now().saturating_sub(s.started_at);
             let rank = s.rank;
-            s.done.borrow_mut().insert(rank, sim.now());
+            s.done.borrow_mut().insert(rank, cx.now());
         } else {
-            self.pump(sim);
+            self.pump(cx);
         }
     }
 }
 
-/// Run the full P2P transfer for `spec` on a simulated cluster with
-/// `nic` NICs (one per GPU) and return the report.
+/// Run the full P2P transfer on whatever runtime backs `cx`:
+/// `t_engines` holds one engine per training node, `r_engines` one
+/// per inference node (8 GPUs per node, as in the paper deployment).
 ///
 /// `scale` scales parameter bytes (1.0 = full model) to trade fidelity
 /// for simulation time; counts and schedule stay identical.
-pub fn run_p2p_transfer(spec: &RlModelSpec, nic: NicProfile, scale: f64) -> RlReport {
+pub fn run_p2p_transfer_on(
+    cx: &mut Cx,
+    t_engines: &[Rc<dyn TransferEngine>],
+    r_engines: &[Rc<dyn TransferEngine>],
+    spec: &RlModelSpec,
+    scale: f64,
+) -> RlReport {
     let gpus_per_node: u8 = 8;
-    let t_nodes = spec.t_ranks.div_ceil(gpus_per_node as u32) as u16;
-    let r_nodes = spec.r_ranks.div_ceil(gpus_per_node as u32) as u16;
-    let net = SimNet::new(0xA11);
-    for node in 0..(t_nodes + r_nodes) {
-        for gpu in 0..gpus_per_node {
-            net.add_nic(NicAddr { node, gpu, nic: 0 }, nic.clone());
-        }
-    }
-    let mut engines = Vec::new();
-    for node in 0..(t_nodes + r_nodes) {
-        engines.push(Engine::new(
-            &net,
-            node,
-            gpus_per_node,
-            1,
-            GpuProfile::h200(),
-            EngineCosts::default(),
-            node as u64,
-        ));
-    }
-    let mut sim = Sim::new();
+    let t_nodes = spec.t_ranks.div_ceil(gpus_per_node as u32) as usize;
+    let r_nodes = spec.r_ranks.div_ceil(gpus_per_node as u32) as usize;
+    assert_eq!(t_engines.len(), t_nodes, "one engine per training node");
+    assert_eq!(r_engines.len(), r_nodes, "one engine per inference node");
+    let start_t = cx.now();
 
     // Inference weight regions (unbacked).
     let region_len: usize = 32 << 30;
     let mut dst_regions = Vec::with_capacity(spec.r_ranks as usize);
     for r in 0..spec.r_ranks {
-        let node = t_nodes + (r / gpus_per_node as u32) as u16;
+        let node = (r / gpus_per_node as u32) as usize;
         let gpu = (r % gpus_per_node as u32) as u8;
-        let (_h, d) = engines[node as usize].alloc_mr_unbacked(gpu, region_len);
+        let (_h, d) = r_engines[node].alloc_mr_unbacked(gpu, region_len);
         dst_regions.push(d);
     }
     let dst_regions = Rc::new(dst_regions);
 
+    let costs = RlCosts::default();
     let barriers = Rc::new(
         (0..spec.mesh_groups)
-            .map(|_| RefCell::new(GroupBarrier::new(spec.t_ranks as usize)))
+            .map(|_| BarrierModel::new(spec.t_ranks as usize, costs.gloo_ns))
             .collect::<Vec<_>>(),
     );
     let done: Rc<RefCell<HashMap<u32, Instant>>> = Rc::default();
@@ -382,9 +337,9 @@ pub fn run_p2p_transfer(spec: &RlModelSpec, nic: NicProfile, scale: f64) -> RlRe
     let mut ranks = Vec::new();
     let mut total_bytes = 0u64;
     for rank in 0..spec.t_ranks {
-        let node = (rank / gpus_per_node as u32) as u16;
+        let node = (rank / gpus_per_node as u32) as usize;
         let gpu = (rank % gpus_per_node as u32) as u8;
-        let engine = engines[node as usize].clone();
+        let engine = t_engines[node].clone();
         let mut tasks = compute_routing(spec, rank);
         for t in &mut tasks {
             t.param.elems = ((t.param.elems as f64 * scale) as u64).max(1);
@@ -412,42 +367,71 @@ pub fn run_p2p_transfer(spec: &RlModelSpec, nic: NicProfile, scale: f64) -> RlRe
             s: Rc::new(RefCell::new(RankState {
                 rank,
                 engine,
-                gpu,
                 groups,
                 group: 0,
                 next: 0,
-                h2d_free: 0,
-                prep_free: 0,
-                submit_free: 0,
+                h2d: SerialResource::new(),
+                prep: SerialResource::new(),
+                submit: SerialResource::new(),
                 inflight: 0,
                 group_writes_left: first_group_writes,
                 totals: StageTotals::default(),
-                costs: RlCosts::default(),
+                costs: costs.clone(),
                 src,
                 dst_regions: dst_regions.clone(),
                 barriers: barriers.clone(),
-                started_at: 0,
+                started_at: start_t,
                 done: done.clone(),
             })),
         };
         ranks.push(rs);
     }
     for r in &ranks {
-        r.pump(&mut sim);
+        r.pump(cx);
     }
-    sim.run();
+    {
+        let done = done.clone();
+        let t_ranks = spec.t_ranks as usize;
+        cx.drive_until("all RL ranks finish", move || done.borrow().len() == t_ranks);
+    }
 
     let done = done.borrow();
     assert_eq!(done.len(), spec.t_ranks as usize, "all ranks must finish");
-    let total_ns = *done.values().max().unwrap();
+    let total_ns = done.values().max().unwrap().saturating_sub(start_t);
     let rank0 = ranks[0].s.borrow().totals;
     RlReport {
         model: spec.name,
         total_ms: total_ns as f64 / MS as f64,
         rank0,
         bytes: total_bytes,
-        agg_gbps: total_bytes as f64 * 8.0 / total_ns as f64,
+        agg_gbps: total_bytes as f64 * 8.0 / total_ns.max(1) as f64,
     }
+}
+
+/// Run the full P2P transfer for `spec` on a DES cluster with `nic`
+/// NICs (one per GPU) and return the report — the timing-faithful
+/// convenience wrapper around [`run_p2p_transfer_on`].
+pub fn run_p2p_transfer(spec: &RlModelSpec, nic: NicProfile, scale: f64) -> RlReport {
+    let gpus_per_node: u8 = 8;
+    let t_nodes = spec.t_ranks.div_ceil(gpus_per_node as u32) as u16;
+    let r_nodes = spec.r_ranks.div_ceil(gpus_per_node as u32) as u16;
+    let mut cluster = Cluster::new_with(
+        RuntimeKind::Des,
+        t_nodes + r_nodes,
+        gpus_per_node,
+        1,
+        0xA11,
+        nic,
+        GpuProfile::h200(),
+    );
+    let engines = cluster.engines_rc();
+    let (t_engines, r_engines) = engines.split_at(t_nodes as usize);
+    let report = {
+        let (mut cx, _) = cluster.parts();
+        run_p2p_transfer_on(&mut cx, t_engines, r_engines, spec, scale)
+    };
+    cluster.shutdown();
+    report
 }
 
 /// Runtime-agnostic P2P weight sync (the §5.2 transfer protocol,
@@ -456,7 +440,9 @@ pub fn run_p2p_transfer(spec: &RlModelSpec, nic: NicProfile, scale: f64) -> RlRe
 /// slot of every replica's weight region (WRITEIMM per write), waits
 /// for its own write completions, then arrives at the engine-level
 /// barrier; each replica gates on count-based expectations for both.
-/// Runs on whichever runtime backs `cx`.
+/// Runs on whichever runtime backs `cx`. Peer groups are
+/// request-scoped and freed on exit (`remove_peer_group`), so repeated
+/// syncs on a long-lived engine don't leak registry entries.
 pub fn run_generic_weight_sync(
     cx: &mut Cx,
     trainers: &[&dyn TransferEngine],
@@ -506,12 +492,19 @@ pub fn run_generic_weight_sync(
     // barrier immediate must not overtake an unposted write).
     cx.wait_all(&write_flags);
     let replica_descs: Vec<MrDesc> = regions.iter().map(|(_, d)| d.clone()).collect();
+    let mut groups = Vec::with_capacity(t);
     for tr in trainers {
         let group = tr.add_peer_group(replicas.iter().map(|r| r.main_address()).collect());
         tr.submit_barrier(cx, 0, Some(group), &replica_descs, IMM_BARRIER, Notify::Noop);
+        groups.push(group);
     }
     cx.wait_all(&shard_flags);
     cx.wait_all(&barrier_flags);
+    // Sync over: free the request-scoped groups (registry hygiene on
+    // long-lived engines).
+    for (tr, group) in trainers.iter().zip(groups) {
+        assert!(tr.remove_peer_group(group), "group registered above");
+    }
 
     // Every replica holds every trainer's shard in the right slot.
     for (ri, (h, _)) in regions.iter().enumerate() {

@@ -75,6 +75,22 @@ impl PeerGroups {
         self.groups.get(&h.0).map(|v| v.as_slice())
     }
 
+    /// Release a group's registry entry, returning its peer list.
+    /// Handles are never reused, so a freed handle stays invalid.
+    pub fn remove(&mut self, h: PeerGroupHandle) -> Option<Vec<NetAddr>> {
+        self.groups.remove(&h.0)
+    }
+
+    /// Registered group count (leak checks in tests).
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// True when no groups are registered.
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
     /// Debug-check a scatter/barrier submission against its group: the
     /// handle must be registered and the destination count must not
     /// exceed the group size. The body is all `debug_assert!`s —
@@ -451,6 +467,14 @@ mod tests {
         assert_ne!(h, h2);
         pg.check(Some(h), 2);
         pg.check(None, 99);
+        // Remove frees the entry exactly once; handles never recycle.
+        assert_eq!(pg.len(), 2);
+        assert_eq!(pg.remove(h).unwrap(), addrs);
+        assert!(pg.remove(h).is_none());
+        assert!(pg.get(h).is_none());
+        let h3 = pg.add(vec![]);
+        assert_ne!(h3, h, "freed handles are not reused");
+        assert_eq!(pg.len(), 2);
     }
 
     #[test]

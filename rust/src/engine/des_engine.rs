@@ -31,9 +31,8 @@ use super::core::{
     route_barrier, route_paged_writes, route_scatter, route_single_write, ImmTable, PeerGroups,
     RecvPool, Rotation, RoutedWrite, TransferTable,
 };
-use super::traits::{
-    Cx, ImmHandler, Notify, RecvHandler, RuntimeKind, TransferEngine, UvmWatcher, WatchHandler,
-};
+use super::model::Fired;
+use super::traits::{Cx, Notify, OnRecv, OnWatch, RuntimeKind, TransferEngine, UvmWatcher};
 use crate::fabric::mem::{DmaBuf, DmaSlice, RKey};
 use crate::fabric::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
 use crate::fabric::profile::GpuProfile;
@@ -402,6 +401,12 @@ impl Engine {
         self.state.borrow().peer_groups.get(group).map(|p| p.to_vec())
     }
 
+    /// Release a peer group's registry entry (paper §3.5: long-lived
+    /// engines must free request-scoped groups).
+    pub fn remove_peer_group(&self, group: PeerGroupHandle) -> bool {
+        self.state.borrow_mut().peer_groups.remove(group).is_some()
+    }
+
     /// Scatter slices of `src` to many peers (paper `submit_scatter`).
     /// One WR per destination; `imm` delivered to each peer.
     pub fn submit_scatter(
@@ -517,12 +522,19 @@ impl Engine {
     fn uvm_device_write(&self, sim: &mut Sim, id: u64, value: u64) {
         let (cb, old, delay) = {
             let mut s = self.state.borrow_mut();
+            // Freed watcher: drop the write. A cancelled request's
+            // still-enqueued kernels may bump a watcher the scenario
+            // already released; the threaded runtime tolerates the
+            // same (a dead word is just never observed).
+            if !s.watchers.contains_key(&id) {
+                return;
+            }
             let pcie = s.gpu_profile.pcie_ns;
             let poll = s.costs.uvm_poll_ns;
             let phase = s.rng.below(poll.max(1));
             let jit = s.costs.submit_jitter.clone();
             let extra = jit.sample(&mut s.rng); // dispatch tail
-            let w = s.watchers.get_mut(&id).expect("freed UVM watcher");
+            let w = s.watchers.get_mut(&id).expect("checked above");
             let old = w.value;
             w.value = value;
             (w.cb.clone(), old, pcie + phase + 500 + extra)
@@ -760,7 +772,7 @@ impl UvmWatcherHandle {
         self.engine.uvm_device_write(sim, self.id, value);
     }
 
-    /// Drop the watcher (later writes panic).
+    /// Drop the watcher (later writes are ignored).
     pub fn free(&self) {
         self.engine.state.borrow_mut().watchers.remove(&self.id);
     }
@@ -787,6 +799,10 @@ impl TransferEngine for Engine {
         Engine::alloc_mr(self, gpu, len)
     }
 
+    fn alloc_mr_unbacked(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
+        Engine::alloc_mr_unbacked(self, gpu, len)
+    }
+
     fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc) {
         Engine::reg_mr(self, gpu, buf)
     }
@@ -795,8 +811,17 @@ impl TransferEngine for Engine {
         Engine::submit_send(self, cx.sim(), gpu, addr, msg, on_done.into_des());
     }
 
-    fn submit_recvs(&self, cx: &mut Cx, gpu: u8, len: usize, cnt: usize, cb: RecvHandler) {
-        Engine::submit_recvs(self, cx.sim(), gpu, len, cnt, move |_sim, msg| cb(msg));
+    fn submit_recvs(&self, cx: &mut Cx, gpu: u8, len: usize, cnt: usize, on_msg: OnRecv) {
+        match on_msg {
+            OnRecv::Handler(cb) => {
+                Engine::submit_recvs(self, cx.sim(), gpu, len, cnt, move |_sim, msg| cb(msg))
+            }
+            OnRecv::Cont(c) => {
+                Engine::submit_recvs(self, cx.sim(), gpu, len, cnt, move |sim, msg| {
+                    c.fire_des(sim, Fired::bytes(msg.to_vec()))
+                })
+            }
+        }
     }
 
     fn submit_single_write(
@@ -831,6 +856,10 @@ impl TransferEngine for Engine {
         Engine::peer_group(self, group)
     }
 
+    fn remove_peer_group(&self, group: PeerGroupHandle) -> bool {
+        Engine::remove_peer_group(self, group)
+    }
+
     fn submit_scatter(
         &self,
         cx: &mut Cx,
@@ -855,8 +884,8 @@ impl TransferEngine for Engine {
         Engine::submit_barrier(self, cx.sim(), gpu, group, dsts, imm, on_done.into_des());
     }
 
-    fn expect_imm_count(&self, cx: &mut Cx, gpu: u8, imm: u32, count: u32, cb: ImmHandler) {
-        Engine::expect_imm_count(self, cx.sim(), gpu, imm, count, move |_sim| cb());
+    fn expect_imm_count(&self, cx: &mut Cx, gpu: u8, imm: u32, count: u32, on: Notify) {
+        Engine::expect_imm_count(self, cx.sim(), gpu, imm, count, on.into_sim_cb());
     }
 
     fn imm_value(&self, gpu: u8, imm: u32) -> u32 {
@@ -867,8 +896,17 @@ impl TransferEngine for Engine {
         Engine::free_imm(self, gpu, imm)
     }
 
-    fn alloc_uvm_watcher(&self, cb: WatchHandler) -> UvmWatcher {
-        UvmWatcher::Des(Engine::alloc_uvm_watcher(self, move |_sim, old, new| cb(old, new)))
+    fn alloc_uvm_watcher(&self, on: OnWatch) -> UvmWatcher {
+        match on {
+            OnWatch::Handler(cb) => UvmWatcher::Des(Engine::alloc_uvm_watcher(
+                self,
+                move |_sim, old, new| cb(old, new),
+            )),
+            OnWatch::Cont(c) => UvmWatcher::Des(Engine::alloc_uvm_watcher(
+                self,
+                move |sim, old, new| c.fire_des(sim, Fired::pair(old, new)),
+            )),
+        }
     }
 }
 

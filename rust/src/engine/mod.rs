@@ -1,14 +1,43 @@
 //! The TransferEngine: fabric-lib's core component (paper §3).
 //!
 //! One uniform API, two runtimes, zero duplicated submission logic —
-//! the module is layered exactly along that split:
+//! and, since the compute-model migration, zero duplicated *scenario*
+//! logic either. The module is layered along that split:
+//!
+//! ```text
+//!   apps/ scenarios (KvCache Table-3, MoE epochs, RL pipeline)
+//!        │ written once against &mut Cx + dyn TransferEngine
+//!        ▼
+//!   [`model`] — runtime-neutral compute/clock model: delayed
+//!        │ callbacks (`Cx::after`/`at`), continuations (`Cx::cont`),
+//!        │ per-stream kernels (`ComputeModel`), NVLink pushes,
+//!        │ serial H2D/prep/submit resources, barrier arrival
+//!        ▼
+//!   [`traits`] — the dyn-safe Fig-2 trait + `Cx`/`Notify`/`Cluster`
+//!        │
+//!        ├── [`des_engine::Engine`]      (virtual clock, deterministic)
+//!        └── [`threaded::ThreadedEngine`] (pinned threads, wall clock)
+//!        │
+//!   [`core`] — shared submission core: peer-group registry (+ free),
+//!        imm accounting, transfer/WR completion tables, recv
+//!        matching, NIC rotation, plan→rkey routing (§3.2 equal-NIC
+//!        invariant)
+//!        │
+//!   [`api`], [`wire`], [`sharding`], [`imm_counter`] — vocabulary
+//!        types, wire format, pure sharding planner, counter logic
+//! ```
 //!
 //! * [`traits`] — the [`traits::TransferEngine`] trait: the full
 //!   Fig-2 vocabulary (`alloc_mr`/`reg_mr`, SEND/RECV, single/paged
-//!   writes, peer groups, scatter/barrier, IMMCOUNTER expectations,
-//!   UVM watchers) as one dyn-safe interface, plus the [`traits::Cx`]
-//!   execution context and [`traits::Cluster`]/[`traits::run_on_both`]
-//!   harness that runs any scenario on both runtimes;
+//!   writes, peer groups with add/remove, scatter/barrier, IMMCOUNTER
+//!   expectations, UVM watchers) as one dyn-safe interface, plus the
+//!   [`traits::Cx`] execution context/clock and
+//!   [`traits::Cluster`]/[`traits::run_on_both`] harness that runs any
+//!   scenario on both runtimes;
+//! * [`model`] — the runtime-neutral compute/clock model the full
+//!   scenarios schedule their GPU/CPU side with, implemented once over
+//!   the DES virtual clock and once over real threads/`std::time`
+//!   (the [`model::Reactor`]);
 //! * [`core`] — the shared submission core: peer-group registry, imm
 //!   accounting, transfer/WR completion tables, recv matching, NIC
 //!   rotation, and the bridge from API calls to [`sharding`] plans
@@ -26,12 +55,16 @@
 //! Apps and examples written against `&dyn TransferEngine` (or
 //! `impl TransferEngine`) run unchanged on either runtime; pick the
 //! DES engine for reproducible timing, the threaded engine for real
-//! wall-clock behavior.
+//! wall-clock behavior. The full paper scenarios (`run_table3_row`,
+//! MoE decode epochs, the RL weight pipeline) follow the same rule:
+//! their `*_on` entry points take any `Cx` + engines, and the
+//! convenience wrappers merely build a DES [`traits::Cluster`] first.
 
 pub mod api;
 pub mod core;
 pub mod des_engine;
 pub mod imm_counter;
+pub mod model;
 pub mod sharding;
 pub mod threaded;
 pub mod traits;
@@ -40,8 +73,11 @@ pub mod wire;
 pub use api::{EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
 pub use des_engine::{Engine, OnDone, SubmitTrace, UvmWatcherHandle};
 pub use imm_counter::{ImmCounter, ImmEvent};
+pub use model::{
+    BarrierModel, ComputeModel, Cont, Fired, NvlinkModel, Reactor, SerialResource, WakeSender,
+};
 pub use threaded::{OnDoneT, ThreadedEngine, TraceT};
 pub use traits::{
-    expect_flag, new_flag, run_on_both, Cluster, Cx, Notify, RuntimeKind, SharedFlag,
-    TransferEngine, UvmWatcher,
+    expect_flag, new_flag, run_on_both, Cluster, Cx, Notify, OnRecv, OnWatch, RuntimeKind,
+    SharedFlag, TransferEngine, UvmWatcher,
 };

@@ -1,0 +1,635 @@
+//! Runtime-neutral compute/clock model: the "GPU side" of full-model
+//! scenarios, written once over [`super::traits::Cx`] so the KvCache
+//! Table-3 harness, MoE decode epochs and the RL weight-update
+//! pipeline run unchanged on the DES virtual clock *and* on real
+//! threads/`std::time`.
+//!
+//! The submission layer became runtime-agnostic in the PR-1 trait
+//! unification; this module does the same for everything a scenario
+//! schedules *outside* the fabric:
+//!
+//! * [`Cont`] / [`Fired`] / [`WakeSender`] — runtime-neutral
+//!   continuations. Scenario state machines live in `Rc<RefCell<..>>`
+//!   cells on the driving thread; engine completions reach them either
+//!   directly inside the DES event loop (with `&mut Sim` in hand) or,
+//!   on the threaded runtime, via a `Send` wake token that the
+//!   [`Reactor`] dispatches back on the driving thread.
+//! * [`Reactor`] — the threaded runtime's clock: a timer heap over
+//!   `std::time::Instant` plus the cross-thread wake queue, pumped by
+//!   `Cx::wait`/`Cx::drive_until`/`Cx::settle`.
+//! * [`ComputeModel`] — per-stream in-order kernel execution (the
+//!   [`crate::fabric::gpu::GpuSim`] timing rules over any clock).
+//! * [`NvlinkModel`] — per-link serialized intra-node pushes.
+//! * [`SerialResource`] — a serial engine with a free-cursor (H2D copy
+//!   engine, prep stream, submit thread) charging byte/fixed costs.
+//! * [`BarrierModel`] — N-party barrier arrival with a release delay
+//!   (the RL pipeline's per-mesh-group GLOO barrier).
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::rc::Rc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration as StdDuration;
+use std::time::Instant as StdInstant;
+
+use super::traits::Cx;
+use crate::fabric::profile::GpuProfile;
+use crate::sim::time::{Duration, Instant};
+use crate::sim::Sim;
+
+// ---------------------------------------------------------------------
+// Continuations
+// ---------------------------------------------------------------------
+
+/// Payload delivered to a fired continuation: two scalar slots (UVM
+/// watchers use `(old, new)`) and an optional byte payload (SEND/RECV
+/// messages). Completion-only events leave everything empty.
+#[derive(Debug, Default, Clone)]
+pub struct Fired {
+    pub a: u64,
+    pub b: u64,
+    pub data: Vec<u8>,
+}
+
+impl Fired {
+    /// Payload carrying the two scalar slots.
+    pub fn pair(a: u64, b: u64) -> Self {
+        Fired {
+            a,
+            b,
+            data: Vec::new(),
+        }
+    }
+
+    /// Payload carrying bytes.
+    pub fn bytes(data: Vec<u8>) -> Self {
+        Fired { a: 0, b: 0, data }
+    }
+}
+
+type DesHandler = Rc<RefCell<Box<dyn FnMut(&mut Sim, Fired)>>>;
+
+/// `Send` half of a threaded continuation: pushing a [`Fired`] enqueues
+/// the token on the owning [`Reactor`]'s wake queue and wakes it.
+/// The sender (and its clones) also keep the handler registered: once
+/// every clone is dropped, the reactor reclaims the handler slot.
+#[derive(Clone)]
+pub struct WakeSender {
+    token: u64,
+    queue: WakeQueue,
+    /// Liveness token; the reactor holds the matching `Weak`.
+    _live: Arc<()>,
+}
+
+impl WakeSender {
+    /// Fire the continuation with `payload` (callable from any thread).
+    pub fn send(&self, payload: Fired) {
+        let (m, cv) = &*self.queue;
+        m.lock().unwrap().push_back((self.token, payload));
+        cv.notify_all();
+    }
+}
+
+enum ContInner {
+    /// DES: invoked synchronously inside the event loop, at the
+    /// completion's virtual time, with the simulator in hand.
+    Des(DesHandler),
+    /// Threaded: a wake token dispatched by the driving thread's
+    /// [`Reactor`].
+    Threaded(WakeSender),
+}
+
+/// A runtime-neutral, multi-shot continuation produced by
+/// [`Cx::cont`]: the handler runs on the scenario's driving context
+/// (so it may hold `Rc` state and submit further work), regardless of
+/// which thread observed the completion.
+pub struct Cont {
+    inner: ContInner,
+}
+
+impl Clone for Cont {
+    fn clone(&self) -> Self {
+        Cont {
+            inner: match &self.inner {
+                ContInner::Des(f) => ContInner::Des(f.clone()),
+                ContInner::Threaded(tx) => ContInner::Threaded(tx.clone()),
+            },
+        }
+    }
+}
+
+impl Cont {
+    /// Build the DES flavor from a sim-level handler.
+    pub(crate) fn des(f: impl FnMut(&mut Sim, Fired) + 'static) -> Self {
+        let f: Box<dyn FnMut(&mut Sim, Fired)> = Box::new(f);
+        Cont {
+            inner: ContInner::Des(Rc::new(RefCell::new(f))),
+        }
+    }
+
+    /// Build the threaded flavor from a registered reactor token.
+    pub(crate) fn threaded(tx: WakeSender) -> Self {
+        Cont {
+            inner: ContInner::Threaded(tx),
+        }
+    }
+
+    /// Fire on the DES runtime (engine-internal; called inside the
+    /// event loop).
+    pub fn fire_des(&self, sim: &mut Sim, payload: Fired) {
+        match &self.inner {
+            ContInner::Des(f) => {
+                let mut f = f.borrow_mut();
+                (*f)(sim, payload)
+            }
+            ContInner::Threaded(_) => {
+                panic!("threaded continuation fired on the DES runtime")
+            }
+        }
+    }
+
+    /// Extract the `Send` wake half (threaded engines only).
+    pub fn into_sender(self) -> WakeSender {
+        match self.inner {
+            ContInner::Threaded(tx) => tx,
+            ContInner::Des(_) => {
+                panic!("DES continuation passed to a threaded engine")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The threaded runtime's reactor
+// ---------------------------------------------------------------------
+
+type WakeQueue = Arc<(Mutex<VecDeque<(u64, Fired)>>, Condvar)>;
+type LocalHandler = Rc<RefCell<Box<dyn FnMut(&mut Cx, Fired)>>>;
+
+struct HandlerEntry {
+    /// Dead once every [`WakeSender`] clone for this token is dropped.
+    live: std::sync::Weak<()>,
+    f: LocalHandler,
+}
+
+struct ReactorState {
+    epoch: StdInstant,
+    next_token: u64,
+    next_timer: u64,
+    handlers: HashMap<u64, HandlerEntry>,
+    /// (deadline ns, seq) min-heap; thunks keyed by seq.
+    timers: BinaryHeap<Reverse<(u64, u64)>>,
+    thunks: HashMap<u64, Box<dyn FnOnce(&mut Cx)>>,
+    /// Idle-step counter throttling handler reclamation sweeps.
+    idle_steps: u32,
+}
+
+/// The threaded runtime's clock and dispatcher. Timers fire in real
+/// time relative to the reactor's epoch; wake tokens posted from
+/// worker/watcher threads are dispatched on the driving thread, so
+/// scenario state needs no locks. Cloning yields another handle to the
+/// same reactor.
+#[derive(Clone)]
+pub struct Reactor {
+    state: Rc<RefCell<ReactorState>>,
+    queue: WakeQueue,
+}
+
+impl Default for Reactor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Reactor {
+    /// Fresh reactor; its clock starts now.
+    pub fn new() -> Self {
+        Reactor {
+            state: Rc::new(RefCell::new(ReactorState {
+                epoch: StdInstant::now(),
+                next_token: 1,
+                next_timer: 1,
+                handlers: HashMap::new(),
+                timers: BinaryHeap::new(),
+                thunks: HashMap::new(),
+                idle_steps: 0,
+            })),
+            queue: Arc::new((Mutex::new(VecDeque::new()), Condvar::new())),
+        }
+    }
+
+    /// ns since the reactor's epoch (the threaded runtime's `now`).
+    pub fn now_ns(&self) -> u64 {
+        self.state.borrow().epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Register a local handler; returns its `Send` wake half. The
+    /// handler slot is reclaimed once every clone of the returned
+    /// sender has been dropped.
+    pub fn register(&self, h: impl FnMut(&mut Cx, Fired) + 'static) -> WakeSender {
+        let h: Box<dyn FnMut(&mut Cx, Fired)> = Box::new(h);
+        let live = Arc::new(());
+        let token = {
+            let mut st = self.state.borrow_mut();
+            let t = st.next_token;
+            st.next_token += 1;
+            st.handlers.insert(
+                t,
+                HandlerEntry {
+                    live: Arc::downgrade(&live),
+                    f: Rc::new(RefCell::new(h)),
+                },
+            );
+            t
+        };
+        WakeSender {
+            token,
+            queue: self.queue.clone(),
+            _live: live,
+        }
+    }
+
+    /// Schedule `k` at absolute reactor time `at_ns` (past deadlines
+    /// fire on the next pump).
+    pub fn schedule_at(&self, at_ns: u64, k: Box<dyn FnOnce(&mut Cx)>) {
+        let mut st = self.state.borrow_mut();
+        let seq = st.next_timer;
+        st.next_timer += 1;
+        st.timers.push(Reverse((at_ns, seq)));
+        st.thunks.insert(seq, k);
+    }
+
+    /// Dispatch one due timer or one queued wake. Returns false when
+    /// nothing was runnable.
+    pub fn step(&self) -> bool {
+        let now = self.now_ns();
+        let due = {
+            let mut st = self.state.borrow_mut();
+            match st.timers.peek() {
+                Some(&Reverse((at, seq))) if at <= now => {
+                    st.timers.pop();
+                    st.thunks.remove(&seq)
+                }
+                _ => None,
+            }
+        };
+        if let Some(k) = due {
+            k(&mut Cx::Threaded(self.clone()));
+            return true;
+        }
+        let wake = {
+            let (m, _) = &*self.queue;
+            m.lock().unwrap().pop_front()
+        };
+        if let Some((token, payload)) = wake {
+            let h = self.state.borrow().handlers.get(&token).map(|e| e.f.clone());
+            if let Some(h) = h {
+                let mut f = h.borrow_mut();
+                (*f)(&mut Cx::Threaded(self.clone()), payload);
+            }
+            return true;
+        }
+        // Nothing runnable: occasionally reclaim handlers whose
+        // senders are all gone. Holding the queue lock while sweeping
+        // makes this safe — a dead token can never send again, and a
+        // still-alive sender blocked in `send` keeps its strong count
+        // up until its wake is visible in the queue.
+        {
+            let mut st = self.state.borrow_mut();
+            st.idle_steps = st.idle_steps.wrapping_add(1);
+            if st.idle_steps % 64 == 0 && !st.handlers.is_empty() {
+                let (m, _) = &*self.queue;
+                let guard = m.lock().unwrap();
+                if guard.is_empty() {
+                    st.handlers.retain(|_, e| e.live.strong_count() > 0);
+                }
+            }
+        }
+        false
+    }
+
+    /// Block briefly until the next timer deadline or an incoming wake
+    /// (bounded by `max`).
+    pub fn idle_wait(&self, max: StdDuration) {
+        let now = self.now_ns();
+        let next = self
+            .state
+            .borrow()
+            .timers
+            .peek()
+            .map(|&Reverse((at, _))| at);
+        let sleep_ns = match next {
+            Some(at) if at <= now => return,
+            Some(at) => (at - now).min(max.as_nanos() as u64),
+            None => max.as_nanos() as u64,
+        };
+        let (m, cv) = &*self.queue;
+        let guard = m.lock().unwrap();
+        if guard.is_empty() {
+            let _ = cv
+                .wait_timeout(guard, StdDuration::from_nanos(sleep_ns))
+                .unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compute model: per-stream kernels
+// ---------------------------------------------------------------------
+
+/// Per-stream in-order kernel execution over any clock — the
+/// runtime-neutral twin of [`crate::fabric::gpu::GpuSim`], with the
+/// same timing rules (per-stream free cursor, launch overhead skipped
+/// for CUDA-graph launches).
+#[derive(Clone)]
+pub struct ComputeModel {
+    profile: GpuProfile,
+    streams: Rc<RefCell<HashMap<u32, Instant>>>,
+}
+
+impl ComputeModel {
+    /// A GPU's worth of streams with the given timing profile.
+    pub fn new(profile: GpuProfile) -> Self {
+        ComputeModel {
+            profile,
+            streams: Rc::new(RefCell::new(HashMap::new())),
+        }
+    }
+
+    /// Timing profile (cloned, mirroring `GpuSim::profile`).
+    pub fn profile(&self) -> GpuProfile {
+        self.profile.clone()
+    }
+
+    /// The pure timing rule: occupy `stream` for `duration` starting
+    /// no earlier than `now` (+ launch overhead outside CUDA graphs),
+    /// returning the scheduled (start, end). This is the single copy
+    /// of the kernel-timing model — [`crate::fabric::gpu::GpuSim`]
+    /// delegates here too, so the DES fabric and the scenario layer
+    /// cannot drift apart.
+    pub fn reserve(
+        &self,
+        now: Instant,
+        stream: u32,
+        duration: Duration,
+        graph_launch: bool,
+    ) -> (Instant, Instant) {
+        let mut streams = self.streams.borrow_mut();
+        let launch = if graph_launch { 0 } else { self.profile.launch_ns };
+        let free = streams.entry(stream).or_insert(0);
+        let start = (now + launch).max(*free);
+        let end = start + duration;
+        *free = end;
+        (start, end)
+    }
+
+    /// Enqueue a kernel of `duration` on `stream`; `on_done(cx, end)`
+    /// fires at completion. Returns the scheduled (start, end).
+    pub fn launch(
+        &self,
+        cx: &mut Cx,
+        stream: u32,
+        duration: Duration,
+        graph_launch: bool,
+        on_done: impl FnOnce(&mut Cx, Instant) + 'static,
+    ) -> (Instant, Instant) {
+        let (start, end) = self.reserve(cx.now(), stream, duration, graph_launch);
+        cx.at(end, move |cx: &mut Cx| on_done(cx, end));
+        (start, end)
+    }
+
+    /// Time when `stream` becomes idle.
+    pub fn stream_free(&self, stream: u32) -> Instant {
+        *self.streams.borrow().get(&stream).unwrap_or(&0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// NVLink model: per-link serialized pushes
+// ---------------------------------------------------------------------
+
+/// Intra-node NVLink pushes, serialized per (src, dst) link — the
+/// runtime-neutral twin of [`crate::fabric::gpu::NvlinkFabric`].
+#[derive(Clone, Default)]
+pub struct NvlinkModel {
+    links: Rc<RefCell<HashMap<(u8, u8), Instant>>>,
+}
+
+impl NvlinkModel {
+    /// Fresh fabric (one per node).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The pure timing rule: serialize `bytes` on link (src, dst)
+    /// starting no earlier than `now`; returns the completion time.
+    /// Single copy of the NVLink model —
+    /// [`crate::fabric::gpu::NvlinkFabric`] delegates here too.
+    pub fn push_at(
+        &self,
+        now: Instant,
+        profile: &GpuProfile,
+        src: u8,
+        dst: u8,
+        bytes: u64,
+    ) -> Instant {
+        let mut links = self.links.borrow_mut();
+        let free = links.entry((src, dst)).or_insert(0);
+        let start = now.max(*free);
+        let end = start + profile.nvlink_transfer_ns(bytes);
+        *free = end;
+        end
+    }
+
+    /// Push `bytes` from `src` to `dst`; returns the completion time
+    /// (stores visible at the peer).
+    pub fn push(&self, cx: &Cx, profile: &GpuProfile, src: u8, dst: u8, bytes: u64) -> Instant {
+        self.push_at(cx.now(), profile, src, dst, bytes)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Serial resources: H2D copy engine, prep stream, submit thread
+// ---------------------------------------------------------------------
+
+/// A serial engine (one H2D copy engine, one preparation stream, one
+/// submit thread): work queues behind earlier work, `reserve` returns
+/// the (start, end) the caller should schedule against.
+#[derive(Clone, Default)]
+pub struct SerialResource {
+    free: Rc<RefCell<Instant>>,
+}
+
+impl SerialResource {
+    /// Idle resource.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Occupy the resource for `cost` ns starting no earlier than now.
+    pub fn reserve(&self, cx: &Cx, cost: Duration) -> (Instant, Instant) {
+        let mut free = self.free.borrow_mut();
+        let start = cx.now().max(*free);
+        let end = start + cost;
+        *free = end;
+        (start, end)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Barrier model
+// ---------------------------------------------------------------------
+
+struct BarrierState {
+    expected: usize,
+    release_delay: Duration,
+    arrived: Vec<(u32, Instant)>,
+    waiters: Vec<(u32, Box<dyn FnOnce(&mut Cx, Instant)>)>,
+}
+
+/// N-party barrier with a release delay (the RL pipeline's GLOO
+/// barrier over Ethernet): every arrival parks a continuation; when
+/// the last party arrives, all continuations run `release_delay` after
+/// the final arrival. One-shot per instance.
+#[derive(Clone)]
+pub struct BarrierModel {
+    s: Rc<RefCell<BarrierState>>,
+}
+
+impl BarrierModel {
+    /// Barrier over `expected` parties with the given release delay.
+    pub fn new(expected: usize, release_delay: Duration) -> Self {
+        BarrierModel {
+            s: Rc::new(RefCell::new(BarrierState {
+                expected,
+                release_delay,
+                arrived: Vec::new(),
+                waiters: Vec::new(),
+            })),
+        }
+    }
+
+    /// When `rank` arrived, if it has.
+    pub fn arrival_of(&self, rank: u32) -> Option<Instant> {
+        self.s
+            .borrow()
+            .arrived
+            .iter()
+            .find(|&&(r, _)| r == rank)
+            .map(|&(_, t)| t)
+    }
+
+    /// Arrive at the barrier; `k(cx, released_at)` runs once all
+    /// parties arrived plus the release delay.
+    pub fn arrive(&self, cx: &mut Cx, rank: u32, k: impl FnOnce(&mut Cx, Instant) + 'static) {
+        let release = {
+            let mut b = self.s.borrow_mut();
+            b.arrived.push((rank, cx.now()));
+            b.waiters.push((rank, Box::new(k)));
+            if b.arrived.len() == b.expected {
+                let max_t = b.arrived.iter().map(|&(_, t)| t).max().unwrap();
+                Some((max_t + b.release_delay, std::mem::take(&mut b.waiters)))
+            } else {
+                None
+            }
+        };
+        if let Some((release_at, waiters)) = release {
+            for (_, w) in waiters {
+                cx.at(release_at, move |cx: &mut Cx| w(cx, release_at));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::US;
+
+    #[test]
+    fn compute_model_serializes_streams_on_des() {
+        let mut sim = Sim::new();
+        let mut cx = Cx::Des(&mut sim);
+        let cm = ComputeModel::new(GpuProfile::h100());
+        let (s1, e1) = cm.launch(&mut cx, 0, 10 * US, true, |_, _| {});
+        let (s2, e2) = cm.launch(&mut cx, 0, 5 * US, true, |_, _| {});
+        assert_eq!(s1, 0);
+        assert_eq!(e1, 10 * US);
+        assert_eq!(s2, e1, "same stream is in-order");
+        assert_eq!(e2, 15 * US);
+        let (s3, _) = cm.launch(&mut cx, 1, 5 * US, true, |_, _| {});
+        assert_eq!(s3, 0, "different stream runs concurrently");
+        cx.settle();
+    }
+
+    #[test]
+    fn compute_model_fires_on_done_on_threaded_clock() {
+        let reactor = Reactor::new();
+        let mut cx = Cx::Threaded(reactor.clone());
+        let cm = ComputeModel::new(GpuProfile::h100());
+        let hits = Rc::new(RefCell::new(Vec::new()));
+        let h = hits.clone();
+        cm.launch(&mut cx, 0, 50_000, true, move |_cx: &mut Cx, end| {
+            h.borrow_mut().push(end);
+        });
+        cx.drive_until("kernel completion", || !hits.borrow().is_empty());
+        assert_eq!(hits.borrow().len(), 1);
+    }
+
+    #[test]
+    fn reactor_dispatches_wakes_from_other_threads() {
+        let reactor = Reactor::new();
+        let got = Rc::new(RefCell::new(Vec::new()));
+        let g = got.clone();
+        let tx = reactor.register(move |_cx, fired| g.borrow_mut().push((fired.a, fired.b)));
+        let t = std::thread::spawn(move || {
+            tx.send(Fired::pair(3, 7));
+            tx.send(Fired::pair(7, 9));
+        });
+        t.join().unwrap();
+        let mut cx = Cx::Threaded(reactor);
+        cx.drive_until("both wakes", || got.borrow().len() == 2);
+        assert_eq!(*got.borrow(), vec![(3, 7), (7, 9)]);
+    }
+
+    #[test]
+    fn barrier_releases_after_last_arrival_plus_delay() {
+        let mut sim = Sim::new();
+        let released: Rc<RefCell<Vec<(u32, Instant)>>> = Rc::default();
+        let barrier = BarrierModel::new(2, 1000);
+        {
+            let b1 = barrier.clone();
+            let b2 = barrier.clone();
+            let r1 = released.clone();
+            let r2 = released.clone();
+            sim.at(10, move |s| {
+                let mut cx = Cx::Des(s);
+                b1.arrive(&mut cx, 0, move |cx: &mut Cx, at| {
+                    r1.borrow_mut().push((0, at.max(cx.now())))
+                });
+            });
+            sim.at(500, move |s| {
+                let mut cx = Cx::Des(s);
+                b2.arrive(&mut cx, 1, move |cx: &mut Cx, at| {
+                    r2.borrow_mut().push((1, at.max(cx.now())))
+                });
+            });
+        }
+        sim.run();
+        let rel = released.borrow();
+        assert_eq!(rel.len(), 2);
+        assert!(rel.iter().all(|&(_, t)| t == 1500), "{rel:?}");
+        assert_eq!(barrier.arrival_of(0), Some(10));
+        assert_eq!(barrier.arrival_of(1), Some(500));
+    }
+
+    #[test]
+    fn serial_resource_queues_work() {
+        let mut sim = Sim::new();
+        let cx = Cx::Des(&mut sim);
+        let r = SerialResource::new();
+        assert_eq!(r.reserve(&cx, 100), (0, 100));
+        assert_eq!(r.reserve(&cx, 50), (100, 150));
+    }
+}

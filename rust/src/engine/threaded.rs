@@ -29,9 +29,8 @@ use super::core::{
     route_barrier, route_paged_writes, route_scatter, route_single_write, ImmTable, PeerGroups,
     RecvPool, Rotation, RoutedWrite, TransferTable,
 };
-use super::traits::{
-    Cx, ImmHandler, Notify, RecvHandler, RuntimeKind, TransferEngine, UvmWatcher, WatchHandler,
-};
+use super::model::Fired;
+use super::traits::{Cx, Notify, OnRecv, OnWatch, RuntimeKind, TransferEngine, UvmWatcher};
 use crate::fabric::local::LocalFabric;
 use crate::fabric::mem::{DmaBuf, DmaSlice, RKey};
 use crate::fabric::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
@@ -173,14 +172,31 @@ impl ThreadedEngine {
                 while !stop.load(Ordering::Relaxed) {
                     {
                         let mut ws = inner.watchers.lock().unwrap();
-                        for (word, last, cb) in ws.iter_mut() {
+                        ws.retain_mut(|(word, last, cb)| {
+                            // Liveness check BEFORE the value load: a
+                            // writer stores then drops its handle. The
+                            // acquire fence pairs with the release
+                            // decrement in Arc::drop, so once the
+                            // count reads 1 the writer's final store
+                            // is visible to the load below — checking
+                            // in the other order (or without the
+                            // fence) could skip the last update and
+                            // then reclaim the entry.
+                            let gone = Arc::strong_count(word) == 1;
+                            if gone {
+                                std::sync::atomic::fence(Ordering::Acquire);
+                            }
                             let v = word.load(Ordering::Acquire);
                             if v != *last {
                                 let old = *last;
                                 *last = v;
                                 cb(old, v);
                             }
-                        }
+                            // Watcher hygiene for long-lived engines:
+                            // reclaim once every external handle is
+                            // gone (no writer remains).
+                            !gone
+                        });
                     }
                     std::thread::yield_now();
                 }
@@ -214,6 +230,13 @@ impl ThreadedEngine {
     /// Allocate + register a region on `gpu`.
     pub fn alloc_mr(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
         let (buf, _) = self.inner.fabric.mem().alloc(len);
+        self.reg_mr(gpu, &buf)
+    }
+
+    /// Allocate + register an **unbacked** (timing-only) region; see
+    /// [`crate::fabric::mem::DmaBuf::unbacked`].
+    pub fn alloc_mr_unbacked(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
+        let (buf, _) = self.inner.fabric.mem().alloc_unbacked(len);
         self.reg_mr(gpu, &buf)
     }
 
@@ -325,6 +348,17 @@ impl ThreadedEngine {
             .unwrap()
             .get(group)
             .map(|p| p.to_vec())
+    }
+
+    /// Release a peer group's registry entry (paper §3.5: long-lived
+    /// engines must free request-scoped groups).
+    pub fn remove_peer_group(&self, group: PeerGroupHandle) -> bool {
+        self.inner
+            .peer_groups
+            .lock()
+            .unwrap()
+            .remove(group)
+            .is_some()
     }
 
     /// Scatter to many peers (one WR per destination, NIC-rotated).
@@ -665,6 +699,10 @@ impl TransferEngine for ThreadedEngine {
         ThreadedEngine::alloc_mr(self, gpu, len)
     }
 
+    fn alloc_mr_unbacked(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
+        ThreadedEngine::alloc_mr_unbacked(self, gpu, len)
+    }
+
     fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc) {
         ThreadedEngine::reg_mr(self, gpu, buf)
     }
@@ -673,8 +711,18 @@ impl TransferEngine for ThreadedEngine {
         ThreadedEngine::submit_send(self, gpu, addr, msg, on_done.into_threaded());
     }
 
-    fn submit_recvs(&self, _cx: &mut Cx, gpu: u8, len: usize, cnt: usize, cb: RecvHandler) {
-        ThreadedEngine::submit_recvs(self, gpu, len, cnt, move |msg| cb(msg));
+    fn submit_recvs(&self, _cx: &mut Cx, gpu: u8, len: usize, cnt: usize, on_msg: OnRecv) {
+        match on_msg {
+            OnRecv::Handler(cb) => ThreadedEngine::submit_recvs(self, gpu, len, cnt, move |msg| {
+                cb(msg)
+            }),
+            OnRecv::Cont(c) => {
+                let tx = c.into_sender();
+                ThreadedEngine::submit_recvs(self, gpu, len, cnt, move |msg| {
+                    tx.send(Fired::bytes(msg.to_vec()))
+                })
+            }
+        }
     }
 
     fn submit_single_write(
@@ -709,6 +757,10 @@ impl TransferEngine for ThreadedEngine {
         ThreadedEngine::peer_group(self, group)
     }
 
+    fn remove_peer_group(&self, group: PeerGroupHandle) -> bool {
+        ThreadedEngine::remove_peer_group(self, group)
+    }
+
     fn submit_scatter(
         &self,
         _cx: &mut Cx,
@@ -733,8 +785,8 @@ impl TransferEngine for ThreadedEngine {
         ThreadedEngine::submit_barrier(self, gpu, group, dsts, imm, on_done.into_threaded());
     }
 
-    fn expect_imm_count(&self, _cx: &mut Cx, gpu: u8, imm: u32, count: u32, cb: ImmHandler) {
-        ThreadedEngine::expect_imm_count(self, gpu, imm, count, cb);
+    fn expect_imm_count(&self, _cx: &mut Cx, gpu: u8, imm: u32, count: u32, on: Notify) {
+        ThreadedEngine::expect_imm_count(self, gpu, imm, count, on.into_send_cb());
     }
 
     fn imm_value(&self, gpu: u8, imm: u32) -> u32 {
@@ -745,10 +797,19 @@ impl TransferEngine for ThreadedEngine {
         ThreadedEngine::free_imm(self, gpu, imm)
     }
 
-    fn alloc_uvm_watcher(&self, cb: WatchHandler) -> UvmWatcher {
-        UvmWatcher::Threaded(ThreadedEngine::alloc_uvm_watcher(self, move |old, new| {
-            cb(old, new)
-        }))
+    fn alloc_uvm_watcher(&self, on: OnWatch) -> UvmWatcher {
+        match on {
+            OnWatch::Handler(cb) => UvmWatcher::Threaded(ThreadedEngine::alloc_uvm_watcher(
+                self,
+                move |old, new| cb(old, new),
+            )),
+            OnWatch::Cont(c) => {
+                let tx = c.into_sender();
+                UvmWatcher::Threaded(ThreadedEngine::alloc_uvm_watcher(self, move |old, new| {
+                    tx.send(Fired::pair(old, new))
+                }))
+            }
+        }
     }
 }
 

@@ -5,43 +5,52 @@
 //! interface: a dyn-safe trait covering the full vocabulary —
 //! `alloc_mr`/`reg_mr`, `submit_send`/`submit_recvs`,
 //! `submit_single_write`/`submit_paged_writes`,
-//! `add_peer_group`/`submit_scatter`/`submit_barrier`,
-//! `expect_imm_count`/`imm_value`/`free_imm`, `alloc_uvm_watcher` —
-//! implemented by both the deterministic DES engine
-//! ([`super::des_engine::Engine`]) and the pinned-thread engine
+//! `add_peer_group`/`remove_peer_group`/`submit_scatter`/
+//! `submit_barrier`, `expect_imm_count`/`imm_value`/`free_imm`,
+//! `alloc_uvm_watcher` — implemented by both the deterministic DES
+//! engine ([`super::des_engine::Engine`]) and the pinned-thread engine
 //! ([`super::threaded::ThreadedEngine`]), so every workload runs on
 //! either runtime from the same code path.
 //!
 //! The two runtimes drive progress differently (virtual event loop vs.
-//! real threads), which the trait absorbs with two small types:
+//! real threads), which the trait absorbs with a few small types:
 //!
 //! * [`Cx`] — the execution context threaded through every
-//!   submission: the DES variant carries `&mut Sim`, the threaded
-//!   variant nothing. `Cx::wait` is the runtime-appropriate "block
-//!   until this flag is set" (run the event loop to quiescence vs.
-//!   spin with a deadline).
+//!   submission, now also the scenario-side *clock*: `now`/`after`/
+//!   `at` schedule delayed callbacks on the DES virtual clock or on
+//!   the threaded runtime's [`super::model::Reactor`], and
+//!   [`Cx::cont`] mints runtime-neutral continuations so full
+//!   state-machine scenarios (KvCache, MoE, RL pipeline) run on both
+//!   runtimes.
 //! * [`Notify`] — runtime-neutral completion notification (atomic
-//!   flag, `Send` callback, or nothing), converted to each runtime's
-//!   native `OnDone` flavor at the boundary.
+//!   flag, `Send` callback, scheduled [`super::model::Cont`], or
+//!   nothing), converted to each runtime's native `OnDone` flavor at
+//!   the boundary. [`OnRecv`]/[`OnWatch`] are the same idea for
+//!   receive and UVM-watcher callbacks.
 //!
 //! [`Cluster`] builds an N-node cluster on either runtime behind the
 //! same handle and is how harness tests and examples run one scenario
 //! on both ([`run_on_both`]).
 
+use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration as StdDuration;
 use std::time::Instant as StdInstant;
 
-use super::api::{EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
-use super::des_engine::{Engine, OnDone, UvmWatcherHandle};
-use super::threaded::{OnDoneT, ThreadedEngine};
+use super::api::{
+    EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst,
+};
+use super::des_engine::{Engine, UvmWatcherHandle};
+use super::model::{Cont, Fired, Reactor};
+use super::threaded::ThreadedEngine;
 use super::wire;
 use crate::fabric::local::LocalFabric;
 use crate::fabric::mem::DmaBuf;
 use crate::fabric::nic::NicAddr;
-use crate::fabric::profile::{GpuProfile, NicProfile, TransportKind};
+use crate::fabric::profile::{GpuProfile, NicProfile};
 use crate::fabric::simnet::SimNet;
+use crate::sim::time::{Duration, Instant};
 use crate::sim::Sim;
 
 /// Which runtime backs an engine or context.
@@ -74,22 +83,12 @@ pub fn expect_flag(
     count: u32,
 ) -> SharedFlag {
     let flag = new_flag();
-    let f = flag.clone();
-    engine.expect_imm_count(
-        cx,
-        gpu,
-        imm,
-        count,
-        Box::new(move || f.store(true, Ordering::Release)),
-    );
+    engine.expect_imm_count(cx, gpu, imm, count, Notify::Flag(flag.clone()));
     flag
 }
 
 /// Runtime-neutral receive callback (`submit_recvs`).
 pub type RecvHandler = Arc<dyn Fn(&[u8]) + Send + Sync>;
-
-/// Runtime-neutral `expect_imm_count` callback.
-pub type ImmHandler = Box<dyn FnOnce() + Send>;
 
 /// Runtime-neutral UVM-watcher callback (`cb(old, new)`).
 pub type WatchHandler = Box<dyn Fn(u64, u64) + Send + Sync>;
@@ -99,36 +98,98 @@ pub type WatchHandler = Box<dyn Fn(u64, u64) + Send + Sync>;
 pub enum Notify {
     /// Set an atomic flag (wait with [`Cx::wait`]).
     Flag(SharedFlag),
-    /// Run a callback on the runtime's completion path.
+    /// Run a `Send` callback on the runtime's completion path.
     Callback(Box<dyn FnOnce() + Send>),
+    /// Fire a scheduled continuation on the scenario's driving context
+    /// (minted with [`Cx::cont`]; may hold non-`Send` state).
+    Cont(Cont),
     /// Fire-and-forget.
     Noop,
 }
 
 impl Notify {
     /// Convert to the DES engine's native notification.
-    pub fn into_des(self) -> OnDone {
+    pub fn into_des(self) -> super::des_engine::OnDone {
+        use super::des_engine::OnDone;
         match self {
             Notify::Flag(f) => {
                 OnDone::Callback(Box::new(move |_sim| f.store(true, Ordering::Release)))
             }
             Notify::Callback(cb) => OnDone::Callback(Box::new(move |_sim| cb())),
+            Notify::Cont(c) => {
+                OnDone::Callback(Box::new(move |sim| c.fire_des(sim, Fired::default())))
+            }
             Notify::Noop => OnDone::Noop,
         }
     }
 
     /// Convert to the threaded engine's native notification.
-    pub fn into_threaded(self) -> OnDoneT {
+    pub fn into_threaded(self) -> super::threaded::OnDoneT {
+        use super::threaded::OnDoneT;
         match self {
             Notify::Flag(f) => OnDoneT::Flag(f),
             Notify::Callback(cb) => OnDoneT::Callback(cb),
+            Notify::Cont(c) => {
+                let tx = c.into_sender();
+                OnDoneT::Callback(Box::new(move || tx.send(Fired::default())))
+            }
             Notify::Noop => OnDoneT::Noop,
+        }
+    }
+
+    /// Convert to a DES-native `FnOnce(&mut Sim)` callback (the shape
+    /// `Engine::expect_imm_count` takes).
+    pub fn into_sim_cb(self) -> Box<dyn FnOnce(&mut Sim)> {
+        match self {
+            Notify::Flag(f) => Box::new(move |_sim: &mut Sim| f.store(true, Ordering::Release)),
+            Notify::Callback(cb) => Box::new(move |_sim: &mut Sim| cb()),
+            Notify::Cont(c) => Box::new(move |sim: &mut Sim| c.fire_des(sim, Fired::default())),
+            Notify::Noop => Box::new(|_sim: &mut Sim| {}),
+        }
+    }
+
+    /// Convert to a `Send` thunk (the shape
+    /// `ThreadedEngine::expect_imm_count` takes).
+    pub fn into_send_cb(self) -> Box<dyn FnOnce() + Send> {
+        match self {
+            Notify::Flag(f) => Box::new(move || f.store(true, Ordering::Release)),
+            Notify::Callback(cb) => cb,
+            Notify::Cont(c) => {
+                let tx = c.into_sender();
+                Box::new(move || tx.send(Fired::default()))
+            }
+            Notify::Noop => Box::new(|| {}),
         }
     }
 }
 
+/// Receive-side callback for `submit_recvs`: either a `Send + Sync`
+/// handler running on the runtime's receive path, or a continuation
+/// dispatched on the scenario's driving context with the message bytes
+/// in [`Fired::data`].
+pub enum OnRecv {
+    Handler(RecvHandler),
+    Cont(Cont),
+}
+
+impl OnRecv {
+    /// Convenience constructor for the handler flavor.
+    pub fn handler(f: impl Fn(&[u8]) + Send + Sync + 'static) -> Self {
+        OnRecv::Handler(Arc::new(f))
+    }
+}
+
+/// UVM-watcher callback: either a `Send + Sync` handler running on the
+/// engine's watcher path, or a continuation dispatched on the driving
+/// context with `(old, new)` in [`Fired::pair`].
+pub enum OnWatch {
+    Handler(WatchHandler),
+    Cont(Cont),
+}
+
 /// Handle to a UVM watcher allocated through the trait; device-side
 /// code reports progress with [`UvmWatcher::device_write`].
+#[derive(Clone)]
 pub enum UvmWatcher {
     /// DES watcher (observation scheduled on the virtual clock).
     Des(UvmWatcherHandle),
@@ -144,14 +205,26 @@ impl UvmWatcher {
             UvmWatcher::Threaded(word) => word.store(value, Ordering::Release),
         }
     }
+
+    /// Drop the watcher. Later device writes are ignored on both
+    /// runtimes (cancellation paths may race a free against enqueued
+    /// kernels); the threaded engine also reclaims the watcher entry
+    /// once every word handle is dropped.
+    pub fn free(&self) {
+        if let UvmWatcher::Des(h) = self {
+            h.free();
+        }
+    }
 }
 
-/// Execution context threaded through every submission call.
+/// Execution context threaded through every submission call, and the
+/// scenario-side clock (see [`super::model`]).
 pub enum Cx<'a> {
     /// DES runtime: all progress happens inside this simulator.
     Des(&'a mut Sim),
-    /// Threaded runtime: progress happens on background threads.
-    Threaded,
+    /// Threaded runtime: progress happens on background threads;
+    /// scenario callbacks are dispatched by this reactor.
+    Threaded(Reactor),
 }
 
 impl Cx<'_> {
@@ -159,7 +232,7 @@ impl Cx<'_> {
     pub fn kind(&self) -> RuntimeKind {
         match self {
             Cx::Des(_) => RuntimeKind::Des,
-            Cx::Threaded => RuntimeKind::Threaded,
+            Cx::Threaded(_) => RuntimeKind::Threaded,
         }
     }
 
@@ -168,31 +241,105 @@ impl Cx<'_> {
     pub fn sim(&mut self) -> &mut Sim {
         match self {
             Cx::Des(sim) => sim,
-            Cx::Threaded => panic!("Cx::sim() on the threaded runtime"),
+            Cx::Threaded(_) => panic!("Cx::sim() on the threaded runtime"),
         }
     }
 
-    /// Drive the runtime until `flag` is set: the DES variant runs the
-    /// event loop to quiescence and asserts the flag (a clear signal
-    /// of a lost completion), the threaded variant spins with a 10 s
-    /// deadline.
-    pub fn wait(&mut self, flag: &SharedFlag) {
+    /// Current model time in ns: virtual time on DES, ns since the
+    /// reactor epoch on the threaded runtime.
+    pub fn now(&self) -> Instant {
+        match self {
+            Cx::Des(sim) => sim.now(),
+            Cx::Threaded(r) => r.now_ns(),
+        }
+    }
+
+    /// Schedule `k` to run `delay` ns from now on this context's
+    /// clock.
+    pub fn after(&mut self, delay: Duration, k: impl FnOnce(&mut Cx) + 'static) {
+        match self {
+            Cx::Des(sim) => {
+                sim.after(delay, move |sim| k(&mut Cx::Des(sim)));
+            }
+            Cx::Threaded(r) => {
+                let at = r.now_ns().saturating_add(delay);
+                r.schedule_at(at, Box::new(k));
+            }
+        }
+    }
+
+    /// Schedule `k` at absolute model time `at` (clamped to now when
+    /// in the past).
+    pub fn at(&mut self, at: Instant, k: impl FnOnce(&mut Cx) + 'static) {
+        match self {
+            Cx::Des(sim) => {
+                sim.at(at, move |sim| k(&mut Cx::Des(sim)));
+            }
+            Cx::Threaded(r) => r.schedule_at(at, Box::new(k)),
+        }
+    }
+
+    /// Mint a runtime-neutral continuation: `h(cx, fired)` runs on
+    /// this context's driving thread whenever the continuation fires,
+    /// so it may hold `Rc` scenario state and submit further work.
+    pub fn cont(&mut self, h: impl FnMut(&mut Cx, Fired) + 'static) -> Cont {
+        match self {
+            Cx::Des(_) => {
+                let mut h = h;
+                Cont::des(move |sim: &mut Sim, fired| h(&mut Cx::Des(sim), fired))
+            }
+            Cx::Threaded(r) => Cont::threaded(r.register(h)),
+        }
+    }
+
+    /// Drive the runtime until `pred` holds: the DES variant runs the
+    /// event loop to quiescence and asserts the predicate (a clear
+    /// signal of a lost completion), the threaded variant pumps the
+    /// reactor with a 30 s deadline.
+    pub fn drive_until(&mut self, what: &str, mut pred: impl FnMut() -> bool) {
         match self {
             Cx::Des(sim) => {
                 sim.run();
-                assert!(
-                    flag.load(Ordering::Acquire),
-                    "DES run quiesced without satisfying the awaited flag"
-                );
+                assert!(pred(), "DES run quiesced without: {what}");
             }
-            Cx::Threaded => {
-                let deadline = StdInstant::now() + StdDuration::from_secs(10);
-                while !flag.load(Ordering::Acquire) {
-                    assert!(StdInstant::now() < deadline, "timeout awaiting flag");
-                    std::thread::yield_now();
+            Cx::Threaded(r) => {
+                // The deadline is a hang detector, not a budget: it
+                // resets whenever the reactor dispatches work, so
+                // long scenarios (whose model costs are real-time
+                // sleeps here) don't false-positive while making
+                // steady progress.
+                const STALL: StdDuration = StdDuration::from_secs(30);
+                let mut deadline = StdInstant::now() + STALL;
+                // Spin briefly before sleeping: flag-only completions
+                // (Notify::Flag) flip an atomic without waking the
+                // reactor, and a blind sleep would tax every such wait
+                // by the full timeout.
+                let mut idle_spins = 0u32;
+                while !pred() {
+                    if r.step() {
+                        idle_spins = 0;
+                        deadline = StdInstant::now() + STALL;
+                        continue;
+                    }
+                    idle_spins += 1;
+                    if idle_spins < 64 {
+                        std::thread::yield_now();
+                    } else {
+                        r.idle_wait(StdDuration::from_micros(200));
+                    }
+                    assert!(
+                        StdInstant::now() < deadline,
+                        "no progress for {STALL:?} awaiting: {what}"
+                    );
                 }
             }
         }
+    }
+
+    /// Drive the runtime until `flag` is set.
+    pub fn wait(&mut self, flag: &SharedFlag) {
+        let f = flag.clone();
+        self.drive_until("the awaited flag", move || f.load(Ordering::Acquire));
     }
 
     /// [`Cx::wait`] over several flags.
@@ -203,17 +350,26 @@ impl Cx<'_> {
     }
 
     /// Let in-flight work finish without a flag to key on: run the DES
-    /// event loop to quiescence; no-op on the threaded runtime (which
-    /// has no global quiescence signal — key on flags instead).
+    /// event loop to quiescence; pump the threaded reactor until it is
+    /// locally idle (network completions still in flight must be keyed
+    /// on flags instead — the threaded runtime has no global
+    /// quiescence signal).
     pub fn settle(&mut self) {
-        if let Cx::Des(sim) = self {
-            sim.run();
+        match self {
+            Cx::Des(sim) => {
+                sim.run();
+            }
+            Cx::Threaded(r) => {
+                while r.step() {}
+            }
         }
     }
 }
 
 /// The uniform TransferEngine interface (paper Fig 2), dyn-safe so
-/// scenario code can hold `&dyn TransferEngine` regardless of runtime.
+/// scenario code can hold `&dyn TransferEngine` (or
+/// `Rc<dyn TransferEngine>` for long-lived state machines) regardless
+/// of runtime.
 pub trait TransferEngine {
     /// Which runtime backs this engine.
     fn runtime_kind(&self) -> RuntimeKind;
@@ -233,6 +389,11 @@ pub trait TransferEngine {
     /// allocation fused in).
     fn alloc_mr(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc);
 
+    /// Allocate + register an **unbacked** (timing-only) region; see
+    /// [`crate::fabric::mem::DmaBuf::unbacked`]. Production-scale
+    /// scenarios use these to avoid allocating gigabytes.
+    fn alloc_mr_unbacked(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc);
+
     /// Register an existing buffer on `gpu`, one rkey per NIC.
     fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc);
 
@@ -241,7 +402,7 @@ pub trait TransferEngine {
     fn submit_send(&self, cx: &mut Cx, gpu: u8, addr: &NetAddr, msg: &[u8], on_done: Notify);
 
     /// Post a rotating pool of `cnt` receive buffers of `len` bytes.
-    fn submit_recvs(&self, cx: &mut Cx, gpu: u8, len: usize, cnt: usize, cb: RecvHandler);
+    fn submit_recvs(&self, cx: &mut Cx, gpu: u8, len: usize, cnt: usize, on_msg: OnRecv);
 
     /// Contiguous one-sided write, sharded across NICs when large and
     /// imm-less.
@@ -272,6 +433,11 @@ pub trait TransferEngine {
     /// The peer list behind a group handle.
     fn peer_group(&self, group: PeerGroupHandle) -> Option<Vec<NetAddr>>;
 
+    /// Release a peer group's registry entry. Returns true when the
+    /// handle was registered. Long-lived engines must free
+    /// request-scoped groups or the registry grows without bound.
+    fn remove_peer_group(&self, group: PeerGroupHandle) -> bool;
+
     /// Scatter slices of `src` to many peers; one WR per destination.
     fn submit_scatter(
         &self,
@@ -295,9 +461,9 @@ pub trait TransferEngine {
         on_done: Notify,
     );
 
-    /// Notify `cb` once `imm` has been received `count` times on
+    /// Notify `on` once `imm` has been received `count` times on
     /// `gpu`'s group.
-    fn expect_imm_count(&self, cx: &mut Cx, gpu: u8, imm: u32, count: u32, cb: ImmHandler);
+    fn expect_imm_count(&self, cx: &mut Cx, gpu: u8, imm: u32, count: u32, on: Notify);
 
     /// Poll the current counter value for `imm`.
     fn imm_value(&self, gpu: u8, imm: u32) -> u32;
@@ -305,9 +471,9 @@ pub trait TransferEngine {
     /// Release counter state for `imm`.
     fn free_imm(&self, gpu: u8, imm: u32);
 
-    /// Allocate a UVM watcher; `cb(old, new)` fires when the engine
-    /// observes a changed value.
-    fn alloc_uvm_watcher(&self, cb: WatchHandler) -> UvmWatcher;
+    /// Allocate a UVM watcher; `on` fires with `(old, new)` when the
+    /// engine observes a changed value.
+    fn alloc_uvm_watcher(&self, on: OnWatch) -> UvmWatcher;
 
     // -- wire bridge (descriptor exchange over SEND/RECV) -------------
 
@@ -339,6 +505,7 @@ enum ClusterInner {
     Threaded {
         fabric: LocalFabric,
         engines: Vec<ThreadedEngine>,
+        reactor: Reactor,
     },
 }
 
@@ -355,18 +522,34 @@ impl Cluster {
     /// profile for multi-NIC groups and CX-7 for single-NIC ones; the
     /// threaded variant runs SRD semantics (reliable, unordered).
     pub fn new(kind: RuntimeKind, nodes: u16, gpus: u8, nics_per_gpu: u8, seed: u64) -> Self {
+        let nic = if nics_per_gpu > 1 {
+            NicProfile::efa()
+        } else {
+            NicProfile::connectx7()
+        };
+        Self::new_with(kind, nodes, gpus, nics_per_gpu, seed, nic, GpuProfile::h100())
+    }
+
+    /// [`Cluster::new`] with explicit NIC and GPU profiles — how the
+    /// app harnesses build their paper-testbed clusters (H200+EFA,
+    /// H100+CX-7, ...). Profiles only shape DES timing; the threaded
+    /// variant runs the profile's transport semantics.
+    pub fn new_with(
+        kind: RuntimeKind,
+        nodes: u16,
+        gpus: u8,
+        nics_per_gpu: u8,
+        seed: u64,
+        nic: NicProfile,
+        gpu_profile: GpuProfile,
+    ) -> Self {
         let inner = match kind {
             RuntimeKind::Des => {
                 let net = SimNet::new(seed);
                 for node in 0..nodes {
                     for gpu in 0..gpus {
-                        for nic in 0..nics_per_gpu {
-                            let profile = if nics_per_gpu > 1 {
-                                NicProfile::efa()
-                            } else {
-                                NicProfile::connectx7()
-                            };
-                            net.add_nic(NicAddr { node, gpu, nic }, profile);
+                        for x in 0..nics_per_gpu {
+                            net.add_nic(NicAddr { node, gpu, nic: x }, nic.clone());
                         }
                     }
                 }
@@ -377,7 +560,7 @@ impl Cluster {
                             node,
                             gpus,
                             nics_per_gpu,
-                            GpuProfile::h100(),
+                            gpu_profile.clone(),
                             EngineCosts::default(),
                             seed ^ (node as u64),
                         )
@@ -390,11 +573,15 @@ impl Cluster {
                 }
             }
             RuntimeKind::Threaded => {
-                let fabric = LocalFabric::new(TransportKind::Srd, seed);
+                let fabric = LocalFabric::new(nic.transport, seed);
                 let engines = (0..nodes)
                     .map(|node| ThreadedEngine::new(&fabric, node, gpus, nics_per_gpu))
                     .collect();
-                ClusterInner::Threaded { fabric, engines }
+                ClusterInner::Threaded {
+                    fabric,
+                    engines,
+                    reactor: Reactor::new(),
+                }
             }
         };
         Cluster { inner }
@@ -417,6 +604,15 @@ impl Cluster {
         }
     }
 
+    /// Node `node`'s concrete DES engine, when on the DES runtime
+    /// (trace sinks, unbacked-region helpers in benches).
+    pub fn des_engine(&self, node: usize) -> Option<Engine> {
+        match &self.inner {
+            ClusterInner::Des { engines, .. } => engines.get(node).cloned(),
+            ClusterInner::Threaded { .. } => None,
+        }
+    }
+
     /// Borrow the execution context plus the engines as trait objects.
     pub fn parts(&mut self) -> (Cx<'_>, Vec<&dyn TransferEngine>) {
         match &mut self.inner {
@@ -424,16 +620,37 @@ impl Cluster {
                 Cx::Des(sim),
                 engines.iter().map(|e| e as &dyn TransferEngine).collect(),
             ),
-            ClusterInner::Threaded { engines, .. } => (
-                Cx::Threaded,
+            ClusterInner::Threaded {
+                engines, reactor, ..
+            } => (
+                Cx::Threaded(reactor.clone()),
                 engines.iter().map(|e| e as &dyn TransferEngine).collect(),
             ),
         }
     }
 
+    /// The engines as owned, clonable trait handles — what long-lived
+    /// scenario state machines (Prefiller, Decoder, MoeRank, the RL
+    /// pipeline) store.
+    pub fn engines_rc(&self) -> Vec<Rc<dyn TransferEngine>> {
+        match &self.inner {
+            ClusterInner::Des { engines, .. } => engines
+                .iter()
+                .map(|e| Rc::new(e.clone()) as Rc<dyn TransferEngine>)
+                .collect(),
+            ClusterInner::Threaded { engines, .. } => engines
+                .iter()
+                .map(|e| Rc::new(e.clone()) as Rc<dyn TransferEngine>)
+                .collect(),
+        }
+    }
+
     /// Tear the cluster down (joins threads on the threaded runtime).
     pub fn shutdown(self) {
-        if let ClusterInner::Threaded { fabric, engines } = self.inner {
+        if let ClusterInner::Threaded {
+            fabric, engines, ..
+        } = self.inner
+        {
             for e in &engines {
                 e.shutdown();
             }
@@ -495,13 +712,45 @@ mod tests {
     }
 
     #[test]
-    fn peer_groups_resolve_on_both_runtimes() {
+    fn peer_groups_resolve_and_free_on_both_runtimes() {
         run_on_both(3, 1, 1, 9, |_cx, engines| {
             let peers: Vec<NetAddr> =
                 engines[1..].iter().map(|e| e.main_address()).collect();
             let h = engines[0].add_peer_group(peers.clone());
             assert_eq!(engines[0].peer_group(h).unwrap(), peers);
             assert!(engines[0].peer_group(PeerGroupHandle(9999)).is_none());
+            // Freeing retires the registry entry; double-free is
+            // ignored.
+            assert!(engines[0].remove_peer_group(h));
+            assert!(engines[0].peer_group(h).is_none());
+            assert!(!engines[0].remove_peer_group(h));
+        });
+    }
+
+    /// The clock surface of `Cx` behaves identically on both runtimes:
+    /// timers fire in order, including timers armed from inside a
+    /// timer callback (the scenario state-machine pattern).
+    #[test]
+    fn cx_clock_fires_in_order_on_both_runtimes() {
+        run_on_both(1, 1, 1, 4, |cx, _engines| {
+            let log: Rc<std::cell::RefCell<Vec<u64>>> = Rc::default();
+            let l1 = log.clone();
+            let l2 = log.clone();
+            let fired = new_flag();
+            let f = fired.clone();
+            cx.after(200_000, move |cx: &mut Cx| {
+                l2.borrow_mut().push(2);
+                let l3 = l1.clone();
+                let f2 = f.clone();
+                cx.after(100_000, move |_cx: &mut Cx| {
+                    l3.borrow_mut().push(3);
+                    f2.store(true, Ordering::Release);
+                });
+            });
+            let l0 = log.clone();
+            cx.after(50_000, move |_cx: &mut Cx| l0.borrow_mut().push(1));
+            cx.wait(&fired);
+            assert_eq!(*log.borrow(), vec![1, 2, 3], "timers fire in order");
         });
     }
 }

@@ -8,11 +8,11 @@
 //! payloads over NVLink with store/flag synchronization.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::rc::Rc;
 
 use super::profile::GpuProfile;
 use super::topology::DeviceId;
+use crate::engine::model::{ComputeModel, NvlinkModel};
 use crate::sim::time::{Duration, Instant};
 use crate::sim::Sim;
 
@@ -71,17 +71,13 @@ impl UvmWord {
     }
 }
 
-struct GpuState {
-    profile: GpuProfile,
-    /// Per-stream availability (in-order execution within a stream).
-    streams: HashMap<u32, Instant>,
-}
-
-/// One simulated GPU.
+/// One simulated GPU. Timing delegates to the shared
+/// [`crate::engine::model::ComputeModel`] rule, so the DES fabric and
+/// the runtime-neutral scenario layer cannot drift apart.
 #[derive(Clone)]
 pub struct GpuSim {
     id: DeviceId,
-    state: Rc<RefCell<GpuState>>,
+    model: ComputeModel,
 }
 
 impl GpuSim {
@@ -89,10 +85,7 @@ impl GpuSim {
     pub fn new(id: DeviceId, profile: GpuProfile) -> Self {
         GpuSim {
             id,
-            state: Rc::new(RefCell::new(GpuState {
-                profile,
-                streams: HashMap::new(),
-            })),
+            model: ComputeModel::new(profile),
         }
     }
 
@@ -103,7 +96,7 @@ impl GpuSim {
 
     /// Timing profile.
     pub fn profile(&self) -> GpuProfile {
-        self.state.borrow().profile.clone()
+        self.model.profile()
     }
 
     /// Enqueue a kernel of `duration` on `stream`; `on_done(sim, end)`
@@ -119,15 +112,7 @@ impl GpuSim {
         graph_launch: bool,
         on_done: impl FnOnce(&mut Sim, Instant) + 'static,
     ) -> (Instant, Instant) {
-        let (start, end) = {
-            let mut s = self.state.borrow_mut();
-            let launch = if graph_launch { 0 } else { s.profile.launch_ns };
-            let free = s.streams.entry(stream).or_insert(0);
-            let start = (sim.now() + launch).max(*free);
-            let end = start + duration;
-            *free = end;
-            (start, end)
-        };
+        let (start, end) = self.model.reserve(sim.now(), stream, duration, graph_launch);
         sim.at(end, move |s| on_done(s, end));
         (start, end)
     }
@@ -147,7 +132,7 @@ impl GpuSim {
 
     /// Time when `stream` becomes idle.
     pub fn stream_free(&self, stream: u32) -> Instant {
-        *self.state.borrow().streams.get(&stream).unwrap_or(&0)
+        self.model.stream_free(stream)
     }
 }
 
@@ -157,11 +142,11 @@ impl GpuSim {
 /// The paper's kernels push payloads (stores are fire-and-forget) and
 /// synchronize via flags; loads from peers stall. We model the
 /// bandwidth/latency of pushes and expose flag words with the same
-/// visibility rule as UVM (but NVLink latency, not PCIe).
+/// visibility rule as UVM (but NVLink latency, not PCIe). Timing
+/// delegates to the shared [`crate::engine::model::NvlinkModel`] rule.
 #[derive(Clone, Default)]
 pub struct NvlinkFabric {
-    /// (src_gpu, dst_gpu) -> link availability.
-    links: Rc<RefCell<HashMap<(u8, u8), Instant>>>,
+    model: NvlinkModel,
 }
 
 impl NvlinkFabric {
@@ -180,12 +165,7 @@ impl NvlinkFabric {
         dst: u8,
         bytes: u64,
     ) -> Instant {
-        let mut links = self.links.borrow_mut();
-        let free = links.entry((src, dst)).or_insert(0);
-        let start = sim.now().max(*free);
-        let end = start + profile.nvlink_transfer_ns(bytes);
-        *free = end;
-        end
+        self.model.push_at(sim.now(), profile, src, dst, bytes)
     }
 }
 

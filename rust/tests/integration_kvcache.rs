@@ -1,42 +1,49 @@
 //! Integration: the full disaggregated KvCache flow (§4) on backed
 //! buffers — data integrity, cancellation confirmation, heartbeat
-//! failure handling, page-pool hygiene.
+//! failure handling, page-pool hygiene — with the scenario state
+//! machines built through the runtime-neutral compute model (the same
+//! code path the both-runtime parity tests drive).
 
 use fabric_lib::apps::kvcache::{Decoder, Prefiller, ServingWorkload};
-use fabric_lib::engine::api::EngineCosts;
-use fabric_lib::engine::des_engine::Engine;
-use fabric_lib::fabric::gpu::GpuSim;
+use fabric_lib::engine::api::NetAddr;
+use fabric_lib::engine::model::ComputeModel;
+use fabric_lib::engine::traits::{Cluster, Cx, RuntimeKind};
 use fabric_lib::fabric::profile::{GpuProfile, NicProfile};
-use fabric_lib::fabric::nic::NicAddr;
-use fabric_lib::fabric::simnet::SimNet;
-use fabric_lib::fabric::topology::DeviceId;
 use fabric_lib::sim::time::MS;
-use fabric_lib::sim::Sim;
 
-fn setup() -> (Sim, Engine, Engine, Prefiller, Decoder) {
-    let net = SimNet::new(3);
-    for node in 0..2u16 {
-        for nic in 0..2u8 {
-            net.add_nic(NicAddr { node, gpu: 0, nic }, NicProfile::efa());
-        }
-    }
-    let ep = Engine::new(&net, 0, 1, 2, GpuProfile::h200(), EngineCosts::default(), 1);
-    let ed = Engine::new(&net, 1, 1, 2, GpuProfile::h200(), EngineCosts::default(), 2);
-    let gpu = GpuSim::new(DeviceId { node: 0, gpu: 0 }, GpuProfile::h200());
-    let mut sim = Sim::new();
+fn setup() -> (Cluster, Prefiller, Decoder, NetAddr) {
+    let mut cluster = Cluster::new_with(
+        RuntimeKind::Des,
+        2,
+        1,
+        2,
+        3,
+        NicProfile::efa(),
+        GpuProfile::h200(),
+    );
+    let engines = cluster.engines_rc();
     let w = ServingWorkload::tiny();
-    let p = Prefiller::new(&mut sim, &ep, 0, &gpu, w.clone(), 0);
-    let d = Decoder::new(&mut sim, &ed, 0, w);
-    (sim, ep, ed, p, d)
+    let (p, d, prefiller_addr) = {
+        let (mut cx, _) = cluster.parts();
+        let compute = ComputeModel::new(GpuProfile::h200());
+        let p = Prefiller::new(&mut cx, engines[0].clone(), 0, &compute, w.clone(), 0);
+        let d = Decoder::new(&mut cx, engines[1].clone(), 0, w);
+        (p, d, engines[0].group_address(0))
+    };
+    (cluster, p, d, prefiller_addr)
 }
 
 #[test]
 fn end_to_end_request_completes_and_frees_pages() {
-    let (mut sim, ep, _ed, _p, d) = setup();
+    let (mut cluster, _p, d, prefiller) = setup();
     let free0 = d.free_slot_count();
-    let input: Vec<u32> = (0..100).collect();
-    let id = d.submit_request(&mut sim, &ep.group_address(0), input, 3);
-    sim.run();
+    let id = {
+        let (mut cx, _) = cluster.parts();
+        let input: Vec<u32> = (0..100).collect();
+        let id = d.submit_request(&mut cx, &prefiller, input, 3);
+        cx.settle();
+        id
+    };
     let reports = d.reports();
     let reports = reports.borrow();
     assert_eq!(reports.len(), 1);
@@ -50,14 +57,17 @@ fn end_to_end_request_completes_and_frees_pages() {
 
 #[test]
 fn kv_payload_lands_at_allocated_slots() {
-    let (mut sim, ep, _ed, p, d) = setup();
+    let (mut cluster, p, d, prefiller) = setup();
     // Pattern the prefiller's KV source.
     let src = p.kv_src_handle();
     let pat: Vec<u8> = (0..src.buf.len()).map(|i| (i % 251) as u8).collect();
     src.buf.write(0, &pat);
-    let input: Vec<u32> = (0..48).collect(); // 3 pages of 16 tokens
-    d.submit_request(&mut sim, &ep.group_address(0), input, 1);
-    sim.run();
+    {
+        let (mut cx, _) = cluster.parts();
+        let input: Vec<u32> = (0..48).collect(); // 3 pages of 16 tokens
+        d.submit_request(&mut cx, &prefiller, input, 1);
+        cx.settle();
+    }
     // Decoder KV region must contain nonzero data in exactly the
     // regions of 3 pages × 3 layers (tiny layout: 4096B pages).
     let kv = d.kv_handle();
@@ -71,14 +81,18 @@ fn kv_payload_lands_at_allocated_slots() {
 
 #[test]
 fn cancellation_quarantines_pages_until_ack() {
-    let (mut sim, ep, _ed, _p, d) = setup();
+    let (mut cluster, _p, d, prefiller) = setup();
     let free0 = d.free_slot_count();
-    let input: Vec<u32> = (0..64).collect();
-    let id = d.submit_request(&mut sim, &ep.group_address(0), input, 5);
-    // Cancel very early, while transfers are in flight.
-    let d2 = d.clone();
-    sim.after(10_000, move |sim| d2.cancel(sim, id));
-    sim.run();
+    let id = {
+        let (mut cx, _) = cluster.parts();
+        let input: Vec<u32> = (0..64).collect();
+        let id = d.submit_request(&mut cx, &prefiller, input, 5);
+        // Cancel very early, while transfers are in flight.
+        let d2 = d.clone();
+        cx.after(10_000, move |cx: &mut Cx| d2.cancel(cx, id));
+        cx.settle();
+        id
+    };
     use fabric_lib::apps::kvcache::decoder::ReqState;
     assert_eq!(d.req_state(id), Some(ReqState::Cancelled), "ack received");
     assert_eq!(d.free_slot_count(), free0, "pages freed only after ack");
@@ -86,16 +100,21 @@ fn cancellation_quarantines_pages_until_ack() {
 
 #[test]
 fn dead_prefiller_detected_by_heartbeat_timeout() {
-    let (mut sim, ep, _ed, p, d) = setup();
-    p.start_heartbeats(&mut sim, vec![d.address()], 2 * MS);
-    d.start_monitor(&mut sim, 2 * MS);
+    let (mut cluster, p, d, prefiller) = setup();
     let free0 = d.free_slot_count();
-    // Kill the prefiller immediately: the dispatch is never served.
-    p.kill();
-    let input: Vec<u32> = (0..64).collect();
-    let id = d.submit_request(&mut sim, &ep.group_address(0), input, 1);
-    // Run long enough for the 30 ms heartbeat timeout to fire.
-    sim.run_until(200 * MS);
+    let id = {
+        let (mut cx, _) = cluster.parts();
+        p.start_heartbeats(&mut cx, vec![d.address()], 2 * MS);
+        d.start_monitor(&mut cx, 2 * MS);
+        // Kill the prefiller immediately: the dispatch is never served.
+        p.kill();
+        let input: Vec<u32> = (0..64).collect();
+        let id = d.submit_request(&mut cx, &prefiller, input, 1);
+        // Run long enough for the 30 ms heartbeat timeout to fire (the
+        // monitor re-arms forever, so bound the virtual clock).
+        cx.sim().run_until(200 * MS);
+        id
+    };
     use fabric_lib::apps::kvcache::decoder::ReqState;
     assert_eq!(
         d.req_state(id),
@@ -107,11 +126,14 @@ fn dead_prefiller_detected_by_heartbeat_timeout() {
 
 #[test]
 fn many_concurrent_requests() {
-    let (mut sim, ep, _ed, _p, d) = setup();
-    for i in 0..6 {
-        let input: Vec<u32> = (0..32 + i * 16).collect();
-        d.submit_request(&mut sim, &ep.group_address(0), input, 2);
+    let (mut cluster, _p, d, prefiller) = setup();
+    {
+        let (mut cx, _) = cluster.parts();
+        for i in 0..6 {
+            let input: Vec<u32> = (0..32 + i * 16).collect();
+            d.submit_request(&mut cx, &prefiller, input, 2);
+        }
+        cx.settle();
     }
-    sim.run();
     assert_eq!(d.reports().borrow().len(), 6, "all requests served");
 }

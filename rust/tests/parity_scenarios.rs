@@ -1,0 +1,156 @@
+//! Both-runtime parity for the migrated full-model scenarios: the
+//! KvCache Table-3 harness, a MoE decode epoch and the RL weight
+//! pipeline each execute on the DES *and* the threaded runtime through
+//! `TransferEngine` + the compute model, and the parts of their output
+//! that do not depend on the clock — transfer schedules, page/write
+//! counts, model-computed kernel durations, stage cost totals — must
+//! agree exactly.
+//!
+//! (Clock-dependent readings — TTFT, dispatch latency, wall totals —
+//! are virtual nanoseconds on DES and real nanoseconds on the threaded
+//! runtime, so they are intentionally NOT compared.)
+
+use std::rc::Rc;
+
+use fabric_lib::apps::kvcache::{run_table3_row_on, Table3Row};
+use fabric_lib::apps::moe::rank::Strategy;
+use fabric_lib::apps::moe::{run_epoch_on, MoeConfig, MoeLatencies};
+use fabric_lib::apps::rlweights::{run_p2p_transfer_on, RlModelSpec, RlReport};
+use fabric_lib::engine::traits::{Cluster, Cx, RuntimeKind, TransferEngine};
+use fabric_lib::fabric::profile::{GpuProfile, NicProfile};
+
+/// Build a cluster of `nodes`×`gpus`×`nics` on `kind`, hand the
+/// scenario the context + owned engine handles, tear down, return.
+fn on_cluster<T>(
+    kind: RuntimeKind,
+    nodes: u16,
+    gpus: u8,
+    nics: u8,
+    nic: NicProfile,
+    gpu_profile: GpuProfile,
+    scenario: impl FnOnce(&mut Cx, Vec<Rc<dyn TransferEngine>>) -> T,
+) -> T {
+    let mut cluster = Cluster::new_with(kind, nodes, gpus, nics, 0x9A417, nic, gpu_profile);
+    let engines = cluster.engines_rc();
+    let out = {
+        let (mut cx, _) = cluster.parts();
+        let out = scenario(&mut cx, engines);
+        cx.settle();
+        out
+    };
+    cluster.shutdown();
+    out
+}
+
+fn table3_on(kind: RuntimeKind) -> Table3Row {
+    on_cluster(
+        kind,
+        2,
+        1,
+        2,
+        NicProfile::efa(),
+        GpuProfile::h200(),
+        |cx, engines| {
+            run_table3_row_on(
+                cx,
+                engines[0].clone(),
+                engines[1].clone(),
+                GpuProfile::h200(),
+                4096,
+            )
+        },
+    )
+}
+
+#[test]
+fn table3_schedule_parity_des_vs_threaded() {
+    let des = table3_on(RuntimeKind::Des);
+    let thr = table3_on(RuntimeKind::Threaded);
+    // The transfer schedule is clock-independent: same chunking, same
+    // page counts, same number of paged WRITEs issued.
+    assert_eq!(des.steps, thr.steps);
+    assert_eq!(des.pages, thr.pages);
+    assert_eq!(des.writes, thr.writes, "same WRITE schedule on both runtimes");
+    // Kernel durations come from the workload model, not the clock.
+    assert_eq!(des.per_layer_compute_ms, thr.per_layer_compute_ms);
+    // Both runtimes actually ran the scenario to completion.
+    assert!(des.ttft_disagg_ms > 0.0 && thr.ttft_disagg_ms > 0.0);
+}
+
+fn moe_epoch_on(kind: RuntimeKind) -> MoeLatencies {
+    let cfg = MoeConfig::tiny();
+    let nodes = cfg.ranks.div_ceil(cfg.gpus_per_node) as u16;
+    on_cluster(
+        kind,
+        nodes,
+        cfg.gpus_per_node as u8,
+        1,
+        NicProfile::connectx7(),
+        GpuProfile::h100(),
+        move |cx, engines| {
+            run_epoch_on(cx, &engines, &cfg, Strategy::ours(), GpuProfile::h100(), 2)
+        },
+    )
+}
+
+#[test]
+fn moe_epoch_parity_des_vs_threaded() {
+    let mut des = moe_epoch_on(RuntimeKind::Des);
+    let mut thr = moe_epoch_on(RuntimeKind::Threaded);
+    // Every rank finished every iteration on both runtimes.
+    assert_eq!(des.dispatch.len(), thr.dispatch.len());
+    assert_eq!(des.combine.len(), thr.combine.len());
+    // Kernel durations are computed from the (identical) routing plan
+    // and the HBM roofline — clock-independent, so the distributions
+    // must match exactly. Compare order-insensitive readings.
+    for (a, b) in [
+        (&mut des.d_send_kernel, &mut thr.d_send_kernel),
+        (&mut des.d_recv_kernel, &mut thr.d_recv_kernel),
+        (&mut des.c_send_kernel, &mut thr.c_send_kernel),
+        (&mut des.c_recv_kernel, &mut thr.c_recv_kernel),
+    ] {
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.min(), b.min());
+        assert_eq!(a.max(), b.max());
+        assert_eq!(a.percentile(50.0), b.percentile(50.0));
+    }
+}
+
+fn rl_pipeline_on(kind: RuntimeKind) -> RlReport {
+    let spec = RlModelSpec::tiny();
+    on_cluster(
+        kind,
+        2, // 1 training node + 1 inference node (8 GPUs each)
+        8,
+        1,
+        NicProfile::connectx7(),
+        GpuProfile::h200(),
+        move |cx, engines| {
+            let (t_engines, r_engines) = engines.split_at(1);
+            run_p2p_transfer_on(cx, t_engines, r_engines, &spec, 1.0)
+        },
+    )
+}
+
+#[test]
+fn rl_pipeline_parity_des_vs_threaded() {
+    let des = rl_pipeline_on(RuntimeKind::Des);
+    let thr = rl_pipeline_on(RuntimeKind::Threaded);
+    // Same routing → same bytes on the wire.
+    assert_eq!(des.bytes, thr.bytes);
+    // Stage cost totals are model-computed sums over the same static
+    // schedule — clock-independent.
+    let (a, b) = (des.rank0, thr.rank0);
+    assert_eq!(a.h2d, b.h2d);
+    assert_eq!(a.h2d_calls, b.h2d_calls);
+    assert_eq!(a.full_tensor, b.full_tensor);
+    assert_eq!(a.full_tensor_calls, b.full_tensor_calls);
+    assert_eq!(a.fuse, b.fuse);
+    assert_eq!(a.fuse_calls, b.fuse_calls);
+    assert_eq!(a.quantize, b.quantize);
+    assert_eq!(a.quantize_calls, b.quantize_calls);
+    assert_eq!(a.rdma_submit, b.rdma_submit);
+    assert_eq!(a.rdma_calls, b.rdma_calls);
+    // Both runtimes completed the whole pipeline.
+    assert!(des.total_ms > 0.0 && thr.total_ms > 0.0);
+}
