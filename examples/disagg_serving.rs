@@ -88,21 +88,25 @@ fn main() -> fabric_lib::util::err::Result<()> {
         });
         // Layer-by-layer paged writes (layer l's K+V as 2 pages).
         for l in 0..m.n_layers as u32 {
-            prefiller.submit_paged_writes(
-                page_bytes,
-                (&kv_src_h, &Pages::contiguous(2 * l, 2, page_bytes)),
-                (&kv_dst_d, &Pages::contiguous(2 * l, 2, page_bytes)),
+            prefiller
+                .submit_paged_writes(
+                    page_bytes,
+                    (&kv_src_h, &Pages::contiguous(2 * l, 2, page_bytes)),
+                    (&kv_dst_d, &Pages::contiguous(2 * l, 2, page_bytes)),
+                    Some(imm),
+                    OnDoneT::Noop,
+                )
+                .expect("KV paged write");
+        }
+        prefiller
+            .submit_single_write(
+                (&tail_src_h, 0),
+                (m.vocab * 4) as u64,
+                (&tail_dst_d, 0),
                 Some(imm),
                 OnDoneT::Noop,
-            );
-        }
-        prefiller.submit_single_write(
-            (&tail_src_h, 0),
-            (m.vocab * 4) as u64,
-            (&tail_dst_d, 0),
-            Some(imm),
-            OnDoneT::Noop,
-        );
+            )
+            .expect("tail write");
         let deadline = Instant::now() + Duration::from_secs(30);
         while !transferred.load(Ordering::Acquire) {
             assert!(Instant::now() < deadline, "transfer timeout");

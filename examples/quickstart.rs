@@ -60,14 +60,16 @@ fn demo(cx: &mut Cx, node_a: &dyn TransferEngine, node_b: &dyn TransferEngine) {
     // just a count (paper §3.3).
     let received = expect_flag(node_b, cx, 0, 42, 1);
     let sent = new_flag();
-    node_a.submit_single_write(
-        cx,
-        (&src, 0),
-        22,
-        (&dst_desc, 128),
-        Some(42),
-        Notify::Flag(sent.clone()),
-    );
+    node_a
+        .submit_single_write(
+            cx,
+            (&src, 0),
+            22,
+            (&dst_desc, 128),
+            Some(42),
+            Notify::Flag(sent.clone()),
+        )
+        .expect("§3.2-clean write");
     cx.wait(&sent);
     cx.wait(&received);
     let mut out = vec![0u8; 22];
@@ -84,7 +86,10 @@ fn demo(cx: &mut Cx, node_a: &dyn TransferEngine, node_b: &dyn TransferEngine) {
         0,
         256,
         8,
-        OnRecv::handler(move |msg: &[u8]| {
+        // `OnRecv::checked` surfaces recv-pool truncation as an Err
+        // instead of silently delivering a clipped payload.
+        OnRecv::checked(move |msg| {
+            let msg = msg.expect("recv pool sized for the largest RPC");
             println!("B got RPC: {:?}", String::from_utf8_lossy(msg));
             if sn.fetch_add(1, Ordering::Relaxed) + 1 == 3 {
                 rp.store(true, Ordering::Release);
@@ -109,14 +114,16 @@ fn demo(cx: &mut Cx, node_a: &dyn TransferEngine, node_b: &dyn TransferEngine) {
     let pat: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
     big_src.buf.write(0, &pat);
     let done = new_flag();
-    node_a.submit_single_write(
-        cx,
-        (&big_src, 0),
-        len as u64,
-        (&big_dst_d, 0),
-        None,
-        Notify::Flag(done.clone()),
-    );
+    node_a
+        .submit_single_write(
+            cx,
+            (&big_src, 0),
+            len as u64,
+            (&big_dst_d, 0),
+            None,
+            Notify::Flag(done.clone()),
+        )
+        .expect("§3.2-clean write");
     cx.wait(&done);
     assert_eq!(big_dst_h.buf.to_vec(), pat);
     println!(
@@ -124,12 +131,28 @@ fn demo(cx: &mut Cx, node_a: &dyn TransferEngine, node_b: &dyn TransferEngine) {
         node_a.nics_per_gpu()
     );
 
-    // --- Scatter + barrier through a peer group ------------------------
+    // --- Templated barrier through a bound peer group ------------------
+    // Long-lived peer relationships pre-template their WRs (§3.5):
+    // `bind_peer_group_mrs` resolves rkeys/routes once, and templated
+    // submissions patch only per-call fields. A freed handle errors
+    // instead of reusing stale state.
     let group = node_a.add_peer_group(vec![node_b.main_address()]);
+    node_a
+        .bind_peer_group_mrs(0, group, &[dst_desc])
+        .expect("bind decoder region");
     let barried = expect_flag(node_b, cx, 0, 77, 1);
-    node_a.submit_barrier(cx, 0, Some(group), &[dst_desc], 77, Notify::Noop);
+    node_a
+        .submit_barrier_templated(cx, group, 77, Notify::Noop)
+        .expect("templated barrier");
     cx.wait(&barried);
-    println!("peer-group barrier delivered (imm-only write)");
+    println!("peer-group barrier delivered (templated imm-only write)");
+    assert!(node_a.remove_peer_group(group));
+    assert!(
+        node_a
+            .submit_barrier_templated(cx, group, 77, Notify::Noop)
+            .is_err(),
+        "stale handles fail loudly"
+    );
 }
 
 fn main() {

@@ -54,14 +54,16 @@ fn single_write_gbps(bed: &mut Bed, msg: u64, reps: u32) -> f64 {
     let t0 = bed.sim.now();
     for _ in 0..reps {
         let done = Rc::new(Cell::new(false));
-        bed.a.submit_single_write(
-            &mut bed.sim,
-            (&src, 0),
-            msg,
-            (&dst, 0),
-            None,
-            OnDone::Flag(done.clone()),
-        );
+        bed.a
+            .submit_single_write(
+                &mut bed.sim,
+                (&src, 0),
+                msg,
+                (&dst, 0),
+                None,
+                OnDone::Flag(done.clone()),
+            )
+            .unwrap();
         bed.sim.run();
         assert!(done.get());
     }
@@ -76,14 +78,16 @@ fn paged_write_rate(bed: &mut Bed, page: u64, pages: u32) -> (f64, f64) {
     let idx: Vec<u32> = (0..pages).collect();
     let t0 = bed.sim.now();
     let done = Rc::new(Cell::new(false));
-    bed.a.submit_paged_writes(
-        &mut bed.sim,
-        page,
-        (&src, &Pages { indices: idx.clone(), stride: page, offset: 0 }),
-        (&dst, &Pages { indices: idx, stride: page, offset: 0 }),
-        None,
-        OnDone::Flag(done.clone()),
-    );
+    bed.a
+        .submit_paged_writes(
+            &mut bed.sim,
+            page,
+            (&src, &Pages { indices: idx.clone(), stride: page, offset: 0 }),
+            (&dst, &Pages { indices: idx, stride: page, offset: 0 }),
+            None,
+            OnDone::Flag(done.clone()),
+        )
+        .unwrap();
     bed.sim.run();
     assert!(done.get());
     let dt = bed.sim.now() - t0;

@@ -147,8 +147,12 @@ pub fn run_table3_row(seq: u32) -> Table3Row {
 /// the prefiller writes `n_pages` KV pages into decoder-chosen page
 /// slots with per-page WRITEIMMs plus one tail write, and the decoder
 /// is notified by a single `expect_imm_count(imm, n_pages + 1)` — no
-/// ordering assumptions anywhere. Asserts payload placement and that
-/// the satisfied expectation retired its counter slot.
+/// ordering assumptions anywhere. The prefiller↔decoder pair is a
+/// long-lived peer relationship, so the transfer runs on the §3.5
+/// templated path: the decoder's KV and tail regions are bound to a
+/// peer group once, and each push patches only page indices/offsets.
+/// Asserts payload placement and that the satisfied expectation
+/// retired its counter slot.
 pub fn run_generic_kv_push(
     cx: &mut Cx,
     prefiller: &dyn TransferEngine,
@@ -169,6 +173,19 @@ pub fn run_generic_kv_push(
     }
     tail_src.buf.write(0, b"tail context");
 
+    // Session setup, once per prefiller↔decoder pair: register the
+    // decoder twice (KV region, tail region) and pre-template both
+    // destinations' routes. Templates bind one region per peer ENTRY,
+    // so multi-region peers repeat; this group never runs a templated
+    // barrier (which fans out per entry), the KV protocol gates on
+    // write immediates instead.
+    let group = prefiller.add_peer_group(vec![decoder.main_address(), decoder.main_address()]);
+    prefiller
+        .bind_peer_group_mrs(0, group, &[kv_dst_d.clone(), tail_dst_d.clone()])
+        .expect("decoder regions bind");
+    const KV: usize = 0; // peer index of the KV region
+    const TAIL: usize = 1; // peer index of the tail region
+
     // Decoder side: allocate page slots (reversed here, as a stand-in
     // for scheduler-chosen placement) and register the expectation
     // BEFORE any data can arrive.
@@ -177,16 +194,22 @@ pub fn run_generic_kv_push(
     let transferred = expect_flag(decoder, cx, 0, imm, n_pages + 1);
 
     // Prefiller side: paged KV writes + the tail write, all carrying
-    // the request's immediate.
-    prefiller.submit_paged_writes(
-        cx,
-        page_len,
-        (&kv_src, &Pages::contiguous(0, n_pages, page_len)),
-        (&kv_dst_d, &Pages { indices: dst_slots.clone(), stride: page_len, offset: 0 }),
-        Some(imm),
-        Notify::Noop,
-    );
-    prefiller.submit_single_write(cx, (&tail_src, 0), 12, (&tail_dst_d, 0), Some(imm), Notify::Noop);
+    // the request's immediate, all patched into the bound template.
+    prefiller
+        .submit_paged_writes_templated(
+            cx,
+            page_len,
+            (&kv_src, &Pages::contiguous(0, n_pages, page_len)),
+            group,
+            KV,
+            &Pages { indices: dst_slots.clone(), stride: page_len, offset: 0 },
+            Some(imm),
+            Notify::Noop,
+        )
+        .expect("templated paged push");
+    prefiller
+        .submit_single_write_templated(cx, (&tail_src, 0), 12, group, TAIL, 0, Some(imm), Notify::Noop)
+        .expect("templated tail write");
     cx.wait(&transferred);
 
     // Payload placement: source page i landed in slot dst_slots[i].
@@ -203,6 +226,12 @@ pub fn run_generic_kv_push(
     // The satisfied expectation retired the counter slot (free_imm
     // semantics): a fresh request may reuse the immediate.
     assert_eq!(decoder.imm_value(0, imm), 0);
+    // Session teardown frees the group; the stale handle then fails
+    // loudly instead of reusing freed template state.
+    assert!(prefiller.remove_peer_group(group));
+    assert!(prefiller
+        .submit_single_write_templated(cx, (&tail_src, 0), 1, group, TAIL, 0, None, Notify::Noop)
+        .is_err());
 }
 
 #[cfg(test)]

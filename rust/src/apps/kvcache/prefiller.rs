@@ -326,7 +326,8 @@ impl Prefiller {
             ),
             Some(imm),
             Notify::Cont(on_done),
-        );
+        )
+        .expect("KV paged write");
         if is_last {
             self.send_tail(cx, req_id);
         }
@@ -356,14 +357,16 @@ impl Prefiller {
         };
         let this = self.clone();
         let on_done = cx.cont(move |cx: &mut Cx, _f: Fired| this.on_write_done(cx, req_id, 1));
-        engine.submit_single_write(
-            cx,
-            (&tail_src, 0),
-            tail_bytes,
-            (&desc, off),
-            Some(imm),
-            Notify::Cont(on_done),
-        );
+        engine
+            .submit_single_write(
+                cx,
+                (&tail_src, 0),
+                tail_bytes,
+                (&desc, off),
+                Some(imm),
+                Notify::Cont(on_done),
+            )
+            .expect("tail write");
     }
 
     fn on_write_done(&self, cx: &mut Cx, req_id: u64, _wrs: usize) {

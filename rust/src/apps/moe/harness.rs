@@ -22,7 +22,7 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::engine::api::{MrDesc, MrHandle, ScatterDst};
+use crate::engine::api::{MrDesc, MrHandle, TemplatedDst};
 use crate::engine::model::{ComputeModel, NvlinkModel};
 use crate::engine::traits::{
     expect_flag, Cluster, Cx, Notify, RuntimeKind, SharedFlag, TransferEngine,
@@ -215,8 +215,11 @@ pub fn run_epoch_with(
 /// peer through a registered peer group, receivers gate on one
 /// `expect_imm_count` per round, and a handle-based engine barrier
 /// confirms buffer reuse — scatter + barrier + imm counting end to
-/// end on whichever runtime backs `cx`. Peer groups are request-scoped
-/// and freed on exit (`remove_peer_group`), so repeated rounds on a
+/// end on whichever runtime backs `cx`. The all-to-all runs on the
+/// §3.5 templated path: each rank binds its peers' receive regions
+/// once and per-round submissions patch offsets/lengths only. Peer
+/// groups are request-scoped and freed on exit (`remove_peer_group`),
+/// which also invalidates the templates, so repeated rounds on a
 /// long-lived engine don't leak registry entries.
 pub fn run_generic_dispatch_round(
     cx: &mut Cx,
@@ -245,7 +248,8 @@ pub fn run_generic_dispatch_round(
     }
 
     // Dispatch: each rank scatters its token block into its own slot
-    // of every peer's region, through a registered peer group.
+    // of every peer's region, through a peer group bound (templated)
+    // once per round — per-destination submissions are four integers.
     let mut groups = Vec::with_capacity(n);
     for (me, e) in engines.iter().enumerate() {
         let peers = engines
@@ -255,20 +259,27 @@ pub fn run_generic_dispatch_round(
             .map(|(_, p)| p.main_address())
             .collect();
         let group = e.add_peer_group(peers);
-        groups.push(group);
-        let (src, _) = e.alloc_mr(0, slot as usize);
-        src.buf.write(0, &vec![me as u8 + 1; slot as usize]);
-        let dsts: Vec<ScatterDst> = regions
+        let descs: Vec<MrDesc> = regions
             .iter()
             .enumerate()
             .filter(|(d, _)| *d != me)
-            .map(|(_, (_, desc))| ScatterDst {
+            .map(|(_, (_, desc))| desc.clone())
+            .collect();
+        e.bind_peer_group_mrs(0, group, &descs)
+            .expect("peer region bind");
+        groups.push(group);
+        let (src, _) = e.alloc_mr(0, slot as usize);
+        src.buf.write(0, &vec![me as u8 + 1; slot as usize]);
+        let dsts: Vec<TemplatedDst> = (0..n - 1)
+            .map(|peer| TemplatedDst {
+                peer,
                 len: slot,
                 src: 0,
-                dst: (desc.clone(), me as u64 * slot),
+                dst: me as u64 * slot,
             })
             .collect();
-        e.submit_scatter(cx, Some(group), &src, &dsts, Some(IMM_TOKEN), Notify::Noop);
+        e.submit_scatter_templated(cx, &src, group, &dsts, Some(IMM_TOKEN), Notify::Noop)
+            .expect("templated dispatch scatter");
     }
     cx.wait_all(&token_flags);
 
@@ -288,22 +299,25 @@ pub fn run_generic_dispatch_round(
         }
     }
 
-    // Barrier through the same group handles: buffers may be reused.
+    // Barrier through the same templated handles: destinations and
+    // the scratch source live in the template, the call carries only
+    // the immediate.
     for (me, e) in engines.iter().enumerate() {
-        let descs: Vec<MrDesc> = regions
-            .iter()
-            .enumerate()
-            .filter(|(d, _)| *d != me)
-            .map(|(_, (_, d))| d.clone())
-            .collect();
-        e.submit_barrier(cx, 0, Some(groups[me]), &descs, IMM_BARRIER, Notify::Noop);
+        e.submit_barrier_templated(cx, groups[me], IMM_BARRIER, Notify::Noop)
+            .expect("templated barrier");
     }
     cx.wait_all(&barrier_flags);
 
     // Round over: free the request-scoped groups (registry hygiene on
-    // long-lived engines).
+    // long-lived engines). Freeing invalidates the template — a stale
+    // handle errors instead of touching freed state.
     for (me, e) in engines.iter().enumerate() {
         assert!(e.remove_peer_group(groups[me]), "group registered above");
+        assert!(
+            e.submit_barrier_templated(cx, groups[me], IMM_BARRIER, Notify::Noop)
+                .is_err(),
+            "stale handle must error"
+        );
     }
 }
 

@@ -473,23 +473,27 @@ impl MoeRank {
         // Generic-proxy implementations pay extra CPU per WR.
         let this = self.clone();
         cx.after(extra_cpu, move |cx: &mut Cx| {
-            engine.submit_scatter(
-                cx,
-                None,
-                &send_buf,
-                &route_dsts,
-                Some(imm_for(iter, IMM_ROUTE)),
-                Notify::Noop,
-            );
-            if !private_dsts.is_empty() {
-                engine.submit_scatter(
+            engine
+                .submit_scatter(
                     cx,
                     None,
                     &send_buf,
-                    &private_dsts,
-                    Some(imm_for(iter, IMM_TOKEN)),
+                    &route_dsts,
+                    Some(imm_for(iter, IMM_ROUTE)),
                     Notify::Noop,
-                );
+                )
+                .expect("route scatter");
+            if !private_dsts.is_empty() {
+                engine
+                    .submit_scatter(
+                        cx,
+                        None,
+                        &send_buf,
+                        &private_dsts,
+                        Some(imm_for(iter, IMM_TOKEN)),
+                        Notify::Noop,
+                    )
+                    .expect("private-buffer scatter");
             }
             // Non-route-exchange strategies send ALL tokens now,
             // per-token (DeepEP straight from the GPU; pplx through
@@ -541,14 +545,16 @@ impl MoeRank {
         }
         let cpu = per_wr_cpu * writes.len() as u64;
         cx.after(cpu, move |cx: &mut Cx| {
-            engine.submit_scatter(
-                cx,
-                None,
-                &send_buf,
-                &writes,
-                Some(imm_for(iter, IMM_TOKEN)),
-                Notify::Noop,
-            );
+            engine
+                .submit_scatter(
+                    cx,
+                    None,
+                    &send_buf,
+                    &writes,
+                    Some(imm_for(iter, IMM_TOKEN)),
+                    Notify::Noop,
+                )
+                .expect("per-token scatter");
         });
     }
 
@@ -584,14 +590,16 @@ impl MoeRank {
         // Host-side route processing (tens of µs, off the critical
         // path when private buffers hide it — Fig 11).
         cx.after(proc, move |cx: &mut Cx| {
-            engine.submit_scatter(
-                cx,
-                None,
-                &send_buf,
-                &rest_dsts,
-                Some(imm_for(iter, IMM_TOKEN)),
-                Notify::Noop,
-            );
+            engine
+                .submit_scatter(
+                    cx,
+                    None,
+                    &send_buf,
+                    &rest_dsts,
+                    Some(imm_for(iter, IMM_TOKEN)),
+                    Notify::Noop,
+                )
+                .expect("token scatter");
         });
     }
 
@@ -694,14 +702,16 @@ impl MoeRank {
         };
         // Barrier: all incoming writes accounted for; proxies sync so
         // buffers can be reused by combine (§6.2 end).
-        engine.submit_barrier(
-            cx,
-            gpu,
-            None,
-            &barrier_dsts,
-            imm_for(iter, IMM_BARRIER),
-            Notify::Noop,
-        );
+        engine
+            .submit_barrier(
+                cx,
+                gpu,
+                None,
+                &barrier_dsts,
+                imm_for(iter, IMM_BARRIER),
+                Notify::Noop,
+            )
+            .expect("dispatch barrier");
         // Grouped GEMM + shared experts run in the gap.
         let this = self.clone();
         cx.after(gap, move |cx: &mut Cx| this.maybe_start_combine_send(cx));
@@ -823,14 +833,16 @@ impl MoeRank {
         }
         if !dsts.is_empty() {
             cx.after(handoff, move |cx: &mut Cx| {
-                engine.submit_scatter(
-                    cx,
-                    None,
-                    &send_buf,
-                    &dsts,
-                    Some(imm_for(iter, IMM_COMBINE)),
-                    Notify::Noop,
-                );
+                engine
+                    .submit_scatter(
+                        cx,
+                        None,
+                        &send_buf,
+                        &dsts,
+                        Some(imm_for(iter, IMM_COMBINE)),
+                        Notify::Noop,
+                    )
+                    .expect("combine scatter");
             });
         }
         self.maybe_start_combine_recv(cx);

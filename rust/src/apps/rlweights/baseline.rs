@@ -88,6 +88,9 @@ pub fn run_rank0_broadcast(spec: &RlModelSpec, nic: NicProfile, world_scale: u32
 /// peer with a WRITEIMM, each peer gates on `expect_imm_count(_, 1)`
 /// — runs on whichever runtime backs `cx`, unlike the timing-bound
 /// [`run_rank0_broadcast`] which needs the DES collectives model.
+/// The fan-out set is a long-lived peer group, so the writes run on
+/// the §3.5 templated path (peer regions bound once, per-write calls
+/// patch offsets only).
 pub fn run_generic_rank0_fanout(cx: &mut Cx, engines: &[&dyn TransferEngine], bytes: u64) {
     assert!(engines.len() >= 2);
     const IMM_WEIGHTS: u32 = 0x510;
@@ -103,13 +106,30 @@ pub fn run_generic_rank0_fanout(cx: &mut Cx, engines: &[&dyn TransferEngine], by
         flags.push(expect_flag(*peer, cx, 0, IMM_WEIGHTS, 1));
         regions.push((h, d));
     }
-    for (_, d) in &regions {
-        rank0.submit_single_write(cx, (&src, 0), bytes, (d, 0), Some(IMM_WEIGHTS), Notify::Noop);
+    let group = rank0.add_peer_group(engines[1..].iter().map(|e| e.main_address()).collect());
+    let descs: Vec<_> = regions.iter().map(|(_, d)| d.clone()).collect();
+    rank0
+        .bind_peer_group_mrs(0, group, &descs)
+        .expect("weight region bind");
+    for peer in 0..regions.len() {
+        rank0
+            .submit_single_write_templated(
+                cx,
+                (&src, 0),
+                bytes,
+                group,
+                peer,
+                0,
+                Some(IMM_WEIGHTS),
+                Notify::Noop,
+            )
+            .expect("templated weight write");
     }
     cx.wait_all(&flags);
     for (i, (h, _)) in regions.iter().enumerate() {
         assert_eq!(h.buf.to_vec(), fill, "peer {i} weight payload corrupted");
     }
+    assert!(rank0.remove_peer_group(group), "group registered above");
 }
 
 #[cfg(test)]

@@ -227,14 +227,16 @@ impl RankSim {
                 let on_done = cx.cont(move |cx: &mut Cx, _f: Fired| {
                     t2.on_write_done(cx, release);
                 });
-                engine.submit_single_write(
-                    cx,
-                    (&src, 0),
-                    len,
-                    (&desc, off),
-                    None,
-                    Notify::Cont(on_done),
-                );
+                engine
+                    .submit_single_write(
+                        cx,
+                        (&src, 0),
+                        len,
+                        (&desc, off),
+                        None,
+                        Notify::Cont(on_done),
+                    )
+                    .expect("replica weight write");
             });
         }
     }
@@ -440,7 +442,9 @@ pub fn run_p2p_transfer(spec: &RlModelSpec, nic: NicProfile, scale: f64) -> RlRe
 /// slot of every replica's weight region (WRITEIMM per write), waits
 /// for its own write completions, then arrives at the engine-level
 /// barrier; each replica gates on count-based expectations for both.
-/// Runs on whichever runtime backs `cx`. Peer groups are
+/// Runs on whichever runtime backs `cx`. Each trainer's replica set is
+/// a peer group bound (templated, §3.5) once per sync: shard writes
+/// and the barrier all patch the pre-resolved routes. Groups are
 /// request-scoped and freed on exit (`remove_peer_group`), so repeated
 /// syncs on a long-lived engine don't leak registry entries.
 pub fn run_generic_weight_sync(
@@ -465,24 +469,38 @@ pub fn run_generic_weight_sync(
         barrier_flags.push(expect_flag(*r, cx, 0, IMM_BARRIER, t as u32));
         regions.push((h, d));
     }
+    let replica_descs: Vec<MrDesc> = regions.iter().map(|(_, d)| d.clone()).collect();
 
-    // Stage 3 (per trainer): one write per replica.
+    // Per-trainer peer group over the replica set, bound once: the
+    // per-shard writes and the barrier below patch this template.
+    let mut groups = Vec::with_capacity(t);
+    for tr in trainers {
+        let group = tr.add_peer_group(replicas.iter().map(|r| r.main_address()).collect());
+        tr.bind_peer_group_mrs(0, group, &replica_descs)
+            .expect("replica region bind");
+        groups.push(group);
+    }
+
+    // Stage 3 (per trainer): one templated write per replica.
     let mut write_flags: Vec<SharedFlag> = Vec::new();
     let mut srcs = Vec::new();
     for (ti, tr) in trainers.iter().enumerate() {
         let (src, _) = tr.alloc_mr(0, shard_bytes as usize);
         src.buf
             .write(0, &vec![ti as u8 + 1; shard_bytes as usize]);
-        for (_, d) in &regions {
+        for ri in 0..regions.len() {
             let f = new_flag();
-            tr.submit_single_write(
+            tr.submit_single_write_templated(
                 cx,
                 (&src, 0),
                 shard_bytes,
-                (d, ti as u64 * shard_bytes),
+                groups[ti],
+                ri,
+                ti as u64 * shard_bytes,
                 Some(IMM_SHARD),
                 Notify::Flag(f.clone()),
-            );
+            )
+            .expect("templated shard write");
             write_flags.push(f);
         }
         srcs.push(src);
@@ -491,19 +509,21 @@ pub fn run_generic_weight_sync(
     // writes completed (the engine guarantees no ordering, so the
     // barrier immediate must not overtake an unposted write).
     cx.wait_all(&write_flags);
-    let replica_descs: Vec<MrDesc> = regions.iter().map(|(_, d)| d.clone()).collect();
-    let mut groups = Vec::with_capacity(t);
-    for tr in trainers {
-        let group = tr.add_peer_group(replicas.iter().map(|r| r.main_address()).collect());
-        tr.submit_barrier(cx, 0, Some(group), &replica_descs, IMM_BARRIER, Notify::Noop);
-        groups.push(group);
+    for (tr, group) in trainers.iter().zip(&groups) {
+        tr.submit_barrier_templated(cx, *group, IMM_BARRIER, Notify::Noop)
+            .expect("templated barrier");
     }
     cx.wait_all(&shard_flags);
     cx.wait_all(&barrier_flags);
     // Sync over: free the request-scoped groups (registry hygiene on
-    // long-lived engines).
+    // long-lived engines); the freed handles error on reuse.
     for (tr, group) in trainers.iter().zip(groups) {
         assert!(tr.remove_peer_group(group), "group registered above");
+        assert!(
+            tr.submit_barrier_templated(cx, group, IMM_BARRIER, Notify::Noop)
+                .is_err(),
+            "stale handle must error"
+        );
     }
 
     // Every replica holds every trainer's shard in the right slot.

@@ -80,7 +80,8 @@ impl CollectiveWorld {
                         }
                     }
                 })),
-            );
+            )
+            .expect("gather write");
         }
     }
 
@@ -152,7 +153,8 @@ impl CollectiveWorld {
                         forward(ctx2.clone(), sim, hop + 1, chunk_idx);
                     }
                 })),
-            );
+            )
+            .expect("ring forward write");
         }
         for c in 0..chunks {
             forward(ctx.clone(), sim, 0, c);

@@ -65,12 +65,13 @@ impl MrDesc {
     /// The rkey to use when targeting this region through remote NIC
     /// index `i`.
     ///
-    /// Wraps modulo the rkey count as a release-mode defensive
-    /// fallback only: §3.2 requires local and remote domain groups to
-    /// run the same NIC count, and every submission path asserts that
-    /// invariant in debug builds (`engine::core::checked_fanout`)
-    /// before indexes reach this method — a silent wrap here would
-    /// otherwise misroute shards of a fanout-mismatched transfer.
+    /// Wraps modulo the rkey count as a defensive fallback only: §3.2
+    /// requires local and remote domain groups to run the same NIC
+    /// count, and every submission path rejects a mismatch with a real
+    /// error — release builds included
+    /// (`engine::core::checked_fanout`) — before indexes reach this
+    /// method; a silent wrap here would otherwise misroute shards of a
+    /// fanout-mismatched transfer.
     pub fn rkey_for(&self, i: usize) -> (NicAddr, u64) {
         self.rkeys[i % self.rkeys.len()]
     }
@@ -135,8 +136,31 @@ pub struct ScatterDst {
 }
 
 /// Handle to a pre-registered peer group for scatter/barrier.
+///
+/// Handle ids are allocated monotonically and never recycled, so a
+/// handle that survived `remove_peer_group` can never alias a newer
+/// group (no ABA): templated submissions on a freed handle fail with a
+/// deterministic error instead of reusing freed state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PeerGroupHandle(pub u64);
+
+/// One destination of a *templated* scatter (paper §3.5): only the
+/// per-call fields. The peer's descriptor, resolved rkeys and NIC
+/// pairing were captured once at `bind_peer_group_mrs` time, so a
+/// submission patches offsets/lengths into the pre-built template
+/// instead of carrying (and re-resolving) a cloned [`MrDesc`] per
+/// destination like [`ScatterDst`] does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TemplatedDst {
+    /// Index into the group's peer list (bind order).
+    pub peer: usize,
+    /// Bytes to write.
+    pub len: u64,
+    /// Source offset within the source region.
+    pub src: u64,
+    /// Destination offset within the peer's bound region.
+    pub dst: u64,
+}
 
 /// Calibrated CPU costs of the engine hot path, charged on the worker
 /// in simulated time. Calibration targets: paper Table 8 (µs from
@@ -240,8 +264,8 @@ mod tests {
         };
         assert_eq!(d.rkey_for(0), (nic(2, 0), 11));
         assert_eq!(d.rkey_for(1), (nic(2, 1), 22));
-        // Release-mode defensive wrap only; submission paths
-        // debug_assert the §3.2 equal-NIC-count invariant first (see
+        // Defensive wrap only; submission paths error on the §3.2
+        // equal-NIC-count violation first, in every build profile (see
         // engine::core tests for the mismatch path).
         assert_eq!(d.rkey_for(2), (nic(2, 0), 11));
         assert_eq!(d.owner().fanout(), 2);

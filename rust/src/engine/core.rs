@@ -6,7 +6,9 @@
 //! Everything that does not depend on *how* work requests are driven
 //! (virtual clock vs. pinned threads) lives here exactly once:
 //!
-//! * [`PeerGroups`] — registry behind `add_peer_group` handles;
+//! * [`PeerGroups`] — registry behind `add_peer_group` handles, now
+//!   owning the §3.5 pre-templated submission state
+//!   ([`GroupTemplate`]) built once at `bind_peer_group_mrs` time;
 //! * [`Rotation`] — per-group NIC rotation cursor for load balancing;
 //! * [`TransferTable`] — transfer-id allocation plus WR→transfer
 //!   completion accounting (generic over the runtime's `OnDone`);
@@ -17,22 +19,33 @@
 //! * [`route_single_write`] / [`route_paged_writes`] /
 //!   [`route_scatter`] / [`route_barrier`] — the bridge from the Fig-2
 //!   API calls to [`super::sharding`] plans, with each planned write
-//!   paired to its destination `(NIC, rkey)`.
+//!   paired to its destination `(NIC, rkey)`;
+//! * [`route_single_write_templated`] / [`route_paged_writes_templated`]
+//!   / [`route_scatter_templated`] / [`route_barrier_templated`] — the
+//!   §3.5 fast path over a bound [`GroupTemplate`]: per-call fields
+//!   (offsets, lengths, imm) are patched into pre-resolved
+//!   `(NIC, rkey)` routes, with zero per-call descriptor traversal or
+//!   rkey resolution.
 //!
 //! The routing bridge also enforces the §3.2 equal-NIC-count
-//! invariant: in debug builds, submitting a transfer whose remote
-//! descriptor carries a different rkey count than the local domain
-//! group's fanout panics instead of silently wrapping rkey selection
-//! modulo the remote count (the `MrDesc::rkey_for` footgun).
+//! invariant: submitting a transfer whose remote descriptor carries a
+//! different rkey count than the local domain group's fanout returns
+//! an [`Error`] — in release builds too — instead of silently wrapping
+//! rkey selection modulo the remote count (the `MrDesc::rkey_for`
+//! footgun). Templated submissions run the same check once, at bind
+//! time.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
-use super::api::{MrDesc, NetAddr, Pages, PeerGroupHandle, ScatterDst};
+use super::api::{MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst};
 use super::imm_counter::{ImmCounter, ImmEvent};
 use super::sharding::{plan_paged_writes, plan_scatter, plan_single_write, PlannedWrite};
+use crate::bail;
 use crate::fabric::mem::DmaBuf;
 use crate::fabric::nic::NicAddr;
+use crate::util::err::{Error, Result};
 use crate::util::fasthash::FastMap;
 
 /// A planned write routed to its destination: the NIC-indexed plan
@@ -44,13 +57,50 @@ pub type RoutedWrite = (PlannedWrite, (NicAddr, u64));
 // Peer groups
 // ---------------------------------------------------------------------
 
+/// Pre-resolved per-peer destination state (§3.5): everything about a
+/// WR targeting this peer that does not change between submissions.
+pub struct PeerTemplate {
+    /// Remote region base VA (WRs add the per-call offset).
+    pub base: u64,
+    /// Remote region length, bounding per-call offsets.
+    pub len: u64,
+    /// Resolved `(remote NIC, rkey)` per local NIC index — the §3.2
+    /// NIC-`i`↔NIC-`i` pairing computed once at bind time.
+    pub routes: Vec<(NicAddr, u64)>,
+}
+
+/// The pre-templated submission state a peer group owns once
+/// `bind_peer_group_mrs` ran (paper §3.5: long-lived peer groups
+/// pre-template work requests and reuse them per submission).
+/// Submissions through the template only patch per-call fields
+/// (offsets, lengths, imm) — no descriptor traversal, no rkey
+/// resolution, no fanout re-validation on the hot path.
+pub struct GroupTemplate {
+    /// Local NIC fanout captured (and §3.2-validated) at bind time.
+    pub fanout: usize,
+    /// Per-group NIC rotation cursor: successive templated submissions
+    /// start on successive NICs.
+    pub rotation: Rotation,
+    /// Pre-registered 1-byte scratch source for immediate-only
+    /// barriers (the untemplated path allocates one per call).
+    pub scratch: MrHandle,
+    /// One template per peer, in registration order.
+    pub peers: Vec<PeerTemplate>,
+}
+
+struct GroupEntry {
+    peers: Vec<NetAddr>,
+    template: Option<Arc<GroupTemplate>>,
+}
+
 /// Registry behind `add_peer_group` handles (paper Fig 2): a group is
 /// a pre-registered peer list that scatter/barrier may target without
-/// re-validating addresses per call.
+/// re-validating addresses per call — and, once bound to its peers'
+/// memory regions, the owner of the §3.5 [`GroupTemplate`] fast path.
 #[derive(Default)]
 pub struct PeerGroups {
     next: u64,
-    groups: HashMap<u64, Vec<NetAddr>>,
+    groups: HashMap<u64, GroupEntry>,
 }
 
 impl PeerGroups {
@@ -66,19 +116,126 @@ impl PeerGroups {
     pub fn add(&mut self, addrs: Vec<NetAddr>) -> PeerGroupHandle {
         let id = self.next;
         self.next += 1;
-        self.groups.insert(id, addrs);
+        self.groups.insert(
+            id,
+            GroupEntry {
+                peers: addrs,
+                template: None,
+            },
+        );
         PeerGroupHandle(id)
     }
 
     /// Look up a group's peer list.
     pub fn get(&self, h: PeerGroupHandle) -> Option<&[NetAddr]> {
-        self.groups.get(&h.0).map(|v| v.as_slice())
+        self.groups.get(&h.0).map(|e| e.peers.as_slice())
     }
 
     /// Release a group's registry entry, returning its peer list.
-    /// Handles are never reused, so a freed handle stays invalid.
+    /// Handles are never reused, so a freed handle stays invalid —
+    /// and its template (if bound) is invalidated with it: later
+    /// templated submissions error instead of reusing freed state.
     pub fn remove(&mut self, h: PeerGroupHandle) -> Option<Vec<NetAddr>> {
-        self.groups.remove(&h.0)
+        self.groups.remove(&h.0).map(|e| e.peers)
+    }
+
+    /// Validation + route-resolution half of the §3.5 bind: resolves
+    /// every `(local NIC → remote NIC, rkey)` route once, checking the
+    /// §3.2 equal-NIC-count invariant and that each descriptor is
+    /// owned by the peer it was registered for. Engines call this
+    /// BEFORE allocating the barrier scratch region so a failed bind
+    /// allocates (and leaks) nothing.
+    pub fn prepare_bind(
+        &self,
+        h: PeerGroupHandle,
+        local_fanout: usize,
+        descs: &[MrDesc],
+    ) -> Result<Vec<PeerTemplate>> {
+        let entry = match self.groups.get(&h.0) {
+            Some(e) => e,
+            None => bail!("bind_peer_group_mrs on stale or unknown {h:?}"),
+        };
+        if descs.len() != entry.peers.len() {
+            bail!(
+                "bind_peer_group_mrs: {} descriptors for the {} peers of {h:?}",
+                descs.len(),
+                entry.peers.len()
+            );
+        }
+        let mut peers = Vec::with_capacity(descs.len());
+        for (i, (desc, addr)) in descs.iter().zip(&entry.peers).enumerate() {
+            let fanout = checked_fanout(local_fanout, desc)
+                .map_err(|e| Error::msg(format!("peer {i} of {h:?}: {e}")))?;
+            let routes: Vec<(NicAddr, u64)> = (0..fanout).map(|n| desc.rkey_for(n)).collect();
+            for (nic, &(remote, _)) in routes.iter().enumerate() {
+                if addr.nics.get(nic) != Some(&remote) {
+                    bail!(
+                        "bind_peer_group_mrs: descriptor {i} of {h:?} is owned \
+                         by {remote}, not the registered peer {addr}"
+                    );
+                }
+            }
+            peers.push(PeerTemplate {
+                base: desc.ptr,
+                len: desc.len,
+                routes,
+            });
+        }
+        Ok(peers)
+    }
+
+    /// Installation half of the bind: stores the prepared templates
+    /// plus the scratch region under the (re-checked) handle.
+    /// Rebinding replaces the previous template.
+    pub fn install_template(
+        &mut self,
+        h: PeerGroupHandle,
+        local_fanout: usize,
+        peers: Vec<PeerTemplate>,
+        scratch: MrHandle,
+    ) -> Result<()> {
+        let entry = match self.groups.get_mut(&h.0) {
+            Some(e) => e,
+            None => bail!("bind_peer_group_mrs on stale or unknown {h:?}"),
+        };
+        entry.template = Some(Arc::new(GroupTemplate {
+            fanout: local_fanout.max(1),
+            rotation: Rotation::new(),
+            scratch,
+            peers,
+        }));
+        Ok(())
+    }
+
+    /// [`PeerGroups::prepare_bind`] + [`PeerGroups::install_template`]
+    /// in one step, for callers whose scratch region costs nothing to
+    /// pre-build (tests). Engines use the two halves so a failed bind
+    /// never allocates the scratch.
+    pub fn bind_template(
+        &mut self,
+        h: PeerGroupHandle,
+        local_fanout: usize,
+        descs: &[MrDesc],
+        scratch: MrHandle,
+    ) -> Result<()> {
+        let peers = self.prepare_bind(h, local_fanout, descs)?;
+        self.install_template(h, local_fanout, peers, scratch)
+    }
+
+    /// The group's bound template, or an error naming what is wrong
+    /// (stale/unknown handle vs. never bound) — the gate every
+    /// templated submission passes through.
+    pub fn template(&self, h: PeerGroupHandle) -> Result<Arc<GroupTemplate>> {
+        match self.groups.get(&h.0) {
+            None => bail!(
+                "templated submission on stale or unknown {h:?} \
+                 (removed handles are never reused)"
+            ),
+            Some(e) => match &e.template {
+                Some(t) => Ok(t.clone()),
+                None => bail!("{h:?} has no bound template (call bind_peer_group_mrs first)"),
+            },
+        }
     }
 
     /// Registered group count (leak checks in tests).
@@ -131,6 +288,17 @@ impl Rotation {
     /// Advance and return the new cursor value.
     pub fn bump(&self) -> usize {
         self.0.fetch_add(1, Ordering::Relaxed).wrapping_add(1)
+    }
+
+    /// The value the next [`Rotation::bump`] will return, without
+    /// advancing. Submission paths route with this and commit the
+    /// bump only after routing succeeded, so a rejected submission
+    /// (§3.2 mismatch, template bounds) does not shift the NIC
+    /// assignment of later transfers. Concurrent submitters may
+    /// observe the same value in the peek→bump window; the cursor is
+    /// a load-balancing hint, so that race is benign.
+    pub fn next(&self) -> usize {
+        self.0.load(Ordering::Relaxed).wrapping_add(1)
     }
 }
 
@@ -333,17 +501,19 @@ impl RecvPool {
 
 /// Effective fanout for a transfer against `desc`, enforcing the §3.2
 /// invariant that local and remote domain groups run the same NIC
-/// count. Debug builds panic on a mismatch; release builds fall back
-/// to the defensive minimum so rkey selection never wraps.
-fn checked_fanout(local_fanout: usize, desc: &MrDesc) -> usize {
-    debug_assert_eq!(
-        desc.rkeys.len(),
-        local_fanout,
-        "§3.2 equal-NIC-count invariant: remote descriptor has {} rkeys \
-         but the local domain group has {local_fanout} NICs",
-        desc.rkeys.len()
-    );
-    local_fanout.min(desc.rkeys.len()).max(1)
+/// count. A mismatch is a real error in every build profile: silently
+/// wrapping rkey selection modulo the remote count would misroute
+/// shards (the `MrDesc::rkey_for` footgun), so release builds must
+/// reject it just as loudly as debug builds.
+fn checked_fanout(local_fanout: usize, desc: &MrDesc) -> Result<usize> {
+    if desc.rkeys.len() != local_fanout {
+        bail!(
+            "§3.2 equal-NIC-count invariant: remote descriptor has {} rkeys \
+             but the local domain group has {local_fanout} NICs",
+            desc.rkeys.len()
+        );
+    }
+    Ok(local_fanout.max(1))
 }
 
 /// Route a contiguous one-sided write (paper `submit_single_write`):
@@ -356,11 +526,11 @@ pub fn route_single_write(
     len: u64,
     dst: (&MrDesc, u64),
     imm: Option<u32>,
-) -> Vec<RoutedWrite> {
+) -> Result<Vec<RoutedWrite>> {
     let (desc, dst_off) = dst;
-    let fanout = checked_fanout(local_fanout, desc);
+    let fanout = checked_fanout(local_fanout, desc)?;
     let plans = plan_single_write(len, src_off, desc.ptr + dst_off, imm, fanout, rotation);
-    pair_with_rkeys(plans, desc)
+    Ok(pair_with_rkeys(plans, desc))
 }
 
 /// Route paged writes (paper `submit_paged_writes`): source page `i`
@@ -373,15 +543,15 @@ pub fn route_paged_writes(
     src_pages: &Pages,
     dst: (&MrDesc, &Pages),
     imm: Option<u32>,
-) -> Vec<RoutedWrite> {
+) -> Result<Vec<RoutedWrite>> {
     let (desc, dst_pages) = dst;
-    let fanout = checked_fanout(local_fanout, desc);
+    let fanout = checked_fanout(local_fanout, desc)?;
     let src_offs: Vec<u64> = (0..src_pages.len()).map(|i| src_pages.at(i)).collect();
     let dst_vas: Vec<u64> = (0..dst_pages.len())
         .map(|i| desc.ptr + dst_pages.at(i))
         .collect();
     let plans = plan_paged_writes(page_len, &src_offs, &dst_vas, imm, fanout, rotation);
-    pair_with_rkeys(plans, desc)
+    Ok(pair_with_rkeys(plans, desc))
 }
 
 /// Route a scatter (paper `submit_scatter`): one WR per destination,
@@ -392,7 +562,7 @@ pub fn route_scatter(
     rotation: usize,
     dsts: &[ScatterDst],
     imm: Option<u32>,
-) -> Vec<RoutedWrite> {
+) -> Result<Vec<RoutedWrite>> {
     let entries: Vec<(u64, u64, u64)> = dsts
         .iter()
         .map(|d| (d.len, d.src, d.dst.0.ptr + d.dst.1))
@@ -402,9 +572,9 @@ pub fn route_scatter(
         .into_iter()
         .zip(dsts.iter())
         .map(|(p, d)| {
-            let fanout = checked_fanout(local_fanout, &d.dst.0);
-            let rk = d.dst.0.rkey_for(p.nic % fanout.max(1));
-            (p, rk)
+            let fanout = checked_fanout(local_fanout, &d.dst.0)?;
+            let rk = d.dst.0.rkey_for(p.nic % fanout);
+            Ok((p, rk))
         })
         .collect()
 }
@@ -416,16 +586,16 @@ pub fn route_barrier(
     rotation: usize,
     dsts: &[MrDesc],
     imm: u32,
-) -> Vec<RoutedWrite> {
+) -> Result<Vec<RoutedWrite>> {
     let entries: Vec<(u64, u64, u64)> = dsts.iter().map(|d| (0u64, 0u64, d.ptr)).collect();
     let plans = plan_scatter(&entries, Some(imm), local_fanout.max(1), rotation);
     plans
         .into_iter()
         .zip(dsts.iter())
         .map(|(p, d)| {
-            let fanout = checked_fanout(local_fanout, d);
-            let rk = d.rkey_for(p.nic % fanout.max(1));
-            (p, rk)
+            let fanout = checked_fanout(local_fanout, d)?;
+            let rk = d.rkey_for(p.nic % fanout);
+            Ok((p, rk))
         })
         .collect()
 }
@@ -436,6 +606,134 @@ fn pair_with_rkeys(plans: Vec<PlannedWrite>, desc: &MrDesc) -> Vec<RoutedWrite> 
         .map(|p| {
             let rk = desc.rkey_for(p.nic);
             (p, rk)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Templated routing (§3.5 fast path)
+// ---------------------------------------------------------------------
+
+/// Look up a peer's template, bounds-checking the patched byte range
+/// against the region captured at bind time.
+fn peer_slot(t: &GroupTemplate, peer: usize, dst_off: u64, len: u64) -> Result<&PeerTemplate> {
+    let slot = match t.peers.get(peer) {
+        Some(s) => s,
+        None => bail!(
+            "templated submission to peer {peer} of a {}-peer group",
+            t.peers.len()
+        ),
+    };
+    if dst_off.saturating_add(len) > slot.len {
+        bail!(
+            "templated write of {len} B at offset {dst_off} overruns \
+             peer {peer}'s {} B bound region",
+            slot.len
+        );
+    }
+    Ok(slot)
+}
+
+/// Templated contiguous write to one peer of the group: the sharding
+/// plan still depends on the per-call length, but every shard's
+/// `(NIC, rkey)` route comes straight from the template — no
+/// descriptor traversal, no rkey resolution, no fanout re-check.
+pub fn route_single_write_templated(
+    t: &GroupTemplate,
+    rotation: usize,
+    peer: usize,
+    src_off: u64,
+    len: u64,
+    dst_off: u64,
+    imm: Option<u32>,
+) -> Result<Vec<RoutedWrite>> {
+    let slot = peer_slot(t, peer, dst_off, len)?;
+    let plans = plan_single_write(len, src_off, slot.base + dst_off, imm, t.fanout, rotation);
+    Ok(plans
+        .into_iter()
+        .map(|p| {
+            let rk = slot.routes[p.nic];
+            (p, rk)
+        })
+        .collect())
+}
+
+/// Templated paged writes to one peer of the group: source page `i`
+/// lands at the peer's destination page `i`, routes patched from the
+/// template.
+pub fn route_paged_writes_templated(
+    t: &GroupTemplate,
+    rotation: usize,
+    peer: usize,
+    page_len: u64,
+    src_pages: &Pages,
+    dst_pages: &Pages,
+    imm: Option<u32>,
+) -> Result<Vec<RoutedWrite>> {
+    let max_off = (0..dst_pages.len()).map(|i| dst_pages.at(i)).max();
+    let slot = peer_slot(t, peer, max_off.unwrap_or(0), page_len)?;
+    let src_offs: Vec<u64> = (0..src_pages.len()).map(|i| src_pages.at(i)).collect();
+    let dst_vas: Vec<u64> = (0..dst_pages.len())
+        .map(|i| slot.base + dst_pages.at(i))
+        .collect();
+    let plans = plan_paged_writes(page_len, &src_offs, &dst_vas, imm, t.fanout, rotation);
+    Ok(plans
+        .into_iter()
+        .map(|p| {
+            let rk = slot.routes[p.nic];
+            (p, rk)
+        })
+        .collect())
+}
+
+/// Templated scatter: one WR per [`TemplatedDst`], NIC-rotated per
+/// entry, each patched into its peer's pre-resolved route. This is the
+/// §3.5 hot path proper — per call the engine touches four integers
+/// per destination instead of a cloned descriptor.
+pub fn route_scatter_templated(
+    t: &GroupTemplate,
+    rotation: usize,
+    dsts: &[TemplatedDst],
+    imm: Option<u32>,
+) -> Result<Vec<RoutedWrite>> {
+    dsts.iter()
+        .enumerate()
+        .map(|(i, d)| {
+            let slot = peer_slot(t, d.peer, d.dst, d.len)?;
+            let nic = (rotation + i) % t.fanout;
+            Ok((
+                PlannedWrite {
+                    nic,
+                    src_off: d.src,
+                    dst_va: slot.base + d.dst,
+                    len: d.len,
+                    imm,
+                },
+                slot.routes[nic],
+            ))
+        })
+        .collect()
+}
+
+/// Templated barrier: one zero-length immediate-only write per peer of
+/// the group — destinations, routes and the scratch source all come
+/// from the template; the call patches in nothing but the immediate.
+pub fn route_barrier_templated(t: &GroupTemplate, rotation: usize, imm: u32) -> Vec<RoutedWrite> {
+    t.peers
+        .iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            let nic = (rotation + i) % t.fanout;
+            (
+                PlannedWrite {
+                    nic,
+                    src_off: 0,
+                    dst_va: slot.base,
+                    len: 0,
+                    imm: Some(imm),
+                },
+                slot.routes[nic],
+            )
         })
         .collect()
 }
@@ -480,7 +778,10 @@ mod tests {
     #[test]
     fn rotation_advances_monotonically() {
         let r = Rotation::new();
+        assert_eq!(r.next(), 1, "peek does not advance");
+        assert_eq!(r.next(), 1);
         assert_eq!(r.bump(), 1);
+        assert_eq!(r.next(), 2);
         assert_eq!(r.bump(), 2);
         assert_eq!(r.bump(), 3);
     }
@@ -545,7 +846,7 @@ mod tests {
     #[test]
     fn single_write_routes_to_paired_rkeys() {
         let d = desc(2, 2);
-        let routed = route_single_write(2, 0, 0, 4 * SPLIT_THRESHOLD, (&d, 0), None);
+        let routed = route_single_write(2, 0, 0, 4 * SPLIT_THRESHOLD, (&d, 0), None).unwrap();
         assert_eq!(routed.len(), 2, "large imm-less write shards");
         for (p, (dst_nic, rkey)) in &routed {
             assert_eq!(*dst_nic, nic(2, p.nic as u8), "NIC i pairs with remote NIC i");
@@ -557,7 +858,7 @@ mod tests {
     fn paged_writes_route_one_wr_per_page() {
         let d = desc(3, 2);
         let pages = Pages::contiguous(0, 6, 4096);
-        let routed = route_paged_writes(2, 1, 4096, &pages, (&d, &pages), Some(9));
+        let routed = route_paged_writes(2, 1, 4096, &pages, (&d, &pages), Some(9)).unwrap();
         assert_eq!(routed.len(), 6, "imm count preserved: one WR per page");
         assert!(routed.iter().all(|(p, _)| p.imm == Some(9)));
     }
@@ -569,33 +870,179 @@ mod tests {
             .iter()
             .map(|d| ScatterDst { len: 128, src: 0, dst: (d.clone(), 0) })
             .collect();
-        let routed = route_scatter(1, 0, &dsts, Some(4));
+        let routed = route_scatter(1, 0, &dsts, Some(4)).unwrap();
         assert_eq!(routed.len(), 3);
         for (i, (_, (dst_nic, _))) in routed.iter().enumerate() {
             assert_eq!(dst_nic.node, (i + 1) as u16);
         }
-        let routed = route_barrier(1, 0, &peers, 5);
+        let routed = route_barrier(1, 0, &peers, 5).unwrap();
         assert_eq!(routed.len(), 3);
         assert!(routed.iter().all(|(p, _)| p.len == 0 && p.imm == Some(5)));
     }
 
-    #[cfg(debug_assertions)]
+    // The §3.2 equal-NIC-count check is a REAL error path now, not a
+    // debug_assert: these tests hold in release builds too.
     #[test]
-    #[should_panic(expected = "equal-NIC-count invariant")]
-    fn fanout_mismatch_panics_in_debug() {
+    fn fanout_mismatch_errors_in_every_build() {
         // Local group has 2 NICs, remote descriptor only 1 rkey: the
         // old code silently wrapped `rkey_for` modulo 1; now the
-        // submission asserts (§3.2).
+        // submission errors (§3.2).
         let d = desc(2, 1);
-        route_single_write(2, 0, 0, 4096, (&d, 0), None);
+        let err = route_single_write(2, 0, 0, 4096, (&d, 0), None).unwrap_err();
+        assert!(err.to_string().contains("equal-NIC-count invariant"), "{err}");
     }
 
-    #[cfg(debug_assertions)]
     #[test]
-    #[should_panic(expected = "equal-NIC-count invariant")]
-    fn scatter_fanout_mismatch_panics_in_debug() {
+    fn scatter_fanout_mismatch_errors_in_every_build() {
         let d = desc(2, 3);
         let dsts = vec![ScatterDst { len: 8, src: 0, dst: (d, 0) }];
-        route_scatter(2, 0, &dsts, None);
+        let err = route_scatter(2, 0, &dsts, None).unwrap_err();
+        assert!(err.to_string().contains("equal-NIC-count invariant"), "{err}");
+    }
+
+    // ---- §3.5 templates -------------------------------------------
+
+    fn scratch_handle() -> MrHandle {
+        MrHandle {
+            buf: DmaBuf::new(0x8000, 1),
+            device: crate::fabric::topology::DeviceId { node: 0, gpu: 0 },
+        }
+    }
+
+    fn bound_group(
+        fanout: usize,
+        descs: &[MrDesc],
+    ) -> (PeerGroups, PeerGroupHandle, Arc<GroupTemplate>) {
+        let mut pg = PeerGroups::new();
+        let h = pg.add(descs.iter().map(|d| d.owner()).collect());
+        pg.bind_template(h, fanout, descs, scratch_handle()).unwrap();
+        let t = pg.template(h).unwrap();
+        (pg, h, t)
+    }
+
+    #[test]
+    fn bind_resolves_routes_once() {
+        let descs: Vec<MrDesc> = (1..4).map(|n| desc(n, 2)).collect();
+        let (_pg, _h, t) = bound_group(2, &descs);
+        assert_eq!(t.fanout, 2);
+        assert_eq!(t.peers.len(), 3);
+        for (i, slot) in t.peers.iter().enumerate() {
+            assert_eq!(slot.base, descs[i].ptr);
+            assert_eq!(slot.len, descs[i].len);
+            assert_eq!(slot.routes, descs[i].rkeys, "routes resolved at bind time");
+        }
+    }
+
+    #[test]
+    fn bind_rejects_mismatched_fanout_and_wrong_owner() {
+        let mut pg = PeerGroups::new();
+        let d = desc(1, 1);
+        let h = pg.add(vec![d.owner()]);
+        // §3.2 violation caught once, at bind time.
+        let err = pg.bind_template(h, 2, &[d.clone()], scratch_handle()).unwrap_err();
+        assert!(err.to_string().contains("equal-NIC-count"), "{err}");
+        // Descriptor owned by somebody other than the registered peer.
+        let foreign = desc(9, 1);
+        let err = pg.bind_template(h, 1, &[foreign], scratch_handle()).unwrap_err();
+        assert!(err.to_string().contains("owned"), "{err}");
+        // Descriptor count must match the peer count.
+        let err = pg
+            .bind_template(h, 1, &[d.clone(), d.clone()], scratch_handle())
+            .unwrap_err();
+        assert!(err.to_string().contains("2 descriptors"), "{err}");
+        // A good bind still works afterwards.
+        pg.bind_template(h, 1, &[d], scratch_handle()).unwrap();
+        assert!(pg.template(h).is_ok());
+    }
+
+    #[test]
+    fn removed_handle_fails_template_lookup_and_rebind() {
+        let d = desc(1, 1);
+        let (mut pg, h, _t) = bound_group(1, std::slice::from_ref(&d));
+        pg.remove(h).unwrap();
+        let err = pg.template(h).unwrap_err();
+        assert!(err.to_string().contains("stale or unknown"), "{err}");
+        let err = pg.bind_template(h, 1, &[d], scratch_handle()).unwrap_err();
+        assert!(err.to_string().contains("stale or unknown"), "{err}");
+        // Unbound (but live) groups are a distinct error.
+        let h2 = pg.add(vec![]);
+        let err = pg.template(h2).unwrap_err();
+        assert!(err.to_string().contains("no bound template"), "{err}");
+    }
+
+    /// Acceptance gate: for every rotation, the templated routes must
+    /// produce byte-identical WR streams to the untemplated bridge.
+    #[test]
+    fn templated_routes_match_untemplated_wr_streams() {
+        let descs: Vec<MrDesc> = (1..5).map(|n| desc(n, 2)).collect();
+        let (_pg, _h, t) = bound_group(2, &descs);
+        for rot in 0..5 {
+            // Scatter.
+            let sdsts: Vec<ScatterDst> = descs
+                .iter()
+                .enumerate()
+                .map(|(i, d)| ScatterDst {
+                    len: 64 + i as u64,
+                    src: i as u64 * 256,
+                    dst: (d.clone(), i as u64 * 512),
+                })
+                .collect();
+            let tdsts: Vec<TemplatedDst> = sdsts
+                .iter()
+                .enumerate()
+                .map(|(i, d)| TemplatedDst {
+                    peer: i,
+                    len: d.len,
+                    src: d.src,
+                    dst: d.dst.1,
+                })
+                .collect();
+            assert_eq!(
+                route_scatter(2, rot, &sdsts, Some(7)).unwrap(),
+                route_scatter_templated(&t, rot, &tdsts, Some(7)).unwrap(),
+                "scatter WR stream diverged at rotation {rot}"
+            );
+            // Barrier.
+            assert_eq!(
+                route_barrier(2, rot, &descs, 9).unwrap(),
+                route_barrier_templated(&t, rot, 9),
+                "barrier WR stream diverged at rotation {rot}"
+            );
+            // Single write, small (one WR) and large (sharded).
+            for len in [4096, 4 * SPLIT_THRESHOLD] {
+                assert_eq!(
+                    route_single_write(2, rot, 128, len, (&descs[1], 64), None).unwrap(),
+                    route_single_write_templated(&t, rot, 1, 128, len, 64, None).unwrap(),
+                    "single-write WR stream diverged at rotation {rot} len {len}"
+                );
+            }
+            // Paged writes.
+            let pages = Pages::contiguous(0, 6, 4096);
+            assert_eq!(
+                route_paged_writes(2, rot, 4096, &pages, (&descs[2], &pages), Some(3)).unwrap(),
+                route_paged_writes_templated(&t, rot, 2, 4096, &pages, &pages, Some(3)).unwrap(),
+                "paged WR stream diverged at rotation {rot}"
+            );
+        }
+    }
+
+    #[test]
+    fn templated_routes_bounds_check_against_bound_region() {
+        let d = desc(1, 1);
+        let (_pg, _h, t) = bound_group(1, std::slice::from_ref(&d));
+        // Out-of-range peer index.
+        let err = route_single_write_templated(&t, 0, 5, 0, 64, 0, None).unwrap_err();
+        assert!(err.to_string().contains("peer 5"), "{err}");
+        // Write overrunning the region captured at bind time.
+        let err = route_single_write_templated(&t, 0, 0, 0, 64, d.len, None).unwrap_err();
+        assert!(err.to_string().contains("overruns"), "{err}");
+        let err = route_scatter_templated(
+            &t,
+            0,
+            &[TemplatedDst { peer: 0, len: 128, src: 0, dst: d.len - 64 }],
+            None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("overruns"), "{err}");
     }
 }

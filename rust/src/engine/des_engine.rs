@@ -26,10 +26,13 @@ use std::collections::VecDeque;
 
 use std::rc::Rc;
 
-use super::api::{EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
+use super::api::{
+    EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
+};
 use super::core::{
-    route_barrier, route_paged_writes, route_scatter, route_single_write, ImmTable, PeerGroups,
-    RecvPool, Rotation, RoutedWrite, TransferTable,
+    route_barrier, route_barrier_templated, route_paged_writes, route_paged_writes_templated,
+    route_scatter, route_scatter_templated, route_single_write, route_single_write_templated,
+    ImmTable, PeerGroups, RecvPool, Rotation, RoutedWrite, TransferTable,
 };
 use super::model::Fired;
 use super::traits::{Cx, Notify, OnRecv, OnWatch, RuntimeKind, TransferEngine, UvmWatcher};
@@ -40,6 +43,7 @@ use crate::fabric::simnet::SimNet;
 use crate::fabric::topology::DeviceId;
 use crate::sim::time::Instant;
 use crate::sim::{Rng, Sim};
+use crate::util::err::Result;
 
 /// Sender-side completion notification (paper Fig 2 `OnDone`).
 pub enum OnDone {
@@ -79,8 +83,9 @@ struct Group {
     pending: Vec<VecDeque<WorkRequest>>,
     /// Posted receive buffers by wr_id.
     recvs: RecvPool,
-    /// Receive callback (rotating pool semantics).
-    recv_cb: Option<Rc<dyn Fn(&mut Sim, &[u8])>>,
+    /// Receive callback (rotating pool semantics); takes the message
+    /// as an owned [`Fired`] so the Cont flavor pays no extra copy.
+    recv_cb: Option<Rc<dyn Fn(&mut Sim, Fired)>>,
     /// IMMCOUNTER slots + expectation waiters.
     imm: ImmTable<Box<dyn FnOnce(&mut Sim)>>,
 }
@@ -298,15 +303,16 @@ impl Engine {
     }
 
     /// Post a rotating pool of `cnt` receive buffers of `len` bytes on
-    /// `gpu`'s first NIC; `cb` runs for each received message and the
-    /// buffer is re-posted afterwards.
+    /// `gpu`'s first NIC; `cb` runs for each received message (owned
+    /// [`Fired`], bytes in `data`) and the buffer is re-posted
+    /// afterwards.
     pub fn submit_recvs(
         &self,
         sim: &mut Sim,
         gpu: u8,
         len: usize,
         cnt: usize,
-        cb: impl Fn(&mut Sim, &[u8]) + 'static,
+        cb: impl Fn(&mut Sim, Fired) + 'static,
     ) {
         let (bufs, local) = {
             let mut s = self.state.borrow_mut();
@@ -353,18 +359,20 @@ impl Engine {
         dst: (&MrDesc, u64),
         imm: Option<u32>,
         on_done: OnDone,
-    ) {
+    ) -> Result<()> {
         let (handle, src_off) = src;
         let gpu = handle.device.gpu;
         let routed = route_single_write(
             self.fanout(gpu),
-            self.bump_rotation(gpu),
+            self.peek_rotation(gpu),
             src_off,
             len,
             dst,
             imm,
-        );
+        )?;
+        self.bump_rotation(gpu);
         self.execute_routed(sim, handle, routed, on_done);
+        Ok(())
     }
 
     /// Paged writes: page `i` of `src_pages` (each `page_len` bytes)
@@ -377,18 +385,20 @@ impl Engine {
         dst: (&MrDesc, &Pages),
         imm: Option<u32>,
         on_done: OnDone,
-    ) {
+    ) -> Result<()> {
         let (handle, src_pages) = src;
         let gpu = handle.device.gpu;
         let routed = route_paged_writes(
             self.fanout(gpu),
-            self.bump_rotation(gpu),
+            self.peek_rotation(gpu),
             page_len,
             src_pages,
             dst,
             imm,
-        );
+        )?;
+        self.bump_rotation(gpu);
         self.execute_routed(sim, handle, routed, on_done);
+        Ok(())
     }
 
     /// Register a peer group for scatter/barrier fast paths.
@@ -402,13 +412,37 @@ impl Engine {
     }
 
     /// Release a peer group's registry entry (paper §3.5: long-lived
-    /// engines must free request-scoped groups).
+    /// engines must free request-scoped groups). Invalidates the
+    /// group's template: later templated submissions error.
     pub fn remove_peer_group(&self, group: PeerGroupHandle) -> bool {
         self.state.borrow_mut().peer_groups.remove(group).is_some()
     }
 
+    /// Pre-template the group's work requests on `gpu`'s domain group
+    /// (§3.5): resolves rkeys/NIC pairing once and registers the
+    /// barrier scratch region, so `submit_*_templated` calls patch
+    /// per-call fields only.
+    pub fn bind_peer_group_mrs(
+        &self,
+        gpu: u8,
+        group: PeerGroupHandle,
+        descs: &[MrDesc],
+    ) -> Result<()> {
+        // Validate + resolve routes BEFORE allocating the scratch
+        // region: a failed bind (stale handle, bad descriptors) must
+        // not leak a registered MR.
+        let fanout = self.fanout(gpu);
+        let peers = self.state.borrow().peer_groups.prepare_bind(group, fanout, descs)?;
+        let (scratch, _) = self.alloc_mr(gpu, 1);
+        self.state
+            .borrow_mut()
+            .peer_groups
+            .install_template(group, fanout, peers, scratch)
+    }
+
     /// Scatter slices of `src` to many peers (paper `submit_scatter`).
-    /// One WR per destination; `imm` delivered to each peer.
+    /// One WR per destination; `imm` delivered to each peer. The
+    /// untemplated (ad-hoc) path: descriptors resolved per call.
     pub fn submit_scatter(
         &self,
         sim: &mut Sim,
@@ -417,21 +451,23 @@ impl Engine {
         dsts: &[ScatterDst],
         imm: Option<u32>,
         on_done: OnDone,
-    ) {
+    ) -> Result<()> {
         // Scatter fans out to *different* peers: plan per peer, NIC
-        // rotated per entry; WR templating pre-fills common fields
-        // (modeled inside the cost constants).
+        // rotated per entry.
         let gpu = src.device.gpu;
         if cfg!(debug_assertions) {
             self.state.borrow().peer_groups.check(group, dsts.len());
         }
-        let routed = route_scatter(self.fanout(gpu), self.bump_rotation(gpu), dsts, imm);
+        let routed = route_scatter(self.fanout(gpu), self.peek_rotation(gpu), dsts, imm)?;
+        self.bump_rotation(gpu);
         self.execute_routed(sim, src, routed, on_done);
+        Ok(())
     }
 
     /// Immediate-only notification to every peer (paper
     /// `submit_barrier`). `dsts` supplies a valid descriptor per peer
-    /// — required on EFA even for zero-sized writes (§3.5).
+    /// — required on EFA even for zero-sized writes (§3.5). The
+    /// untemplated path allocates its scratch source per call.
     pub fn submit_barrier(
         &self,
         sim: &mut Sim,
@@ -440,15 +476,108 @@ impl Engine {
         dsts: &[MrDesc],
         imm: u32,
         on_done: OnDone,
-    ) {
-        // Zero-length writes need a 1-byte-capable source; use a tiny
-        // scratch region (templated once in the real engine).
-        let (scratch, _) = self.alloc_mr(gpu, 1);
+    ) -> Result<()> {
         if cfg!(debug_assertions) {
             self.state.borrow().peer_groups.check(group, dsts.len());
         }
-        let routed = route_barrier(self.fanout(gpu), self.bump_rotation(gpu), dsts, imm);
+        // Route BEFORE allocating the scratch source: a rejected
+        // barrier (§3.2 mismatch) must not register anything.
+        let routed = route_barrier(self.fanout(gpu), self.peek_rotation(gpu), dsts, imm)?;
+        self.bump_rotation(gpu);
+        // Zero-length writes need a 1-byte-capable source; use a tiny
+        // scratch region (pre-registered once on the templated path).
+        let (scratch, _) = self.alloc_mr(gpu, 1);
         self.execute_routed(sim, &scratch, routed, on_done);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // §3.5 templated fast path
+    // ------------------------------------------------------------------
+
+    /// Templated contiguous write to `peer` of a bound group: per-call
+    /// fields are patched into the pre-resolved routes; no descriptor
+    /// traversal or rkey resolution happens here.
+    pub fn submit_single_write_templated(
+        &self,
+        sim: &mut Sim,
+        src: (&MrHandle, u64),
+        len: u64,
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_off: u64,
+        imm: Option<u32>,
+        on_done: OnDone,
+    ) -> Result<()> {
+        let t = self.state.borrow().peer_groups.template(group)?;
+        let (handle, src_off) = src;
+        let routed =
+            route_single_write_templated(&t, t.rotation.next(), peer, src_off, len, dst_off, imm)?;
+        t.rotation.bump();
+        self.execute_routed(sim, handle, routed, on_done);
+        Ok(())
+    }
+
+    /// Templated paged writes to `peer` of a bound group.
+    pub fn submit_paged_writes_templated(
+        &self,
+        sim: &mut Sim,
+        page_len: u64,
+        src: (&MrHandle, &Pages),
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_pages: &Pages,
+        imm: Option<u32>,
+        on_done: OnDone,
+    ) -> Result<()> {
+        let t = self.state.borrow().peer_groups.template(group)?;
+        let (handle, src_pages) = src;
+        let routed = route_paged_writes_templated(
+            &t,
+            t.rotation.next(),
+            peer,
+            page_len,
+            src_pages,
+            dst_pages,
+            imm,
+        )?;
+        t.rotation.bump();
+        self.execute_routed(sim, handle, routed, on_done);
+        Ok(())
+    }
+
+    /// Templated scatter over a bound group: four integers per
+    /// destination, patched into the template.
+    pub fn submit_scatter_templated(
+        &self,
+        sim: &mut Sim,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm: Option<u32>,
+        on_done: OnDone,
+    ) -> Result<()> {
+        let t = self.state.borrow().peer_groups.template(group)?;
+        let routed = route_scatter_templated(&t, t.rotation.next(), dsts, imm)?;
+        t.rotation.bump();
+        self.execute_routed(sim, src, routed, on_done);
+        Ok(())
+    }
+
+    /// Templated barrier over a bound group: destinations, routes and
+    /// the scratch source all come from the template.
+    pub fn submit_barrier_templated(
+        &self,
+        sim: &mut Sim,
+        group: PeerGroupHandle,
+        imm: u32,
+        on_done: OnDone,
+    ) -> Result<()> {
+        let t = self.state.borrow().peer_groups.template(group)?;
+        let routed = route_barrier_templated(&t, t.rotation.bump(), imm);
+        let scratch = t.scratch.clone();
+        self.execute_routed(sim, &scratch, routed, on_done);
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -555,6 +684,12 @@ impl Engine {
 
     fn bump_rotation(&self, gpu: u8) -> usize {
         self.state.borrow().groups[gpu as usize].rotation.bump()
+    }
+
+    /// The rotation value the next bump will commit (route with this,
+    /// bump only once routing succeeded).
+    fn peek_rotation(&self, gpu: u8) -> usize {
+        self.state.borrow().groups[gpu as usize].rotation.next()
     }
 
     /// Execute routed writes (each already paired with its destination
@@ -688,7 +823,8 @@ impl Engine {
                     let g = &mut s.groups[gpu];
                     let (data, buf, overflowed) = g.recvs.complete(cqe.wr_id, len, new_id);
                     // Single-threaded runtime: loud failure is safe
-                    // and points straight at the mis-sized pool.
+                    // and points straight at the mis-sized pool (the
+                    // threaded runtime poisons the delivery instead).
                     assert!(!overflowed, "{}", RecvPool::overflow_msg(len, data.len()));
                     let cb = g.recv_cb.clone();
                     (data, cb, (new_id, buf), dispatch)
@@ -707,7 +843,10 @@ impl Engine {
                     },
                 );
                 if let Some(cb) = cb {
-                    sim.after(dispatch, move |s| cb(s, &payload));
+                    // Ownership handoff: the extracted payload moves
+                    // into the callback's `Fired` — no per-message
+                    // copy on the Cont path.
+                    sim.after(dispatch, move |s| cb(s, Fired::bytes(payload)));
                 }
             }
         }
@@ -814,11 +953,13 @@ impl TransferEngine for Engine {
     fn submit_recvs(&self, cx: &mut Cx, gpu: u8, len: usize, cnt: usize, on_msg: OnRecv) {
         match on_msg {
             OnRecv::Handler(cb) => {
-                Engine::submit_recvs(self, cx.sim(), gpu, len, cnt, move |_sim, msg| cb(msg))
+                Engine::submit_recvs(self, cx.sim(), gpu, len, cnt, move |_sim, m| cb(m))
             }
             OnRecv::Cont(c) => {
-                Engine::submit_recvs(self, cx.sim(), gpu, len, cnt, move |sim, msg| {
-                    c.fire_des(sim, Fired::bytes(msg.to_vec()))
+                // Ownership handoff: the pooled message's extracted
+                // bytes flow into the continuation without a copy.
+                Engine::submit_recvs(self, cx.sim(), gpu, len, cnt, move |sim, m| {
+                    c.fire_des(sim, m)
                 })
             }
         }
@@ -832,8 +973,8 @@ impl TransferEngine for Engine {
         dst: (&MrDesc, u64),
         imm: Option<u32>,
         on_done: Notify,
-    ) {
-        Engine::submit_single_write(self, cx.sim(), src, len, dst, imm, on_done.into_des());
+    ) -> Result<()> {
+        Engine::submit_single_write(self, cx.sim(), src, len, dst, imm, on_done.into_des())
     }
 
     fn submit_paged_writes(
@@ -844,8 +985,8 @@ impl TransferEngine for Engine {
         dst: (&MrDesc, &Pages),
         imm: Option<u32>,
         on_done: Notify,
-    ) {
-        Engine::submit_paged_writes(self, cx.sim(), page_len, src, dst, imm, on_done.into_des());
+    ) -> Result<()> {
+        Engine::submit_paged_writes(self, cx.sim(), page_len, src, dst, imm, on_done.into_des())
     }
 
     fn add_peer_group(&self, addrs: Vec<NetAddr>) -> PeerGroupHandle {
@@ -860,6 +1001,15 @@ impl TransferEngine for Engine {
         Engine::remove_peer_group(self, group)
     }
 
+    fn bind_peer_group_mrs(
+        &self,
+        gpu: u8,
+        group: PeerGroupHandle,
+        descs: &[MrDesc],
+    ) -> Result<()> {
+        Engine::bind_peer_group_mrs(self, gpu, group, descs)
+    }
+
     fn submit_scatter(
         &self,
         cx: &mut Cx,
@@ -868,8 +1018,8 @@ impl TransferEngine for Engine {
         dsts: &[ScatterDst],
         imm: Option<u32>,
         on_done: Notify,
-    ) {
-        Engine::submit_scatter(self, cx.sim(), group, src, dsts, imm, on_done.into_des());
+    ) -> Result<()> {
+        Engine::submit_scatter(self, cx.sim(), group, src, dsts, imm, on_done.into_des())
     }
 
     fn submit_barrier(
@@ -880,8 +1030,78 @@ impl TransferEngine for Engine {
         dsts: &[MrDesc],
         imm: u32,
         on_done: Notify,
-    ) {
-        Engine::submit_barrier(self, cx.sim(), gpu, group, dsts, imm, on_done.into_des());
+    ) -> Result<()> {
+        Engine::submit_barrier(self, cx.sim(), gpu, group, dsts, imm, on_done.into_des())
+    }
+
+    fn submit_single_write_templated(
+        &self,
+        cx: &mut Cx,
+        src: (&MrHandle, u64),
+        len: u64,
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_off: u64,
+        imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        Engine::submit_single_write_templated(
+            self,
+            cx.sim(),
+            src,
+            len,
+            group,
+            peer,
+            dst_off,
+            imm,
+            on_done.into_des(),
+        )
+    }
+
+    fn submit_paged_writes_templated(
+        &self,
+        cx: &mut Cx,
+        page_len: u64,
+        src: (&MrHandle, &Pages),
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_pages: &Pages,
+        imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        Engine::submit_paged_writes_templated(
+            self,
+            cx.sim(),
+            page_len,
+            src,
+            group,
+            peer,
+            dst_pages,
+            imm,
+            on_done.into_des(),
+        )
+    }
+
+    fn submit_scatter_templated(
+        &self,
+        cx: &mut Cx,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        Engine::submit_scatter_templated(self, cx.sim(), src, group, dsts, imm, on_done.into_des())
+    }
+
+    fn submit_barrier_templated(
+        &self,
+        cx: &mut Cx,
+        group: PeerGroupHandle,
+        imm: u32,
+        on_done: Notify,
+    ) -> Result<()> {
+        Engine::submit_barrier_templated(self, cx.sim(), group, imm, on_done.into_des())
     }
 
     fn expect_imm_count(&self, cx: &mut Cx, gpu: u8, imm: u32, count: u32, on: Notify) {
@@ -948,7 +1168,8 @@ mod tests {
             (&dst_d, 100),
             Some(77),
             OnDone::Flag(done.clone()),
-        );
+        )
+        .unwrap();
         sim.run();
         assert!(got.get(), "receiver notified via ImmCounter");
         assert!(done.get(), "sender OnDone flag set");
@@ -967,7 +1188,8 @@ mod tests {
         let pattern: Vec<u8> = (0..len).map(|i| (i * 31 % 251) as u8).collect();
         src.buf.write(0, &pattern);
 
-        a.submit_single_write(&mut sim, (&src, 0), len as u64, (&dst_d, 0), None, OnDone::Noop);
+        a.submit_single_write(&mut sim, (&src, 0), len as u64, (&dst_d, 0), None, OnDone::Noop)
+            .unwrap();
         sim.run();
         assert_eq!(dst_h.buf.to_vec(), pattern, "payload integrity after sharding");
         // Both local NICs carried traffic.
@@ -996,7 +1218,8 @@ mod tests {
             (&dst_d, &Pages { indices: dst_idx.clone(), stride: page, offset: 0 }),
             Some(5),
             OnDone::Flag(done.clone()),
-        );
+        )
+        .unwrap();
         sim.run();
         assert!(done.get());
         let v = dst_h.buf.to_vec();
@@ -1013,8 +1236,9 @@ mod tests {
         let (mut sim, _net, a, b) = setup(NicProfile::efa);
         let inbox: Rc<RefCell<Vec<Vec<u8>>>> = Rc::default();
         let sink = inbox.clone();
-        b.submit_recvs(&mut sim, 0, 256, 4, move |_s, msg| {
-            sink.borrow_mut().push(msg.to_vec());
+        b.submit_recvs(&mut sim, 0, 256, 4, move |_s, m| {
+            assert!(m.poison.is_none());
+            sink.borrow_mut().push(m.data);
         });
         // More messages than posted buffers: rotation must re-post.
         for i in 0..10u8 {
@@ -1066,7 +1290,8 @@ mod tests {
             &dsts,
             Some(9),
             OnDone::Flag(done.clone()),
-        );
+        )
+        .unwrap();
         sim.run();
         assert!(done.get());
         for (i, (h, _)) in peers.iter().enumerate() {
@@ -1075,7 +1300,9 @@ mod tests {
         }
         // Barrier: imm-only writes.
         let descs: Vec<MrDesc> = peers.iter().map(|(_, d)| d.clone()).collect();
-        engines[0].submit_barrier(&mut sim, 0, Some(group), &descs, 33, OnDone::Noop);
+        engines[0]
+            .submit_barrier(&mut sim, 0, Some(group), &descs, 33, OnDone::Noop)
+            .unwrap();
         sim.run();
         for i in 1..5 {
             assert_eq!(engines[i].imm_value(0, 33), 1, "barrier imm at peer {i}");
@@ -1087,7 +1314,8 @@ mod tests {
         let (mut sim, _net, a, b) = setup(NicProfile::efa);
         let (src, _) = a.alloc_mr(0, 64);
         let (_dh, dd) = b.alloc_mr(0, 64);
-        a.submit_single_write(&mut sim, (&src, 0), 64, (&dd, 0), Some(4), OnDone::Noop);
+        a.submit_single_write(&mut sim, (&src, 0), 64, (&dd, 0), Some(4), OnDone::Noop)
+            .unwrap();
         sim.run();
         assert_eq!(b.imm_value(0, 4), 1);
         // Register the expectation after the write landed.
@@ -1126,7 +1354,8 @@ mod tests {
             .iter()
             .map(|(_, d)| ScatterDst { len: 1024, src: 0, dst: (d.clone(), 0) })
             .collect();
-        a.submit_scatter(&mut sim, None, &src, &dsts, Some(1), OnDone::Noop);
+        a.submit_scatter(&mut sim, None, &src, &dsts, Some(1), OnDone::Noop)
+            .unwrap();
         sim.run();
         let traces = sink.borrow();
         assert_eq!(traces.len(), 1);

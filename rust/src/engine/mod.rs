@@ -19,9 +19,13 @@
 //!        └── [`threaded::ThreadedEngine`] (pinned threads, wall clock)
 //!        │
 //!   [`core`] — shared submission core: peer-group registry (+ free),
+//!        the §3.5 template cache (`GroupTemplate`: per-peer routes,
+//!        rkeys and barrier scratch resolved once at
+//!        `bind_peer_group_mrs`, invalidated on `remove_peer_group`),
 //!        imm accounting, transfer/WR completion tables, recv
 //!        matching, NIC rotation, plan→rkey routing (§3.2 equal-NIC
-//!        invariant)
+//!        invariant as a real error path) and the templated
+//!        route-patching fast path
 //!        │
 //!   [`api`], [`wire`], [`sharding`], [`imm_counter`] — vocabulary
 //!        types, wire format, pure sharding planner, counter logic
@@ -38,11 +42,14 @@
 //!   scenarios schedule their GPU/CPU side with, implemented once over
 //!   the DES virtual clock and once over real threads/`std::time`
 //!   (the [`model::Reactor`]);
-//! * [`core`] — the shared submission core: peer-group registry, imm
+//! * [`core`] — the shared submission core: peer-group registry and
+//!   the §3.5 template cache ([`core::GroupTemplate`]) behind the
+//!   `bind_peer_group_mrs`/`submit_*_templated` fast path, imm
 //!   accounting, transfer/WR completion tables, recv matching, NIC
 //!   rotation, and the bridge from API calls to [`sharding`] plans
 //!   paired with destination rkeys (where the §3.2 equal-NIC-count
-//!   invariant is enforced);
+//!   invariant is enforced as a `Result` error, release builds
+//!   included);
 //! * [`des_engine::Engine`] — deterministic, timing-faithful runtime
 //!   on the discrete-event fabric (benchmarks, integration tests);
 //! * [`threaded::ThreadedEngine`] — real pinned threads over the
@@ -70,7 +77,10 @@ pub mod threaded;
 pub mod traits;
 pub mod wire;
 
-pub use api::{EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
+pub use api::{
+    EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
+};
+pub use self::core::{GroupTemplate, PeerTemplate};
 pub use des_engine::{Engine, OnDone, SubmitTrace, UvmWatcherHandle};
 pub use imm_counter::{ImmCounter, ImmEvent};
 pub use model::{

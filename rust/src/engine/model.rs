@@ -43,13 +43,21 @@ use crate::sim::Sim;
 // ---------------------------------------------------------------------
 
 /// Payload delivered to a fired continuation: two scalar slots (UVM
-/// watchers use `(old, new)`) and an optional byte payload (SEND/RECV
-/// messages). Completion-only events leave everything empty.
+/// watchers use `(old, new)`), an optional byte payload (SEND/RECV
+/// messages — delivered by value, so the receive path hands the pooled
+/// buffer's extracted bytes over without an extra copy), and a poison
+/// marker for completions that carry an error (e.g. a truncated
+/// receive on the threaded runtime). Completion-only events leave
+/// everything empty.
 #[derive(Debug, Default, Clone)]
 pub struct Fired {
     pub a: u64,
     pub b: u64,
     pub data: Vec<u8>,
+    /// Set when the event completed abnormally: the diagnostic the
+    /// submitter should see. `data` still carries whatever payload
+    /// survived (e.g. the truncated prefix of an oversized SEND).
+    pub poison: Option<String>,
 }
 
 impl Fired {
@@ -58,13 +66,36 @@ impl Fired {
         Fired {
             a,
             b,
-            data: Vec::new(),
+            ..Fired::default()
         }
     }
 
     /// Payload carrying bytes.
     pub fn bytes(data: Vec<u8>) -> Self {
-        Fired { a: 0, b: 0, data }
+        Fired {
+            data,
+            ..Fired::default()
+        }
+    }
+
+    /// Poisoned payload: `data` holds what survived, `msg` says what
+    /// went wrong.
+    pub fn poisoned(data: Vec<u8>, msg: String) -> Self {
+        Fired {
+            data,
+            poison: Some(msg),
+            ..Fired::default()
+        }
+    }
+
+    /// The payload bytes as a `Result`: `Err` with the poison
+    /// diagnostic when the event completed abnormally — how receive
+    /// callbacks distinguish a truncated message from a completion.
+    pub fn ok(&self) -> crate::util::err::Result<&[u8]> {
+        match &self.poison {
+            Some(msg) => Err(crate::util::err::Error::msg(msg.clone())),
+            None => Ok(&self.data),
+        }
     }
 }
 

@@ -24,10 +24,13 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::api::{MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst};
+use super::api::{
+    MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
+};
 use super::core::{
-    route_barrier, route_paged_writes, route_scatter, route_single_write, ImmTable, PeerGroups,
-    RecvPool, Rotation, RoutedWrite, TransferTable,
+    route_barrier, route_barrier_templated, route_paged_writes, route_paged_writes_templated,
+    route_scatter, route_scatter_templated, route_single_write, route_single_write_templated,
+    ImmTable, PeerGroups, RecvPool, Rotation, RoutedWrite, TransferTable,
 };
 use super::model::Fired;
 use super::traits::{Cx, Notify, OnRecv, OnWatch, RuntimeKind, TransferEngine, UvmWatcher};
@@ -35,6 +38,7 @@ use crate::fabric::local::LocalFabric;
 use crate::fabric::mem::{DmaBuf, DmaSlice, RKey};
 use crate::fabric::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
 use crate::fabric::topology::DeviceId;
+use crate::util::err::Result;
 
 /// Sender-side completion notification (threaded flavor).
 pub enum OnDoneT {
@@ -78,7 +82,10 @@ struct GroupShared {
     imm: ImmTable<Box<dyn FnOnce() + Send>>,
     transfers: TransferTable<OnDoneT>,
     recvs: RecvPool,
-    recv_cb: Option<Arc<dyn Fn(&[u8]) + Send + Sync>>,
+    /// Receive callback; messages arrive as owned [`Fired`] payloads
+    /// (poisoned on recv-pool overflow so the submitter can
+    /// distinguish truncation from completion).
+    recv_cb: Option<Arc<dyn Fn(Fired) + Send + Sync>>,
     traces: Vec<TraceT>,
 }
 
@@ -277,13 +284,14 @@ impl ThreadedEngine {
             .expect("worker gone");
     }
 
-    /// Post a rotating pool of `cnt` receive buffers with callback.
+    /// Post a rotating pool of `cnt` receive buffers with callback
+    /// (owned [`Fired`] per message; `poison` set on truncation).
     pub fn submit_recvs(
         &self,
         gpu: u8,
         len: usize,
         cnt: usize,
-        cb: impl Fn(&[u8]) + Send + Sync + 'static,
+        cb: impl Fn(Fired) + Send + Sync + 'static,
     ) {
         let g = &self.inner.groups[gpu as usize];
         let mem = self.inner.fabric.mem();
@@ -309,13 +317,15 @@ impl ThreadedEngine {
         dst: (&MrDesc, u64),
         imm: Option<u32>,
         on_done: OnDoneT,
-    ) {
+    ) -> Result<()> {
         let submitted_ns = self.now_ns();
         let (h, src_off) = src;
         let gpu = h.device.gpu;
         let g = &self.inner.groups[gpu as usize];
-        let routed = route_single_write(g.nics.len(), g.rotation.bump(), src_off, len, dst, imm);
+        let routed = route_single_write(g.nics.len(), g.rotation.next(), src_off, len, dst, imm)?;
+        g.rotation.bump();
         self.dispatch_writes(gpu, h, routed, on_done, submitted_ns);
+        Ok(())
     }
 
     /// Paged writes.
@@ -326,13 +336,15 @@ impl ThreadedEngine {
         dst: (&MrDesc, &Pages),
         imm: Option<u32>,
         on_done: OnDoneT,
-    ) {
+    ) -> Result<()> {
         let submitted_ns = self.now_ns();
         let (h, sp) = src;
         let gpu = h.device.gpu;
         let g = &self.inner.groups[gpu as usize];
-        let routed = route_paged_writes(g.nics.len(), g.rotation.bump(), page_len, sp, dst, imm);
+        let routed = route_paged_writes(g.nics.len(), g.rotation.next(), page_len, sp, dst, imm)?;
+        g.rotation.bump();
         self.dispatch_writes(gpu, h, routed, on_done, submitted_ns);
+        Ok(())
     }
 
     /// Register a peer group for scatter/barrier fast paths.
@@ -351,7 +363,8 @@ impl ThreadedEngine {
     }
 
     /// Release a peer group's registry entry (paper §3.5: long-lived
-    /// engines must free request-scoped groups).
+    /// engines must free request-scoped groups). Invalidates the
+    /// group's template: later templated submissions error.
     pub fn remove_peer_group(&self, group: PeerGroupHandle) -> bool {
         self.inner
             .peer_groups
@@ -361,7 +374,37 @@ impl ThreadedEngine {
             .is_some()
     }
 
+    /// Pre-template the group's work requests on `gpu`'s domain group
+    /// (§3.5): resolves rkeys/NIC pairing once and registers the
+    /// barrier scratch region, so `submit_*_templated` calls patch
+    /// per-call fields only.
+    pub fn bind_peer_group_mrs(
+        &self,
+        gpu: u8,
+        group: PeerGroupHandle,
+        descs: &[MrDesc],
+    ) -> Result<()> {
+        // Validate + resolve routes BEFORE allocating the scratch
+        // region: a failed bind (stale handle, bad descriptors) must
+        // not leak a registered MR. The registry lock is held across
+        // both halves so a concurrent remove_peer_group cannot slip
+        // between validation and installation (alloc_mr touches only
+        // the fabric memory table — no lock-order cycle).
+        let fanout = self.inner.groups[gpu as usize].nics.len();
+        let mut pg = self.inner.peer_groups.lock().unwrap();
+        let peers = pg.prepare_bind(group, fanout, descs)?;
+        let (scratch, _) = self.alloc_mr(gpu, 1);
+        pg.install_template(group, fanout, peers, scratch)
+    }
+
+    /// The group's bound template (registry lock held only for the
+    /// `Arc` clone — the hot path never traverses descriptors).
+    fn template(&self, group: PeerGroupHandle) -> Result<Arc<crate::engine::core::GroupTemplate>> {
+        self.inner.peer_groups.lock().unwrap().template(group)
+    }
+
     /// Scatter to many peers (one WR per destination, NIC-rotated).
+    /// The untemplated (ad-hoc) path.
     pub fn submit_scatter(
         &self,
         group: Option<PeerGroupHandle>,
@@ -369,7 +412,7 @@ impl ThreadedEngine {
         dsts: &[ScatterDst],
         imm: Option<u32>,
         on_done: OnDoneT,
-    ) {
+    ) -> Result<()> {
         let submitted_ns = self.now_ns();
         let gpu = src.device.gpu;
         if cfg!(debug_assertions) {
@@ -380,11 +423,14 @@ impl ThreadedEngine {
                 .check(group, dsts.len());
         }
         let g = &self.inner.groups[gpu as usize];
-        let routed = route_scatter(g.nics.len(), g.rotation.bump(), dsts, imm);
+        let routed = route_scatter(g.nics.len(), g.rotation.next(), dsts, imm)?;
+        g.rotation.bump();
         self.dispatch_writes(gpu, src, routed, on_done, submitted_ns);
+        Ok(())
     }
 
-    /// Immediate-only barrier to every descriptor's owner.
+    /// Immediate-only barrier to every descriptor's owner. The
+    /// untemplated path allocates its scratch source per call.
     pub fn submit_barrier(
         &self,
         gpu: u8,
@@ -392,8 +438,7 @@ impl ThreadedEngine {
         dsts: &[MrDesc],
         imm: u32,
         on_done: OnDoneT,
-    ) {
-        let (scratch, _) = self.alloc_mr(gpu, 1);
+    ) -> Result<()> {
         let submitted_ns = self.now_ns();
         if cfg!(debug_assertions) {
             self.inner
@@ -402,9 +447,101 @@ impl ThreadedEngine {
                 .unwrap()
                 .check(group, dsts.len());
         }
+        // Route BEFORE allocating the scratch source: a rejected
+        // barrier (§3.2 mismatch) must not register anything.
         let g = &self.inner.groups[gpu as usize];
-        let routed = route_barrier(g.nics.len(), g.rotation.bump(), dsts, imm);
+        let routed = route_barrier(g.nics.len(), g.rotation.next(), dsts, imm)?;
+        g.rotation.bump();
+        let (scratch, _) = self.alloc_mr(gpu, 1);
         self.dispatch_writes(gpu, &scratch, routed, on_done, submitted_ns);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // §3.5 templated fast path
+    // ------------------------------------------------------------------
+
+    /// Templated contiguous write to `peer` of a bound group.
+    pub fn submit_single_write_templated(
+        &self,
+        src: (&MrHandle, u64),
+        len: u64,
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_off: u64,
+        imm: Option<u32>,
+        on_done: OnDoneT,
+    ) -> Result<()> {
+        let submitted_ns = self.now_ns();
+        let t = self.template(group)?;
+        let (h, src_off) = src;
+        let routed =
+            route_single_write_templated(&t, t.rotation.next(), peer, src_off, len, dst_off, imm)?;
+        t.rotation.bump();
+        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns);
+        Ok(())
+    }
+
+    /// Templated paged writes to `peer` of a bound group.
+    pub fn submit_paged_writes_templated(
+        &self,
+        page_len: u64,
+        src: (&MrHandle, &Pages),
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_pages: &Pages,
+        imm: Option<u32>,
+        on_done: OnDoneT,
+    ) -> Result<()> {
+        let submitted_ns = self.now_ns();
+        let t = self.template(group)?;
+        let (h, sp) = src;
+        let routed = route_paged_writes_templated(
+            &t,
+            t.rotation.next(),
+            peer,
+            page_len,
+            sp,
+            dst_pages,
+            imm,
+        )?;
+        t.rotation.bump();
+        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns);
+        Ok(())
+    }
+
+    /// Templated scatter over a bound group: four integers per
+    /// destination patched into pre-resolved routes.
+    pub fn submit_scatter_templated(
+        &self,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm: Option<u32>,
+        on_done: OnDoneT,
+    ) -> Result<()> {
+        let submitted_ns = self.now_ns();
+        let t = self.template(group)?;
+        let routed = route_scatter_templated(&t, t.rotation.next(), dsts, imm)?;
+        t.rotation.bump();
+        self.dispatch_writes(src.device.gpu, src, routed, on_done, submitted_ns);
+        Ok(())
+    }
+
+    /// Templated barrier over a bound group: destinations, routes and
+    /// the scratch source all come from the template.
+    pub fn submit_barrier_templated(
+        &self,
+        group: PeerGroupHandle,
+        imm: u32,
+        on_done: OnDoneT,
+    ) -> Result<()> {
+        let submitted_ns = self.now_ns();
+        let t = self.template(group)?;
+        let routed = route_barrier_templated(&t, t.rotation.bump(), imm);
+        let scratch = t.scratch.clone();
+        self.dispatch_writes(scratch.device.gpu, &scratch, routed, on_done, submitted_ns);
+        Ok(())
     }
 
     /// Register an expectation on `gpu`'s imm counter.
@@ -645,20 +782,25 @@ fn handle_cqe(
             }
         }
         CqeKind::RecvDone { len, .. } => {
-            let (payload, cb, repost) = {
+            let (msg, cb, repost) = {
                 let mut sh = shared.lock().unwrap();
                 let new_id = *next_wr;
                 *next_wr += 1;
                 let (data, buf, overflowed) = sh.recvs.complete(cqe.wr_id, len, new_id);
-                if overflowed {
-                    // Deliver truncated rather than panicking: this
-                    // runs on the worker thread, where a panic would
-                    // poison the group lock and hang waiters instead
-                    // of surfacing the diagnostic.
-                    eprintln!("fabric_lib: {}", RecvPool::overflow_msg(len, data.len()));
-                }
+                // Deliver truncated-and-poisoned rather than panicking:
+                // this runs on the worker thread, where a panic would
+                // poison the group lock and hang waiters. The poison
+                // marker reaches the submitter's callback so it can
+                // distinguish truncation from a completed message (the
+                // single-threaded DES runtime asserts loudly instead).
+                let msg = if overflowed {
+                    let diag = RecvPool::overflow_msg(len, data.len());
+                    Fired::poisoned(data, diag)
+                } else {
+                    Fired::bytes(data)
+                };
                 let cb = sh.recv_cb.clone();
-                (data, cb, (new_id, buf))
+                (msg, cb, (new_id, buf))
             };
             fabric.post(
                 nic,
@@ -672,7 +814,7 @@ fn handle_cqe(
                 },
             );
             if let Some(cb) = cb {
-                cb(&payload);
+                cb(msg);
             }
         }
     }
@@ -713,14 +855,14 @@ impl TransferEngine for ThreadedEngine {
 
     fn submit_recvs(&self, _cx: &mut Cx, gpu: u8, len: usize, cnt: usize, on_msg: OnRecv) {
         match on_msg {
-            OnRecv::Handler(cb) => ThreadedEngine::submit_recvs(self, gpu, len, cnt, move |msg| {
-                cb(msg)
-            }),
+            OnRecv::Handler(cb) => {
+                ThreadedEngine::submit_recvs(self, gpu, len, cnt, move |m| cb(m))
+            }
             OnRecv::Cont(c) => {
                 let tx = c.into_sender();
-                ThreadedEngine::submit_recvs(self, gpu, len, cnt, move |msg| {
-                    tx.send(Fired::bytes(msg.to_vec()))
-                })
+                // Ownership handoff: the extracted payload (and any
+                // poison) moves through the wake queue without a copy.
+                ThreadedEngine::submit_recvs(self, gpu, len, cnt, move |m| tx.send(m))
             }
         }
     }
@@ -733,8 +875,8 @@ impl TransferEngine for ThreadedEngine {
         dst: (&MrDesc, u64),
         imm: Option<u32>,
         on_done: Notify,
-    ) {
-        ThreadedEngine::submit_single_write(self, src, len, dst, imm, on_done.into_threaded());
+    ) -> Result<()> {
+        ThreadedEngine::submit_single_write(self, src, len, dst, imm, on_done.into_threaded())
     }
 
     fn submit_paged_writes(
@@ -745,8 +887,8 @@ impl TransferEngine for ThreadedEngine {
         dst: (&MrDesc, &Pages),
         imm: Option<u32>,
         on_done: Notify,
-    ) {
-        ThreadedEngine::submit_paged_writes(self, page_len, src, dst, imm, on_done.into_threaded());
+    ) -> Result<()> {
+        ThreadedEngine::submit_paged_writes(self, page_len, src, dst, imm, on_done.into_threaded())
     }
 
     fn add_peer_group(&self, addrs: Vec<NetAddr>) -> PeerGroupHandle {
@@ -761,6 +903,15 @@ impl TransferEngine for ThreadedEngine {
         ThreadedEngine::remove_peer_group(self, group)
     }
 
+    fn bind_peer_group_mrs(
+        &self,
+        gpu: u8,
+        group: PeerGroupHandle,
+        descs: &[MrDesc],
+    ) -> Result<()> {
+        ThreadedEngine::bind_peer_group_mrs(self, gpu, group, descs)
+    }
+
     fn submit_scatter(
         &self,
         _cx: &mut Cx,
@@ -769,8 +920,8 @@ impl TransferEngine for ThreadedEngine {
         dsts: &[ScatterDst],
         imm: Option<u32>,
         on_done: Notify,
-    ) {
-        ThreadedEngine::submit_scatter(self, group, src, dsts, imm, on_done.into_threaded());
+    ) -> Result<()> {
+        ThreadedEngine::submit_scatter(self, group, src, dsts, imm, on_done.into_threaded())
     }
 
     fn submit_barrier(
@@ -781,8 +932,76 @@ impl TransferEngine for ThreadedEngine {
         dsts: &[MrDesc],
         imm: u32,
         on_done: Notify,
-    ) {
-        ThreadedEngine::submit_barrier(self, gpu, group, dsts, imm, on_done.into_threaded());
+    ) -> Result<()> {
+        ThreadedEngine::submit_barrier(self, gpu, group, dsts, imm, on_done.into_threaded())
+    }
+
+    fn submit_single_write_templated(
+        &self,
+        _cx: &mut Cx,
+        src: (&MrHandle, u64),
+        len: u64,
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_off: u64,
+        imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        ThreadedEngine::submit_single_write_templated(
+            self,
+            src,
+            len,
+            group,
+            peer,
+            dst_off,
+            imm,
+            on_done.into_threaded(),
+        )
+    }
+
+    fn submit_paged_writes_templated(
+        &self,
+        _cx: &mut Cx,
+        page_len: u64,
+        src: (&MrHandle, &Pages),
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_pages: &Pages,
+        imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        ThreadedEngine::submit_paged_writes_templated(
+            self,
+            page_len,
+            src,
+            group,
+            peer,
+            dst_pages,
+            imm,
+            on_done.into_threaded(),
+        )
+    }
+
+    fn submit_scatter_templated(
+        &self,
+        _cx: &mut Cx,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        ThreadedEngine::submit_scatter_templated(self, src, group, dsts, imm, on_done.into_threaded())
+    }
+
+    fn submit_barrier_templated(
+        &self,
+        _cx: &mut Cx,
+        group: PeerGroupHandle,
+        imm: u32,
+        on_done: Notify,
+    ) -> Result<()> {
+        ThreadedEngine::submit_barrier_templated(self, group, imm, on_done.into_threaded())
     }
 
     fn expect_imm_count(&self, _cx: &mut Cx, gpu: u8, imm: u32, count: u32, on: Notify) {
@@ -839,7 +1058,8 @@ mod tests {
         let g = got.clone();
         b.expect_imm_count(0, 50, 1, move || g.store(true, Ordering::Release));
         let done = Arc::new(AtomicBool::new(false));
-        a.submit_single_write((&src, 0), 15, (&dst_d, 8), Some(50), OnDoneT::Flag(done.clone()));
+        a.submit_single_write((&src, 0), 15, (&dst_d, 8), Some(50), OnDoneT::Flag(done.clone()))
+            .unwrap();
         wait_flag(&done);
         wait_flag(&got);
         assert_eq!(&dst_h.buf.to_vec()[8..23], b"threaded engine");
@@ -859,7 +1079,8 @@ mod tests {
         let pat: Vec<u8> = (0..len).map(|i| (i % 253) as u8).collect();
         src.buf.write(0, &pat);
         let done = Arc::new(AtomicBool::new(false));
-        a.submit_single_write((&src, 0), len as u64, (&dst_d, 0), None, OnDoneT::Flag(done.clone()));
+        a.submit_single_write((&src, 0), len as u64, (&dst_d, 0), None, OnDoneT::Flag(done.clone()))
+            .unwrap();
         wait_flag(&done);
         assert_eq!(dst_h.buf.to_vec(), pat);
         a.shutdown();
@@ -874,8 +1095,9 @@ mod tests {
         let b = ThreadedEngine::new(&fabric, 1, 1, 1);
         let hits = Arc::new(AtomicU64::new(0));
         let h = hits.clone();
-        b.submit_recvs(0, 128, 4, move |msg| {
-            assert_eq!(msg, b"ping");
+        b.submit_recvs(0, 128, 4, move |m| {
+            assert!(m.poison.is_none());
+            assert_eq!(&m.data[..], b"ping");
             h.fetch_add(1, Ordering::Relaxed);
         });
         for _ in 0..8 {
@@ -890,6 +1112,42 @@ mod tests {
             );
             std::thread::yield_now();
         }
+        a.shutdown();
+        b.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn threaded_recv_overflow_poisons_delivery() {
+        // An oversized SEND must reach the submitter's callback as a
+        // poisoned (truncated) message — not a worker-thread panic and
+        // not a silent stderr line the caller can't observe.
+        let fabric = LocalFabric::new(TransportKind::Rc, 14);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 1);
+        let b = ThreadedEngine::new(&fabric, 1, 1, 1);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s = seen.clone();
+        b.submit_recvs(0, 8, 2, move |m| {
+            s.lock().unwrap().push((m.data.clone(), m.poison.clone()));
+        });
+        a.submit_send(0, &b.group_address(0), &[7u8; 32], OnDoneT::Noop);
+        a.submit_send(0, &b.group_address(0), &[3u8; 4], OnDoneT::Noop);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while seen.lock().unwrap().len() < 2 {
+            assert!(Instant::now() < deadline, "timeout");
+            std::thread::yield_now();
+        }
+        let v = seen.lock().unwrap().clone();
+        let truncated = v.iter().find(|(_, p)| p.is_some()).expect("poisoned msg");
+        assert_eq!(truncated.0, vec![7u8; 8], "payload truncated to capacity");
+        assert!(
+            truncated.1.as_deref().unwrap().contains("overflows"),
+            "{:?}",
+            truncated.1
+        );
+        let intact = v.iter().find(|(_, p)| p.is_none()).expect("intact msg");
+        assert_eq!(intact.0, vec![3u8; 4]);
+        // The engine keeps serving after a truncation (pool re-posted).
         a.shutdown();
         b.shutdown();
         fabric.shutdown();
@@ -927,7 +1185,9 @@ mod tests {
             })
             .collect();
         let done = Arc::new(AtomicBool::new(false));
-        engines[0].submit_scatter(Some(group), &src, &dsts, Some(40), OnDoneT::Flag(done.clone()));
+        engines[0]
+            .submit_scatter(Some(group), &src, &dsts, Some(40), OnDoneT::Flag(done.clone()))
+            .unwrap();
         wait_flag(&done);
         for f in &arrived {
             wait_flag(f);
@@ -944,7 +1204,9 @@ mod tests {
             engines[i + 1].expect_imm_count(0, 41, 1, move || f.store(true, Ordering::Release));
         }
         let descs: Vec<MrDesc> = peers.iter().map(|(_, d)| d.clone()).collect();
-        engines[0].submit_barrier(0, Some(group), &descs, 41, OnDoneT::Noop);
+        engines[0]
+            .submit_barrier(0, Some(group), &descs, 41, OnDoneT::Noop)
+            .unwrap();
         for f in &released {
             wait_flag(f);
         }
@@ -976,7 +1238,8 @@ mod tests {
             (&dst_d, &Pages { indices: dst_idx.clone(), stride: page, offset: 0 }),
             Some(8),
             OnDoneT::Flag(done.clone()),
-        );
+        )
+        .unwrap();
         wait_flag(&done);
         wait_flag(&counted);
         let v = dst_h.buf.to_vec();
@@ -1022,7 +1285,8 @@ mod tests {
         let (src, _) = a.alloc_mr(0, 4096);
         let (_dh, dd) = b.alloc_mr(0, 4096);
         let done = Arc::new(AtomicBool::new(false));
-        a.submit_single_write((&src, 0), 4096, (&dd, 0), None, OnDoneT::Flag(done.clone()));
+        a.submit_single_write((&src, 0), 4096, (&dd, 0), None, OnDoneT::Flag(done.clone()))
+            .unwrap();
         wait_flag(&done);
         let traces = a.traces();
         assert!(!traces.is_empty());

@@ -5,8 +5,10 @@
 //! interface: a dyn-safe trait covering the full vocabulary —
 //! `alloc_mr`/`reg_mr`, `submit_send`/`submit_recvs`,
 //! `submit_single_write`/`submit_paged_writes`,
-//! `add_peer_group`/`remove_peer_group`/`submit_scatter`/
-//! `submit_barrier`, `expect_imm_count`/`imm_value`/`free_imm`,
+//! `add_peer_group`/`bind_peer_group_mrs`/`remove_peer_group`/
+//! `submit_scatter`/`submit_barrier` (plus the `submit_*_templated`
+//! §3.5 fast path over bound groups),
+//! `expect_imm_count`/`imm_value`/`free_imm`,
 //! `alloc_uvm_watcher` — implemented by both the deterministic DES
 //! engine ([`super::des_engine::Engine`]) and the pinned-thread engine
 //! ([`super::threaded::ThreadedEngine`]), so every workload runs on
@@ -39,7 +41,7 @@ use std::time::Duration as StdDuration;
 use std::time::Instant as StdInstant;
 
 use super::api::{
-    EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst,
+    EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
 use super::des_engine::{Engine, UvmWatcherHandle};
 use super::model::{Cont, Fired, Reactor};
@@ -52,6 +54,7 @@ use crate::fabric::profile::{GpuProfile, NicProfile};
 use crate::fabric::simnet::SimNet;
 use crate::sim::time::{Duration, Instant};
 use crate::sim::Sim;
+use crate::util::err::Result;
 
 /// Which runtime backs an engine or context.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,8 +90,12 @@ pub fn expect_flag(
     flag
 }
 
-/// Runtime-neutral receive callback (`submit_recvs`).
-pub type RecvHandler = Arc<dyn Fn(&[u8]) + Send + Sync>;
+/// Runtime-neutral receive callback (`submit_recvs`): the [`Fired`]
+/// payload owns the message bytes (no copy on the delivery path) and
+/// carries `poison` when the threaded runtime truncated an oversized
+/// SEND — check [`Fired::ok`] to distinguish truncation from a normal
+/// message.
+pub type RecvHandler = Arc<dyn Fn(Fired) + Send + Sync>;
 
 /// Runtime-neutral UVM-watcher callback (`cb(old, new)`).
 pub type WatchHandler = Box<dyn Fn(u64, u64) + Send + Sync>;
@@ -165,17 +172,29 @@ impl Notify {
 
 /// Receive-side callback for `submit_recvs`: either a `Send + Sync`
 /// handler running on the runtime's receive path, or a continuation
-/// dispatched on the scenario's driving context with the message bytes
-/// in [`Fired::data`].
+/// dispatched on the scenario's driving context. Both receive the
+/// message as an owned [`Fired`] (bytes in [`Fired::data`], truncation
+/// diagnostics in [`Fired::poison`]).
 pub enum OnRecv {
     Handler(RecvHandler),
     Cont(Cont),
 }
 
 impl OnRecv {
-    /// Convenience constructor for the handler flavor.
+    /// Convenience constructor for payload-only handlers. Truncation
+    /// diagnostics are dropped here — use [`OnRecv::checked`] (or the
+    /// `Cont` flavor) when the caller must distinguish a truncated
+    /// message from a completion.
     pub fn handler(f: impl Fn(&[u8]) + Send + Sync + 'static) -> Self {
-        OnRecv::Handler(Arc::new(f))
+        OnRecv::Handler(Arc::new(move |m: Fired| f(&m.data)))
+    }
+
+    /// Handler receiving `Ok(bytes)` per intact message and `Err` when
+    /// the threaded runtime truncated an oversized SEND (the error
+    /// carries the pool-sizing diagnostic; the DES runtime asserts
+    /// loudly instead of delivering the error).
+    pub fn checked(f: impl Fn(Result<&[u8]>) + Send + Sync + 'static) -> Self {
+        OnRecv::Handler(Arc::new(move |m: Fired| f(m.ok())))
     }
 }
 
@@ -405,7 +424,8 @@ pub trait TransferEngine {
     fn submit_recvs(&self, cx: &mut Cx, gpu: u8, len: usize, cnt: usize, on_msg: OnRecv);
 
     /// Contiguous one-sided write, sharded across NICs when large and
-    /// imm-less.
+    /// imm-less. Errs (in every build profile) when the destination
+    /// descriptor violates the §3.2 equal-NIC-count invariant.
     fn submit_single_write(
         &self,
         cx: &mut Cx,
@@ -414,7 +434,7 @@ pub trait TransferEngine {
         dst: (&MrDesc, u64),
         imm: Option<u32>,
         on_done: Notify,
-    );
+    ) -> Result<()>;
 
     /// Paged writes: source page `i` lands at destination page `i`.
     fn submit_paged_writes(
@@ -425,7 +445,7 @@ pub trait TransferEngine {
         dst: (&MrDesc, &Pages),
         imm: Option<u32>,
         on_done: Notify,
-    );
+    ) -> Result<()>;
 
     /// Register a peer group for scatter/barrier fast paths.
     fn add_peer_group(&self, addrs: Vec<NetAddr>) -> PeerGroupHandle;
@@ -436,9 +456,35 @@ pub trait TransferEngine {
     /// Release a peer group's registry entry. Returns true when the
     /// handle was registered. Long-lived engines must free
     /// request-scoped groups or the registry grows without bound.
+    /// Freeing also invalidates the group's template: later templated
+    /// submissions on the handle error deterministically (handles are
+    /// never reused, so no ABA).
     fn remove_peer_group(&self, group: PeerGroupHandle) -> bool;
 
+    /// Pre-template the group's work requests (§3.5): one descriptor
+    /// per registered peer, in registration order. Resolves rkeys, NIC
+    /// pairing and the barrier scratch region once — on `gpu`'s domain
+    /// group — so the `submit_*_templated` family patches per-call
+    /// fields only. Errs on a stale handle, a descriptor count or
+    /// owner mismatch, or a §3.2 fanout violation; a failed bind
+    /// allocates nothing.
+    ///
+    /// A template binds exactly one region per peer entry. To target
+    /// several regions of the same physical peer, register that peer
+    /// once per region — but note `submit_barrier_templated` fans out
+    /// one immediate per ENTRY, so a receiver registered N times gets
+    /// N immediates per barrier (gate such groups' barriers on the
+    /// entry count, or keep multi-region groups off the barrier path).
+    fn bind_peer_group_mrs(
+        &self,
+        gpu: u8,
+        group: PeerGroupHandle,
+        descs: &[MrDesc],
+    ) -> Result<()>;
+
     /// Scatter slices of `src` to many peers; one WR per destination.
+    /// The untemplated (ad-hoc) path: every destination carries its
+    /// own cloned descriptor, resolved per call.
     fn submit_scatter(
         &self,
         cx: &mut Cx,
@@ -447,10 +493,11 @@ pub trait TransferEngine {
         dsts: &[ScatterDst],
         imm: Option<u32>,
         on_done: Notify,
-    );
+    ) -> Result<()>;
 
     /// Immediate-only notification to every peer (zero-length writes;
     /// `dsts` supplies a valid descriptor per peer, required on EFA).
+    /// The untemplated (ad-hoc) path.
     fn submit_barrier(
         &self,
         cx: &mut Cx,
@@ -459,7 +506,66 @@ pub trait TransferEngine {
         dsts: &[MrDesc],
         imm: u32,
         on_done: Notify,
-    );
+    ) -> Result<()>;
+
+    // -- §3.5 templated fast path --------------------------------------
+    //
+    // Submissions against a bound peer group: zero per-call rkey
+    // resolution or descriptor traversal — offsets, lengths and the
+    // immediate are patched into the template built by
+    // `bind_peer_group_mrs`. All error on stale handles and unbound
+    // groups, in release builds too.
+
+    /// Templated contiguous write to `peer` (index into the group's
+    /// peer list) at `dst_off` within its bound region.
+    fn submit_single_write_templated(
+        &self,
+        cx: &mut Cx,
+        src: (&MrHandle, u64),
+        len: u64,
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_off: u64,
+        imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()>;
+
+    /// Templated paged writes to `peer`: source page `i` lands at
+    /// `dst_pages[i]` within the peer's bound region.
+    fn submit_paged_writes_templated(
+        &self,
+        cx: &mut Cx,
+        page_len: u64,
+        src: (&MrHandle, &Pages),
+        group: PeerGroupHandle,
+        peer: usize,
+        dst_pages: &Pages,
+        imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()>;
+
+    /// Templated scatter: one WR per [`TemplatedDst`] (four integers —
+    /// no descriptor clones), NIC-rotated on the group's own cursor.
+    fn submit_scatter_templated(
+        &self,
+        cx: &mut Cx,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()>;
+
+    /// Templated barrier to every peer of the group: destinations,
+    /// routes and the scratch source all live in the template — the
+    /// call patches in nothing but the immediate.
+    fn submit_barrier_templated(
+        &self,
+        cx: &mut Cx,
+        group: PeerGroupHandle,
+        imm: u32,
+        on_done: Notify,
+    ) -> Result<()>;
 
     /// Notify `on` once `imm` has been received `count` times on
     /// `gpu`'s group.
@@ -704,7 +810,8 @@ mod tests {
                 (&dst_d, 64),
                 Some(7),
                 Notify::Flag(sent.clone()),
-            );
+            )
+            .unwrap();
             cx.wait(&sent);
             cx.wait(&got);
             assert_eq!(&dst_h.buf.to_vec()[64..85], b"one API, two runtimes");

@@ -66,14 +66,16 @@ fn all_to_all_scatter_integrity_efa() {
             })
             .collect();
         let dn = done.clone();
-        engines[n].submit_scatter(
-            &mut sim,
-            None,
-            &src_h,
-            &dsts,
-            Some(77),
-            OnDone::Callback(Box::new(move |_| dn.set(dn.get() + 1))),
-        );
+        engines[n]
+            .submit_scatter(
+                &mut sim,
+                None,
+                &src_h,
+                &dsts,
+                Some(77),
+                OnDone::Callback(Box::new(move |_| dn.set(dn.get() + 1))),
+            )
+            .unwrap();
     }
     sim.run();
     assert_eq!(done.get(), 8);
@@ -114,7 +116,9 @@ fn barrier_all_to_all() {
             .collect();
         let rl = released.clone();
         engines[n].expect_imm_count(&mut sim, g, 5, 3, move |_| rl.set(rl.get() + 1));
-        engines[n].submit_barrier(&mut sim, g, None, &descs, 5, OnDone::Noop);
+        engines[n]
+            .submit_barrier(&mut sim, g, None, &descs, 5, OnDone::Noop)
+            .unwrap();
     }
     sim.run();
     assert_eq!(released.get(), 4, "all ranks pass the barrier");
@@ -141,7 +145,8 @@ fn paged_write_cross_gpu_same_node() {
         (&dst_d, &Pages { indices: rev.clone(), stride: page, offset: 0 }),
         Some(3),
         OnDone::Noop,
-    );
+    )
+    .unwrap();
     sim.run();
     assert_eq!(e.imm_value(1, 3), 16);
     let v = dst_h.buf.to_vec();
@@ -157,8 +162,9 @@ fn recv_pool_handles_burst_beyond_pool_size() {
     let mut sim = Sim::new();
     let got = Rc::new(Cell::new(0u32));
     let g = got.clone();
-    engines[1].submit_recvs(&mut sim, 0, 512, 4, move |_s, msg| {
-        assert_eq!(msg.len(), 100);
+    engines[1].submit_recvs(&mut sim, 0, 512, 4, move |_s, m| {
+        assert!(m.poison.is_none());
+        assert_eq!(m.data.len(), 100);
         g.set(g.get() + 1);
     });
     for _ in 0..50 {

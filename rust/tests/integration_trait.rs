@@ -42,7 +42,9 @@ fn scatter_barrier_imm_scenario(cx: &mut Cx, engines: &[&dyn TransferEngine]) {
         })
         .collect();
     let sent = new_flag();
-    sender.submit_scatter(cx, Some(group), &src, &dsts, Some(11), Notify::Flag(sent.clone()));
+    sender
+        .submit_scatter(cx, Some(group), &src, &dsts, Some(11), Notify::Flag(sent.clone()))
+        .unwrap();
     cx.wait(&sent);
     cx.wait_all(&scattered);
     for (i, (h, _)) in peers.iter().enumerate() {
@@ -51,7 +53,9 @@ fn scatter_barrier_imm_scenario(cx: &mut Cx, engines: &[&dyn TransferEngine]) {
 
     // Barrier through the same handle.
     let descs: Vec<MrDesc> = peers.iter().map(|(_, d)| d.clone()).collect();
-    sender.submit_barrier(cx, 0, Some(group), &descs, 12, Notify::Noop);
+    sender
+        .submit_barrier(cx, 0, Some(group), &descs, 12, Notify::Noop)
+        .unwrap();
     cx.wait_all(&released);
 
     // Counters were retired by the satisfied expectations.

@@ -206,7 +206,8 @@ fn prop_paged_transfer_through_both_runtimes() {
                         (&dst_d, &Pages { indices: slots.clone(), stride: *page_len, offset: 0 }),
                         Some(9),
                         Notify::Flag(done.clone()),
-                    );
+                    )
+                    .unwrap();
                     cx.wait(&done);
                     cx.wait(&counted);
                     let v = dst_h.buf.to_vec();
@@ -249,14 +250,16 @@ fn prop_sharded_write_balances_nic_bytes() {
                 let (src, _) = engines[0].alloc_mr(0, len as usize);
                 let (_dh, dd) = engines[1].alloc_mr(0, len as usize);
                 let done = new_flag();
-                engines[0].submit_single_write(
-                    &mut cx,
-                    (&src, 0),
-                    len,
-                    (&dd, 0),
-                    None,
-                    Notify::Flag(done.clone()),
-                );
+                engines[0]
+                    .submit_single_write(
+                        &mut cx,
+                        (&src, 0),
+                        len,
+                        (&dd, 0),
+                        None,
+                        Notify::Flag(done.clone()),
+                    )
+                    .unwrap();
                 cx.wait(&done);
             }
             let (tx0, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 0 });
@@ -271,6 +274,125 @@ fn prop_sharded_write_balances_nic_bytes() {
             Ok(())
         },
     );
+}
+
+/// §3.5 parity THROUGH the engines, on both runtimes: a random
+/// scatter submitted untemplated (per-call descriptor clones) and
+/// templated (bound group, four integers per destination) must land
+/// byte-identical payloads and the same per-peer immediate counts.
+#[test]
+fn prop_templated_scatter_matches_untemplated() {
+    use fabric_lib::engine::api::{ScatterDst, TemplatedDst};
+    use fabric_lib::engine::traits::Cx;
+
+    for kind in [RuntimeKind::Des, RuntimeKind::Threaded] {
+        check(
+            &format!("templated/untemplated scatter parity ({kind:?})"),
+            |rng: &mut Rng| {
+                let peers = 2 + rng.below(3) as usize;
+                let entries = 1 + rng.below(8) as usize;
+                // Entry i writes inside its own disjoint 256 B slot:
+                // the threaded fabric delivers unordered, so
+                // overlapping ranges would make the byte comparison
+                // order-sensitive rather than path-sensitive.
+                let specs: Vec<(usize, u64, u64, u64)> = (0..entries)
+                    .map(|i| {
+                        let peer = rng.below(peers as u64) as usize;
+                        let off = rng.below(64);
+                        let len = 1 + rng.below(192);
+                        let src = rng.below(1024 - 256);
+                        (peer, len, src, i as u64 * 256 + off)
+                    })
+                    .collect();
+                (peers, specs, rng.next_u64())
+            },
+            |(peers, specs, seed)| {
+                let mut cluster = Cluster::new(kind, 1 + *peers as u16, 1, 2, *seed);
+                let result = {
+                    let (mut cx, engines) = cluster.parts();
+                    let sender = engines[0];
+                    let (src, _) = sender.alloc_mr(0, 1024);
+                    let fill: Vec<u8> = (0..1024u32).map(|i| (i % 253) as u8 + 1).collect();
+                    src.buf.write(0, &fill);
+                    let addrs: Vec<_> =
+                        engines[1..].iter().map(|e| e.main_address()).collect();
+
+                    // Two destination-region sets, one per path.
+                    let run = |cx: &mut Cx, templated: bool, imm: u32| {
+                        let regions: Vec<_> = engines[1..]
+                            .iter()
+                            .map(|e| e.alloc_mr(0, 4096))
+                            .collect();
+                        let mut flags = Vec::new();
+                        for (i, e) in engines[1..].iter().enumerate() {
+                            let n = specs.iter().filter(|s| s.0 == i).count() as u32;
+                            if n > 0 {
+                                flags.push(expect_flag(*e, cx, 0, imm, n));
+                            }
+                        }
+                        let group = sender.add_peer_group(addrs.clone());
+                        if templated {
+                            let descs: Vec<_> =
+                                regions.iter().map(|(_, d)| d.clone()).collect();
+                            sender.bind_peer_group_mrs(0, group, &descs).unwrap();
+                            let dsts: Vec<TemplatedDst> = specs
+                                .iter()
+                                .map(|&(peer, len, src, dst)| TemplatedDst {
+                                    peer,
+                                    len,
+                                    src,
+                                    dst,
+                                })
+                                .collect();
+                            sender
+                                .submit_scatter_templated(
+                                    cx,
+                                    &src,
+                                    group,
+                                    &dsts,
+                                    Some(imm),
+                                    Notify::Noop,
+                                )
+                                .unwrap();
+                        } else {
+                            let dsts: Vec<ScatterDst> = specs
+                                .iter()
+                                .map(|&(peer, len, src, dst)| ScatterDst {
+                                    len,
+                                    src,
+                                    dst: (regions[peer].1.clone(), dst),
+                                })
+                                .collect();
+                            // group-less (ad-hoc) submission: entries
+                            // may repeat a peer, and the debug-mode
+                            // group check requires dsts <= peer count.
+                            sender
+                                .submit_scatter(cx, None, &src, &dsts, Some(imm), Notify::Noop)
+                                .unwrap();
+                        }
+                        for f in &flags {
+                            cx.wait(f);
+                        }
+                        assert!(sender.remove_peer_group(group));
+                        regions
+                            .iter()
+                            .map(|(h, _)| h.buf.to_vec())
+                            .collect::<Vec<_>>()
+                    };
+                    let plain = run(&mut cx, false, 0x71);
+                    let tpl = run(&mut cx, true, 0x72);
+                    cx.settle();
+                    if plain == tpl {
+                        Ok(())
+                    } else {
+                        Err("templated scatter landed different bytes".to_string())
+                    }
+                };
+                cluster.shutdown();
+                result
+            },
+        );
+    }
 }
 
 #[test]

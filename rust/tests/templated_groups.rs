@@ -1,0 +1,267 @@
+//! §3.5 peer-group template coverage, cross-runtime:
+//!
+//! * stale-handle determinism — every templated entry point (and
+//!   rebinding) errors on a handle that went through
+//!   `remove_peer_group`, on BOTH runtimes, in release builds too
+//!   (handles are never recycled, so there is no ABA window);
+//! * templated vs untemplated equivalence at the ENGINE level — the
+//!   same logical workload driven through both paths on two
+//!   identically-seeded DES clusters produces identical per-NIC byte
+//!   streams and payloads (the WR streams cannot differ if the bytes
+//!   on every NIC agree under a deterministic fabric);
+//! * the §3.2 equal-NIC-count violation is a real error on both
+//!   runtimes (untemplated per call, templated once at bind).
+
+use fabric_lib::engine::api::{MrDesc, MrHandle, PeerGroupHandle, ScatterDst, TemplatedDst};
+use fabric_lib::engine::traits::{
+    expect_flag, run_on_both, Cluster, Cx, Notify, RuntimeKind, TransferEngine,
+};
+use fabric_lib::fabric::nic::NicAddr;
+
+/// All four templated entry points plus rebind against one handle;
+/// returns the error strings for uniform assertions.
+fn templated_errors(
+    cx: &mut Cx,
+    e: &dyn TransferEngine,
+    src: &MrHandle,
+    group: PeerGroupHandle,
+    descs: &[MrDesc],
+) -> Vec<String> {
+    let pages = fabric_lib::engine::api::Pages::contiguous(0, 1, 64);
+    vec![
+        e.submit_single_write_templated(cx, (src, 0), 16, group, 0, 0, None, Notify::Noop)
+            .map_err(|e| e.to_string())
+            .unwrap_err(),
+        e.submit_paged_writes_templated(cx, 64, (src, &pages), group, 0, &pages, None, Notify::Noop)
+            .map_err(|e| e.to_string())
+            .unwrap_err(),
+        e.submit_scatter_templated(
+            cx,
+            src,
+            group,
+            &[TemplatedDst { peer: 0, len: 8, src: 0, dst: 0 }],
+            None,
+            Notify::Noop,
+        )
+        .map_err(|e| e.to_string())
+        .unwrap_err(),
+        e.submit_barrier_templated(cx, group, 9, Notify::Noop)
+            .map_err(|e| e.to_string())
+            .unwrap_err(),
+        e.bind_peer_group_mrs(0, group, descs)
+            .map_err(|e| e.to_string())
+            .unwrap_err(),
+    ]
+}
+
+#[test]
+fn stale_handle_errors_deterministically_on_both_runtimes() {
+    run_on_both(3, 1, 2, 0x57A1E, |cx, engines| {
+        let e = engines[0];
+        let (src, _) = e.alloc_mr(0, 1024);
+        let descs: Vec<MrDesc> = engines[1..]
+            .iter()
+            .map(|p| p.alloc_mr(0, 4096).1)
+            .collect();
+        let addrs = engines[1..].iter().map(|p| p.main_address()).collect();
+        let group = e.add_peer_group(addrs);
+
+        // Before binding: templated submissions name the missing bind.
+        let err = e
+            .submit_barrier_templated(cx, group, 5, Notify::Noop)
+            .unwrap_err();
+        assert!(err.to_string().contains("no bound template"), "{err}");
+
+        // Bound: the whole templated family works.
+        e.bind_peer_group_mrs(0, group, &descs).unwrap();
+        let done = expect_flag(engines[1], cx, 0, 5, 1);
+        e.submit_barrier_templated(cx, group, 5, Notify::Noop).unwrap();
+        cx.wait(&done);
+
+        // Freed: every entry point errors, deterministically, with the
+        // stale-handle diagnostic — no panic, no freed-state reuse.
+        assert!(e.remove_peer_group(group));
+        for err in templated_errors(cx, e, &src, group, &descs) {
+            assert!(err.contains("stale or unknown"), "{err}");
+        }
+        // And again (double-free path): still the same deterministic
+        // error, handles never recycle.
+        assert!(!e.remove_peer_group(group));
+        for err in templated_errors(cx, e, &src, group, &descs) {
+            assert!(err.contains("stale or unknown"), "{err}");
+        }
+        // A never-registered handle behaves the same.
+        for err in templated_errors(cx, e, &src, PeerGroupHandle(u64::MAX), &descs) {
+            assert!(err.contains("stale or unknown"), "{err}");
+        }
+    });
+}
+
+#[test]
+fn fanout_mismatch_errors_on_both_runtimes_in_every_build() {
+    // Engines run 2 NICs per GPU; a descriptor advertising a single
+    // rkey violates §3.2 and must be rejected as an Err — this is a
+    // release-mode test on purpose (the old code only debug_asserted
+    // and silently wrapped rkey selection in release builds).
+    run_on_both(2, 1, 2, 0x32F, |cx, engines| {
+        let (src, _) = engines[0].alloc_mr(0, 1024);
+        let (_h, good) = engines[1].alloc_mr(0, 1024);
+        let mut bad = good.clone();
+        bad.rkeys.truncate(1);
+
+        let err = engines[0]
+            .submit_single_write(cx, (&src, 0), 64, (&bad, 0), None, Notify::Noop)
+            .unwrap_err();
+        assert!(err.to_string().contains("equal-NIC-count"), "{err}");
+        let err = engines[0]
+            .submit_scatter(
+                cx,
+                None,
+                &src,
+                &[ScatterDst { len: 8, src: 0, dst: (bad.clone(), 0) }],
+                None,
+                Notify::Noop,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("equal-NIC-count"), "{err}");
+        let err = engines[0]
+            .submit_barrier(cx, 0, None, &[bad.clone()], 3, Notify::Noop)
+            .unwrap_err();
+        assert!(err.to_string().contains("equal-NIC-count"), "{err}");
+
+        // Templated path: the same violation is caught once, at bind.
+        let group = engines[0].add_peer_group(vec![engines[1].main_address()]);
+        let err = engines[0].bind_peer_group_mrs(0, group, &[bad]).unwrap_err();
+        assert!(err.to_string().contains("equal-NIC-count"), "{err}");
+        // The good descriptor binds fine afterwards.
+        engines[0].bind_peer_group_mrs(0, group, &[good]).unwrap();
+        assert!(engines[0].remove_peer_group(group));
+    });
+}
+
+/// One logical workload — a scatter, a barrier, a single write and a
+/// paged write to two peers — executed on a fresh DES cluster either
+/// untemplated or templated.
+fn run_workload(templated: bool) -> (Vec<Vec<u8>>, Vec<(u64, u64)>) {
+    let mut cluster = Cluster::new(RuntimeKind::Des, 3, 1, 2, 0xD15C);
+    let net = cluster.des_net().expect("DES cluster");
+    let payloads = {
+        let (mut cx, engines) = cluster.parts();
+        let sender = engines[0];
+        let (src, _) = sender.alloc_mr(0, 4096);
+        let fill: Vec<u8> = (0..4096u32).map(|i| (i % 249) as u8 + 1).collect();
+        src.buf.write(0, &fill);
+        let regions: Vec<_> = engines[1..].iter().map(|e| e.alloc_mr(0, 8192)).collect();
+        let descs: Vec<MrDesc> = regions.iter().map(|(_, d)| d.clone()).collect();
+        let group =
+            sender.add_peer_group(engines[1..].iter().map(|e| e.main_address()).collect());
+
+        let scattered = expect_flag(engines[1], &mut cx, 0, 0x21, 2);
+        let barried = expect_flag(engines[2], &mut cx, 0, 0x22, 1);
+        let pages = fabric_lib::engine::api::Pages::contiguous(0, 4, 512);
+        if templated {
+            sender.bind_peer_group_mrs(0, group, &descs).unwrap();
+            sender
+                .submit_scatter_templated(
+                    &mut cx,
+                    &src,
+                    group,
+                    &[
+                        TemplatedDst { peer: 0, len: 300, src: 0, dst: 100 },
+                        TemplatedDst { peer: 0, len: 200, src: 512, dst: 3000 },
+                    ],
+                    Some(0x21),
+                    Notify::Noop,
+                )
+                .unwrap();
+            sender
+                .submit_barrier_templated(&mut cx, group, 0x22, Notify::Noop)
+                .unwrap();
+            sender
+                .submit_single_write_templated(
+                    &mut cx,
+                    (&src, 64),
+                    1024,
+                    group,
+                    1,
+                    4096,
+                    None,
+                    Notify::Noop,
+                )
+                .unwrap();
+            sender
+                .submit_paged_writes_templated(
+                    &mut cx,
+                    512,
+                    (&src, &pages),
+                    group,
+                    1,
+                    &pages,
+                    None,
+                    Notify::Noop,
+                )
+                .unwrap();
+        } else {
+            sender
+                .submit_scatter(
+                    &mut cx,
+                    Some(group),
+                    &src,
+                    &[
+                        ScatterDst { len: 300, src: 0, dst: (descs[0].clone(), 100) },
+                        ScatterDst { len: 200, src: 512, dst: (descs[0].clone(), 3000) },
+                    ],
+                    Some(0x21),
+                    Notify::Noop,
+                )
+                .unwrap();
+            sender
+                .submit_barrier(&mut cx, 0, Some(group), &descs, 0x22, Notify::Noop)
+                .unwrap();
+            sender
+                .submit_single_write(
+                    &mut cx,
+                    (&src, 64),
+                    1024,
+                    (&descs[1], 4096),
+                    None,
+                    Notify::Noop,
+                )
+                .unwrap();
+            sender
+                .submit_paged_writes(
+                    &mut cx,
+                    512,
+                    (&src, &pages),
+                    (&descs[1], &pages),
+                    None,
+                    Notify::Noop,
+                )
+                .unwrap();
+        }
+        cx.wait(&scattered);
+        cx.wait(&barried);
+        cx.settle();
+        regions.iter().map(|(h, _)| h.buf.to_vec()).collect::<Vec<_>>()
+    };
+    let mut nic_bytes = Vec::new();
+    for node in 0..3u16 {
+        for nic in 0..2u8 {
+            nic_bytes.push(net.nic_bytes(NicAddr { node, gpu: 0, nic }));
+        }
+    }
+    cluster.shutdown();
+    (payloads, nic_bytes)
+}
+
+/// Acceptance gate: under a deterministic fabric with identical seeds,
+/// the templated path must emit the SAME WR stream as the untemplated
+/// one — observed as identical per-NIC byte counters (tx and rx, every
+/// NIC of every node) and identical landed payloads.
+#[test]
+fn templated_workload_emits_identical_wr_stream() {
+    let (plain_payloads, plain_nics) = run_workload(false);
+    let (tpl_payloads, tpl_nics) = run_workload(true);
+    assert_eq!(plain_payloads, tpl_payloads, "landed bytes diverged");
+    assert_eq!(plain_nics, tpl_nics, "per-NIC byte streams diverged");
+}
