@@ -13,6 +13,7 @@ use std::rc::Rc;
 
 use fabric_lib::engine::api::{EngineCosts, Pages};
 use fabric_lib::engine::des_engine::{Engine, OnDone};
+use fabric_lib::fabric::chaos::ChaosProfile;
 use fabric_lib::fabric::nic::NicAddr;
 use fabric_lib::fabric::profile::{GpuProfile, NicProfile};
 use fabric_lib::fabric::simnet::SimNet;
@@ -21,6 +22,7 @@ use fabric_lib::sim::Sim;
 use fabric_lib::util::table::{f, Table};
 
 struct Bed {
+    net: SimNet,
     sim: Sim,
     a: Engine,
     b: Engine,
@@ -40,6 +42,7 @@ fn bed(profile: NicProfile, nics: u8, extra_submit: u64) -> Bed {
     let a = Engine::new(&net, 0, 1, nics, GpuProfile::h100(), costs.clone(), 1);
     let b = Engine::new(&net, 1, 1, nics, GpuProfile::h100(), costs, 2);
     Bed {
+        net,
         sim: Sim::new(),
         a,
         b,
@@ -165,6 +168,36 @@ fn main() {
         "\npaper targets — Table 2: EFA 64KiB single 16 Gbps / CX7 44 Gbps; \
          1KiB paged 2.11 / 11.10 Mop/s; 64KiB paged saturates both.\n"
     );
+
+    // ---- Chaos overhead: throughput under extra wire jitter ----
+    //
+    // Tracks the cost of transport perturbation (and, transitively,
+    // of the failover bookkeeping) so future PRs can watch failover
+    // overhead: the same paged workload at 0% / 10% / 30% extra
+    // jitter (median = pct × base wire latency, chaos RNG seeded).
+    let mut cj = Table::new(
+        "Chaos. Paged 64 KiB throughput under extra wire jitter",
+        &["jitter", "EFA Gbps", "EFA frac", "CX7 Gbps", "CX7 frac"],
+    );
+    let pages = if fast { 512 } else { 2048 };
+    for &pct in &[0u32, 10, 30] {
+        let mut row = vec![format!("{pct}%")];
+        for (profile, nics) in [(NicProfile::efa(), 2u8), (NicProfile::connectx7(), 1u8)] {
+            let wire = profile.wire_ns;
+            let mut b = bed(profile, nics, 0);
+            if pct > 0 {
+                let chaos = ChaosProfile::jitter_pct(0xC4A0 + pct as u64, wire, pct);
+                let net = b.net.clone();
+                net.inject_chaos(&mut b.sim, &chaos);
+            }
+            let (g, _) = paged_write_rate(&mut b, 64 << 10, pages);
+            row.push(f(g, 0));
+            row.push(f(g / b.peak_gbps, 3));
+        }
+        cj.row(&row);
+    }
+    cj.print();
+    println!("\nchaos gate: jitter shifts latency, not delivered bytes — throughput should degrade gracefully, never lose pages.\n");
 }
 
 fn fmt_size(b: u64) -> String {

@@ -75,6 +75,9 @@ struct DState {
     reports: Rc<RefCell<Vec<ReqReport>>>,
     last_seen: HashMap<u16, Instant>,
     hb_timeout: Duration,
+    /// False once `stop_monitor` ran: the monitor tick stops
+    /// re-arming (lets DES failover scenarios quiesce).
+    monitor_on: bool,
 }
 
 /// A decoder node (one GPU's worth).
@@ -115,6 +118,7 @@ impl Decoder {
             reports: Rc::default(),
             last_seen: HashMap::new(),
             hb_timeout: 30_000_000, // 30 ms
+            monitor_on: true,
         }));
         let d = Decoder { state };
         let d2 = d.clone();
@@ -340,10 +344,21 @@ impl Decoder {
     /// stale transfers can no longer arrive from a dead transport
     /// (§4).
     pub fn start_monitor(&self, cx: &mut Cx, interval: Duration) {
+        self.state.borrow_mut().monitor_on = true;
         self.monitor_tick(cx, interval);
     }
 
+    /// Stop the heartbeat monitor at its next tick. Failover
+    /// scenarios call this once every request has drained so the DES
+    /// event queue can run to quiescence.
+    pub fn stop_monitor(&self) {
+        self.state.borrow_mut().monitor_on = false;
+    }
+
     fn monitor_tick(&self, cx: &mut Cx, interval: Duration) {
+        if !self.state.borrow().monitor_on {
+            return;
+        }
         let now = cx.now();
         let dead: Vec<u64> = {
             let mut s = self.state.borrow_mut();

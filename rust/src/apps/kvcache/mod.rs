@@ -24,7 +24,10 @@ pub mod scheduler;
 pub mod workload;
 
 pub use decoder::Decoder;
-pub use harness::{run_generic_kv_push, run_table3_row, run_table3_row_on, Table3Row};
+pub use harness::{
+    run_generic_kv_push, run_kv_failover, run_kv_failover_on, run_kv_nic_failover_on,
+    run_table3_row, run_table3_row_on, FailoverOutcome, Table3Row,
+};
 pub use layout::KvLayout;
 pub use prefiller::Prefiller;
 pub use proto::DispatchReq;

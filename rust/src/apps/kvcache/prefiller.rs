@@ -305,7 +305,7 @@ impl Prefiller {
                 .push((submit_t, cx.now()));
             this.on_write_done(cx, req_id, n_pages);
         });
-        engine.submit_paged_writes(
+        if let Err(e) = engine.submit_paged_writes(
             cx,
             page_bytes,
             (
@@ -326,11 +326,29 @@ impl Prefiller {
             ),
             Some(imm),
             Notify::Cont(on_done),
-        )
-        .expect("KV paged write");
+        ) {
+            self.fence_on_dead_fabric(&e);
+            return;
+        }
         if is_last {
             self.send_tail(cx, req_id);
         }
+    }
+
+    /// A submission failed. When every NIC of this GPU is down (chaos
+    /// NicDown took the whole group out), fence the node: stop
+    /// heartbeats and all processing, exactly as a hardware fabric
+    /// loss manifests — the decoder's heartbeat monitor reclaims the
+    /// request's pages and the scheduler re-dispatches elsewhere. Any
+    /// other submission error is a programming bug and still panics.
+    fn fence_on_dead_fabric(&self, err: &crate::util::err::Error) {
+        let mut s = self.state.borrow_mut();
+        let mask = s.engine.nic_health_mask(s.gpu);
+        assert_eq!(
+            mask, 0,
+            "prefiller submission failed with NICs still up: {err}"
+        );
+        s.killed = true;
     }
 
     /// Tail context: final single write carrying the +1 immediate.
@@ -357,16 +375,16 @@ impl Prefiller {
         };
         let this = self.clone();
         let on_done = cx.cont(move |cx: &mut Cx, _f: Fired| this.on_write_done(cx, req_id, 1));
-        engine
-            .submit_single_write(
-                cx,
-                (&tail_src, 0),
-                tail_bytes,
-                (&desc, off),
-                Some(imm),
-                Notify::Cont(on_done),
-            )
-            .expect("tail write");
+        if let Err(e) = engine.submit_single_write(
+            cx,
+            (&tail_src, 0),
+            tail_bytes,
+            (&desc, off),
+            Some(imm),
+            Notify::Cont(on_done),
+        ) {
+            self.fence_on_dead_fabric(&e);
+        }
     }
 
     fn on_write_done(&self, cx: &mut Cx, req_id: u64, _wrs: usize) {

@@ -78,6 +78,12 @@ impl Scheduler {
         }
     }
 
+    /// Live prefillers remaining in the fleet (the chaos failover
+    /// scenario asserts the fleet shrank, then kept serving).
+    pub fn live_prefillers(&self) -> usize {
+        self.s.borrow().prefillers.iter().filter(|p| p.alive).count()
+    }
+
     /// Requests dispatched so far.
     pub fn dispatched(&self) -> u64 {
         self.s.borrow().dispatched

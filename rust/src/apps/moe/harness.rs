@@ -186,6 +186,39 @@ pub fn run_epoch_with(
     iters: u64,
     trace_sink: Option<Rc<RefCell<Vec<crate::engine::des_engine::SubmitTrace>>>>,
 ) -> MoeLatencies {
+    run_epoch_inner(cfg, strat, nic, nics_per_gpu, iters, trace_sink, None)
+}
+
+/// [`run_epoch_with`] under transport perturbation: the chaos profile
+/// is installed on the cluster's (shared) fabric before the first
+/// iteration, so every dispatch/combine runs with the extra jitter /
+/// bounded reordering / NIC events it describes. The MoE protocol is
+/// count-gated (`expect_imm_count` per round) with no ordering
+/// assumptions, so every clock-independent output — routing plan,
+/// kernel durations, payloads — must be bit-identical to an
+/// unperturbed run; only latencies move.
+pub fn run_epoch_with_chaos(
+    cfg: &MoeConfig,
+    strat: Strategy,
+    nic: NicProfile,
+    nics_per_gpu: u8,
+    iters: u64,
+    chaos: &crate::fabric::chaos::ChaosProfile,
+) -> MoeLatencies {
+    run_epoch_inner(cfg, strat, nic, nics_per_gpu, iters, None, Some(chaos))
+}
+
+/// One DES epoch-cluster body behind both public variants, so the
+/// chaos and non-chaos paths cannot drift.
+fn run_epoch_inner(
+    cfg: &MoeConfig,
+    strat: Strategy,
+    nic: NicProfile,
+    nics_per_gpu: u8,
+    iters: u64,
+    trace_sink: Option<Rc<RefCell<Vec<crate::engine::des_engine::SubmitTrace>>>>,
+    chaos: Option<&crate::fabric::chaos::ChaosProfile>,
+) -> MoeLatencies {
     let nodes = cfg.ranks.div_ceil(cfg.gpus_per_node) as u16;
     let mut cluster = Cluster::new_with(
         RuntimeKind::Des,
@@ -204,6 +237,9 @@ pub fn run_epoch_with(
     let engines = cluster.engines_rc();
     let out = {
         let (mut cx, _) = cluster.parts();
+        if let Some(p) = chaos {
+            engines[0].inject_chaos(&mut cx, p);
+        }
         run_epoch_on(&mut cx, &engines, cfg, strat, GpuProfile::h100(), iters)
     };
     cluster.shutdown();
@@ -339,6 +375,43 @@ mod tests {
         run_on_both(3, 1, 2, 0x40F, |cx, engines| {
             run_generic_dispatch_round(cx, engines, 4, 128);
         });
+    }
+
+    #[test]
+    fn chaos_moe_epoch_reordering_leaves_results_bit_identical() {
+        // The acceptance gate for the MoE protocol's
+        // ordering-independence: a decode epoch under aggressive
+        // reordering chaos must complete (no deadlock — the protocol
+        // gates on counters, never on order) and produce the exact
+        // kernel-duration distributions of the unperturbed run (those
+        // are pure functions of the routing plan, i.e. the
+        // dispatch/combine RESULTS; only latencies may move).
+        let cfg = MoeConfig::tiny();
+        let chaos = crate::fabric::chaos::ChaosProfile::new(0xC4A0)
+            .with_reorder(150_000, 32)
+            .with_extra_jitter(crate::sim::rng::Jitter::tight(2_000.0));
+        let mut base = run_decode_epoch(&cfg, MoeImpl::Ours, NicProfile::efa(), 2, 3);
+        let mut perturbed = run_epoch_with_chaos(
+            &cfg,
+            MoeImpl::Ours.strategy(),
+            NicProfile::efa(),
+            2,
+            3,
+            &chaos,
+        );
+        assert_eq!(perturbed.dispatch.len(), base.dispatch.len(), "all ranks finished");
+        for (name, b, p) in [
+            ("d_send", &mut base.d_send_kernel, &mut perturbed.d_send_kernel),
+            ("d_recv", &mut base.d_recv_kernel, &mut perturbed.d_recv_kernel),
+            ("c_send", &mut base.c_send_kernel, &mut perturbed.c_send_kernel),
+            ("c_recv", &mut base.c_recv_kernel, &mut perturbed.c_recv_kernel),
+        ] {
+            assert_eq!(
+                b.sorted_samples(),
+                p.sorted_samples(),
+                "{name} kernel durations must be reorder-invariant"
+            );
+        }
     }
 
     #[test]

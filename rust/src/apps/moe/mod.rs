@@ -23,6 +23,7 @@ pub mod routing;
 
 pub use config::MoeConfig;
 pub use harness::{
-    run_decode_epoch, run_epoch_on, run_generic_dispatch_round, MoeImpl, MoeLatencies,
+    run_decode_epoch, run_epoch_on, run_epoch_with_chaos, run_generic_dispatch_round, MoeImpl,
+    MoeLatencies,
 };
 pub use routing::RoutingPlan;

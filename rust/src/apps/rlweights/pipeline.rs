@@ -553,6 +553,30 @@ mod tests {
     }
 
     #[test]
+    fn chaos_weight_sync_invariant_under_reordering() {
+        // The RL weight-sync protocol (count-gated shard writes + an
+        // engine barrier) assumes nothing about delivery order, so it
+        // must pass its own payload/expectation asserts under
+        // aggressive reordering chaos on both runtimes. (On the
+        // threaded runtime the chaos knob is the fabric's shuffle
+        // window; on DES it is a bounded commit delay.)
+        use crate::engine::traits::{Cluster, RuntimeKind};
+        use crate::fabric::chaos::ChaosProfile;
+        let chaos = ChaosProfile::new(0x51EE9).with_reorder(200_000, 32);
+        for kind in [RuntimeKind::Des, RuntimeKind::Threaded] {
+            let mut cluster = Cluster::new(kind, 5, 1, 2, 0x51EE8);
+            {
+                let (mut cx, engines) = cluster.parts();
+                engines[0].inject_chaos(&mut cx, &chaos);
+                let (trainers, replicas) = engines.split_at(3);
+                run_generic_weight_sync(&mut cx, trainers, replicas, 4096);
+                cx.settle();
+            }
+            cluster.shutdown();
+        }
+    }
+
+    #[test]
     fn tiny_pipeline_completes_with_overlap() {
         let spec = RlModelSpec::tiny();
         let report = run_p2p_transfer(&spec, NicProfile::connectx7(), 1.0);

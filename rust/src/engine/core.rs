@@ -36,7 +36,7 @@
 //! time.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::api::{MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst};
@@ -269,6 +269,152 @@ impl PeerGroups {
 }
 
 // ---------------------------------------------------------------------
+// NIC health + failover policy (chaos layer)
+// ---------------------------------------------------------------------
+
+/// Per-domain-group NIC link-state table, consulted by every
+/// submission path: a downed NIC is excluded from new work — the
+/// untemplated routes and the pre-bound [`GroupTemplate`] routes alike
+/// (templates keep all per-peer routes and the mask is applied at
+/// patch time, so recovery needs no rebind). Atomic so the threaded
+/// runtime reads it lock-free on the hot path; updated by the fabric's
+/// link-state hooks (chaos NicDown/NicUp) or by an operator override
+/// (`set_nic_health`).
+pub struct NicHealth {
+    mask: AtomicU64,
+    fanout: usize,
+}
+
+impl NicHealth {
+    /// All `fanout` NICs up (fanout ≤ 64).
+    pub fn new(fanout: usize) -> Self {
+        assert!(fanout <= 64, "NicHealth tracks at most 64 NICs per group");
+        NicHealth {
+            mask: AtomicU64::new(if fanout == 64 { u64::MAX } else { (1u64 << fanout) - 1 }),
+            fanout,
+        }
+    }
+
+    /// Flip one NIC's health.
+    pub fn set(&self, nic: usize, up: bool) {
+        if nic >= self.fanout {
+            return;
+        }
+        if up {
+            self.mask.fetch_or(1 << nic, Ordering::Release);
+        } else {
+            self.mask.fetch_and(!(1 << nic), Ordering::Release);
+        }
+    }
+
+    /// Current health bitmask (bit `i` set = NIC `i` up).
+    pub fn mask(&self) -> u64 {
+        self.mask.load(Ordering::Acquire)
+    }
+
+    /// True when NIC `i` is up.
+    pub fn is_up(&self, nic: usize) -> bool {
+        self.mask() & (1 << nic) != 0
+    }
+
+    /// True when every NIC of the group is up (the fast path: no
+    /// remapping work at all).
+    pub fn all_up(&self) -> bool {
+        self.mask().count_ones() as usize == self.fanout
+    }
+
+    /// Number of healthy NICs.
+    pub fn up_count(&self) -> usize {
+        self.mask().count_ones() as usize
+    }
+
+    /// Healthy NIC indices, ascending.
+    pub fn healthy(&self) -> Vec<usize> {
+        let m = self.mask();
+        (0..self.fanout).filter(|i| m & (1 << i) != 0).collect()
+    }
+
+    /// NICs in the group.
+    pub fn fanout(&self) -> usize {
+        self.fanout
+    }
+}
+
+/// What the engine does with an in-flight WR that fails on a dead NIC
+/// (fabric [`crate::fabric::nic::CqeKind::WrError`]).
+///
+/// See the trait-level docs on
+/// [`super::traits::TransferEngine::set_failover_policy`] for the full
+/// caller-visible contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FailoverPolicy {
+    /// Resubmit the WR on a surviving NIC of the same group
+    /// (transparent failover, the default). The transfer's completion
+    /// then still means "delivered"; each underlying failure is
+    /// counted in `transport_errors()`. After every NIC of the group
+    /// has been tried once the WR degrades to [`FailoverPolicy::ErrorOut`].
+    #[default]
+    Resubmit,
+    /// Give up immediately: count the error, complete the transfer
+    /// WITHOUT delivery (so waiters do not hang), and leave the
+    /// receiver's ImmCounter un-bumped. Callers observe the failure
+    /// via `transport_errors()` (and the missing immediates).
+    ErrorOut,
+}
+
+/// Project a rotation lane onto the healthy indices of `mask`: masked
+/// indices are never returned, and consecutive lanes cycle round-robin
+/// over the survivors (fairness is preserved on the surviving subset).
+/// `None` when no NIC is up.
+pub fn project_lane(lane: usize, mask: u64, fanout: usize) -> Option<usize> {
+    let survivors: u32 = (mask & mask_of(fanout)).count_ones();
+    if survivors == 0 {
+        return None;
+    }
+    let want = (lane % survivors as usize) as u32;
+    let mut seen = 0u32;
+    for i in 0..fanout {
+        if mask & (1 << i) != 0 {
+            if seen == want {
+                return Some(i);
+            }
+            seen += 1;
+        }
+    }
+    unreachable!("count_ones said there were survivors")
+}
+
+fn mask_of(fanout: usize) -> u64 {
+    if fanout >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << fanout) - 1
+    }
+}
+
+/// Remap routed writes off unhealthy local NICs: each write planned
+/// for lane `L` egresses on `survivors[L % survivors.len()]` instead.
+/// Only the local lane moves — the pre-resolved remote `(NIC, rkey)`
+/// route is untouched (any local NIC may target any remote region;
+/// the §3.2 NIC-`i`↔NIC-`i` pairing is a load-balancing convention,
+/// not a reachability constraint). Errors when every NIC of the group
+/// is down.
+pub fn remap_routed(routed: &mut [RoutedWrite], health: &NicHealth) -> Result<()> {
+    let mask = health.mask();
+    let fanout = health.fanout();
+    for (p, _) in routed.iter_mut() {
+        match project_lane(p.nic, mask, fanout) {
+            Some(nic) => p.nic = nic,
+            None => bail!(
+                "all {fanout} NICs of the domain group are down; \
+                 submission rejected (see FailoverPolicy docs)"
+            ),
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
 // NIC rotation
 // ---------------------------------------------------------------------
 
@@ -299,6 +445,20 @@ impl Rotation {
     /// a load-balancing hint, so that race is benign.
     pub fn next(&self) -> usize {
         self.0.load(Ordering::Relaxed).wrapping_add(1)
+    }
+
+    /// Mask-aware [`Rotation::next`]: the peeked cursor projected onto
+    /// the healthy indices of `mask` via [`project_lane`] — a masked
+    /// index is never returned, and consecutive cursor values cycle
+    /// round-robin over the survivors. `None` when the mask is empty.
+    pub fn next_masked(&self, mask: u64, fanout: usize) -> Option<usize> {
+        project_lane(self.next(), mask, fanout)
+    }
+
+    /// Mask-aware [`Rotation::bump`]: advances the cursor and projects
+    /// the new value onto the healthy indices of `mask`.
+    pub fn bump_masked(&self, mask: u64, fanout: usize) -> Option<usize> {
+        project_lane(self.bump(), mask, fanout)
     }
 }
 
@@ -784,6 +944,70 @@ mod tests {
         assert_eq!(r.next(), 2);
         assert_eq!(r.bump(), 2);
         assert_eq!(r.bump(), 3);
+    }
+
+    #[test]
+    fn chaos_masked_rotation_never_yields_masked_index_and_stays_fair() {
+        // 4 NICs, NIC 2 down.
+        let mask: u64 = 0b1011;
+        let r = Rotation::new();
+        let mut hits = [0u32; 4];
+        for _ in 0..300 {
+            let nic = r.bump_masked(mask, 4).expect("survivors exist");
+            assert_ne!(nic, 2, "masked cursor must never yield the masked index");
+            hits[nic] += 1;
+        }
+        // Round-robin fairness over the survivors: 300 bumps over 3
+        // survivors = exactly 100 each.
+        assert_eq!(&hits[..], &[100, 100, 0, 100]);
+        // Peek agrees with the following bump and does not advance.
+        let peek = r.next_masked(mask, 4).unwrap();
+        assert_eq!(r.next_masked(mask, 4).unwrap(), peek);
+        assert_eq!(r.bump_masked(mask, 4).unwrap(), peek);
+        // Empty mask: no NIC to yield.
+        assert_eq!(r.next_masked(0, 4), None);
+        assert_eq!(r.bump_masked(0, 4), None);
+        // Single survivor: always that one.
+        for _ in 0..8 {
+            assert_eq!(r.bump_masked(0b0100, 4), Some(2));
+        }
+    }
+
+    #[test]
+    fn chaos_nic_health_tracks_flips() {
+        let h = NicHealth::new(2);
+        assert!(h.all_up());
+        assert_eq!(h.healthy(), vec![0, 1]);
+        h.set(1, false);
+        assert!(!h.all_up());
+        assert!(h.is_up(0) && !h.is_up(1));
+        assert_eq!(h.up_count(), 1);
+        assert_eq!(h.healthy(), vec![0]);
+        h.set(1, true);
+        assert!(h.all_up());
+        // Out-of-range flips are ignored.
+        h.set(17, false);
+        assert!(h.all_up());
+    }
+
+    #[test]
+    fn chaos_remap_routed_moves_lanes_onto_survivors() {
+        let d = desc(2, 2);
+        let mut routed =
+            route_single_write(2, 0, 0, 4 * SPLIT_THRESHOLD, (&d, 0), None).unwrap();
+        assert_eq!(routed.len(), 2);
+        let h = NicHealth::new(2);
+        h.set(0, false);
+        remap_routed(&mut routed, &h).unwrap();
+        for (p, (dst_nic, _)) in &routed {
+            assert_eq!(p.nic, 1, "all egress moves to the surviving NIC");
+            // The remote route is untouched: destination NIC/rkey stay
+            // as planned.
+            assert_eq!(dst_nic.node, 2);
+        }
+        h.set(1, false);
+        let err = remap_routed(&mut routed, &h).unwrap_err();
+        assert!(err.to_string().contains("all 2 NICs"), "{err}");
     }
 
     #[test]

@@ -30,12 +30,14 @@ use super::api::{
     EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
 use super::core::{
-    route_barrier, route_barrier_templated, route_paged_writes, route_paged_writes_templated,
-    route_scatter, route_scatter_templated, route_single_write, route_single_write_templated,
-    ImmTable, PeerGroups, RecvPool, Rotation, RoutedWrite, TransferTable,
+    project_lane, remap_routed, route_barrier, route_barrier_templated, route_paged_writes,
+    route_paged_writes_templated, route_scatter, route_scatter_templated, route_single_write,
+    route_single_write_templated, FailoverPolicy, ImmTable, NicHealth, PeerGroups, RecvPool,
+    Rotation, RoutedWrite, TransferTable,
 };
 use super::model::Fired;
 use super::traits::{Cx, Notify, OnRecv, OnWatch, RuntimeKind, TransferEngine, UvmWatcher};
+use crate::fabric::chaos::ChaosProfile;
 use crate::fabric::mem::{DmaBuf, DmaSlice, RKey};
 use crate::fabric::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
 use crate::fabric::profile::GpuProfile;
@@ -44,6 +46,7 @@ use crate::fabric::topology::DeviceId;
 use crate::sim::time::Instant;
 use crate::sim::{Rng, Sim};
 use crate::util::err::Result;
+use crate::util::fasthash::FastMap;
 
 /// Sender-side completion notification (paper Fig 2 `OnDone`).
 pub enum OnDone {
@@ -79,6 +82,9 @@ struct Group {
     worker_free: Instant,
     /// NIC rotation cursor for load balancing.
     rotation: Rotation,
+    /// Link-state table: downed NICs are excluded from new submissions
+    /// (kept in sync with the fabric through its health hooks).
+    health: NicHealth,
     /// Back-pressured WRs per NIC index.
     pending: Vec<VecDeque<WorkRequest>>,
     /// Posted receive buffers by wr_id.
@@ -106,6 +112,27 @@ struct State {
     watchers: HashMap<u64, Watcher>,
     /// Optional submission-trace sink (Table 8 benches).
     trace_sink: Option<Rc<RefCell<Vec<SubmitTrace>>>>,
+    /// True once chaos was injected or a NIC health override landed:
+    /// from then on posted WRs are recorded in `retry` so a fabric
+    /// `WrError` can resubmit them (the happy path records nothing).
+    armed: bool,
+    failover: FailoverPolicy,
+    /// Transport-level failures observed (dead-NIC WRs), resubmitted
+    /// or not.
+    transport_errors: u64,
+    /// In-flight WRs by id, kept only while `armed` (see above).
+    retry: FastMap<u64, RetryEntry>,
+}
+
+/// Everything needed to repost a failed WR on a surviving NIC.
+struct RetryEntry {
+    gpu: usize,
+    /// Local NIC index the WR last went out on.
+    lane: usize,
+    wr: WorkRequest,
+    /// Failures so far; capped at the group fanout before degrading
+    /// to error-out.
+    attempts: u8,
 }
 
 struct Watcher {
@@ -138,6 +165,7 @@ impl Engine {
                     .collect();
                 Group {
                     pending: nics.iter().map(|_| VecDeque::new()).collect(),
+                    health: NicHealth::new(nics.len()),
                     nics,
                     worker_free: 0,
                     rotation: Rotation::new(),
@@ -162,10 +190,15 @@ impl Engine {
                 next_watcher: 1,
                 watchers: HashMap::new(),
                 trace_sink: None,
+                armed: false,
+                failover: FailoverPolicy::default(),
+                transport_errors: 0,
+                retry: FastMap::default(),
             })),
         };
         // Hook every NIC's completion queue to the owning group's
-        // progress function.
+        // progress function, and its link state to the group's health
+        // table (chaos NicDown/NicUp events flow in through this).
         for gpu in 0..gpus {
             for nic in 0..nics_per_gpu {
                 let addr = NicAddr { node, gpu, nic };
@@ -174,9 +207,55 @@ impl Engine {
                     addr,
                     Rc::new(move |sim: &mut Sim| e.progress(sim, gpu as usize, addr)),
                 );
+                let e2 = engine.clone();
+                net.set_health_hook(
+                    addr,
+                    Rc::new(move |_sim: &mut Sim, up| e2.set_nic_health(gpu, nic, up)),
+                );
             }
         }
         engine
+    }
+
+    // ------------------------------------------------------------------
+    // Transport perturbation (chaos) + NIC health
+    // ------------------------------------------------------------------
+
+    /// Install a [`ChaosProfile`] on the shared fabric (fabric-wide)
+    /// and arm the failover bookkeeping on this engine. NicDown/NicUp
+    /// events reach every engine on the fabric through the link-state
+    /// hooks registered at construction.
+    pub fn inject_chaos(&self, sim: &mut Sim, profile: &ChaosProfile) {
+        let net = {
+            let mut s = self.state.borrow_mut();
+            s.armed = true;
+            s.net.clone()
+        };
+        net.inject_chaos(sim, profile);
+    }
+
+    /// Engine-level health override for one local NIC (also how the
+    /// fabric's link-state hooks report chaos events). Downed NICs are
+    /// excluded from all new submissions at patch time.
+    pub fn set_nic_health(&self, gpu: u8, nic: u8, up: bool) {
+        let mut s = self.state.borrow_mut();
+        s.armed = true;
+        s.groups[gpu as usize].health.set(nic as usize, up);
+    }
+
+    /// Health bitmask of `gpu`'s domain group.
+    pub fn nic_health_mask(&self, gpu: u8) -> u64 {
+        self.state.borrow().groups[gpu as usize].health.mask()
+    }
+
+    /// Select the in-flight failure policy (see the trait docs).
+    pub fn set_failover_policy(&self, policy: FailoverPolicy) {
+        self.state.borrow_mut().failover = policy;
+    }
+
+    /// Transport-level failures observed so far.
+    pub fn transport_errors(&self) -> u64 {
+        self.state.borrow().transport_errors
     }
 
     /// Install a trace sink recording every submission's timing
@@ -287,17 +366,23 @@ impl Engine {
         };
         let this = self.clone();
         sim.at(post_at, move |sim| {
-            let net = this.state.borrow().net.clone();
-            let ok = net.post(
-                sim,
-                local,
-                WorkRequest {
-                    id: wr_id,
-                    qp: QpId(0), // SEND/RECV QP class
-                    op: WrOp::Send { dst, payload },
-                    chained: false,
-                },
-            );
+            let wr = WorkRequest {
+                id: wr_id,
+                qp: QpId(0), // SEND/RECV QP class
+                op: WrOp::Send { dst, payload },
+                chained: false,
+            };
+            let net = {
+                let mut s = this.state.borrow_mut();
+                if s.armed {
+                    s.retry.insert(
+                        wr_id,
+                        RetryEntry { gpu: gpu as usize, lane: 0, wr: wr.clone(), attempts: 0 },
+                    );
+                }
+                s.net.clone()
+            };
+            let ok = net.post(sim, local, wr);
             assert!(ok, "send queue full on SEND path");
         });
     }
@@ -370,8 +455,8 @@ impl Engine {
             dst,
             imm,
         )?;
+        self.execute_routed(sim, handle, routed, on_done)?;
         self.bump_rotation(gpu);
-        self.execute_routed(sim, handle, routed, on_done);
         Ok(())
     }
 
@@ -396,8 +481,8 @@ impl Engine {
             dst,
             imm,
         )?;
+        self.execute_routed(sim, handle, routed, on_done)?;
         self.bump_rotation(gpu);
-        self.execute_routed(sim, handle, routed, on_done);
         Ok(())
     }
 
@@ -459,8 +544,8 @@ impl Engine {
             self.state.borrow().peer_groups.check(group, dsts.len());
         }
         let routed = route_scatter(self.fanout(gpu), self.peek_rotation(gpu), dsts, imm)?;
+        self.execute_routed(sim, src, routed, on_done)?;
         self.bump_rotation(gpu);
-        self.execute_routed(sim, src, routed, on_done);
         Ok(())
     }
 
@@ -480,14 +565,33 @@ impl Engine {
         if cfg!(debug_assertions) {
             self.state.borrow().peer_groups.check(group, dsts.len());
         }
-        // Route BEFORE allocating the scratch source: a rejected
-        // barrier (§3.2 mismatch) must not register anything.
+        // Route AND health-check BEFORE allocating the scratch source:
+        // a rejected barrier (§3.2 mismatch, all NICs down) must not
+        // register anything.
         let routed = route_barrier(self.fanout(gpu), self.peek_rotation(gpu), dsts, imm)?;
-        self.bump_rotation(gpu);
+        self.ensure_group_up(gpu)?;
         // Zero-length writes need a 1-byte-capable source; use a tiny
         // scratch region (pre-registered once on the templated path).
         let (scratch, _) = self.alloc_mr(gpu, 1);
-        self.execute_routed(sim, &scratch, routed, on_done);
+        self.execute_routed(sim, &scratch, routed, on_done)?;
+        self.bump_rotation(gpu);
+        Ok(())
+    }
+
+    /// Bail (and count the outage) when every NIC of `gpu`'s group is
+    /// down — called by paths that would otherwise allocate state
+    /// before [`Engine::execute_routed`] could reject the submission.
+    fn ensure_group_up(&self, gpu: u8) -> Result<()> {
+        let mut s = self.state.borrow_mut();
+        if s.groups[gpu as usize].health.up_count() == 0 {
+            s.transport_errors += 1;
+            let fanout = s.groups[gpu as usize].nics.len();
+            drop(s);
+            crate::bail!(
+                "all {fanout} NICs of the domain group are down; \
+                 submission rejected (see FailoverPolicy docs)"
+            );
+        }
         Ok(())
     }
 
@@ -513,8 +617,8 @@ impl Engine {
         let (handle, src_off) = src;
         let routed =
             route_single_write_templated(&t, t.rotation.next(), peer, src_off, len, dst_off, imm)?;
+        self.execute_routed(sim, handle, routed, on_done)?;
         t.rotation.bump();
-        self.execute_routed(sim, handle, routed, on_done);
         Ok(())
     }
 
@@ -541,8 +645,8 @@ impl Engine {
             dst_pages,
             imm,
         )?;
+        self.execute_routed(sim, handle, routed, on_done)?;
         t.rotation.bump();
-        self.execute_routed(sim, handle, routed, on_done);
         Ok(())
     }
 
@@ -559,8 +663,8 @@ impl Engine {
     ) -> Result<()> {
         let t = self.state.borrow().peer_groups.template(group)?;
         let routed = route_scatter_templated(&t, t.rotation.next(), dsts, imm)?;
+        self.execute_routed(sim, src, routed, on_done)?;
         t.rotation.bump();
-        self.execute_routed(sim, src, routed, on_done);
         Ok(())
     }
 
@@ -574,9 +678,10 @@ impl Engine {
         on_done: OnDone,
     ) -> Result<()> {
         let t = self.state.borrow().peer_groups.template(group)?;
-        let routed = route_barrier_templated(&t, t.rotation.bump(), imm);
+        let routed = route_barrier_templated(&t, t.rotation.next(), imm);
         let scratch = t.scratch.clone();
-        self.execute_routed(sim, &scratch, routed, on_done);
+        self.execute_routed(sim, &scratch, routed, on_done)?;
+        t.rotation.bump();
         Ok(())
     }
 
@@ -695,15 +800,35 @@ impl Engine {
     /// Execute routed writes (each already paired with its destination
     /// `(NIC, rkey)` by [`super::core`]); charges worker CPU and posts
     /// WRs at the modeled times (chained where the NIC supports it).
+    /// Downed local NICs are masked here — at patch time, after
+    /// routing — so untemplated and templated submissions alike egress
+    /// only on healthy NICs; errs when the whole group is down.
     fn execute_routed(
         &self,
         sim: &mut Sim,
         src: &MrHandle,
-        routed: Vec<RoutedWrite>,
+        mut routed: Vec<RoutedWrite>,
         on_done: OnDone,
-    ) {
+    ) -> Result<()> {
         assert!(!routed.is_empty(), "empty transfer");
         let gpu = src.device.gpu as usize;
+        {
+            let mut s = self.state.borrow_mut();
+            let res = {
+                let health = &s.groups[gpu].health;
+                if health.all_up() {
+                    Ok(())
+                } else {
+                    remap_routed(&mut routed, health)
+                }
+            };
+            if let Err(e) = res {
+                // An all-NICs-down rejection is a transport failure
+                // too: count it so scenarios can observe the outage.
+                s.transport_errors += 1;
+                return Err(e);
+            }
+        }
         let now = sim.now();
         let posts = {
             let mut s = self.state.borrow_mut();
@@ -737,6 +862,12 @@ impl Engine {
                     },
                     chained,
                 };
+                if s.armed {
+                    s.retry.insert(
+                        wr_id,
+                        RetryEntry { gpu, lane: p.nic, wr: wr.clone(), attempts: 0 },
+                    );
+                }
                 posts.push((t, p.nic, wr));
             }
             let g = &mut s.groups[gpu];
@@ -762,6 +893,7 @@ impl Engine {
                 }
             });
         }
+        Ok(())
     }
 
     /// Domain progress: runs when a NIC signals completions (stands in
@@ -799,11 +931,18 @@ impl Engine {
     fn handle_cqe(&self, sim: &mut Sim, gpu: usize, addr: NicAddr, cqe: Cqe) {
         match cqe.kind {
             CqeKind::SendDone | CqeKind::WriteDone => {
-                let done = self.state.borrow_mut().transfers.complete_wr(cqe.wr_id);
+                let done = {
+                    let mut s = self.state.borrow_mut();
+                    if s.armed {
+                        s.retry.remove(&cqe.wr_id);
+                    }
+                    s.transfers.complete_wr(cqe.wr_id)
+                };
                 if let Some(on_done) = done {
                     self.fire_on_done(sim, on_done);
                 }
             }
+            CqeKind::WrError => self.on_wr_error(sim, cqe.wr_id),
             CqeKind::ImmRecvd { imm, .. } => {
                 let (waiter, dispatch) = {
                     let mut s = self.state.borrow_mut();
@@ -847,6 +986,71 @@ impl Engine {
                     // into the callback's `Fired` — no per-message
                     // copy on the Cont path.
                     sim.after(dispatch, move |s| cb(s, Fired::bytes(payload)));
+                }
+            }
+        }
+    }
+
+    /// A WR died on a downed NIC (fabric `WrError`). Under
+    /// [`FailoverPolicy::Resubmit`] repost it on the group's next
+    /// healthy NIC (the payload provably did not commit, so this can
+    /// never duplicate); cap attempts at the group fanout, then — or
+    /// under [`FailoverPolicy::ErrorOut`] immediately — count the
+    /// error and complete the transfer undelivered so waiters do not
+    /// hang (the receiver's ImmCounter stays un-bumped; see the trait
+    /// docs for the caller-visible contract).
+    fn on_wr_error(&self, sim: &mut Sim, wr_id: u64) {
+        enum Act {
+            Retry { gpu: usize, nic_idx: usize, wr: WorkRequest },
+            Fail(Option<OnDone>),
+        }
+        let act = {
+            let mut s = self.state.borrow_mut();
+            s.transport_errors += 1;
+            let entry = s.retry.remove(&wr_id);
+            match entry {
+                Some(mut e) if s.failover == FailoverPolicy::Resubmit => {
+                    let g = &s.groups[e.gpu];
+                    let fanout = g.nics.len();
+                    e.attempts += 1;
+                    let lane = if (e.attempts as usize) <= fanout {
+                        project_lane(e.lane + e.attempts as usize, g.health.mask(), fanout)
+                    } else {
+                        None
+                    };
+                    match lane {
+                        Some(nic) => {
+                            let wr = e.wr.clone();
+                            let gpu = e.gpu;
+                            // e.lane stays the ORIGINAL lane: with a
+                            // stable mask, lane+1..=lane+fanout then
+                            // projects onto every survivor before the
+                            // attempt cap degrades to error-out.
+                            s.retry.insert(wr_id, e);
+                            Act::Retry { gpu, nic_idx: nic, wr }
+                        }
+                        None => Act::Fail(s.transfers.complete_wr(wr_id)),
+                    }
+                }
+                _ => Act::Fail(s.transfers.complete_wr(wr_id)),
+            }
+        };
+        match act {
+            Act::Retry { gpu, nic_idx, wr } => {
+                let this = self.clone();
+                sim.defer(move |sim| {
+                    let (net, local) = {
+                        let s = this.state.borrow();
+                        (s.net.clone(), s.groups[gpu].nics[nic_idx])
+                    };
+                    if !net.post(sim, local, wr.clone()) {
+                        this.state.borrow_mut().groups[gpu].pending[nic_idx].push_back(wr);
+                    }
+                });
+            }
+            Act::Fail(done) => {
+                if let Some(d) = done {
+                    self.fire_on_done(sim, d);
                 }
             }
         }
@@ -1127,6 +1331,26 @@ impl TransferEngine for Engine {
                 move |sim, old, new| c.fire_des(sim, Fired::pair(old, new)),
             )),
         }
+    }
+
+    fn inject_chaos(&self, cx: &mut Cx, profile: &ChaosProfile) {
+        Engine::inject_chaos(self, cx.sim(), profile)
+    }
+
+    fn set_nic_health(&self, gpu: u8, nic: u8, up: bool) {
+        Engine::set_nic_health(self, gpu, nic, up)
+    }
+
+    fn nic_health_mask(&self, gpu: u8) -> u64 {
+        Engine::nic_health_mask(self, gpu)
+    }
+
+    fn set_failover_policy(&self, policy: FailoverPolicy) {
+        Engine::set_failover_policy(self, policy)
+    }
+
+    fn transport_errors(&self) -> u64 {
+        Engine::transport_errors(self)
     }
 }
 

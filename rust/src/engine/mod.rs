@@ -5,7 +5,8 @@
 //! logic either. The module is layered along that split:
 //!
 //! ```text
-//!   apps/ scenarios (KvCache Table-3, MoE epochs, RL pipeline)
+//!   apps/ scenarios (KvCache Table-3 + NIC-failover, MoE epochs
+//!        │ under chaos, RL pipeline)
 //!        │ written once against &mut Cx + dyn TransferEngine
 //!        ▼
 //!   [`model`] — runtime-neutral compute/clock model: delayed
@@ -13,7 +14,10 @@
 //!        │ per-stream kernels (`ComputeModel`), NVLink pushes,
 //!        │ serial H2D/prep/submit resources, barrier arrival
 //!        ▼
-//!   [`traits`] — the dyn-safe Fig-2 trait + `Cx`/`Notify`/`Cluster`
+//!   [`traits`] — the dyn-safe Fig-2 trait + `Cx`/`Notify`/`Cluster`,
+//!        │ plus the chaos/health surface: `inject_chaos`,
+//!        │ `set_nic_health`, `set_failover_policy`,
+//!        │ `transport_errors`
 //!        │
 //!        ├── [`des_engine::Engine`]      (virtual clock, deterministic)
 //!        └── [`threaded::ThreadedEngine`] (pinned threads, wall clock)
@@ -23,12 +27,20 @@
 //!        rkeys and barrier scratch resolved once at
 //!        `bind_peer_group_mrs`, invalidated on `remove_peer_group`),
 //!        imm accounting, transfer/WR completion tables, recv
-//!        matching, NIC rotation, plan→rkey routing (§3.2 equal-NIC
-//!        invariant as a real error path) and the templated
-//!        route-patching fast path
+//!        matching, NIC rotation (mask-aware), plan→rkey routing
+//!        (§3.2 equal-NIC invariant as a real error path), the
+//!        templated route-patching fast path, and the chaos-layer
+//!        `NicHealth` table + `FailoverPolicy` + lane remapping that
+//!        keep downed NICs out of every submission at patch time
 //!        │
 //!   [`api`], [`wire`], [`sharding`], [`imm_counter`] — vocabulary
 //!        types, wire format, pure sharding planner, counter logic
+//!        │
+//!   fabric chaos ([`crate::fabric::chaos`]) — seeded, deterministic
+//!        transport perturbation UNDER the engine: per-chunk jitter,
+//!        bounded commit reordering, scheduled NicDown/NicUp with
+//!        `WrError` completions and link-state hooks back up into the
+//!        engines' health tables
 //! ```
 //!
 //! * [`traits`] — the [`traits::TransferEngine`] trait: the full
@@ -80,7 +92,7 @@ pub mod wire;
 pub use api::{
     EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
-pub use self::core::{GroupTemplate, PeerTemplate};
+pub use self::core::{FailoverPolicy, GroupTemplate, NicHealth, PeerTemplate};
 pub use des_engine::{Engine, OnDone, SubmitTrace, UvmWatcherHandle};
 pub use imm_counter::{ImmCounter, ImmEvent};
 pub use model::{

@@ -18,7 +18,7 @@
 //! overhead numbers (Table 8): `TraceT` records real monotonic
 //! timestamps from `submit_*()` to the last posted WRITE.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -28,17 +28,50 @@ use super::api::{
     MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
 use super::core::{
-    route_barrier, route_barrier_templated, route_paged_writes, route_paged_writes_templated,
-    route_scatter, route_scatter_templated, route_single_write, route_single_write_templated,
-    ImmTable, PeerGroups, RecvPool, Rotation, RoutedWrite, TransferTable,
+    project_lane, remap_routed, route_barrier, route_barrier_templated, route_paged_writes,
+    route_paged_writes_templated, route_scatter, route_scatter_templated, route_single_write,
+    route_single_write_templated, FailoverPolicy, ImmTable, NicHealth, PeerGroups, RecvPool,
+    Rotation, RoutedWrite, TransferTable,
 };
 use super::model::Fired;
 use super::traits::{Cx, Notify, OnRecv, OnWatch, RuntimeKind, TransferEngine, UvmWatcher};
+use crate::fabric::chaos::ChaosProfile;
 use crate::fabric::local::LocalFabric;
 use crate::fabric::mem::{DmaBuf, DmaSlice, RKey};
 use crate::fabric::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
 use crate::fabric::topology::DeviceId;
 use crate::util::err::Result;
+use crate::util::fasthash::FastMap;
+
+/// [`FailoverPolicy`] packed into an atomic for lock-free reads on the
+/// worker threads.
+const POLICY_RESUBMIT: u8 = 0;
+const POLICY_ERROR_OUT: u8 = 1;
+
+fn policy_code(p: FailoverPolicy) -> u8 {
+    match p {
+        FailoverPolicy::Resubmit => POLICY_RESUBMIT,
+        FailoverPolicy::ErrorOut => POLICY_ERROR_OUT,
+    }
+}
+
+/// Shared failover state handed to each group's worker: the group's
+/// NIC health mask, the engine-wide policy/error counter, and the
+/// armed flag that switches in-flight WR tracking on.
+#[derive(Clone)]
+struct FailCtx {
+    health: Arc<NicHealth>,
+    policy: Arc<AtomicU8>,
+    errors: Arc<AtomicU64>,
+    armed: Arc<AtomicBool>,
+}
+
+/// Everything needed to repost a failed WR on a surviving NIC.
+struct RetryT {
+    lane: usize,
+    wr: WorkRequest,
+    attempts: u8,
+}
 
 /// Sender-side completion notification (threaded flavor).
 pub enum OnDoneT {
@@ -87,6 +120,9 @@ struct GroupShared {
     /// distinguish truncation from completion).
     recv_cb: Option<Arc<dyn Fn(Fired) + Send + Sync>>,
     traces: Vec<TraceT>,
+    /// In-flight WRs by id, kept only once failover is armed, so a
+    /// fabric `WrError` can resubmit them on a surviving NIC.
+    retry: FastMap<u64, RetryT>,
 }
 
 struct Group {
@@ -94,6 +130,10 @@ struct Group {
     tx: Sender<Cmd>,
     shared: Arc<Mutex<GroupShared>>,
     rotation: Rotation,
+    /// Link-state table: downed NICs are excluded from new submissions
+    /// (kept in sync with the fabric through its health hooks; shared
+    /// with the group's worker for resubmission decisions).
+    health: Arc<NicHealth>,
     worker: Mutex<Option<JoinHandle<()>>>,
 }
 
@@ -107,6 +147,12 @@ struct Inner {
     watchers: Mutex<Vec<(Arc<AtomicU64>, u64, Arc<dyn Fn(u64, u64) + Send + Sync>)>>,
     watcher_stop: Arc<AtomicBool>,
     watcher_thread: Mutex<Option<JoinHandle<()>>>,
+    /// Engine-wide failover policy (see [`FailoverPolicy`]).
+    policy: Arc<AtomicU8>,
+    /// Transport-level failures observed (dead-NIC WRs).
+    errors: Arc<AtomicU64>,
+    /// True once chaos was injected or a health override landed.
+    armed: Arc<AtomicBool>,
 }
 
 /// The threaded TransferEngine.
@@ -120,6 +166,9 @@ impl ThreadedEngine {
     /// registering them in `fabric` and spawning one worker per group.
     pub fn new(fabric: &LocalFabric, node: u16, gpus: u8, nics_per_gpu: u8) -> Self {
         let epoch = Instant::now();
+        let policy = Arc::new(AtomicU8::new(POLICY_RESUBMIT));
+        let errors = Arc::new(AtomicU64::new(0));
+        let armed = Arc::new(AtomicBool::new(false));
         let mut groups = Vec::new();
         for gpu in 0..gpus {
             let nics: Vec<NicAddr> = (0..nics_per_gpu)
@@ -129,26 +178,48 @@ impl ThreadedEngine {
                     a
                 })
                 .collect();
+            let health = Arc::new(NicHealth::new(nics.len()));
+            // Fabric link-state hooks keep the health table in sync
+            // with chaos NicDown/NicUp events.
+            for (xi, &a) in nics.iter().enumerate() {
+                let h = health.clone();
+                let arm = armed.clone();
+                fabric.set_health_hook(
+                    a,
+                    Box::new(move |up| {
+                        arm.store(true, Ordering::Release);
+                        h.set(xi, up);
+                    }),
+                );
+            }
             let shared = Arc::new(Mutex::new(GroupShared {
                 imm: ImmTable::new(),
                 transfers: TransferTable::new(),
                 recvs: RecvPool::new(),
                 recv_cb: None,
                 traces: Vec::new(),
+                retry: FastMap::default(),
             }));
             let (tx, rx) = mpsc::channel::<Cmd>();
             let f = fabric.clone();
             let sh = shared.clone();
             let nics2 = nics.clone();
+            let fo = FailCtx {
+                health: health.clone(),
+                policy: policy.clone(),
+                errors: errors.clone(),
+                armed: armed.clone(),
+            };
             let worker = std::thread::Builder::new()
                 .name(format!("te-worker-n{node}g{gpu}"))
-                .spawn(move || worker_loop(f, nics2, sh, rx, epoch))
+                .spawn(move || worker_loop(f, nics2, sh, rx, epoch, fo))
                 .expect("spawn engine worker");
             groups.push(Group {
                 nics,
                 tx,
                 shared,
                 rotation: Rotation::new(),
+                health,
                 worker: Mutex::new(Some(worker)),
             });
         }
@@ -163,10 +234,65 @@ impl ThreadedEngine {
                 watchers: Mutex::new(Vec::new()),
                 watcher_stop: Arc::new(AtomicBool::new(false)),
                 watcher_thread: Mutex::new(None),
+                policy,
+                errors,
+                armed,
             }),
         };
         engine.spawn_watcher_thread();
         engine
+    }
+
+    // ------------------------------------------------------------------
+    // Transport perturbation (chaos) + NIC health
+    // ------------------------------------------------------------------
+
+    /// Install a [`ChaosProfile`] on the shared fabric and arm the
+    /// failover bookkeeping. The profile's NicDown/NicUp events are
+    /// scheduled on `cx`'s Reactor timer heap; its reorder window (if
+    /// any) widens the fabric delivery thread's shuffle window. The
+    /// DES-only timing knobs (`extra_jitter`, `reorder_ns`) have no
+    /// real-time equivalent here and are ignored, mirroring how NIC
+    /// profiles only shape DES timing.
+    pub fn inject_chaos(&self, cx: &mut Cx, profile: &ChaosProfile) {
+        self.inner.armed.store(true, Ordering::Release);
+        // Arm every OTHER engine on the fabric too (their health hooks
+        // set their armed flags): a remote NIC death must be
+        // resubmittable by senders whose own links never flip.
+        self.inner.fabric.arm_all();
+        if profile.reorder_window > 0 {
+            self.inner.fabric.set_reorder_window(profile.reorder_window);
+        }
+        let now = cx.now();
+        for ev in &profile.nic_events {
+            let fabric = self.inner.fabric.clone();
+            let ev = *ev;
+            cx.after(ev.at.saturating_sub(now), move |_cx: &mut Cx| {
+                fabric.set_nic_up(ev.nic, ev.up);
+            });
+        }
+    }
+
+    /// Engine-level health override for one local NIC (also how the
+    /// fabric's link-state hooks report chaos events).
+    pub fn set_nic_health(&self, gpu: u8, nic: u8, up: bool) {
+        self.inner.armed.store(true, Ordering::Release);
+        self.inner.groups[gpu as usize].health.set(nic as usize, up);
+    }
+
+    /// Health bitmask of `gpu`'s domain group.
+    pub fn nic_health_mask(&self, gpu: u8) -> u64 {
+        self.inner.groups[gpu as usize].health.mask()
+    }
+
+    /// Select the in-flight failure policy (see the trait docs).
+    pub fn set_failover_policy(&self, policy: FailoverPolicy) {
+        self.inner.policy.store(policy_code(policy), Ordering::Release);
+    }
+
+    /// Transport-level failures observed so far.
+    pub fn transport_errors(&self) -> u64 {
+        self.inner.errors.load(Ordering::Acquire)
     }
 
     fn spawn_watcher_thread(&self) {
@@ -323,8 +449,8 @@ impl ThreadedEngine {
         let gpu = h.device.gpu;
         let g = &self.inner.groups[gpu as usize];
         let routed = route_single_write(g.nics.len(), g.rotation.next(), src_off, len, dst, imm)?;
+        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns)?;
         g.rotation.bump();
-        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns);
         Ok(())
     }
 
@@ -342,8 +468,8 @@ impl ThreadedEngine {
         let gpu = h.device.gpu;
         let g = &self.inner.groups[gpu as usize];
         let routed = route_paged_writes(g.nics.len(), g.rotation.next(), page_len, sp, dst, imm)?;
+        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns)?;
         g.rotation.bump();
-        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns);
         Ok(())
     }
 
@@ -424,8 +550,8 @@ impl ThreadedEngine {
         }
         let g = &self.inner.groups[gpu as usize];
         let routed = route_scatter(g.nics.len(), g.rotation.next(), dsts, imm)?;
+        self.dispatch_writes(gpu, src, routed, on_done, submitted_ns)?;
         g.rotation.bump();
-        self.dispatch_writes(gpu, src, routed, on_done, submitted_ns);
         Ok(())
     }
 
@@ -447,13 +573,26 @@ impl ThreadedEngine {
                 .unwrap()
                 .check(group, dsts.len());
         }
-        // Route BEFORE allocating the scratch source: a rejected
-        // barrier (§3.2 mismatch) must not register anything.
+        // Route AND health-check BEFORE allocating the scratch source:
+        // a rejected barrier (§3.2 mismatch, all NICs down) must not
+        // register anything. The check is best-effort on this runtime:
+        // a concurrent link flip between it and dispatch_writes' own
+        // re-check can still leak one 1-byte region (there is no MR
+        // deregistration primitive); the window is one racing call
+        // wide, same class as the documented benign peek→bump race.
         let g = &self.inner.groups[gpu as usize];
         let routed = route_barrier(g.nics.len(), g.rotation.next(), dsts, imm)?;
-        g.rotation.bump();
+        if g.health.up_count() == 0 {
+            self.inner.errors.fetch_add(1, Ordering::Relaxed);
+            crate::bail!(
+                "all {} NICs of the domain group are down; \
+                 submission rejected (see FailoverPolicy docs)",
+                g.nics.len()
+            );
+        }
         let (scratch, _) = self.alloc_mr(gpu, 1);
-        self.dispatch_writes(gpu, &scratch, routed, on_done, submitted_ns);
+        self.dispatch_writes(gpu, &scratch, routed, on_done, submitted_ns)?;
+        g.rotation.bump();
         Ok(())
     }
 
@@ -477,8 +616,8 @@ impl ThreadedEngine {
         let (h, src_off) = src;
         let routed =
             route_single_write_templated(&t, t.rotation.next(), peer, src_off, len, dst_off, imm)?;
+        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns)?;
         t.rotation.bump();
-        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns);
         Ok(())
     }
 
@@ -505,8 +644,8 @@ impl ThreadedEngine {
             dst_pages,
             imm,
         )?;
+        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns)?;
         t.rotation.bump();
-        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns);
         Ok(())
     }
 
@@ -523,8 +662,8 @@ impl ThreadedEngine {
         let submitted_ns = self.now_ns();
         let t = self.template(group)?;
         let routed = route_scatter_templated(&t, t.rotation.next(), dsts, imm)?;
+        self.dispatch_writes(src.device.gpu, src, routed, on_done, submitted_ns)?;
         t.rotation.bump();
-        self.dispatch_writes(src.device.gpu, src, routed, on_done, submitted_ns);
         Ok(())
     }
 
@@ -538,9 +677,10 @@ impl ThreadedEngine {
     ) -> Result<()> {
         let submitted_ns = self.now_ns();
         let t = self.template(group)?;
-        let routed = route_barrier_templated(&t, t.rotation.bump(), imm);
+        let routed = route_barrier_templated(&t, t.rotation.next(), imm);
         let scratch = t.scratch.clone();
-        self.dispatch_writes(scratch.device.gpu, &scratch, routed, on_done, submitted_ns);
+        self.dispatch_writes(scratch.device.gpu, &scratch, routed, on_done, submitted_ns)?;
+        t.rotation.bump();
         Ok(())
     }
 
@@ -634,14 +774,25 @@ impl ThreadedEngine {
         &self,
         gpu: u8,
         src: &MrHandle,
-        routed: Vec<RoutedWrite>,
+        mut routed: Vec<RoutedWrite>,
         on_done: OnDoneT,
         submitted_ns: u64,
-    ) {
+    ) -> Result<()> {
         assert!(!routed.is_empty(), "empty transfer");
+        // Downed local NICs are masked here — at patch time, after
+        // routing — so untemplated and templated submissions alike
+        // egress only on healthy NICs; errs when the group is down.
+        let g = &self.inner.groups[gpu as usize];
+        if !g.health.all_up() {
+            if let Err(e) = remap_routed(&mut routed, &g.health) {
+                // An all-NICs-down rejection is a transport failure
+                // too: count it so scenarios can observe the outage.
+                self.inner.errors.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        }
         let tid = self.alloc_transfer(gpu, routed.len(), on_done);
-        self.inner.groups[gpu as usize]
-            .tx
+        g.tx
             .send(Cmd::Writes {
                 routed,
                 src: src.buf.clone(),
@@ -649,6 +800,7 @@ impl ThreadedEngine {
                 submitted_ns,
             })
             .expect("worker gone");
+        Ok(())
     }
 }
 
@@ -660,6 +812,7 @@ fn worker_loop(
     shared: Arc<Mutex<GroupShared>>,
     rx: mpsc::Receiver<Cmd>,
     epoch: Instant,
+    fo: FailCtx,
 ) {
     let mut next_wr: u64 = 1 << 48; // worker-allocated ids, disjoint from app ids
     let mut cqes: Vec<Cqe> = Vec::with_capacity(64);
@@ -676,31 +829,51 @@ fn worker_loop(
                 let worker_ns = epoch.elapsed().as_nanos() as u64;
                 let n = routed.len();
                 let base_id = next_wr;
+                next_wr += n as u64;
+                // Build the WRs first so the (armed-only) retry
+                // entries can be recorded in the same lock pass as the
+                // transfer bindings — BEFORE any WR is on the wire, so
+                // an instant failure still finds its entry.
+                let wrs: Vec<(usize, WorkRequest)> = routed
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, (p, (dst_nic, rkey)))| {
+                        (
+                            p.nic,
+                            WorkRequest {
+                                id: base_id + i as u64,
+                                qp: QpId(1),
+                                op: WrOp::Write {
+                                    dst: dst_nic,
+                                    dst_rkey: RKey(rkey),
+                                    dst_va: p.dst_va,
+                                    src: DmaSlice::new(&src, p.src_off as usize, p.len as usize),
+                                    imm: p.imm,
+                                },
+                                chained: false,
+                            },
+                        )
+                    })
+                    .collect();
                 {
                     let mut sh = shared.lock().unwrap();
-                    for i in 0..n {
-                        sh.transfers.bind_wr(base_id + i as u64, tid);
+                    let armed = fo.armed.load(Ordering::Acquire);
+                    for (lane, wr) in &wrs {
+                        sh.transfers.bind_wr(wr.id, tid);
+                        if armed {
+                            sh.retry.insert(
+                                wr.id,
+                                RetryT { lane: *lane, wr: wr.clone(), attempts: 0 },
+                            );
+                        }
                     }
                 }
-                next_wr += n as u64;
                 let mut first_post_ns = 0;
-                for (i, (p, (dst_nic, rkey))) in routed.into_iter().enumerate() {
-                    let wr = WorkRequest {
-                        id: base_id + i as u64,
-                        qp: QpId(1),
-                        op: WrOp::Write {
-                            dst: dst_nic,
-                            dst_rkey: RKey(rkey),
-                            dst_va: p.dst_va,
-                            src: DmaSlice::new(&src, p.src_off as usize, p.len as usize),
-                            imm: p.imm,
-                        },
-                        chained: false,
-                    };
+                for (i, (lane, wr)) in wrs.into_iter().enumerate() {
                     if i == 0 {
                         first_post_ns = epoch.elapsed().as_nanos() as u64;
                     }
-                    fabric.post(nics[p.nic], wr);
+                    fabric.post(nics[lane], wr);
                 }
                 let last_post_ns = epoch.elapsed().as_nanos() as u64;
                 shared.lock().unwrap().traces.push(TraceT {
@@ -714,16 +887,21 @@ fn worker_loop(
             Ok(Cmd::Send { dst, payload, tid }) => {
                 let id = next_wr;
                 next_wr += 1;
-                shared.lock().unwrap().transfers.bind_wr(id, tid);
-                fabric.post(
-                    nics[0],
-                    WorkRequest {
-                        id,
-                        qp: QpId(0),
-                        op: WrOp::Send { dst, payload },
-                        chained: false,
-                    },
-                );
+                let wr = WorkRequest {
+                    id,
+                    qp: QpId(0),
+                    op: WrOp::Send { dst, payload },
+                    chained: false,
+                };
+                {
+                    let mut sh = shared.lock().unwrap();
+                    sh.transfers.bind_wr(id, tid);
+                    if fo.armed.load(Ordering::Acquire) {
+                        sh.retry
+                            .insert(id, RetryT { lane: 0, wr: wr.clone(), attempts: 0 });
+                    }
+                }
+                fabric.post(nics[0], wr);
             }
             Ok(Cmd::Recvs { bufs }) => {
                 for (id, buf) in bufs {
@@ -752,27 +930,79 @@ fn worker_loop(
                     break;
                 }
                 for cqe in cqes.drain(..) {
-                    handle_cqe(&fabric, nic, &shared, cqe, &mut next_wr);
+                    handle_cqe(&fabric, &nics, nic, &shared, cqe, &mut next_wr, &fo);
                 }
             }
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_cqe(
     fabric: &LocalFabric,
+    nics: &[NicAddr],
     nic: NicAddr,
     shared: &Arc<Mutex<GroupShared>>,
     cqe: Cqe,
     next_wr: &mut u64,
+    fo: &FailCtx,
 ) {
     match cqe.kind {
         CqeKind::SendDone | CqeKind::WriteDone => {
-            let done = shared.lock().unwrap().transfers.complete_wr(cqe.wr_id);
+            let done = {
+                let mut sh = shared.lock().unwrap();
+                if fo.armed.load(Ordering::Acquire) {
+                    sh.retry.remove(&cqe.wr_id);
+                }
+                sh.transfers.complete_wr(cqe.wr_id)
+            };
             match done {
                 Some(OnDoneT::Callback(cb)) => cb(),
                 Some(OnDoneT::Flag(f)) => f.store(true, Ordering::Release),
                 _ => {}
+            }
+        }
+        CqeKind::WrError => {
+            // A WR died on a downed NIC. Under Resubmit, repost it on
+            // the group's next healthy NIC (the failed payload
+            // provably did not commit — no duplication possible);
+            // otherwise count the error and complete the transfer
+            // undelivered so waiters don't hang (trait docs spell out
+            // the caller-visible contract).
+            fo.errors.fetch_add(1, Ordering::Relaxed);
+            let entry = shared.lock().unwrap().retry.remove(&cqe.wr_id);
+            let retried = match entry {
+                Some(mut e) if fo.policy.load(Ordering::Acquire) == POLICY_RESUBMIT => {
+                    let fanout = nics.len();
+                    e.attempts += 1;
+                    let lane = if (e.attempts as usize) <= fanout {
+                        project_lane(e.lane + e.attempts as usize, fo.health.mask(), fanout)
+                    } else {
+                        None
+                    };
+                    match lane {
+                        Some(next) => {
+                            let wr = e.wr.clone();
+                            // e.lane stays the ORIGINAL lane: with a
+                            // stable mask, lane+1..=lane+fanout then
+                            // projects onto every survivor before the
+                            // attempt cap degrades to error-out.
+                            shared.lock().unwrap().retry.insert(cqe.wr_id, e);
+                            fabric.post(nics[next], wr);
+                            true
+                        }
+                        None => false,
+                    }
+                }
+                _ => false,
+            };
+            if !retried {
+                let done = shared.lock().unwrap().transfers.complete_wr(cqe.wr_id);
+                match done {
+                    Some(OnDoneT::Callback(cb)) => cb(),
+                    Some(OnDoneT::Flag(f)) => f.store(true, Ordering::Release),
+                    _ => {}
+                }
             }
         }
         CqeKind::ImmRecvd { imm, .. } => {
@@ -1030,6 +1260,26 @@ impl TransferEngine for ThreadedEngine {
             }
         }
     }
+
+    fn inject_chaos(&self, cx: &mut Cx, profile: &ChaosProfile) {
+        ThreadedEngine::inject_chaos(self, cx, profile)
+    }
+
+    fn set_nic_health(&self, gpu: u8, nic: u8, up: bool) {
+        ThreadedEngine::set_nic_health(self, gpu, nic, up)
+    }
+
+    fn nic_health_mask(&self, gpu: u8) -> u64 {
+        ThreadedEngine::nic_health_mask(self, gpu)
+    }
+
+    fn set_failover_policy(&self, policy: FailoverPolicy) {
+        ThreadedEngine::set_failover_policy(self, policy)
+    }
+
+    fn transport_errors(&self) -> u64 {
+        ThreadedEngine::transport_errors(self)
+    }
 }
 
 #[cfg(test)]
@@ -1247,6 +1497,82 @@ mod tests {
             let off = (slot as u64 * page) as usize;
             assert_eq!(v[off..off + 32], [(i as u8) + 1; 32], "page {i} -> slot {slot}");
         }
+        a.shutdown();
+        b.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn chaos_threaded_dead_destination_errors_once_then_recovers() {
+        let fabric = LocalFabric::new(TransportKind::Rc, 77);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 2);
+        let b = ThreadedEngine::new(&fabric, 1, 1, 2);
+        let (src, _) = a.alloc_mr(0, 64);
+        let (dst_h, dst_d) = b.alloc_mr(0, 64);
+        src.buf.write(0, &[8u8; 64]);
+        // Arm failover bookkeeping without changing any health bit.
+        a.set_nic_health(0, 0, true);
+        // Kill BOTH of b's NICs at the fabric level: every local lane
+        // retry must fail, so Resubmit degrades to error-out.
+        fabric.set_nic_up(NicAddr { node: 1, gpu: 0, nic: 0 }, false);
+        fabric.set_nic_up(NicAddr { node: 1, gpu: 0, nic: 1 }, false);
+        let done = Arc::new(AtomicBool::new(false));
+        a.submit_single_write((&src, 0), 64, (&dst_d, 0), Some(3), OnDoneT::Flag(done.clone()))
+            .unwrap();
+        wait_flag(&done);
+        assert!(a.transport_errors() >= 1, "dead-NIC failures are counted");
+        assert_eq!(
+            dst_h.buf.to_vec(),
+            vec![0u8; 64],
+            "nothing committed through a dead NIC (exactly-once)"
+        );
+        assert_eq!(b.imm_value(0, 3), 0, "ImmCounter stays un-bumped on failure");
+        // Recovery: NicUp restores delivery (engine health tables were
+        // updated through the fabric hooks both ways).
+        fabric.set_nic_up(NicAddr { node: 1, gpu: 0, nic: 0 }, true);
+        fabric.set_nic_up(NicAddr { node: 1, gpu: 0, nic: 1 }, true);
+        assert_eq!(b.nic_health_mask(0), 0b11);
+        let done2 = Arc::new(AtomicBool::new(false));
+        a.submit_single_write((&src, 0), 64, (&dst_d, 0), Some(3), OnDoneT::Flag(done2.clone()))
+            .unwrap();
+        wait_flag(&done2);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while b.imm_value(0, 3) < 1 {
+            assert!(Instant::now() < deadline, "timeout");
+            std::thread::yield_now();
+        }
+        assert_eq!(dst_h.buf.to_vec(), vec![8u8; 64]);
+        a.shutdown();
+        b.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn chaos_threaded_health_mask_excludes_nic_from_submissions() {
+        let fabric = LocalFabric::new(TransportKind::Srd, 78);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 2);
+        let b = ThreadedEngine::new(&fabric, 1, 1, 2);
+        // Engine-level override only: the fabric stays fully up, so a
+        // masked submission must still deliver — just not via NIC 1.
+        a.set_nic_health(0, 1, false);
+        assert_eq!(a.nic_health_mask(0), 0b01);
+        let len = 1 << 20;
+        let (src, _) = a.alloc_mr(0, len);
+        let (dst_h, dst_d) = b.alloc_mr(0, len);
+        let pat: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+        src.buf.write(0, &pat);
+        let done = Arc::new(AtomicBool::new(false));
+        a.submit_single_write((&src, 0), len as u64, (&dst_d, 0), None, OnDoneT::Flag(done.clone()))
+            .unwrap();
+        wait_flag(&done);
+        assert_eq!(dst_h.buf.to_vec(), pat);
+        assert_eq!(a.transport_errors(), 0, "masked lanes never hit the dead path");
+        // All NICs down: submission errors synchronously.
+        a.set_nic_health(0, 0, false);
+        let err = a
+            .submit_single_write((&src, 0), 64, (&dst_d, 0), None, OnDoneT::Noop)
+            .unwrap_err();
+        assert!(err.to_string().contains("all 2 NICs"), "{err}");
         a.shutdown();
         b.shutdown();
         fabric.shutdown();

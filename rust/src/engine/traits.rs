@@ -43,7 +43,9 @@ use std::time::Instant as StdInstant;
 use super::api::{
     EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
+use super::core::FailoverPolicy;
 use super::des_engine::{Engine, UvmWatcherHandle};
+use crate::fabric::chaos::ChaosProfile;
 use super::model::{Cont, Fired, Reactor};
 use super::threaded::ThreadedEngine;
 use super::wire;
@@ -580,6 +582,68 @@ pub trait TransferEngine {
     /// Allocate a UVM watcher; `on` fires with `(old, new)` when the
     /// engine observes a changed value.
     fn alloc_uvm_watcher(&self, on: OnWatch) -> UvmWatcher;
+
+    // -- transport perturbation (chaos) + NIC health ------------------
+    //
+    // The paper's contract is *reliable but unordered* transport over
+    // multiple NICs per GPU; this surface exercises it adversarially.
+    // A [`ChaosProfile`] perturbs the fabric underneath the engine
+    // (extra jitter, bounded reordering, scheduled NicDown/NicUp),
+    // while the engine-level `NicHealth` table keeps downed NICs out
+    // of new submissions and the [`FailoverPolicy`] decides what
+    // happens to work already in flight on a dead NIC.
+
+    /// Install a seeded, deterministic transport-perturbation profile
+    /// on the fabric backing this engine (fabric-wide: every engine on
+    /// the same fabric sees it). NicDown/NicUp events are scheduled on
+    /// this context's clock (DES virtual time; the threaded runtime's
+    /// Reactor timer heap) and propagate into every affected engine's
+    /// health table through the fabric's link-state hooks. Installing
+    /// a profile also arms the failover bookkeeping, so WRs submitted
+    /// afterwards are resubmittable under [`FailoverPolicy::Resubmit`].
+    fn inject_chaos(&self, cx: &mut Cx, profile: &ChaosProfile);
+
+    /// Operator override of one local NIC's health on `gpu`'s domain
+    /// group: a NIC marked down is excluded from new submissions —
+    /// untemplated routes and bound `GroupTemplate` routes alike (the
+    /// mask is applied at patch time; templates keep all routes, so
+    /// recovery needs no rebind). This is the engine-level table only:
+    /// it does not change fabric delivery (use a [`ChaosProfile`] NIC
+    /// event to actually kill the link).
+    fn set_nic_health(&self, gpu: u8, nic: u8, up: bool);
+
+    /// Current health bitmask of `gpu`'s domain group (bit `i` set =
+    /// local NIC `i` up).
+    fn nic_health_mask(&self, gpu: u8) -> u64;
+
+    /// Select what happens to an in-flight WR that fails on a dead NIC
+    /// (fabric `WrError` completion). The caller-visible contract:
+    ///
+    /// * [`FailoverPolicy::Resubmit`] (default) — **transparent**: the
+    ///   engine reposts the WR on a surviving NIC of the group (the
+    ///   failed payload provably did not commit, so resubmission can
+    ///   never duplicate). The transfer's `on_done` still means
+    ///   "everything delivered"; each underlying failure is visible
+    ///   only in [`TransferEngine::transport_errors`]. Once every NIC
+    ///   of the group has been tried for a given WR, it degrades to
+    ///   the error-out behavior below.
+    /// * [`FailoverPolicy::ErrorOut`] — **visible**: the WR is dropped,
+    ///   `transport_errors()` increments, and the transfer's `on_done`
+    ///   fires anyway so waiters do not hang — but the write was NOT
+    ///   delivered and the receiver's ImmCounter is not bumped, so
+    ///   receiver-side `expect_imm_count` gates stay open. Callers
+    ///   that need to distinguish delivery from completion under this
+    ///   policy must check `transport_errors()` (or gate on the
+    ///   receiver's counter, as the paper's protocols already do).
+    ///
+    /// Submissions whose group has NO healthy NIC left fail
+    /// synchronously with an `Err` from `submit_*` (also counted in
+    /// [`TransferEngine::transport_errors`]), under either policy.
+    fn set_failover_policy(&self, policy: FailoverPolicy);
+
+    /// Transport-level failures observed so far (WRs that died on a
+    /// downed NIC), whether transparently resubmitted or errored out.
+    fn transport_errors(&self) -> u64;
 
     // -- wire bridge (descriptor exchange over SEND/RECV) -------------
 

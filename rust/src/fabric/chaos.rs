@@ -1,0 +1,231 @@
+//! Transport perturbation ("chaos") profiles for the simulated fabric.
+//!
+//! The paper's transport contract is *reliable but unordered* delivery
+//! with no NIC-count or liveness assumptions beyond §3.2 — yet a
+//! happy-path simulation never actually delivers anything out of
+//! order, never delays a completion adversarially, and never kills a
+//! NIC. A [`ChaosProfile`] closes that gap: it is a **seeded,
+//! deterministic** description of adversarial transport behavior that
+//! either fabric backend can install:
+//!
+//! * **extra jitter** — an additional per-chunk wire delay drawn from
+//!   its own [`Jitter`] distribution (the DES fabric applies it per
+//!   packet/chunk on top of the NIC profile's calibrated jitter);
+//! * **bounded reordering** — each message's commit is delayed by
+//!   `U[0, reorder_ns)` from a dedicated chaos RNG, permuting
+//!   completion order (and therefore ImmCounter bump order) within
+//!   that window. Transport legality is preserved: the RC per-QP
+//!   sequencer still commits in posting order, so only SRD-style
+//!   traffic actually reorders — exactly the paper's "reliable but
+//!   unordered" envelope, duplication-free by construction (a delayed
+//!   message is still delivered exactly once, or dropped with an
+//!   error CQE if a NIC died);
+//! * **NIC lifecycle events** — scheduled [`NicEvent`]s take a NIC
+//!   down (posts and in-flight traffic on it surface
+//!   [`crate::fabric::nic::CqeKind::WrError`] completions to the
+//!   sender; nothing is delivered through a dead NIC) and optionally
+//!   bring it back up. The fabrics notify registered health hooks so
+//!   the engine layer's `NicHealth` table tracks fabric truth.
+//!
+//! All randomness comes from the profile's own seeded [`Rng`] stream
+//! — never from the fabric's base RNG — so (a) a quiet profile leaves
+//! the base simulation bit-identical to a run without chaos, and (b)
+//! the same seed + the same profile reproduce the exact same
+//! perturbation schedule (the chaos determinism tests gate on this).
+//!
+//! The threaded fabric ([`crate::fabric::local::LocalFabric`]) runs in
+//! real time, so only the *semantic* knobs apply there: the reorder
+//! window size and the NIC events (scheduled on the scenario's
+//! Reactor). `extra_jitter`/`reorder_ns` shape DES timing only,
+//! mirroring how NIC profiles already work across the two backends.
+
+use crate::fabric::nic::NicAddr;
+use crate::sim::rng::{Jitter, Rng};
+
+/// One scheduled NIC lifecycle event, in model time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NicEvent {
+    /// Model-clock time (ns) at which the event fires.
+    pub at: u64,
+    /// The NIC whose link state flips.
+    pub nic: NicAddr,
+    /// `false` = NicDown, `true` = NicUp.
+    pub up: bool,
+}
+
+/// A seeded, deterministic transport-perturbation profile. Build with
+/// the fluent constructors, then install through
+/// `TransferEngine::inject_chaos` (or directly on a fabric backend).
+#[derive(Debug, Clone)]
+pub struct ChaosProfile {
+    /// Seed of the dedicated chaos RNG stream (independent of the
+    /// fabric's base seed).
+    pub seed: u64,
+    /// Extra per-chunk wire delay distribution (DES fabric only).
+    pub extra_jitter: Jitter,
+    /// Bound of the uniform per-message commit delay that permutes
+    /// delivery order (DES fabric only; 0 disables).
+    pub reorder_ns: u64,
+    /// Reorder window size for the threaded fabric's delivery thread
+    /// (0 keeps the backend's default).
+    pub reorder_window: usize,
+    /// Scheduled NIC failures/recoveries.
+    pub nic_events: Vec<NicEvent>,
+}
+
+impl ChaosProfile {
+    /// A quiet profile: no perturbation at all. The fluent builders
+    /// below switch individual components on.
+    pub fn new(seed: u64) -> Self {
+        ChaosProfile {
+            seed,
+            extra_jitter: Jitter::NONE,
+            reorder_ns: 0,
+            reorder_window: 0,
+            nic_events: Vec::new(),
+        }
+    }
+
+    /// Add an extra per-chunk wire-delay distribution.
+    pub fn with_extra_jitter(mut self, jitter: Jitter) -> Self {
+        self.extra_jitter = jitter;
+        self
+    }
+
+    /// Convenience: extra jitter whose median is `pct`% of a base wire
+    /// latency (how the bandwidth bench expresses "10% jitter").
+    pub fn jitter_pct(seed: u64, base_wire_ns: u64, pct: u32) -> Self {
+        let median = base_wire_ns as f64 * pct as f64 / 100.0;
+        ChaosProfile::new(seed).with_extra_jitter(Jitter {
+            median_ns: median,
+            sigma: 0.4,
+            spike_p: 0.001,
+            spike_mean_ns: median * 6.0,
+        })
+    }
+
+    /// Add bounded reordering: commits delayed by `U[0, bound_ns)` on
+    /// the DES fabric; the threaded fabric buffers `window` messages
+    /// and releases them in shuffled order.
+    pub fn with_reorder(mut self, bound_ns: u64, window: usize) -> Self {
+        self.reorder_ns = bound_ns;
+        self.reorder_window = window;
+        self
+    }
+
+    /// Schedule a NicDown at `at` ns.
+    pub fn nic_down(mut self, at: u64, nic: NicAddr) -> Self {
+        self.nic_events.push(NicEvent { at, nic, up: false });
+        self
+    }
+
+    /// Schedule a NicUp at `at` ns.
+    pub fn nic_up(mut self, at: u64, nic: NicAddr) -> Self {
+        self.nic_events.push(NicEvent { at, nic, up: true });
+        self
+    }
+
+    /// True when the profile perturbs nothing (installing it is a
+    /// no-op beyond arming the failover bookkeeping).
+    pub fn is_quiet(&self) -> bool {
+        self.extra_jitter.median_ns <= 0.0
+            && self.reorder_ns == 0
+            && self.reorder_window == 0
+            && self.nic_events.is_empty()
+    }
+
+    /// Materialize the seeded sampling state a fabric keeps while the
+    /// profile is installed.
+    pub fn state(&self) -> ChaosState {
+        ChaosState {
+            rng: Rng::new(self.seed ^ 0xC4A0_5EED),
+            extra: self.extra_jitter.clone(),
+            reorder_ns: self.reorder_ns,
+        }
+    }
+}
+
+/// The live sampling state behind an installed [`ChaosProfile`]: a
+/// dedicated RNG stream plus the delay distributions. Draw order is
+/// fixed by the (deterministic) DES event order, so the same seed and
+/// profile always reproduce the same perturbations.
+pub struct ChaosState {
+    rng: Rng,
+    extra: Jitter,
+    reorder_ns: u64,
+}
+
+impl ChaosState {
+    /// Extra wire delay for one chunk.
+    pub fn sample_extra(&mut self) -> u64 {
+        self.extra.sample(&mut self.rng)
+    }
+
+    /// Commit-permuting delay for one message: `U[0, reorder_ns)`.
+    pub fn sample_reorder(&mut self) -> u64 {
+        if self.reorder_ns == 0 {
+            0
+        } else {
+            self.rng.below(self.reorder_ns)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nic(node: u16) -> NicAddr {
+        NicAddr { node, gpu: 0, nic: 0 }
+    }
+
+    #[test]
+    fn chaos_profile_builders_compose() {
+        let p = ChaosProfile::new(7)
+            .with_reorder(50_000, 16)
+            .nic_down(1_000, nic(0))
+            .nic_up(9_000, nic(0));
+        assert!(!p.is_quiet());
+        assert_eq!(p.reorder_ns, 50_000);
+        assert_eq!(p.reorder_window, 16);
+        assert_eq!(p.nic_events.len(), 2);
+        assert!(!p.nic_events[0].up && p.nic_events[1].up);
+        assert!(ChaosProfile::new(7).is_quiet());
+    }
+
+    #[test]
+    fn chaos_state_is_deterministic_per_profile() {
+        let p = ChaosProfile::jitter_pct(42, 2600, 30).with_reorder(10_000, 8);
+        let mut a = p.state();
+        let mut b = p.state();
+        for _ in 0..256 {
+            assert_eq!(a.sample_extra(), b.sample_extra());
+            assert_eq!(a.sample_reorder(), b.sample_reorder());
+        }
+        // A different seed gives a different stream.
+        let mut c = ChaosProfile::jitter_pct(43, 2600, 30)
+            .with_reorder(10_000, 8)
+            .state();
+        let same = (0..64).all(|_| a.sample_reorder() == c.sample_reorder());
+        assert!(!same, "distinct seeds must decorrelate the chaos stream");
+    }
+
+    #[test]
+    fn chaos_reorder_delay_is_bounded() {
+        let mut s = ChaosProfile::new(3).with_reorder(4096, 8).state();
+        for _ in 0..10_000 {
+            assert!(s.sample_reorder() < 4096);
+        }
+        let mut quiet = ChaosProfile::new(3).state();
+        assert_eq!(quiet.sample_reorder(), 0);
+        assert_eq!(quiet.sample_extra(), 0);
+    }
+
+    #[test]
+    fn chaos_jitter_pct_scales_with_base() {
+        let p10 = ChaosProfile::jitter_pct(1, 1000, 10);
+        let p30 = ChaosProfile::jitter_pct(1, 1000, 30);
+        assert!(p30.extra_jitter.median_ns > p10.extra_jitter.median_ns);
+        assert!((p10.extra_jitter.median_ns - 100.0).abs() < 1e-9);
+    }
+}

@@ -13,7 +13,8 @@
 //! payload DMA, then exposes completions — in that order, preserving
 //! the PCIe invariant.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -22,6 +23,11 @@ use super::mem::{DmaSlice, MemRegistry};
 use super::nic::{Cqe, CqeKind, NicAddr, WorkRequest, WrOp};
 use super::profile::TransportKind;
 use crate::sim::Rng;
+
+/// Default SRD reorder-window size (messages buffered and released in
+/// shuffled order); chaos profiles may widen it via
+/// [`LocalFabric::set_reorder_window`].
+const DEFAULT_WINDOW: usize = 8;
 
 struct LocalNic {
     cq: VecDeque<Cqe>,
@@ -43,6 +49,15 @@ struct Shared {
     nics: Mutex<HashMap<NicAddr, LocalNic>>,
     cq_signal: Condvar,
     mem: MemRegistry,
+    /// NICs currently down (chaos NicDown): WRs from or to them fail
+    /// with [`CqeKind::WrError`] instead of delivering.
+    down: Mutex<HashSet<NicAddr>>,
+    /// Link-state hooks, called synchronously from `set_nic_up` with
+    /// the new state (the threaded engine keeps its `NicHealth` table
+    /// in sync through these).
+    health_hooks: Mutex<HashMap<NicAddr, Box<dyn Fn(bool) + Send + Sync>>>,
+    /// SRD reorder-window size (see [`DEFAULT_WINDOW`]).
+    window: AtomicUsize,
 }
 
 enum Msg {
@@ -69,6 +84,9 @@ impl LocalFabric {
             nics: Mutex::new(HashMap::new()),
             cq_signal: Condvar::new(),
             mem: MemRegistry::new(),
+            down: Mutex::new(HashSet::new()),
+            health_hooks: Mutex::new(HashMap::new()),
+            window: AtomicUsize::new(DEFAULT_WINDOW),
         });
         let (tx, rx) = mpsc::channel::<Msg>();
         let s2 = shared.clone();
@@ -76,9 +94,8 @@ impl LocalFabric {
             .name("fabric-delivery".into())
             .spawn(move || {
                 let mut rng = Rng::new(seed);
-                // SRD reorder window: buffer up to WINDOW WRs and
-                // release them in random order.
-                const WINDOW: usize = 8;
+                // SRD reorder window: buffer up to the configured
+                // window of WRs and release them in random order.
                 let mut window: Vec<(NicAddr, WorkRequest)> = Vec::new();
                 let flush = |w: &mut Vec<(NicAddr, WorkRequest)>, rng: &mut Rng| {
                     let mut order: Vec<usize> = (0..w.len()).collect();
@@ -100,7 +117,8 @@ impl LocalFabric {
                         Ok(Msg::Wr { src, wr }) => window.push((src, wr)),
                         _ => break,
                     }
-                    while window.len() < WINDOW {
+                    let cap = s2.window.load(Ordering::Relaxed).max(1);
+                    while window.len() < cap {
                         match rx.try_recv() {
                             Ok(Msg::Wr { src, wr }) => window.push((src, wr)),
                             Ok(Msg::Shutdown) => {
@@ -199,6 +217,50 @@ impl LocalFabric {
         !nics[&addr].cq.is_empty()
     }
 
+    /// Flip `addr`'s link state and notify its health hook (if any).
+    /// Down NICs fail WRs from or to them with [`CqeKind::WrError`].
+    pub fn set_nic_up(&self, addr: NicAddr, up: bool) {
+        {
+            let mut d = self.shared.down.lock().unwrap();
+            if up {
+                d.remove(&addr);
+            } else {
+                d.insert(addr);
+            }
+        }
+        if let Some(h) = self.shared.health_hooks.lock().unwrap().get(&addr) {
+            h(up);
+        }
+    }
+
+    /// Current link state of `addr`.
+    pub fn nic_up(&self, addr: NicAddr) -> bool {
+        !self.shared.down.lock().unwrap().contains(&addr)
+    }
+
+    /// Register a link-state hook for `addr` (the threaded engine's
+    /// `NicHealth` sync).
+    pub fn set_health_hook(&self, addr: NicAddr, hook: Box<dyn Fn(bool) + Send + Sync>) {
+        self.shared.health_hooks.lock().unwrap().insert(addr, hook);
+    }
+
+    /// Re-notify every health hook with its NIC's current state.
+    /// Chaos injection calls this to arm the failover bookkeeping of
+    /// EVERY engine on the fabric — a remote NIC death must be
+    /// resubmittable by senders that never saw their own links flip.
+    pub fn arm_all(&self) {
+        let down: HashSet<NicAddr> = self.shared.down.lock().unwrap().clone();
+        for (addr, h) in self.shared.health_hooks.lock().unwrap().iter() {
+            h(!down.contains(addr));
+        }
+    }
+
+    /// Resize the SRD reorder window (chaos profiles widen it to
+    /// stress ordering-independence harder).
+    pub fn set_reorder_window(&self, n: usize) {
+        self.shared.window.store(n.max(1), Ordering::Relaxed);
+    }
+
     /// Stop the delivery thread (flushes queued WRs first).
     pub fn shutdown(&self) {
         let _ = self.tx.send(Msg::Shutdown);
@@ -208,9 +270,30 @@ impl LocalFabric {
     }
 }
 
-/// Commit one WR: DMA first, completion second.
+/// Commit one WR: DMA first, completion second. If either end is down
+/// the WR fails with a [`CqeKind::WrError`] to the sender and nothing
+/// commits (exactly-once: failed WRs are safe to resubmit).
 fn deliver(shared: &Shared, src: NicAddr, wr: WorkRequest) {
     let dst = wr.op.dst().expect("delivery of non-outgoing WR");
+    {
+        let down = shared.down.lock().unwrap();
+        if down.contains(&src) || down.contains(&dst) {
+            drop(down);
+            shared
+                .nics
+                .lock()
+                .unwrap()
+                .get_mut(&src)
+                .expect("unknown src NIC")
+                .cq
+                .push_back(Cqe {
+                    wr_id: wr.id,
+                    kind: CqeKind::WrError,
+                });
+            shared.cq_signal.notify_all();
+            return;
+        }
+    }
     match wr.op {
         WrOp::Write {
             dst_rkey,
@@ -399,6 +482,45 @@ mod tests {
                 assert_eq!(u64::from_le_bytes(v), imm as u64, "payload before imm");
             }
         }
+        f.shutdown();
+    }
+
+    #[test]
+    fn chaos_threaded_nic_down_errors_and_recovers() {
+        let f = LocalFabric::new(TransportKind::Rc, 6);
+        let (a, b) = (addr(0), addr(1));
+        f.add_nic(a);
+        f.add_nic(b);
+        let flips = Arc::new(Mutex::new(Vec::new()));
+        let fl = flips.clone();
+        f.set_health_hook(b, Box::new(move |up| fl.lock().unwrap().push(up)));
+        let (sbuf, _) = f.mem().alloc(32);
+        let (dbuf, drkey) = f.mem().alloc(32);
+        sbuf.write(0, &[5u8; 32]);
+        let wr = |id| WorkRequest {
+            id,
+            qp: QpId(1),
+            op: WrOp::Write {
+                dst: b,
+                dst_rkey: drkey,
+                dst_va: dbuf.base(),
+                src: DmaSlice::new(&sbuf, 0, 32),
+                imm: Some(1),
+            },
+            chained: false,
+        };
+        f.set_nic_up(b, false);
+        f.post(a, wr(1));
+        let cqes = drain(&f, a, 1);
+        assert_eq!(cqes[0].kind, CqeKind::WrError);
+        assert_eq!(dbuf.to_vec(), vec![0u8; 32], "nothing commits to a dead NIC");
+        // Recovery: the same WR delivers after NicUp.
+        f.set_nic_up(b, true);
+        f.post(a, wr(2));
+        let acks = drain(&f, a, 1);
+        assert_eq!(acks[0].kind, CqeKind::WriteDone);
+        assert_eq!(dbuf.to_vec(), vec![5u8; 32]);
+        assert_eq!(*flips.lock().unwrap(), vec![false, true]);
         f.shutdown();
     }
 

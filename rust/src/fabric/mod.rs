@@ -21,6 +21,7 @@
 //! ordering, §3.3 of the paper) — is enforced by construction in the
 //! event schedule and checked by tests.
 
+pub mod chaos;
 pub mod local;
 pub mod mem;
 pub mod nic;
@@ -29,6 +30,7 @@ pub mod simnet;
 pub mod topology;
 pub mod gpu;
 
+pub use chaos::{ChaosProfile, NicEvent};
 pub use mem::{DmaBuf, DmaSlice, MemRegistry, RKey};
 pub use nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
 pub use profile::{GpuProfile, NicProfile, TransportKind};

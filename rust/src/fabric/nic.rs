@@ -144,6 +144,13 @@ pub enum CqeKind {
     /// immediate is now visible. The fabric guarantees the payload DMA
     /// committed *before* this CQE exists (PCIe ordering invariant).
     ImmRecvd { imm: u32, len: u32, src: NicAddr },
+    /// Sender: the WR failed — its local or destination NIC was down
+    /// (chaos NicDown, see [`crate::fabric::chaos`]) and nothing was
+    /// delivered. Mirrors a flushed WQE / retry-exhausted completion
+    /// status: the payload is guaranteed NOT to have committed, so the
+    /// engine may resubmit it on a surviving NIC without risking
+    /// duplication.
+    WrError,
 }
 
 #[cfg(test)]

@@ -22,9 +22,10 @@
 //! enqueues the receiver's imm CQE, before it.
 
 use std::cell::RefCell;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::rc::Rc;
 
+use super::chaos::{ChaosProfile, ChaosState};
 use super::mem::{DmaSlice, MemRegistry};
 use super::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
 use super::profile::NicProfile;
@@ -116,6 +117,22 @@ struct State {
     /// thread noticing completions on its next poll iteration without
     /// simulating millions of idle poll events.
     cq_hooks: HashMap<NicAddr, Rc<dyn Fn(&mut Sim)>>,
+    /// Installed transport perturbation (see [`super::chaos`]). Uses
+    /// its OWN seeded RNG stream so the base `rng` draws — and with
+    /// them every unperturbed run — stay bit-identical whether or not
+    /// a profile was ever installed.
+    chaos: Option<ChaosState>,
+    /// NICs currently down (chaos NicDown). Posts on them and
+    /// deliveries through them fail with [`CqeKind::WrError`].
+    down: HashSet<NicAddr>,
+    /// WRs whose delivery was dropped by a dead NIC, keyed by
+    /// (sender NIC, wr id); the sender-side ack event converts these
+    /// to `WrError` completions instead of acks.
+    failed: HashSet<(NicAddr, u64)>,
+    /// Link-state hooks: called (deferred) with the new `up` state
+    /// whenever a NIC flips. The engine layer registers one per NIC to
+    /// keep its `NicHealth` table in sync with fabric truth.
+    health_hooks: HashMap<NicAddr, Rc<dyn Fn(&mut Sim, bool)>>,
 }
 
 /// The simulated fabric. Clone freely; all clones share state.
@@ -133,6 +150,10 @@ impl SimNet {
                 mem: MemRegistry::new(),
                 rng: Rng::new(seed),
                 cq_hooks: HashMap::new(),
+                chaos: None,
+                down: HashSet::new(),
+                failed: HashSet::new(),
+                health_hooks: HashMap::new(),
             })),
         }
     }
@@ -191,6 +212,67 @@ impl SimNet {
         self.state.borrow_mut().cq_hooks.insert(addr, hook);
     }
 
+    /// Register a link-state hook for `addr`: called (deferred) with
+    /// the new `up` state whenever [`SimNet::set_nic_up`] flips it.
+    pub fn set_health_hook(&self, addr: NicAddr, hook: Rc<dyn Fn(&mut Sim, bool)>) {
+        self.state.borrow_mut().health_hooks.insert(addr, hook);
+    }
+
+    /// Install a transport-perturbation profile (see [`super::chaos`]):
+    /// extra per-chunk jitter + bounded commit reordering take effect
+    /// immediately; the profile's NIC events are scheduled on the sim.
+    /// Chaos draws from the profile's own seeded RNG, so installing a
+    /// quiet profile perturbs nothing. Every registered health hook is
+    /// (re)notified with its NIC's current state, which arms the
+    /// failover bookkeeping of EVERY engine on the fabric — a remote
+    /// NIC death must be resubmittable by senders that never saw their
+    /// own links flip.
+    pub fn inject_chaos(&self, sim: &mut Sim, profile: &ChaosProfile) {
+        self.state.borrow_mut().chaos = Some(profile.state());
+        let mut hooks: Vec<(NicAddr, Rc<dyn Fn(&mut Sim, bool)>)> = {
+            let s = self.state.borrow();
+            s.health_hooks
+                .iter()
+                .map(|(&a, h)| (a, h.clone()))
+                .collect()
+        };
+        // HashMap order is nondeterministic; keep the deferred event
+        // sequence reproducible.
+        hooks.sort_by_key(|&(a, _)| a);
+        for (addr, h) in hooks {
+            let up = self.nic_up(addr);
+            sim.defer(move |s| h(s, up));
+        }
+        for ev in &profile.nic_events {
+            let this = self.clone();
+            let ev = *ev;
+            sim.at(ev.at, move |sim| this.set_nic_up(sim, ev.nic, ev.up));
+        }
+    }
+
+    /// Flip `addr`'s link state. Down NICs fail posts and deliveries
+    /// with [`CqeKind::WrError`]; registered health hooks are notified
+    /// (deferred) either way.
+    pub fn set_nic_up(&self, sim: &mut Sim, addr: NicAddr, up: bool) {
+        let hook = {
+            let mut s = self.state.borrow_mut();
+            if up {
+                s.down.remove(&addr);
+            } else {
+                s.down.insert(addr);
+            }
+            s.health_hooks.get(&addr).cloned()
+        };
+        if let Some(h) = hook {
+            sim.defer(move |s| h(s, up));
+        }
+    }
+
+    /// Current link state of `addr`.
+    pub fn nic_up(&self, addr: NicAddr) -> bool {
+        !self.state.borrow().down.contains(&addr)
+    }
+
     /// Invoke `addr`'s completion hook, if any, as a deferred event.
     fn notify(&self, sim: &mut Sim, addr: NicAddr) {
         let hook = self.state.borrow().cq_hooks.get(&addr).cloned();
@@ -246,6 +328,24 @@ impl SimNet {
 
     fn post_outgoing(&self, sim: &mut Sim, local: NicAddr, wr: WorkRequest) -> bool {
         let now = sim.now();
+        // Posting on a dead NIC: accepted (the SQ is host memory) but
+        // immediately flushed with an error completion — nothing is
+        // serialized, nothing reaches the wire.
+        if self.state.borrow().down.contains(&local) {
+            let this = self.clone();
+            let wr_id = wr.id;
+            sim.defer(move |s| {
+                this.state
+                    .borrow_mut()
+                    .nics
+                    .get_mut(&local)
+                    .expect("unknown NIC")
+                    .cq
+                    .push_back(Cqe { wr_id, kind: CqeKind::WrError });
+                this.notify(s, local);
+            });
+            return true;
+        }
         // --- sender side, computed at post time: SQ depth, WQE
         // pipeline, TX serializer, per-chunk wire jitter ---
         let (arrivals, dst, transport, wire_back, seq) = {
@@ -296,12 +396,22 @@ impl SimNet {
                 nic.tx_free = tx_end;
                 arrivals.push((tx_start, c));
             }
-            // Per-chunk independent wire jitter (path spray).
+            // Per-chunk independent wire jitter (path spray), plus any
+            // installed chaos jitter — drawn from the chaos profile's
+            // own RNG stream so the base stream stays untouched.
             let wire = prof.wire_ns;
-            let arrivals: Vec<(Instant, usize)> = arrivals
-                .into_iter()
-                .map(|(t, c)| (t + wire + prof.wire_jitter.sample(&mut s.rng), c))
-                .collect();
+            let arrivals: Vec<(Instant, usize)> = {
+                let mut out = Vec::with_capacity(arrivals.len());
+                for (t, c) in arrivals {
+                    let base = prof.wire_jitter.sample(&mut s.rng);
+                    let extra = match s.chaos.as_mut() {
+                        Some(ch) => ch.sample_extra(),
+                        None => 0,
+                    };
+                    out.push((t + wire + base + extra, c));
+                }
+                out
+            };
             (arrivals, dst, prof.transport, wire, seq)
         };
 
@@ -347,8 +457,15 @@ impl SimNet {
                 }
                 // All chunks landed: the message is *ready* at the last
                 // chunk's end. SRD commits immediately (no ordering);
-                // RC commits strictly in per-QP posting order.
-                let ready_at = msg.borrow().last_end;
+                // RC commits strictly in per-QP posting order. An
+                // installed chaos profile adds a bounded commit delay
+                // here, permuting SRD completion order within its
+                // window (RC order is preserved by the sequencer).
+                let reorder = match this.state.borrow_mut().chaos.as_mut() {
+                    Some(ch) => ch.sample_reorder(),
+                    None => 0,
+                };
+                let ready_at = msg.borrow().last_end + reorder;
                 let op = msg.borrow_mut().op.take().unwrap();
                 if transport == super::profile::TransportKind::Srd {
                     this.schedule_commit(sim, local, dst, wr_id, op, ready_at, wire_back, ack_kind);
@@ -381,9 +498,17 @@ impl SimNet {
         sim.at(commit + wire_back, move |s| {
             {
                 let mut st = ack_net.state.borrow_mut();
+                // A delivery dropped by a dead NIC surfaces here as a
+                // WrError instead of an ack (flushed-WQE semantics;
+                // the deliver event at `commit` ran first and recorded
+                // the failure).
+                let failed = st.failed.remove(&(local, wr_id));
                 let nic = st.nics.get_mut(&local).unwrap();
                 nic.inflight -= 1;
-                nic.cq.push_back(Cqe { wr_id, kind: ack_kind });
+                nic.cq.push_back(Cqe {
+                    wr_id,
+                    kind: if failed { CqeKind::WrError } else { ack_kind },
+                });
             }
             ack_net.notify(s, local);
         });
@@ -436,10 +561,18 @@ impl SimNet {
     }
 
     /// Delivery event at `commit` time: DMA the payload, then expose
-    /// the completion — in that order (PCIe invariant).
-    fn deliver(&self, sim: &mut Sim, src: NicAddr, dst: NicAddr, _wr_id: u64, op: WrOp) {
+    /// the completion — in that order (PCIe invariant). If either end
+    /// died while the message was in flight, nothing commits and the
+    /// sender's ack event is converted to a [`CqeKind::WrError`] —
+    /// exactly-once is preserved: a WR either delivers fully or fails
+    /// with a completion that guarantees it did not.
+    fn deliver(&self, sim: &mut Sim, src: NicAddr, dst: NicAddr, wr_id: u64, op: WrOp) {
         {
         let mut s = self.state.borrow_mut();
+        if s.down.contains(&src) || s.down.contains(&dst) {
+            s.failed.insert((src, wr_id));
+            return;
+        }
         match op {
             WrOp::Write {
                 dst_rkey,
@@ -809,6 +942,138 @@ mod tests {
             write_wr(1, b, DmaSlice::new(&sbuf, 0, 0), RKey(0xdead), 0, Some(3)),
         );
         sim.run();
+    }
+
+    #[test]
+    fn chaos_quiet_profile_is_a_no_op() {
+        // Installing a quiet ChaosProfile must leave the run
+        // bit-identical to no profile at all (own RNG stream).
+        let run = |inject: bool| {
+            let (net, mut sim, a, b) = pair(NicProfile::efa);
+            if inject {
+                net.inject_chaos(&mut sim, &crate::fabric::chaos::ChaosProfile::new(9));
+            }
+            let mem = net.mem();
+            let (sbuf, _) = mem.alloc(1 << 20);
+            let (dbuf, drkey) = mem.alloc(1 << 20);
+            for i in 0..8 {
+                net.post(
+                    &mut sim,
+                    a,
+                    write_wr(i, b, DmaSlice::new(&sbuf, 0, 1 << 17), drkey, dbuf.base(), Some(1)),
+                );
+            }
+            let end = sim.run();
+            (end, net.nic_bytes(a), net.nic_bytes(b))
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn chaos_nic_down_fails_writes_without_delivering() {
+        let (net, mut sim, a, b) = pair(NicProfile::connectx7);
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(64);
+        let (dbuf, drkey) = mem.alloc(64);
+        sbuf.write(0, &[9u8; 64]);
+        net.set_nic_up(&mut sim, b, false);
+        net.post(
+            &mut sim,
+            a,
+            write_wr(1, b, DmaSlice::new(&sbuf, 0, 64), drkey, dbuf.base(), Some(7)),
+        );
+        sim.run();
+        // Sender sees a WrError, the receiver sees nothing, and the
+        // payload did not commit.
+        let mut scq = Vec::new();
+        net.poll_cq(a, 4, &mut scq);
+        assert_eq!(scq.len(), 1);
+        assert_eq!(scq[0].kind, CqeKind::WrError);
+        assert_eq!(net.inflight(a), 0, "flushed WR releases its SQ slot");
+        let mut dcq = Vec::new();
+        net.poll_cq(b, 4, &mut dcq);
+        assert!(dcq.is_empty(), "no imm through a dead NIC");
+        assert_eq!(dbuf.to_vec(), vec![0u8; 64], "no DMA through a dead NIC");
+        // Posting FROM a dead NIC errors too, without serializing.
+        net.set_nic_up(&mut sim, b, true);
+        net.set_nic_up(&mut sim, a, false);
+        net.post(
+            &mut sim,
+            a,
+            write_wr(2, b, DmaSlice::new(&sbuf, 0, 64), drkey, dbuf.base(), Some(7)),
+        );
+        sim.run();
+        scq.clear();
+        net.poll_cq(a, 4, &mut scq);
+        assert_eq!(scq.len(), 1);
+        assert_eq!(scq[0].kind, CqeKind::WrError);
+        // Recovery: NicUp restores normal delivery.
+        net.set_nic_up(&mut sim, a, true);
+        net.post(
+            &mut sim,
+            a,
+            write_wr(3, b, DmaSlice::new(&sbuf, 0, 64), drkey, dbuf.base(), Some(7)),
+        );
+        sim.run();
+        assert_eq!(&dbuf.to_vec(), &[9u8; 64], "delivery resumes after NicUp");
+    }
+
+    #[test]
+    fn chaos_reorder_permutes_commits_but_preserves_totals() {
+        let run = |reorder: u64| {
+            let (net, mut sim, a, b) = pair(NicProfile::efa);
+            if reorder > 0 {
+                net.inject_chaos(
+                    &mut sim,
+                    &crate::fabric::chaos::ChaosProfile::new(5).with_reorder(reorder, 8),
+                );
+            }
+            let mem = net.mem();
+            let (sbuf, _) = mem.alloc(64);
+            let (dbuf, drkey) = mem.alloc(64);
+            for i in 0..32u64 {
+                net.post(
+                    &mut sim,
+                    a,
+                    write_wr(i, b, DmaSlice::new(&sbuf, 0, 8), drkey, dbuf.base(), Some(i as u32)),
+                );
+            }
+            sim.run();
+            let mut cq = Vec::new();
+            net.poll_cq(b, 64, &mut cq);
+            cq.iter()
+                .filter_map(|c| match c.kind {
+                    CqeKind::ImmRecvd { imm, .. } => Some(imm),
+                    _ => None,
+                })
+                .collect::<Vec<u32>>()
+        };
+        let base = run(0);
+        let shuffled = run(200_000);
+        assert_ne!(base, shuffled, "a wide reorder window must permute commits");
+        let (mut b1, mut b2) = (base, shuffled);
+        b1.sort_unstable();
+        b2.sort_unstable();
+        assert_eq!(b1, b2, "reliable: every imm delivered exactly once");
+    }
+
+    #[test]
+    fn chaos_health_hooks_fire_on_link_flips() {
+        let (net, mut sim, a, b) = pair(NicProfile::connectx7);
+        let log: Rc<RefCell<Vec<(NicAddr, bool)>>> = Rc::default();
+        let l = log.clone();
+        net.set_health_hook(a, Rc::new(move |_s, up| l.borrow_mut().push((a, up))));
+        let profile = crate::fabric::chaos::ChaosProfile::new(1)
+            .nic_down(1_000, a)
+            .nic_up(5_000, a)
+            .nic_down(9_000, b); // no hook registered: silently ok
+        net.inject_chaos(&mut sim, &profile);
+        sim.run();
+        // First entry: the injection-time arming broadcast re-reports
+        // the current (up) state; then the scheduled flips.
+        assert_eq!(*log.borrow(), vec![(a, true), (a, false), (a, true)]);
+        assert!(net.nic_up(a));
+        assert!(!net.nic_up(b));
     }
 
     #[test]

@@ -51,6 +51,15 @@ impl Histogram {
         self.samples[rank.min(n) - 1]
     }
 
+    /// The samples, sorted ascending. The chaos-invariance tests use
+    /// this to compare whole distributions bit-for-bit (a perturbed
+    /// run must produce the identical multiset of clock-independent
+    /// outputs).
+    pub fn sorted_samples(&mut self) -> &[u64] {
+        self.ensure_sorted();
+        &self.samples
+    }
+
     /// Minimum sample.
     pub fn min(&mut self) -> u64 {
         self.ensure_sorted();
