@@ -35,6 +35,7 @@ use fabric_lib::engine::traits::{
     expect_flag, new_flag, Cluster, Cx, Notify, OnRecv, RuntimeKind, TransferEngine,
 };
 use fabric_lib::engine::wire;
+use fabric_lib::fabric::chaos::ChaosProfile;
 
 /// The entire quickstart, written once against the trait.
 fn demo(cx: &mut Cx, node_a: &dyn TransferEngine, node_b: &dyn TransferEngine) {
@@ -153,6 +154,70 @@ fn demo(cx: &mut Cx, node_a: &dyn TransferEngine, node_b: &dyn TransferEngine) {
             .is_err(),
         "stale handles fail loudly"
     );
+
+    // --- Per-link health: partition → gossip-masked submit → recover ---
+    // Real fabrics fail per directed (src, dst) PATH, not only per
+    // NIC: a flapping switch port cuts one link while both NICs keep
+    // serving every other peer. Cut A's lane-0 path to B's NIC 0; the
+    // engine attributes the resulting WrErrors to exactly that link
+    // and routes around it — no local NIC is ever masked.
+    let a0 = node_a.group_address(0).nics[0];
+    let b0 = node_b.group_address(0).nics[0];
+    // Engines that share a destination register each other as gossip
+    // peers: whoever concludes a remote NIC is dead tells the others
+    // so they mask it without paying their own error round-trip.
+    node_a.set_gossip_peers(0, vec![node_b.group_address(0)]);
+    node_a.inject_chaos(cx, &ChaosProfile::new(11).link_down(0, (a0, b0)));
+    // Fresh pattern + zeroed destination: the asserts below must prove
+    // THIS section's writes landed, not inherit the earlier one's.
+    let pat2: Vec<u8> = (0..len).map(|i| (i * 5 % 241) as u8).collect();
+    big_src.buf.write(0, &pat2);
+    big_dst_h.buf.write(0, &vec![0u8; len]);
+    let done = new_flag();
+    node_a
+        .submit_single_write(
+            cx,
+            (&big_src, 0),
+            len as u64,
+            (&big_dst_d, 0),
+            None,
+            Notify::Flag(done.clone()),
+        )
+        .expect("§3.2-clean write");
+    cx.wait(&done);
+    assert_eq!(big_dst_h.buf.to_vec(), pat2, "failover across the partition loses nothing");
+    println!(
+        "write survived a cut {a0}→{b0} link: {} transport error(s), lane mask toward {b0}: {:#04b}",
+        node_a.transport_errors(),
+        node_a.link_health_mask(0, b0),
+    );
+    // A gossip-masked submit: `report_remote_health` is exactly what a
+    // received gossip message applies — the remote NIC is masked out
+    // of every route BEFORE any error round-trip is paid.
+    node_a.report_remote_health(0, b0, false);
+    assert_eq!(node_a.link_health_mask(0, b0), 0, "remote believed dead: no lane offered");
+    big_dst_h.buf.write(0, &vec![0u8; len]);
+    let done = new_flag();
+    node_a
+        .submit_single_write(
+            cx,
+            (&big_src, 0),
+            len as u64,
+            (&big_dst_d, 0),
+            None,
+            Notify::Flag(done.clone()),
+        )
+        .expect("gossip-masked write re-routes, it does not fail");
+    cx.wait(&done);
+    assert_eq!(big_dst_h.buf.to_vec(), pat2);
+    println!("gossip-masked write delivered via B's surviving NIC(s)");
+    // Recovery: heal the fabric link, then re-trust the path in the
+    // engine table (clears the remote belief and its link marks).
+    node_a.inject_chaos(cx, &ChaosProfile::new(12).link_up(cx.now(), (a0, b0)));
+    cx.settle();
+    node_a.report_remote_health(0, b0, true);
+    assert_eq!(node_a.link_health_mask(0, b0), 0b11, "full fanout restored");
+    println!("link healed and re-trusted: lane mask {:#04b}", node_a.link_health_mask(0, b0));
 }
 
 fn main() {

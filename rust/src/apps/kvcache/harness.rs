@@ -434,6 +434,90 @@ pub fn run_kv_nic_failover_on(
     (eng_p.transport_errors(), eng_p.nic_health_mask(0))
 }
 
+/// Per-link partition scenario (the ROADMAP chaos follow-on): one
+/// directed prefiller→decoder link — the LAST local lane's path to its
+/// §3.2-paired decoder NIC — is cut mid-transfer while both endpoint
+/// NICs stay up. Unlike [`run_kv_nic_failover_on`] nothing is locally
+/// observable at the prefiller: its NIC health mask stays full, and it
+/// learns about the partition only from `WrError` attribution, which
+/// masks the cut link out of retries and later submissions
+/// (`link_health_mask`). In-flight page writes on the cut link are
+/// transparently resubmitted over surviving links; the request
+/// completes with every page delivered exactly once, no cancellation
+/// and no re-dispatch. Returns `(transport_errors, nic_health_mask,
+/// link_health_mask toward the cut destination)` of the prefiller.
+pub fn run_kv_link_partition_on(
+    cx: &mut Cx,
+    eng_p: Rc<dyn TransferEngine>,
+    eng_d: Rc<dyn TransferEngine>,
+    gpu_profile: GpuProfile,
+    seq: u32,
+    cut_at: Instant,
+) -> (u64, u64, u64) {
+    assert!(eng_p.nics_per_gpu() >= 2, "a surviving link needs a second lane");
+    let workload = ServingWorkload::tiny();
+    let compute = ComputeModel::new(gpu_profile);
+    let prefiller = Prefiller::new(cx, eng_p.clone(), 0, &compute, workload.clone(), 0);
+    let decoder = Decoder::new(cx, eng_d.clone(), 0, workload);
+    let free0 = decoder.free_slot_count();
+
+    let lanes = eng_p.nics_per_gpu() as usize;
+    let src = eng_p.group_address(0).nics[lanes - 1];
+    let dst = eng_d.group_address(0).nics[lanes - 1];
+    eng_p.inject_chaos(cx, &ChaosProfile::new(0xFA13).link_down(cut_at, (src, dst)));
+
+    let input: Vec<u32> = (0..seq).map(|i| i % 997).collect();
+    let id = decoder.submit_request(cx, &eng_p.group_address(0), input, 1);
+    let reports = decoder.reports();
+    {
+        let reports = reports.clone();
+        cx.drive_until("link-partition request completion", move || {
+            reports.borrow().len() == 1
+        });
+    }
+    assert_eq!(reports.borrow()[0].req_id, id);
+    assert_eq!(
+        decoder.free_slot_count(),
+        free0,
+        "every page returned to the pool across the partition"
+    );
+    let _keep = prefiller;
+    (
+        eng_p.transport_errors(),
+        eng_p.nic_health_mask(0),
+        eng_p.link_health_mask(0, dst),
+    )
+}
+
+/// DES convenience wrapper for [`run_kv_link_partition_on`]: a 2-node
+/// H100+2×EFA pair, cutting one of the four directed prefiller→decoder
+/// links at `cut_at`.
+pub fn run_kv_link_partition(seq: u32, cut_at: Instant) -> (u64, u64, u64) {
+    let mut cluster = Cluster::new_with(
+        RuntimeKind::Des,
+        2,
+        1,
+        2,
+        0xFA3,
+        NicProfile::efa(),
+        GpuProfile::h100(),
+    );
+    let engines = cluster.engines_rc();
+    let out = {
+        let (mut cx, _) = cluster.parts();
+        run_kv_link_partition_on(
+            &mut cx,
+            engines[0].clone(),
+            engines[1].clone(),
+            GpuProfile::h100(),
+            seq,
+            cut_at,
+        )
+    };
+    cluster.shutdown();
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -502,6 +586,34 @@ mod tests {
         // Whether a WR was mid-flight at the exact kill instant is a
         // timing property; determinism of the count is what matters.
         let _ = errors;
+    }
+
+    #[test]
+    fn chaos_kv_link_partition_completes_without_redispatch() {
+        // One directed prefiller→decoder link dies mid-transfer; both
+        // NICs stay up. The transfer completes over surviving links
+        // with zero lost pages (asserted inside the scenario) and no
+        // re-dispatch machinery involved at all.
+        let (errors, mask, link_mask) = run_kv_link_partition(128, 15_000);
+        assert_eq!(mask, 0b11, "a path failure is not a local NIC failure");
+        // Whether a WR was mid-flight on the cut link at the exact cut
+        // instant is a timing property; the observation, when made, is
+        // precisely link-grained.
+        if errors > 0 {
+            assert_eq!(
+                link_mask, 0b01,
+                "only the cut link's lane is masked, only toward that destination"
+            );
+        } else {
+            assert_eq!(link_mask, 0b11);
+        }
+    }
+
+    #[test]
+    fn chaos_kv_link_partition_is_deterministic() {
+        let a = run_kv_link_partition(128, 15_000);
+        let b = run_kv_link_partition(128, 15_000);
+        assert_eq!(a, b, "same-seed partition runs must agree exactly");
     }
 
     #[test]

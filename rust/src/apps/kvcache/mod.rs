@@ -25,8 +25,9 @@ pub mod workload;
 
 pub use decoder::Decoder;
 pub use harness::{
-    run_generic_kv_push, run_kv_failover, run_kv_failover_on, run_kv_nic_failover_on,
-    run_table3_row, run_table3_row_on, FailoverOutcome, Table3Row,
+    run_generic_kv_push, run_kv_failover, run_kv_failover_on, run_kv_link_partition,
+    run_kv_link_partition_on, run_kv_nic_failover_on, run_table3_row, run_table3_row_on,
+    FailoverOutcome, Table3Row,
 };
 pub use layout::KvLayout;
 pub use prefiller::Prefiller;

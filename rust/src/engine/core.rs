@@ -34,10 +34,18 @@
 //! rkey selection modulo the remote count (the `MrDesc::rkey_for`
 //! footgun). Templated submissions run the same check once, at bind
 //! time.
+//!
+//! The chaos layer lives here too: [`NicHealth`] tracks fabric-truth
+//! local NIC state PLUS sender-side per-link observations (directed
+//! `(local lane, remote NIC)` partitions and remote NICs believed
+//! dead, learned from `WrError` attribution or health gossip), and
+//! [`remap_routed`] applies both at patch time — moving lanes off
+//! partitioned links and re-routing writes whose remote NIC is
+//! believed dead onto a surviving route of the same region.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::api::{MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst};
 use super::imm_counter::{ImmCounter, ImmEvent};
@@ -48,10 +56,26 @@ use crate::fabric::nic::NicAddr;
 use crate::util::err::{Error, Result};
 use crate::util::fasthash::FastMap;
 
-/// A planned write routed to its destination: the NIC-indexed plan
-/// plus the remote `(NIC, rkey)` pair it must target. Runtimes only
-/// have to wrap each entry in a `WorkRequest` and post it.
-pub type RoutedWrite = (PlannedWrite, (NicAddr, u64));
+/// The full `(remote NIC, rkey)` route set of one destination region,
+/// indexed by local lane (the §3.2 NIC-`i`↔NIC-`i` pairing). Shared by
+/// every [`RoutedWrite`] targeting the region so failover can re-route
+/// onto a surviving remote NIC without re-resolving descriptors.
+pub type RouteSet = Arc<Vec<(NicAddr, u64)>>;
+
+/// A planned write routed to its destination: the NIC-indexed plan,
+/// the chosen remote `(NIC, rkey)` route, and the destination region's
+/// full route set (for destination-aware failover). Runtimes only have
+/// to wrap each entry in a `WorkRequest` and post it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutedWrite {
+    /// The sharding plan: local lane, offsets, length, immediate.
+    pub plan: PlannedWrite,
+    /// The chosen remote `(NIC, rkey)` route (initially the §3.2
+    /// pairing of the planned lane).
+    pub route: (NicAddr, u64),
+    /// All routes of the destination region, one per remote NIC.
+    pub alts: RouteSet,
+}
 
 // ---------------------------------------------------------------------
 // Peer groups
@@ -65,8 +89,10 @@ pub struct PeerTemplate {
     /// Remote region length, bounding per-call offsets.
     pub len: u64,
     /// Resolved `(remote NIC, rkey)` per local NIC index — the §3.2
-    /// NIC-`i`↔NIC-`i` pairing computed once at bind time.
-    pub routes: Vec<(NicAddr, u64)>,
+    /// NIC-`i`↔NIC-`i` pairing computed once at bind time. Shared
+    /// ([`RouteSet`]) so templated submissions hand the set to their
+    /// [`RoutedWrite`]s with one refcount bump.
+    pub routes: RouteSet,
 }
 
 /// The pre-templated submission state a peer group owns once
@@ -166,7 +192,7 @@ impl PeerGroups {
         for (i, (desc, addr)) in descs.iter().zip(&entry.peers).enumerate() {
             let fanout = checked_fanout(local_fanout, desc)
                 .map_err(|e| Error::msg(format!("peer {i} of {h:?}: {e}")))?;
-            let routes: Vec<(NicAddr, u64)> = (0..fanout).map(|n| desc.rkey_for(n)).collect();
+            let routes: RouteSet = Arc::new((0..fanout).map(|n| desc.rkey_for(n)).collect());
             for (nic, &(remote, _)) in routes.iter().enumerate() {
                 if addr.nics.get(nic) != Some(&remote) {
                     bail!(
@@ -272,17 +298,50 @@ impl PeerGroups {
 // NIC health + failover policy (chaos layer)
 // ---------------------------------------------------------------------
 
-/// Per-domain-group NIC link-state table, consulted by every
-/// submission path: a downed NIC is excluded from new work — the
-/// untemplated routes and the pre-bound [`GroupTemplate`] routes alike
-/// (templates keep all per-peer routes and the mask is applied at
-/// patch time, so recovery needs no rebind). Atomic so the threaded
-/// runtime reads it lock-free on the hot path; updated by the fabric's
-/// link-state hooks (chaos NicDown/NicUp) or by an operator override
-/// (`set_nic_health`).
+/// Per-domain-group link-state table, consulted by every submission
+/// path at patch time. Two kinds of state live here:
+///
+/// * the **local NIC mask** (fabric truth, synced through the
+///   fabric's whole-NIC link-state hooks or `set_nic_health`): a
+///   downed local NIC is excluded from new work — untemplated routes
+///   and pre-bound [`GroupTemplate`] routes alike (templates keep all
+///   per-peer routes, so recovery needs no rebind);
+/// * **per-peer observations** (sender-side beliefs, not fabric
+///   truth): directed links `(local lane → remote NIC)` whose WRs
+///   came back [`crate::fabric::nic::CqeKind::WrError`], and remote
+///   NICs concluded dead — from the sender's own exhausted lane walk
+///   or from a peer's health **gossip**
+///   (`TransferEngine::report_remote_health`). Observations steer
+///   routing away from suspect paths *when an alternative exists*;
+///   when no believed-healthy path remains they are cleared and the
+///   submission re-probes fabric truth (see [`remap_routed`]) instead
+///   of failing on stale beliefs.
+///
+/// The local mask is atomic so the threaded runtime reads it lock-free
+/// on the happy path; observations sit behind a mutex taken only once
+/// any exist ([`NicHealth::all_clear`] gates the whole table).
 pub struct NicHealth {
     mask: AtomicU64,
     fanout: usize,
+    /// Fast-path flag: true while any per-link/remote observation is
+    /// recorded (checked before taking `observed`'s lock).
+    dirty: AtomicBool,
+    observed: Mutex<Observations>,
+}
+
+/// Sender-side per-peer health beliefs (see [`NicHealth`]).
+#[derive(Default)]
+struct Observations {
+    /// Remote NICs believed dead.
+    remotes: HashSet<NicAddr>,
+    /// Directed `(local lane, remote NIC)` links believed partitioned.
+    links: HashSet<(usize, NicAddr)>,
+}
+
+impl Observations {
+    fn is_empty(&self) -> bool {
+        self.remotes.is_empty() && self.links.is_empty()
+    }
 }
 
 impl NicHealth {
@@ -292,43 +351,59 @@ impl NicHealth {
         NicHealth {
             mask: AtomicU64::new(if fanout == 64 { u64::MAX } else { (1u64 << fanout) - 1 }),
             fanout,
+            dirty: AtomicBool::new(false),
+            observed: Mutex::new(Observations::default()),
         }
     }
 
-    /// Flip one NIC's health.
+    /// Flip one local NIC's health. Recovery (`up = true`) also drops
+    /// any per-link observations attributed to that lane: failures
+    /// recorded while the NIC itself was down prove nothing about the
+    /// paths beyond it.
     pub fn set(&self, nic: usize, up: bool) {
         if nic >= self.fanout {
             return;
         }
         if up {
             self.mask.fetch_or(1 << nic, Ordering::Release);
+            if self.dirty.load(Ordering::Acquire) {
+                let mut obs = self.observed.lock().unwrap();
+                obs.links.retain(|&(l, _)| l != nic);
+                self.dirty.store(!obs.is_empty(), Ordering::Release);
+            }
         } else {
             self.mask.fetch_and(!(1 << nic), Ordering::Release);
         }
     }
 
-    /// Current health bitmask (bit `i` set = NIC `i` up).
+    /// Current local health bitmask (bit `i` set = NIC `i` up).
     pub fn mask(&self) -> u64 {
         self.mask.load(Ordering::Acquire)
     }
 
-    /// True when NIC `i` is up.
+    /// True when local NIC `i` is up.
     pub fn is_up(&self, nic: usize) -> bool {
         self.mask() & (1 << nic) != 0
     }
 
-    /// True when every NIC of the group is up (the fast path: no
-    /// remapping work at all).
+    /// True when every local NIC of the group is up.
     pub fn all_up(&self) -> bool {
         self.mask().count_ones() as usize == self.fanout
     }
 
-    /// Number of healthy NICs.
+    /// True when every local NIC is up AND no per-link/remote
+    /// observation is recorded — the fast path: no remapping work at
+    /// all.
+    pub fn all_clear(&self) -> bool {
+        self.all_up() && !self.dirty.load(Ordering::Acquire)
+    }
+
+    /// Number of healthy local NICs.
     pub fn up_count(&self) -> usize {
         self.mask().count_ones() as usize
     }
 
-    /// Healthy NIC indices, ascending.
+    /// Healthy local NIC indices, ascending.
     pub fn healthy(&self) -> Vec<usize> {
         let m = self.mask();
         (0..self.fanout).filter(|i| m & (1 << i) != 0).collect()
@@ -337,6 +412,92 @@ impl NicHealth {
     /// NICs in the group.
     pub fn fanout(&self) -> usize {
         self.fanout
+    }
+
+    /// Record an observation about the directed link
+    /// `(local lane → remote)` — typically a `WrError` attribution
+    /// (down) or a probe success (up).
+    pub fn set_link(&self, lane: usize, remote: NicAddr, up: bool) {
+        if lane >= self.fanout {
+            return;
+        }
+        let mut obs = self.observed.lock().unwrap();
+        if up {
+            obs.links.remove(&(lane, remote));
+        } else {
+            obs.links.insert((lane, remote));
+        }
+        self.dirty.store(!obs.is_empty(), Ordering::Release);
+    }
+
+    /// Record a belief about a REMOTE NIC's health (own conclusion or
+    /// received gossip). Marking a remote up also clears any per-link
+    /// observations toward it (the path is being re-trusted wholesale).
+    pub fn set_remote(&self, remote: NicAddr, up: bool) {
+        let mut obs = self.observed.lock().unwrap();
+        if up {
+            obs.remotes.remove(&remote);
+            obs.links.retain(|&(_, r)| r != remote);
+        } else {
+            obs.remotes.insert(remote);
+        }
+        self.dirty.store(!obs.is_empty(), Ordering::Release);
+    }
+
+    /// True unless `remote` is currently believed dead.
+    pub fn remote_up(&self, remote: NicAddr) -> bool {
+        if !self.dirty.load(Ordering::Acquire) {
+            return true;
+        }
+        !self.observed.lock().unwrap().remotes.contains(&remote)
+    }
+
+    /// The effective lane mask toward `remote`: local NICs that are up
+    /// AND whose directed link to `remote` is not observed partitioned.
+    /// Zero when `remote` itself is believed dead.
+    pub fn link_mask(&self, remote: NicAddr) -> u64 {
+        let local = self.mask();
+        if !self.dirty.load(Ordering::Acquire) {
+            return local;
+        }
+        let obs = self.observed.lock().unwrap();
+        if obs.remotes.contains(&remote) {
+            return 0;
+        }
+        let mut m = local;
+        for &(lane, r) in obs.links.iter() {
+            if r == remote && lane < self.fanout {
+                m &= !(1 << lane);
+            }
+        }
+        m
+    }
+
+    /// True when a failed-link observation is recorded for EVERY lane
+    /// of the group toward `remote` — the evidence bar for concluding
+    /// the remote NIC itself is dead (and gossiping that). A lane
+    /// that is locally down cannot produce fresh evidence, and a mask
+    /// intersection alone would let one cut link plus a local outage
+    /// masquerade as a remote death; requiring a recorded `WrError`
+    /// attribution per lane does not.
+    pub fn all_links_observed_down(&self, remote: NicAddr) -> bool {
+        if !self.dirty.load(Ordering::Acquire) {
+            return false;
+        }
+        let obs = self.observed.lock().unwrap();
+        (0..self.fanout).all(|l| obs.links.contains(&(l, remote)))
+    }
+
+    /// Drop every observation about the remotes named in `routes` —
+    /// the optimistic re-probe when beliefs would leave a region
+    /// unreachable (fabric truth, i.e. the local mask, still applies).
+    pub fn clear_observed_for(&self, routes: &[(NicAddr, u64)]) {
+        let mut obs = self.observed.lock().unwrap();
+        for &(r, _) in routes {
+            obs.remotes.remove(&r);
+        }
+        obs.links.retain(|&(_, r)| !routes.iter().any(|&(a, _)| a == r));
+        self.dirty.store(!obs.is_empty(), Ordering::Release);
     }
 }
 
@@ -392,26 +553,110 @@ fn mask_of(fanout: usize) -> u64 {
     }
 }
 
-/// Remap routed writes off unhealthy local NICs: each write planned
-/// for lane `L` egresses on `survivors[L % survivors.len()]` instead.
-/// Only the local lane moves — the pre-resolved remote `(NIC, rkey)`
-/// route is untouched (any local NIC may target any remote region;
-/// the §3.2 NIC-`i`↔NIC-`i` pairing is a load-balancing convention,
-/// not a reachability constraint). Errors when every NIC of the group
-/// is down.
+/// Remap routed writes off unhealthy paths, destination-aware. Per
+/// write, in order:
+///
+/// 1. project the planned lane onto [`NicHealth::link_mask`] of the
+///    chosen remote NIC — local lanes that are down, or observed
+///    partitioned toward *that* destination, are never used (fairness
+///    over the survivors via [`project_lane`]);
+/// 2. if no lane is believed to reach the chosen remote NIC (remote
+///    believed dead, or every directed link to it observed cut),
+///    re-route to the first surviving remote NIC of the same region
+///    (`alts` carries every `(NIC, rkey)` of the destination — same
+///    region, different ingress port) and project onto ITS link mask;
+/// 3. if NO remote NIC of the region is believed reachable, the
+///    observations — which are sender-side beliefs, not fabric truth —
+///    are cleared for this region and the write re-probes on the local
+///    mask alone (worst case it pays the `WrError` round-trip it would
+///    have paid anyway).
+///
+/// Only the egress lane and the remote `(NIC, rkey)` route move; the
+/// destination VA is untouched (every route of a region resolves the
+/// same memory — the §3.2 NIC-`i`↔NIC-`i` pairing is a load-balancing
+/// convention, not a reachability constraint). Errors only when every
+/// LOCAL NIC of the group is down.
 pub fn remap_routed(routed: &mut [RoutedWrite], health: &NicHealth) -> Result<()> {
-    let mask = health.mask();
     let fanout = health.fanout();
-    for (p, _) in routed.iter_mut() {
-        match project_lane(p.nic, mask, fanout) {
-            Some(nic) => p.nic = nic,
-            None => bail!(
-                "all {fanout} NICs of the domain group are down; \
-                 submission rejected (see FailoverPolicy docs)"
-            ),
+    if health.mask() == 0 {
+        bail!(
+            "all {fanout} NICs of the domain group are down; \
+             submission rejected (see FailoverPolicy docs)"
+        );
+    }
+    if health.all_clear() {
+        return Ok(());
+    }
+    for w in routed.iter_mut() {
+        // Each mask is read ONCE and the projection runs on that
+        // snapshot: a concurrent health flip (threaded runtime) may
+        // make the choice stale — the WR then pays a WrError
+        // round-trip like any other in-flight loser — but it must
+        // never turn a submission into a panic.
+        let mask = health.link_mask(w.route.0);
+        if mask != 0 {
+            w.plan.nic = project_lane(w.plan.nic, mask, fanout).expect("pure fn of mask");
+            continue;
+        }
+        let alt = w.alts.iter().find_map(|&(r, k)| {
+            let m = health.link_mask(r);
+            if m != 0 {
+                Some(((r, k), m))
+            } else {
+                None
+            }
+        });
+        if let Some((alt, m)) = alt {
+            w.route = alt;
+            w.plan.nic = project_lane(w.plan.nic, m, fanout).expect("pure fn of mask");
+        } else {
+            health.clear_observed_for(&w.alts);
+            match project_lane(w.plan.nic, health.mask(), fanout) {
+                Some(lane) => w.plan.nic = lane,
+                // The local mask was re-read and may have gone to zero
+                // since the entry check: same contract as entering
+                // with every NIC down.
+                None => bail!(
+                    "all {fanout} NICs of the domain group are down; \
+                     submission rejected (see FailoverPolicy docs)"
+                ),
+            }
         }
     }
     Ok(())
+}
+
+/// Next believed-healthy path for a failed WR, shared by both
+/// runtimes' `WrError` handlers: another lane toward the same
+/// destination NIC first (projecting `lane + attempts` onto the
+/// per-link mask, which shrinks by exactly the failed lane on each
+/// attributed failure — so the walk visits every surviving path
+/// once), then the first surviving REMOTE NIC of the destination
+/// region (`None` route component = "keep the WR's destination").
+/// Returns `None` when no path is believed up — the WR then degrades
+/// to error-out.
+pub fn retarget(
+    health: &NicHealth,
+    lane: usize,
+    attempts: usize,
+    remote: NicAddr,
+    routes: &[(NicAddr, u64)],
+) -> Option<(usize, Option<(NicAddr, u64)>)> {
+    let fanout = health.fanout();
+    if let Some(l) = project_lane(lane + attempts, health.link_mask(remote), fanout) {
+        return Some((l, None));
+    }
+    for &(r, rkey) in routes {
+        if r == remote {
+            continue;
+        }
+        let m = health.link_mask(r);
+        if m != 0 {
+            let l = project_lane(lane + attempts, m, fanout).expect("pure fn of mask");
+            return Some((l, Some((r, rkey))));
+        }
+    }
+    None
 }
 
 // ---------------------------------------------------------------------
@@ -733,8 +978,12 @@ pub fn route_scatter(
         .zip(dsts.iter())
         .map(|(p, d)| {
             let fanout = checked_fanout(local_fanout, &d.dst.0)?;
-            let rk = d.dst.0.rkey_for(p.nic % fanout);
-            Ok((p, rk))
+            let route = d.dst.0.rkey_for(p.nic % fanout);
+            Ok(RoutedWrite {
+                plan: p,
+                route,
+                alts: Arc::new(d.dst.0.rkeys.clone()),
+            })
         })
         .collect()
 }
@@ -754,18 +1003,27 @@ pub fn route_barrier(
         .zip(dsts.iter())
         .map(|(p, d)| {
             let fanout = checked_fanout(local_fanout, d)?;
-            let rk = d.rkey_for(p.nic % fanout);
-            Ok((p, rk))
+            let route = d.rkey_for(p.nic % fanout);
+            Ok(RoutedWrite {
+                plan: p,
+                route,
+                alts: Arc::new(d.rkeys.clone()),
+            })
         })
         .collect()
 }
 
 fn pair_with_rkeys(plans: Vec<PlannedWrite>, desc: &MrDesc) -> Vec<RoutedWrite> {
+    let alts: RouteSet = Arc::new(desc.rkeys.clone());
     plans
         .into_iter()
         .map(|p| {
-            let rk = desc.rkey_for(p.nic);
-            (p, rk)
+            let route = desc.rkey_for(p.nic);
+            RoutedWrite {
+                plan: p,
+                route,
+                alts: alts.clone(),
+            }
         })
         .collect()
 }
@@ -812,8 +1070,12 @@ pub fn route_single_write_templated(
     Ok(plans
         .into_iter()
         .map(|p| {
-            let rk = slot.routes[p.nic];
-            (p, rk)
+            let route = slot.routes[p.nic];
+            RoutedWrite {
+                plan: p,
+                route,
+                alts: slot.routes.clone(),
+            }
         })
         .collect())
 }
@@ -840,8 +1102,12 @@ pub fn route_paged_writes_templated(
     Ok(plans
         .into_iter()
         .map(|p| {
-            let rk = slot.routes[p.nic];
-            (p, rk)
+            let route = slot.routes[p.nic];
+            RoutedWrite {
+                plan: p,
+                route,
+                alts: slot.routes.clone(),
+            }
         })
         .collect())
 }
@@ -861,16 +1127,17 @@ pub fn route_scatter_templated(
         .map(|(i, d)| {
             let slot = peer_slot(t, d.peer, d.dst, d.len)?;
             let nic = (rotation + i) % t.fanout;
-            Ok((
-                PlannedWrite {
+            Ok(RoutedWrite {
+                plan: PlannedWrite {
                     nic,
                     src_off: d.src,
                     dst_va: slot.base + d.dst,
                     len: d.len,
                     imm,
                 },
-                slot.routes[nic],
-            ))
+                route: slot.routes[nic],
+                alts: slot.routes.clone(),
+            })
         })
         .collect()
 }
@@ -884,16 +1151,17 @@ pub fn route_barrier_templated(t: &GroupTemplate, rotation: usize, imm: u32) -> 
         .enumerate()
         .map(|(i, slot)| {
             let nic = (rotation + i) % t.fanout;
-            (
-                PlannedWrite {
+            RoutedWrite {
+                plan: PlannedWrite {
                     nic,
                     src_off: 0,
                     dst_va: slot.base,
                     len: 0,
                     imm: Some(imm),
                 },
-                slot.routes[nic],
-            )
+                route: slot.routes[nic],
+                alts: slot.routes.clone(),
+            }
         })
         .collect()
 }
@@ -999,15 +1267,141 @@ mod tests {
         let h = NicHealth::new(2);
         h.set(0, false);
         remap_routed(&mut routed, &h).unwrap();
-        for (p, (dst_nic, _)) in &routed {
-            assert_eq!(p.nic, 1, "all egress moves to the surviving NIC");
+        for w in &routed {
+            assert_eq!(w.plan.nic, 1, "all egress moves to the surviving NIC");
             // The remote route is untouched: destination NIC/rkey stay
             // as planned.
-            assert_eq!(dst_nic.node, 2);
+            assert_eq!(w.route.0.node, 2);
         }
         h.set(1, false);
         let err = remap_routed(&mut routed, &h).unwrap_err();
         assert!(err.to_string().contains("all 2 NICs"), "{err}");
+    }
+
+    #[test]
+    fn chaos_link_observations_shape_the_per_destination_mask() {
+        let h = NicHealth::new(2);
+        let (r0, r1) = (nic(2, 0), nic(2, 1));
+        assert!(h.all_clear());
+        assert_eq!(h.link_mask(r0), 0b11);
+        // A partitioned link masks only ITS lane, only toward ITS
+        // destination.
+        h.set_link(0, r0, false);
+        assert!(!h.all_clear());
+        assert_eq!(h.link_mask(r0), 0b10);
+        assert_eq!(h.link_mask(r1), 0b11, "other destinations unaffected");
+        assert!(h.all_up(), "local mask untouched by link observations");
+        // A remote believed dead zeroes its whole mask.
+        h.set_remote(r1, false);
+        assert!(!h.remote_up(r1));
+        assert_eq!(h.link_mask(r1), 0);
+        // Re-trusting the remote also clears link observations to it.
+        h.set_link(1, r1, false);
+        h.set_remote(r1, true);
+        assert_eq!(h.link_mask(r1), 0b11);
+        // Targeted clear: observations about listed remotes vanish,
+        // others survive.
+        h.set_remote(r1, false);
+        h.clear_observed_for(&[(r0, 0)]);
+        assert_eq!(h.link_mask(r0), 0b11);
+        assert_eq!(h.link_mask(r1), 0, "r1 not in the cleared route set");
+        h.clear_observed_for(&[(r1, 0)]);
+        assert!(h.all_clear());
+        // Out-of-range lanes are ignored.
+        h.set_link(9, r0, false);
+        assert!(h.all_clear());
+    }
+
+    #[test]
+    fn chaos_remap_reroutes_dead_remote_onto_surviving_route() {
+        let d = desc(2, 2);
+        let mut routed =
+            route_single_write(2, 0, 0, 4 * SPLIT_THRESHOLD, (&d, 0), None).unwrap();
+        let h = NicHealth::new(2);
+        // Remote NIC 0 believed dead: its shard must re-route to the
+        // surviving remote NIC 1 (same region, different ingress port),
+        // not fail and not stay put.
+        h.set_remote(nic(2, 0), false);
+        remap_routed(&mut routed, &h).unwrap();
+        for w in &routed {
+            assert_eq!(w.route, (nic(2, 1), 101), "all traffic re-routes to remote NIC 1");
+        }
+        // Both remotes believed dead: beliefs are cleared and the
+        // writes re-probe on the original routes (local mask is fine).
+        h.set_remote(nic(2, 0), false);
+        h.set_remote(nic(2, 1), false);
+        let mut routed2 =
+            route_single_write(2, 0, 0, 4 * SPLIT_THRESHOLD, (&d, 0), None).unwrap();
+        remap_routed(&mut routed2, &h).unwrap();
+        assert!(h.all_clear(), "unreachable-region beliefs are cleared (re-probe)");
+        let remotes: Vec<u8> = routed2.iter().map(|w| w.route.0.nic).collect();
+        assert_eq!(remotes, vec![0, 1], "original pairing restored after the clear");
+    }
+
+    #[test]
+    fn chaos_remote_death_needs_evidence_on_every_lane() {
+        let h = NicHealth::new(2);
+        let r = nic(5, 0);
+        assert!(!h.all_links_observed_down(r), "no evidence at all");
+        h.set_link(0, r, false);
+        assert!(
+            !h.all_links_observed_down(r),
+            "one cut link is not a dead remote — even if other local NICs are down"
+        );
+        // A local outage must not lower the bar: lane 1 down locally,
+        // still only lane 0 has link evidence.
+        h.set(1, false);
+        assert!(!h.all_links_observed_down(r));
+        h.set(1, true);
+        // Full evidence: one attributed failure per lane.
+        h.set_link(1, r, false);
+        assert!(h.all_links_observed_down(r));
+        // Local-NIC recovery drops that lane's marks → bar unmet again.
+        h.set(0, true);
+        assert!(!h.all_links_observed_down(r));
+    }
+
+    #[test]
+    fn chaos_retarget_walks_lanes_then_surviving_remotes() {
+        let h = NicHealth::new(2);
+        let (r0, r1) = (nic(3, 0), nic(3, 1));
+        let routes = [(r0, 100u64), (r1, 101u64)];
+        // First failure on lane 0 toward r0: next attempt stays on r0,
+        // other lane.
+        h.set_link(0, r0, false);
+        assert_eq!(retarget(&h, 0, 1, r0, &routes), Some((1, None)));
+        // Second failure: every lane toward r0 is marked → jump to the
+        // surviving remote NIC of the region.
+        h.set_link(1, r0, false);
+        assert_eq!(retarget(&h, 0, 2, r0, &routes), Some((0, Some((r1, 101)))));
+        // No surviving remote at all → degrade to error-out.
+        h.set_remote(r1, false);
+        assert_eq!(retarget(&h, 0, 3, r0, &routes), None);
+        // SENDs carry no route set: lane walk only.
+        h.set_remote(r1, true);
+        assert_eq!(retarget(&h, 0, 1, r1, &[]), Some((1, None)));
+    }
+
+    #[test]
+    fn chaos_link_mask_rotation_stays_fair_over_surviving_links() {
+        // 4 local NICs; the link (lane 2 → remote) is partitioned.
+        // Rotation over the per-destination mask must never pick lane 2
+        // for that remote and must stay round-robin fair over the
+        // survivors — while a different remote still sees all 4 lanes.
+        let h = NicHealth::new(4);
+        let (cut_dst, ok_dst) = (nic(7, 0), nic(8, 0));
+        h.set_link(2, cut_dst, false);
+        let r = Rotation::new();
+        let mut hits = [0u32; 4];
+        for _ in 0..300 {
+            let lane = r
+                .bump_masked(h.link_mask(cut_dst), 4)
+                .expect("survivors exist");
+            assert_ne!(lane, 2, "partitioned link must never be chosen");
+            hits[lane] += 1;
+        }
+        assert_eq!(&hits[..], &[100, 100, 0, 100], "fair over surviving links");
+        assert_eq!(h.link_mask(ok_dst), 0b1111, "other destinations keep every lane");
     }
 
     #[test]
@@ -1072,9 +1466,10 @@ mod tests {
         let d = desc(2, 2);
         let routed = route_single_write(2, 0, 0, 4 * SPLIT_THRESHOLD, (&d, 0), None).unwrap();
         assert_eq!(routed.len(), 2, "large imm-less write shards");
-        for (p, (dst_nic, rkey)) in &routed {
-            assert_eq!(*dst_nic, nic(2, p.nic as u8), "NIC i pairs with remote NIC i");
-            assert_eq!(*rkey, 100 + p.nic as u64);
+        for w in &routed {
+            assert_eq!(w.route.0, nic(2, w.plan.nic as u8), "NIC i pairs with remote NIC i");
+            assert_eq!(w.route.1, 100 + w.plan.nic as u64);
+            assert_eq!(*w.alts, d.rkeys, "every write carries the region's route set");
         }
     }
 
@@ -1084,7 +1479,7 @@ mod tests {
         let pages = Pages::contiguous(0, 6, 4096);
         let routed = route_paged_writes(2, 1, 4096, &pages, (&d, &pages), Some(9)).unwrap();
         assert_eq!(routed.len(), 6, "imm count preserved: one WR per page");
-        assert!(routed.iter().all(|(p, _)| p.imm == Some(9)));
+        assert!(routed.iter().all(|w| w.plan.imm == Some(9)));
     }
 
     #[test]
@@ -1096,12 +1491,12 @@ mod tests {
             .collect();
         let routed = route_scatter(1, 0, &dsts, Some(4)).unwrap();
         assert_eq!(routed.len(), 3);
-        for (i, (_, (dst_nic, _))) in routed.iter().enumerate() {
-            assert_eq!(dst_nic.node, (i + 1) as u16);
+        for (i, w) in routed.iter().enumerate() {
+            assert_eq!(w.route.0.node, (i + 1) as u16);
         }
         let routed = route_barrier(1, 0, &peers, 5).unwrap();
         assert_eq!(routed.len(), 3);
-        assert!(routed.iter().all(|(p, _)| p.len == 0 && p.imm == Some(5)));
+        assert!(routed.iter().all(|w| w.plan.len == 0 && w.plan.imm == Some(5)));
     }
 
     // The §3.2 equal-NIC-count check is a REAL error path now, not a
@@ -1153,7 +1548,7 @@ mod tests {
         for (i, slot) in t.peers.iter().enumerate() {
             assert_eq!(slot.base, descs[i].ptr);
             assert_eq!(slot.len, descs[i].len);
-            assert_eq!(slot.routes, descs[i].rkeys, "routes resolved at bind time");
+            assert_eq!(*slot.routes, descs[i].rkeys, "routes resolved at bind time");
         }
     }
 

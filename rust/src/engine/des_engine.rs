@@ -30,12 +30,13 @@ use super::api::{
     EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
 use super::core::{
-    project_lane, remap_routed, route_barrier, route_barrier_templated, route_paged_writes,
+    remap_routed, retarget, route_barrier, route_barrier_templated, route_paged_writes,
     route_paged_writes_templated, route_scatter, route_scatter_templated, route_single_write,
     route_single_write_templated, FailoverPolicy, ImmTable, NicHealth, PeerGroups, RecvPool,
-    Rotation, RoutedWrite, TransferTable,
+    Rotation, RouteSet, RoutedWrite, TransferTable,
 };
 use super::model::Fired;
+use super::wire;
 use super::traits::{Cx, Notify, OnRecv, OnWatch, RuntimeKind, TransferEngine, UvmWatcher};
 use crate::fabric::chaos::ChaosProfile;
 use crate::fabric::mem::{DmaBuf, DmaSlice, RKey};
@@ -94,6 +95,9 @@ struct Group {
     recv_cb: Option<Rc<dyn Fn(&mut Sim, Fired)>>,
     /// IMMCOUNTER slots + expectation waiters.
     imm: ImmTable<Box<dyn FnOnce(&mut Sim)>>,
+    /// Health-gossip neighborhood: peers told when this group's
+    /// `WrError` attribution concludes a remote NIC is dead.
+    gossip: Vec<NetAddr>,
 }
 
 struct State {
@@ -124,14 +128,22 @@ struct State {
     retry: FastMap<u64, RetryEntry>,
 }
 
-/// Everything needed to repost a failed WR on a surviving NIC.
+/// Everything needed to repost a failed WR on a surviving path.
 struct RetryEntry {
     gpu: usize,
-    /// Local NIC index the WR last went out on.
+    /// Local NIC index of the ORIGINAL egress (the projection base, so
+    /// successive attempts walk every survivor under a stable mask).
     lane: usize,
+    /// Local NIC index the WR last actually went out on (what a
+    /// `WrError` is attributed to, together with the WR's destination).
+    cur_lane: usize,
+    /// The destination region's full route set: failover may retarget
+    /// the WR onto a surviving REMOTE NIC of the same region (empty
+    /// for SENDs, which have a single fixed destination).
+    routes: RouteSet,
     wr: WorkRequest,
-    /// Failures so far; capped at the group fanout before degrading
-    /// to error-out.
+    /// Failures so far; capped at fanout + route count before
+    /// degrading to error-out.
     attempts: u8,
 }
 
@@ -172,6 +184,7 @@ impl Engine {
                     recvs: RecvPool::new(),
                     recv_cb: None,
                     imm: ImmTable::new(),
+                    gossip: Vec::new(),
                 }
             })
             .collect();
@@ -246,6 +259,25 @@ impl Engine {
     /// Health bitmask of `gpu`'s domain group.
     pub fn nic_health_mask(&self, gpu: u8) -> u64 {
         self.state.borrow().groups[gpu as usize].health.mask()
+    }
+
+    /// Effective egress-lane mask of `gpu`'s group toward `remote`
+    /// (see the trait docs).
+    pub fn link_health_mask(&self, gpu: u8, remote: NicAddr) -> u64 {
+        self.state.borrow().groups[gpu as usize].health.link_mask(remote)
+    }
+
+    /// Record a belief about a REMOTE NIC's health (the operation a
+    /// received gossip message applies; also an operator override).
+    pub fn report_remote_health(&self, gpu: u8, remote: NicAddr, up: bool) {
+        let mut s = self.state.borrow_mut();
+        s.armed = true;
+        s.groups[gpu as usize].health.set_remote(remote, up);
+    }
+
+    /// Configure the health-gossip neighborhood of `gpu`'s group.
+    pub fn set_gossip_peers(&self, gpu: u8, peers: Vec<NetAddr>) {
+        self.state.borrow_mut().groups[gpu as usize].gossip = peers;
     }
 
     /// Select the in-flight failure policy (see the trait docs).
@@ -377,7 +409,14 @@ impl Engine {
                 if s.armed {
                     s.retry.insert(
                         wr_id,
-                        RetryEntry { gpu: gpu as usize, lane: 0, wr: wr.clone(), attempts: 0 },
+                        RetryEntry {
+                            gpu: gpu as usize,
+                            lane: 0,
+                            cur_lane: 0,
+                            routes: RouteSet::default(),
+                            wr: wr.clone(),
+                            attempts: 0,
+                        },
                     );
                 }
                 s.net.clone()
@@ -800,9 +839,11 @@ impl Engine {
     /// Execute routed writes (each already paired with its destination
     /// `(NIC, rkey)` by [`super::core`]); charges worker CPU and posts
     /// WRs at the modeled times (chained where the NIC supports it).
-    /// Downed local NICs are masked here — at patch time, after
-    /// routing — so untemplated and templated submissions alike egress
-    /// only on healthy NICs; errs when the whole group is down.
+    /// Unhealthy paths are masked here — at patch time, after routing
+    /// — so untemplated and templated submissions alike egress only on
+    /// lanes believed to reach their destination (downed local NICs,
+    /// observed link partitions and gossiped-dead remote NICs all
+    /// steer the choice); errs when the whole group is down locally.
     fn execute_routed(
         &self,
         sim: &mut Sim,
@@ -816,7 +857,7 @@ impl Engine {
             let mut s = self.state.borrow_mut();
             let res = {
                 let health = &s.groups[gpu].health;
-                if health.all_up() {
+                if health.all_clear() {
                     Ok(())
                 } else {
                     remap_routed(&mut routed, health)
@@ -839,7 +880,8 @@ impl Engine {
             let prof = s.net.profile(nic0);
             let mut posts = Vec::with_capacity(routed.len());
             let mut t = first_post_at;
-            for (i, (p, (dst_nic, rkey))) in routed.into_iter().enumerate() {
+            for (i, w) in routed.into_iter().enumerate() {
+                let RoutedWrite { plan: p, route: (dst_nic, rkey), alts } = w;
                 let wr_id = s.alloc_wr();
                 s.transfers.bind_wr(wr_id, tid);
                 // Chaining: on RC up to `max_chain` WRs share a
@@ -865,7 +907,14 @@ impl Engine {
                 if s.armed {
                     s.retry.insert(
                         wr_id,
-                        RetryEntry { gpu, lane: p.nic, wr: wr.clone(), attempts: 0 },
+                        RetryEntry {
+                            gpu,
+                            lane: p.nic,
+                            cur_lane: p.nic,
+                            routes: alts,
+                            wr: wr.clone(),
+                            attempts: 0,
+                        },
                     );
                 }
                 posts.push((t, p.nic, wr));
@@ -981,6 +1030,16 @@ impl Engine {
                         chained: false,
                     },
                 );
+                // Engine-level control plane: health gossip rides the
+                // same recv pool as heartbeats but is consumed HERE —
+                // applied to the group's link table, never delivered
+                // to application callbacks.
+                if wire::is_nic_health(&payload) {
+                    if let Ok((nic, up)) = wire::decode_nic_health(&payload) {
+                        self.report_remote_health(gpu as u8, nic, up);
+                    }
+                    return;
+                }
                 if let Some(cb) = cb {
                     // Ownership handoff: the extracted payload moves
                     // into the callback's `Fired` — no per-message
@@ -991,50 +1050,100 @@ impl Engine {
         }
     }
 
-    /// A WR died on a downed NIC (fabric `WrError`). Under
-    /// [`FailoverPolicy::Resubmit`] repost it on the group's next
-    /// healthy NIC (the payload provably did not commit, so this can
-    /// never duplicate); cap attempts at the group fanout, then — or
-    /// under [`FailoverPolicy::ErrorOut`] immediately — count the
-    /// error and complete the transfer undelivered so waiters do not
-    /// hang (the receiver's ImmCounter stays un-bumped; see the trait
-    /// docs for the caller-visible contract).
+    /// A WR died on a downed NIC or a partitioned link (fabric
+    /// `WrError`). The failure is first ATTRIBUTED: the directed link
+    /// `(egress lane → destination NIC)` is marked suspect in the
+    /// group's [`NicHealth`] table, and once every local lane toward
+    /// that destination has failed the REMOTE NIC is concluded dead —
+    /// which is what the group's gossip peers are told, so they mask
+    /// it before paying their own error round-trip. Under
+    /// [`FailoverPolicy::Resubmit`] the WR is then reposted on the
+    /// next believed-healthy path — another lane toward the same
+    /// destination NIC first, then a surviving remote NIC of the same
+    /// region (the payload provably did not commit, so neither can
+    /// duplicate); attempts cap at fanout + route count, then — or
+    /// under [`FailoverPolicy::ErrorOut`] immediately — the error is
+    /// counted and the transfer completes undelivered so waiters do
+    /// not hang (the receiver's ImmCounter stays un-bumped; see the
+    /// trait docs for the caller-visible contract).
     fn on_wr_error(&self, sim: &mut Sim, wr_id: u64) {
         enum Act {
             Retry { gpu: usize, nic_idx: usize, wr: WorkRequest },
             Fail(Option<OnDone>),
         }
-        let act = {
+        let (act, gossip) = {
             let mut s = self.state.borrow_mut();
             s.transport_errors += 1;
             let entry = s.retry.remove(&wr_id);
             match entry {
-                Some(mut e) if s.failover == FailoverPolicy::Resubmit => {
-                    let g = &s.groups[e.gpu];
-                    let fanout = g.nics.len();
-                    e.attempts += 1;
-                    let lane = if (e.attempts as usize) <= fanout {
-                        project_lane(e.lane + e.attempts as usize, g.health.mask(), fanout)
-                    } else {
-                        None
-                    };
-                    match lane {
-                        Some(nic) => {
-                            let wr = e.wr.clone();
-                            let gpu = e.gpu;
-                            // e.lane stays the ORIGINAL lane: with a
-                            // stable mask, lane+1..=lane+fanout then
-                            // projects onto every survivor before the
-                            // attempt cap degrades to error-out.
-                            s.retry.insert(wr_id, e);
-                            Act::Retry { gpu, nic_idx: nic, wr }
+                Some(mut e) => {
+                    let remote = e.wr.op.dst();
+                    let mut gossip = None;
+                    if let Some(r) = remote {
+                        let g = &s.groups[e.gpu];
+                        g.health.set_link(e.cur_lane, r, false);
+                        // Conclude remote death only from full link
+                        // evidence: one attributed WrError per local
+                        // lane (a locally-dead lane proves nothing
+                        // about the destination and cannot satisfy
+                        // the bar).
+                        if g.health.up_count() > 0
+                            && g.health.all_links_observed_down(r)
+                            && g.health.remote_up(r)
+                        {
+                            g.health.set_remote(r, false);
+                            if !g.gossip.is_empty() {
+                                gossip = Some((e.gpu, r));
+                            }
                         }
-                        None => Act::Fail(s.transfers.complete_wr(wr_id)),
+                    }
+                    if s.failover == FailoverPolicy::Resubmit {
+                        e.attempts += 1;
+                        let target = {
+                            let g = &s.groups[e.gpu];
+                            let cap = (g.nics.len() + e.routes.len()) as u8;
+                            match (e.attempts <= cap, remote) {
+                                (true, Some(r)) => retarget(
+                                    &g.health,
+                                    e.lane,
+                                    e.attempts as usize,
+                                    r,
+                                    &e.routes,
+                                ),
+                                _ => None,
+                            }
+                        };
+                        match target {
+                            Some((lane, new_route)) => {
+                                if let Some((r, rkey)) = new_route {
+                                    if let WrOp::Write { dst, dst_rkey, .. } = &mut e.wr.op {
+                                        *dst = r;
+                                        *dst_rkey = RKey(rkey);
+                                    }
+                                }
+                                // e.lane stays the ORIGINAL lane: the
+                                // projection base is stable while the
+                                // per-link mask shrinks with each
+                                // attributed failure, so the walk
+                                // visits every surviving path.
+                                e.cur_lane = lane;
+                                let wr = e.wr.clone();
+                                let gpu = e.gpu;
+                                s.retry.insert(wr_id, e);
+                                (Act::Retry { gpu, nic_idx: lane, wr }, gossip)
+                            }
+                            None => (Act::Fail(s.transfers.complete_wr(wr_id)), gossip),
+                        }
+                    } else {
+                        (Act::Fail(s.transfers.complete_wr(wr_id)), gossip)
                     }
                 }
-                _ => Act::Fail(s.transfers.complete_wr(wr_id)),
+                None => (Act::Fail(s.transfers.complete_wr(wr_id)), None),
             }
         };
+        if let Some((gpu, remote)) = gossip {
+            self.send_gossip(sim, gpu, remote);
+        }
         match act {
             Act::Retry { gpu, nic_idx, wr } => {
                 let this = self.clone();
@@ -1053,6 +1162,24 @@ impl Engine {
                     self.fire_on_done(sim, d);
                 }
             }
+        }
+    }
+
+    /// Tell the group's gossip peers that `remote` was observed dead:
+    /// one small control SEND per peer over the ordinary recv pool
+    /// (fire-and-forget; peers owning the dead NIC are skipped — they
+    /// know their own link state from the fabric hooks).
+    fn send_gossip(&self, sim: &mut Sim, gpu: usize, remote: NicAddr) {
+        let peers = self.state.borrow().groups[gpu].gossip.clone();
+        if peers.is_empty() {
+            return;
+        }
+        let msg = wire::encode_nic_health(remote, false);
+        for p in &peers {
+            if p.nics.contains(&remote) {
+                continue;
+            }
+            self.submit_send(sim, gpu as u8, p, &msg, OnDone::Noop);
         }
     }
 
@@ -1351,6 +1478,18 @@ impl TransferEngine for Engine {
 
     fn transport_errors(&self) -> u64 {
         Engine::transport_errors(self)
+    }
+
+    fn link_health_mask(&self, gpu: u8, remote: NicAddr) -> u64 {
+        Engine::link_health_mask(self, gpu, remote)
+    }
+
+    fn report_remote_health(&self, gpu: u8, remote: NicAddr, up: bool) {
+        Engine::report_remote_health(self, gpu, remote, up)
+    }
+
+    fn set_gossip_peers(&self, gpu: u8, peers: Vec<NetAddr>) {
+        Engine::set_gossip_peers(self, gpu, peers)
     }
 }
 

@@ -17,7 +17,9 @@
 //!   [`traits`] — the dyn-safe Fig-2 trait + `Cx`/`Notify`/`Cluster`,
 //!        │ plus the chaos/health surface: `inject_chaos`,
 //!        │ `set_nic_health`, `set_failover_policy`,
-//!        │ `transport_errors`
+//!        │ `transport_errors`, and the per-link layer:
+//!        │ `link_health_mask`, `report_remote_health`,
+//!        │ `set_gossip_peers`
 //!        │
 //!        ├── [`des_engine::Engine`]      (virtual clock, deterministic)
 //!        └── [`threaded::ThreadedEngine`] (pinned threads, wall clock)
@@ -30,18 +32,27 @@
 //!        matching, NIC rotation (mask-aware), plan→rkey routing
 //!        (§3.2 equal-NIC invariant as a real error path), the
 //!        templated route-patching fast path, and the chaos-layer
-//!        `NicHealth` table + `FailoverPolicy` + lane remapping that
-//!        keep downed NICs out of every submission at patch time
+//!        `NicHealth` table (local NIC mask + per-link/remote
+//!        observations) + `FailoverPolicy` + destination-aware
+//!        `remap_routed` that keep downed NICs, partitioned links and
+//!        gossiped-dead remote NICs out of every submission at patch
+//!        time
 //!        │
 //!   [`api`], [`wire`], [`sharding`], [`imm_counter`] — vocabulary
-//!        types, wire format, pure sharding planner, counter logic
+//!        types, wire format (incl. the NIC-health gossip control
+//!        message), pure sharding planner, counter logic
 //!        │
 //!   fabric chaos ([`crate::fabric::chaos`]) — seeded, deterministic
 //!        transport perturbation UNDER the engine: per-chunk jitter,
-//!        bounded commit reordering, scheduled NicDown/NicUp with
-//!        `WrError` completions and link-state hooks back up into the
-//!        engines' health tables
+//!        bounded commit reordering, scheduled NicDown/NicUp and
+//!        per-link (src, dst) partitions with `WrError` completions;
+//!        whole-NIC link-state hooks feed the engines' health tables
+//!        (path failures deliberately don't — senders learn them from
+//!        `WrError` attribution + gossip)
 //! ```
+//!
+//! The full architecture — including the failover/gossip contract —
+//! is documented in `docs/ARCHITECTURE.md` at the repository root.
 //!
 //! * [`traits`] — the [`traits::TransferEngine`] trait: the full
 //!   Fig-2 vocabulary (`alloc_mr`/`reg_mr`, SEND/RECV, single/paged
@@ -92,7 +103,7 @@ pub mod wire;
 pub use api::{
     EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
-pub use self::core::{FailoverPolicy, GroupTemplate, NicHealth, PeerTemplate};
+pub use self::core::{FailoverPolicy, GroupTemplate, NicHealth, PeerTemplate, RouteSet, RoutedWrite};
 pub use des_engine::{Engine, OnDone, SubmitTrace, UvmWatcherHandle};
 pub use imm_counter::{ImmCounter, ImmEvent};
 pub use model::{

@@ -28,12 +28,13 @@ use super::api::{
     MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
 use super::core::{
-    project_lane, remap_routed, route_barrier, route_barrier_templated, route_paged_writes,
+    remap_routed, retarget, route_barrier, route_barrier_templated, route_paged_writes,
     route_paged_writes_templated, route_scatter, route_scatter_templated, route_single_write,
     route_single_write_templated, FailoverPolicy, ImmTable, NicHealth, PeerGroups, RecvPool,
-    Rotation, RoutedWrite, TransferTable,
+    Rotation, RouteSet, RoutedWrite, TransferTable,
 };
 use super::model::Fired;
+use super::wire;
 use super::traits::{Cx, Notify, OnRecv, OnWatch, RuntimeKind, TransferEngine, UvmWatcher};
 use crate::fabric::chaos::ChaosProfile;
 use crate::fabric::local::LocalFabric;
@@ -56,19 +57,27 @@ fn policy_code(p: FailoverPolicy) -> u8 {
 }
 
 /// Shared failover state handed to each group's worker: the group's
-/// NIC health mask, the engine-wide policy/error counter, and the
-/// armed flag that switches in-flight WR tracking on.
+/// link-health table, the engine-wide policy/error counter, the armed
+/// flag that switches in-flight WR tracking on, and the group's
+/// gossip neighborhood.
 #[derive(Clone)]
 struct FailCtx {
     health: Arc<NicHealth>,
     policy: Arc<AtomicU8>,
     errors: Arc<AtomicU64>,
     armed: Arc<AtomicBool>,
+    gossip: Arc<Mutex<Vec<NetAddr>>>,
 }
 
-/// Everything needed to repost a failed WR on a surviving NIC.
+/// Everything needed to repost a failed WR on a surviving path.
 struct RetryT {
+    /// Original egress lane (stable projection base).
     lane: usize,
+    /// Lane the WR last actually went out on (`WrError` attribution).
+    cur_lane: usize,
+    /// The destination region's full route set (remote-NIC failover;
+    /// empty for SENDs).
+    routes: RouteSet,
     wr: WorkRequest,
     attempts: u8,
 }
@@ -130,10 +139,14 @@ struct Group {
     tx: Sender<Cmd>,
     shared: Arc<Mutex<GroupShared>>,
     rotation: Rotation,
-    /// Link-state table: downed NICs are excluded from new submissions
-    /// (kept in sync with the fabric through its health hooks; shared
-    /// with the group's worker for resubmission decisions).
+    /// Link-health table: downed local NICs, observed link partitions
+    /// and gossiped-dead remote NICs are all excluded from new
+    /// submissions (shared with the group's worker for resubmission
+    /// decisions; local bits kept in sync through the fabric hooks).
     health: Arc<NicHealth>,
+    /// Health-gossip neighborhood (shared with the worker, which sends
+    /// the gossip from its `WrError` handler).
+    gossip: Arc<Mutex<Vec<NetAddr>>>,
     worker: Mutex<Option<JoinHandle<()>>>,
 }
 
@@ -204,11 +217,13 @@ impl ThreadedEngine {
             let f = fabric.clone();
             let sh = shared.clone();
             let nics2 = nics.clone();
+            let gossip = Arc::new(Mutex::new(Vec::new()));
             let fo = FailCtx {
                 health: health.clone(),
                 policy: policy.clone(),
                 errors: errors.clone(),
                 armed: armed.clone(),
+                gossip: gossip.clone(),
             };
             let worker = std::thread::Builder::new()
                 .name(format!("te-worker-n{node}g{gpu}"))
@@ -220,6 +235,7 @@ impl ThreadedEngine {
                 shared,
                 rotation: Rotation::new(),
                 health,
+                gossip,
                 worker: Mutex::new(Some(worker)),
             });
         }
@@ -271,6 +287,13 @@ impl ThreadedEngine {
                 fabric.set_nic_up(ev.nic, ev.up);
             });
         }
+        for ev in &profile.link_events {
+            let fabric = self.inner.fabric.clone();
+            let ev = *ev;
+            cx.after(ev.at.saturating_sub(now), move |_cx: &mut Cx| {
+                fabric.set_link_up(ev.src, ev.dst, ev.up);
+            });
+        }
     }
 
     /// Engine-level health override for one local NIC (also how the
@@ -283,6 +306,24 @@ impl ThreadedEngine {
     /// Health bitmask of `gpu`'s domain group.
     pub fn nic_health_mask(&self, gpu: u8) -> u64 {
         self.inner.groups[gpu as usize].health.mask()
+    }
+
+    /// Effective egress-lane mask of `gpu`'s group toward `remote`
+    /// (see the trait docs).
+    pub fn link_health_mask(&self, gpu: u8, remote: NicAddr) -> u64 {
+        self.inner.groups[gpu as usize].health.link_mask(remote)
+    }
+
+    /// Record a belief about a REMOTE NIC's health (the operation a
+    /// received gossip message applies; also an operator override).
+    pub fn report_remote_health(&self, gpu: u8, remote: NicAddr, up: bool) {
+        self.inner.armed.store(true, Ordering::Release);
+        self.inner.groups[gpu as usize].health.set_remote(remote, up);
+    }
+
+    /// Configure the health-gossip neighborhood of `gpu`'s group.
+    pub fn set_gossip_peers(&self, gpu: u8, peers: Vec<NetAddr>) {
+        *self.inner.groups[gpu as usize].gossip.lock().unwrap() = peers;
     }
 
     /// Select the in-flight failure policy (see the trait docs).
@@ -779,11 +820,14 @@ impl ThreadedEngine {
         submitted_ns: u64,
     ) -> Result<()> {
         assert!(!routed.is_empty(), "empty transfer");
-        // Downed local NICs are masked here — at patch time, after
+        // Unhealthy paths are masked here — at patch time, after
         // routing — so untemplated and templated submissions alike
-        // egress only on healthy NICs; errs when the group is down.
+        // egress only on lanes believed to reach their destination
+        // (downed local NICs, observed link partitions and
+        // gossiped-dead remote NICs all steer the choice); errs when
+        // the group is down locally.
         let g = &self.inner.groups[gpu as usize];
-        if !g.health.all_up() {
+        if !g.health.all_clear() {
             if let Err(e) = remap_routed(&mut routed, &g.health) {
                 // An all-NICs-down rejection is a transport failure
                 // too: count it so scenarios can observe the outage.
@@ -834,12 +878,14 @@ fn worker_loop(
                 // entries can be recorded in the same lock pass as the
                 // transfer bindings — BEFORE any WR is on the wire, so
                 // an instant failure still finds its entry.
-                let wrs: Vec<(usize, WorkRequest)> = routed
+                let wrs: Vec<(usize, RouteSet, WorkRequest)> = routed
                     .into_iter()
                     .enumerate()
-                    .map(|(i, (p, (dst_nic, rkey)))| {
+                    .map(|(i, w)| {
+                        let RoutedWrite { plan: p, route: (dst_nic, rkey), alts } = w;
                         (
                             p.nic,
+                            alts,
                             WorkRequest {
                                 id: base_id + i as u64,
                                 qp: QpId(1),
@@ -858,18 +904,24 @@ fn worker_loop(
                 {
                     let mut sh = shared.lock().unwrap();
                     let armed = fo.armed.load(Ordering::Acquire);
-                    for (lane, wr) in &wrs {
+                    for (lane, alts, wr) in &wrs {
                         sh.transfers.bind_wr(wr.id, tid);
                         if armed {
                             sh.retry.insert(
                                 wr.id,
-                                RetryT { lane: *lane, wr: wr.clone(), attempts: 0 },
+                                RetryT {
+                                    lane: *lane,
+                                    cur_lane: *lane,
+                                    routes: alts.clone(),
+                                    wr: wr.clone(),
+                                    attempts: 0,
+                                },
                             );
                         }
                     }
                 }
                 let mut first_post_ns = 0;
-                for (i, (lane, wr)) in wrs.into_iter().enumerate() {
+                for (i, (lane, _alts, wr)) in wrs.into_iter().enumerate() {
                     if i == 0 {
                         first_post_ns = epoch.elapsed().as_nanos() as u64;
                     }
@@ -897,8 +949,16 @@ fn worker_loop(
                     let mut sh = shared.lock().unwrap();
                     sh.transfers.bind_wr(id, tid);
                     if fo.armed.load(Ordering::Acquire) {
-                        sh.retry
-                            .insert(id, RetryT { lane: 0, wr: wr.clone(), attempts: 0 });
+                        sh.retry.insert(
+                            id,
+                            RetryT {
+                                lane: 0,
+                                cur_lane: 0,
+                                routes: RouteSet::default(),
+                                wr: wr.clone(),
+                                attempts: 0,
+                            },
+                        );
                     }
                 }
                 fabric.post(nics[0], wr);
@@ -963,39 +1023,93 @@ fn handle_cqe(
             }
         }
         CqeKind::WrError => {
-            // A WR died on a downed NIC. Under Resubmit, repost it on
-            // the group's next healthy NIC (the failed payload
-            // provably did not commit — no duplication possible);
-            // otherwise count the error and complete the transfer
-            // undelivered so waiters don't hang (trait docs spell out
-            // the caller-visible contract).
+            // A WR died on a downed NIC or a partitioned link. First
+            // ATTRIBUTE the failure — mark the (egress lane →
+            // destination NIC) link suspect, and once every lane
+            // toward that destination failed, conclude the REMOTE NIC
+            // dead and tell the gossip peers. Under Resubmit, repost
+            // on the next believed-healthy path — another lane toward
+            // the same destination first, then a surviving remote NIC
+            // of the region (the failed payload provably did not
+            // commit — no duplication possible); otherwise count the
+            // error and complete the transfer undelivered so waiters
+            // don't hang (trait docs spell out the contract).
             fo.errors.fetch_add(1, Ordering::Relaxed);
             let entry = shared.lock().unwrap().retry.remove(&cqe.wr_id);
+            let mut gossip_dead: Option<NicAddr> = None;
             let retried = match entry {
-                Some(mut e) if fo.policy.load(Ordering::Acquire) == POLICY_RESUBMIT => {
-                    let fanout = nics.len();
-                    e.attempts += 1;
-                    let lane = if (e.attempts as usize) <= fanout {
-                        project_lane(e.lane + e.attempts as usize, fo.health.mask(), fanout)
-                    } else {
-                        None
-                    };
-                    match lane {
-                        Some(next) => {
-                            let wr = e.wr.clone();
-                            // e.lane stays the ORIGINAL lane: with a
-                            // stable mask, lane+1..=lane+fanout then
-                            // projects onto every survivor before the
-                            // attempt cap degrades to error-out.
-                            shared.lock().unwrap().retry.insert(cqe.wr_id, e);
-                            fabric.post(nics[next], wr);
-                            true
+                Some(mut e) => {
+                    let remote = e.wr.op.dst();
+                    if let Some(r) = remote {
+                        fo.health.set_link(e.cur_lane, r, false);
+                        // Conclude remote death only from full link
+                        // evidence: one attributed WrError per local
+                        // lane (a locally-dead lane proves nothing
+                        // about the destination and cannot satisfy
+                        // the bar).
+                        if fo.health.up_count() > 0
+                            && fo.health.all_links_observed_down(r)
+                            && fo.health.remote_up(r)
+                        {
+                            fo.health.set_remote(r, false);
+                            gossip_dead = Some(r);
                         }
-                        None => false,
+                    }
+                    if fo.policy.load(Ordering::Acquire) == POLICY_RESUBMIT {
+                        e.attempts += 1;
+                        let cap = (nics.len() + e.routes.len()) as u8;
+                        let target = match (e.attempts <= cap, remote) {
+                            (true, Some(r)) => {
+                                retarget(&fo.health, e.lane, e.attempts as usize, r, &e.routes)
+                            }
+                            _ => None,
+                        };
+                        match target {
+                            Some((lane, new_route)) => {
+                                if let Some((r, rkey)) = new_route {
+                                    if let WrOp::Write { dst, dst_rkey, .. } = &mut e.wr.op {
+                                        *dst = r;
+                                        *dst_rkey = RKey(rkey);
+                                    }
+                                }
+                                // e.lane stays the ORIGINAL lane: the
+                                // projection base is stable while the
+                                // per-link mask shrinks with each
+                                // attributed failure.
+                                e.cur_lane = lane;
+                                let wr = e.wr.clone();
+                                shared.lock().unwrap().retry.insert(cqe.wr_id, e);
+                                fabric.post(nics[lane], wr);
+                                true
+                            }
+                            None => false,
+                        }
+                    } else {
+                        false
                     }
                 }
-                _ => false,
+                None => false,
             };
+            // Gossip outside the retry bookkeeping: one control SEND
+            // per configured peer (fire-and-forget, peers owning the
+            // dead NIC skipped).
+            if let Some(r) = gossip_dead {
+                let peers = fo.gossip.lock().unwrap().clone();
+                let msg = wire::encode_nic_health(r, false);
+                for p in peers.iter().filter(|p| !p.nics.contains(&r)) {
+                    let id = *next_wr;
+                    *next_wr += 1;
+                    fabric.post(
+                        nics[0],
+                        WorkRequest {
+                            id,
+                            qp: QpId(0),
+                            op: WrOp::Send { dst: p.primary(), payload: msg.clone() },
+                            chained: false,
+                        },
+                    );
+                }
+            }
             if !retried {
                 let done = shared.lock().unwrap().transfers.complete_wr(cqe.wr_id);
                 match done {
@@ -1043,6 +1157,17 @@ fn handle_cqe(
                     chained: false,
                 },
             );
+            // Engine-level control plane: health gossip rides the same
+            // recv pool as heartbeats but is consumed HERE — applied
+            // to the group's link table, never delivered to
+            // application callbacks.
+            if wire::is_nic_health(&msg.data) {
+                if let Ok((dead, up)) = wire::decode_nic_health(&msg.data) {
+                    fo.armed.store(true, Ordering::Release);
+                    fo.health.set_remote(dead, up);
+                }
+                return;
+            }
             if let Some(cb) = cb {
                 cb(msg);
             }
@@ -1279,6 +1404,18 @@ impl TransferEngine for ThreadedEngine {
 
     fn transport_errors(&self) -> u64 {
         ThreadedEngine::transport_errors(self)
+    }
+
+    fn link_health_mask(&self, gpu: u8, remote: NicAddr) -> u64 {
+        ThreadedEngine::link_health_mask(self, gpu, remote)
+    }
+
+    fn report_remote_health(&self, gpu: u8, remote: NicAddr, up: bool) {
+        ThreadedEngine::report_remote_health(self, gpu, remote, up)
+    }
+
+    fn set_gossip_peers(&self, gpu: u8, peers: Vec<NetAddr>) {
+        ThreadedEngine::set_gossip_peers(self, gpu, peers)
     }
 }
 
@@ -1575,6 +1712,100 @@ mod tests {
         assert!(err.to_string().contains("all 2 NICs"), "{err}");
         a.shutdown();
         b.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn chaos_threaded_link_partition_resubmits_over_surviving_links() {
+        // Cut ONE directed link a.nic0 → b.nic0 before submitting:
+        // the lane-0 shard fails at delivery, is attributed to exactly
+        // that link, and resubmits over a surviving path; the payload
+        // arrives complete and the local NIC mask stays full.
+        let fabric = LocalFabric::new(TransportKind::Srd, 90);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 2);
+        let b = ThreadedEngine::new(&fabric, 1, 1, 2);
+        a.set_nic_health(0, 0, true); // arm failover bookkeeping
+        let (a0, b0) = (
+            NicAddr { node: 0, gpu: 0, nic: 0 },
+            NicAddr { node: 1, gpu: 0, nic: 0 },
+        );
+        fabric.set_link_up(a0, b0, false);
+        let len = 1 << 20;
+        let (src, _) = a.alloc_mr(0, len);
+        let (dst_h, dst_d) = b.alloc_mr(0, len);
+        let pat: Vec<u8> = (0..len).map(|i| (i % 241) as u8).collect();
+        src.buf.write(0, &pat);
+        let done = Arc::new(AtomicBool::new(false));
+        a.submit_single_write((&src, 0), len as u64, (&dst_d, 0), None, OnDoneT::Flag(done.clone()))
+            .unwrap();
+        wait_flag(&done);
+        assert_eq!(dst_h.buf.to_vec(), pat, "the partition must lose nothing");
+        assert!(a.transport_errors() >= 1, "the cut link's shard was observed");
+        assert_eq!(a.nic_health_mask(0), 0b11, "no LOCAL NIC died");
+        assert_eq!(a.link_health_mask(0, b0), 0b10, "lane 0 masked toward b.nic0 only");
+        a.shutdown();
+        b.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn chaos_threaded_gossip_masks_dead_remote_for_second_sender() {
+        let fabric = LocalFabric::new(TransportKind::Srd, 91);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 2);
+        let b = ThreadedEngine::new(&fabric, 1, 1, 2);
+        let d = ThreadedEngine::new(&fabric, 2, 1, 2);
+        a.set_gossip_peers(0, vec![b.group_address(0)]);
+        // B's ordinary control-plane recv pool: gossip lands here but
+        // is consumed by the engine, never the app callback.
+        let app_msgs = Arc::new(AtomicU64::new(0));
+        let am = app_msgs.clone();
+        b.submit_recvs(0, 64, 4, move |_m| {
+            am.fetch_add(1, Ordering::Relaxed);
+        });
+        // Arm both senders, then cut every ingress link of d's NIC 0
+        // (no whole-NIC event: nobody hears about it from the fabric).
+        a.set_nic_health(0, 0, true);
+        b.set_nic_health(0, 0, true);
+        let d0 = NicAddr { node: 2, gpu: 0, nic: 0 };
+        for node in [0u16, 1] {
+            for nic in 0..2u8 {
+                fabric.set_link_up(NicAddr { node, gpu: 0, nic }, d0, false);
+            }
+        }
+        let len = 1 << 20;
+        let pat: Vec<u8> = (0..len).map(|i| (i % 239) as u8).collect();
+        // Sender A pays the WrError walk, concludes d.nic0 dead,
+        // retargets onto d.nic1 and gossips.
+        let (src_a, _) = a.alloc_mr(0, len);
+        let (dst_ah, dst_ad) = d.alloc_mr(0, len);
+        src_a.buf.write(0, &pat);
+        let done_a = Arc::new(AtomicBool::new(false));
+        a.submit_single_write((&src_a, 0), len as u64, (&dst_ad, 0), None, OnDoneT::Flag(done_a.clone()))
+            .unwrap();
+        wait_flag(&done_a);
+        assert_eq!(dst_ah.buf.to_vec(), pat);
+        assert!(a.transport_errors() >= 2, "A paid the error round-trips");
+        // Wait for the gossip to land in B's table.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while b.link_health_mask(0, d0) != 0 {
+            assert!(Instant::now() < deadline, "gossip never converged");
+            std::thread::yield_now();
+        }
+        // Sender B then completes its own submit to the same peer over
+        // surviving links with ZERO transport errors.
+        let (src_b, _) = b.alloc_mr(0, len);
+        let (dst_bh, dst_bd) = d.alloc_mr(0, len);
+        src_b.buf.write(0, &pat);
+        let done_b = Arc::new(AtomicBool::new(false));
+        b.submit_single_write((&src_b, 0), len as u64, (&dst_bd, 0), None, OnDoneT::Flag(done_b.clone()))
+            .unwrap();
+        wait_flag(&done_b);
+        assert_eq!(b.transport_errors(), 0, "B never increments transport_errors");
+        assert_eq!(dst_bh.buf.to_vec(), pat, "zero lost payload for B");
+        assert_eq!(app_msgs.load(Ordering::Relaxed), 0, "gossip is engine-consumed");
+        a.shutdown();
+        b.shutdown();
+        d.shutdown();
         fabric.shutdown();
     }
 

@@ -34,6 +34,8 @@
 //! same handle and is how harness tests and examples run one scenario
 //! on both ([`run_on_both`]).
 
+#![warn(missing_docs)]
+
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -178,7 +180,9 @@ impl Notify {
 /// message as an owned [`Fired`] (bytes in [`Fired::data`], truncation
 /// diagnostics in [`Fired::poison`]).
 pub enum OnRecv {
+    /// `Send + Sync` handler invoked on the runtime's receive path.
     Handler(RecvHandler),
+    /// Continuation dispatched on the scenario's driving context.
     Cont(Cont),
 }
 
@@ -204,7 +208,9 @@ impl OnRecv {
 /// engine's watcher path, or a continuation dispatched on the driving
 /// context with `(old, new)` in [`Fired::pair`].
 pub enum OnWatch {
+    /// `Send + Sync` handler invoked on the engine's watcher path.
     Handler(WatchHandler),
+    /// Continuation dispatched on the scenario's driving context.
     Cont(Cont),
 }
 
@@ -642,8 +648,49 @@ pub trait TransferEngine {
     fn set_failover_policy(&self, policy: FailoverPolicy);
 
     /// Transport-level failures observed so far (WRs that died on a
-    /// downed NIC), whether transparently resubmitted or errored out.
+    /// downed NIC or a partitioned link), whether transparently
+    /// resubmitted or errored out.
     fn transport_errors(&self) -> u64;
+
+    // -- per-link health + remote-health gossip -----------------------
+    //
+    // Real fabrics fail per *path*, not only per NIC: a flapping
+    // switch port cuts one (src, dst) link while both NICs keep
+    // serving every other peer. Path failures are not locally
+    // observable at the sender's port, so the engine learns them from
+    // `WrError` attribution (each retry entry knows its egress lane
+    // and destination NIC) and — for OTHER senders — from small gossip
+    // control messages over the ordinary SEND/RECV plane.
+
+    /// The effective egress-lane mask of `gpu`'s group *toward*
+    /// `remote` (bit `i` set = local NIC `i` is up AND its directed
+    /// link to `remote` is not observed partitioned). Zero when
+    /// `remote` itself is believed dead. Every submit path projects
+    /// its lanes through this mask at patch time; observations are
+    /// sender-side beliefs that heal via [`TransferEngine::report_remote_health`]
+    /// or an optimistic re-probe when they would leave a region
+    /// unreachable (see `engine::core::remap_routed`).
+    fn link_health_mask(&self, gpu: u8, remote: NicAddr) -> u64;
+
+    /// Record a belief about a REMOTE NIC's health in `gpu`'s group
+    /// table — the operation a received health-gossip message applies,
+    /// also available as an operator override. `up = false` makes
+    /// every submit path route around `remote` (onto surviving routes
+    /// of each destination region) BEFORE paying a `WrError`
+    /// round-trip; `up = true` re-trusts it and clears any per-link
+    /// observations toward it.
+    fn report_remote_health(&self, gpu: u8, remote: NicAddr, up: bool);
+
+    /// Configure the health-gossip neighborhood of `gpu`'s group: when
+    /// this engine's `WrError` attribution concludes a remote NIC is
+    /// dead (every local lane toward it failed), it sends one
+    /// [`super::wire::encode_nic_health`] control message to each of
+    /// `peers` — over the ordinary SEND/RECV plane, received through
+    /// the peer's posted recv pool (the same pool its heartbeats ride
+    /// on) and consumed by the peer's engine, never delivered to
+    /// application callbacks. Peers owning the dead NIC are skipped.
+    /// An empty list (the default) disables gossip sending.
+    fn set_gossip_peers(&self, gpu: u8, peers: Vec<NetAddr>);
 
     // -- wire bridge (descriptor exchange over SEND/RECV) -------------
 

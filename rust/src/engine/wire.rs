@@ -144,6 +144,9 @@ pub mod tag {
     pub const KV_CANCEL: u8 = 4;
     pub const KV_CANCEL_ACK: u8 = 5;
     pub const HEARTBEAT: u8 = 6;
+    /// Engine-level NIC-health gossip: consumed by the receiving
+    /// engine's recv path, never delivered to application callbacks.
+    pub const NIC_HEALTH: u8 = 7;
 }
 
 /// Serialize a `NetAddr`.
@@ -201,6 +204,37 @@ pub fn decode_mr_desc(buf: &[u8]) -> Result<MrDesc> {
     }
     d.done()?;
     Ok(MrDesc { ptr, len, rkeys })
+}
+
+/// Serialize a NIC-health gossip report: "I observed `nic` to be
+/// `up`/down". Sent by an engine whose `WrError` attribution concluded
+/// a REMOTE NIC is unreachable, over the ordinary SEND/RECV control
+/// plane (the same recv pool heartbeats ride on), so other senders can
+/// mask the dead destination before paying their own error round-trip.
+pub fn encode_nic_health(nic: NicAddr, up: bool) -> Vec<u8> {
+    let mut e = Enc::new(tag::NIC_HEALTH);
+    e.nic(nic).u8(up as u8);
+    e.finish()
+}
+
+/// Deserialize a NIC-health gossip report.
+pub fn decode_nic_health(buf: &[u8]) -> Result<(NicAddr, bool)> {
+    let (t, mut d) = Dec::open(buf)?;
+    if t != tag::NIC_HEALTH {
+        bail!("expected NIC_HEALTH, got tag {t}");
+    }
+    let nic = d.nic()?;
+    let up = d.u8()? != 0;
+    d.done()?;
+    Ok((nic, up))
+}
+
+/// Cheap classifier for the engines' recv paths: is this message a
+/// NIC-health gossip report? (Full validation still happens in
+/// [`decode_nic_health`]; a truncated gossip message is dropped, not
+/// delivered to the application.)
+pub fn is_nic_health(buf: &[u8]) -> bool {
+    buf.len() >= 3 && buf[0] == MAGIC && buf[1] == VERSION && buf[2] == tag::NIC_HEALTH
 }
 
 #[cfg(test)]
@@ -262,6 +296,26 @@ mod tests {
         let mut extended = bytes.clone();
         extended.push(0);
         assert!(decode_net_addr(&extended).is_err(), "trailing bytes must fail");
+    }
+
+    #[test]
+    fn nic_health_roundtrip_and_classifier() {
+        let n = nic(9, 1, 3);
+        for up in [false, true] {
+            let bytes = encode_nic_health(n, up);
+            assert!(is_nic_health(&bytes));
+            assert_eq!(decode_nic_health(&bytes).unwrap(), (n, up));
+        }
+        // Other control messages never classify as gossip.
+        let hb = encode_net_addr(&NetAddr { nics: vec![n] });
+        assert!(!is_nic_health(&hb));
+        assert!(!is_nic_health(b"app payload"));
+        assert!(!is_nic_health(&[]));
+        // A truncated gossip message classifies but fails validation —
+        // the engine drops it rather than delivering it to the app.
+        let bytes = encode_nic_health(n, true);
+        assert!(is_nic_health(&bytes[..4]));
+        assert!(decode_nic_health(&bytes[..4]).is_err());
     }
 
     #[test]

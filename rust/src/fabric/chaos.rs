@@ -33,11 +33,48 @@
 //! the same seed + the same profile reproduce the exact same
 //! perturbation schedule (the chaos determinism tests gate on this).
 //!
+//! * **per-link partitions** — scheduled [`LinkEvent`]s cut (or heal)
+//!   one *directed* `(src NIC, dst NIC)` path while both endpoints
+//!   stay up: WRs traversing a cut link fail with the same
+//!   exactly-once [`crate::fabric::nic::CqeKind::WrError`] semantics
+//!   as a dead NIC, but traffic on every other link — including the
+//!   same NICs talking to other peers — is untouched. This is how real
+//!   fabrics fail: a flapping switch port or routing black-hole takes
+//!   out a path, not a whole NIC. Path failures are NOT locally
+//!   observable at the sender's port, so (unlike whole-NIC events) the
+//!   fabrics do not push them into the engines' health tables; senders
+//!   learn from the `WrError` round-trip and share the observation via
+//!   the engine-level health gossip
+//!   (`TransferEngine::report_remote_health`).
+//!
 //! The threaded fabric ([`crate::fabric::local::LocalFabric`]) runs in
 //! real time, so only the *semantic* knobs apply there: the reorder
-//! window size and the NIC events (scheduled on the scenario's
+//! window size and the NIC/link events (scheduled on the scenario's
 //! Reactor). `extra_jitter`/`reorder_ns` shape DES timing only,
 //! mirroring how NIC profiles already work across the two backends.
+//!
+//! # Example
+//!
+//! ```
+//! use fabric_lib::fabric::chaos::ChaosProfile;
+//! use fabric_lib::fabric::nic::NicAddr;
+//!
+//! let nic = |node, x| NicAddr { node, gpu: 0, nic: x };
+//! // 30 µs of bounded commit reordering, NIC n0g0x1 flaps, and the
+//! // directed path n1g0x0 → n2g0x0 is cut for 1 ms. Seed 7 pins the
+//! // whole perturbation schedule.
+//! let profile = ChaosProfile::new(7)
+//!     .with_reorder(30_000, 16)
+//!     .nic_down(50_000, nic(0, 1))
+//!     .nic_up(400_000, nic(0, 1))
+//!     .link_down(100_000, (nic(1, 0), nic(2, 0)))
+//!     .link_up(1_100_000, (nic(1, 0), nic(2, 0)));
+//! assert!(!profile.is_quiet());
+//! assert_eq!(profile.link_events.len(), 2);
+//! // Install with `TransferEngine::inject_chaos(cx, &profile)`.
+//! ```
+
+#![warn(missing_docs)]
 
 use crate::fabric::nic::NicAddr;
 use crate::sim::rng::{Jitter, Rng};
@@ -50,6 +87,25 @@ pub struct NicEvent {
     /// The NIC whose link state flips.
     pub nic: NicAddr,
     /// `false` = NicDown, `true` = NicUp.
+    pub up: bool,
+}
+
+/// One scheduled per-link partition event, in model time: the
+/// *directed* path `src → dst` is cut (`up = false`) or healed while
+/// both endpoint NICs stay up. WRs already in flight on a cut link —
+/// and WRs posted onto it later — fail with
+/// [`crate::fabric::nic::CqeKind::WrError`] at the sender, with the
+/// exactly-once guarantee (nothing committed). The reverse direction
+/// `dst → src` is a separate link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkEvent {
+    /// Model-clock time (ns) at which the event fires.
+    pub at: u64,
+    /// Source (sender-side) NIC of the directed path.
+    pub src: NicAddr,
+    /// Destination (receiver-side) NIC of the directed path.
+    pub dst: NicAddr,
+    /// `false` = partition the link, `true` = heal it.
     pub up: bool,
 }
 
@@ -71,6 +127,8 @@ pub struct ChaosProfile {
     pub reorder_window: usize,
     /// Scheduled NIC failures/recoveries.
     pub nic_events: Vec<NicEvent>,
+    /// Scheduled per-link `(src, dst)` partitions/heals.
+    pub link_events: Vec<LinkEvent>,
 }
 
 impl ChaosProfile {
@@ -83,6 +141,7 @@ impl ChaosProfile {
             reorder_ns: 0,
             reorder_window: 0,
             nic_events: Vec::new(),
+            link_events: Vec::new(),
         }
     }
 
@@ -125,6 +184,21 @@ impl ChaosProfile {
         self
     }
 
+    /// Schedule a partition of the directed link `src → dst` at `at`
+    /// ns: WRs traversing that path fail with `WrError` (exactly-once
+    /// — nothing committed) while both NICs, and every other link,
+    /// keep working. The reverse direction is a separate link.
+    pub fn link_down(mut self, at: u64, (src, dst): (NicAddr, NicAddr)) -> Self {
+        self.link_events.push(LinkEvent { at, src, dst, up: false });
+        self
+    }
+
+    /// Schedule a heal of the directed link `src → dst` at `at` ns.
+    pub fn link_up(mut self, at: u64, (src, dst): (NicAddr, NicAddr)) -> Self {
+        self.link_events.push(LinkEvent { at, src, dst, up: true });
+        self
+    }
+
     /// True when the profile perturbs nothing (installing it is a
     /// no-op beyond arming the failover bookkeeping).
     pub fn is_quiet(&self) -> bool {
@@ -132,6 +206,7 @@ impl ChaosProfile {
             && self.reorder_ns == 0
             && self.reorder_window == 0
             && self.nic_events.is_empty()
+            && self.link_events.is_empty()
     }
 
     /// Materialize the seeded sampling state a fabric keeps while the
@@ -191,6 +266,19 @@ mod tests {
         assert_eq!(p.nic_events.len(), 2);
         assert!(!p.nic_events[0].up && p.nic_events[1].up);
         assert!(ChaosProfile::new(7).is_quiet());
+    }
+
+    #[test]
+    fn chaos_link_event_builders_compose() {
+        let p = ChaosProfile::new(3)
+            .link_down(2_000, (nic(0), nic(1)))
+            .link_up(8_000, (nic(0), nic(1)));
+        assert!(!p.is_quiet(), "a link partition alone is perturbation");
+        assert_eq!(p.nic_events.len(), 0);
+        assert_eq!(p.link_events.len(), 2);
+        assert_eq!(p.link_events[0].src, nic(0));
+        assert_eq!(p.link_events[0].dst, nic(1));
+        assert!(!p.link_events[0].up && p.link_events[1].up);
     }
 
     #[test]

@@ -52,10 +52,20 @@ struct Shared {
     /// NICs currently down (chaos NicDown): WRs from or to them fail
     /// with [`CqeKind::WrError`] instead of delivering.
     down: Mutex<HashSet<NicAddr>>,
+    /// Directed `(src, dst)` links currently partitioned (chaos
+    /// LinkDown): WRs traversing one fail with [`CqeKind::WrError`]
+    /// while both endpoint NICs keep serving every other path.
+    cut: Mutex<HashSet<(NicAddr, NicAddr)>>,
     /// Link-state hooks, called synchronously from `set_nic_up` with
     /// the new state (the threaded engine keeps its `NicHealth` table
     /// in sync through these).
     health_hooks: Mutex<HashMap<NicAddr, Box<dyn Fn(bool) + Send + Sync>>>,
+    /// Per-link hooks keyed by the SRC NIC, called synchronously from
+    /// `set_link_up` with `(dst, up)`. Observability for
+    /// scenarios/tests; engines learn about partitions from `WrError`
+    /// attribution + gossip (path failures are not locally observable
+    /// at a real sender port).
+    link_hooks: Mutex<HashMap<NicAddr, Box<dyn Fn(NicAddr, bool) + Send + Sync>>>,
     /// SRD reorder-window size (see [`DEFAULT_WINDOW`]).
     window: AtomicUsize,
 }
@@ -85,7 +95,9 @@ impl LocalFabric {
             cq_signal: Condvar::new(),
             mem: MemRegistry::new(),
             down: Mutex::new(HashSet::new()),
+            cut: Mutex::new(HashSet::new()),
             health_hooks: Mutex::new(HashMap::new()),
+            link_hooks: Mutex::new(HashMap::new()),
             window: AtomicUsize::new(DEFAULT_WINDOW),
         });
         let (tx, rx) = mpsc::channel::<Msg>();
@@ -244,6 +256,38 @@ impl LocalFabric {
         self.shared.health_hooks.lock().unwrap().insert(addr, hook);
     }
 
+    /// Partition (`up = false`) or heal the directed link `src → dst`
+    /// in real time, while both endpoint NICs stay up. WRs traversing
+    /// a cut link fail with [`CqeKind::WrError`] (exactly-once: the
+    /// payload provably did not commit); `src`'s registered link hook
+    /// (if any) is notified synchronously with `(dst, up)`.
+    pub fn set_link_up(&self, src: NicAddr, dst: NicAddr, up: bool) {
+        {
+            let mut c = self.shared.cut.lock().unwrap();
+            if up {
+                c.remove(&(src, dst));
+            } else {
+                c.insert((src, dst));
+            }
+        }
+        if let Some(h) = self.shared.link_hooks.lock().unwrap().get(&src) {
+            h(dst, up);
+        }
+    }
+
+    /// Current state of the directed link `src → dst` (false while
+    /// partitioned).
+    pub fn link_up(&self, src: NicAddr, dst: NicAddr) -> bool {
+        !self.shared.cut.lock().unwrap().contains(&(src, dst))
+    }
+
+    /// Register a per-link hook for paths originating at `src`, called
+    /// synchronously with `(dst, up)` on every [`LocalFabric::set_link_up`]
+    /// flip (observability for scenarios/tests).
+    pub fn set_link_hook(&self, src: NicAddr, hook: Box<dyn Fn(NicAddr, bool) + Send + Sync>) {
+        self.shared.link_hooks.lock().unwrap().insert(src, hook);
+    }
+
     /// Re-notify every health hook with its NIC's current state.
     /// Chaos injection calls this to arm the failover bookkeeping of
     /// EVERY engine on the fabric — a remote NIC death must be
@@ -271,13 +315,17 @@ impl LocalFabric {
 }
 
 /// Commit one WR: DMA first, completion second. If either end is down
-/// the WR fails with a [`CqeKind::WrError`] to the sender and nothing
-/// commits (exactly-once: failed WRs are safe to resubmit).
+/// — or the directed `src → dst` link is partitioned — the WR fails
+/// with a [`CqeKind::WrError`] to the sender and nothing commits
+/// (exactly-once: failed WRs are safe to resubmit).
 fn deliver(shared: &Shared, src: NicAddr, wr: WorkRequest) {
     let dst = wr.op.dst().expect("delivery of non-outgoing WR");
     {
         let down = shared.down.lock().unwrap();
-        if down.contains(&src) || down.contains(&dst) {
+        let dead = down.contains(&src)
+            || down.contains(&dst)
+            || shared.cut.lock().unwrap().contains(&(src, dst));
+        if dead {
             drop(down);
             shared
                 .nics
@@ -523,6 +571,56 @@ mod tests {
         assert_eq!(*flips.lock().unwrap(), vec![false, true]);
         f.shutdown();
     }
+
+    #[test]
+    fn chaos_threaded_link_partition_errors_and_heals() {
+        let f = LocalFabric::new(TransportKind::Rc, 16);
+        let (a, b, c) = (addr(0), addr(1), addr(2));
+        for n in [a, b, c] {
+            f.add_nic(n);
+        }
+        let flips = Arc::new(Mutex::new(Vec::new()));
+        let fl = flips.clone();
+        f.set_link_hook(a, Box::new(move |dst, up| fl.lock().unwrap().push((dst, up))));
+        let (sbuf, _) = f.mem().alloc(32);
+        sbuf.write(0, &[4u8; 32]);
+        let (dbuf_b, rkey_b) = f.mem().alloc(32);
+        let (dbuf_c, rkey_c) = f.mem().alloc(32);
+        let wr = |id, dst, rkey: RKey, va| WorkRequest {
+            id,
+            qp: QpId(1),
+            op: WrOp::Write {
+                dst,
+                dst_rkey: rkey,
+                dst_va: va,
+                src: DmaSlice::new(&sbuf, 0, 32),
+                imm: None,
+            },
+            chained: false,
+        };
+        f.set_link_up(a, b, false);
+        assert!(!f.link_up(a, b));
+        assert!(f.nic_up(a) && f.nic_up(b), "both endpoints stay up");
+        f.post(a, wr(1, b, rkey_b, dbuf_b.base()));
+        let cqes = drain(&f, a, 1);
+        assert_eq!(cqes[0].kind, CqeKind::WrError);
+        assert_eq!(dbuf_b.to_vec(), vec![0u8; 32], "nothing commits across a cut link");
+        // The a → c path is untouched.
+        f.post(a, wr(2, c, rkey_c, dbuf_c.base()));
+        let cqes = drain(&f, a, 1);
+        assert_eq!(cqes[0].kind, CqeKind::WriteDone);
+        assert_eq!(dbuf_c.to_vec(), vec![4u8; 32]);
+        // Heal: the same route delivers again.
+        f.set_link_up(a, b, true);
+        f.post(a, wr(3, b, rkey_b, dbuf_b.base()));
+        let cqes = drain(&f, a, 1);
+        assert_eq!(cqes[0].kind, CqeKind::WriteDone);
+        assert_eq!(dbuf_b.to_vec(), vec![4u8; 32]);
+        assert_eq!(*flips.lock().unwrap(), vec![(b, false), (b, true)]);
+        f.shutdown();
+    }
+
+    use crate::fabric::mem::RKey;
 
     #[test]
     fn srd_reorders_under_load() {

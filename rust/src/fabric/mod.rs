@@ -30,7 +30,7 @@ pub mod simnet;
 pub mod topology;
 pub mod gpu;
 
-pub use chaos::{ChaosProfile, NicEvent};
+pub use chaos::{ChaosProfile, LinkEvent, NicEvent};
 pub use mem::{DmaBuf, DmaSlice, MemRegistry, RKey};
 pub use nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
 pub use profile::{GpuProfile, NicProfile, TransportKind};

@@ -125,14 +125,26 @@ struct State {
     /// NICs currently down (chaos NicDown). Posts on them and
     /// deliveries through them fail with [`CqeKind::WrError`].
     down: HashSet<NicAddr>,
-    /// WRs whose delivery was dropped by a dead NIC, keyed by
-    /// (sender NIC, wr id); the sender-side ack event converts these
-    /// to `WrError` completions instead of acks.
+    /// Directed `(src, dst)` links currently partitioned (chaos
+    /// LinkDown): deliveries traversing one fail with
+    /// [`CqeKind::WrError`] while both endpoint NICs keep serving
+    /// every other path.
+    cut: HashSet<(NicAddr, NicAddr)>,
+    /// WRs whose delivery was dropped by a dead NIC or a partitioned
+    /// link, keyed by (sender NIC, wr id); the sender-side ack event
+    /// converts these to `WrError` completions instead of acks.
     failed: HashSet<(NicAddr, u64)>,
-    /// Link-state hooks: called (deferred) with the new `up` state
-    /// whenever a NIC flips. The engine layer registers one per NIC to
-    /// keep its `NicHealth` table in sync with fabric truth.
+    /// Whole-NIC link-state hooks: called (deferred) with the new `up`
+    /// state whenever a NIC flips. The engine layer registers one per
+    /// NIC to keep its `NicHealth` table in sync with fabric truth.
     health_hooks: HashMap<NicAddr, Rc<dyn Fn(&mut Sim, bool)>>,
+    /// Per-link hooks, keyed by the SRC NIC of the directed path:
+    /// called (deferred) with `(dst, up)` whenever a link from that
+    /// NIC flips. Engines deliberately do NOT register these — a path
+    /// failure is not locally observable at a real sender port, so the
+    /// engine layer learns from `WrError` attribution + gossip instead
+    /// — but scenarios and tests may observe fabric truth here.
+    link_hooks: HashMap<NicAddr, Rc<dyn Fn(&mut Sim, NicAddr, bool)>>,
 }
 
 /// The simulated fabric. Clone freely; all clones share state.
@@ -152,8 +164,10 @@ impl SimNet {
                 cq_hooks: HashMap::new(),
                 chaos: None,
                 down: HashSet::new(),
+                cut: HashSet::new(),
                 failed: HashSet::new(),
                 health_hooks: HashMap::new(),
+                link_hooks: HashMap::new(),
             })),
         }
     }
@@ -220,7 +234,8 @@ impl SimNet {
 
     /// Install a transport-perturbation profile (see [`super::chaos`]):
     /// extra per-chunk jitter + bounded commit reordering take effect
-    /// immediately; the profile's NIC events are scheduled on the sim.
+    /// immediately; the profile's NIC and per-link events are
+    /// scheduled on the sim.
     /// Chaos draws from the profile's own seeded RNG, so installing a
     /// quiet profile perturbs nothing. Every registered health hook is
     /// (re)notified with its NIC's current state, which arms the
@@ -248,6 +263,11 @@ impl SimNet {
             let ev = *ev;
             sim.at(ev.at, move |sim| this.set_nic_up(sim, ev.nic, ev.up));
         }
+        for ev in &profile.link_events {
+            let this = self.clone();
+            let ev = *ev;
+            sim.at(ev.at, move |sim| this.set_link_up(sim, ev.src, ev.dst, ev.up));
+        }
     }
 
     /// Flip `addr`'s link state. Down NICs fail posts and deliveries
@@ -271,6 +291,42 @@ impl SimNet {
     /// Current link state of `addr`.
     pub fn nic_up(&self, addr: NicAddr) -> bool {
         !self.state.borrow().down.contains(&addr)
+    }
+
+    /// Partition (`up = false`) or heal the directed link `src → dst`
+    /// while both endpoint NICs stay up. Deliveries traversing a cut
+    /// link fail with [`CqeKind::WrError`] at the sender — the same
+    /// exactly-once semantics as a dead NIC (the payload provably did
+    /// not commit) — and `src`'s registered link hook (if any) is
+    /// notified (deferred) with `(dst, up)`.
+    pub fn set_link_up(&self, sim: &mut Sim, src: NicAddr, dst: NicAddr, up: bool) {
+        let hook = {
+            let mut s = self.state.borrow_mut();
+            if up {
+                s.cut.remove(&(src, dst));
+            } else {
+                s.cut.insert((src, dst));
+            }
+            s.link_hooks.get(&src).cloned()
+        };
+        if let Some(h) = hook {
+            sim.defer(move |s| h(s, dst, up));
+        }
+    }
+
+    /// Current state of the directed link `src → dst` (false while
+    /// partitioned).
+    pub fn link_up(&self, src: NicAddr, dst: NicAddr) -> bool {
+        !self.state.borrow().cut.contains(&(src, dst))
+    }
+
+    /// Register a per-link hook for paths originating at `src`: called
+    /// (deferred) with `(dst, up)` on every [`SimNet::set_link_up`]
+    /// flip. Observability for scenarios/tests; the engines learn about
+    /// partitions from `WrError` attribution + gossip instead (path
+    /// failures are not locally observable at a real sender port).
+    pub fn set_link_hook(&self, src: NicAddr, hook: Rc<dyn Fn(&mut Sim, NicAddr, bool)>) {
+        self.state.borrow_mut().link_hooks.insert(src, hook);
     }
 
     /// Invoke `addr`'s completion hook, if any, as a deferred event.
@@ -562,14 +618,15 @@ impl SimNet {
 
     /// Delivery event at `commit` time: DMA the payload, then expose
     /// the completion — in that order (PCIe invariant). If either end
-    /// died while the message was in flight, nothing commits and the
-    /// sender's ack event is converted to a [`CqeKind::WrError`] —
-    /// exactly-once is preserved: a WR either delivers fully or fails
-    /// with a completion that guarantees it did not.
+    /// died — or the directed `src → dst` link was partitioned — while
+    /// the message was in flight, nothing commits and the sender's ack
+    /// event is converted to a [`CqeKind::WrError`] — exactly-once is
+    /// preserved: a WR either delivers fully or fails with a
+    /// completion that guarantees it did not.
     fn deliver(&self, sim: &mut Sim, src: NicAddr, dst: NicAddr, wr_id: u64, op: WrOp) {
         {
         let mut s = self.state.borrow_mut();
-        if s.down.contains(&src) || s.down.contains(&dst) {
+        if s.down.contains(&src) || s.down.contains(&dst) || s.cut.contains(&(src, dst)) {
             s.failed.insert((src, wr_id));
             return;
         }
@@ -1055,6 +1112,50 @@ mod tests {
         b1.sort_unstable();
         b2.sort_unstable();
         assert_eq!(b1, b2, "reliable: every imm delivered exactly once");
+    }
+
+    #[test]
+    fn chaos_link_partition_fails_only_that_directed_link() {
+        // Cut a → b. a → c and c → b (and b → a, were it used) must
+        // keep delivering: the partition is per directed path, not
+        // per NIC.
+        let net = SimNet::new(21);
+        let a = NicAddr { node: 0, gpu: 0, nic: 0 };
+        let b = NicAddr { node: 1, gpu: 0, nic: 0 };
+        let c = NicAddr { node: 2, gpu: 0, nic: 0 };
+        for n in [a, b, c] {
+            net.add_nic(n, NicProfile::connectx7());
+        }
+        let mut sim = Sim::new();
+        let mem = net.mem();
+        let (sbuf, _) = mem.alloc(64);
+        sbuf.write(0, &[6u8; 64]);
+        let (dbuf_b, rkey_b) = mem.alloc(64);
+        let (dbuf_c, rkey_c) = mem.alloc(64);
+        let flips: Rc<RefCell<Vec<(NicAddr, bool)>>> = Rc::default();
+        let fl = flips.clone();
+        net.set_link_hook(a, Rc::new(move |_s, dst, up| fl.borrow_mut().push((dst, up))));
+        net.set_link_up(&mut sim, a, b, false);
+        assert!(!net.link_up(a, b));
+        assert!(net.link_up(b, a), "the reverse direction is a separate link");
+        assert!(net.nic_up(a) && net.nic_up(b), "both endpoints stay up");
+
+        net.post(&mut sim, a, write_wr(1, b, DmaSlice::new(&sbuf, 0, 64), rkey_b, dbuf_b.base(), Some(1)));
+        net.post(&mut sim, a, write_wr(2, c, DmaSlice::new(&sbuf, 0, 64), rkey_c, dbuf_c.base(), Some(2)));
+        sim.run();
+        let mut acq = Vec::new();
+        net.poll_cq(a, 8, &mut acq);
+        let kinds: Vec<CqeKind> = acq.iter().map(|q| q.kind).collect();
+        assert!(kinds.contains(&CqeKind::WrError), "the cut path errors: {kinds:?}");
+        assert!(kinds.contains(&CqeKind::WriteDone), "the other path delivers: {kinds:?}");
+        assert_eq!(dbuf_b.to_vec(), vec![0u8; 64], "nothing commits across a cut link");
+        assert_eq!(dbuf_c.to_vec(), vec![6u8; 64]);
+        // Heal and retry: the same route delivers again.
+        net.set_link_up(&mut sim, a, b, true);
+        net.post(&mut sim, a, write_wr(3, b, DmaSlice::new(&sbuf, 0, 64), rkey_b, dbuf_b.base(), Some(1)));
+        sim.run();
+        assert_eq!(dbuf_b.to_vec(), vec![6u8; 64], "delivery resumes after link_up");
+        assert_eq!(*flips.borrow(), vec![(b, false), (b, true)], "link hook carries (dst, up)");
     }
 
     #[test]

@@ -249,6 +249,142 @@ fn chaos_all_nics_down_rejects_submissions_synchronously() {
     cluster.shutdown();
 }
 
+/// Per-link partitions are link-grained, not NIC-grained: cutting one
+/// directed link fails only traffic crossing it, the sender's local
+/// NIC mask stays full, and `WrError` attribution masks exactly that
+/// link out of later routing.
+#[test]
+fn chaos_link_partition_masks_only_the_cut_link() {
+    let mut cluster = Cluster::new(RuntimeKind::Des, 2, 1, 2, 0x11F);
+    {
+        let (mut cx, engines) = cluster.parts();
+        let (a, b) = (engines[0], engines[1]);
+        let a0 = NicAddr { node: 0, gpu: 0, nic: 0 };
+        let b0 = NicAddr { node: 1, gpu: 0, nic: 0 };
+        let b1 = NicAddr { node: 1, gpu: 0, nic: 1 };
+        // Cut a.nic0 → b.nic0 at 50 µs, mid-flight for the 8 MiB
+        // sharded write below (per-NIC serialization alone is ~170 µs
+        // on EFA).
+        a.inject_chaos(&mut cx, &ChaosProfile::new(0x11E).link_down(50_000, (a0, b0)));
+        let len = 8 << 20;
+        let (src, _) = a.alloc_mr(0, len);
+        let (dst_h, dst_d) = b.alloc_mr(0, len);
+        let pat: Vec<u8> = (0..len).map(|i| (i * 7 % 251) as u8).collect();
+        src.buf.write(0, &pat);
+        let done = new_flag();
+        a.submit_single_write(&mut cx, (&src, 0), len as u64, (&dst_d, 0), None, Notify::Flag(done.clone()))
+            .unwrap();
+        cx.wait(&done);
+        cx.settle();
+        assert_eq!(dst_h.buf.to_vec(), pat, "the partition must lose nothing");
+        assert!(a.transport_errors() >= 1, "the cut link's shard was observed");
+        assert_eq!(a.nic_health_mask(0), 0b11, "no LOCAL NIC died");
+        assert_eq!(
+            a.link_health_mask(0, b0),
+            0b10,
+            "lane 0 masked toward b.nic0 only"
+        );
+        assert_eq!(a.link_health_mask(0, b1), 0b11, "other destinations keep every lane");
+        // New submissions route around the cut link without errors.
+        let before = a.transport_errors();
+        let done2 = new_flag();
+        a.submit_single_write(&mut cx, (&src, 0), len as u64, (&dst_d, 0), None, Notify::Flag(done2.clone()))
+            .unwrap();
+        cx.wait(&done2);
+        cx.settle();
+        assert_eq!(a.transport_errors(), before, "masked routing pays no further errors");
+    }
+    cluster.shutdown();
+}
+
+/// Gossip convergence (the acceptance gate): sender A pays the
+/// `WrError` round-trips for a partitioned destination NIC, concludes
+/// it dead, and gossips the observation; sender B in the same gossip
+/// group then completes its own submit to that peer over surviving
+/// links with ZERO transport errors and zero lost payload —
+/// deterministically on same-seed DES runs.
+#[test]
+fn chaos_gossip_second_sender_completes_clean() {
+    let run = || {
+        let mut cluster = Cluster::new(RuntimeKind::Des, 3, 1, 2, 0x6055);
+        let out = {
+            let (mut cx, engines) = cluster.parts();
+            let (a, b, d) = (engines[0], engines[1], engines[2]);
+            let d0 = NicAddr { node: 2, gpu: 0, nic: 0 };
+            a.set_gossip_peers(0, vec![b.group_address(0)]);
+            // B's ordinary control-plane recv pool (what heartbeats
+            // ride on): gossip arrives here but must be consumed by
+            // the ENGINE, never surfacing in the app callback.
+            let app_msgs = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+            let am = app_msgs.clone();
+            b.submit_recvs(
+                &mut cx,
+                0,
+                64,
+                4,
+                fabric_lib::engine::traits::OnRecv::handler(move |_m| {
+                    am.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }),
+            );
+            // Partition every ingress link of d's NIC 0 at 50 µs —
+            // the remote NIC is effectively dead, but no whole-NIC
+            // event fires, so no engine hears about it from the
+            // fabric.
+            let mut profile = ChaosProfile::new(0x605E);
+            for node in [0u16, 1] {
+                for nic in 0..2u8 {
+                    profile = profile.link_down(50_000, (NicAddr { node, gpu: 0, nic }, d0));
+                }
+            }
+            a.inject_chaos(&mut cx, &profile);
+
+            let len = 8 << 20;
+            let pat: Vec<u8> = (0..len).map(|i| (i * 3 % 251) as u8).collect();
+            // Sender A: mid-flight shard on a cut link → WrError walk
+            // → remote concluded dead → retarget onto d.nic1 →
+            // delivered; gossip goes out to B.
+            let (src_a, _) = a.alloc_mr(0, len);
+            let (dst_ah, dst_ad) = d.alloc_mr(0, len);
+            src_a.buf.write(0, &pat);
+            let done_a = new_flag();
+            a.submit_single_write(&mut cx, (&src_a, 0), len as u64, (&dst_ad, 0), None, Notify::Flag(done_a.clone()))
+                .unwrap();
+            cx.wait(&done_a);
+            cx.settle(); // gossip SEND → B's recv pool → B's table
+            assert!(a.transport_errors() >= 2, "A paid the error round-trips");
+            assert_eq!(
+                b.link_health_mask(0, d0),
+                0,
+                "gossip masked the dead remote NIC at B before B ever touched it"
+            );
+            // Sender B: a fresh submit to the same peer completes over
+            // surviving links with no errors at all.
+            let (src_b, _) = b.alloc_mr(0, len);
+            let (dst_bh, dst_bd) = d.alloc_mr(0, len);
+            src_b.buf.write(0, &pat);
+            let done_b = new_flag();
+            b.submit_single_write(&mut cx, (&src_b, 0), len as u64, (&dst_bd, 0), None, Notify::Flag(done_b.clone()))
+                .unwrap();
+            cx.wait(&done_b);
+            cx.settle();
+            assert_eq!(b.transport_errors(), 0, "B never increments transport_errors");
+            assert_eq!(dst_bh.buf.to_vec(), pat, "zero lost payload for B");
+            assert_eq!(dst_ah.buf.to_vec(), pat, "zero lost payload for A");
+            assert_eq!(
+                app_msgs.load(std::sync::atomic::Ordering::Relaxed),
+                0,
+                "gossip is engine-consumed, never delivered to the app"
+            );
+            (a.transport_errors(), b.transport_errors(), cx.now())
+        };
+        cluster.shutdown();
+        out
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, second, "same-seed gossip runs must agree exactly");
+}
+
 /// The full KvCache push protocol (paged WRITEIMMs + tail + one
 /// count-based expectation, §4/Appendix A) passes its own integrity
 /// asserts under reordering chaos on both runtimes.
