@@ -1,18 +1,32 @@
 //! Paper Table 3: KvCache transfer impact on TTFT
 //! (Qwen3-235B-shaped workload, H200, 2×200 Gbps EFA).
 //!
-//! Usage: cargo bench --bench kvcache_ttft [-- --fast]
+//! Usage: cargo bench --bench kvcache_ttft [-- --quick] [--json PATH]
+//!
+//! `--quick` (alias `--fast`) shrinks the seqlen sweep for CI smoke
+//! runs; `--json PATH` merges the 4K-row headline into the report at
+//! PATH under the `kvcache_ttft` section (see BENCH_p2p.json).
+
+use std::collections::BTreeMap;
 
 use fabric_lib::apps::kvcache::run_table3_row;
+use fabric_lib::util::json::{update_report, Json};
 use fabric_lib::util::table::{f, Table};
 
 fn main() {
-    let fast = std::env::args().any(|a| a == "--fast");
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast" || a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let seqs: &[u32] = if fast {
         &[4096, 8192, 16384]
     } else {
         &[4096, 8192, 16384, 32768, 65536, 131072]
     };
+    let mut headlines: BTreeMap<String, Json> = BTreeMap::new();
     let mut t = Table::new(
         "Table 3. KvCache transfer impact on TTFT (Qwen3-235B-shaped, 2x200G EFA)",
         &[
@@ -27,6 +41,10 @@ fn main() {
     );
     for &seq in seqs {
         let r = run_table3_row(seq);
+        if seq == 4096 {
+            headlines.insert("ttft_non_4k_ms".to_string(), Json::Num(r.ttft_non_ms));
+            headlines.insert("ttft_disagg_4k_ms".to_string(), Json::Num(r.ttft_disagg_ms));
+        }
         t.row(&[
             format!("{}K", seq / 1024),
             f(r.ttft_non_ms, 0),
@@ -43,4 +61,13 @@ fn main() {
          128K: 16735/17056 ms, 34.895 / 1.609 ms. Claim preserved: transfer \
          hidden by compute; TTFT overhead ≈ one extra decode pass.\n"
     );
+
+    if let Some(path) = json_path {
+        headlines.insert(
+            "provenance".to_string(),
+            Json::from("measured by kvcache_ttft (DES, deterministic)"),
+        );
+        update_report(&path, "kvcache_ttft", Json::Obj(headlines)).expect("write bench report");
+        println!("wrote kvcache_ttft section to {path}");
+    }
 }

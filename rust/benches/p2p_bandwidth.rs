@@ -6,9 +6,14 @@
 //! (ib_write_bw / fi_rma_bw stand-in). Prints the fraction-of-peak
 //! series (Fig 8) and the absolute table (Table 2).
 //!
-//! Usage: cargo bench --bench p2p_bandwidth [-- --fast]
+//! Usage: cargo bench --bench p2p_bandwidth [-- --quick] [--json PATH]
+//!
+//! `--quick` (alias `--fast`) shrinks rep counts for CI smoke runs;
+//! `--json PATH` merges the headline numbers into the report at PATH
+//! under the `p2p_bandwidth` section (see BENCH_p2p.json).
 
 use std::cell::Cell;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use fabric_lib::engine::api::{EngineCosts, Pages};
@@ -19,6 +24,7 @@ use fabric_lib::fabric::profile::{GpuProfile, NicProfile};
 use fabric_lib::fabric::simnet::SimNet;
 use fabric_lib::sim::time::gbps;
 use fabric_lib::sim::Sim;
+use fabric_lib::util::json::{update_report, Json};
 use fabric_lib::util::table::{f, Table};
 
 struct Bed {
@@ -101,8 +107,18 @@ fn paged_write_rate(bed: &mut Bed, page: u64, pages: u32) -> (f64, f64) {
 }
 
 fn main() {
-    let fast = std::env::args().any(|a| a == "--fast");
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast" || a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let reps = if fast { 4 } else { 16 };
+    // Headline numbers for the BENCH_p2p.json trajectory, captured as
+    // the tables are produced (keys must stay in sync with the
+    // committed baseline and scripts/bench_diff.py).
+    let mut headlines: BTreeMap<String, Json> = BTreeMap::new();
 
     let singles: &[u64] = &[64 << 10, 256 << 10, 1 << 20, 8 << 20, 16 << 20, 32 << 20];
     let pageds: &[u64] = &[1 << 10, 8 << 10, 16 << 10, 32 << 10, 64 << 10];
@@ -144,9 +160,15 @@ fn main() {
     );
     for &msg in &[64 << 10, 256 << 10, 1 << 20, 32 << 20] {
         let mut row = vec!["single".to_string(), fmt_size(msg)];
-        for (profile, nics) in [(NicProfile::efa(), 2u8), (NicProfile::connectx7(), 1u8)] {
+        for (profile, nics, name) in [
+            (NicProfile::efa(), 2u8, "efa"),
+            (NicProfile::connectx7(), 1u8, "cx7"),
+        ] {
             let mut b = bed(profile, nics, 0);
             let g = single_write_gbps(&mut b, msg, reps);
+            if msg == 32 << 20 {
+                headlines.insert(format!("{name}_single_32m_gbps"), Json::Num(g));
+            }
             row.push(f(g, 0));
             row.push("-".into());
         }
@@ -155,9 +177,18 @@ fn main() {
     for &page in &[1 << 10, 8 << 10, 16 << 10, 64 << 10] {
         let pages = if fast { 512 } else { 4096 };
         let mut row = vec!["paged".to_string(), fmt_size(page)];
-        for (profile, nics) in [(NicProfile::efa(), 2u8), (NicProfile::connectx7(), 1u8)] {
+        for (profile, nics, name) in [
+            (NicProfile::efa(), 2u8, "efa"),
+            (NicProfile::connectx7(), 1u8, "cx7"),
+        ] {
             let mut b = bed(profile, nics, 0);
             let (g, mops) = paged_write_rate(&mut b, page, pages);
+            if page == 64 << 10 {
+                headlines.insert(format!("{name}_paged_64k_gbps"), Json::Num(g));
+            }
+            if page == 1 << 10 {
+                headlines.insert(format!("{name}_paged_1k_mops"), Json::Num(mops));
+            }
             row.push(f(g, 0));
             row.push(f(mops, 2));
         }
@@ -198,6 +229,15 @@ fn main() {
     }
     cj.print();
     println!("\nchaos gate: jitter shifts latency, not delivered bytes — throughput should degrade gracefully, never lose pages.\n");
+
+    if let Some(path) = json_path {
+        headlines.insert(
+            "provenance".to_string(),
+            Json::from("measured by p2p_bandwidth (DES, deterministic)"),
+        );
+        update_report(&path, "p2p_bandwidth", Json::Obj(headlines)).expect("write bench report");
+        println!("wrote p2p_bandwidth section to {path}");
+    }
 }
 
 fn fmt_size(b: u64) -> String {

@@ -19,7 +19,7 @@
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
-use crate::engine::api::{NetAddr, Pages};
+use crate::engine::api::{NetAddr, TemplatedDst};
 use crate::engine::model::ComputeModel;
 use crate::engine::traits::{
     expect_flag, new_flag, Cluster, Cx, Notify, RuntimeKind, SharedFlag, TransferEngine,
@@ -152,10 +152,11 @@ pub fn run_table3_row(seq: u32) -> Table3Row {
 /// is notified by a single `expect_imm_count(imm, n_pages + 1)` — no
 /// ordering assumptions anywhere. The prefiller↔decoder pair is a
 /// long-lived peer relationship, so the transfer runs on the §3.5
-/// templated path: the decoder's KV and tail regions are bound to a
-/// peer group once, and each push patches only page indices/offsets.
-/// Asserts payload placement and that the satisfied expectation
-/// retired its counter slot.
+/// templated path — the decoder's KV and tail regions are bound to a
+/// peer group once — and the per-step page loop rides the batched
+/// fast path: all pages of a step go down in ONE
+/// `submit_batch_templated` crossing. Asserts payload placement and
+/// that the satisfied expectation retired its counter slot.
 pub fn run_generic_kv_push(
     cx: &mut Cx,
     prefiller: &dyn TransferEngine,
@@ -196,20 +197,26 @@ pub fn run_generic_kv_push(
     let dst_slots: Vec<u32> = (0..n_pages).rev().collect();
     let transferred = expect_flag(decoder, cx, 0, imm, n_pages + 1);
 
-    // Prefiller side: paged KV writes + the tail write, all carrying
-    // the request's immediate, all patched into the bound template.
+    // Prefiller side: every KV page of the step as ONE batched
+    // submission — one engine crossing, one routing pass, one rotation
+    // commit — each entry patched into the bound template and carrying
+    // the request's immediate (imm entries never shard, so the
+    // per-page WRITEIMM protocol is preserved verbatim). The tail
+    // lives in its own source region, so it rides as a separate
+    // templated write against the TAIL peer entry.
+    let page_dsts: Vec<TemplatedDst> = dst_slots
+        .iter()
+        .enumerate()
+        .map(|(i, &slot)| TemplatedDst {
+            peer: KV,
+            len: page_len,
+            src: i as u64 * page_len,
+            dst: slot as u64 * page_len,
+        })
+        .collect();
     prefiller
-        .submit_paged_writes_templated(
-            cx,
-            page_len,
-            (&kv_src, &Pages::contiguous(0, n_pages, page_len)),
-            group,
-            KV,
-            &Pages { indices: dst_slots.clone(), stride: page_len, offset: 0 },
-            Some(imm),
-            Notify::Noop,
-        )
-        .expect("templated paged push");
+        .submit_batch_templated(cx, &kv_src, group, &page_dsts, Some(imm), Notify::Noop)
+        .expect("batched templated page push");
     prefiller
         .submit_single_write_templated(cx, (&tail_src, 0), 12, group, TAIL, 0, Some(imm), Notify::Noop)
         .expect("templated tail write");
@@ -229,11 +236,15 @@ pub fn run_generic_kv_push(
     // The satisfied expectation retired the counter slot (free_imm
     // semantics): a fresh request may reuse the immediate.
     assert_eq!(decoder.imm_value(0, imm), 0);
-    // Session teardown frees the group; the stale handle then fails
-    // loudly instead of reusing freed template state.
+    // Session teardown frees the group; stale handles then fail
+    // loudly instead of reusing freed template state — on the single
+    // path and the batch path alike.
     assert!(prefiller.remove_peer_group(group));
     assert!(prefiller
         .submit_single_write_templated(cx, (&tail_src, 0), 1, group, TAIL, 0, None, Notify::Noop)
+        .is_err());
+    assert!(prefiller
+        .submit_batch_templated(cx, &kv_src, group, &page_dsts[..1], None, Notify::Noop)
         .is_err());
 }
 

@@ -252,8 +252,9 @@ fn run_epoch_inner(
 /// `expect_imm_count` per round, and a handle-based engine barrier
 /// confirms buffer reuse — scatter + barrier + imm counting end to
 /// end on whichever runtime backs `cx`. The all-to-all runs on the
-/// §3.5 templated path: each rank binds its peers' receive regions
-/// once and per-round submissions patch offsets/lengths only. Peer
+/// §3.5 templated path *batched*: each rank binds its peers' receive
+/// regions once, and each round's whole fanout goes down in one
+/// `submit_batch_templated` crossing patching offsets/lengths only. Peer
 /// groups are request-scoped and freed on exit (`remove_peer_group`),
 /// which also invalidates the templates, so repeated rounds on a
 /// long-lived engine don't leak registry entries.
@@ -285,7 +286,9 @@ pub fn run_generic_dispatch_round(
 
     // Dispatch: each rank scatters its token block into its own slot
     // of every peer's region, through a peer group bound (templated)
-    // once per round — per-destination submissions are four integers.
+    // once per round. The fanout rides the batched fast path — one
+    // engine crossing and one routing pass for all n-1 destinations,
+    // each of which is four integers against the bound template.
     let mut groups = Vec::with_capacity(n);
     for (me, e) in engines.iter().enumerate() {
         let peers = engines
@@ -314,8 +317,8 @@ pub fn run_generic_dispatch_round(
                 dst: me as u64 * slot,
             })
             .collect();
-        e.submit_scatter_templated(cx, &src, group, &dsts, Some(IMM_TOKEN), Notify::Noop)
-            .expect("templated dispatch scatter");
+        e.submit_batch_templated(cx, &src, group, &dsts, Some(IMM_TOKEN), Notify::Noop)
+            .expect("batched dispatch scatter");
     }
     cx.wait_all(&token_flags);
 

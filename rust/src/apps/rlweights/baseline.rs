@@ -11,6 +11,7 @@ use std::cell::Cell;
 use std::rc::Rc;
 
 use crate::collectives::CollectiveWorld;
+use crate::engine::api::TemplatedDst;
 use crate::engine::des_engine::Engine;
 use crate::engine::traits::{expect_flag, Cluster, Cx, Notify, RuntimeKind, TransferEngine};
 use crate::fabric::profile::{GpuProfile, NicProfile};
@@ -89,8 +90,9 @@ pub fn run_rank0_broadcast(spec: &RlModelSpec, nic: NicProfile, world_scale: u32
 /// — runs on whichever runtime backs `cx`, unlike the timing-bound
 /// [`run_rank0_broadcast`] which needs the DES collectives model.
 /// The fan-out set is a long-lived peer group, so the writes run on
-/// the §3.5 templated path (peer regions bound once, per-write calls
-/// patch offsets only).
+/// the §3.5 templated path (peer regions bound once) — and the whole
+/// fan-out is ONE batched submission: a single engine crossing routes
+/// all peers in one pass.
 pub fn run_generic_rank0_fanout(cx: &mut Cx, engines: &[&dyn TransferEngine], bytes: u64) {
     assert!(engines.len() >= 2);
     const IMM_WEIGHTS: u32 = 0x510;
@@ -111,20 +113,12 @@ pub fn run_generic_rank0_fanout(cx: &mut Cx, engines: &[&dyn TransferEngine], by
     rank0
         .bind_peer_group_mrs(0, group, &descs)
         .expect("weight region bind");
-    for peer in 0..regions.len() {
-        rank0
-            .submit_single_write_templated(
-                cx,
-                (&src, 0),
-                bytes,
-                group,
-                peer,
-                0,
-                Some(IMM_WEIGHTS),
-                Notify::Noop,
-            )
-            .expect("templated weight write");
-    }
+    let dsts: Vec<TemplatedDst> = (0..regions.len())
+        .map(|peer| TemplatedDst { peer, len: bytes, src: 0, dst: 0 })
+        .collect();
+    rank0
+        .submit_batch_templated(cx, &src, group, &dsts, Some(IMM_WEIGHTS), Notify::Noop)
+        .expect("batched weight fan-out");
     cx.wait_all(&flags);
     for (i, (h, _)) in regions.iter().enumerate() {
         assert_eq!(h.buf.to_vec(), fill, "peer {i} weight payload corrupted");

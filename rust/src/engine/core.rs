@@ -49,12 +49,13 @@ use std::sync::{Arc, Mutex};
 
 use super::api::{MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst};
 use super::imm_counter::{ImmCounter, ImmEvent};
-use super::sharding::{plan_paged_writes, plan_scatter, plan_single_write, PlannedWrite};
+use super::sharding::{plan_paged_writes, plan_scatter, plan_single_write, PlanVec, PlannedWrite};
 use crate::bail;
 use crate::fabric::mem::DmaBuf;
 use crate::fabric::nic::NicAddr;
 use crate::util::err::{Error, Result};
 use crate::util::fasthash::FastMap;
+use crate::util::smallvec::SmallVec;
 
 /// The full `(remote NIC, rkey)` route set of one destination region,
 /// indexed by local lane (the §3.2 NIC-`i`↔NIC-`i` pairing). Shared by
@@ -76,6 +77,12 @@ pub struct RoutedWrite {
     /// All routes of the destination region, one per remote NIC.
     pub alts: RouteSet,
 }
+
+/// Routed-write storage for one submission: inline up to the common
+/// 2–4 lane fanout (a small write, a sharded single write, a narrow
+/// scatter) so the routing bridge allocates nothing on the hot path;
+/// wide scatters and big batches spill to the heap.
+pub type RoutedVec = SmallVec<RoutedWrite, 4>;
 
 // ---------------------------------------------------------------------
 // Peer groups
@@ -326,14 +333,23 @@ pub struct NicHealth {
     /// Fast-path flag: true while any per-link/remote observation is
     /// recorded (checked before taking `observed`'s lock).
     dirty: AtomicBool,
+    /// Probation TTL for believed-dead remotes, in engine-clock ns:
+    /// once a death mark is older than this, a degraded submission
+    /// path drops it and optimistically re-probes the remote
+    /// ([`NicHealth::expire_dead_remotes`]). Zero (the default)
+    /// disables TTL re-probe — beliefs then heal only via explicit
+    /// `report_remote_health(up)` or the unreachable-region clear.
+    remote_ttl: AtomicU64,
     observed: Mutex<Observations>,
 }
 
 /// Sender-side per-peer health beliefs (see [`NicHealth`]).
 #[derive(Default)]
 struct Observations {
-    /// Remote NICs believed dead.
-    remotes: HashSet<NicAddr>,
+    /// Remote NICs believed dead, each with the engine-clock time (ns)
+    /// of the most recent death report — the probation clock the TTL
+    /// re-probe runs against.
+    remotes: HashMap<NicAddr, u64>,
     /// Directed `(local lane, remote NIC)` links believed partitioned.
     links: HashSet<(usize, NicAddr)>,
 }
@@ -352,6 +368,7 @@ impl NicHealth {
             mask: AtomicU64::new(if fanout == 64 { u64::MAX } else { (1u64 << fanout) - 1 }),
             fanout,
             dirty: AtomicBool::new(false),
+            remote_ttl: AtomicU64::new(0),
             observed: Mutex::new(Observations::default()),
         }
     }
@@ -433,15 +450,67 @@ impl NicHealth {
     /// Record a belief about a REMOTE NIC's health (own conclusion or
     /// received gossip). Marking a remote up also clears any per-link
     /// observations toward it (the path is being re-trusted wholesale).
+    /// The death mark's probation clock starts at time 0 — callers
+    /// with a real engine clock should use [`NicHealth::set_remote_at`]
+    /// so the TTL re-probe measures from the actual report time.
     pub fn set_remote(&self, remote: NicAddr, up: bool) {
+        self.set_remote_at(remote, up, 0);
+    }
+
+    /// [`NicHealth::set_remote`] with an explicit report time (engine
+    /// clock, ns). A repeated death report refreshes the mark, keeping
+    /// a remote that keeps failing in probation.
+    pub fn set_remote_at(&self, remote: NicAddr, up: bool, now_ns: u64) {
         let mut obs = self.observed.lock().unwrap();
         if up {
             obs.remotes.remove(&remote);
             obs.links.retain(|&(_, r)| r != remote);
         } else {
-            obs.remotes.insert(remote);
+            obs.remotes.insert(remote, now_ns);
         }
         self.dirty.store(!obs.is_empty(), Ordering::Release);
+    }
+
+    /// Set the probation TTL (ns) for believed-dead remotes; zero
+    /// disables TTL re-probe (the default).
+    pub fn set_remote_probe_ttl(&self, ttl_ns: u64) {
+        self.remote_ttl.store(ttl_ns, Ordering::Relaxed);
+    }
+
+    /// The configured probation TTL (ns); zero = disabled.
+    pub fn remote_probe_ttl(&self) -> u64 {
+        self.remote_ttl.load(Ordering::Relaxed)
+    }
+
+    /// Drop every believed-dead-remote mark older than the configured
+    /// TTL (plus the per-link observations toward it, like an explicit
+    /// `report_remote_health(up)`): the remote leaves probation and
+    /// the next submission optimistically re-probes it — worst case it
+    /// pays the `WrError` round-trip and the death is re-reported with
+    /// a fresh mark. Engines call this from degraded submission paths;
+    /// it is a no-op when the TTL is zero or nothing is observed.
+    /// Returns true when at least one remote left probation.
+    pub fn expire_dead_remotes(&self, now_ns: u64) -> bool {
+        let ttl = self.remote_ttl.load(Ordering::Relaxed);
+        if ttl == 0 || !self.dirty.load(Ordering::Acquire) {
+            return false;
+        }
+        let mut obs = self.observed.lock().unwrap();
+        let expired: Vec<NicAddr> = obs
+            .remotes
+            .iter()
+            .filter(|&(_, &at)| now_ns.saturating_sub(at) >= ttl)
+            .map(|(&r, _)| r)
+            .collect();
+        if expired.is_empty() {
+            return false;
+        }
+        for r in &expired {
+            obs.remotes.remove(r);
+            obs.links.retain(|&(_, l)| l != *r);
+        }
+        self.dirty.store(!obs.is_empty(), Ordering::Release);
+        true
     }
 
     /// True unless `remote` is currently believed dead.
@@ -449,7 +518,7 @@ impl NicHealth {
         if !self.dirty.load(Ordering::Acquire) {
             return true;
         }
-        !self.observed.lock().unwrap().remotes.contains(&remote)
+        !self.observed.lock().unwrap().remotes.contains_key(&remote)
     }
 
     /// The effective lane mask toward `remote`: local NICs that are up
@@ -461,7 +530,7 @@ impl NicHealth {
             return local;
         }
         let obs = self.observed.lock().unwrap();
-        if obs.remotes.contains(&remote) {
+        if obs.remotes.contains_key(&remote) {
             return 0;
         }
         let mut m = local;
@@ -690,6 +759,17 @@ impl Rotation {
     /// a load-balancing hint, so that race is benign.
     pub fn next(&self) -> usize {
         self.0.load(Ordering::Relaxed).wrapping_add(1)
+    }
+
+    /// Advance the cursor by `n` in one atomic step — the batch
+    /// commit. A routed batch of `n` entries occupies rotations
+    /// `next() .. next() + n`; committing them with one `bump_n`
+    /// leaves the cursor exactly where `n` single bumps would have, so
+    /// batched and looped submissions interleave without shifting the
+    /// NIC assignment of later transfers. Returns the new cursor
+    /// value.
+    pub fn bump_n(&self, n: usize) -> usize {
+        self.0.fetch_add(n, Ordering::Relaxed).wrapping_add(n)
     }
 
     /// Mask-aware [`Rotation::next`]: the peeked cursor projected onto
@@ -931,7 +1011,7 @@ pub fn route_single_write(
     len: u64,
     dst: (&MrDesc, u64),
     imm: Option<u32>,
-) -> Result<Vec<RoutedWrite>> {
+) -> Result<RoutedVec> {
     let (desc, dst_off) = dst;
     let fanout = checked_fanout(local_fanout, desc)?;
     let plans = plan_single_write(len, src_off, desc.ptr + dst_off, imm, fanout, rotation);
@@ -948,7 +1028,7 @@ pub fn route_paged_writes(
     src_pages: &Pages,
     dst: (&MrDesc, &Pages),
     imm: Option<u32>,
-) -> Result<Vec<RoutedWrite>> {
+) -> Result<RoutedVec> {
     let (desc, dst_pages) = dst;
     let fanout = checked_fanout(local_fanout, desc)?;
     let src_offs: Vec<u64> = (0..src_pages.len()).map(|i| src_pages.at(i)).collect();
@@ -967,7 +1047,7 @@ pub fn route_scatter(
     rotation: usize,
     dsts: &[ScatterDst],
     imm: Option<u32>,
-) -> Result<Vec<RoutedWrite>> {
+) -> Result<RoutedVec> {
     let entries: Vec<(u64, u64, u64)> = dsts
         .iter()
         .map(|d| (d.len, d.src, d.dst.0.ptr + d.dst.1))
@@ -995,7 +1075,7 @@ pub fn route_barrier(
     rotation: usize,
     dsts: &[MrDesc],
     imm: u32,
-) -> Result<Vec<RoutedWrite>> {
+) -> Result<RoutedVec> {
     let entries: Vec<(u64, u64, u64)> = dsts.iter().map(|d| (0u64, 0u64, d.ptr)).collect();
     let plans = plan_scatter(&entries, Some(imm), local_fanout.max(1), rotation);
     plans
@@ -1013,7 +1093,7 @@ pub fn route_barrier(
         .collect()
 }
 
-fn pair_with_rkeys(plans: Vec<PlannedWrite>, desc: &MrDesc) -> Vec<RoutedWrite> {
+fn pair_with_rkeys(plans: PlanVec, desc: &MrDesc) -> RoutedVec {
     let alts: RouteSet = Arc::new(desc.rkeys.clone());
     plans
         .into_iter()
@@ -1064,7 +1144,7 @@ pub fn route_single_write_templated(
     len: u64,
     dst_off: u64,
     imm: Option<u32>,
-) -> Result<Vec<RoutedWrite>> {
+) -> Result<RoutedVec> {
     let slot = peer_slot(t, peer, dst_off, len)?;
     let plans = plan_single_write(len, src_off, slot.base + dst_off, imm, t.fanout, rotation);
     Ok(plans
@@ -1091,7 +1171,7 @@ pub fn route_paged_writes_templated(
     src_pages: &Pages,
     dst_pages: &Pages,
     imm: Option<u32>,
-) -> Result<Vec<RoutedWrite>> {
+) -> Result<RoutedVec> {
     let max_off = (0..dst_pages.len()).map(|i| dst_pages.at(i)).max();
     let slot = peer_slot(t, peer, max_off.unwrap_or(0), page_len)?;
     let src_offs: Vec<u64> = (0..src_pages.len()).map(|i| src_pages.at(i)).collect();
@@ -1121,7 +1201,7 @@ pub fn route_scatter_templated(
     rotation: usize,
     dsts: &[TemplatedDst],
     imm: Option<u32>,
-) -> Result<Vec<RoutedWrite>> {
+) -> Result<RoutedVec> {
     dsts.iter()
         .enumerate()
         .map(|(i, d)| {
@@ -1145,7 +1225,7 @@ pub fn route_scatter_templated(
 /// Templated barrier: one zero-length immediate-only write per peer of
 /// the group — destinations, routes and the scratch source all come
 /// from the template; the call patches in nothing but the immediate.
-pub fn route_barrier_templated(t: &GroupTemplate, rotation: usize, imm: u32) -> Vec<RoutedWrite> {
+pub fn route_barrier_templated(t: &GroupTemplate, rotation: usize, imm: u32) -> RoutedVec {
     t.peers
         .iter()
         .enumerate()
@@ -1164,6 +1244,82 @@ pub fn route_barrier_templated(t: &GroupTemplate, rotation: usize, imm: u32) -> 
             }
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------
+// Batched write family (one engine crossing per N writes)
+// ---------------------------------------------------------------------
+
+/// Route a templated batch (`submit_batch_templated`): entry `i` is
+/// routed exactly like a single templated write at rotation
+/// `rotation + i` — it shards across NICs when large and imm-less,
+/// stays whole otherwise — so a batch of N entries is WR-for-WR
+/// identical to N sequential `submit_single_write_templated` calls
+/// while crossing the engine once. Every entry carries `imm_base`
+/// (one receiver-side increment per entry, the counting contract the
+/// apps' `expect_imm_count(imm, N)` gates rely on).
+///
+/// All-or-nothing: any bounds violation rejects the whole batch here,
+/// before a single WR is built or registered; callers commit the
+/// rotation cursor with one [`Rotation::bump_n`] only after the whole
+/// submission succeeded, so a rejected batch never shifts the NIC
+/// assignment of later transfers.
+pub fn route_batch_templated(
+    t: &GroupTemplate,
+    rotation: usize,
+    dsts: &[TemplatedDst],
+    imm_base: Option<u32>,
+) -> Result<RoutedVec> {
+    let mut routed = RoutedVec::new();
+    for (i, d) in dsts.iter().enumerate() {
+        let slot = peer_slot(t, d.peer, d.dst, d.len)?;
+        let plans =
+            plan_single_write(d.len, d.src, slot.base + d.dst, imm_base, t.fanout, rotation + i);
+        for p in plans {
+            let route = slot.routes[p.nic];
+            routed.push(RoutedWrite {
+                plan: p,
+                route,
+                alts: slot.routes.clone(),
+            });
+        }
+    }
+    Ok(routed)
+}
+
+/// Route an untemplated batch (`submit_write_batch`): entry `i` is
+/// routed exactly like `submit_single_write` at rotation
+/// `rotation + i`, fanout-checked per destination descriptor
+/// (destinations may live on different peers). Same all-or-nothing
+/// and cursor contract as [`route_batch_templated`].
+pub fn route_write_batch(
+    local_fanout: usize,
+    rotation: usize,
+    dsts: &[ScatterDst],
+    imm_base: Option<u32>,
+) -> Result<RoutedVec> {
+    let mut routed = RoutedVec::new();
+    for (i, d) in dsts.iter().enumerate() {
+        let fanout = checked_fanout(local_fanout, &d.dst.0)?;
+        let plans = plan_single_write(
+            d.len,
+            d.src,
+            d.dst.0.ptr + d.dst.1,
+            imm_base,
+            fanout,
+            rotation + i,
+        );
+        let alts: RouteSet = Arc::new(d.dst.0.rkeys.clone());
+        for p in plans {
+            let route = d.dst.0.rkey_for(p.nic);
+            routed.push(RoutedWrite {
+                plan: p,
+                route,
+                alts: alts.clone(),
+            });
+        }
+    }
+    Ok(routed)
 }
 
 #[cfg(test)]
@@ -1663,5 +1819,151 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("overruns"), "{err}");
+    }
+
+    // ---- batched write family -------------------------------------
+
+    #[test]
+    fn rotation_bump_n_equals_n_single_bumps() {
+        let batched = Rotation::new();
+        let looped = Rotation::new();
+        assert_eq!(batched.bump_n(3), 3, "returns the new cursor value");
+        for _ in 0..3 {
+            looped.bump();
+        }
+        assert_eq!(batched.next(), looped.next(), "cursor parity after 3");
+        batched.bump_n(0);
+        assert_eq!(batched.next(), looped.next(), "bump_n(0) is a no-op");
+    }
+
+    /// Acceptance gate for the batch fast path: for every starting
+    /// rotation, a templated batch of N entries must emit the exact WR
+    /// stream of N sequential single templated writes — including a
+    /// large imm-less entry that shards — and an untemplated batch
+    /// must match N `route_single_write` calls the same way.
+    #[test]
+    fn batch_routes_match_n_single_writes() {
+        let descs: Vec<MrDesc> = (1..5).map(|n| desc(n, 2)).collect();
+        let (_pg, _h, t) = bound_group(2, &descs);
+        let tdsts: Vec<TemplatedDst> = (0..4)
+            .map(|i| TemplatedDst {
+                peer: i,
+                // Entry 2 is large and imm-less in the imm=None case:
+                // it shards mid-batch.
+                len: if i == 2 { 4 * SPLIT_THRESHOLD } else { 64 + i as u64 },
+                src: i as u64 * 512,
+                dst: i as u64 * 1024,
+            })
+            .collect();
+        for rot in 0..5 {
+            for imm in [None, Some(7)] {
+                let batch = route_batch_templated(&t, rot, &tdsts, imm).unwrap();
+                let mut looped = RoutedVec::new();
+                for (i, d) in tdsts.iter().enumerate() {
+                    looped.extend(
+                        route_single_write_templated(&t, rot + i, d.peer, d.src, d.len, d.dst, imm)
+                            .unwrap(),
+                    );
+                }
+                assert_eq!(batch, looped, "templated batch diverged at rotation {rot}");
+
+                let sdsts: Vec<ScatterDst> = tdsts
+                    .iter()
+                    .map(|d| ScatterDst {
+                        len: d.len,
+                        src: d.src,
+                        dst: (descs[d.peer].clone(), d.dst),
+                    })
+                    .collect();
+                let batch = route_write_batch(2, rot, &sdsts, imm).unwrap();
+                let mut looped = RoutedVec::new();
+                for (i, d) in sdsts.iter().enumerate() {
+                    looped.extend(
+                        route_single_write(2, rot + i, d.src, d.len, (&d.dst.0, d.dst.1), imm)
+                            .unwrap(),
+                    );
+                }
+                assert_eq!(batch, looped, "untemplated batch diverged at rotation {rot}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rejection_is_all_or_nothing() {
+        let d = desc(1, 2);
+        let (_pg, _h, t) = bound_group(2, std::slice::from_ref(&d));
+        // Entry 1 overruns the bound region: the whole batch errors —
+        // nothing routed, and (per the caller contract) the cursor is
+        // only bumped on success, so later NIC assignment is unshifted.
+        let dsts = [
+            TemplatedDst { peer: 0, len: 64, src: 0, dst: 0 },
+            TemplatedDst { peer: 0, len: 128, src: 64, dst: d.len - 8 },
+        ];
+        let err = route_batch_templated(&t, 0, &dsts, None).unwrap_err();
+        assert!(err.to_string().contains("overruns"), "{err}");
+        // Untemplated: a §3.2 violation on a later entry rejects all.
+        let bad = desc(2, 1);
+        let sdsts = [
+            ScatterDst { len: 64, src: 0, dst: (d.clone(), 0) },
+            ScatterDst { len: 64, src: 64, dst: (bad, 0) },
+        ];
+        let err = route_write_batch(2, 0, &sdsts, None).unwrap_err();
+        assert!(err.to_string().contains("equal-NIC-count"), "{err}");
+        // An empty batch routes to an empty set (engines short-circuit
+        // before transfer accounting).
+        assert!(route_batch_templated(&t, 0, &[], None).unwrap().is_empty());
+        assert!(route_write_batch(2, 0, &[], None).unwrap().is_empty());
+    }
+
+    #[test]
+    fn batch_imm_applies_to_every_entry_and_never_splits() {
+        let descs: Vec<MrDesc> = (1..3).map(|n| desc(n, 2)).collect();
+        let (_pg, _h, t) = bound_group(2, &descs);
+        let dsts = [
+            TemplatedDst { peer: 0, len: 4 * SPLIT_THRESHOLD, src: 0, dst: 0 },
+            TemplatedDst { peer: 1, len: 64, src: 0, dst: 0 },
+        ];
+        let routed = route_batch_templated(&t, 0, &dsts, Some(0x42)).unwrap();
+        assert_eq!(routed.len(), 2, "imm-carrying entries never shard");
+        assert!(routed.iter().all(|w| w.plan.imm == Some(0x42)));
+        // Imm-less: the large entry shards, the small one does not.
+        let routed = route_batch_templated(&t, 0, &dsts, None).unwrap();
+        assert_eq!(routed.len(), 3);
+        assert!(routed.iter().all(|w| w.plan.imm.is_none()));
+    }
+
+    // ---- believed-dead-remote probation (TTL re-probe) -------------
+
+    #[test]
+    fn chaos_dead_remote_expires_after_ttl() {
+        let h = NicHealth::new(2);
+        let r = nic(3, 0);
+        // TTL disabled (default): the belief never expires on its own.
+        h.set_remote_at(r, false, 1_000);
+        assert!(!h.expire_dead_remotes(u64::MAX));
+        assert_eq!(h.link_mask(r), 0);
+        // TTL armed: before the deadline the mark holds, at/after it
+        // the remote leaves probation — link observations toward it
+        // drop too (wholesale re-trust, like report_remote_health(up)).
+        h.set_remote_probe_ttl(5_000);
+        assert_eq!(h.remote_probe_ttl(), 5_000);
+        h.set_link(0, r, false);
+        assert!(!h.expire_dead_remotes(5_999), "TTL not yet elapsed");
+        assert_eq!(h.link_mask(r), 0);
+        assert!(h.expire_dead_remotes(6_000));
+        assert_eq!(h.link_mask(r), 0b11, "probation lifted, links cleared");
+        assert!(h.all_clear());
+        // A refreshed death report restarts the probation clock.
+        h.set_remote_at(r, false, 10_000);
+        h.set_remote_at(r, false, 20_000);
+        assert!(!h.expire_dead_remotes(16_000), "clock restarted at 20µs");
+        assert!(h.expire_dead_remotes(25_000));
+        // Beliefs about other remotes survive an expiry pass.
+        let other = nic(4, 0);
+        h.set_remote_at(r, false, 0);
+        h.set_remote_at(other, false, 30_000);
+        assert!(h.expire_dead_remotes(30_001));
+        assert_eq!(h.link_mask(r), 0b11, "expired");
+        assert_eq!(h.link_mask(other), 0, "still in probation");
     }
 }

@@ -30,10 +30,10 @@ use super::api::{
     EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
 use super::core::{
-    remap_routed, retarget, route_barrier, route_barrier_templated, route_paged_writes,
-    route_paged_writes_templated, route_scatter, route_scatter_templated, route_single_write,
-    route_single_write_templated, FailoverPolicy, ImmTable, NicHealth, PeerGroups, RecvPool,
-    Rotation, RouteSet, RoutedWrite, TransferTable,
+    remap_routed, retarget, route_barrier, route_barrier_templated, route_batch_templated,
+    route_paged_writes, route_paged_writes_templated, route_scatter, route_scatter_templated,
+    route_single_write, route_single_write_templated, route_write_batch, FailoverPolicy, ImmTable,
+    NicHealth, PeerGroups, RecvPool, Rotation, RouteSet, RoutedVec, RoutedWrite, TransferTable,
 };
 use super::model::Fired;
 use super::wire;
@@ -48,6 +48,7 @@ use crate::sim::time::Instant;
 use crate::sim::{Rng, Sim};
 use crate::util::err::Result;
 use crate::util::fasthash::FastMap;
+use crate::util::smallvec::SmallVec;
 
 /// Sender-side completion notification (paper Fig 2 `OnDone`).
 pub enum OnDone {
@@ -332,7 +333,11 @@ impl Engine {
     /// (paper Fig 2 `reg_mr`, allocation fused in for the simulator).
     pub fn alloc_mr(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
         let s = self.state.borrow();
-        let (buf, _rkey0) = s.net.mem().alloc(len);
+        let (buf, rkey0) = s.net.mem().alloc(len);
+        // The allocation-time rkey is never exposed through this API
+        // (remote access goes through reg_mr's per-NIC rkeys); drop it
+        // so dereg_mr returns the registry to its pre-alloc size.
+        s.net.mem().deregister(rkey0);
         drop(s);
         self.reg_mr(gpu, &buf)
     }
@@ -341,7 +346,8 @@ impl Engine {
     /// [`crate::fabric::mem::DmaBuf::unbacked`].
     pub fn alloc_mr_unbacked(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
         let s = self.state.borrow();
-        let (buf, _rkey0) = s.net.mem().alloc_unbacked(len);
+        let (buf, rkey0) = s.net.mem().alloc_unbacked(len);
+        s.net.mem().deregister(rkey0);
         drop(s);
         self.reg_mr(gpu, &buf)
     }
@@ -366,6 +372,19 @@ impl Engine {
             device: DeviceId { node: s.node, gpu },
         };
         (handle, desc)
+    }
+
+    /// Deregister every rkey of `desc` from the fabric's memory
+    /// registry (paper Fig 2 `dereg_mr`). Later remote writes through
+    /// those rkeys fault; unknown (already-deregistered) rkeys are
+    /// ignored, so double-dereg is safe. The backing [`DmaBuf`] is
+    /// refcounted and lives as long as any handle does.
+    pub fn dereg_mr(&self, desc: &MrDesc) {
+        let s = self.state.borrow();
+        let mem = s.net.mem();
+        for &(_, rkey) in &desc.rkeys {
+            mem.deregister(RKey(rkey));
+        }
     }
 
     // ------------------------------------------------------------------
@@ -611,8 +630,14 @@ impl Engine {
         self.ensure_group_up(gpu)?;
         // Zero-length writes need a 1-byte-capable source; use a tiny
         // scratch region (pre-registered once on the templated path).
-        let (scratch, _) = self.alloc_mr(gpu, 1);
-        self.execute_routed(sim, &scratch, routed, on_done)?;
+        let (scratch, scratch_desc) = self.alloc_mr(gpu, 1);
+        if let Err(e) = self.execute_routed(sim, &scratch, routed, on_done) {
+            // Group went down between the check above and dispatch:
+            // unwind the scratch registration so a rejected barrier
+            // leaves no MR behind.
+            self.dereg_mr(&scratch_desc);
+            return Err(e);
+        }
         self.bump_rotation(gpu);
         Ok(())
     }
@@ -722,6 +747,76 @@ impl Engine {
         self.execute_routed(sim, &scratch, routed, on_done)?;
         t.rotation.bump();
         Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Batched write family: one engine crossing per N writes
+    // ------------------------------------------------------------------
+
+    /// Batched ad-hoc writes: all of `dsts` routed in one pass against
+    /// one rotation peek, submitted as ONE engine crossing (one
+    /// transfer, one submit→handoff→prep charge), committed with a
+    /// single `bump_n`. Entry `i` routes exactly as the `i`-th of N
+    /// sequential [`Engine::submit_single_write`] calls would, so the
+    /// per-NIC WR streams are byte-identical to the loop — only the
+    /// per-call overhead collapses. All-or-nothing: a rejected batch
+    /// routes nothing and never shifts later NIC assignment.
+    pub fn submit_write_batch(
+        &self,
+        sim: &mut Sim,
+        src: &MrHandle,
+        dsts: &[ScatterDst],
+        imm_base: Option<u32>,
+        on_done: OnDone,
+    ) -> Result<()> {
+        if dsts.is_empty() {
+            self.fire_on_done(sim, on_done);
+            return Ok(());
+        }
+        let gpu = src.device.gpu;
+        let routed = route_write_batch(self.fanout(gpu), self.peek_rotation(gpu), dsts, imm_base)?;
+        self.execute_routed(sim, src, routed, on_done)?;
+        self.state.borrow().groups[gpu as usize].rotation.bump_n(dsts.len());
+        Ok(())
+    }
+
+    /// Batched templated writes over a bound group (§3.5 + batch): the
+    /// template is resolved once, every destination is patched against
+    /// the same rotation peek, and the group's cursor commits once via
+    /// `bump_n` — equivalent to N sequential
+    /// [`Engine::submit_single_write_templated`] calls but with one
+    /// engine crossing and one health-mask snapshot. `imm_base` (when
+    /// set) is delivered unchanged with EVERY entry: the receiver sees
+    /// one increment per destination, matching
+    /// `expect_imm_count(imm, N)`.
+    pub fn submit_batch_templated(
+        &self,
+        sim: &mut Sim,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm_base: Option<u32>,
+        on_done: OnDone,
+    ) -> Result<()> {
+        let t = self.state.borrow().peer_groups.template(group)?;
+        if dsts.is_empty() {
+            self.fire_on_done(sim, on_done);
+            return Ok(());
+        }
+        let routed = route_batch_templated(&t, t.rotation.next(), dsts, imm_base)?;
+        self.execute_routed(sim, src, routed, on_done)?;
+        t.rotation.bump_n(dsts.len());
+        Ok(())
+    }
+
+    /// Configure the probation TTL for believed-dead remote NICs on
+    /// `gpu`'s group: a gossiped/concluded death mark older than
+    /// `ttl_ns` is dropped on the next degraded submission and the
+    /// remote is optimistically re-probed. Zero disables (default).
+    pub fn set_remote_probe_ttl(&self, gpu: u8, ttl_ns: u64) {
+        self.state.borrow().groups[gpu as usize]
+            .health
+            .set_remote_probe_ttl(ttl_ns);
     }
 
     // ------------------------------------------------------------------
@@ -848,11 +943,12 @@ impl Engine {
         &self,
         sim: &mut Sim,
         src: &MrHandle,
-        mut routed: Vec<RoutedWrite>,
+        mut routed: RoutedVec,
         on_done: OnDone,
     ) -> Result<()> {
         assert!(!routed.is_empty(), "empty transfer");
         let gpu = src.device.gpu as usize;
+        let now = sim.now();
         {
             let mut s = self.state.borrow_mut();
             let res = {
@@ -860,6 +956,10 @@ impl Engine {
                 if health.all_clear() {
                     Ok(())
                 } else {
+                    // Probation: lift expired remote death-marks
+                    // before masking, so a believed-dead remote is
+                    // optimistically re-probed once its TTL elapses.
+                    health.expire_dead_remotes(now);
                     remap_routed(&mut routed, health)
                 }
             };
@@ -870,7 +970,6 @@ impl Engine {
                 return Err(e);
             }
         }
-        let now = sim.now();
         let posts = {
             let mut s = self.state.borrow_mut();
             let tid = s.transfers.begin(routed.len(), on_done);
@@ -878,7 +977,9 @@ impl Engine {
             let (first_post_at, mut trace) = s.charge_submission(now, gpu);
             let nic0 = s.groups[gpu].nics[0];
             let prof = s.net.profile(nic0);
-            let mut posts = Vec::with_capacity(routed.len());
+            // Inline up to the common fanout: the hot path allocates
+            // nothing between routing and the per-WR post schedule.
+            let mut posts: SmallVec<(Instant, usize, WorkRequest), 4> = SmallVec::new();
             let mut t = first_post_at;
             for (i, w) in routed.into_iter().enumerate() {
                 let RoutedWrite { plan: p, route: (dst_nic, rkey), alts } = w;
@@ -1036,7 +1137,12 @@ impl Engine {
                 // to application callbacks.
                 if wire::is_nic_health(&payload) {
                     if let Ok((nic, up)) = wire::decode_nic_health(&payload) {
-                        self.report_remote_health(gpu as u8, nic, up);
+                        // Stamp the gossiped death at receive time so
+                        // the probation TTL counts from when THIS
+                        // group started believing it.
+                        let mut s = self.state.borrow_mut();
+                        s.armed = true;
+                        s.groups[gpu].health.set_remote_at(nic, up, sim.now());
                     }
                     return;
                 }
@@ -1071,6 +1177,7 @@ impl Engine {
             Retry { gpu: usize, nic_idx: usize, wr: WorkRequest },
             Fail(Option<OnDone>),
         }
+        let now = sim.now();
         let (act, gossip) = {
             let mut s = self.state.borrow_mut();
             s.transport_errors += 1;
@@ -1091,7 +1198,7 @@ impl Engine {
                             && g.health.all_links_observed_down(r)
                             && g.health.remote_up(r)
                         {
-                            g.health.set_remote(r, false);
+                            g.health.set_remote_at(r, false, now);
                             if !g.gossip.is_empty() {
                                 gossip = Some((e.gpu, r));
                             }
@@ -1277,6 +1384,10 @@ impl TransferEngine for Engine {
         Engine::reg_mr(self, gpu, buf)
     }
 
+    fn dereg_mr(&self, desc: &MrDesc) {
+        Engine::dereg_mr(self, desc)
+    }
+
     fn submit_send(&self, cx: &mut Cx, gpu: u8, addr: &NetAddr, msg: &[u8], on_done: Notify) {
         Engine::submit_send(self, cx.sim(), gpu, addr, msg, on_done.into_des());
     }
@@ -1353,6 +1464,17 @@ impl TransferEngine for Engine {
         Engine::submit_scatter(self, cx.sim(), group, src, dsts, imm, on_done.into_des())
     }
 
+    fn submit_write_batch(
+        &self,
+        cx: &mut Cx,
+        src: &MrHandle,
+        dsts: &[ScatterDst],
+        imm_base: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        Engine::submit_write_batch(self, cx.sim(), src, dsts, imm_base, on_done.into_des())
+    }
+
     fn submit_barrier(
         &self,
         cx: &mut Cx,
@@ -1425,6 +1547,26 @@ impl TransferEngine for Engine {
         Engine::submit_scatter_templated(self, cx.sim(), src, group, dsts, imm, on_done.into_des())
     }
 
+    fn submit_batch_templated(
+        &self,
+        cx: &mut Cx,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm_base: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        Engine::submit_batch_templated(
+            self,
+            cx.sim(),
+            src,
+            group,
+            dsts,
+            imm_base,
+            on_done.into_des(),
+        )
+    }
+
     fn submit_barrier_templated(
         &self,
         cx: &mut Cx,
@@ -1490,6 +1632,10 @@ impl TransferEngine for Engine {
 
     fn set_gossip_peers(&self, gpu: u8, peers: Vec<NetAddr>) {
         Engine::set_gossip_peers(self, gpu, peers)
+    }
+
+    fn set_remote_probe_ttl(&self, gpu: u8, ttl_ns: u64) {
+        Engine::set_remote_probe_ttl(self, gpu, ttl_ns)
     }
 }
 
@@ -1732,6 +1878,93 @@ mod tests {
         // within a few µs.
         assert!(t.enqueued - t.submitted < 5_000);
         assert!(t.first_post - t.submitted < 20_000);
+    }
+
+    #[test]
+    fn write_batch_delivers_payloads_and_imms() {
+        let (mut sim, _net, a, b) = setup(NicProfile::efa);
+        let (src, _) = a.alloc_mr(0, 8192);
+        let pattern: Vec<u8> = (0..8192).map(|i| (i % 253) as u8).collect();
+        src.buf.write(0, &pattern);
+        let peers: Vec<(MrHandle, MrDesc)> = (0..3).map(|_| b.alloc_mr(0, 4096)).collect();
+        let dsts: Vec<ScatterDst> = peers
+            .iter()
+            .enumerate()
+            .map(|(i, (_, d))| ScatterDst {
+                len: 1000 + 500 * i as u64,
+                src: 2048 * i as u64,
+                dst: (d.clone(), 64),
+            })
+            .collect();
+        let done = Rc::new(Cell::new(false));
+        a.submit_write_batch(&mut sim, &src, &dsts, Some(21), OnDone::Flag(done.clone()))
+            .unwrap();
+        sim.run();
+        assert!(done.get(), "one OnDone for the whole batch");
+        for (i, (h, _)) in peers.iter().enumerate() {
+            let len = 1000 + 500 * i;
+            let off = 2048 * i;
+            assert_eq!(
+                &h.buf.to_vec()[64..64 + len],
+                &pattern[off..off + len],
+                "batch entry {i} payload"
+            );
+        }
+        // imm_base delivered unchanged with EVERY entry: one receiver
+        // increment per destination.
+        assert_eq!(b.imm_value(0, 21), 3);
+    }
+
+    #[test]
+    fn empty_batch_completes_without_posting() {
+        let (mut sim, net, a, _b) = setup(NicProfile::efa);
+        let (src, _) = a.alloc_mr(0, 64);
+        let done = Rc::new(Cell::new(false));
+        a.submit_write_batch(&mut sim, &src, &[], Some(3), OnDone::Flag(done.clone()))
+            .unwrap();
+        assert!(done.get(), "empty batch fires OnDone immediately");
+        sim.run();
+        let (tx, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 0 });
+        assert_eq!(tx, 0, "nothing posted for an empty batch");
+    }
+
+    #[test]
+    fn batch_advances_rotation_by_len_like_the_loop() {
+        // After a 3-entry batch the next single write must egress on
+        // the same NIC it would after 3 sequential singles.
+        let (mut sim, net, a, b) = setup(NicProfile::efa);
+        let (src, _) = a.alloc_mr(0, 4096);
+        let peers: Vec<(MrHandle, MrDesc)> = (0..3).map(|_| b.alloc_mr(0, 512)).collect();
+        let dsts: Vec<ScatterDst> = peers
+            .iter()
+            .map(|(_, d)| ScatterDst { len: 64, src: 0, dst: (d.clone(), 0) })
+            .collect();
+        a.submit_write_batch(&mut sim, &src, &dsts, None, OnDone::Noop).unwrap();
+        sim.run();
+        let (tx0_before, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 0 });
+        let (tx1_before, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 1 });
+        // Cursor is now 3; the next single routes at rotation 4 →
+        // NIC 0 on a fanout-2 group.
+        let (_, d0) = &peers[0];
+        a.submit_single_write(&mut sim, (&src, 0), 64, (d0, 128), None, OnDone::Noop)
+            .unwrap();
+        sim.run();
+        let (tx0_after, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 0 });
+        let (tx1_after, _) = net.nic_bytes(NicAddr { node: 0, gpu: 0, nic: 1 });
+        assert_eq!(tx0_after - tx0_before, 64, "post-batch cursor continues the round-robin");
+        assert_eq!(tx1_after, tx1_before);
+    }
+
+    #[test]
+    fn dereg_mr_returns_registry_to_baseline() {
+        let (_sim, net, a, _b) = setup(NicProfile::efa);
+        let before = net.mem().len();
+        let (_h, d) = a.alloc_mr(0, 4096);
+        assert_eq!(net.mem().len(), before + 2, "one rkey per NIC of the group");
+        a.dereg_mr(&d);
+        assert_eq!(net.mem().len(), before, "dereg removes every rkey");
+        a.dereg_mr(&d); // double-dereg is safe
+        assert_eq!(net.mem().len(), before);
     }
 
     #[test]

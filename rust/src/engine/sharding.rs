@@ -12,6 +12,12 @@
 //!   write-size of even across NICs.
 
 use super::api::SPLIT_THRESHOLD;
+use crate::util::smallvec::SmallVec;
+
+/// Plan storage: inline up to the common 2–4 lane fanout so the
+/// planner allocates nothing for small writes, single-NIC shards and
+/// narrow scatters; wide paged/scatter plans spill to the heap.
+pub type PlanVec = SmallVec<PlannedWrite, 4>;
 
 /// One planned one-sided write on a specific NIC of the domain group.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -40,23 +46,24 @@ pub fn plan_single_write(
     imm: Option<u32>,
     fanout: usize,
     rotation: usize,
-) -> Vec<PlannedWrite> {
+) -> PlanVec {
     assert!(fanout > 0);
+    let mut plans = PlanVec::new();
     if imm.is_some() || len <= SPLIT_THRESHOLD || fanout == 1 {
-        return vec![PlannedWrite {
+        plans.push(PlannedWrite {
             nic: rotation % fanout,
             src_off,
             dst_va,
             len,
             imm,
-        }];
+        });
+        return plans;
     }
     // Split evenly; remainder spread one byte at a time from the
     // front so shard sizes differ by at most 1.
     let n = fanout as u64;
     let base = len / n;
     let rem = len % n;
-    let mut plans = Vec::with_capacity(fanout);
     let mut off = 0u64;
     for i in 0..fanout {
         let l = base + u64::from((i as u64) < rem);
@@ -87,7 +94,7 @@ pub fn plan_paged_writes(
     imm: Option<u32>,
     fanout: usize,
     rotation: usize,
-) -> Vec<PlannedWrite> {
+) -> PlanVec {
     assert_eq!(
         src_offsets.len(),
         dst_vas.len(),
@@ -118,7 +125,7 @@ pub fn plan_scatter(
     imm: Option<u32>,
     fanout: usize,
     rotation: usize,
-) -> Vec<PlannedWrite> {
+) -> PlanVec {
     assert!(fanout > 0);
     entries
         .iter()

@@ -18,7 +18,7 @@
 //! overhead numbers (Table 8): `TraceT` records real monotonic
 //! timestamps from `submit_*()` to the last posted WRITE.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -28,10 +28,10 @@ use super::api::{
     MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
 use super::core::{
-    remap_routed, retarget, route_barrier, route_barrier_templated, route_paged_writes,
-    route_paged_writes_templated, route_scatter, route_scatter_templated, route_single_write,
-    route_single_write_templated, FailoverPolicy, ImmTable, NicHealth, PeerGroups, RecvPool,
-    Rotation, RouteSet, RoutedWrite, TransferTable,
+    remap_routed, retarget, route_barrier, route_barrier_templated, route_batch_templated,
+    route_paged_writes, route_paged_writes_templated, route_scatter, route_scatter_templated,
+    route_single_write, route_single_write_templated, route_write_batch, FailoverPolicy, ImmTable,
+    NicHealth, PeerGroups, RecvPool, RouteSet, RoutedVec, RoutedWrite, TransferTable,
 };
 use super::model::Fired;
 use super::wire;
@@ -43,6 +43,7 @@ use crate::fabric::nic::{Cqe, CqeKind, NicAddr, QpId, WorkRequest, WrOp};
 use crate::fabric::topology::DeviceId;
 use crate::util::err::Result;
 use crate::util::fasthash::FastMap;
+use crate::util::smallvec::SmallVec;
 
 /// [`FailoverPolicy`] packed into an atomic for lock-free reads on the
 /// worker threads.
@@ -67,6 +68,9 @@ struct FailCtx {
     errors: Arc<AtomicU64>,
     armed: Arc<AtomicBool>,
     gossip: Arc<Mutex<Vec<NetAddr>>>,
+    /// Engine start: death marks are stamped `epoch.elapsed()` so the
+    /// remote-probation TTL measures from the actual report time.
+    epoch: Instant,
 }
 
 /// Everything needed to repost a failed WR on a surviving path.
@@ -92,6 +96,16 @@ pub enum OnDoneT {
     Noop,
 }
 
+/// Fire a completion notification inline on the calling thread (used
+/// for degenerate submissions that post nothing, e.g. empty batches).
+fn fire_on_done_t(on_done: OnDoneT) {
+    match on_done {
+        OnDoneT::Callback(cb) => cb(),
+        OnDoneT::Flag(f) => f.store(true, Ordering::Release),
+        OnDoneT::Noop => {}
+    }
+}
+
 /// Real-time submission trace (ns since engine start).
 #[derive(Debug, Clone, Copy)]
 pub struct TraceT {
@@ -102,9 +116,80 @@ pub struct TraceT {
     pub wrs: usize,
 }
 
+/// Number of cache-line-padded lanes in a [`ShardedRotation`]: enough
+/// that concurrent submitters on a typical host rarely share a line.
+const ROTATION_SHARDS: usize = 8;
+
+/// One full cache line per counter so concurrent bumps on different
+/// lanes never false-share.
+#[repr(align(64))]
+struct PaddedCounter(AtomicUsize);
+
+/// Global round-robin source for per-thread lane assignment.
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// The calling thread's stable lane in every sharded cursor.
+    static SHARD_IDX: usize =
+        NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % ROTATION_SHARDS;
+}
+
+/// The threaded runtime's per-group NIC-rotation cursor, sharded so
+/// concurrent submitters stop serializing on one contended cache
+/// line: each submitting thread commits on its own padded lane and
+/// the cursor value is the sum of the lanes.
+///
+/// Single-threaded this behaves exactly like [`Rotation`]
+/// (`next()` peeks committed + 1; `bump`/`bump_n` commit by 1/N), so
+/// rotation-sensitive tests and the batch/loop equivalence contract
+/// are unchanged. Under concurrency the peek→commit window is
+/// approximate — the same benign race the unsharded cursor already
+/// had: it can shift which NIC a racing submission starts on, never
+/// correctness.
+///
+/// [`Rotation`]: super::core::Rotation
+struct ShardedRotation {
+    shards: [PaddedCounter; ROTATION_SHARDS],
+}
+
+impl ShardedRotation {
+    fn new() -> Self {
+        ShardedRotation {
+            shards: std::array::from_fn(|_| PaddedCounter(AtomicUsize::new(0))),
+        }
+    }
+
+    /// The committed cursor: sum of every lane.
+    fn committed(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|c| c.0.load(Ordering::Relaxed))
+            .fold(0usize, usize::wrapping_add)
+    }
+
+    /// The rotation value the next commit corresponds to (route with
+    /// this, commit only once routing succeeded).
+    fn next(&self) -> usize {
+        self.committed().wrapping_add(1)
+    }
+
+    /// Commit one submission on the calling thread's lane.
+    fn bump(&self) -> usize {
+        self.bump_n(1)
+    }
+
+    /// Commit `n` submissions with ONE atomic RMW on the calling
+    /// thread's lane (the batch path): an N-entry batch advances the
+    /// cursor exactly as N sequential bumps would.
+    fn bump_n(&self, n: usize) -> usize {
+        SHARD_IDX.with(|i| self.shards[*i].0.fetch_add(n, Ordering::Relaxed));
+        self.committed()
+    }
+}
+
 enum Cmd {
     Writes {
-        routed: Vec<RoutedWrite>,
+        routed: RoutedVec,
         src: DmaBuf,
         tid: u64,
         submitted_ns: u64,
@@ -138,7 +223,9 @@ struct Group {
     nics: Vec<NicAddr>,
     tx: Sender<Cmd>,
     shared: Arc<Mutex<GroupShared>>,
-    rotation: Rotation,
+    /// NIC rotation cursor, sharded across per-thread lanes so
+    /// concurrent submitters don't contend on one cache line.
+    rotation: ShardedRotation,
     /// Link-health table: downed local NICs, observed link partitions
     /// and gossiped-dead remote NICs are all excluded from new
     /// submissions (shared with the group's worker for resubmission
@@ -224,6 +311,7 @@ impl ThreadedEngine {
                 errors: errors.clone(),
                 armed: armed.clone(),
                 gossip: gossip.clone(),
+                epoch,
             };
             let worker = std::thread::Builder::new()
                 .name(format!("te-worker-n{node}g{gpu}"))
@@ -233,7 +321,7 @@ impl ThreadedEngine {
                 nics,
                 tx,
                 shared,
-                rotation: Rotation::new(),
+                rotation: ShardedRotation::new(),
                 health,
                 gossip,
                 worker: Mutex::new(Some(worker)),
@@ -318,7 +406,20 @@ impl ThreadedEngine {
     /// received gossip message applies; also an operator override).
     pub fn report_remote_health(&self, gpu: u8, remote: NicAddr, up: bool) {
         self.inner.armed.store(true, Ordering::Release);
-        self.inner.groups[gpu as usize].health.set_remote(remote, up);
+        let now = self.now_ns();
+        self.inner.groups[gpu as usize]
+            .health
+            .set_remote_at(remote, up, now);
+    }
+
+    /// Configure the probation TTL for believed-dead remote NICs on
+    /// `gpu`'s group: a gossiped/concluded death mark older than
+    /// `ttl_ns` is dropped on the next degraded submission and the
+    /// remote is optimistically re-probed. Zero disables (default).
+    pub fn set_remote_probe_ttl(&self, gpu: u8, ttl_ns: u64) {
+        self.inner.groups[gpu as usize]
+            .health
+            .set_remote_probe_ttl(ttl_ns);
     }
 
     /// Configure the health-gossip neighborhood of `gpu`'s group.
@@ -403,14 +504,21 @@ impl ThreadedEngine {
 
     /// Allocate + register a region on `gpu`.
     pub fn alloc_mr(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
-        let (buf, _) = self.inner.fabric.mem().alloc(len);
+        let mem = self.inner.fabric.mem();
+        let (buf, rkey0) = mem.alloc(len);
+        // The allocation-time rkey is never exposed through this API
+        // (remote access goes through reg_mr's per-NIC rkeys); drop it
+        // so dereg_mr returns the registry to its pre-alloc size.
+        mem.deregister(rkey0);
         self.reg_mr(gpu, &buf)
     }
 
     /// Allocate + register an **unbacked** (timing-only) region; see
     /// [`crate::fabric::mem::DmaBuf::unbacked`].
     pub fn alloc_mr_unbacked(&self, gpu: u8, len: usize) -> (MrHandle, MrDesc) {
-        let (buf, _) = self.inner.fabric.mem().alloc_unbacked(len);
+        let mem = self.inner.fabric.mem();
+        let (buf, rkey0) = mem.alloc_unbacked(len);
+        mem.deregister(rkey0);
         self.reg_mr(gpu, &buf)
     }
 
@@ -436,6 +544,18 @@ impl ThreadedEngine {
                 rkeys,
             },
         )
+    }
+
+    /// Deregister every rkey of `desc` from the fabric's memory
+    /// registry (paper Fig 2 `dereg_mr`). Later remote writes through
+    /// those rkeys fault; unknown (already-deregistered) rkeys are
+    /// ignored, so double-dereg is safe. The backing [`DmaBuf`] is
+    /// refcounted and lives as long as any handle does.
+    pub fn dereg_mr(&self, desc: &MrDesc) {
+        let mem = self.inner.fabric.mem();
+        for &(_, rkey) in &desc.rkeys {
+            mem.deregister(RKey(rkey));
+        }
     }
 
     /// Two-sided send (copy-on-submit).
@@ -616,11 +736,11 @@ impl ThreadedEngine {
         }
         // Route AND health-check BEFORE allocating the scratch source:
         // a rejected barrier (§3.2 mismatch, all NICs down) must not
-        // register anything. The check is best-effort on this runtime:
-        // a concurrent link flip between it and dispatch_writes' own
-        // re-check can still leak one 1-byte region (there is no MR
-        // deregistration primitive); the window is one racing call
-        // wide, same class as the documented benign peek→bump race.
+        // register anything. The check is best-effort on this runtime
+        // — a concurrent link flip can still slip between it and
+        // dispatch_writes' own re-check — so the dispatch error path
+        // below deregisters the scratch explicitly: a rejected barrier
+        // leaves no MR behind on either side of the race.
         let g = &self.inner.groups[gpu as usize];
         let routed = route_barrier(g.nics.len(), g.rotation.next(), dsts, imm)?;
         if g.health.up_count() == 0 {
@@ -631,8 +751,11 @@ impl ThreadedEngine {
                 g.nics.len()
             );
         }
-        let (scratch, _) = self.alloc_mr(gpu, 1);
-        self.dispatch_writes(gpu, &scratch, routed, on_done, submitted_ns)?;
+        let (scratch, scratch_desc) = self.alloc_mr(gpu, 1);
+        if let Err(e) = self.dispatch_writes(gpu, &scratch, routed, on_done, submitted_ns) {
+            self.dereg_mr(&scratch_desc);
+            return Err(e);
+        }
         g.rotation.bump();
         Ok(())
     }
@@ -722,6 +845,67 @@ impl ThreadedEngine {
         let scratch = t.scratch.clone();
         self.dispatch_writes(scratch.device.gpu, &scratch, routed, on_done, submitted_ns)?;
         t.rotation.bump();
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Batched write family: one engine crossing per N writes
+    // ------------------------------------------------------------------
+
+    /// Batched ad-hoc writes: all of `dsts` routed in one pass against
+    /// one rotation peek, handed to the group's worker as ONE command
+    /// (one channel send, one lock pass, one transfer), committed with
+    /// a single `bump_n`. Entry `i` routes exactly as the `i`-th of N
+    /// sequential [`ThreadedEngine::submit_single_write`] calls would,
+    /// so the per-NIC WR streams match the loop — only the per-call
+    /// overhead collapses. All-or-nothing: a rejected batch routes
+    /// nothing and never shifts later NIC assignment.
+    pub fn submit_write_batch(
+        &self,
+        src: &MrHandle,
+        dsts: &[ScatterDst],
+        imm_base: Option<u32>,
+        on_done: OnDoneT,
+    ) -> Result<()> {
+        if dsts.is_empty() {
+            fire_on_done_t(on_done);
+            return Ok(());
+        }
+        let submitted_ns = self.now_ns();
+        let gpu = src.device.gpu;
+        let g = &self.inner.groups[gpu as usize];
+        let routed = route_write_batch(g.nics.len(), g.rotation.next(), dsts, imm_base)?;
+        self.dispatch_writes(gpu, src, routed, on_done, submitted_ns)?;
+        g.rotation.bump_n(dsts.len());
+        Ok(())
+    }
+
+    /// Batched templated writes over a bound group (§3.5 + batch): the
+    /// template is resolved once, every destination is patched against
+    /// the same rotation peek, and the group's cursor commits once via
+    /// `bump_n` — equivalent to N sequential
+    /// [`ThreadedEngine::submit_single_write_templated`] calls but
+    /// with one engine crossing and one health-mask snapshot.
+    /// `imm_base` (when set) is delivered unchanged with EVERY entry:
+    /// the receiver sees one increment per destination, matching
+    /// `expect_imm_count(imm, N)`.
+    pub fn submit_batch_templated(
+        &self,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm_base: Option<u32>,
+        on_done: OnDoneT,
+    ) -> Result<()> {
+        let submitted_ns = self.now_ns();
+        let t = self.template(group)?;
+        if dsts.is_empty() {
+            fire_on_done_t(on_done);
+            return Ok(());
+        }
+        let routed = route_batch_templated(&t, t.rotation.next(), dsts, imm_base)?;
+        self.dispatch_writes(src.device.gpu, src, routed, on_done, submitted_ns)?;
+        t.rotation.bump_n(dsts.len());
         Ok(())
     }
 
@@ -815,7 +999,7 @@ impl ThreadedEngine {
         &self,
         gpu: u8,
         src: &MrHandle,
-        mut routed: Vec<RoutedWrite>,
+        mut routed: RoutedVec,
         on_done: OnDoneT,
         submitted_ns: u64,
     ) -> Result<()> {
@@ -828,6 +1012,10 @@ impl ThreadedEngine {
         // the group is down locally.
         let g = &self.inner.groups[gpu as usize];
         if !g.health.all_clear() {
+            // Probation: lift expired remote death-marks before
+            // masking, so a believed-dead remote is optimistically
+            // re-probed once its TTL elapses.
+            g.health.expire_dead_remotes(self.now_ns());
             if let Err(e) = remap_routed(&mut routed, &g.health) {
                 // An all-NICs-down rejection is a transport failure
                 // too: count it so scenarios can observe the outage.
@@ -877,8 +1065,10 @@ fn worker_loop(
                 // Build the WRs first so the (armed-only) retry
                 // entries can be recorded in the same lock pass as the
                 // transfer bindings — BEFORE any WR is on the wire, so
-                // an instant failure still finds its entry.
-                let wrs: Vec<(usize, RouteSet, WorkRequest)> = routed
+                // an instant failure still finds its entry. Inline up
+                // to the common fanout: no heap allocation between
+                // dequeue and post for small submissions.
+                let wrs: SmallVec<(usize, RouteSet, WorkRequest), 4> = routed
                     .into_iter()
                     .enumerate()
                     .map(|(i, w)| {
@@ -1051,7 +1241,8 @@ fn handle_cqe(
                             && fo.health.all_links_observed_down(r)
                             && fo.health.remote_up(r)
                         {
-                            fo.health.set_remote(r, false);
+                            let now = fo.epoch.elapsed().as_nanos() as u64;
+                            fo.health.set_remote_at(r, false, now);
                             gossip_dead = Some(r);
                         }
                     }
@@ -1164,7 +1355,11 @@ fn handle_cqe(
             if wire::is_nic_health(&msg.data) {
                 if let Ok((dead, up)) = wire::decode_nic_health(&msg.data) {
                     fo.armed.store(true, Ordering::Release);
-                    fo.health.set_remote(dead, up);
+                    // Stamp the gossiped death at receive time so the
+                    // probation TTL counts from when THIS group
+                    // started believing it.
+                    let now = fo.epoch.elapsed().as_nanos() as u64;
+                    fo.health.set_remote_at(dead, up, now);
                 }
                 return;
             }
@@ -1202,6 +1397,10 @@ impl TransferEngine for ThreadedEngine {
 
     fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc) {
         ThreadedEngine::reg_mr(self, gpu, buf)
+    }
+
+    fn dereg_mr(&self, desc: &MrDesc) {
+        ThreadedEngine::dereg_mr(self, desc)
     }
 
     fn submit_send(&self, _cx: &mut Cx, gpu: u8, addr: &NetAddr, msg: &[u8], on_done: Notify) {
@@ -1279,6 +1478,17 @@ impl TransferEngine for ThreadedEngine {
         ThreadedEngine::submit_scatter(self, group, src, dsts, imm, on_done.into_threaded())
     }
 
+    fn submit_write_batch(
+        &self,
+        _cx: &mut Cx,
+        src: &MrHandle,
+        dsts: &[ScatterDst],
+        imm_base: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        ThreadedEngine::submit_write_batch(self, src, dsts, imm_base, on_done.into_threaded())
+    }
+
     fn submit_barrier(
         &self,
         _cx: &mut Cx,
@@ -1349,6 +1559,25 @@ impl TransferEngine for ThreadedEngine {
         ThreadedEngine::submit_scatter_templated(self, src, group, dsts, imm, on_done.into_threaded())
     }
 
+    fn submit_batch_templated(
+        &self,
+        _cx: &mut Cx,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm_base: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()> {
+        ThreadedEngine::submit_batch_templated(
+            self,
+            src,
+            group,
+            dsts,
+            imm_base,
+            on_done.into_threaded(),
+        )
+    }
+
     fn submit_barrier_templated(
         &self,
         _cx: &mut Cx,
@@ -1416,6 +1645,10 @@ impl TransferEngine for ThreadedEngine {
 
     fn set_gossip_peers(&self, gpu: u8, peers: Vec<NetAddr>) {
         ThreadedEngine::set_gossip_peers(self, gpu, peers)
+    }
+
+    fn set_remote_probe_ttl(&self, gpu: u8, ttl_ns: u64) {
+        ThreadedEngine::set_remote_probe_ttl(self, gpu, ttl_ns)
     }
 }
 
@@ -1831,6 +2064,130 @@ mod tests {
         assert_eq!(v[0], (0, 5));
         assert_eq!(v[1], (5, 9));
         a.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn sharded_rotation_matches_plain_cursor_single_threaded() {
+        use crate::engine::core::Rotation;
+        let sharded = ShardedRotation::new();
+        let plain = Rotation::new();
+        for _ in 0..10 {
+            assert_eq!(sharded.next(), plain.next());
+            assert_eq!(sharded.bump(), plain.bump());
+        }
+        // A batch commit advances exactly like N single commits.
+        assert_eq!(sharded.bump_n(5), plain.bump_n(5));
+        assert_eq!(sharded.next(), plain.next());
+    }
+
+    #[test]
+    fn sharded_rotation_counts_every_concurrent_bump() {
+        let rot = Arc::new(ShardedRotation::new());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let r = rot.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        r.bump();
+                    }
+                    r.bump_n(10);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(rot.committed(), 4 * 1010, "no lost updates across lanes");
+    }
+
+    #[test]
+    fn threaded_write_batch_delivers_and_counts() {
+        let fabric = LocalFabric::new(TransportKind::Srd, 31);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 2);
+        let b = ThreadedEngine::new(&fabric, 1, 1, 2);
+        let (src, _) = a.alloc_mr(0, 4096);
+        src.buf.write(0, &[9u8; 4096]);
+        let peers: Vec<(MrHandle, MrDesc)> = (0..3).map(|_| b.alloc_mr(0, 1024)).collect();
+        let counted = Arc::new(AtomicBool::new(false));
+        let c = counted.clone();
+        // One increment per batch entry: imm_base rides every WR.
+        b.expect_imm_count(0, 60, 3, move || c.store(true, Ordering::Release));
+        let dsts: Vec<ScatterDst> = peers
+            .iter()
+            .enumerate()
+            .map(|(i, (_, d))| ScatterDst {
+                len: 256,
+                src: (i as u64) * 256,
+                dst: (d.clone(), 16),
+            })
+            .collect();
+        let done = Arc::new(AtomicBool::new(false));
+        a.submit_write_batch(&src, &dsts, Some(60), OnDoneT::Flag(done.clone()))
+            .unwrap();
+        wait_flag(&done);
+        wait_flag(&counted);
+        for (i, (h, _)) in peers.iter().enumerate() {
+            assert_eq!(&h.buf.to_vec()[16..16 + 256], &[9u8; 256], "entry {i}");
+        }
+        // Empty batch: fires OnDone inline, posts nothing.
+        let empty_done = Arc::new(AtomicBool::new(false));
+        a.submit_write_batch(&src, &[], Some(61), OnDoneT::Flag(empty_done.clone()))
+            .unwrap();
+        assert!(empty_done.load(Ordering::Acquire));
+        a.shutdown();
+        b.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn threaded_dereg_mr_returns_registry_to_baseline() {
+        let fabric = LocalFabric::new(TransportKind::Rc, 32);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 2);
+        let before = fabric.mem().len();
+        let (_h, d) = a.alloc_mr(0, 4096);
+        assert_eq!(fabric.mem().len(), before + 2, "one rkey per NIC of the group");
+        a.dereg_mr(&d);
+        assert_eq!(fabric.mem().len(), before, "dereg removes every rkey");
+        a.dereg_mr(&d); // double-dereg is safe
+        assert_eq!(fabric.mem().len(), before);
+        a.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn chaos_threaded_dead_remote_leaves_probation_after_ttl() {
+        let fabric = LocalFabric::new(TransportKind::Srd, 33);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 2);
+        let b = ThreadedEngine::new(&fabric, 1, 1, 2);
+        let b0 = NicAddr { node: 1, gpu: 0, nic: 0 };
+        let (src, _) = a.alloc_mr(0, 64);
+        let (_dh, dd) = b.alloc_mr(0, 64);
+        src.buf.write(0, &[5u8; 64]);
+        // Believed-dead remote with NO TTL: the mark outlives
+        // submissions (remap retargets around it, never lifts it).
+        a.report_remote_health(0, b0, false);
+        assert_eq!(a.link_health_mask(0, b0), 0, "remote in probation");
+        let done = Arc::new(AtomicBool::new(false));
+        a.submit_single_write((&src, 0), 64, (&dd, 0), None, OnDoneT::Flag(done.clone()))
+            .unwrap();
+        wait_flag(&done);
+        assert_eq!(a.link_health_mask(0, b0), 0, "without a TTL the belief persists");
+        // Arm a 1ns TTL: the mark is long expired by the next
+        // submission, which lifts it and re-probes optimistically.
+        a.set_remote_probe_ttl(0, 1);
+        let done2 = Arc::new(AtomicBool::new(false));
+        a.submit_single_write((&src, 0), 64, (&dd, 0), None, OnDoneT::Flag(done2.clone()))
+            .unwrap();
+        wait_flag(&done2);
+        assert_eq!(
+            a.link_health_mask(0, b0),
+            0b11,
+            "probation lifted after TTL: every lane trusted again"
+        );
+        assert_eq!(a.transport_errors(), 0, "fabric was healthy all along");
+        a.shutdown();
+        b.shutdown();
         fabric.shutdown();
     }
 

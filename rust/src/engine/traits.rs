@@ -424,6 +424,17 @@ pub trait TransferEngine {
     /// Register an existing buffer on `gpu`, one rkey per NIC.
     fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc);
 
+    /// Deregister every rkey of a region this engine registered
+    /// (`alloc_mr`/`reg_mr`): later remote writes through them fault,
+    /// and the fabric's translation table drops its entries — the
+    /// primitive long-lived engines need to release request-scoped
+    /// regions (and the one the `submit_barrier` error path uses so a
+    /// racing rejection cannot leak its 1-byte scratch). Unknown rkeys
+    /// are ignored, so deregistering twice is safe. The backing
+    /// `DmaBuf` itself is refcounted and lives until the last handle
+    /// drops.
+    fn dereg_mr(&self, desc: &MrDesc);
+
     /// Two-sided send into the peer's posted RECV pool
     /// (copy-on-submit).
     fn submit_send(&self, cx: &mut Cx, gpu: u8, addr: &NetAddr, msg: &[u8], on_done: Notify);
@@ -503,6 +514,30 @@ pub trait TransferEngine {
         on_done: Notify,
     ) -> Result<()>;
 
+    /// Untemplated batched write family: entry `i` is routed exactly
+    /// like a `submit_single_write` of `dsts[i]` at the `i`-th
+    /// following rotation (large imm-less entries shard across NICs),
+    /// but the whole batch crosses the engine ONCE — one trait call,
+    /// one health snapshot, one rotation commit, one completion
+    /// (`on_done` fires after every WR of every entry delivered).
+    /// Every entry carries `imm_base`, so a receiver gating on
+    /// `expect_imm_count(imm_base, n)` counts one increment per entry.
+    ///
+    /// All-or-nothing: a rejected batch (§3.2 mismatch, bad bounds,
+    /// no healthy NIC) routes nothing, registers nothing, and never
+    /// shifts the NIC assignment of later transfers. A mid-batch
+    /// transport failure resubmits only the affected WRs under the
+    /// [`FailoverPolicy`] contract. An empty batch completes
+    /// immediately.
+    fn submit_write_batch(
+        &self,
+        cx: &mut Cx,
+        src: &MrHandle,
+        dsts: &[ScatterDst],
+        imm_base: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()>;
+
     /// Immediate-only notification to every peer (zero-length writes;
     /// `dsts` supplies a valid descriptor per peer, required on EFA).
     /// The untemplated (ad-hoc) path.
@@ -561,6 +596,25 @@ pub trait TransferEngine {
         group: PeerGroupHandle,
         dsts: &[TemplatedDst],
         imm: Option<u32>,
+        on_done: Notify,
+    ) -> Result<()>;
+
+    /// Templated batched write family — the batch fast path proper:
+    /// entry `i` is routed exactly like a
+    /// `submit_single_write_templated` to `dsts[i].peer` at the `i`-th
+    /// following rotation of the group's cursor, WR-for-WR identical
+    /// to the N-call loop, but with ONE engine crossing, ONE health
+    /// snapshot, ONE rotation commit and ONE completion for the whole
+    /// batch. Every entry carries `imm_base` (one receiver-side
+    /// increment per entry). Same all-or-nothing and mid-batch
+    /// failover contract as [`TransferEngine::submit_write_batch`].
+    fn submit_batch_templated(
+        &self,
+        cx: &mut Cx,
+        src: &MrHandle,
+        group: PeerGroupHandle,
+        dsts: &[TemplatedDst],
+        imm_base: Option<u32>,
         on_done: Notify,
     ) -> Result<()>;
 
@@ -691,6 +745,17 @@ pub trait TransferEngine {
     /// application callbacks. Peers owning the dead NIC are skipped.
     /// An empty list (the default) disables gossip sending.
     fn set_gossip_peers(&self, gpu: u8, peers: Vec<NetAddr>);
+
+    /// Probation TTL for believed-dead remotes in `gpu`'s group table:
+    /// once a death belief (own conclusion or received gossip) is
+    /// older than `ttl_ns` on the engine clock, a degraded submission
+    /// path drops it and optimistically re-probes the remote — worst
+    /// case the probe pays the `WrError` round-trip and the death is
+    /// re-reported, restarting probation. Zero (the default) disables
+    /// TTL re-probe: beliefs then heal only via
+    /// [`TransferEngine::report_remote_health`]`(up)` or the
+    /// unreachable-region clear in `engine::core::remap_routed`.
+    fn set_remote_probe_ttl(&self, gpu: u8, ttl_ns: u64);
 
     // -- wire bridge (descriptor exchange over SEND/RECV) -------------
 

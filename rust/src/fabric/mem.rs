@@ -249,9 +249,20 @@ impl MemRegistry {
         rkey
     }
 
-    /// Deregister an rkey; later writes through it fault.
+    /// Deregister an rkey; later writes through it fault. Unknown
+    /// rkeys are ignored (double-deregistration is safe).
     pub fn deregister(&self, rkey: RKey) {
         self.inner.lock().unwrap().remove(&rkey);
+    }
+
+    /// Number of registered regions (leak checks in tests).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True when no regions are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// Resolve `(rkey, va)` to a buffer + offset. Returns `None` when

@@ -1,9 +1,12 @@
-//! Minimal JSON parser (serde is unavailable offline; the runtime
-//! needs to read `artifacts/manifest.json`).
+//! Minimal JSON parser and serializer (serde is unavailable offline;
+//! the runtime needs to read `artifacts/manifest.json`, and the
+//! benches emit machine-readable `BENCH_*.json` result files).
 //!
 //! Supports the full JSON grammar minus exotic number forms; numbers
 //! parse as f64. Strict: trailing garbage, unterminated strings and
-//! bad escapes are errors.
+//! bad escapes are errors. Serialization is deterministic: object
+//! keys come out in `BTreeMap` order, so the same value always
+//! renders the same bytes (diffable bench baselines).
 
 use std::collections::BTreeMap;
 
@@ -83,6 +86,153 @@ impl Json {
             Json::Obj(m) => Some(m),
             _ => None,
         }
+    }
+
+    /// Serialize with `indent`-space indentation and a trailing
+    /// newline — the format the committed `BENCH_*.json` baselines
+    /// use, so regenerated files diff cleanly against them.
+    pub fn to_pretty(&self, indent: usize) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(indent), 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let pad = |out: &mut String, d: usize| {
+            if let Some(w) = indent {
+                out.push('\n');
+                out.push_str(&" ".repeat(w * d));
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => out.push_str(&fmt_num(*n)),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                if !v.is_empty() {
+                    pad(out, depth);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, depth + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                if !m.is_empty() {
+                    pad(out, depth);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Merge one top-level `section` into the JSON report at `path`
+/// (read-modify-write): other sections are preserved, so several
+/// bench binaries can share one `BENCH_*.json` file. Creates the file
+/// (and an enclosing object) when missing; writes 2-space pretty form
+/// so regenerated reports diff cleanly against committed baselines.
+pub fn update_report(path: &str, section: &str, value: Json) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(s) => Json::parse(&s)?,
+        Err(_) => Json::Obj(BTreeMap::new()),
+    };
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::Obj(BTreeMap::new());
+    }
+    if let Json::Obj(m) = &mut root {
+        m.insert(section.to_string(), value);
+    }
+    std::fs::write(path, root.to_pretty(2))?;
+    Ok(())
+}
+
+/// Compact serialization (no whitespace). Round-trips through
+/// [`Json::parse`]; integral numbers render without a fraction.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        f.write_str(&out)
+    }
+}
+
+/// Render a number the way the parser reads it back: integers (the
+/// common case — counts, nanoseconds) without a fraction, everything
+/// else via f64 round-trip formatting.
+fn fmt_num(n: f64) -> String {
+    if n.is_finite() && n.fract() == 0.0 && n.abs() < 9.0e15 {
+        format!("{}", n as i64)
+    } else if n.is_finite() {
+        format!("{n}")
+    } else {
+        // JSON has no Inf/NaN; null is the conventional stand-in.
+        "null".to_string()
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience constructors for building bench-report documents.
+impl From<f64> for Json {
+    fn from(n: f64) -> Self {
+        Json::Num(n)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(n: u64) -> Self {
+        Json::Num(n as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(s: String) -> Self {
+        Json::Str(s)
     }
 }
 
@@ -310,5 +460,30 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::parse(r#""héllo — ünïcode""#).unwrap();
         assert_eq!(j.str(), Some("héllo — ünïcode"));
+    }
+
+    #[test]
+    fn serializer_round_trips() {
+        let doc = r#"{"arr":[1,2.5,null],"esc":"a\"b\nc","n":-3,"ok":true}"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.to_string(), doc, "keys sort, integers stay integral");
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(Json::parse(&j.to_pretty(2)).unwrap(), j);
+    }
+
+    #[test]
+    fn pretty_is_stable_and_indented() {
+        let mut m = BTreeMap::new();
+        m.insert("b".to_string(), Json::Num(2.0));
+        m.insert("a".to_string(), Json::Arr(vec![Json::Num(1.0)]));
+        let j = Json::Obj(m);
+        assert_eq!(j.to_pretty(2), "{\n  \"a\": [\n    1\n  ],\n  \"b\": 2\n}\n");
+        assert_eq!(Json::Obj(BTreeMap::new()).to_pretty(2), "{}\n");
+    }
+
+    #[test]
+    fn nonfinite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
     }
 }

@@ -7,6 +7,7 @@ pub mod err;
 pub mod fasthash;
 pub mod json;
 pub mod prop;
+pub mod smallvec;
 pub mod table;
 
 pub use json::Json;

@@ -1,0 +1,388 @@
+//! Inline small-vector for the engine hot path.
+//!
+//! Every submission allocated one or more `Vec`s per call (the routed
+//! WR list, the worker-side post list); at the common 2–4 lane fanout
+//! those vectors hold a handful of elements, so the allocator round
+//! trip dominates. [`SmallVec`] keeps up to `N` elements inline on the
+//! stack and spills to a heap `Vec` only past that — the spill path is
+//! the cold one (large sharded writes, wide scatters).
+//!
+//! Deliberately minimal: the engine needs push/collect/iterate/index
+//! and nothing else. No `insert`/`remove`, no capacity tuning.
+
+use std::fmt;
+use std::mem::{ManuallyDrop, MaybeUninit};
+use std::ops::{Deref, DerefMut};
+
+/// A vector holding up to `N` elements inline (no heap allocation)
+/// and transparently spilling to a `Vec<T>` beyond that.
+///
+/// Invariant: when `heap` is `Some`, every element lives in the heap
+/// `Vec` and `len == 0`; when `heap` is `None`, the first `len` slots
+/// of `inline` are initialized.
+pub struct SmallVec<T, const N: usize> {
+    inline: [MaybeUninit<T>; N],
+    len: usize,
+    heap: Option<Vec<T>>,
+}
+
+impl<T, const N: usize> SmallVec<T, N> {
+    /// An empty vector; allocates nothing.
+    pub fn new() -> Self {
+        SmallVec {
+            // SAFETY: an array of `MaybeUninit` is always "initialized"
+            // — each slot is itself allowed to be uninitialized.
+            inline: unsafe { MaybeUninit::uninit().assume_init() },
+            len: 0,
+            heap: None,
+        }
+    }
+
+    /// True when the elements have spilled to the heap.
+    pub fn spilled(&self) -> bool {
+        self.heap.is_some()
+    }
+
+    /// Append an element, spilling to the heap when the inline
+    /// capacity `N` is exceeded.
+    pub fn push(&mut self, v: T) {
+        if let Some(vec) = &mut self.heap {
+            vec.push(v);
+            return;
+        }
+        if self.len < N {
+            self.inline[self.len].write(v);
+            self.len += 1;
+        } else {
+            self.spill(N + 1).push(v);
+        }
+    }
+
+    /// Drop every element; keeps the heap allocation if one exists.
+    pub fn clear(&mut self) {
+        if let Some(vec) = &mut self.heap {
+            vec.clear();
+        } else {
+            for slot in &mut self.inline[..self.len] {
+                // SAFETY: the first `len` inline slots are initialized;
+                // `len` is reset below so they are never touched again.
+                unsafe { slot.assume_init_drop() };
+            }
+            self.len = 0;
+        }
+    }
+
+    /// Move the inline elements into a fresh heap `Vec` (cold path).
+    fn spill(&mut self, cap: usize) -> &mut Vec<T> {
+        debug_assert!(self.heap.is_none());
+        let mut vec = Vec::with_capacity(cap.max(self.len));
+        for slot in &self.inline[..self.len] {
+            // SAFETY: the first `len` inline slots are initialized and
+            // ownership moves into `vec`; `len` is reset immediately so
+            // the slots are never read or dropped again.
+            vec.push(unsafe { slot.assume_init_read() });
+        }
+        self.len = 0;
+        self.heap = Some(vec);
+        self.heap.as_mut().expect("just set")
+    }
+}
+
+impl<T, const N: usize> Default for SmallVec<T, N> {
+    fn default() -> Self {
+        SmallVec::new()
+    }
+}
+
+impl<T, const N: usize> Drop for SmallVec<T, N> {
+    fn drop(&mut self) {
+        if self.heap.is_none() {
+            for slot in &mut self.inline[..self.len] {
+                // SAFETY: per the struct invariant these slots are
+                // initialized and this is the final owner.
+                unsafe { slot.assume_init_drop() };
+            }
+        }
+    }
+}
+
+impl<T, const N: usize> Deref for SmallVec<T, N> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match &self.heap {
+            Some(vec) => vec,
+            // SAFETY: the first `len` inline slots are initialized and
+            // `MaybeUninit<T>` is layout-identical to `T`.
+            None => unsafe {
+                std::slice::from_raw_parts(self.inline.as_ptr().cast::<T>(), self.len)
+            },
+        }
+    }
+}
+
+impl<T, const N: usize> DerefMut for SmallVec<T, N> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        match &mut self.heap {
+            Some(vec) => vec,
+            // SAFETY: as in `deref`, plus exclusive access via `&mut`.
+            None => unsafe {
+                std::slice::from_raw_parts_mut(self.inline.as_mut_ptr().cast::<T>(), self.len)
+            },
+        }
+    }
+}
+
+impl<T, const N: usize> FromIterator<T> for SmallVec<T, N> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Self {
+        let mut sv = SmallVec::new();
+        sv.extend(iter);
+        sv
+    }
+}
+
+impl<T, const N: usize> Extend<T> for SmallVec<T, N> {
+    fn extend<I: IntoIterator<Item = T>>(&mut self, iter: I) {
+        let iter = iter.into_iter();
+        // Spill up front when the iterator is provably too large for
+        // the inline buffer, so we don't move elements twice.
+        let (lower, _) = iter.size_hint();
+        if self.heap.is_none() && self.len + lower > N {
+            self.spill(self.len + lower);
+        }
+        for v in iter {
+            self.push(v);
+        }
+    }
+}
+
+impl<T, const N: usize> From<Vec<T>> for SmallVec<T, N> {
+    /// Wraps an existing `Vec` as the heap storage (the allocation is
+    /// already paid; moving elements inline would gain nothing).
+    fn from(vec: Vec<T>) -> Self {
+        SmallVec {
+            // SAFETY: see `SmallVec::new`.
+            inline: unsafe { MaybeUninit::uninit().assume_init() },
+            len: 0,
+            heap: Some(vec),
+        }
+    }
+}
+
+impl<T: Clone, const N: usize> Clone for SmallVec<T, N> {
+    fn clone(&self) -> Self {
+        self.iter().cloned().collect()
+    }
+}
+
+impl<T: fmt::Debug, const N: usize> fmt::Debug for SmallVec<T, N> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: PartialEq, const N: usize> PartialEq for SmallVec<T, N> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: Eq, const N: usize> Eq for SmallVec<T, N> {}
+
+/// Consuming iterator over a [`SmallVec`].
+pub enum IntoIter<T, const N: usize> {
+    /// Elements had spilled; delegate to the `Vec` iterator.
+    Heap(std::vec::IntoIter<T>),
+    /// Elements live inline; `[next, len)` are still owned here.
+    Inline {
+        /// The inline buffer, moved out of the `SmallVec`.
+        buf: [MaybeUninit<T>; N],
+        /// Index of the next element to yield.
+        next: usize,
+        /// One past the last initialized slot.
+        len: usize,
+    },
+}
+
+impl<T, const N: usize> IntoIterator for SmallVec<T, N> {
+    type Item = T;
+    type IntoIter = IntoIter<T, N>;
+    fn into_iter(self) -> IntoIter<T, N> {
+        // `SmallVec` has a `Drop` impl, so fields cannot be moved out
+        // directly; `ManuallyDrop` suppresses the drop while ownership
+        // of the storage transfers to the iterator.
+        let mut me = ManuallyDrop::new(self);
+        match me.heap.take() {
+            Some(vec) => IntoIter::Heap(vec.into_iter()),
+            None => IntoIter::Inline {
+                // SAFETY: `me` is ManuallyDrop, so the buffer has a
+                // single owner (the iterator) from here on.
+                buf: unsafe { std::ptr::read(&me.inline) },
+                next: 0,
+                len: me.len,
+            },
+        }
+    }
+}
+
+impl<'a, T, const N: usize> IntoIterator for &'a SmallVec<T, N> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+impl<'a, T, const N: usize> IntoIterator for &'a mut SmallVec<T, N> {
+    type Item = &'a mut T;
+    type IntoIter = std::slice::IterMut<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter_mut()
+    }
+}
+
+impl<T, const N: usize> Iterator for IntoIter<T, N> {
+    type Item = T;
+    fn next(&mut self) -> Option<T> {
+        match self {
+            IntoIter::Heap(it) => it.next(),
+            IntoIter::Inline { buf, next, len } => {
+                if next < len {
+                    // SAFETY: slots `[next, len)` are initialized and
+                    // owned by the iterator; advancing `next` transfers
+                    // this one out exactly once.
+                    let v = unsafe { buf[*next].assume_init_read() };
+                    *next += 1;
+                    Some(v)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = match self {
+            IntoIter::Heap(it) => it.len(),
+            IntoIter::Inline { next, len, .. } => len - next,
+        };
+        (n, Some(n))
+    }
+}
+
+impl<T, const N: usize> ExactSizeIterator for IntoIter<T, N> {}
+
+impl<T, const N: usize> Drop for IntoIter<T, N> {
+    fn drop(&mut self) {
+        if let IntoIter::Inline { buf, next, len } = self {
+            for slot in &mut buf[*next..*len] {
+                // SAFETY: the un-yielded tail `[next, len)` is still
+                // initialized and owned by the iterator.
+                unsafe { slot.assume_init_drop() };
+            }
+            *len = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::rc::Rc;
+
+    type Sv4 = SmallVec<u32, 4>;
+
+    #[test]
+    fn stays_inline_up_to_capacity() {
+        let mut v = Sv4::new();
+        assert!(v.is_empty() && !v.spilled());
+        for i in 0..4 {
+            v.push(i);
+        }
+        assert_eq!(&*v, &[0, 1, 2, 3]);
+        assert!(!v.spilled(), "4 elements must fit inline in SmallVec<_, 4>");
+        v.push(4);
+        assert!(v.spilled());
+        assert_eq!(&*v, &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn collect_iterate_index_mutate() {
+        let mut v: SmallVec<u32, 2> = (0..6).collect();
+        assert!(v.spilled());
+        assert_eq!(v.len(), 6);
+        assert_eq!(v[3], 3);
+        v[3] = 33;
+        for x in v.iter_mut() {
+            *x += 1;
+        }
+        let out: Vec<u32> = v.into_iter().collect();
+        assert_eq!(out, vec![1, 2, 3, 34, 5, 6]);
+
+        let small: Sv4 = (0..3).collect();
+        assert!(!small.spilled());
+        assert_eq!(small.iter().sum::<u32>(), 3);
+        assert_eq!(small.into_iter().collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn clone_eq_debug_from_vec() {
+        let a: Sv4 = (10..13).collect();
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_eq!(format!("{a:?}"), "[10, 11, 12]");
+        let c: Sv4 = vec![10, 11, 12].into();
+        assert!(c.spilled());
+        assert_eq!(&*a, &*c, "From<Vec> preserves contents");
+    }
+
+    #[test]
+    fn clear_resets_both_modes() {
+        let mut v: Sv4 = (0..3).collect();
+        v.clear();
+        assert!(v.is_empty());
+        v.extend(0..10);
+        assert!(v.spilled());
+        v.clear();
+        assert!(v.is_empty());
+        v.push(7);
+        assert_eq!(&*v, &[7]);
+    }
+
+    /// Every element is dropped exactly once in every mode: inline
+    /// drop, heap drop, fully-consumed iterator, and a half-consumed
+    /// iterator whose tail the iterator's own Drop must release.
+    #[test]
+    fn drops_each_element_exactly_once() {
+        let probe = Rc::new(());
+        {
+            let mut inline: SmallVec<Rc<()>, 4> = SmallVec::new();
+            let mut heap: SmallVec<Rc<()>, 2> = SmallVec::new();
+            for _ in 0..3 {
+                inline.push(probe.clone());
+                heap.push(probe.clone());
+            }
+            assert!(!inline.spilled() && heap.spilled());
+            assert_eq!(Rc::strong_count(&probe), 7);
+
+            let mut it = inline.into_iter();
+            assert!(it.next().is_some()); // yielded value dropped here
+            drop(it); // tail of 2 dropped by IntoIter::drop
+            assert_eq!(Rc::strong_count(&probe), 4);
+
+            for rc in heap {
+                drop(rc);
+            }
+            assert_eq!(Rc::strong_count(&probe), 1);
+        }
+        assert_eq!(Rc::strong_count(&probe), 1);
+    }
+
+    #[test]
+    fn extend_pre_spills_on_size_hint() {
+        let mut v: Sv4 = SmallVec::new();
+        v.push(1);
+        v.extend(vec![2, 3, 4, 5]); // 1 + 4 > 4 → single spill up front
+        assert!(v.spilled());
+        assert_eq!(&*v, &[1, 2, 3, 4, 5]);
+    }
+}

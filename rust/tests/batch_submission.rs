@@ -1,0 +1,365 @@
+//! Batched write-family coverage, cross-runtime:
+//!
+//! * batch/loop equivalence at the ENGINE level — the same logical
+//!   workload submitted as ONE `submit_batch_templated` call or as N
+//!   sequential `submit_single_write_templated` calls produces, on
+//!   identically-seeded DES clusters, byte-identical per-NIC streams
+//!   (tx and rx of every NIC) and identical landed payloads: the
+//!   batch's single `bump_n(N)` rotation commit routes exactly like N
+//!   single `bump()`s;
+//! * the same equivalence observed through payloads + imm totals on
+//!   BOTH runtimes (per-NIC counters are a DES-only observable);
+//! * all-or-nothing rejection — a batch with one bad entry routes
+//!   NOTHING and does not advance the rotation cursor;
+//! * `chaos_` mid-batch failover — a NIC dies while a batch is in
+//!   flight; only the failed WRs are resubmitted (Resubmit/retarget
+//!   contract) and every entry lands exactly once, proven by the
+//!   count-gated immediate retiring at exactly N.
+
+use fabric_lib::engine::api::{MrDesc, ScatterDst, TemplatedDst};
+use fabric_lib::engine::traits::{
+    expect_flag, run_on_both, Cluster, Notify, RuntimeKind, TransferEngine,
+};
+use fabric_lib::fabric::chaos::ChaosProfile;
+use fabric_lib::fabric::nic::NicAddr;
+use fabric_lib::fabric::profile::{GpuProfile, NicProfile};
+
+/// The shared workload: four templated writes to two peers (mixed
+/// lengths, offsets, both peers interleaved) with a count-gated
+/// immediate, then three untemplated writes without one.
+const IMM: u32 = 0x8A7;
+
+fn templated_entries() -> Vec<TemplatedDst> {
+    vec![
+        TemplatedDst { peer: 0, len: 300, src: 0, dst: 100 },
+        TemplatedDst { peer: 1, len: 1024, src: 512, dst: 0 },
+        TemplatedDst { peer: 0, len: 200, src: 1536, dst: 3000 },
+        TemplatedDst { peer: 1, len: 64, src: 2048, dst: 4096 },
+    ]
+}
+
+/// Run the workload on a fresh DES cluster, batched or looped, and
+/// return (landed payloads, per-NIC (tx, rx) counters).
+fn run_workload(batched: bool) -> (Vec<Vec<u8>>, Vec<(u64, u64)>) {
+    let mut cluster = Cluster::new(RuntimeKind::Des, 3, 1, 2, 0xBA7C);
+    let net = cluster.des_net().expect("DES cluster");
+    let payloads = {
+        let (mut cx, engines) = cluster.parts();
+        let sender = engines[0];
+        let (src, _) = sender.alloc_mr(0, 4096);
+        let fill: Vec<u8> = (0..4096u32).map(|i| (i % 249) as u8 + 1).collect();
+        src.buf.write(0, &fill);
+        let regions: Vec<_> = engines[1..].iter().map(|e| e.alloc_mr(0, 8192)).collect();
+        let descs: Vec<MrDesc> = regions.iter().map(|(_, d)| d.clone()).collect();
+        let group =
+            sender.add_peer_group(engines[1..].iter().map(|e| e.main_address()).collect());
+        sender.bind_peer_group_mrs(0, group, &descs).unwrap();
+
+        // Phase 1: templated, imm-gated (2 entries per receiver).
+        let got0 = expect_flag(engines[1], &mut cx, 0, IMM, 2);
+        let got1 = expect_flag(engines[2], &mut cx, 0, IMM, 2);
+        let entries = templated_entries();
+        if batched {
+            sender
+                .submit_batch_templated(&mut cx, &src, group, &entries, Some(IMM), Notify::Noop)
+                .unwrap();
+        } else {
+            for d in &entries {
+                sender
+                    .submit_single_write_templated(
+                        &mut cx,
+                        (&src, d.src),
+                        d.len,
+                        group,
+                        d.peer,
+                        d.dst,
+                        Some(IMM),
+                        Notify::Noop,
+                    )
+                    .unwrap();
+            }
+        }
+        cx.wait(&got0);
+        cx.wait(&got1);
+
+        // Phase 2: untemplated, no imm — exercises
+        // `submit_write_batch` against the same rotation cursor.
+        let scatter: Vec<ScatterDst> = vec![
+            ScatterDst { len: 512, src: 0, dst: (descs[0].clone(), 5000) },
+            ScatterDst { len: 256, src: 1024, dst: (descs[1].clone(), 6000) },
+            ScatterDst { len: 128, src: 3000, dst: (descs[0].clone(), 7000) },
+        ];
+        if batched {
+            sender
+                .submit_write_batch(&mut cx, &src, &scatter, None, Notify::Noop)
+                .unwrap();
+        } else {
+            for d in &scatter {
+                sender
+                    .submit_single_write(
+                        &mut cx,
+                        (&src, d.src),
+                        d.len,
+                        (&d.dst.0, d.dst.1),
+                        None,
+                        Notify::Noop,
+                    )
+                    .unwrap();
+            }
+        }
+        cx.settle();
+        // Exactly-once: the satisfied expectations retired at 2 each.
+        assert_eq!(engines[1].imm_value(0, IMM), 0);
+        assert_eq!(engines[2].imm_value(0, IMM), 0);
+        assert!(sender.remove_peer_group(group));
+        regions.iter().map(|(h, _)| h.buf.to_vec()).collect::<Vec<_>>()
+    };
+    let mut nic_bytes = Vec::new();
+    for node in 0..3u16 {
+        for nic in 0..2u8 {
+            nic_bytes.push(net.nic_bytes(NicAddr { node, gpu: 0, nic }));
+        }
+    }
+    cluster.shutdown();
+    (payloads, nic_bytes)
+}
+
+/// Acceptance gate for the batch fast path: one batch must emit the
+/// SAME WR stream as N sequential singles — identical per-NIC byte
+/// counters and identical landed payloads under a deterministic,
+/// identically-seeded fabric.
+#[test]
+fn batch_emits_identical_wr_stream_to_loop() {
+    let (loop_payloads, loop_nics) = run_workload(false);
+    let (batch_payloads, batch_nics) = run_workload(true);
+    assert_eq!(loop_payloads, batch_payloads, "landed bytes diverged");
+    assert_eq!(loop_nics, batch_nics, "per-NIC byte streams diverged");
+}
+
+/// The same batch/loop equivalence on BOTH runtimes, through the
+/// observables both share: landed payloads and imm totals. One
+/// cluster, two destination region sets — the loop writes one, the
+/// batch the other, and the landed images must agree byte for byte.
+#[test]
+fn batch_equals_loop_on_both_runtimes() {
+    run_on_both(3, 1, 2, 0xB07C, |cx, engines| {
+        let sender = engines[0];
+        let (src, _) = sender.alloc_mr(0, 4096);
+        let fill: Vec<u8> = (0..4096u32).map(|i| (i % 193) as u8 + 1).collect();
+        src.buf.write(0, &fill);
+        let entries = templated_entries();
+
+        let mut images: Vec<Vec<Vec<u8>>> = Vec::new();
+        for (imm, batched) in [(0xA1u32, false), (0xB1u32, true)] {
+            let regions: Vec<_> =
+                engines[1..].iter().map(|e| e.alloc_mr(0, 8192)).collect();
+            let descs: Vec<MrDesc> = regions.iter().map(|(_, d)| d.clone()).collect();
+            let group = sender
+                .add_peer_group(engines[1..].iter().map(|e| e.main_address()).collect());
+            sender.bind_peer_group_mrs(0, group, &descs).unwrap();
+            let got0 = expect_flag(engines[1], cx, 0, imm, 2);
+            let got1 = expect_flag(engines[2], cx, 0, imm, 2);
+            if batched {
+                sender
+                    .submit_batch_templated(cx, &src, group, &entries, Some(imm), Notify::Noop)
+                    .unwrap();
+            } else {
+                for d in &entries {
+                    sender
+                        .submit_single_write_templated(
+                            cx,
+                            (&src, d.src),
+                            d.len,
+                            group,
+                            d.peer,
+                            d.dst,
+                            Some(imm),
+                            Notify::Noop,
+                        )
+                        .unwrap();
+                }
+            }
+            cx.wait(&got0);
+            cx.wait(&got1);
+            assert_eq!(engines[1].imm_value(0, imm), 0, "retired at exactly 2");
+            assert_eq!(engines[2].imm_value(0, imm), 0, "retired at exactly 2");
+            assert!(sender.remove_peer_group(group));
+            images.push(regions.iter().map(|(h, _)| h.buf.to_vec()).collect());
+        }
+        assert_eq!(images[0], images[1], "loop and batch landed different bytes");
+    });
+}
+
+/// All-or-nothing: a batch with one out-of-range entry is rejected as
+/// a whole — nothing routes, nothing posts, and the rotation cursor
+/// does not move (the next good submission routes exactly as if the
+/// bad batch had never been offered).
+#[test]
+fn rejected_batch_routes_nothing_and_freezes_rotation() {
+    run_on_both(2, 1, 2, 0x0BAD, |cx, engines| {
+        let sender = engines[0];
+        let (src, _) = sender.alloc_mr(0, 1024);
+        src.buf.write(0, &[7u8; 1024]);
+        let (dst_h, dst_d) = engines[1].alloc_mr(0, 4096);
+        let group = sender.add_peer_group(vec![engines[1].main_address()]);
+        sender.bind_peer_group_mrs(0, group, &[dst_d.clone()]).unwrap();
+
+        // Entry 1 overruns the bound region: the whole batch must err.
+        let bad = vec![
+            TemplatedDst { peer: 0, len: 64, src: 0, dst: 0 },
+            TemplatedDst { peer: 0, len: 64, src: 0, dst: 4095 },
+        ];
+        assert!(sender
+            .submit_batch_templated(cx, &src, group, &bad, Some(0xE1), Notify::Noop)
+            .is_err());
+        // A bad untemplated batch (fanout mismatch) is equally atomic.
+        let mut short = dst_d.clone();
+        short.rkeys.truncate(1);
+        let bad_scatter = vec![
+            ScatterDst { len: 64, src: 0, dst: (dst_d.clone(), 0) },
+            ScatterDst { len: 64, src: 64, dst: (short, 0) },
+        ];
+        assert!(sender
+            .submit_write_batch(cx, &src, &bad_scatter, None, Notify::Noop)
+            .is_err());
+        cx.settle();
+        // Nothing landed, no imm ticked.
+        assert!(dst_h.buf.to_vec().iter().all(|&b| b == 0), "rejected batch leaked a write");
+        assert_eq!(engines[1].imm_value(0, 0xE1), 0);
+
+        // The cursor did not move: a good batch still lands cleanly.
+        let good = vec![
+            TemplatedDst { peer: 0, len: 64, src: 0, dst: 0 },
+            TemplatedDst { peer: 0, len: 64, src: 64, dst: 2048 },
+        ];
+        let got = expect_flag(engines[1], cx, 0, 0xE2, 2);
+        sender
+            .submit_batch_templated(cx, &src, group, &good, Some(0xE2), Notify::Noop)
+            .unwrap();
+        cx.wait(&got);
+        let v = dst_h.buf.to_vec();
+        assert!(v[..64].iter().all(|&b| b == 7));
+        assert!(v[2048..2112].iter().all(|&b| b == 7));
+        assert!(sender.remove_peer_group(group));
+    });
+}
+
+/// Mid-batch failover: one of the sender's two NICs dies while a
+/// batched submission's WRs are in flight. The Resubmit/retarget
+/// contract resubmits ONLY the failed WRs onto surviving lanes —
+/// every entry lands exactly once (the count-gated immediate retires
+/// at exactly N; a lost WR would hang the wait, a duplicate would
+/// leave a nonzero residue) with intact payloads.
+#[test]
+fn chaos_mid_batch_nic_death_resubmits_only_failed_wrs() {
+    let entries = 8u32;
+    let len = 256u64 << 10;
+    let mut cluster = Cluster::new_with(
+        RuntimeKind::Des,
+        2,
+        1,
+        2,
+        0xC4A5,
+        NicProfile::efa(),
+        GpuProfile::h100(),
+    );
+    let engines = cluster.engines_rc();
+    {
+        let (mut cx, _) = cluster.parts();
+        let sender = &engines[0];
+        let receiver = &engines[1];
+        let region = (entries as u64 * len) as usize;
+        let (src, _) = sender.alloc_mr(0, region);
+        for i in 0..entries {
+            src.buf
+                .write((i as u64 * len) as usize, &vec![i as u8 + 1; len as usize]);
+        }
+        let (dst_h, dst_d) = receiver.alloc_mr(0, region);
+
+        // Kill the sender's second NIC 20 µs in — deep inside the
+        // batch's multi-WR flight (8 × 256 KiB ≈ 80 µs on this NIC).
+        let dying = sender.group_address(0).nics[1];
+        sender.inject_chaos(&mut cx, &ChaosProfile::new(0xC4A6).nic_down(20_000, dying));
+
+        let group = sender.add_peer_group(vec![receiver.main_address()]);
+        sender.bind_peer_group_mrs(0, group, &[dst_d]).unwrap();
+        let dsts: Vec<TemplatedDst> = (0..entries)
+            .map(|i| TemplatedDst {
+                peer: 0,
+                len,
+                src: i as u64 * len,
+                dst: i as u64 * len,
+            })
+            .collect();
+        let got = expect_flag(&**receiver, &mut cx, 0, 0x77, entries);
+        sender
+            .submit_batch_templated(&mut cx, &src, group, &dsts, Some(0x77), Notify::Noop)
+            .unwrap();
+        cx.wait(&got);
+        cx.settle();
+
+        // Exactly once: retired at exactly `entries`, zero residue.
+        assert_eq!(receiver.imm_value(0, 0x77), 0);
+        // Zero lost payload: every entry's bytes are intact.
+        let v = dst_h.buf.to_vec();
+        for i in 0..entries {
+            let off = (i as u64 * len) as usize;
+            assert!(
+                v[off..off + len as usize].iter().all(|&b| b == i as u8 + 1),
+                "entry {i} corrupted across failover"
+            );
+        }
+        // The outage was real and the dead lane is masked out.
+        assert!(sender.transport_errors() >= 1, "no WR was in flight at the kill");
+        assert_eq!(sender.nic_health_mask(0), 0b01, "NIC 1 masked out");
+        assert!(sender.remove_peer_group(group));
+    }
+    cluster.shutdown();
+}
+
+/// Same-seed chaos runs agree exactly — failover resubmission is as
+/// deterministic as the happy path.
+#[test]
+fn chaos_mid_batch_failover_is_deterministic() {
+    let run = || {
+        let mut cluster = Cluster::new_with(
+            RuntimeKind::Des,
+            2,
+            1,
+            2,
+            0xC4A7,
+            NicProfile::efa(),
+            GpuProfile::h100(),
+        );
+        let net = cluster.des_net().expect("DES cluster");
+        let errors = {
+            let (mut cx, engines) = cluster.parts();
+            let sender = engines[0];
+            let (src, _) = sender.alloc_mr(0, 1 << 20);
+            let (_h, dst_d) = engines[1].alloc_mr(0, 1 << 20);
+            let dying = sender.group_address(0).nics[1];
+            sender.inject_chaos(&mut cx, &ChaosProfile::new(0xC4A8).nic_down(10_000, dying));
+            let group = sender.add_peer_group(vec![engines[1].main_address()]);
+            sender.bind_peer_group_mrs(0, group, &[dst_d]).unwrap();
+            let dsts: Vec<TemplatedDst> = (0..8u64)
+                .map(|i| TemplatedDst { peer: 0, len: 128 << 10, src: 0, dst: i * (128 << 10) })
+                .collect();
+            let got = expect_flag(engines[1], &mut cx, 0, 0x78, 8);
+            sender
+                .submit_batch_templated(&mut cx, &src, group, &dsts, Some(0x78), Notify::Noop)
+                .unwrap();
+            cx.wait(&got);
+            cx.settle();
+            sender.transport_errors()
+        };
+        let bytes: Vec<_> = (0..2u16)
+            .flat_map(|node| {
+                (0..2u8).map(move |nic| NicAddr { node, gpu: 0, nic })
+            })
+            .map(|a| net.nic_bytes(a))
+            .collect();
+        cluster.shutdown();
+        (errors, bytes)
+    };
+    assert_eq!(run(), run(), "same-seed failover runs must agree exactly");
+}

@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Compare a regenerated bench report against a committed baseline.
+
+Usage: bench_diff.py BASELINE.json NEW.json [--tolerance PCT]
+
+Both files are the section/headline JSON the benches emit via
+`--json` (see README "Benches"). Every numeric headline present in
+BOTH files is compared; relative deviations beyond the tolerance
+(default 30%) are printed as warnings. Non-numeric fields (e.g.
+`provenance`) and headlines present on only one side are reported
+informationally.
+
+Warn-only by design: always exits 0. The perf gates that should FAIL
+CI live inside the benches themselves (proxy_overhead asserts
+batched < looped); this script is the trend report for the pinned
+BENCH_*.json trajectory.
+"""
+
+import json
+import sys
+
+
+def flatten(doc, prefix=""):
+    out = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            out.update(flatten(v, prefix + k + "."))
+    else:
+        out[prefix.rstrip(".")] = doc
+    return out
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    tol = 0.30
+    if "--tolerance" in sys.argv:
+        tol = float(sys.argv[sys.argv.index("--tolerance") + 1]) / 100.0
+    if len(args) != 2:
+        print(__doc__)
+        return
+    try:
+        with open(args[0]) as fh:
+            base = flatten(json.load(fh))
+        with open(args[1]) as fh:
+            new = flatten(json.load(fh))
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read reports ({e}); skipping (warn-only)")
+        return
+
+    warned = 0
+    for key in sorted(set(base) | set(new)):
+        b, n = base.get(key), new.get(key)
+        if key.endswith("provenance"):
+            continue
+        if b is None or n is None:
+            side = "baseline" if n is None else "regenerated"
+            print(f"  note: {key} only in {side} report")
+            continue
+        if not isinstance(b, (int, float)) or not isinstance(n, (int, float)):
+            continue
+        if b == 0:
+            if n != 0:
+                print(f"  WARN {key}: baseline 0, now {n}")
+                warned += 1
+            continue
+        dev = (n - b) / abs(b)
+        marker = "WARN" if abs(dev) > tol else "  ok"
+        if abs(dev) > tol:
+            warned += 1
+        print(f"  {marker} {key}: {b} -> {n} ({dev:+.1%})")
+
+    if warned:
+        print(
+            f"bench_diff: {warned} headline(s) deviate more than "
+            f"{tol:.0%} from the committed baseline (warn-only; update "
+            f"BENCH_*.json deliberately if the change is intended)"
+        )
+    else:
+        print("bench_diff: all shared headlines within tolerance")
+
+
+if __name__ == "__main__":
+    main()
