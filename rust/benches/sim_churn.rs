@@ -1,0 +1,230 @@
+//! Scheduler churn + scaled serving sweep for the timer-wheel DES core.
+//!
+//! Usage: cargo bench --bench sim_churn [-- --quick] [--json PATH]
+//!
+//! Two parts:
+//!
+//! 1. **Churn**: 10⁶ schedule/fire/cancel events (10⁷ without
+//!    `--quick`) across delays spanning every wheel level, from 1024
+//!    concurrent self-rearming timer chains plus a rolling ring of
+//!    cancelled guard timers. After a warmup run brings the arena,
+//!    heap and guard ring to steady state, the measured run must
+//!    perform **zero heap allocations** — asserted via the
+//!    [`CountingAlloc`] global allocator installed in this binary.
+//! 2. **Serving sweep**: the ≥1000-node, 10⁶-request kvcache scenario
+//!    (seeded open-loop Poisson arrivals, power-of-two-choices
+//!    dispatch, per-request guard timers → 10⁶ cancellations). Asserts
+//!    bounded peak-pending depth and the scheduler memory budget, and
+//!    emits TTFT p50/p99/p99.9 headlines.
+//!
+//! `--json PATH` merges the headlines into the report at PATH under
+//! the `sim_churn` section (pinned as BENCH_sim.json).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::rc::Rc;
+
+use fabric_lib::apps::kvcache::{run_serving, Arrivals, PoissonArrivals, ServingConfig};
+use fabric_lib::sim::time::{fmt_ns, MS, SEC, US};
+use fabric_lib::sim::{EventId, Rng, Sim};
+use fabric_lib::util::alloc_probe::{alloc_count, CountingAlloc};
+use fabric_lib::util::json::{update_report, Json};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Concurrent self-rearming timer chains.
+const CHAINS: usize = 1024;
+/// Rolling window of live guard timers (cancel targets).
+const GUARD_RING: usize = 512;
+
+struct Churn {
+    rng: Rng,
+    fired: u64,
+    target: u64,
+    guards: VecDeque<EventId>,
+}
+
+fn tick(sim: &mut Sim, st: &Rc<RefCell<Churn>>) {
+    let (delay, guard_roll) = {
+        let mut b = st.borrow_mut();
+        b.fired += 1;
+        if b.fired >= b.target {
+            return; // this chain ends
+        }
+        let delay = match b.rng.below(5) {
+            0 => b.rng.below(1000),      // near: same level-0 bucket
+            1 => b.rng.below(100 * US),  // level 0
+            2 => b.rng.below(10 * MS),   // levels 0–1
+            3 => b.rng.below(500 * MS),  // mid levels
+            _ => b.rng.below(30 * SEC),  // far future
+        };
+        (delay, b.rng.below(4) == 0)
+    };
+    if guard_roll {
+        // Schedule a far-out guard and cancel the oldest one — the
+        // cancel-heavy pattern (heartbeats, request timeouts) that
+        // leaked tombstones in the legacy scheduler.
+        let id = sim.after(60 * SEC, |_| {});
+        let victim = {
+            let mut b = st.borrow_mut();
+            b.guards.push_back(id);
+            if b.guards.len() > GUARD_RING {
+                b.guards.pop_front()
+            } else {
+                None
+            }
+        };
+        if let Some(old) = victim {
+            sim.cancel(old);
+        }
+    }
+    let stc = st.clone();
+    sim.after(delay, move |sim| tick(sim, &stc));
+}
+
+/// Seed `CHAINS` churn chains targeting `target` total fires. The
+/// state allocation happens here, outside the measured window; the
+/// caller runs `sim.run()` (allocation-free once warmed).
+fn churn_seed(sim: &mut Sim, seed: u64, target: u64) {
+    let st = Rc::new(RefCell::new(Churn {
+        rng: Rng::new(seed),
+        fired: 0,
+        target,
+        guards: VecDeque::with_capacity(GUARD_RING + 1),
+    }));
+    for _ in 0..CHAINS {
+        let stc = st.clone();
+        sim.after(1, move |sim| tick(sim, &stc));
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--fast" || a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut headlines: BTreeMap<String, Json> = BTreeMap::new();
+
+    // ---- Part 1: schedule/fire/cancel churn --------------------------
+    let churn_events: u64 = if quick { 1_000_000 } else { 10_000_000 };
+    let mut sim = Sim::new();
+    // Warmup run grows the arena/heap/ring to steady-state capacity.
+    churn_seed(&mut sim, 7, 200_000);
+    sim.run();
+    let warm_slots = sim.arena_slots();
+    churn_seed(&mut sim, 8, churn_events);
+    let allocs_before = alloc_count();
+    let wall = std::time::Instant::now();
+    sim.run();
+    let wall_ns = wall.elapsed().as_nanos() as u64;
+    let steady_allocs = alloc_count() - allocs_before;
+    let st = sim.stats();
+
+    println!("sim_churn: {churn_events} events in {}", fmt_ns(wall_ns));
+    println!(
+        "  scheduled {} executed {} cancelled {} peak_pending {}",
+        st.scheduled, st.executed, st.cancelled, st.peak_pending
+    );
+    println!(
+        "  arena {} slots (warmup {}), ~{} KiB containers, steady-state allocs {}",
+        sim.arena_slots(),
+        warm_slots,
+        sim.approx_mem_bytes() / 1024,
+        steady_allocs
+    );
+    assert_eq!(
+        steady_allocs, 0,
+        "after warmup, the schedule/fire/cancel churn must not touch \
+         the heap: the after() fast path is required to be allocation-free"
+    );
+    assert!(
+        st.executed >= churn_events,
+        "churn under-ran: {} events",
+        st.executed
+    );
+    // Slot reuse: O(peak-pending), not O(total-events).
+    assert!(
+        (sim.arena_slots() as u64) < churn_events / 10,
+        "arena grew with total events ({} slots)",
+        sim.arena_slots()
+    );
+    headlines.insert("churn_events".into(), Json::from(churn_events));
+    headlines.insert("churn_steady_allocs".into(), Json::from(steady_allocs));
+    headlines.insert(
+        "churn_arena_slots".into(),
+        Json::from(sim.arena_slots() as u64),
+    );
+
+    // ---- Part 2: scaled kvcache serving sweep ------------------------
+    let (prefillers, decoders, requests) = (640usize, 384usize, 1_000_000usize);
+    let nodes = prefillers + decoders;
+    let cfg = ServingConfig::scaled(prefillers, decoders, requests);
+    let mem_budget = cfg.mem_budget_bytes;
+    // ~0.7 utilization for the 2K/4K/8K mix on 640 prefillers.
+    let arrivals = Arrivals::Poisson(PoissonArrivals::new(
+        0xA11C,
+        600 * US,
+        vec![2048, 4096, 8192],
+    ));
+    let wall = std::time::Instant::now();
+    let rep = run_serving(cfg, arrivals);
+    let serve_wall_ns = wall.elapsed().as_nanos() as u64;
+
+    println!(
+        "\nserving sweep: {nodes} nodes, {} requests in {} wall ({} virtual)",
+        rep.completed,
+        fmt_ns(serve_wall_ns),
+        fmt_ns(rep.end_ns)
+    );
+    println!(
+        "  TTFT p50 {} p99 {} p999 {}  (timeouts {})",
+        fmt_ns(rep.ttft.p50),
+        fmt_ns(rep.ttft.p99),
+        fmt_ns(rep.ttft.p999),
+        rep.timeouts
+    );
+    println!(
+        "  scheduler: peak_pending {} arena {} slots ~{} KiB (budget {} KiB), {} cancels",
+        rep.sim.peak_pending,
+        rep.arena_slots,
+        rep.approx_mem_bytes / 1024,
+        mem_budget / 1024,
+        rep.sim.cancelled
+    );
+    assert_eq!(rep.completed as usize, requests, "sweep must complete");
+    assert_eq!(rep.timeouts, 0, "guard timers must not fire at this load");
+    assert!(
+        rep.sim.peak_pending < 50_000,
+        "peak pending {} not bounded — open-loop arrivals piled up",
+        rep.sim.peak_pending
+    );
+    assert!(
+        rep.sim.cancelled >= requests as u64,
+        "every request cancels its guard timer"
+    );
+
+    headlines.insert("serving_nodes".into(), Json::from(nodes as u64));
+    headlines.insert("serving_requests".into(), Json::from(rep.completed));
+    headlines.insert("serving_ttft".into(), rep.ttft.headline_json());
+    headlines.insert(
+        "serving_peak_pending".into(),
+        Json::from(rep.sim.peak_pending),
+    );
+    headlines.insert(
+        "serving_sched_mem_bytes".into(),
+        Json::from(rep.approx_mem_bytes as u64),
+    );
+
+    if let Some(path) = json_path {
+        headlines.insert(
+            "provenance".to_string(),
+            Json::from("measured by sim_churn (DES, deterministic)"),
+        );
+        update_report(&path, "sim_churn", Json::Obj(headlines)).expect("write bench report");
+        println!("wrote sim_churn section to {path}");
+    }
+}

@@ -15,14 +15,17 @@
 //! until the prefiller acks, because a stale WRITE could clobber
 //! them), and heartbeat-based failure detection.
 
+pub mod arrivals;
 pub mod decoder;
 pub mod harness;
 pub mod layout;
 pub mod prefiller;
 pub mod proto;
 pub mod scheduler;
+pub mod serving;
 pub mod workload;
 
+pub use arrivals::{Arrival, Arrivals, PoissonArrivals, TraceArrivals};
 pub use decoder::Decoder;
 pub use harness::{
     run_generic_kv_push, run_kv_failover, run_kv_failover_on, run_kv_link_partition,
@@ -33,4 +36,5 @@ pub use layout::KvLayout;
 pub use prefiller::Prefiller;
 pub use proto::DispatchReq;
 pub use scheduler::Scheduler;
+pub use serving::{run_serving, ServingConfig, ServingReport};
 pub use workload::{PrefillComputeModel, ServingWorkload};

@@ -1,0 +1,366 @@
+//! Scaled kvcache serving scenario: thousands of prefiller/decoder
+//! nodes, millions of open-loop requests, played directly on the DES
+//! scheduler.
+//!
+//! Unlike the Table-3 harness (which drives real `TransferEngine`
+//! instances page-by-page), this is a *model-level* simulation sized
+//! for 10⁶-request sweeps: per-prefiller compute and NIC-link
+//! free-time cursors serialize the work, dispatch uses
+//! power-of-two-choices on compute backlog, and each request costs a
+//! constant handful of scheduler events —
+//!
+//! 1. its open-loop arrival (self-clocking: each arrival event
+//!    schedules the next, so pending arrivals never pile up),
+//! 2. prefill-compute completion on the chosen prefiller,
+//! 3. KV-transfer completion over that prefiller's NIC
+//!    ([`serialize_ns`] of the paged KV bytes + tail),
+//! 4. first-token completion after the decoder's decode pass, which
+//!    records TTFT and cancels
+//! 5. a per-request guard timeout — 10⁶ cancellations exercising the
+//!    scheduler's generation-tagged arena on every run.
+//!
+//! Every node also runs a self-rearming heartbeat timer (the pattern
+//! that leaked tombstones in the legacy scheduler). The report carries
+//! TTFT p50/p99/p99.9 plus the scheduler's own counters so callers
+//! (the `sim_churn` bench, tests) can assert bounded peak-pending
+//! depth and an explicit memory budget.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::sim::rng::Rng;
+use crate::sim::stats::{Histogram, Summary};
+use crate::sim::time::{serialize_ns, Duration, Instant, MS, SEC};
+use crate::sim::{Sim, SimStats};
+
+use super::arrivals::Arrivals;
+use super::workload::ServingWorkload;
+
+/// Configuration of a scaled serving sweep.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Prefiller nodes (each with one compute cursor and one NIC).
+    pub prefillers: usize,
+    /// Decoder nodes (heartbeat participants; decode passes are
+    /// charged per request without cross-request contention).
+    pub decoders: usize,
+    /// Per-prefiller NIC rate for KV transfers, in Gbps.
+    pub link_gbps: f64,
+    /// Stop after this many requests (the trace may end earlier).
+    pub requests: usize,
+    /// Timing model + KV layout.
+    pub workload: ServingWorkload,
+    /// Per-request guard timer; cancelled on completion. Fires (and
+    /// is counted) only if a request's TTFT exceeds it.
+    pub timeout_ns: Duration,
+    /// Heartbeat period for every node; 0 disables heartbeats.
+    pub heartbeat_ns: Duration,
+    /// When non-zero, `run_serving` asserts the scheduler's resident
+    /// footprint ([`Sim::approx_mem_bytes`]) stays under this budget.
+    pub mem_budget_bytes: usize,
+}
+
+impl ServingConfig {
+    /// The acceptance-scale sweep: `prefillers + decoders` nodes,
+    /// Qwen3-235B timing, 400 Gbps NICs, 60 s guard timers, 1 s
+    /// heartbeats, and a 64 MiB scheduler memory budget.
+    pub fn scaled(prefillers: usize, decoders: usize, requests: usize) -> Self {
+        ServingConfig {
+            prefillers,
+            decoders,
+            link_gbps: 400.0,
+            requests,
+            workload: ServingWorkload::qwen3_235b(8192),
+            timeout_ns: 60 * SEC,
+            heartbeat_ns: SEC,
+            mem_budget_bytes: 64 << 20,
+        }
+    }
+
+    /// Small configuration for unit tests.
+    pub fn small(requests: usize) -> Self {
+        ServingConfig {
+            prefillers: 8,
+            decoders: 8,
+            link_gbps: 400.0,
+            requests,
+            workload: ServingWorkload::qwen3_235b(8192),
+            timeout_ns: 60 * SEC,
+            heartbeat_ns: 100 * MS,
+            mem_budget_bytes: 16 << 20,
+        }
+    }
+}
+
+/// Outcome of one serving sweep.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    /// Requests that reached first token.
+    pub completed: u64,
+    /// Guard timers that fired before completion.
+    pub timeouts: u64,
+    /// TTFT distribution (ns): p50/p99/p999 are the headline columns.
+    pub ttft: Summary,
+    /// Scheduler counters for the whole run.
+    pub sim: SimStats,
+    /// Arena slots the scheduler grew to (O(peak-pending), not
+    /// O(total-events)).
+    pub arena_slots: usize,
+    /// Scheduler container footprint at end of run.
+    pub approx_mem_bytes: usize,
+    /// Virtual end-of-run time.
+    pub end_ns: Instant,
+}
+
+struct State {
+    cfg: ServingConfig,
+    arrivals: Arrivals,
+    /// Arrivals still allowed to launch.
+    to_launch: usize,
+    /// Per-prefiller compute free-time cursor.
+    comp_free: Vec<Instant>,
+    /// Per-prefiller NIC free-time cursor.
+    link_free: Vec<Instant>,
+    /// Dispatch randomness (power-of-two-choices probes).
+    rng: Rng,
+    ttft: Histogram,
+    completed: u64,
+    timeouts: u64,
+    /// Set once every launched request completed; heartbeats stop
+    /// rearming.
+    done_target: u64,
+    launched: u64,
+    draining: bool,
+}
+
+/// KV bytes moved for a request: one page per layer per 128-token
+/// page, plus the tail context write.
+fn kv_bytes(w: &ServingWorkload, seq: u32) -> u64 {
+    let pages = w.layout.pages_for(seq) as u64;
+    pages * w.layout.page_bytes * w.layout.layers as u64 + w.tail_bytes
+}
+
+fn pump_arrival(sim: &mut Sim, st: &Rc<RefCell<State>>) {
+    let next = {
+        let mut b = st.borrow_mut();
+        if b.to_launch == 0 {
+            b.draining = true;
+            None
+        } else {
+            b.to_launch -= 1;
+            let a = b.arrivals.next();
+            if a.is_none() {
+                // Trace exhausted early: complete what was launched.
+                b.draining = true;
+                b.done_target = b.launched;
+            }
+            a
+        }
+    };
+    let Some(a) = next else { return };
+    let stc = st.clone();
+    sim.at(a.at, move |sim| {
+        on_arrival(sim, &stc, a.seq_tokens);
+        pump_arrival(sim, &stc);
+    });
+}
+
+fn on_arrival(sim: &mut Sim, st: &Rc<RefCell<State>>, seq: u32) {
+    let now = sim.now();
+    let (p, comp_done, timeout_ns) = {
+        let mut b = st.borrow_mut();
+        b.launched += 1;
+        let n = b.comp_free.len() as u64;
+        let (i, j) = (b.rng.below(n) as usize, b.rng.below(n) as usize);
+        let p = if b.comp_free[i] <= b.comp_free[j] { i } else { j };
+        let start = b.comp_free[p].max(now);
+        let done = start.saturating_add(b.cfg.workload.total_prefill_ns(seq));
+        b.comp_free[p] = done;
+        (p, done, b.cfg.timeout_ns)
+    };
+    let stc = st.clone();
+    let guard = sim.after(timeout_ns, move |_| {
+        stc.borrow_mut().timeouts += 1;
+    });
+    let stc = st.clone();
+    sim.at(comp_done, move |sim| {
+        on_prefill_done(sim, &stc, p, now, seq, guard);
+    });
+}
+
+fn on_prefill_done(
+    sim: &mut Sim,
+    st: &Rc<RefCell<State>>,
+    p: usize,
+    arrived: Instant,
+    seq: u32,
+    guard: crate::sim::EventId,
+) {
+    let now = sim.now();
+    let xfer_done = {
+        let mut b = st.borrow_mut();
+        let bytes = kv_bytes(&b.cfg.workload, seq);
+        let start = b.link_free[p].max(now);
+        let done = start.saturating_add(serialize_ns(bytes, b.cfg.link_gbps));
+        b.link_free[p] = done;
+        done
+    };
+    let stc = st.clone();
+    sim.at(xfer_done, move |sim| {
+        let decode = stc.borrow().cfg.workload.compute.decode_pass_ns;
+        let stc2 = stc.clone();
+        sim.after(decode, move |sim| {
+            sim.cancel(guard);
+            let mut b = stc2.borrow_mut();
+            b.ttft.record(sim.now() - arrived);
+            b.completed += 1;
+        });
+    });
+}
+
+fn heartbeat(sim: &mut Sim, st: &Rc<RefCell<State>>, period: Duration) {
+    let stop = {
+        let b = st.borrow();
+        b.draining && b.completed >= b.done_target
+    };
+    if stop {
+        return;
+    }
+    let stc = st.clone();
+    sim.after(period, move |sim| heartbeat(sim, &stc, period));
+}
+
+/// Play `arrivals` through the serving model and summarize TTFT and
+/// scheduler behavior. Panics when a non-zero `mem_budget_bytes` is
+/// exceeded or no request completes.
+pub fn run_serving(cfg: ServingConfig, arrivals: Arrivals) -> ServingReport {
+    assert!(cfg.prefillers > 0 && cfg.requests > 0);
+    let mem_budget = cfg.mem_budget_bytes;
+    let heartbeat_ns = cfg.heartbeat_ns;
+    let nodes = cfg.prefillers + cfg.decoders;
+    let st = Rc::new(RefCell::new(State {
+        comp_free: vec![0; cfg.prefillers],
+        link_free: vec![0; cfg.prefillers],
+        to_launch: cfg.requests,
+        done_target: cfg.requests as u64,
+        arrivals,
+        rng: Rng::new(0x5EE7),
+        ttft: Histogram::new(),
+        completed: 0,
+        timeouts: 0,
+        launched: 0,
+        draining: false,
+        cfg,
+    }));
+
+    let mut sim = Sim::new();
+    if heartbeat_ns > 0 {
+        for node in 0..nodes {
+            // Stagger initial phases so heartbeats don't all tie.
+            let phase = (node as u64 * heartbeat_ns) / nodes as u64;
+            let stc = st.clone();
+            sim.at(phase, move |sim| heartbeat(sim, &stc, heartbeat_ns));
+        }
+    }
+    pump_arrival(&mut sim, &st);
+    let end_ns = sim.run();
+
+    if mem_budget > 0 {
+        assert!(
+            sim.approx_mem_bytes() <= mem_budget,
+            "scheduler footprint {} exceeds budget {}",
+            sim.approx_mem_bytes(),
+            mem_budget
+        );
+    }
+    let mut b = st.borrow_mut();
+    assert!(b.completed > 0, "no request completed");
+    let ttft = b.ttft.summary();
+    ServingReport {
+        completed: b.completed,
+        timeouts: b.timeouts,
+        ttft,
+        sim: sim.stats(),
+        arena_slots: sim.arena_slots(),
+        approx_mem_bytes: sim.approx_mem_bytes(),
+        end_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::arrivals::{to_trace_text, Arrivals, PoissonArrivals, TraceArrivals};
+    use super::*;
+
+    fn poisson(seed: u64) -> Arrivals {
+        // ~8 prefillers at ~3.1 s prefill (8K tokens): stay below
+        // saturation for the small config.
+        Arrivals::Poisson(PoissonArrivals::new(
+            seed,
+            500 * MS,
+            vec![2048, 4096, 8192],
+        ))
+    }
+
+    #[test]
+    fn serving_completes_and_reports_tail() {
+        let rep = run_serving(ServingConfig::small(500), poisson(1));
+        assert_eq!(rep.completed, 500);
+        assert_eq!(rep.timeouts, 0);
+        assert!(rep.ttft.p50 > 0);
+        assert!(rep.ttft.p999 >= rep.ttft.p99 && rep.ttft.p99 >= rep.ttft.p50);
+        // 500 requests x 5 events + heartbeats; every guard cancelled.
+        assert_eq!(rep.sim.cancelled, 500);
+    }
+
+    #[test]
+    fn serving_is_deterministic() {
+        let a = run_serving(ServingConfig::small(300), poisson(9));
+        let b = run_serving(ServingConfig::small(300), poisson(9));
+        assert_eq!(a.ttft.p50, b.ttft.p50);
+        assert_eq!(a.ttft.p999, b.ttft.p999);
+        assert_eq!(a.end_ns, b.end_ns);
+        assert_eq!(a.sim, b.sim);
+    }
+
+    #[test]
+    fn trace_replay_matches_poisson_run() {
+        let mut p = PoissonArrivals::new(77, 500 * MS, vec![2048, 4096, 8192]);
+        let text = to_trace_text(&mut p, 300);
+        let direct = run_serving(
+            ServingConfig::small(300),
+            Arrivals::Poisson(PoissonArrivals::new(77, 500 * MS, vec![2048, 4096, 8192])),
+        );
+        let replayed = run_serving(
+            ServingConfig::small(300),
+            Arrivals::Trace(TraceArrivals::parse(&text).unwrap()),
+        );
+        assert_eq!(direct.ttft.p50, replayed.ttft.p50);
+        assert_eq!(direct.ttft.p999, replayed.ttft.p999);
+        assert_eq!(direct.end_ns, replayed.end_ns);
+        assert_eq!(direct.sim, replayed.sim);
+    }
+
+    #[test]
+    fn pending_depth_stays_bounded() {
+        let rep = run_serving(ServingConfig::small(1000), poisson(3));
+        // Open-loop arrivals self-clock: peak pending is O(in-flight
+        // + nodes), nowhere near O(total requests).
+        assert!(
+            rep.sim.peak_pending < 600,
+            "peak pending {} suggests arrivals piled up",
+            rep.sim.peak_pending
+        );
+        assert!(rep.arena_slots as u64 >= rep.sim.peak_pending / 2);
+    }
+
+    #[test]
+    fn short_trace_ends_run_early() {
+        let text = "0 2048\n1000000 2048\n";
+        let rep = run_serving(
+            ServingConfig::small(100),
+            Arrivals::Trace(TraceArrivals::parse(text).unwrap()),
+        );
+        assert_eq!(rep.completed, 2);
+    }
+}

@@ -1689,6 +1689,39 @@ mod tests {
     }
 
     #[test]
+    fn engine_workload_tracks_scheduler_stats() {
+        // The timer-wheel scheduler's counters must stay coherent
+        // under a real engine workload (proxy hops, NIC serialization,
+        // delivery events), and `Cx::stats` must read them through.
+        let (mut sim, _net, a, b) = setup(NicProfile::efa);
+        let (src, _) = a.alloc_mr(0, 4096);
+        let (_dst_h, dst_d) = b.alloc_mr(0, 4096);
+        let done = Rc::new(Cell::new(false));
+        a.submit_single_write(
+            &mut sim,
+            (&src, 0),
+            512,
+            (&dst_d, 0),
+            None,
+            OnDone::Flag(done.clone()),
+        )
+        .unwrap();
+        sim.run();
+        assert!(done.get());
+        let st = sim.stats();
+        assert!(st.scheduled > 0, "engine work schedules events");
+        assert_eq!(
+            st.executed + st.cancelled,
+            st.scheduled,
+            "every event fired or was cancelled once the sim drained"
+        );
+        assert_eq!(st.executed, sim.executed());
+        assert!(st.peak_pending > 0 && st.peak_pending <= st.scheduled);
+        assert_eq!(sim.pending(), 0);
+        assert_eq!(crate::engine::traits::Cx::Des(&mut sim).stats(), st);
+    }
+
+    #[test]
     fn large_write_shards_across_both_nics() {
         let (mut sim, net, a, b) = setup(NicProfile::efa);
         let len = 4 << 20;

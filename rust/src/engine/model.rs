@@ -36,7 +36,7 @@ use std::time::Instant as StdInstant;
 use super::traits::Cx;
 use crate::fabric::profile::GpuProfile;
 use crate::sim::time::{Duration, Instant};
-use crate::sim::Sim;
+use crate::sim::{Sim, SimStats};
 
 // ---------------------------------------------------------------------
 // Continuations
@@ -214,6 +214,10 @@ struct ReactorState {
     thunks: HashMap<u64, Box<dyn FnOnce(&mut Cx)>>,
     /// Idle-step counter throttling handler reclamation sweeps.
     idle_steps: u32,
+    /// Timer counters mirroring the DES scheduler's `Sim::stats` so
+    /// `Cx::stats` works on both runtimes (the reactor has no timer
+    /// cancellation, so `cancelled` stays 0).
+    stats: SimStats,
 }
 
 /// The threaded runtime's clock and dispatcher. Timers fire in real
@@ -245,6 +249,7 @@ impl Reactor {
                 timers: BinaryHeap::new(),
                 thunks: HashMap::new(),
                 idle_steps: 0,
+                stats: SimStats::default(),
             })),
             queue: Arc::new((Mutex::new(VecDeque::new()), Condvar::new())),
         }
@@ -289,6 +294,17 @@ impl Reactor {
         st.next_timer += 1;
         st.timers.push(Reverse((at_ns, seq)));
         st.thunks.insert(seq, k);
+        st.stats.scheduled += 1;
+        let pending = st.timers.len() as u64;
+        if pending > st.stats.peak_pending {
+            st.stats.peak_pending = pending;
+        }
+    }
+
+    /// Timer counters (scheduled/executed/peak pending), mirroring
+    /// [`crate::sim::Sim::stats`] for the DES runtime.
+    pub fn stats(&self) -> SimStats {
+        self.state.borrow().stats
     }
 
     /// Dispatch one due timer or one queued wake. Returns false when
@@ -300,6 +316,7 @@ impl Reactor {
             match st.timers.peek() {
                 Some(&Reverse((at, seq))) if at <= now => {
                     st.timers.pop();
+                    st.stats.executed += 1;
                     st.thunks.remove(&seq)
                 }
                 _ => None,

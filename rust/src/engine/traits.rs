@@ -281,6 +281,18 @@ impl Cx<'_> {
         }
     }
 
+    /// Scheduler counters for this context's clock: events
+    /// scheduled/executed/cancelled and the pending-depth high-water
+    /// mark ([`crate::sim::SimStats`]). On the DES runtime these come
+    /// from the timer-wheel scheduler; on the threaded runtime from
+    /// the reactor's timer heap (which never cancels).
+    pub fn stats(&self) -> crate::sim::SimStats {
+        match self {
+            Cx::Des(sim) => sim.stats(),
+            Cx::Threaded(r) => r.stats(),
+        }
+    }
+
     /// Schedule `k` to run `delay` ns from now on this context's
     /// clock.
     pub fn after(&mut self, delay: Duration, k: impl FnOnce(&mut Cx) + 'static) {

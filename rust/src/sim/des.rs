@@ -1,55 +1,224 @@
 //! Single-threaded discrete-event executor.
 //!
-//! Events are boxed `FnOnce(&mut Sim)` closures keyed by `(time, seq)`;
-//! `seq` breaks ties so same-timestamp events fire in scheduling order,
-//! which keeps runs deterministic. Components live in `Rc<RefCell<..>>`
-//! cells captured by their event closures — the `Sim` itself owns only
-//! the clock and the queue.
+//! # Scheduler design (timer wheel + arena)
 //!
-//! Events can be cancelled (timers, heartbeats) via their `EventId`.
+//! Events live in a slab **arena** of fixed-size slots with
+//! generation-tagged [`EventId`]s: cancelling is O(1) (flag the slot,
+//! drop the closure), cancelling an already-fired event is a structural
+//! no-op (the generation no longer matches), and fired slots go back on
+//! a free list so a 10⁶-request run allocates O(peak-pending) slots,
+//! not O(total-events).
+//!
+//! Scheduling is two-level:
+//!
+//! * a **near min-heap** ordered by `(time, seq)` holds events in the
+//!   current level-0 wheel bucket (and any event scheduled "in the
+//!   past" relative to the wheel reference clock);
+//! * a **hierarchical timer wheel** — 8 levels × 64 buckets, level-k
+//!   bucket span `2^(B0 + 6k)` ns (level 0 ≈ 1.05 ms)
+//!   — holds everything further out as intrusive singly-linked slot
+//!   chains (no per-bucket allocation), with one occupancy bitmap per
+//!   level so finding the next non-empty bucket is a couple of
+//!   `trailing_zeros` scans.
+//!
+//! Buckets cascade toward the heap as virtual time approaches them:
+//! draining a level-k bucket re-bins its events at strictly lower
+//! levels (or into the heap), so cascades terminate. Because a whole
+//! level-0 bucket is poured into the heap *before* any event in it
+//! fires, same-timestamp events always meet in the heap where the
+//! `(time, seq)` order applies — the determinism contract (ties fire
+//! in scheduling order) is identical to the legacy single-heap
+//! scheduler, and a differential suite in `sim/legacy.rs`'s tests
+//! proves it event-for-event.
+//!
+//! Closures are stored with **small-thunk inline storage** (same
+//! `MaybeUninit` idiom as `util/smallvec.rs`): an `FnOnce` of up to 48
+//! bytes is written directly into the slot, so the common
+//! `after(delay, ..)` path performs no per-event heap allocation once
+//! the arena and heap have warmed up. Bigger closures spill to a `Box`.
+//!
+//! Components live in `Rc<RefCell<..>>` cells captured by their event
+//! closures — the `Sim` itself owns only the clock and the containers.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::BinaryHeap;
+use std::mem::{self, MaybeUninit};
 
 use super::time::{Duration, Instant};
 
 /// Identifier of a scheduled event; used to cancel timers.
+///
+/// Generation-tagged: the id names an arena slot *and* the generation
+/// the slot had when the event was scheduled. After the event fires
+/// (or its cancellation is reaped) the slot's generation advances, so
+/// a stale id can never alias a reused slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct EventId(u64);
+pub struct EventId {
+    slot: u32,
+    gen: u32,
+}
 
-type Thunk = Box<dyn FnOnce(&mut Sim)>;
+/// Scheduler counters surfaced by [`Sim::stats`].
+///
+/// `peak_pending` is the high-water mark of simultaneously pending
+/// (scheduled, not yet fired or cancelled) events — the quantity the
+/// arena's memory footprint scales with.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimStats {
+    /// Events ever scheduled (`at`/`after`/`defer`).
+    pub scheduled: u64,
+    /// Events executed (fired).
+    pub executed: u64,
+    /// Pending events cancelled. Cancelling an already-fired event is
+    /// a no-op and is *not* counted.
+    pub cancelled: u64,
+    /// High-water mark of pending events.
+    pub peak_pending: u64,
+}
 
-struct Entry {
+// ---------------------------------------------------------------------
+// Thunk: FnOnce(&mut Sim) with inline storage for small closures.
+// ---------------------------------------------------------------------
+
+/// Words of inline closure storage (48 bytes on 64-bit): enough for
+/// the typical captured `Rc` + a few scalars on the `after` fast path.
+const INLINE_WORDS: usize = 6;
+
+enum Thunk {
+    /// No closure (slot free, cancelled, or already taken to fire).
+    Empty,
+    /// Closure stored inline in the slot; `call` reads it out of `buf`
+    /// and invokes it, `drop_fn` drops it in place if never invoked.
+    /// Both are monomorphized for the concrete closure type.
+    Inline {
+        buf: MaybeUninit<[usize; INLINE_WORDS]>,
+        call: unsafe fn(*mut u8, &mut Sim),
+        drop_fn: unsafe fn(*mut u8),
+    },
+    /// Closure too big (or over-aligned) for the inline buffer.
+    Boxed(Box<dyn FnOnce(&mut Sim)>),
+}
+
+unsafe fn call_inline<F: FnOnce(&mut Sim)>(p: *mut u8, sim: &mut Sim) {
+    // Moves the closure out of the buffer; the buffer must not be
+    // dropped afterwards.
+    let f = std::ptr::read(p as *const F);
+    f(sim)
+}
+
+unsafe fn drop_inline<F>(p: *mut u8) {
+    std::ptr::drop_in_place(p as *mut F)
+}
+
+impl Thunk {
+    fn new<F: FnOnce(&mut Sim) + 'static>(f: F) -> Self {
+        if mem::size_of::<F>() <= INLINE_WORDS * mem::size_of::<usize>()
+            && mem::align_of::<F>() <= mem::align_of::<usize>()
+        {
+            let mut buf = MaybeUninit::<[usize; INLINE_WORDS]>::uninit();
+            unsafe { std::ptr::write(buf.as_mut_ptr() as *mut F, f) };
+            Thunk::Inline {
+                buf,
+                call: call_inline::<F>,
+                drop_fn: drop_inline::<F>,
+            }
+        } else {
+            Thunk::Boxed(Box::new(f))
+        }
+    }
+
+    /// Invoke the stored closure. Consumes `self` without running the
+    /// `Drop` impl (the closure is moved out, not dropped in place).
+    fn invoke(self, sim: &mut Sim) {
+        let this = mem::ManuallyDrop::new(self);
+        unsafe {
+            match &*this {
+                Thunk::Empty => {}
+                Thunk::Inline { buf, call, .. } => {
+                    let call = *call;
+                    call(buf.as_ptr() as *mut u8, sim);
+                }
+                Thunk::Boxed(b) => {
+                    let b = std::ptr::read(b);
+                    b(sim);
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Thunk {
+    fn drop(&mut self) {
+        if let Thunk::Inline { buf, drop_fn, .. } = self {
+            let drop_fn = *drop_fn;
+            unsafe { drop_fn(buf.as_mut_ptr() as *mut u8) }
+        }
+        // Boxed drops its Box via the normal enum drop glue; Empty has
+        // nothing to do.
+    }
+}
+
+// ---------------------------------------------------------------------
+// Arena slots and the wheel.
+// ---------------------------------------------------------------------
+
+/// Intrusive-list terminator / "no slot" marker.
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    Free,
+    Pending,
+    Cancelled,
+}
+
+struct Slot {
     at: Instant,
     seq: u64,
+    gen: u32,
+    state: SlotState,
+    /// Intrusive chain: wheel-bucket list while scheduled in the
+    /// wheel, free list while free, `NIL` otherwise.
+    next: u32,
     thunk: Thunk,
 }
 
-// Order by (time, seq): earliest first via Reverse in the heap.
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl Eq for Entry {}
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
-    }
+/// Wheel levels. Level k buckets span `2^(B0 + 6k)` ns; level 7 spans
+/// `2^62` ns per bucket, so any `u64` timestamp fits some level.
+const LEVELS: usize = 8;
+/// Buckets per level (64 = one occupancy bitmap word).
+const BUCKETS: usize = 64;
+/// log2 of the level-0 bucket span in ns (2^20 ns ≈ 1.05 ms).
+const B0: u32 = 20;
+
+#[inline]
+fn shift(level: usize) -> u32 {
+    B0 + 6 * level as u32
 }
 
 /// The discrete-event simulator: a virtual clock plus an event queue.
 pub struct Sim {
     now: Instant,
     seq: u64,
-    queue: BinaryHeap<Reverse<Entry>>,
-    cancelled: HashSet<u64>,
-    executed: u64,
+    /// Arena of event slots; never shrinks, grows to peak-pending.
+    slots: Vec<Slot>,
+    /// Head of the free-slot list (`NIL` when empty).
+    free_head: u32,
+    /// Near events, ordered by `(at, seq)`; `u32` is the slot index.
+    near: BinaryHeap<Reverse<(Instant, u64, u32)>>,
+    /// `wheel[k][b]` heads an intrusive chain of slots.
+    wheel: Box<[[u32; BUCKETS]; LEVELS]>,
+    /// Per-level bucket-occupancy bitmaps.
+    occupied: [u64; LEVELS],
+    /// Wheel reference clock: every wheel-resident event sits in a
+    /// level-0 bucket strictly after `wheel_now`'s. Always <= `now`
+    /// except transiently after a `run_until` deadline clamp.
+    wheel_now: Instant,
+    /// Entries currently chained in wheel buckets.
+    wheel_len: usize,
+    /// Pending (scheduled, not fired/cancelled) events.
+    pending: usize,
+    stats: SimStats,
     /// Hard cap on executed events; guards against runaway loops in
     /// misconfigured scenarios (poll loops that never quiesce).
     pub event_limit: u64,
@@ -67,9 +236,15 @@ impl Sim {
         Sim {
             now: 0,
             seq: 0,
-            queue: BinaryHeap::new(),
-            cancelled: HashSet::new(),
-            executed: 0,
+            slots: Vec::new(),
+            free_head: NIL,
+            near: BinaryHeap::new(),
+            wheel: Box::new([[NIL; BUCKETS]; LEVELS]),
+            occupied: [0; LEVELS],
+            wheel_now: 0,
+            wheel_len: 0,
+            pending: 0,
+            stats: SimStats::default(),
             event_limit: u64::MAX,
         }
     }
@@ -82,7 +257,36 @@ impl Sim {
 
     /// Number of events executed so far.
     pub fn executed(&self) -> u64 {
-        self.executed
+        self.stats.executed
+    }
+
+    /// Scheduler counters: scheduled/executed/cancelled and the
+    /// pending-depth high-water mark.
+    pub fn stats(&self) -> SimStats {
+        self.stats
+    }
+
+    /// Events currently pending (scheduled, not yet fired or
+    /// cancelled).
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Arena slots allocated so far. Grows to the peak number of
+    /// simultaneously live (pending + not-yet-reaped cancelled)
+    /// events and then stays flat — the memory-budget check in the
+    /// `sim_churn` bench asserts against this.
+    pub fn arena_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Rough resident footprint of the scheduler containers in bytes
+    /// (arena + heap capacity; excludes spilled boxed closures).
+    pub fn approx_mem_bytes(&self) -> usize {
+        mem::size_of::<Self>()
+            + mem::size_of::<[[u32; BUCKETS]; LEVELS]>()
+            + self.slots.capacity() * mem::size_of::<Slot>()
+            + self.near.capacity() * mem::size_of::<Reverse<(Instant, u64, u32)>>()
     }
 
     /// Schedule `f` to run at absolute virtual time `at`.
@@ -92,12 +296,14 @@ impl Sim {
         let at = at.max(self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.queue.push(Reverse(Entry {
-            at,
-            seq,
-            thunk: Box::new(f),
-        }));
-        EventId(seq)
+        let (idx, gen) = self.alloc_slot(at, seq, Thunk::new(f));
+        self.insert(idx, at, seq);
+        self.pending += 1;
+        self.stats.scheduled += 1;
+        if self.pending as u64 > self.stats.peak_pending {
+            self.stats.peak_pending = self.pending as u64;
+        }
+        EventId { slot: idx, gen }
     }
 
     /// Schedule `f` to run `delay` ns from now.
@@ -112,10 +318,22 @@ impl Sim {
         self.at(self.now, f)
     }
 
-    /// Cancel a pending event. Cancelling an already-fired event is a
-    /// no-op.
+    /// Cancel a pending event in O(1). Cancelling an already-fired (or
+    /// already-cancelled) event is a no-op — the slot generation no
+    /// longer matches, so no state grows, no matter how often stale
+    /// ids are re-cancelled.
+    ///
+    /// The closure is dropped immediately; the slot itself is reaped
+    /// (and reused) when the scheduler next reaches its timestamp.
     pub fn cancel(&mut self, id: EventId) {
-        self.cancelled.insert(id.0);
+        if let Some(slot) = self.slots.get_mut(id.slot as usize) {
+            if slot.gen == id.gen && slot.state == SlotState::Pending {
+                slot.state = SlotState::Cancelled;
+                slot.thunk = Thunk::Empty;
+                self.pending -= 1;
+                self.stats.cancelled += 1;
+            }
+        }
     }
 
     /// Run until the event queue is empty. Returns the final time.
@@ -126,31 +344,182 @@ impl Sim {
     /// Run events with `at <= deadline`. The clock never advances past
     /// `deadline` even if later events remain queued.
     pub fn run_until(&mut self, deadline: Instant) -> Instant {
-        while let Some(Reverse(entry)) = self.queue.peek() {
-            if entry.at > deadline {
-                self.now = self.now.max(deadline.min(entry.at));
+        while let Some((at, _seq, idx)) = self.settle_min() {
+            if at > deadline {
+                self.now = self.now.max(deadline.min(at));
                 break;
             }
-            let Reverse(entry) = self.queue.pop().unwrap();
-            if self.cancelled.remove(&entry.seq) {
+            self.near.pop();
+            let slot = &mut self.slots[idx as usize];
+            if slot.state == SlotState::Cancelled {
+                self.free_slot(idx);
                 continue;
             }
-            self.now = entry.at;
-            self.executed += 1;
-            if self.executed > self.event_limit {
+            let thunk = mem::replace(&mut slot.thunk, Thunk::Empty);
+            self.free_slot(idx);
+            self.pending -= 1;
+            self.now = at;
+            self.stats.executed += 1;
+            if self.stats.executed > self.event_limit {
                 panic!(
                     "sim event limit ({}) exceeded at t={} — runaway loop?",
                     self.event_limit, self.now
                 );
             }
-            (entry.thunk)(self);
+            thunk.invoke(self);
         }
         self.now
     }
 
-    /// True if no events remain.
+    /// True if no events remain (pending or cancelled-but-unreaped).
     pub fn idle(&self) -> bool {
-        self.queue.is_empty()
+        self.near.is_empty() && self.wheel_len == 0
+    }
+
+    // -- internals ----------------------------------------------------
+
+    /// Grab a slot from the free list (or grow the arena) and fill it.
+    fn alloc_slot(&mut self, at: Instant, seq: u64, thunk: Thunk) -> (u32, u32) {
+        if self.free_head != NIL {
+            let idx = self.free_head;
+            let slot = &mut self.slots[idx as usize];
+            self.free_head = slot.next;
+            slot.at = at;
+            slot.seq = seq;
+            slot.state = SlotState::Pending;
+            slot.next = NIL;
+            slot.thunk = thunk;
+            (idx, slot.gen)
+        } else {
+            assert!(self.slots.len() < NIL as usize, "sim arena full");
+            let idx = self.slots.len() as u32;
+            self.slots.push(Slot {
+                at,
+                seq,
+                gen: 0,
+                state: SlotState::Pending,
+                next: NIL,
+                thunk,
+            });
+            (idx, 0)
+        }
+    }
+
+    /// Bump the generation and return the slot to the free list. The
+    /// caller must already have detached it from heap/bucket chains.
+    fn free_slot(&mut self, idx: u32) {
+        let head = self.free_head;
+        let slot = &mut self.slots[idx as usize];
+        slot.gen = slot.gen.wrapping_add(1);
+        slot.state = SlotState::Free;
+        slot.thunk = Thunk::Empty;
+        slot.next = head;
+        self.free_head = idx;
+    }
+
+    /// Place a slot into the near heap or the right wheel bucket.
+    fn insert(&mut self, idx: u32, at: Instant, seq: u64) {
+        // Same level-0 bucket as the wheel clock (or earlier): the
+        // event is "near" — heap, where (at, seq) ordering applies.
+        if at >> B0 <= self.wheel_now >> B0 {
+            self.near.push(Reverse((at, seq, idx)));
+            return;
+        }
+        // Lowest level where the event lands within the 64-bucket
+        // window ahead of the wheel clock. Level 7 always fits
+        // (bucket numbers there are at most 3 apart).
+        let mut k = 0;
+        while k + 1 < LEVELS && (at >> shift(k)) - (self.wheel_now >> shift(k)) >= BUCKETS as u64 {
+            k += 1;
+        }
+        let b = ((at >> shift(k)) & (BUCKETS as u64 - 1)) as usize;
+        let slot = &mut self.slots[idx as usize];
+        slot.next = self.wheel[k][b];
+        self.wheel[k][b] = idx;
+        self.occupied[k] |= 1u64 << b;
+        self.wheel_len += 1;
+    }
+
+    /// Earliest occupied wheel bucket as `(level, bucket, start_time)`.
+    /// Caller must ensure `wheel_len > 0`.
+    fn earliest_bucket(&self) -> (usize, usize, Instant) {
+        let mut best: Option<(usize, usize, Instant)> = None;
+        for k in 0..LEVELS {
+            let occ = self.occupied[k];
+            if occ == 0 {
+                continue;
+            }
+            let sh = shift(k);
+            let pos = (self.wheel_now >> sh) & (BUCKETS as u64 - 1);
+            // Occupied buckets sit at true bucket-number distance
+            // 0..=63 ahead of the wheel clock, so the wrapped distance
+            // recovers the absolute bucket number exactly.
+            let mut min_dist = u64::MAX;
+            let mut min_b = 0usize;
+            let mut bits = occ;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as u64;
+                bits &= bits - 1;
+                let dist = b.wrapping_sub(pos) & (BUCKETS as u64 - 1);
+                if dist < min_dist {
+                    min_dist = dist;
+                    min_b = b as usize;
+                }
+            }
+            let start = ((self.wheel_now >> sh) + min_dist) << sh;
+            match best {
+                Some((_, _, s)) if s <= start => {}
+                _ => best = Some((k, min_b, start)),
+            }
+        }
+        best.expect("earliest_bucket called with empty wheel")
+    }
+
+    /// Drain bucket `(k, b)` and re-bin its events relative to the
+    /// advanced wheel clock. Level-0 events pour into the near heap;
+    /// higher-level events re-bin at strictly lower levels, so
+    /// cascades terminate.
+    fn cascade(&mut self, k: usize, b: usize, start: Instant) {
+        if start > self.wheel_now {
+            self.wheel_now = start;
+        }
+        let mut head = mem::replace(&mut self.wheel[k][b], NIL);
+        self.occupied[k] &= !(1u64 << b);
+        while head != NIL {
+            let idx = head;
+            let slot = &mut self.slots[idx as usize];
+            head = slot.next;
+            slot.next = NIL;
+            let (at, seq) = (slot.at, slot.seq);
+            self.wheel_len -= 1;
+            // Cancelled slots keep flowing toward the heap so their
+            // timestamps still participate in `run_until` deadline
+            // checks (matching the legacy scheduler event-for-event);
+            // they are reaped when popped.
+            self.insert(idx, at, seq);
+        }
+    }
+
+    /// Cascade until the globally-earliest entry (pending or
+    /// cancelled) is at the top of the near heap, and return its key
+    /// without popping. `None` when no entries remain.
+    fn settle_min(&mut self) -> Option<(Instant, u64, u32)> {
+        loop {
+            let heap_min = self.near.peek().map(|&Reverse(e)| e);
+            if self.wheel_len == 0 {
+                return heap_min;
+            }
+            let (k, b, start) = self.earliest_bucket();
+            if let Some(e) = heap_min {
+                // Strict: on a tie the bucket cascades first so
+                // same-timestamp events meet in the heap and fire in
+                // seq order.
+                if e.0 < start {
+                    return Some(e);
+                }
+            }
+            self.cascade(k, b, start);
+        }
     }
 }
 
@@ -189,6 +558,22 @@ mod tests {
         }
         sim.run();
         assert_eq!(*log.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn ties_fire_in_schedule_order_across_wheel() {
+        // Same timestamp far enough out to land in the wheel; events
+        // must still fire in scheduling order after cascading.
+        let mut sim = Sim::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let t = 17 * super::super::time::MS + 123;
+        for i in 0..16 {
+            let log = log.clone();
+            sim.at(t, move |_| log.borrow_mut().push(i));
+        }
+        sim.run();
+        assert_eq!(*log.borrow(), (0..16).collect::<Vec<_>>());
+        assert_eq!(sim.now(), t);
     }
 
     #[test]
@@ -256,5 +641,149 @@ mod tests {
         }
         sim.after(1, rearm);
         sim.run();
+    }
+
+    #[test]
+    fn far_future_events_fire_in_order() {
+        // Spread across every wheel level: µs, ms, seconds, minutes,
+        // hours of virtual time.
+        use super::super::time::{MS, SEC, US};
+        let mut sim = Sim::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let times = [
+            3 * US,
+            900 * US,
+            2 * MS,
+            70 * MS,
+            900 * MS,
+            3 * SEC,
+            95 * SEC,
+            3700 * SEC,
+            90_000 * SEC,
+        ];
+        let mut shuffled = times;
+        shuffled.reverse();
+        for &t in &shuffled {
+            let log = log.clone();
+            sim.at(t, move |s| log.borrow_mut().push(s.now()));
+        }
+        sim.run();
+        assert_eq!(*log.borrow(), times.to_vec());
+        assert_eq!(sim.now(), *times.last().unwrap());
+    }
+
+    #[test]
+    fn cancel_far_future_event() {
+        use super::super::time::SEC;
+        let mut sim = Sim::new();
+        let hits = Rc::new(RefCell::new(0u32));
+        let h = hits.clone();
+        let id = sim.at(100 * SEC, move |_| *h.borrow_mut() += 1);
+        let h2 = hits.clone();
+        sim.at(50 * SEC, move |_| *h2.borrow_mut() += 10);
+        sim.cancel(id);
+        sim.run();
+        assert_eq!(*hits.borrow(), 10);
+        assert_eq!(sim.stats().cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_fired_events_is_bounded() {
+        // Regression for the legacy tombstone leak: cancelling
+        // already-fired events over and over must not grow any state.
+        let mut sim = Sim::new();
+        let mut ids = Vec::new();
+        for i in 0..100u64 {
+            ids.push(sim.at(i, |_| {}));
+        }
+        sim.run();
+        let base_mem = sim.approx_mem_bytes();
+        for _ in 0..1000 {
+            for &id in &ids {
+                sim.cancel(id);
+            }
+        }
+        assert_eq!(sim.stats().cancelled, 0, "fired-event cancel must be a no-op");
+        assert_eq!(sim.approx_mem_bytes(), base_mem);
+        assert!(sim.idle());
+    }
+
+    #[test]
+    fn slots_are_reused_across_sequential_events() {
+        // 10k fire-then-schedule cycles must not grow the arena past
+        // the peak pending depth (here: a handful of slots).
+        let mut sim = Sim::new();
+        fn chain(s: &mut Sim, left: u32) {
+            if left > 0 {
+                s.after(10, move |s| chain(s, left - 1));
+            }
+        }
+        chain(&mut sim, 10_000);
+        sim.run();
+        assert_eq!(sim.stats().executed, 10_000);
+        assert!(
+            sim.arena_slots() <= 4,
+            "arena grew to {} slots for a 1-pending workload",
+            sim.arena_slots()
+        );
+    }
+
+    #[test]
+    fn stale_id_does_not_cancel_reused_slot() {
+        let mut sim = Sim::new();
+        let fired = Rc::new(RefCell::new(Vec::new()));
+        let f = fired.clone();
+        let id_a = sim.at(1, move |_| f.borrow_mut().push('a'));
+        sim.run();
+        // Slot of `id_a` is free now; the next event reuses it.
+        let f = fired.clone();
+        let id_b = sim.at(2, move |_| f.borrow_mut().push('b'));
+        assert_ne!(id_a, id_b);
+        sim.cancel(id_a); // stale: must NOT cancel b
+        sim.run();
+        assert_eq!(*fired.borrow(), vec!['a', 'b']);
+    }
+
+    #[test]
+    fn stats_counters_track() {
+        let mut sim = Sim::new();
+        let id = sim.at(5, |_| {});
+        sim.at(6, |_| {});
+        sim.at(7, |_| {});
+        assert_eq!(sim.stats().scheduled, 3);
+        assert_eq!(sim.pending(), 3);
+        sim.cancel(id);
+        assert_eq!(sim.pending(), 2);
+        sim.run();
+        let st = sim.stats();
+        assert_eq!(st.scheduled, 3);
+        assert_eq!(st.executed, 2);
+        assert_eq!(st.cancelled, 1);
+        assert_eq!(st.peak_pending, 3);
+        assert_eq!(sim.pending(), 0);
+    }
+
+    #[test]
+    fn run_until_deadline_with_only_far_events() {
+        use super::super::time::SEC;
+        let mut sim = Sim::new();
+        sim.at(10 * SEC, |_| {});
+        let t = sim.run_until(3 * SEC);
+        assert_eq!(t, 3 * SEC);
+        assert!(!sim.idle());
+        sim.run();
+        assert_eq!(sim.now(), 10 * SEC);
+    }
+
+    #[test]
+    fn large_closures_spill_to_box() {
+        // A closure capturing > 48 bytes must still work (boxed path).
+        let mut sim = Sim::new();
+        let big = [7u64; 16];
+        let sum = Rc::new(RefCell::new(0u64));
+        let s2 = sum.clone();
+        sim.at(1, move |_| *s2.borrow_mut() = big.iter().sum());
+        sim.run();
+        assert_eq!(*sum.borrow(), 112);
     }
 }

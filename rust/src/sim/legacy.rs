@@ -1,0 +1,378 @@
+//! Legacy single-heap event scheduler, kept as a differential oracle.
+//!
+//! This is the pre-timer-wheel implementation of `sim/des.rs`: a
+//! `BinaryHeap` of individually boxed `FnOnce` closures keyed by
+//! `(time, seq)` with a `HashSet` tombstone set for cancellation. It is
+//! compiled only for tests and under the `sim-oracle` feature, where
+//! the differential property suite (`tests/sim_differential.rs` and
+//! the tests below) drives it and the production wheel+arena scheduler
+//! with identical operation streams and asserts the fired event
+//! sequences match exactly — time order, same-timestamp scheduling
+//! ties, cancellation, `run_until` deadline clamping, and
+//! past-schedule clamping.
+//!
+//! Known wart preserved on purpose: cancelling an already-fired event
+//! leaks a tombstone into `cancelled` forever. The production
+//! scheduler's generation-tagged slots make that structurally
+//! impossible; `des.rs::tests::cancel_fired_events_is_bounded` is the
+//! regression test.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+
+use super::time::{Duration, Instant};
+
+/// Identifier of a scheduled event in the legacy scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LegacyEventId(u64);
+
+type Thunk = Box<dyn FnOnce(&mut LegacySim)>;
+
+struct Entry {
+    at: Instant,
+    seq: u64,
+    thunk: Thunk,
+}
+
+// Order by (time, seq): earliest first via Reverse in the heap.
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// The legacy discrete-event simulator: boxed closures in one heap.
+pub struct LegacySim {
+    now: Instant,
+    seq: u64,
+    queue: BinaryHeap<Reverse<Entry>>,
+    cancelled: HashSet<u64>,
+    executed: u64,
+    /// Hard cap on executed events.
+    pub event_limit: u64,
+}
+
+impl Default for LegacySim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LegacySim {
+    /// Create an empty simulator at t = 0.
+    pub fn new() -> Self {
+        LegacySim {
+            now: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            cancelled: HashSet::new(),
+            executed: 0,
+            event_limit: u64::MAX,
+        }
+    }
+
+    /// Current virtual time.
+    #[inline]
+    pub fn now(&self) -> Instant {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Schedule `f` at absolute virtual time `at` (clamped to `now`).
+    pub fn at(&mut self, at: Instant, f: impl FnOnce(&mut LegacySim) + 'static) -> LegacyEventId {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Reverse(Entry {
+            at,
+            seq,
+            thunk: Box::new(f),
+        }));
+        LegacyEventId(seq)
+    }
+
+    /// Schedule `f` to run `delay` ns from now.
+    pub fn after(
+        &mut self,
+        delay: Duration,
+        f: impl FnOnce(&mut LegacySim) + 'static,
+    ) -> LegacyEventId {
+        let at = self.now.saturating_add(delay);
+        self.at(at, f)
+    }
+
+    /// Cancel a pending event (tombstone insert).
+    pub fn cancel(&mut self, id: LegacyEventId) {
+        self.cancelled.insert(id.0);
+    }
+
+    /// Run until the event queue is empty. Returns the final time.
+    pub fn run(&mut self) -> Instant {
+        self.run_until(Instant::MAX)
+    }
+
+    /// Run events with `at <= deadline`.
+    pub fn run_until(&mut self, deadline: Instant) -> Instant {
+        while let Some(Reverse(entry)) = self.queue.peek() {
+            if entry.at > deadline {
+                self.now = self.now.max(deadline.min(entry.at));
+                break;
+            }
+            let Reverse(entry) = self.queue.pop().unwrap();
+            if self.cancelled.remove(&entry.seq) {
+                continue;
+            }
+            self.now = entry.at;
+            self.executed += 1;
+            if self.executed > self.event_limit {
+                panic!(
+                    "sim event limit ({}) exceeded at t={} — runaway loop?",
+                    self.event_limit, self.now
+                );
+            }
+            (entry.thunk)(self);
+        }
+        self.now
+    }
+
+    /// True if no events remain.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+/// Differential-oracle machinery shared by the in-crate tests and the
+/// `tests/sim_differential.rs` integration suite: replay one seeded
+/// operation stream on both schedulers and compare fired sequences.
+pub mod differential {
+    use super::super::des::Sim;
+    use super::super::rng::Rng;
+    use super::super::time::{Instant, MS, SEC, US};
+    use super::LegacySim;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// One scripted scheduler operation, derived deterministically
+    /// from a seed so both sides replay the identical stream.
+    #[derive(Debug, Clone, Copy)]
+    pub enum Op {
+        /// Schedule a no-payload event `delay` ns out; remember its id
+        /// under `key` for later cancellation.
+        After { delay: u64, key: usize },
+        /// Schedule at an absolute time (possibly in the past — the
+        /// clamping path).
+        At { at: Instant, key: usize },
+        /// Schedule an event that, when fired, schedules a follow-up
+        /// (re-entrancy / cascade path).
+        Chain { delay: u64, follow: u64 },
+        /// Cancel the id stored under `key` (may already have fired).
+        Cancel { key: usize },
+        /// Drain events up to a deadline `ahead` ns past current time.
+        RunUntil { ahead: u64 },
+    }
+
+    /// Generate a seeded random op stream mixing every API surface:
+    /// near/far delays (heap and all wheel levels), absolute times in
+    /// the past, same-timestamp ties, cancels of live and fired
+    /// events, and partial drains.
+    pub fn gen_ops(seed: u64, n: usize) -> Vec<Op> {
+        let mut rng = Rng::new(seed);
+        let mut ops = Vec::with_capacity(n);
+        for i in 0..n {
+            let roll = rng.below(100);
+            let op = if roll < 40 {
+                let delay = match rng.below(5) {
+                    0 => rng.below(1000),            // same-bucket ties likely
+                    1 => rng.below(2 * US),          // near
+                    2 => rng.below(5 * MS),          // level 0/1
+                    3 => rng.below(2 * SEC),         // mid levels
+                    _ => rng.below(5000 * SEC),      // far future
+                };
+                Op::After { delay, key: i }
+            } else if roll < 50 {
+                Op::At {
+                    at: rng.below(10 * SEC),
+                    key: i,
+                }
+            } else if roll < 65 {
+                Op::Chain {
+                    delay: rng.below(3 * MS),
+                    follow: rng.below(3 * MS),
+                }
+            } else if roll < 85 {
+                Op::Cancel {
+                    key: rng.below(n as u64) as usize,
+                }
+            } else {
+                Op::RunUntil {
+                    ahead: rng.below(20 * MS),
+                }
+            };
+            ops.push(op);
+        }
+        ops
+    }
+
+    /// Fired-event log entry: (virtual time, label). Labels are the
+    /// op index (or `usize::MAX - follow-up marker` for chains), so a
+    /// mismatch pinpoints the diverging event.
+    pub type FiredLog = Vec<(Instant, usize)>;
+
+    /// Replay `ops` on the wheel+arena scheduler.
+    pub fn replay_new(ops: &[Op]) -> (FiredLog, Instant, u64) {
+        let mut sim = Sim::new();
+        let log: Rc<RefCell<FiredLog>> = Rc::new(RefCell::new(Vec::new()));
+        let mut ids = vec![None; ops.len()];
+        for op in ops.iter() {
+            match *op {
+                Op::After { delay, key } => {
+                    let log = log.clone();
+                    ids[key] = Some(sim.after(delay, move |s| {
+                        log.borrow_mut().push((s.now(), key));
+                    }));
+                }
+                Op::At { at, key } => {
+                    let log = log.clone();
+                    ids[key] = Some(sim.at(at, move |s| {
+                        log.borrow_mut().push((s.now(), key));
+                    }));
+                }
+                Op::Chain { delay, follow } => {
+                    let log = log.clone();
+                    sim.after(delay, move |s| {
+                        log.borrow_mut().push((s.now(), usize::MAX - 1));
+                        let log = log.clone();
+                        s.after(follow, move |s| {
+                            log.borrow_mut().push((s.now(), usize::MAX - 2));
+                        });
+                    });
+                }
+                Op::Cancel { key } => {
+                    if let Some(id) = ids[key] {
+                        sim.cancel(id);
+                    }
+                }
+                Op::RunUntil { ahead } => {
+                    let deadline = sim.now().saturating_add(ahead);
+                    sim.run_until(deadline);
+                }
+            }
+        }
+        sim.run();
+        let fired = log.borrow().clone();
+        (fired, sim.now(), sim.executed())
+    }
+
+    /// Replay `ops` on the legacy heap scheduler.
+    pub fn replay_legacy(ops: &[Op]) -> (FiredLog, Instant, u64) {
+        let mut sim = LegacySim::new();
+        let log: Rc<RefCell<FiredLog>> = Rc::new(RefCell::new(Vec::new()));
+        let mut ids = vec![None; ops.len()];
+        for op in ops.iter() {
+            match *op {
+                Op::After { delay, key } => {
+                    let log = log.clone();
+                    ids[key] = Some(sim.after(delay, move |s| {
+                        log.borrow_mut().push((s.now(), key));
+                    }));
+                }
+                Op::At { at, key } => {
+                    let log = log.clone();
+                    ids[key] = Some(sim.at(at, move |s| {
+                        log.borrow_mut().push((s.now(), key));
+                    }));
+                }
+                Op::Chain { delay, follow } => {
+                    let log = log.clone();
+                    sim.after(delay, move |s| {
+                        log.borrow_mut().push((s.now(), usize::MAX - 1));
+                        let log = log.clone();
+                        s.after(follow, move |s| {
+                            log.borrow_mut().push((s.now(), usize::MAX - 2));
+                        });
+                    });
+                }
+                Op::Cancel { key } => {
+                    if let Some(id) = ids[key] {
+                        sim.cancel(id);
+                    }
+                }
+                Op::RunUntil { ahead } => {
+                    let deadline = sim.now().saturating_add(ahead);
+                    sim.run_until(deadline);
+                }
+            }
+        }
+        sim.run();
+        let fired = log.borrow().clone();
+        (fired, sim.now(), sim.executed())
+    }
+
+    /// Assert both schedulers agree on one seeded workload.
+    pub fn check_seed(seed: u64, n: usize) {
+        let ops = gen_ops(seed, n);
+        let (fired_new, now_new, exec_new) = replay_new(&ops);
+        let (fired_old, now_old, exec_old) = replay_legacy(&ops);
+        assert_eq!(
+            exec_new, exec_old,
+            "seed {seed}: executed-count divergence"
+        );
+        assert_eq!(now_new, now_old, "seed {seed}: final-clock divergence");
+        assert_eq!(
+            fired_new.len(),
+            fired_old.len(),
+            "seed {seed}: fired-count divergence"
+        );
+        for (i, (a, b)) in fired_new.iter().zip(fired_old.iter()).enumerate() {
+            assert_eq!(a, b, "seed {seed}: divergence at fired event #{i}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::differential::check_seed;
+
+    #[test]
+    fn differential_small_seeds() {
+        for seed in 0..8 {
+            check_seed(seed, 200);
+        }
+    }
+
+    #[test]
+    fn differential_medium_seed() {
+        check_seed(0xD15C0, 2_000);
+    }
+
+    #[test]
+    fn legacy_tombstone_leak_is_real() {
+        // Documents the bug the new scheduler fixes: cancelling fired
+        // events grows the legacy tombstone set without bound.
+        let mut sim = super::LegacySim::new();
+        let mut ids = Vec::new();
+        for i in 0..64u64 {
+            ids.push(sim.at(i, |_| {}));
+        }
+        sim.run();
+        for &id in &ids {
+            sim.cancel(id);
+        }
+        assert_eq!(sim.cancelled.len(), 64, "legacy leak behavior changed");
+    }
+}

@@ -7,11 +7,13 @@
 //! regenerate the paper's tables bit-for-bit.
 
 pub mod des;
+#[cfg(any(test, feature = "sim-oracle"))]
+pub mod legacy;
 pub mod rng;
 pub mod stats;
 pub mod time;
 
-pub use des::{EventId, Sim, SimHandle};
+pub use des::{EventId, Sim, SimHandle, SimStats};
 pub use rng::{Jitter, Rng};
 pub use stats::{Histogram, Summary};
 pub use time::{Duration, Instant, GBPS, GIB, KIB, MIB, MS, NS, SEC, US};

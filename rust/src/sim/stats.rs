@@ -148,6 +148,21 @@ impl Summary {
             us(self.max),
         )
     }
+
+    /// Bench-JSON headline object: tail percentiles (p50/p99/p99.9)
+    /// plus count and max, all in ns. This is the schema the pinned
+    /// `BENCH_*.json` baselines use for latency distributions —
+    /// million-sample runs are what make the p99.9 column meaningful.
+    pub fn headline_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("n".to_string(), Json::from(self.n as u64));
+        m.insert("p50_ns".to_string(), Json::from(self.p50));
+        m.insert("p99_ns".to_string(), Json::from(self.p99));
+        m.insert("p999_ns".to_string(), Json::from(self.p999));
+        m.insert("max_ns".to_string(), Json::from(self.max));
+        Json::Obj(m)
+    }
 }
 
 #[cfg(test)]
@@ -204,5 +219,19 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn empty_percentile_panics() {
         Histogram::new().percentile(50.0);
+    }
+
+    #[test]
+    fn headline_json_includes_tail() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let j = h.summary().headline_json();
+        assert_eq!(j.get("n").unwrap().u64(), Some(1000));
+        assert_eq!(j.get("p50_ns").unwrap().u64(), Some(500));
+        assert_eq!(j.get("p99_ns").unwrap().u64(), Some(990));
+        assert_eq!(j.get("p999_ns").unwrap().u64(), Some(999));
+        assert_eq!(j.get("max_ns").unwrap().u64(), Some(1000));
     }
 }

@@ -1,0 +1,48 @@
+//! Heap-allocation counting for zero-alloc assertions.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! `alloc`/`realloc` call in a process-global atomic. A bench binary
+//! installs it as its `#[global_allocator]` and brackets a hot loop
+//! with [`alloc_count`] reads to assert the loop allocates nothing —
+//! the `sim_churn` bench uses this to prove the scheduler's `after`
+//! fast path is allocation-free at steady state.
+//!
+//! Deliberately *not* installed for the library or test binaries:
+//! a global allocator is a per-binary decision, and tests should not
+//! pay the atomic on every allocation.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Heap allocations (alloc + realloc calls) since process start, as
+/// counted by an installed [`CountingAlloc`]. Always 0 when no
+/// `CountingAlloc` is installed.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// A `#[global_allocator]` shim that counts allocations.
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: CountingAlloc = CountingAlloc;
+/// ```
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}

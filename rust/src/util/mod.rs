@@ -2,6 +2,7 @@
 //! the bench/property-test harnesses (criterion/proptest are not
 //! available offline — see DESIGN.md §1).
 
+pub mod alloc_probe;
 pub mod cli;
 pub mod err;
 pub mod fasthash;
