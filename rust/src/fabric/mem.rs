@@ -110,6 +110,11 @@ impl DmaBuf {
         if self.inner.ptr.is_null() {
             return;
         }
+        // SAFETY: the assert above proved offset + src.len() <= the
+        // allocation length, the null check skipped unbacked regions,
+        // and `src` cannot overlap the raw allocation (it is a safe
+        // &[u8] from outside it); the allocation outlives `self` via
+        // the Arc'd inner.
         unsafe {
             let dst = self.inner.ptr.add(offset);
             std::ptr::copy_nonoverlapping(src.as_ptr(), dst, src.len());
@@ -128,6 +133,10 @@ impl DmaBuf {
             dst.fill(0);
             return;
         }
+        // SAFETY: the assert above proved offset + dst.len() <= the
+        // allocation length, the null check routed unbacked regions
+        // to the zero-fill path, and `dst` is a safe &mut [u8] that
+        // cannot alias the raw allocation.
         unsafe {
             let src = self.inner.ptr.add(offset);
             std::ptr::copy_nonoverlapping(src, dst.as_mut_ptr(), dst.len());
@@ -148,6 +157,17 @@ impl DmaBuf {
         if self.inner.ptr.is_null() || dst.inner.ptr.is_null() {
             return;
         }
+        if Arc::ptr_eq(&self.inner, &dst.inner) {
+            assert!(
+                src_off + len <= dst_off || dst_off + len <= src_off,
+                "DMA copy overlap within one region"
+            );
+        }
+        // SAFETY: both asserts at the top bounds-checked src_off/
+        // dst_off + len against their allocations, the null checks
+        // skipped unbacked regions, and the ranges cannot overlap —
+        // distinct DmaBufs are distinct heap allocations, and the
+        // same-region case just asserted disjointness.
         unsafe {
             let s = self.inner.ptr.add(src_off);
             let d = dst.inner.ptr.add(dst_off);

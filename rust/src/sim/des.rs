@@ -92,6 +92,9 @@ enum Thunk {
     /// Both are monomorphized for the concrete closure type.
     Inline {
         buf: MaybeUninit<[usize; INLINE_WORDS]>,
+        // SAFETY: only ever `call_inline::<F>` / `drop_inline::<F>`
+        // for the same `F` that `Thunk::new` wrote into `buf`, so the
+        // pointee type the callee assumes always matches the buffer.
         call: unsafe fn(*mut u8, &mut Sim),
         drop_fn: unsafe fn(*mut u8),
     },
@@ -99,6 +102,10 @@ enum Thunk {
     Boxed(Box<dyn FnOnce(&mut Sim)>),
 }
 
+// SAFETY: caller must pass a pointer to an initialized `F` (written
+// by `Thunk::new`) and must not touch the buffer again — the closure
+// is moved out with `ptr::read`, so any later drop of the buffer
+// contents would be a double-drop.
 unsafe fn call_inline<F: FnOnce(&mut Sim)>(p: *mut u8, sim: &mut Sim) {
     // Moves the closure out of the buffer; the buffer must not be
     // dropped afterwards.
@@ -106,6 +113,9 @@ unsafe fn call_inline<F: FnOnce(&mut Sim)>(p: *mut u8, sim: &mut Sim) {
     f(sim)
 }
 
+// SAFETY: caller must pass a pointer to an initialized `F` that was
+// never moved out (the thunk was cancelled, not invoked); the value
+// is dropped in place exactly once.
 unsafe fn drop_inline<F>(p: *mut u8) {
     std::ptr::drop_in_place(p as *mut F)
 }
@@ -116,6 +126,10 @@ impl Thunk {
             && mem::align_of::<F>() <= mem::align_of::<usize>()
         {
             let mut buf = MaybeUninit::<[usize; INLINE_WORDS]>::uninit();
+            // SAFETY: the branch above checked size_of::<F>() fits
+            // INLINE_WORDS usizes and align_of::<F>() <=
+            // align_of::<usize>(), so the usize-aligned buffer can
+            // hold `f`; `buf` is fresh, so nothing is overwritten.
             unsafe { std::ptr::write(buf.as_mut_ptr() as *mut F, f) };
             Thunk::Inline {
                 buf,
@@ -131,6 +145,11 @@ impl Thunk {
     /// `Drop` impl (the closure is moved out, not dropped in place).
     fn invoke(self, sim: &mut Sim) {
         let this = mem::ManuallyDrop::new(self);
+        // SAFETY: `self` is wrapped in ManuallyDrop, so no Drop glue
+        // runs after the closure is moved out of its storage (`call`
+        // does ptr::read for Inline, ptr::read(b) for Boxed): each
+        // stored closure is read exactly once and never dropped in
+        // place afterwards.
         unsafe {
             match &*this {
                 Thunk::Empty => {}
@@ -151,6 +170,10 @@ impl Drop for Thunk {
     fn drop(&mut self) {
         if let Thunk::Inline { buf, drop_fn, .. } = self {
             let drop_fn = *drop_fn;
+            // SAFETY: Drop only runs if `invoke` never consumed the
+            // thunk (invoke routes `self` through ManuallyDrop), so
+            // `buf` still holds the initialized `F` that `drop_fn`
+            // (monomorphized as drop_inline::<F>) expects.
             unsafe { drop_fn(buf.as_mut_ptr() as *mut u8) }
         }
         // Boxed drops its Box via the normal enum drop glue; Empty has

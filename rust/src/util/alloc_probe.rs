@@ -31,16 +31,25 @@ pub fn alloc_count() -> u64 {
 /// ```
 pub struct CountingAlloc;
 
+// SAFETY: pure delegation — every method forwards the caller's
+// ptr/layout contract unchanged to `System` and adds only a relaxed
+// atomic increment, so the GlobalAlloc invariants are exactly
+// System's (no allocation is remapped, resized, or double-freed).
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: delegates to `System.dealloc` with the caller's
+    // ptr/layout pair unchanged; the caller's contract (ptr from this
+    // allocator, same layout) is System's contract.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: delegates to `System.realloc` with the caller's
+    // arguments unchanged; only the count is added.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)

@@ -2,6 +2,7 @@
 """Compare a regenerated bench report against a committed baseline.
 
 Usage: bench_diff.py BASELINE.json NEW.json [--tolerance PCT]
+       bench_diff.py --self-test
 
 Both files are the section/headline JSON the benches emit via
 `--json` (see README "Benches"). Every numeric headline present in
@@ -18,6 +19,7 @@ BENCH_*.json trajectory.
 
 import json
 import sys
+import tempfile
 
 
 def flatten(doc, prefix=""):
@@ -30,11 +32,91 @@ def flatten(doc, prefix=""):
     return out
 
 
-def main():
-    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+def diff(base, new, tol):
+    """Compare two flattened reports; returns (lines, warned)."""
+    lines = []
+    warned = 0
+    for key in sorted(set(base) | set(new)):
+        b, n = base.get(key), new.get(key)
+        if key.endswith("provenance"):
+            continue
+        if b is None or n is None:
+            side = "baseline" if n is None else "regenerated"
+            lines.append(f"  note: {key} only in {side} report")
+            continue
+        if not isinstance(b, (int, float)) or not isinstance(n, (int, float)):
+            continue
+        if b == 0:
+            if n != 0:
+                lines.append(f"  WARN {key}: baseline 0, now {n}")
+                warned += 1
+            continue
+        dev = (n - b) / abs(b)
+        marker = "WARN" if abs(dev) > tol else "  ok"
+        if abs(dev) > tol:
+            warned += 1
+        lines.append(f"  {marker} {key}: {b} -> {n} ({dev:+.1%})")
+    return lines, warned
+
+
+def self_test():
+    """Fixture check of flatten/diff: nesting, tolerance boundary,
+    provenance skip, one-sided keys, zero baselines, and the
+    end-to-end file path. Exits 1 on any mismatch (unlike the diff
+    itself, the self-test is a real gate)."""
+    base = {
+        "submit": {"p50_ns": 100, "p99_ns": 1000, "provenance": "desk"},
+        "old_only": {"v": 1},
+        "zero": 0,
+        "label": "text",
+    }
+    new = {
+        "submit": {"p50_ns": 120, "p99_ns": 1400, "provenance": "measured"},
+        "new_only": {"v": 2},
+        "zero": 5,
+        "label": "other",
+    }
+    lines, warned = diff(flatten(base), flatten(new), 0.30)
+    joined = "\n".join(lines)
+    checks = [
+        # 20% deviation within the 30% tolerance; 40% beyond it.
+        ("  ok submit.p50_ns: 100 -> 120 (+20.0%)" in joined, "ok line"),
+        ("WARN submit.p99_ns: 1000 -> 1400 (+40.0%)" in joined, "warn line"),
+        ("provenance" not in joined, "provenance skipped"),
+        ("old_only.v only in baseline" in joined, "baseline-only note"),
+        ("new_only.v only in regenerated" in joined, "regenerated-only note"),
+        ("WARN zero: baseline 0, now 5" in joined, "zero-baseline warn"),
+        ("label" not in joined, "non-numeric skipped"),
+        (warned == 2, f"warn count (got {warned})"),
+    ]
+    # Tolerance boundary: exactly-at-tolerance is ok, just-over warns.
+    _, w_at = diff({"k": 100}, {"k": 130}, 0.30)
+    _, w_over = diff({"k": 100}, {"k": 131}, 0.30)
+    checks.append((w_at == 0, "at-tolerance is ok"))
+    checks.append((w_over == 1, "over-tolerance warns"))
+    # End-to-end through the file-reading main().
+    with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as fb:
+        json.dump(base, fb)
+    with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as fn:
+        json.dump(new, fn)
+    main([fb.name, fn.name])
+
+    failed = [name for ok, name in checks if not ok]
+    if failed:
+        print(f"bench_diff --self-test: FAILED: {', '.join(failed)}")
+        return 1
+    print(f"bench_diff --self-test: {len(checks)} checks passed")
+    return 0
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if "--self-test" in argv:
+        sys.exit(self_test())
+    args = [a for a in argv if not a.startswith("--")]
     tol = 0.30
-    if "--tolerance" in sys.argv:
-        tol = float(sys.argv[sys.argv.index("--tolerance") + 1]) / 100.0
+    if "--tolerance" in argv:
+        tol = float(argv[argv.index("--tolerance") + 1]) / 100.0
     if len(args) != 2:
         print(__doc__)
         return
@@ -47,28 +129,9 @@ def main():
         print(f"bench_diff: cannot read reports ({e}); skipping (warn-only)")
         return
 
-    warned = 0
-    for key in sorted(set(base) | set(new)):
-        b, n = base.get(key), new.get(key)
-        if key.endswith("provenance"):
-            continue
-        if b is None or n is None:
-            side = "baseline" if n is None else "regenerated"
-            print(f"  note: {key} only in {side} report")
-            continue
-        if not isinstance(b, (int, float)) or not isinstance(n, (int, float)):
-            continue
-        if b == 0:
-            if n != 0:
-                print(f"  WARN {key}: baseline 0, now {n}")
-                warned += 1
-            continue
-        dev = (n - b) / abs(b)
-        marker = "WARN" if abs(dev) > tol else "  ok"
-        if abs(dev) > tol:
-            warned += 1
-        print(f"  {marker} {key}: {b} -> {n} ({dev:+.1%})")
-
+    lines, warned = diff(base, new, tol)
+    for line in lines:
+        print(line)
     if warned:
         print(
             f"bench_diff: {warned} headline(s) deviate more than "

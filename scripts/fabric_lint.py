@@ -1,0 +1,938 @@
+#!/usr/bin/env python3
+"""fabric-lint: repo-specific invariant checker for the Rust sources.
+
+Seven PRs of engine code have shipped desk-checked only (no Rust
+toolchain exists in the build container), and review passes kept
+re-finding the same invariant classes by hand. This linter is the
+pre-toolchain verification gate: a lightweight token/brace-aware
+scanner over `rust/src/**` that enforces the discipline rules the
+failover/submit contract rests on (see docs/ARCHITECTURE.md,
+"Enforced invariants").
+
+Rules
+-----
+R1  bump-on-success: in every `submit_*` function under
+    `rust/src/engine/`, rotation-cursor commits (`.bump()`,
+    `.bump_n()`, `.bump_masked()`) must occur lexically AFTER the
+    last fallible operation (`?`, `bail!`, `return Err`) of the
+    function body. A cursor bumped before a fallible op can move on a
+    failed submission, shifting NIC assignment for every later write.
+R2  allocate-after-validate: in every `submit_*`/`bind_*` function
+    under `rust/src/engine/`, no MR allocation (`alloc_mr`,
+    `alloc_mr_unbacked`, `reg_mr`) may precede the first validation
+    (`?` / `bail!` / health or group check). A failed bind or
+    rejected barrier must not leak a registered scratch MR.
+R3  SAFETY comments: every `unsafe` occurrence (block, fn, impl,
+    fn-pointer type) is immediately preceded by a `//`/`///` comment
+    block containing `SAFETY:`. A run of consecutive unsafe-bearing
+    lines may share the comment block above the first line of the
+    run (e.g. `unsafe impl Send` + `unsafe impl Sync`).
+R4  trait parity: the method sets of `impl TransferEngine for
+    Engine` (des_engine.rs) and `impl TransferEngine for
+    ThreadedEngine` (threaded.rs) must be identical, cover every
+    non-default trait method, and contain nothing the trait does not
+    declare.
+R5  wire tags: `wire.rs` message-tag values must be unique, and
+    every tag constant must appear in at least one decode-side
+    comparison (`== tag::X` / `!= tag::X` / match arm) somewhere in
+    `rust/src/**` — an encoder-only tag is undecodable on the wire.
+R6  lock order: `.lock()` acquisition sites in `threaded.rs`
+    (non-test code) must use only lock classes declared in the
+    allowlist's `[lock_order]` table, and nested acquisitions must
+    follow the declared order (flagging inversions and same-class
+    re-entry, the two deadlock shapes).
+R7  no panics on the release submit surface: `submit_*`, `bind_*`,
+    `route_*`, `dispatch_writes`, `execute_routed`, `remap_routed`
+    and `retarget` in `rust/src/engine/` must not contain
+    `.unwrap()`, `.expect(`, `panic!`, `unreachable!` or `assert!`
+    (`debug_assert*` is fine). Documented loud-asserts go in the
+    allowlist with a reason string.
+
+Findings print as `file:line RULE message`; exit code 1 when any
+finding survives the allowlist, 0 otherwise. Intentional exceptions
+live in scripts/fabric_lint_allow.toml (see that file for the entry
+format); every entry needs a non-empty reason.
+
+Usage: fabric_lint.py [--root DIR] [--allowlist FILE] [--no-allowlist] [-v]
+
+Stdlib-only by design: this must run in CI and in containers with no
+toolchain at all.
+"""
+
+import argparse
+import os
+import re
+import sys
+
+# ---------------------------------------------------------------------
+# Source model: raw text + a comment/string-masked shadow copy.
+# ---------------------------------------------------------------------
+
+
+def mask_source(text):
+    """Return `text` with comments and string/char literals blanked.
+
+    The masked copy has the same length and the same newline
+    positions as the original, so byte offsets and line numbers
+    computed on one apply to the other. Handles line comments, nested
+    block comments, string literals with escapes, raw strings
+    (r"..", r#".."# up to 4 hashes), byte strings, char literals, and
+    leaves lifetimes (`'a`) alone.
+    """
+    out = list(text)
+    i, n = 0, len(text)
+
+    def blank(a, b):
+        for k in range(a, b):
+            if out[k] != "\n":
+                out[k] = " "
+
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            j = text.find("\n", i)
+            j = n if j == -1 else j
+            blank(i, j)
+            i = j
+        elif c == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif text.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            blank(i, j)
+            i = j
+        elif c == '"':
+            j = i + 1
+            while j < n:
+                if text[j] == "\\":
+                    j += 2
+                elif text[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            blank(i + 1, j - 1 if j <= n and text[j - 1 : j] == '"' else j)
+            i = j
+        elif c == "r" and re.match(r'r#{0,4}"', text[i : i + 6]):
+            m = re.match(r'r(#{0,4})"', text[i : i + 6])
+            hashes = m.group(1)
+            close = '"' + hashes
+            j = text.find(close, i + len(m.group(0)))
+            j = n if j == -1 else j + len(close)
+            blank(i, j)
+            i = j
+        elif c == "b" and nxt == '"':
+            j = i + 2
+            while j < n:
+                if text[j] == "\\":
+                    j += 2
+                elif text[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            blank(i + 1, j)
+            i = j
+        elif c == "'":
+            # Char literal vs lifetime: a char literal closes within a
+            # few chars ('x', '\n', '\u{1F600}').
+            m = re.match(r"'(\\u\{[0-9a-fA-F]{1,6}\}|\\.|[^\\'])'", text[i:])
+            if m:
+                blank(i + 1, i + len(m.group(0)) - 1)
+                i += len(m.group(0))
+            else:
+                i += 1
+        else:
+            i += 1
+    return "".join(out)
+
+
+class Source:
+    """One parsed .rs file: raw text, masked text, line index."""
+
+    def __init__(self, path, relpath):
+        with open(path, encoding="utf-8") as fh:
+            self.raw = fh.read()
+        self.rel = relpath
+        self.masked = mask_source(self.raw)
+        self.raw_lines = self.raw.split("\n")
+        # line_starts[k] = byte offset where line k+1 begins
+        self.line_starts = [0]
+        for m in re.finditer("\n", self.raw):
+            self.line_starts.append(m.end())
+
+    def line_of(self, idx):
+        """1-based line number of byte offset `idx`."""
+        lo, hi = 0, len(self.line_starts) - 1
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if self.line_starts[mid] <= idx:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo + 1
+
+    def raw_line(self, lineno):
+        return self.raw_lines[lineno - 1] if lineno - 1 < len(self.raw_lines) else ""
+
+
+def match_brace(masked, open_idx):
+    """Index of the `}` matching the `{` at open_idx (masked text)."""
+    depth = 0
+    for i in range(open_idx, len(masked)):
+        c = masked[i]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(masked) - 1
+
+
+FN_RE = re.compile(r"\bfn\s+([A-Za-z_][A-Za-z0-9_]*)")
+
+
+def find_functions(src):
+    """Yield (name, sig_idx, body_open, body_close) for every fn with a
+    body. Trait methods without bodies (sig ends in `;` before any
+    `{` at paren depth 0) yield body_open == body_close == -1."""
+    out = []
+    for m in FN_RE.finditer(src.masked):
+        i = m.end()
+        depth = 0
+        body_open = -1
+        while i < len(src.masked):
+            c = src.masked[i]
+            if c in "([":
+                depth += 1
+            elif c in ")]":
+                depth -= 1
+            elif c == "{" and depth == 0:
+                body_open = i
+                break
+            elif c == ";" and depth == 0:
+                break
+            i += 1
+        if body_open == -1:
+            out.append((m.group(1), m.start(), -1, -1))
+        else:
+            out.append((m.group(1), m.start(), body_open, match_brace(src.masked, body_open)))
+    return out
+
+
+def test_mod_spans(src):
+    """Byte spans of `#[cfg(test)] mod ... { }` regions."""
+    spans = []
+    for m in re.finditer(r"#\[cfg\(test\)\]\s*(?:pub\s+)?mod\s+\w+\s*\{", src.masked):
+        open_idx = src.masked.index("{", m.start())
+        spans.append((m.start(), match_brace(src.masked, open_idx)))
+    return spans
+
+
+def in_spans(idx, spans):
+    return any(a <= idx <= b for a, b in spans)
+
+
+# ---------------------------------------------------------------------
+# Findings + allowlist
+# ---------------------------------------------------------------------
+
+
+class Finding:
+    def __init__(self, rule, rel, line, message, src_line="", stmt=""):
+        self.rule = rule
+        self.rel = rel
+        self.line = line
+        self.message = message
+        self.src_line = src_line  # raw source line, for allowlist matching
+        self.stmt = stmt  # dot-joined full statement (multi-line chains)
+
+    def __str__(self):
+        return "%s:%d %s %s" % (self.rel, self.line, self.rule, self.message)
+
+
+def stmt_text(src, idx):
+    """The full statement containing byte offset `idx`, with method
+    chains re-joined (`\\n    .lock()` -> `.lock()`) so allowlist
+    `contains` patterns match chains that rustfmt split across lines."""
+    a = idx
+    while a > 0 and src.masked[a - 1] not in ";{}":
+        a -= 1
+    b = src.masked.find(";", idx)
+    b = len(src.masked) if b == -1 else b + 1
+    return re.sub(r"\s*\.\s*", ".", src.raw[a:b]).strip()
+
+
+class AllowEntry:
+    def __init__(self):
+        self.rule = ""
+        self.file = ""
+        self.contains = ""
+        self.reason = ""
+        self.used = False
+
+    def matches(self, f):
+        if self.rule and self.rule != f.rule:
+            return False
+        if self.file and not f.rel.endswith(self.file):
+            return False
+        if self.contains and not any(
+            self.contains in hay for hay in (f.src_line, f.stmt, f.message)
+        ):
+            return False
+        return True
+
+
+class Allowlist:
+    """Minimal hand-parsed TOML subset: `[[allow]]` tables with
+    string keys, plus a `[lock_order]` table with an `order` array."""
+
+    def __init__(self):
+        self.entries = []
+        self.lock_order = []
+        self.errors = []
+
+    @classmethod
+    def parse(cls, text, name="<allowlist>"):
+        al = cls()
+        cur = None
+        section = None
+        for lineno, line in enumerate(text.split("\n"), 1):
+            stripped = line.strip()
+            if not stripped or stripped.startswith("#"):
+                continue
+            if stripped == "[[allow]]":
+                cur = AllowEntry()
+                al.entries.append(cur)
+                section = "allow"
+                continue
+            if stripped.startswith("["):
+                section = stripped.strip("[]")
+                cur = None
+                continue
+            m = re.match(r"(\w+)\s*=\s*(.*)$", stripped)
+            if not m:
+                al.errors.append("%s:%d unparseable line: %s" % (name, lineno, stripped))
+                continue
+            key, val = m.group(1), m.group(2).strip()
+            if section == "allow" and cur is not None:
+                if not (val.startswith('"') and val.endswith('"') and len(val) >= 2):
+                    al.errors.append(
+                        "%s:%d %s must be a quoted string" % (name, lineno, key)
+                    )
+                    continue
+                setattr(cur, key, val[1:-1].replace('\\"', '"'))
+            elif section == "lock_order" and key == "order":
+                al.lock_order = re.findall(r'"([^"]+)"', val)
+        for i, e in enumerate(al.entries):
+            if not e.reason.strip():
+                al.errors.append(
+                    "%s: [[allow]] entry %d (%s %s) has no reason — every "
+                    "exception must say why" % (name, i + 1, e.rule, e.contains or e.file)
+                )
+        return al
+
+    def filter(self, findings):
+        kept = []
+        for f in findings:
+            hit = next((e for e in self.entries if e.matches(f)), None)
+            if hit:
+                hit.used = True
+            else:
+                kept.append(f)
+        return kept
+
+
+DEFAULT_LOCK_ORDER = [
+    "peer_groups",
+    "shared",
+    "gossip",
+    "watchers",
+    "worker",
+    "watcher_thread",
+]
+
+
+# ---------------------------------------------------------------------
+# R1: bump-on-success
+# ---------------------------------------------------------------------
+
+BUMP_RE = re.compile(r"\.bump(?:_n|_masked)?\s*\(")
+QMARK_RE = re.compile(r"\?")
+FALLIBLE_RE = re.compile(r"\bbail!\s*[(\[]|\breturn\s+Err\b")
+
+
+def fallible_indices(masked, a, b):
+    """Offsets of fallible ops (`?`, bail!, return Err) in masked[a:b],
+    ignoring `?Sized` bounds."""
+    idxs = []
+    seg = masked[a:b]
+    for m in QMARK_RE.finditer(seg):
+        if seg[m.end() : m.end() + 5] == "Sized":
+            continue
+        idxs.append(a + m.start())
+    for m in FALLIBLE_RE.finditer(seg):
+        idxs.append(a + m.start())
+    return idxs
+
+
+def check_r1(src, findings):
+    if "/engine/" not in "/" + src.rel.replace(os.sep, "/"):
+        return
+    tests = test_mod_spans(src)
+    for name, sig, bo, bc in find_functions(src):
+        if bo == -1 or not name.startswith("submit_") or in_spans(sig, tests):
+            continue
+        fallible = fallible_indices(src.masked, bo, bc)
+        if not fallible:
+            continue
+        last_fallible = max(fallible)
+        for m in BUMP_RE.finditer(src.masked, bo, bc):
+            if m.start() < last_fallible:
+                line = src.line_of(m.start())
+                findings.append(
+                    Finding(
+                        "R1",
+                        src.rel,
+                        line,
+                        "rotation commit in `%s` precedes a later fallible op "
+                        "(line %d): cursors must bump only after the last "
+                        "`?`/`bail!`/`return Err` so a failed submission "
+                        "never advances the rotation" % (name, src.line_of(last_fallible)),
+                        src.raw_line(line),
+                    )
+                )
+
+
+# ---------------------------------------------------------------------
+# R2: allocate-after-validate
+# ---------------------------------------------------------------------
+
+ALLOC_RE = re.compile(r"\b(?:alloc_mr|alloc_mr_unbacked|reg_mr)\s*\(")
+VALIDATE_RE = re.compile(
+    r"\bbail!\s*[(\[]|\breturn\s+Err\b|\bup_count\s*\(|\bprepare_bind\s*\(|"
+    r"\bensure_group_up\s*\(|\broute_[a-z_]+\s*\(|\.check\s*\("
+)
+
+
+def check_r2(src, findings):
+    if "/engine/" not in "/" + src.rel.replace(os.sep, "/"):
+        return
+    tests = test_mod_spans(src)
+    for name, sig, bo, bc in find_functions(src):
+        if bo == -1 or in_spans(sig, tests):
+            continue
+        if not (name.startswith("submit_") or name.startswith("bind_")):
+            continue
+        m = ALLOC_RE.search(src.masked, bo, bc)
+        if not m:
+            continue
+        validated = VALIDATE_RE.search(src.masked, bo, m.start()) or [
+            i for i in fallible_indices(src.masked, bo, m.start())
+        ]
+        if not validated:
+            line = src.line_of(m.start())
+            findings.append(
+                Finding(
+                    "R2",
+                    src.rel,
+                    line,
+                    "`%s` allocates/registers an MR before any validation or "
+                    "health check: a rejected submission would leak the "
+                    "registration (validate, then allocate)" % name,
+                    src.raw_line(line),
+                )
+            )
+
+
+# ---------------------------------------------------------------------
+# R3: SAFETY comments on every unsafe occurrence
+# ---------------------------------------------------------------------
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+
+
+def check_r3(src, findings):
+    unsafe_lines = sorted({src.line_of(m.start()) for m in UNSAFE_RE.finditer(src.masked)})
+    unsafe_set = set(unsafe_lines)
+    for line in unsafe_lines:
+        # Inline comment before the keyword on the same line counts.
+        if "SAFETY:" in src.raw_line(line).split("unsafe")[0]:
+            continue
+        # Anchor: first line of a consecutive run of unsafe-bearing
+        # lines — the run shares one comment block.
+        anchor = line
+        while anchor - 1 in unsafe_set:
+            anchor -= 1
+        ok = False
+        p = anchor - 1
+        # Skip attribute lines between the comment and the item.
+        while p >= 1 and src.raw_line(p).strip().startswith("#["):
+            p -= 1
+        while p >= 1:
+            stripped = src.raw_line(p).strip()
+            if stripped.startswith("//"):
+                if "SAFETY:" in stripped:
+                    ok = True
+                    break
+                p -= 1
+            else:
+                break
+        if not ok:
+            findings.append(
+                Finding(
+                    "R3",
+                    src.rel,
+                    line,
+                    "`unsafe` without an immediately preceding `// SAFETY:` "
+                    "comment stating the invariant it relies on",
+                    src.raw_line(line),
+                )
+            )
+
+
+# ---------------------------------------------------------------------
+# R4: TransferEngine trait/impl parity
+# ---------------------------------------------------------------------
+
+
+def block_methods(src, header_re):
+    """(methods_with_body, methods_without_body) for fns declared at
+    depth 1 of the first block whose header matches `header_re`."""
+    m = header_re.search(src.masked)
+    if not m:
+        return None, None
+    open_idx = src.masked.index("{", m.start())
+    close_idx = match_brace(src.masked, open_idx)
+    with_body, without_body = set(), set()
+    for name, sig, bo, bc in find_functions(src):
+        if not (open_idx < sig < close_idx):
+            continue
+        # depth-1 only: the fn must not be nested inside another fn of
+        # the block (closures don't use `fn`, so nesting is rare;
+        # check that no other fn body encloses this sig).
+        if bo == -1:
+            without_body.add(name)
+        else:
+            with_body.add(name)
+    return with_body, without_body
+
+
+def check_r4(root, sources, findings):
+    by_rel = {s.rel.replace(os.sep, "/"): s for s in sources}
+    traits = by_rel.get("rust/src/engine/traits.rs")
+    des = by_rel.get("rust/src/engine/des_engine.rs")
+    thr = by_rel.get("rust/src/engine/threaded.rs")
+    if not (traits and des and thr):
+        return  # fixture trees without the full engine are fine
+    t_default, t_required = block_methods(
+        traits, re.compile(r"\btrait\s+TransferEngine\b[^{]*")
+    )
+    if t_default is None:
+        findings.append(
+            Finding("R4", traits.rel, 1, "trait TransferEngine not found in traits.rs")
+        )
+        return
+    trait_all = t_default | t_required
+    impls = []
+    for src, ty in ((des, "Engine"), (thr, "ThreadedEngine")):
+        methods, _ = block_methods(
+            src, re.compile(r"\bimpl\s+TransferEngine\s+for\s+%s\b" % ty)
+        )
+        if methods is None:
+            findings.append(
+                Finding(
+                    "R4", src.rel, 1, "impl TransferEngine for %s not found" % ty
+                )
+            )
+            return
+        impls.append((src, ty, methods))
+        for missing in sorted(t_required - methods):
+            findings.append(
+                Finding(
+                    "R4",
+                    src.rel,
+                    1,
+                    "impl TransferEngine for %s is missing required trait "
+                    "method `%s`" % (ty, missing),
+                )
+            )
+        for extra in sorted(methods - trait_all):
+            findings.append(
+                Finding(
+                    "R4",
+                    src.rel,
+                    1,
+                    "impl TransferEngine for %s defines `%s` which the trait "
+                    "does not declare" % (ty, extra),
+                )
+            )
+    (src_a, ty_a, a), (src_b, ty_b, b) = impls
+    for name in sorted(a ^ b):
+        present, absent, where = (ty_a, ty_b, src_b) if name in a else (ty_b, ty_a, src_a)
+        findings.append(
+            Finding(
+                "R4",
+                where.rel,
+                1,
+                "runtime parity break: `%s` overridden by %s but not by %s"
+                % (name, present, absent),
+            )
+        )
+
+
+# ---------------------------------------------------------------------
+# R5: wire tag uniqueness + decode coverage
+# ---------------------------------------------------------------------
+
+TAG_CONST_RE = re.compile(r"pub\s+const\s+(\w+)\s*:\s*u8\s*=\s*(\d+)\s*;")
+
+
+def check_r5(root, sources, findings):
+    by_rel = {s.rel.replace(os.sep, "/"): s for s in sources}
+    wire = by_rel.get("rust/src/engine/wire.rs")
+    if not wire:
+        return
+    m = re.search(r"\bmod\s+tag\s*\{", wire.masked)
+    if not m:
+        findings.append(Finding("R5", wire.rel, 1, "no `mod tag` found in wire.rs"))
+        return
+    open_idx = wire.masked.index("{", m.start())
+    close_idx = match_brace(wire.masked, open_idx)
+    tags = {}
+    for cm in TAG_CONST_RE.finditer(wire.raw[open_idx:close_idx]):
+        name, val = cm.group(1), int(cm.group(2))
+        at = open_idx + cm.start()
+        if val in {v for v in tags.values()}:
+            dup = next(k for k, v in tags.items() if v == val)
+            findings.append(
+                Finding(
+                    "R5",
+                    wire.rel,
+                    wire.line_of(at),
+                    "duplicate wire tag value %d: `%s` collides with `%s` — "
+                    "decoders cannot distinguish the messages" % (val, name, dup),
+                    wire.raw_line(wire.line_of(at)),
+                )
+            )
+        tags[name] = val
+    # Decode coverage: each tag needs >= 1 comparison site anywhere.
+    for name in sorted(tags):
+        covered = False
+        use_re = re.compile(r"tag::" + name + r"\b")
+        for s in sources:
+            for um in use_re.finditer(s.masked):
+                line = s.raw_line(s.line_of(um.start()))
+                if "==" in line or "!=" in line or "=>" in line:
+                    covered = True
+                    break
+            if covered:
+                break
+        if not covered:
+            findings.append(
+                Finding(
+                    "R5",
+                    wire.rel,
+                    wire.line_of(open_idx),
+                    "tag `%s` has no decode-side comparison anywhere in "
+                    "rust/src — an encodable but undecodable message" % name,
+                )
+            )
+
+
+# ---------------------------------------------------------------------
+# R6: lock acquisition order in threaded.rs
+# ---------------------------------------------------------------------
+
+LOCK_RE = re.compile(r"\.lock\s*\(\s*\)")
+IDENT_CHARS = re.compile(r"[A-Za-z0-9_]")
+
+
+def lock_class(masked, idx):
+    """Identifier immediately preceding the `.lock()` at `idx`
+    (skipping whitespace/newlines), or '' if not an identifier."""
+    j = idx - 1
+    while j >= 0 and masked[j].isspace():
+        j -= 1
+    end = j + 1
+    while j >= 0 and IDENT_CHARS.match(masked[j]):
+        j -= 1
+    return masked[j + 1 : end]
+
+
+def enclosing_block_end(masked, idx):
+    """Offset of the close brace of the innermost block containing
+    idx (scan forward, balancing)."""
+    depth = 0
+    for i in range(idx, len(masked)):
+        c = masked[i]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            if depth == 0:
+                return i
+            depth -= 1
+    return len(masked) - 1
+
+
+def stmt_head(masked, idx):
+    a = idx
+    while a > 0 and masked[a - 1] not in ";{}":
+        a -= 1
+    return masked[a:idx].strip()
+
+
+def chain_after_lock(masked, end_idx):
+    """Skip `.unwrap()` / `.expect(..)` / `?` adapters after a
+    `.lock()` call and report whether the chain continues with a
+    further projection (`.field` / `.method(`). A continued chain
+    means the MutexGuard is a temporary — the binding holds the
+    projected value, not the guard."""
+    i = end_idx
+    n = len(masked)
+    while True:
+        j = i
+        while j < n and masked[j].isspace():
+            j += 1
+        if j < n and masked[j] == "?":
+            i = j + 1
+            continue
+        if masked.startswith(".unwrap", j) or masked.startswith(".expect", j):
+            k = masked.find("(", j)
+            if k == -1:
+                break
+            depth, p = 0, k
+            while p < n:
+                if masked[p] == "(":
+                    depth += 1
+                elif masked[p] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                p += 1
+            i = p + 1
+            continue
+        break
+    j = i
+    while j < n and masked[j].isspace():
+        j += 1
+    return j < n and masked[j] == "."
+
+
+def check_r6(root, sources, lock_order, findings):
+    by_rel = {s.rel.replace(os.sep, "/"): s for s in sources}
+    src = by_rel.get("rust/src/engine/threaded.rs")
+    if not src:
+        return
+    order = lock_order or DEFAULT_LOCK_ORDER
+    tests = test_mod_spans(src)
+    sites = []  # (idx, class, holding, scope_end)
+    for m in LOCK_RE.finditer(src.masked):
+        if in_spans(m.start(), tests):
+            continue
+        cls = lock_class(src.masked, m.start())
+        if not cls:
+            continue
+        head = stmt_head(src.masked, m.start())
+        continues = chain_after_lock(src.masked, m.end())
+        if not continues and re.match(r"(let|if\s+let|while\s+let)\b", head):
+            # The guard itself is bound: live to end of the enclosing
+            # block.
+            holding = True
+            scope_end = enclosing_block_end(src.masked, m.start())
+        elif continues and re.search(r"\b(if|while|match)\b", head):
+            # Scrutinee temporary (`if let Some(x) = m.lock()...take()`):
+            # pre-2024 editions keep the guard alive through the body.
+            holding = True
+            bo = src.masked.find("{", m.end())
+            scope_end = match_brace(src.masked, bo) if bo != -1 else m.end()
+        else:
+            # Plain temporary: guard dies at the end of the statement.
+            holding = False
+            semi = src.masked.find(";", m.end())
+            scope_end = semi if semi != -1 else m.end()
+        sites.append((m.start(), cls, holding, scope_end))
+        if cls not in order:
+            line = src.line_of(m.start())
+            findings.append(
+                Finding(
+                    "R6",
+                    src.rel,
+                    line,
+                    "lock class `%s` is not in the declared acquisition-order "
+                    "table (add it to [lock_order] in the allowlist at the "
+                    "right position)" % cls,
+                    src.raw_line(line),
+                )
+            )
+    for i, (idx_a, cls_a, holding, scope_end) in enumerate(sites):
+        if not holding or cls_a not in order:
+            continue
+        for idx_b, cls_b, _, _ in sites[i + 1 :]:
+            if idx_b > scope_end:
+                break
+            if cls_b not in order:
+                continue
+            if cls_a == cls_b:
+                line = src.line_of(idx_b)
+                findings.append(
+                    Finding(
+                        "R6",
+                        src.rel,
+                        line,
+                        "`%s` re-locked while a `%s` guard from line %d is "
+                        "still live: std::sync::Mutex self-deadlocks"
+                        % (cls_b, cls_a, src.line_of(idx_a)),
+                        src.raw_line(line),
+                    )
+                )
+            elif order.index(cls_b) < order.index(cls_a):
+                line = src.line_of(idx_b)
+                findings.append(
+                    Finding(
+                        "R6",
+                        src.rel,
+                        line,
+                        "lock-order inversion: `%s` acquired while holding "
+                        "`%s` (line %d), but the declared order is %s"
+                        % (cls_b, cls_a, src.line_of(idx_a), " < ".join(order)),
+                        src.raw_line(line),
+                    )
+                )
+
+
+# ---------------------------------------------------------------------
+# R7: no unwrap/expect/panic on the release submit surface
+# ---------------------------------------------------------------------
+
+PANIC_RE = re.compile(
+    r"\.unwrap\s*\(|\.expect\s*\(|\bpanic!\s*[(\[]|\bunreachable!\s*[(\[]|"
+    r"(?<!debug_)\bassert(?:_eq|_ne)?!\s*[(\[]"
+)
+R7_FNS = re.compile(
+    r"^(submit_|bind_|route_)|^(dispatch_writes|execute_routed|remap_routed|retarget)$"
+)
+
+
+def check_r7(src, findings):
+    if "/engine/" not in "/" + src.rel.replace(os.sep, "/"):
+        return
+    tests = test_mod_spans(src)
+    for name, sig, bo, bc in find_functions(src):
+        if bo == -1 or in_spans(sig, tests) or not R7_FNS.search(name):
+            continue
+        for m in PANIC_RE.finditer(src.masked, bo, bc):
+            line = src.line_of(m.start())
+            token = m.group(0).strip(" (").lstrip(".")
+            findings.append(
+                Finding(
+                    "R7",
+                    src.rel,
+                    line,
+                    "`%s` on the release submit surface (`%s`): submit paths "
+                    "return Result — propagate or allowlist with a reason"
+                    % (token, name),
+                    src.raw_line(line),
+                    stmt_text(src, m.start()),
+                )
+            )
+
+
+# ---------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------
+
+
+def collect_sources(root):
+    src_root = os.path.join(root, "rust", "src")
+    sources = []
+    for dirpath, _dirnames, filenames in os.walk(src_root):
+        for fname in sorted(filenames):
+            if not fname.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root)
+            sources.append(Source(path, rel))
+    return sources
+
+
+def run(root, allowlist):
+    """Run every rule over `root`; returns (findings, notes)."""
+    sources = collect_sources(root)
+    findings = []
+    for src in sources:
+        check_r1(src, findings)
+        check_r2(src, findings)
+        check_r3(src, findings)
+        check_r7(src, findings)
+    check_r4(root, sources, findings)
+    check_r5(root, sources, findings)
+    check_r6(root, sources, allowlist.lock_order if allowlist else [], findings)
+    notes = []
+    if allowlist:
+        findings = allowlist.filter(findings)
+        for e in allowlist.entries:
+            if not e.used:
+                notes.append(
+                    "note: unused allowlist entry (%s %s %s) — remove it or "
+                    "fix the pattern" % (e.rule, e.file, e.contains)
+                )
+    findings.sort(key=lambda f: (f.rel, f.line, f.rule))
+    return findings, notes
+
+
+def main(argv=None):
+    default_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ap = argparse.ArgumentParser(description="fabric-lint invariant checker")
+    ap.add_argument("--root", default=default_root, help="repo root (contains rust/src)")
+    ap.add_argument(
+        "--allowlist",
+        default=None,
+        help="allowlist file (default: <root>/scripts/fabric_lint_allow.toml)",
+    )
+    ap.add_argument("--no-allowlist", action="store_true", help="ignore the allowlist")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    allowlist = None
+    if not args.no_allowlist:
+        path = args.allowlist or os.path.join(args.root, "scripts", "fabric_lint_allow.toml")
+        if os.path.exists(path):
+            with open(path, encoding="utf-8") as fh:
+                allowlist = Allowlist.parse(fh.read(), path)
+            if allowlist.errors:
+                for e in allowlist.errors:
+                    print(e, file=sys.stderr)
+                return 2
+        elif args.allowlist:
+            print("fabric-lint: allowlist %s not found" % path, file=sys.stderr)
+            return 2
+
+    findings, notes = run(args.root, allowlist)
+    for f in findings:
+        print(f)
+    if args.verbose:
+        for n in notes:
+            print(n)
+    n_allowed = sum(1 for e in (allowlist.entries if allowlist else []) if e.used)
+    if findings:
+        print(
+            "fabric-lint: %d finding(s) (%d allowlisted)" % (len(findings), n_allowed),
+            file=sys.stderr,
+        )
+        return 1
+    if args.verbose:
+        print("fabric-lint: clean (%d allowlisted exception(s))" % n_allowed)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

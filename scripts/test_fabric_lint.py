@@ -1,0 +1,539 @@
+#!/usr/bin/env python3
+"""Tests for fabric_lint.py: one passing and one failing fixture per
+rule R1–R7, plus allowlist round-trip and CLI exit codes.
+
+Run directly (`python3 scripts/test_fabric_lint.py`) or via the CI
+`lint-invariants` job. Stdlib-only, like the linter.
+"""
+
+import os
+import shutil
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import fabric_lint  # noqa: E402
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint_tree(files, allow_text=None):
+    """Write `files` ({relpath: source}) under a temp repo root, run
+    the linter, and return (findings, notes)."""
+    root = tempfile.mkdtemp(prefix="fabric_lint_test_")
+    try:
+        for rel, text in files.items():
+            path = os.path.join(root, rel)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write(text)
+        allowlist = None
+        if allow_text is not None:
+            allowlist = fabric_lint.Allowlist.parse(allow_text)
+        return fabric_lint.run(root, allowlist)
+    finally:
+        shutil.rmtree(root)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+ENGINE = "rust/src/engine/fixture.rs"
+
+
+class TestR1BumpOnSuccess(unittest.TestCase):
+    def test_fail_bump_before_fallible(self):
+        src = """
+pub fn submit_single_write(&self) -> Result<()> {
+    let routed = route_single_write(n, rot.next())?;
+    rot.bump();
+    self.dispatch(routed)?;
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(rules_of(findings), ["R1"])
+        self.assertIn("rotation commit", findings[0].message)
+
+    def test_pass_bump_after_last_fallible(self):
+        src = """
+pub fn submit_single_write(&self) -> Result<()> {
+    let routed = route_single_write(n, rot.next())?;
+    self.dispatch(routed)?;
+    rot.bump();
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+    def test_pass_bump_after_return_err_branch(self):
+        # The threaded submit_barrier shape: an error branch with
+        # `return Err` lexically precedes the bump.
+        src = """
+pub fn submit_barrier(&self) -> Result<()> {
+    let routed = route_barrier(n, rot.next())?;
+    if let Err(e) = self.dispatch(routed) {
+        self.dereg(&scratch);
+        return Err(e);
+    }
+    rot.bump();
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+    def test_bump_n_and_masked_also_checked(self):
+        src = """
+pub fn submit_write_batch(&self) -> Result<()> {
+    rot.bump_n(k);
+    self.dispatch(routed)?;
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(rules_of(findings), ["R1"])
+
+    def test_non_engine_files_ignored(self):
+        src = "pub fn submit_x() -> Result<()> { rot.bump(); f()?; Ok(()) }\n"
+        findings, _ = lint_tree({"rust/src/util/other.rs": src})
+        self.assertEqual(findings, [])
+
+
+class TestR2AllocateAfterValidate(unittest.TestCase):
+    def test_fail_alloc_before_validation(self):
+        src = """
+pub fn submit_barrier(&self) -> Result<()> {
+    let (scratch, desc) = self.alloc_mr(gpu, 1);
+    let routed = route_barrier(n, rot.next())?;
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(rules_of(findings), ["R2"])
+        self.assertIn("before any validation", findings[0].message)
+
+    def test_pass_validate_then_alloc(self):
+        src = """
+pub fn submit_barrier(&self) -> Result<()> {
+    let routed = route_barrier(n, rot.next())?;
+    let (scratch, desc) = self.alloc_mr(gpu, 1);
+    self.dispatch(routed)?;
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+    def test_bind_fns_in_scope(self):
+        src = """
+pub fn bind_peer_group_mrs(&self) -> Result<()> {
+    let (scratch, _) = self.alloc_mr(gpu, 1);
+    let peers = pg.prepare_bind(group, fanout, descs)?;
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(rules_of(findings), ["R2"])
+
+    def test_pass_prepare_bind_counts_as_validation(self):
+        src = """
+pub fn bind_peer_group_mrs(&self) -> Result<()> {
+    let peers = pg.prepare_bind(group, fanout, descs)?;
+    let (scratch, _) = self.alloc_mr(gpu, 1);
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+
+class TestR3SafetyComments(unittest.TestCase):
+    def test_fail_uncommented_unsafe_block(self):
+        src = """
+pub fn f(p: *mut u8) {
+    unsafe { std::ptr::write(p, 0) };
+}
+"""
+        findings, _ = lint_tree({"rust/src/util/x.rs": src})
+        self.assertEqual(rules_of(findings), ["R3"])
+
+    def test_pass_commented_unsafe_block(self):
+        src = """
+pub fn f(p: *mut u8) {
+    // SAFETY: caller guarantees p is valid and aligned.
+    unsafe { std::ptr::write(p, 0) };
+}
+"""
+        findings, _ = lint_tree({"rust/src/util/x.rs": src})
+        self.assertEqual(findings, [])
+
+    def test_run_of_unsafe_items_shares_one_comment(self):
+        src = """
+// SAFETY: handle type; access is synchronized by the registry lock.
+unsafe impl Send for Buf {}
+unsafe impl Sync for Buf {}
+"""
+        findings, _ = lint_tree({"rust/src/util/x.rs": src})
+        self.assertEqual(findings, [])
+
+    def test_comment_without_safety_keyword_fails(self):
+        src = """
+// this is fine, trust me
+pub fn g() { unsafe { h() } }
+"""
+        findings, _ = lint_tree({"rust/src/util/x.rs": src})
+        self.assertEqual(rules_of(findings), ["R3"])
+
+    def test_unsafe_in_string_or_comment_ignored(self):
+        src = """
+// the word unsafe in a comment is not code
+pub fn f() -> &'static str { "unsafe" }
+"""
+        findings, _ = lint_tree({"rust/src/util/x.rs": src})
+        self.assertEqual(findings, [])
+
+    def test_attribute_between_comment_and_item_ok(self):
+        src = """
+// SAFETY: delegation to System.
+#[inline]
+unsafe fn alloc(&self) {}
+"""
+        findings, _ = lint_tree({"rust/src/util/x.rs": src})
+        self.assertEqual(findings, [])
+
+
+R4_TRAIT = """
+pub trait TransferEngine {
+    fn alloc(&self) -> u8;
+    fn submit(&self) -> u8;
+    fn main_address(&self) -> u8 { 0 }
+}
+"""
+
+
+class TestR4TraitParity(unittest.TestCase):
+    def tree(self, des_methods, thr_methods):
+        des = "pub struct Engine;\nimpl TransferEngine for Engine {\n"
+        for m in des_methods:
+            des += "    fn %s(&self) -> u8 { 1 }\n" % m
+        des += "}\n"
+        thr = "pub struct ThreadedEngine;\nimpl TransferEngine for ThreadedEngine {\n"
+        for m in thr_methods:
+            thr += "    fn %s(&self) -> u8 { 1 }\n" % m
+        thr += "}\n"
+        return {
+            "rust/src/engine/traits.rs": R4_TRAIT,
+            "rust/src/engine/des_engine.rs": des,
+            "rust/src/engine/threaded.rs": thr,
+        }
+
+    def test_pass_parity(self):
+        findings, _ = lint_tree(self.tree(["alloc", "submit"], ["alloc", "submit"]))
+        self.assertEqual(findings, [])
+
+    def test_fail_missing_required_method(self):
+        findings, _ = lint_tree(self.tree(["alloc", "submit"], ["alloc"]))
+        self.assertEqual(rules_of(findings), ["R4"])
+        msgs = " | ".join(f.message for f in findings)
+        self.assertIn("missing required trait method `submit`", msgs)
+        self.assertIn("parity break", msgs)
+
+    def test_fail_undeclared_extra_method(self):
+        findings, _ = lint_tree(
+            self.tree(["alloc", "submit", "rogue"], ["alloc", "submit", "rogue"])
+        )
+        self.assertEqual(rules_of(findings), ["R4"])
+        self.assertTrue(all("rogue" in f.message for f in findings))
+
+    def test_default_methods_may_be_omitted(self):
+        # main_address has a default body: neither impl overrides it.
+        findings, _ = lint_tree(self.tree(["alloc", "submit"], ["alloc", "submit"]))
+        self.assertEqual(findings, [])
+
+    def test_default_override_on_one_runtime_is_parity_break(self):
+        findings, _ = lint_tree(
+            self.tree(["alloc", "submit", "main_address"], ["alloc", "submit"])
+        )
+        self.assertEqual(rules_of(findings), ["R4"])
+        self.assertIn("main_address", findings[0].message)
+
+
+class TestR5WireTags(unittest.TestCase):
+    WIRE_OK = """
+pub mod tag {
+    pub const NET_ADDR: u8 = 1;
+    pub const MR_DESC: u8 = 2;
+}
+pub fn decode(t: u8) -> Result<()> {
+    if t != tag::NET_ADDR && t != tag::MR_DESC { bail!("bad tag"); }
+    Ok(())
+}
+"""
+
+    def test_pass_unique_and_decoded(self):
+        findings, _ = lint_tree({"rust/src/engine/wire.rs": self.WIRE_OK})
+        self.assertEqual(findings, [])
+
+    def test_fail_duplicate_tag_value(self):
+        src = self.WIRE_OK.replace("MR_DESC: u8 = 2", "MR_DESC: u8 = 1")
+        findings, _ = lint_tree({"rust/src/engine/wire.rs": src})
+        self.assertEqual(rules_of(findings), ["R5"])
+        self.assertIn("duplicate wire tag value 1", findings[0].message)
+
+    def test_fail_encoder_only_tag(self):
+        src = """
+pub mod tag {
+    pub const NET_ADDR: u8 = 1;
+    pub const GHOST: u8 = 9;
+}
+pub fn encode() -> Vec<u8> { vec![tag::GHOST] }
+pub fn decode(t: u8) -> bool { t == tag::NET_ADDR }
+"""
+        findings, _ = lint_tree({"rust/src/engine/wire.rs": src})
+        self.assertEqual(rules_of(findings), ["R5"])
+        self.assertIn("GHOST", findings[0].message)
+
+    def test_decode_in_other_file_counts(self):
+        src = """
+pub mod tag {
+    pub const KV_DISPATCH: u8 = 3;
+}
+"""
+        other = "pub fn peek(t: u8) -> bool { t == tag::KV_DISPATCH }\n"
+        findings, _ = lint_tree(
+            {"rust/src/engine/wire.rs": src, "rust/src/apps/proto.rs": other}
+        )
+        self.assertEqual(findings, [])
+
+
+class TestR6LockOrder(unittest.TestCase):
+    THREADED = "rust/src/engine/threaded.rs"
+
+    def test_fail_inversion(self):
+        # Declared order: peer_groups < shared. Taking shared first
+        # and peer_groups while holding it inverts the order.
+        src = """
+fn reactor(&self) {
+    let sh = self.inner.shared.lock().unwrap();
+    let pg = self.inner.peer_groups.lock().unwrap();
+    drop(pg);
+}
+"""
+        findings, _ = lint_tree({self.THREADED: src})
+        self.assertEqual(rules_of(findings), ["R6"])
+        self.assertIn("inversion", findings[0].message)
+
+    def test_pass_declared_order(self):
+        src = """
+fn reactor(&self) {
+    let pg = self.inner.peer_groups.lock().unwrap();
+    let sh = self.inner.shared.lock().unwrap();
+}
+"""
+        findings, _ = lint_tree({self.THREADED: src})
+        self.assertEqual(findings, [])
+
+    def test_fail_same_class_reentry(self):
+        src = """
+fn reactor(&self) {
+    let sh = self.inner.shared.lock().unwrap();
+    let again = self.inner.shared.lock().unwrap();
+}
+"""
+        findings, _ = lint_tree({self.THREADED: src})
+        self.assertEqual(rules_of(findings), ["R6"])
+        self.assertIn("re-locked", findings[0].message)
+
+    def test_pass_temporary_guard_does_not_hold(self):
+        # The guard is a temporary (the chain projects past it), so it
+        # dies at the end of the statement — the later lock is fine.
+        src = """
+fn reactor(&self) {
+    let entry = shared.lock().unwrap().retry.remove(&id);
+    let sh = shared.lock().unwrap();
+}
+"""
+        findings, _ = lint_tree({self.THREADED: src})
+        self.assertEqual(findings, [])
+
+    def test_fail_undeclared_class(self):
+        src = """
+fn reactor(&self) {
+    let m = self.mystery.lock().unwrap();
+}
+"""
+        findings, _ = lint_tree({self.THREADED: src})
+        self.assertEqual(rules_of(findings), ["R6"])
+        self.assertIn("mystery", findings[0].message)
+
+    def test_pass_scoped_guards_sequential(self):
+        src = """
+fn reactor(&self) {
+    { let sh = shared.lock().unwrap(); }
+    { let pg = peer_groups.lock().unwrap(); }
+}
+"""
+        findings, _ = lint_tree({self.THREADED: src})
+        self.assertEqual(findings, [])
+
+    def test_lock_order_from_allowlist(self):
+        # Reversing the declared order flips which nesting is legal.
+        allow = '[lock_order]\norder = ["shared", "peer_groups"]\n'
+        src = """
+fn reactor(&self) {
+    let sh = shared.lock().unwrap();
+    let pg = peer_groups.lock().unwrap();
+}
+"""
+        findings, _ = lint_tree({self.THREADED: src}, allow)
+        self.assertEqual(findings, [])
+
+    def test_test_mod_ignored(self):
+        src = """
+#[cfg(test)]
+mod tests {
+    fn t() {
+        let a = shared.lock().unwrap();
+        let b = shared.lock().unwrap();
+    }
+}
+"""
+        findings, _ = lint_tree({self.THREADED: src})
+        self.assertEqual(findings, [])
+
+
+class TestR7NoPanicOnSubmitSurface(unittest.TestCase):
+    def test_fail_unwrap(self):
+        src = """
+pub fn submit_send(&self) -> Result<()> {
+    self.tx.send(cmd).unwrap();
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(rules_of(findings), ["R7"])
+
+    def test_fail_assert_and_expect(self):
+        src = """
+pub fn dispatch_writes(&self) -> Result<()> {
+    assert!(!routed.is_empty(), "empty transfer");
+    self.tx.send(cmd).expect("worker gone");
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual([f.rule for f in findings], ["R7", "R7"])
+
+    def test_pass_debug_assert_and_result(self):
+        src = """
+pub fn submit_send(&self) -> Result<()> {
+    debug_assert!(n > 0);
+    debug_assert_eq!(a, b);
+    self.tx.send(cmd)?;
+    Ok(())
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+    def test_non_surface_fns_ignored(self):
+        src = "pub fn new() -> Self { thread::spawn(f).expect(\"spawn\"); }\n"
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+    def test_test_mod_ignored(self):
+        src = """
+#[cfg(test)]
+mod tests {
+    fn submit_probe() { x.unwrap(); }
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+
+class TestAllowlist(unittest.TestCase):
+    FAIL_SRC = """
+pub fn submit_send(&self) -> Result<()> {
+    self.tx.send(cmd).expect("worker gone");
+    Ok(())
+}
+"""
+
+    def test_round_trip_filters_finding(self):
+        allow = (
+            "[[allow]]\n"
+            'rule = "R7"\n'
+            'file = "rust/src/engine/fixture.rs"\n'
+            'contains = "expect(\\"worker gone\\")"\n'
+            'reason = "worker death is unrecoverable"\n'
+        )
+        findings, notes = lint_tree({ENGINE: self.FAIL_SRC}, allow)
+        self.assertEqual(findings, [])
+        self.assertEqual(notes, [])
+
+    def test_unused_entry_noted(self):
+        allow = (
+            "[[allow]]\n"
+            'rule = "R7"\n'
+            'file = "rust/src/engine/fixture.rs"\n'
+            'contains = "no such line"\n'
+            'reason = "stale"\n'
+        )
+        findings, notes = lint_tree({ENGINE: self.FAIL_SRC}, allow)
+        self.assertEqual(rules_of(findings), ["R7"])
+        self.assertEqual(len(notes), 1)
+        self.assertIn("unused allowlist entry", notes[0])
+
+    def test_reasonless_entry_rejected(self):
+        al = fabric_lint.Allowlist.parse('[[allow]]\nrule = "R7"\ncontains = "x"\n')
+        self.assertTrue(al.errors)
+        self.assertIn("no reason", al.errors[0])
+
+    def test_multiline_chain_matches_stmt(self):
+        # `.lock()\n.unwrap()` split across lines still matches a
+        # `.lock().unwrap()` contains pattern via the joined statement.
+        src = """
+pub fn submit_scatter(&self) -> Result<()> {
+    self.inner
+        .peer_groups
+        .lock()
+        .unwrap()
+        .check(group, n);
+    Ok(())
+}
+"""
+        allow = (
+            "[[allow]]\n"
+            'rule = "R7"\n'
+            'contains = ".lock().unwrap()"\n'
+            'reason = "poisoning propagates"\n'
+        )
+        findings, _ = lint_tree({ENGINE: src}, allow)
+        self.assertEqual(findings, [])
+
+
+class TestCli(unittest.TestCase):
+    def test_exit_zero_on_repo(self):
+        # The committed tree must be clean with the committed allowlist.
+        self.assertEqual(fabric_lint.main(["--root", REPO_ROOT]), 0)
+
+    def test_exit_one_on_failing_fixture(self):
+        root = tempfile.mkdtemp(prefix="fabric_lint_cli_")
+        try:
+            path = os.path.join(root, ENGINE)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write("pub fn submit_x(&self) { y.unwrap(); }\n")
+            self.assertEqual(fabric_lint.main(["--root", root]), 1)
+        finally:
+            shutil.rmtree(root)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
