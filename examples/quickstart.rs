@@ -218,6 +218,28 @@ fn demo(cx: &mut Cx, node_a: &dyn TransferEngine, node_b: &dyn TransferEngine) {
     node_a.report_remote_health(0, b0, true);
     assert_eq!(node_a.link_health_mask(0, b0), 0b11, "full fanout restored");
     println!("link healed and re-trusted: lane mask {:#04b}", node_a.link_health_mask(0, b0));
+
+    // --- Telemetry: what did this demo actually put on the wire? -------
+    // Every engine keeps an always-on counter registry plus a bounded
+    // ring of submission spans — same shape on both runtimes, readable
+    // at any point. `fabricctl kvcache --metrics-json / --trace-out`
+    // exposes the same two calls from the command line.
+    let snap = node_a.telemetry();
+    let spans = node_a.take_traces();
+    println!(
+        "node A telemetry: {} submissions -> {} WRs / {} bytes on the wire, \
+         {} transport error(s) ({} resubmitted, {} errored out), \
+         {} spans buffered ({} dropped)",
+        snap.total_submissions(),
+        snap.total_wrs(),
+        snap.total_bytes(),
+        snap.transport_errors(),
+        snap.resubmits,
+        snap.error_outs,
+        spans.len(),
+        snap.trace_dropped,
+    );
+    println!("metrics JSON (the --metrics-json payload):\n{}", snap.to_json().to_pretty(2));
 }
 
 fn main() {

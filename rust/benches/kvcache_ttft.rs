@@ -9,9 +9,10 @@
 
 use std::collections::BTreeMap;
 
-use fabric_lib::apps::kvcache::run_table3_row;
+use fabric_lib::apps::kvcache::{run_table3_row, run_table3_row_with_telemetry};
 use fabric_lib::util::json::{update_report, Json};
 use fabric_lib::util::table::{f, Table};
+use fabric_lib::util::telemetry::EngineSnapshot;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -39,12 +40,17 @@ fn main() {
             "pages",
         ],
     );
+    let mut snap_4k: Option<EngineSnapshot> = None;
     for &seq in seqs {
-        let r = run_table3_row(seq);
-        if seq == 4096 {
+        let r = if seq == 4096 {
+            let (r, snap, _) = run_table3_row_with_telemetry(seq);
             headlines.insert("ttft_non_4k_ms".to_string(), Json::Num(r.ttft_non_ms));
             headlines.insert("ttft_disagg_4k_ms".to_string(), Json::Num(r.ttft_disagg_ms));
-        }
+            snap_4k = Some(snap);
+            r
+        } else {
+            run_table3_row(seq)
+        };
         t.row(&[
             format!("{}K", seq / 1024),
             f(r.ttft_non_ms, 0),
@@ -56,6 +62,17 @@ fn main() {
         ]);
     }
     t.print();
+    if let Some(s) = &snap_4k {
+        println!(
+            "\n4K-row prefiller telemetry: {} submissions, {} WRs / {} bytes \
+             on the wire, per-lane bytes {:?}, transport errors {}",
+            s.total_submissions(),
+            s.total_wrs(),
+            s.total_bytes(),
+            &s.lane_bytes[..2],
+            s.transport_errors(),
+        );
+    }
     println!(
         "\npaper — 4K: 214/260 ms, compute 2.267 / transfer 0.661 ms; \
          128K: 16735/17056 ms, 34.895 / 1.609 ms. Claim preserved: transfer \

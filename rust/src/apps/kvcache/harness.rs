@@ -11,7 +11,10 @@
 //!   on the threaded runtime.
 //! * [`run_table3_row`] — convenience wrapper reproducing the paper's
 //!   H200+2×EFA testbed on a DES [`Cluster`] (what the bench and the
-//!   numeric tests use).
+//!   numeric tests use); [`run_table3_row_with_telemetry`] is the same
+//!   run returning the prefiller's counter snapshot and submission
+//!   spans alongside the row (`fabricctl kvcache --metrics-json` /
+//!   `--trace-out`).
 //! * [`run_generic_kv_push`] — the bare KvCache *transfer protocol*
 //!   (paged WRITEIMMs + tail write counted by `expect_imm_count`,
 //!   Appendix A) over `&dyn TransferEngine`, as a protocol smoke test.
@@ -28,6 +31,7 @@ use crate::fabric::chaos::ChaosProfile;
 use crate::fabric::profile::{GpuProfile, NicProfile};
 use crate::fabric::topology::ClusterSpec;
 use crate::sim::time::{Instant, MS};
+use crate::util::telemetry::{EngineSnapshot, TraceEvent};
 
 use super::decoder::{Decoder, ReqState};
 use super::prefiller::Prefiller;
@@ -121,6 +125,15 @@ pub fn run_table3_row_on(
 /// timing-faithful DES convenience wrapper around
 /// [`run_table3_row_on`].
 pub fn run_table3_row(seq: u32) -> Table3Row {
+    run_table3_row_with_telemetry(seq).0
+}
+
+/// [`run_table3_row`] plus the prefiller engine's observability
+/// surface: the counter [`EngineSnapshot`] and the drained submission
+/// spans. Feeds `fabricctl kvcache --metrics-json/--trace-out` and the
+/// bench's telemetry summary; both are captured *before* cluster
+/// shutdown (a snapshot is a plain value, safe to hold after).
+pub fn run_table3_row_with_telemetry(seq: u32) -> (Table3Row, EngineSnapshot, Vec<TraceEvent>) {
     let spec = ClusterSpec::h200_efa(2);
     let mut cluster = Cluster::new_with(
         RuntimeKind::Des,
@@ -132,6 +145,9 @@ pub fn run_table3_row(seq: u32) -> Table3Row {
         spec.gpu_profile.clone(),
     );
     let engines = cluster.engines_rc();
+    // A 128K-row prefill issues far more than the default 4096 spans;
+    // widen the ring so the chrome-trace export covers the whole run.
+    engines[0].set_trace_capacity(1 << 16);
     let row = {
         let (mut cx, _) = cluster.parts();
         run_table3_row_on(
@@ -142,8 +158,10 @@ pub fn run_table3_row(seq: u32) -> Table3Row {
             seq,
         )
     };
+    let snap = engines[0].telemetry();
+    let traces = engines[0].take_traces();
     cluster.shutdown();
-    row
+    (row, snap, traces)
 }
 
 /// Runtime-agnostic KV-cache page push (the §4 transfer protocol):
@@ -267,6 +285,12 @@ pub struct FailoverOutcome {
     /// True when the decoder's page pool drained back to its initial
     /// size — no page was leaked across cancellation + re-dispatch.
     pub no_lost_pages: bool,
+    /// Full telemetry snapshot of the dead prefiller's engine, taken
+    /// after the run drained: the WrError attribution ledger here
+    /// reconciles with `transport_errors` (`wr_err_total +
+    /// rejected_all_down`), and `resubmits + error_outs ==
+    /// wr_err_total` — the accounting identity the chaos tests assert.
+    pub snapshot: EngineSnapshot,
 }
 
 struct SupState {
@@ -374,6 +398,7 @@ pub fn run_kv_failover_on(
         transport_errors: engines[0].transport_errors(),
         live_prefillers: sched.live_prefillers(),
         no_lost_pages: decoder.free_slot_count() == free0,
+        snapshot: engines[0].telemetry(),
     }
 }
 
@@ -553,6 +578,12 @@ mod tests {
         assert!(out.no_lost_pages, "{out:?}");
         assert_eq!(out.live_prefillers, 1, "the dead prefiller left the fleet: {out:?}");
         assert!(out.transport_errors >= 1, "the outage was observed: {out:?}");
+        // The attached snapshot reconciles with the legacy counter and
+        // with itself (the WrError attribution identities).
+        let s = &out.snapshot;
+        assert_eq!(s.transport_errors(), out.transport_errors);
+        assert_eq!(s.resubmits + s.error_outs, s.wr_err_total, "{s:?}");
+        assert_eq!(s.wr_err_link + s.wr_err_nic, s.wr_err_total, "{s:?}");
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub use decoder::Decoder;
 pub use harness::{
     run_generic_kv_push, run_kv_failover, run_kv_failover_on, run_kv_link_partition,
     run_kv_link_partition_on, run_kv_nic_failover_on, run_table3_row, run_table3_row_on,
-    FailoverOutcome, Table3Row,
+    run_table3_row_with_telemetry, FailoverOutcome, Table3Row,
 };
 pub use layout::KvLayout;
 pub use prefiller::Prefiller;

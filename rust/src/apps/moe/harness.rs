@@ -12,8 +12,8 @@
 //!   durations) on the threaded runtime.
 //! * [`run_decode_epoch`] / [`run_epoch_with`] — convenience wrappers
 //!   reproducing the paper's testbeds on a DES [`Cluster`] (what the
-//!   benches and the numeric tests use; `run_epoch_with` can install a
-//!   Table-8/9 trace sink on node 0's DES engine).
+//!   benches and the numeric tests use; `run_epoch_with` can collect
+//!   node 0's Table-8/9 submission spans into a caller sink).
 //! * [`run_generic_dispatch_round`] — the bare MoE *communication
 //!   protocol* (peer-group scatter of token payloads, count-based
 //!   completion, engine barrier for buffer reuse, §6.1–6.3) over
@@ -29,6 +29,7 @@ use crate::engine::traits::{
 };
 use crate::fabric::profile::{GpuProfile, NicProfile};
 use crate::sim::stats::Histogram;
+use crate::util::telemetry::TraceEvent;
 
 use super::config::MoeConfig;
 use super::rank::{IterSample, MoeRank, Strategy};
@@ -176,15 +177,17 @@ pub fn run_decode_epoch(
     run_epoch_with(cfg, imp.strategy(), nic, nics_per_gpu, iters, None)
 }
 
-/// Full-control variant: custom strategy + optional engine trace sink
-/// (Table 8/9), on a DES cluster built through [`Cluster`].
+/// Full-control variant: custom strategy + optional submission-span
+/// sink (Table 8/9) — rank 0's engine records [`TraceEvent`] spans
+/// during the run and they are drained into `trace_sink` afterwards —
+/// on a DES cluster built through [`Cluster`].
 pub fn run_epoch_with(
     cfg: &MoeConfig,
     strat: Strategy,
     nic: NicProfile,
     nics_per_gpu: u8,
     iters: u64,
-    trace_sink: Option<Rc<RefCell<Vec<crate::engine::des_engine::SubmitTrace>>>>,
+    trace_sink: Option<Rc<RefCell<Vec<TraceEvent>>>>,
 ) -> MoeLatencies {
     run_epoch_inner(cfg, strat, nic, nics_per_gpu, iters, trace_sink, None)
 }
@@ -216,7 +219,7 @@ fn run_epoch_inner(
     nic: NicProfile,
     nics_per_gpu: u8,
     iters: u64,
-    trace_sink: Option<Rc<RefCell<Vec<crate::engine::des_engine::SubmitTrace>>>>,
+    trace_sink: Option<Rc<RefCell<Vec<TraceEvent>>>>,
     chaos: Option<&crate::fabric::chaos::ChaosProfile>,
 ) -> MoeLatencies {
     let nodes = cfg.ranks.div_ceil(cfg.gpus_per_node) as u16;
@@ -229,11 +232,6 @@ fn run_epoch_inner(
         nic,
         GpuProfile::h100(),
     );
-    if let Some(sink) = &trace_sink {
-        if let Some(e) = cluster.des_engine(0) {
-            e.set_trace_sink(sink.clone());
-        }
-    }
     let engines = cluster.engines_rc();
     let out = {
         let (mut cx, _) = cluster.parts();
@@ -242,6 +240,14 @@ fn run_epoch_inner(
         }
         run_epoch_on(&mut cx, &engines, cfg, strat, GpuProfile::h100(), iters)
     };
+    // Spans live in the engine's bounded trace ring during the run
+    // (overflow counted in `telemetry().trace_dropped`, never
+    // unbounded growth); hand rank 0's to the caller afterwards.
+    if let Some(sink) = &trace_sink {
+        if let Some(e) = cluster.des_engine(0) {
+            sink.borrow_mut().extend(e.take_traces());
+        }
+    }
     cluster.shutdown();
     out
 }

@@ -794,6 +794,10 @@ impl Rotation {
 struct Inflight<D> {
     remaining: usize,
     on_done: D,
+    /// Telemetry trace-span sequence ([`crate::util::telemetry::NO_TRACE`]
+    /// when the submission was not traced) — handed back with the
+    /// completion payload so the runtime can close the span.
+    trace: u64,
 }
 
 /// Transfer-id allocation plus WR→transfer completion accounting,
@@ -831,9 +835,19 @@ impl<D> TransferTable<D> {
             Inflight {
                 remaining,
                 on_done,
+                trace: crate::util::telemetry::NO_TRACE,
             },
         );
         id
+    }
+
+    /// Attach a telemetry trace-span sequence to an open transfer so
+    /// [`TransferTable::complete_wr`] hands it back for span closing.
+    /// No-op for transfers that already retired.
+    pub fn set_trace(&mut self, transfer: u64, trace: u64) {
+        if let Some(t) = self.transfers.get_mut(&transfer) {
+            t.trace = trace;
+        }
     }
 
     /// Attribute a posted WR to a transfer.
@@ -842,14 +856,16 @@ impl<D> TransferTable<D> {
     }
 
     /// Record a WR completion; returns the transfer's completion
-    /// payload when its last WR finished, `None` otherwise (including
-    /// for WRs the table never saw, e.g. receive reposts).
-    pub fn complete_wr(&mut self, wr_id: u64) -> Option<D> {
+    /// payload and trace-span sequence when its last WR finished,
+    /// `None` otherwise (including for WRs the table never saw, e.g.
+    /// receive reposts).
+    pub fn complete_wr(&mut self, wr_id: u64) -> Option<(D, u64)> {
         let tid = self.wr_transfer.remove(&wr_id)?;
         let t = self.transfers.get_mut(&tid).expect("transfer state");
         t.remaining -= 1;
         if t.remaining == 0 {
-            Some(self.transfers.remove(&tid).unwrap().on_done)
+            let done = self.transfers.remove(&tid).expect("transfer state");
+            Some((done.on_done, done.trace))
         } else {
             None
         }
@@ -1564,13 +1580,22 @@ mod tests {
     fn transfer_table_completes_on_last_wr() {
         let mut t: TransferTable<&'static str> = TransferTable::new();
         let tid = t.begin(2, "done");
+        t.set_trace(tid, 7);
         t.bind_wr(10, tid);
         t.bind_wr(11, tid);
         assert!(t.complete_wr(99).is_none(), "unknown WR ignored");
         assert!(t.complete_wr(10).is_none());
         assert_eq!(t.in_flight(), 1);
-        assert_eq!(t.complete_wr(11), Some("done"));
+        assert_eq!(t.complete_wr(11), Some(("done", 7)), "payload + trace seq");
         assert_eq!(t.in_flight(), 0);
+        // Untraced transfers hand back the sentinel.
+        let tid = t.begin(1, "plain");
+        t.bind_wr(12, tid);
+        assert_eq!(
+            t.complete_wr(12),
+            Some(("plain", crate::util::telemetry::NO_TRACE))
+        );
+        t.set_trace(99, 1); // retired/unknown transfer: no-op
     }
 
     #[test]

@@ -49,6 +49,10 @@ use crate::sim::{Rng, Sim};
 use crate::util::err::Result;
 use crate::util::fasthash::FastMap;
 use crate::util::smallvec::SmallVec;
+use crate::util::telemetry::{
+    Cell64, EngineMetrics, EngineSnapshot, PlainCell, SubmitKind, TraceEvent, TraceOutcome,
+    TraceRing, DEFAULT_TRACE_CAP, NO_TRACE,
+};
 
 /// Sender-side completion notification (paper Fig 2 `OnDone`).
 pub enum OnDone {
@@ -58,23 +62,6 @@ pub enum OnDone {
     Flag(Rc<Cell<bool>>),
     /// Fire-and-forget.
     Noop,
-}
-
-/// Timing trace of one submission, for the Table 8 breakdown.
-#[derive(Debug, Clone, Copy)]
-pub struct SubmitTrace {
-    /// `submit_*()` entered (app thread).
-    pub submitted: Instant,
-    /// App-side enqueue finished.
-    pub enqueued: Instant,
-    /// Worker dequeued the command.
-    pub worker_start: Instant,
-    /// First WRITE posted to a NIC.
-    pub first_post: Instant,
-    /// Last WRITE posted.
-    pub last_post: Instant,
-    /// Number of WRs posted.
-    pub wrs: usize,
 }
 
 /// Per-GPU domain group state.
@@ -115,16 +102,17 @@ struct State {
     peer_groups: PeerGroups,
     next_watcher: u64,
     watchers: HashMap<u64, Watcher>,
-    /// Optional submission-trace sink (Table 8 benches).
-    trace_sink: Option<Rc<RefCell<Vec<SubmitTrace>>>>,
+    /// Engine-wide counter registry ([`PlainCell`]s — the DES runtime
+    /// is single-threaded behind the `RefCell`).
+    metrics: EngineMetrics<PlainCell>,
+    /// Bounded ring of submission trace spans (replaces the old
+    /// unbounded `SubmitTrace` sink; Table 8/9 benches drain it).
+    trace: TraceRing,
     /// True once chaos was injected or a NIC health override landed:
     /// from then on posted WRs are recorded in `retry` so a fabric
     /// `WrError` can resubmit them (the happy path records nothing).
     armed: bool,
     failover: FailoverPolicy,
-    /// Transport-level failures observed (dead-NIC WRs), resubmitted
-    /// or not.
-    transport_errors: u64,
     /// In-flight WRs by id, kept only while `armed` (see above).
     retry: FastMap<u64, RetryEntry>,
 }
@@ -203,10 +191,10 @@ impl Engine {
                 peer_groups: PeerGroups::new(),
                 next_watcher: 1,
                 watchers: HashMap::new(),
-                trace_sink: None,
+                metrics: EngineMetrics::new(),
+                trace: TraceRing::new(DEFAULT_TRACE_CAP),
                 armed: false,
                 failover: FailoverPolicy::default(),
-                transport_errors: 0,
                 retry: FastMap::default(),
             })),
         };
@@ -286,15 +274,38 @@ impl Engine {
         self.state.borrow_mut().failover = policy;
     }
 
-    /// Transport-level failures observed so far.
+    /// Transport-level failures observed so far. Derived from the
+    /// telemetry error ledger:
+    /// `wr_err_total + rejected_all_down` — one source of truth.
     pub fn transport_errors(&self) -> u64 {
-        self.state.borrow().transport_errors
+        self.state.borrow().metrics.transport_errors()
     }
 
-    /// Install a trace sink recording every submission's timing
-    /// breakdown (Table 8 / Table 9 benches).
-    pub fn set_trace_sink(&self, sink: Rc<RefCell<Vec<SubmitTrace>>>) {
-        self.state.borrow_mut().trace_sink = Some(sink);
+    /// Toggle hot-path telemetry (submission/wire counters, imm/recv
+    /// accounting, trace capture). The error ledger always counts —
+    /// see [`crate::util::telemetry`].
+    pub fn set_telemetry(&self, on: bool) {
+        self.state.borrow().metrics.set_enabled(on);
+    }
+
+    /// Point-in-time copy of the engine-wide counter registry.
+    pub fn telemetry(&self) -> EngineSnapshot {
+        let s = self.state.borrow();
+        let mut snap = s.metrics.snapshot();
+        snap.trace_dropped = s.trace.dropped();
+        snap
+    }
+
+    /// Drain the bounded submission-trace ring, oldest span first
+    /// (Table 8 / Table 9 benches, `--trace-out`).
+    pub fn take_traces(&self) -> Vec<TraceEvent> {
+        self.state.borrow_mut().trace.drain()
+    }
+
+    /// Resize the trace ring; shrinking recycles oldest spans into
+    /// the drop counter.
+    pub fn set_trace_capacity(&self, cap: usize) {
+        self.state.borrow_mut().trace.set_capacity(cap);
     }
 
     /// The engine's main address (paper: single address for discovery;
@@ -362,6 +373,7 @@ impl Engine {
             .iter()
             .map(|&nic| (nic, mem.register(buf).0))
             .collect();
+        s.metrics.mr_regs.add(rkeys.len() as u64);
         let desc = MrDesc {
             ptr: buf.base(),
             len: buf.len() as u64,
@@ -381,6 +393,7 @@ impl Engine {
     /// refcounted and lives as long as any handle does.
     pub fn dereg_mr(&self, desc: &MrDesc) {
         let s = self.state.borrow();
+        s.metrics.mr_deregs.add(desc.rkeys.len() as u64);
         let mem = s.net.mem();
         for &(_, rkey) in &desc.rkeys {
             mem.deregister(RKey(rkey));
@@ -409,7 +422,7 @@ impl Engine {
             let wr_id = s.alloc_wr();
             let tid = s.transfers.begin(1, on_done);
             s.transfers.bind_wr(wr_id, tid);
-            let (t, _trace) = s.charge_submission(sim.now(), gpu as usize);
+            let (_, _, t) = s.charge_submission(sim.now(), gpu as usize);
             let prof_post = s.net.profile(s.groups[gpu as usize].nics[0]).post_ns;
             s.groups[gpu as usize].worker_free = t + prof_post;
             let local = s.groups[gpu as usize].nics[0];
@@ -468,6 +481,7 @@ impl Engine {
             for (id, buf) in &bufs {
                 s.groups[gpu as usize].recvs.post(*id, buf.clone(), len);
             }
+            s.metrics.recv_posts(bufs.len() as u64);
             (bufs, local)
         };
         let net = self.state.borrow().net.clone();
@@ -513,7 +527,7 @@ impl Engine {
             dst,
             imm,
         )?;
-        self.execute_routed(sim, handle, routed, on_done)?;
+        self.execute_routed(sim, handle, routed, on_done, SubmitKind::Single)?;
         self.bump_rotation(gpu);
         Ok(())
     }
@@ -539,7 +553,7 @@ impl Engine {
             dst,
             imm,
         )?;
-        self.execute_routed(sim, handle, routed, on_done)?;
+        self.execute_routed(sim, handle, routed, on_done, SubmitKind::Paged)?;
         self.bump_rotation(gpu);
         Ok(())
     }
@@ -602,7 +616,7 @@ impl Engine {
             self.state.borrow().peer_groups.check(group, dsts.len());
         }
         let routed = route_scatter(self.fanout(gpu), self.peek_rotation(gpu), dsts, imm)?;
-        self.execute_routed(sim, src, routed, on_done)?;
+        self.execute_routed(sim, src, routed, on_done, SubmitKind::Scatter)?;
         self.bump_rotation(gpu);
         Ok(())
     }
@@ -631,7 +645,7 @@ impl Engine {
         // Zero-length writes need a 1-byte-capable source; use a tiny
         // scratch region (pre-registered once on the templated path).
         let (scratch, scratch_desc) = self.alloc_mr(gpu, 1);
-        if let Err(e) = self.execute_routed(sim, &scratch, routed, on_done) {
+        if let Err(e) = self.execute_routed(sim, &scratch, routed, on_done, SubmitKind::Barrier) {
             // Group went down between the check above and dispatch:
             // unwind the scratch registration so a rejected barrier
             // leaves no MR behind.
@@ -648,7 +662,7 @@ impl Engine {
     fn ensure_group_up(&self, gpu: u8) -> Result<()> {
         let mut s = self.state.borrow_mut();
         if s.groups[gpu as usize].health.up_count() == 0 {
-            s.transport_errors += 1;
+            s.metrics.rejected_all_down.add(1);
             let fanout = s.groups[gpu as usize].nics.len();
             drop(s);
             crate::bail!(
@@ -681,7 +695,7 @@ impl Engine {
         let (handle, src_off) = src;
         let routed =
             route_single_write_templated(&t, t.rotation.next(), peer, src_off, len, dst_off, imm)?;
-        self.execute_routed(sim, handle, routed, on_done)?;
+        self.execute_routed(sim, handle, routed, on_done, SubmitKind::SingleTpl)?;
         t.rotation.bump();
         Ok(())
     }
@@ -709,7 +723,7 @@ impl Engine {
             dst_pages,
             imm,
         )?;
-        self.execute_routed(sim, handle, routed, on_done)?;
+        self.execute_routed(sim, handle, routed, on_done, SubmitKind::PagedTpl)?;
         t.rotation.bump();
         Ok(())
     }
@@ -727,7 +741,7 @@ impl Engine {
     ) -> Result<()> {
         let t = self.state.borrow().peer_groups.template(group)?;
         let routed = route_scatter_templated(&t, t.rotation.next(), dsts, imm)?;
-        self.execute_routed(sim, src, routed, on_done)?;
+        self.execute_routed(sim, src, routed, on_done, SubmitKind::ScatterTpl)?;
         t.rotation.bump();
         Ok(())
     }
@@ -744,7 +758,7 @@ impl Engine {
         let t = self.state.borrow().peer_groups.template(group)?;
         let routed = route_barrier_templated(&t, t.rotation.next(), imm);
         let scratch = t.scratch.clone();
-        self.execute_routed(sim, &scratch, routed, on_done)?;
+        self.execute_routed(sim, &scratch, routed, on_done, SubmitKind::BarrierTpl)?;
         t.rotation.bump();
         Ok(())
     }
@@ -775,7 +789,7 @@ impl Engine {
         }
         let gpu = src.device.gpu;
         let routed = route_write_batch(self.fanout(gpu), self.peek_rotation(gpu), dsts, imm_base)?;
-        self.execute_routed(sim, src, routed, on_done)?;
+        self.execute_routed(sim, src, routed, on_done, SubmitKind::Batch)?;
         self.state.borrow().groups[gpu as usize].rotation.bump_n(dsts.len());
         Ok(())
     }
@@ -804,7 +818,7 @@ impl Engine {
             return Ok(());
         }
         let routed = route_batch_templated(&t, t.rotation.next(), dsts, imm_base)?;
-        self.execute_routed(sim, src, routed, on_done)?;
+        self.execute_routed(sim, src, routed, on_done, SubmitKind::BatchTpl)?;
         t.rotation.bump_n(dsts.len());
         Ok(())
     }
@@ -835,7 +849,15 @@ impl Engine {
     ) {
         let ready = {
             let mut s = self.state.borrow_mut();
-            s.groups[gpu as usize].imm.expect(imm, count, Box::new(cb))
+            let r = s.groups[gpu as usize].imm.expect(imm, count, Box::new(cb));
+            if s.metrics.enabled() {
+                s.metrics.imm_arms.add(1);
+                if r.is_some() {
+                    // Satisfied from the recorded count on the spot.
+                    s.metrics.imm_retires.add(1);
+                }
+            }
+            r
         };
         if let Some(cb) = ready {
             let dispatch = self.state.borrow().costs.callback_ns;
@@ -945,6 +967,7 @@ impl Engine {
         src: &MrHandle,
         mut routed: RoutedVec,
         on_done: OnDone,
+        kind: SubmitKind,
     ) -> Result<()> {
         assert!(!routed.is_empty(), "empty transfer");
         let gpu = src.device.gpu as usize;
@@ -966,21 +989,24 @@ impl Engine {
             if let Err(e) = res {
                 // An all-NICs-down rejection is a transport failure
                 // too: count it so scenarios can observe the outage.
-                s.transport_errors += 1;
+                s.metrics.rejected_all_down.add(1);
                 return Err(e);
             }
         }
         let posts = {
             let mut s = self.state.borrow_mut();
+            s.metrics.submission(kind);
             let tid = s.transfers.begin(routed.len(), on_done);
             // Worker-cost model: submit → handoff → prep → per-WR post.
-            let (first_post_at, mut trace) = s.charge_submission(now, gpu);
+            let (enqueued, worker_start, first_post_at) = s.charge_submission(now, gpu);
             let nic0 = s.groups[gpu].nics[0];
             let prof = s.net.profile(nic0);
             // Inline up to the common fanout: the hot path allocates
             // nothing between routing and the per-WR post schedule.
             let mut posts: SmallVec<(Instant, usize, WorkRequest), 4> = SmallVec::new();
             let mut t = first_post_at;
+            let mut bytes = 0u64;
+            let mut lane0 = 0u8;
             for (i, w) in routed.into_iter().enumerate() {
                 let RoutedWrite { plan: p, route: (dst_nic, rkey), alts } = w;
                 let wr_id = s.alloc_wr();
@@ -1018,15 +1044,35 @@ impl Engine {
                         },
                     );
                 }
+                s.metrics.wire(p.nic, 1, p.len);
+                bytes += p.len;
+                if i == 0 {
+                    lane0 = p.nic as u8;
+                }
                 posts.push((t, p.nic, wr));
             }
+            let wrs = posts.len() as u32;
             let g = &mut s.groups[gpu];
             g.worker_free = t;
-            trace.last_post = t;
-            trace.wrs = posts.len();
-            if let Some(sink) = &s.trace_sink {
-                sink.borrow_mut().push(trace);
-            }
+            let seq = if s.metrics.enabled() {
+                let ev = TraceEvent {
+                    kind,
+                    lane: lane0,
+                    wrs,
+                    bytes,
+                    submitted: now,
+                    enqueued,
+                    worker_start,
+                    first_post: first_post_at,
+                    last_post: t,
+                    retired: 0,
+                    outcome: TraceOutcome::Posted,
+                };
+                s.trace.push(ev)
+            } else {
+                NO_TRACE
+            };
+            s.transfers.set_trace(tid, seq);
             posts
         };
         // Post each WR at its worker-time; back-pressured WRs queue on
@@ -1081,14 +1127,23 @@ impl Engine {
     fn handle_cqe(&self, sim: &mut Sim, gpu: usize, addr: NicAddr, cqe: Cqe) {
         match cqe.kind {
             CqeKind::SendDone | CqeKind::WriteDone => {
+                let now = sim.now();
                 let done = {
                     let mut s = self.state.borrow_mut();
                     if s.armed {
                         s.retry.remove(&cqe.wr_id);
                     }
-                    s.transfers.complete_wr(cqe.wr_id)
+                    let done = s.transfers.complete_wr(cqe.wr_id);
+                    if let Some((_, seq)) = &done {
+                        // Last WR of the transfer: close the span and
+                        // bucket its submit→retire latency.
+                        if let Some(sub) = s.trace.close(*seq, now, TraceOutcome::Retired) {
+                            s.metrics.observe_latency(now.saturating_sub(sub));
+                        }
+                    }
+                    done
                 };
-                if let Some(on_done) = done {
+                if let Some((on_done, _)) = done {
                     self.fire_on_done(sim, on_done);
                 }
             }
@@ -1097,6 +1152,12 @@ impl Engine {
                 let (waiter, dispatch) = {
                     let mut s = self.state.borrow_mut();
                     let w = s.groups[gpu].imm.on_imm(imm);
+                    if s.metrics.enabled() {
+                        s.metrics.imm_bumps.add(1);
+                        if w.is_some() {
+                            s.metrics.imm_retires.add(1);
+                        }
+                    }
                     (w, s.costs.callback_ns)
                 };
                 if let Some(cb) = waiter {
@@ -1116,6 +1177,11 @@ impl Engine {
                     // threaded runtime poisons the delivery instead).
                     assert!(!overflowed, "{}", RecvPool::overflow_msg(len, data.len()));
                     let cb = g.recv_cb.clone();
+                    if s.metrics.enabled() {
+                        s.metrics.recv_completed.add(1);
+                    }
+                    // The rotating repost keeps the pool depth steady.
+                    s.metrics.recv_posts(1);
                     (data, cb, (new_id, buf), dispatch)
                 };
                 let net = self.state.borrow().net.clone();
@@ -1136,13 +1202,15 @@ impl Engine {
                 // applied to the group's link table, never delivered
                 // to application callbacks.
                 if wire::is_nic_health(&payload) {
+                    let mut s = self.state.borrow_mut();
+                    s.metrics.gossip_received.add(1);
                     if let Ok((nic, up)) = wire::decode_nic_health(&payload) {
                         // Stamp the gossiped death at receive time so
                         // the probation TTL counts from when THIS
                         // group started believing it.
-                        let mut s = self.state.borrow_mut();
                         s.armed = true;
                         s.groups[gpu].health.set_remote_at(nic, up, sim.now());
+                        s.metrics.gossip_applied.add(1);
                     }
                     return;
                 }
@@ -1175,34 +1243,43 @@ impl Engine {
     fn on_wr_error(&self, sim: &mut Sim, wr_id: u64) {
         enum Act {
             Retry { gpu: usize, nic_idx: usize, wr: WorkRequest },
-            Fail(Option<OnDone>),
+            Fail(Option<(OnDone, u64)>),
         }
         let now = sim.now();
         let (act, gossip) = {
             let mut s = self.state.borrow_mut();
-            s.transport_errors += 1;
+            s.metrics.wr_err_total.add(1);
             let entry = s.retry.remove(&wr_id);
             match entry {
                 Some(mut e) => {
                     let remote = e.wr.op.dst();
                     let mut gossip = None;
-                    if let Some(r) = remote {
-                        let g = &s.groups[e.gpu];
-                        g.health.set_link(e.cur_lane, r, false);
-                        // Conclude remote death only from full link
-                        // evidence: one attributed WrError per local
-                        // lane (a locally-dead lane proves nothing
-                        // about the destination and cannot satisfy
-                        // the bar).
-                        if g.health.up_count() > 0
-                            && g.health.all_links_observed_down(r)
-                            && g.health.remote_up(r)
-                        {
-                            g.health.set_remote_at(r, false, now);
-                            if !g.gossip.is_empty() {
-                                gossip = Some((e.gpu, r));
+                    match remote {
+                        Some(r) => {
+                            // Attribution: the directed link (egress
+                            // lane → destination NIC) is the suspect.
+                            s.metrics.wr_err_link.add(1);
+                            let g = &s.groups[e.gpu];
+                            g.health.set_link(e.cur_lane, r, false);
+                            // Conclude remote death only from full link
+                            // evidence: one attributed WrError per local
+                            // lane (a locally-dead lane proves nothing
+                            // about the destination and cannot satisfy
+                            // the bar).
+                            if g.health.up_count() > 0
+                                && g.health.all_links_observed_down(r)
+                                && g.health.remote_up(r)
+                            {
+                                g.health.set_remote_at(r, false, now);
+                                s.metrics.wr_err_remote.add(1);
+                                if !g.gossip.is_empty() {
+                                    gossip = Some((e.gpu, r));
+                                }
                             }
                         }
+                        // SEND-path WR: a single fixed destination,
+                        // nothing to attribute beyond the egress NIC.
+                        None => s.metrics.wr_err_nic.add(1),
                     }
                     if s.failover == FailoverPolicy::Resubmit {
                         e.attempts += 1;
@@ -1236,16 +1313,31 @@ impl Engine {
                                 e.cur_lane = lane;
                                 let wr = e.wr.clone();
                                 let gpu = e.gpu;
+                                s.metrics.resubmits.add(1);
+                                // The repost is real wire traffic.
+                                if let WrOp::Write { src, .. } = &e.wr.op {
+                                    s.metrics.wire(lane, 1, src.len as u64);
+                                }
                                 s.retry.insert(wr_id, e);
                                 (Act::Retry { gpu, nic_idx: lane, wr }, gossip)
                             }
-                            None => (Act::Fail(s.transfers.complete_wr(wr_id)), gossip),
+                            None => {
+                                s.metrics.error_outs.add(1);
+                                (Act::Fail(s.transfers.complete_wr(wr_id)), gossip)
+                            }
                         }
                     } else {
+                        s.metrics.error_outs.add(1);
                         (Act::Fail(s.transfers.complete_wr(wr_id)), gossip)
                     }
                 }
-                None => (Act::Fail(s.transfers.complete_wr(wr_id)), None),
+                None => {
+                    // Unarmed WR (or already-retired transfer): the
+                    // egress NIC is all we can attribute to.
+                    s.metrics.wr_err_nic.add(1);
+                    s.metrics.error_outs.add(1);
+                    (Act::Fail(s.transfers.complete_wr(wr_id)), None)
+                }
             }
         };
         if let Some((gpu, remote)) = gossip {
@@ -1265,7 +1357,11 @@ impl Engine {
                 });
             }
             Act::Fail(done) => {
-                if let Some(d) = done {
+                if let Some((d, seq)) = done {
+                    self.state
+                        .borrow_mut()
+                        .trace
+                        .close(seq, now, TraceOutcome::Failed);
                     self.fire_on_done(sim, d);
                 }
             }
@@ -1286,6 +1382,7 @@ impl Engine {
             if p.nics.contains(&remote) {
                 continue;
             }
+            self.state.borrow().metrics.gossip_sent.add(1);
             self.submit_send(sim, gpu as u8, p, &msg, OnDone::Noop);
         }
     }
@@ -1310,26 +1407,17 @@ impl State {
     }
 
     /// Charge the submit → handoff → prep pipeline, returning the
-    /// worker time at which the first WR may post plus a trace. The
+    /// `(enqueued, worker_start, first_post)` stamps of the modeled
+    /// stages (the caller builds its [`TraceEvent`] from them). The
     /// worker is a single pinned thread per group: a submission waits
     /// for it to drain earlier work (`worker_free`).
-    fn charge_submission(&mut self, now: Instant, gpu: usize) -> (Instant, SubmitTrace) {
+    fn charge_submission(&mut self, now: Instant, gpu: usize) -> (Instant, Instant, Instant) {
         let c = self.costs.clone();
         let enq = now + c.submit_ns + c.submit_jitter.sample(&mut self.rng);
         let handoff = enq + c.handoff_ns + c.handoff_jitter.sample(&mut self.rng);
         let worker_start = handoff.max(self.groups[gpu].worker_free);
         let first_post = worker_start + c.prep_ns + c.prep_jitter.sample(&mut self.rng);
-        (
-            first_post,
-            SubmitTrace {
-                submitted: now,
-                enqueued: enq,
-                worker_start,
-                first_post,
-                last_post: first_post,
-                wrs: 0,
-            },
-        )
+        (enq, worker_start, first_post)
     }
 }
 
@@ -1622,6 +1710,22 @@ impl TransferEngine for Engine {
         Engine::transport_errors(self)
     }
 
+    fn telemetry(&self) -> EngineSnapshot {
+        Engine::telemetry(self)
+    }
+
+    fn take_traces(&self) -> Vec<TraceEvent> {
+        Engine::take_traces(self)
+    }
+
+    fn set_telemetry(&self, on: bool) {
+        Engine::set_telemetry(self, on)
+    }
+
+    fn set_trace_capacity(&self, cap: usize) {
+        Engine::set_trace_capacity(self, cap)
+    }
+
     fn link_health_mask(&self, gpu: u8, remote: NicAddr) -> u64 {
         Engine::link_health_mask(self, gpu, remote)
     }
@@ -1888,8 +1992,6 @@ mod tests {
     #[test]
     fn submission_trace_orders_events() {
         let (mut sim, _net, a, b) = setup(NicProfile::efa);
-        let sink: Rc<RefCell<Vec<SubmitTrace>>> = Rc::default();
-        a.set_trace_sink(sink.clone());
         let (src, _) = a.alloc_mr(0, 1 << 16);
         let descs: Vec<(MrHandle, MrDesc)> = (0..4).map(|_| b.alloc_mr(0, 4096)).collect();
         let dsts: Vec<ScatterDst> = descs
@@ -1899,18 +2001,84 @@ mod tests {
         a.submit_scatter(&mut sim, None, &src, &dsts, Some(1), OnDone::Noop)
             .unwrap();
         sim.run();
-        let traces = sink.borrow();
+        let traces = a.take_traces();
         assert_eq!(traces.len(), 1);
-        let t = traces[0];
+        let t = &traces[0];
+        assert_eq!(t.kind, SubmitKind::Scatter);
         assert!(t.submitted < t.enqueued);
         assert!(t.enqueued < t.worker_start);
         assert!(t.worker_start < t.first_post);
         assert!(t.first_post < t.last_post, "4 posts take time");
+        assert!(t.last_post < t.retired, "span closed at the last CQE");
+        assert_eq!(t.outcome, TraceOutcome::Retired);
         assert_eq!(t.wrs, 4);
+        assert_eq!(t.bytes, 4 * 1024);
         // Table 8 ballpark: submit->enqueue ~0.1 µs, ->first post
         // within a few µs.
         assert!(t.enqueued - t.submitted < 5_000);
         assert!(t.first_post - t.submitted < 20_000);
+        // The counter registry agrees with the span.
+        let snap = a.telemetry();
+        assert_eq!(snap.sub_scatter, 1);
+        assert_eq!(snap.total_submissions(), 1);
+        assert_eq!(snap.total_wrs(), 4);
+        assert_eq!(snap.total_bytes(), 4 * 1024);
+        assert_eq!(snap.transport_errors(), 0);
+        assert_eq!(snap.trace_dropped, 0);
+        assert_eq!(snap.lat_us_pow2.iter().sum::<u64>(), 1, "one retired span bucketed");
+        // Receiver side: 4 imms delivered on b.
+        assert_eq!(b.telemetry().imm_bumps, 4);
+        // Drained is drained.
+        assert!(a.take_traces().is_empty());
+    }
+
+    #[test]
+    fn telemetry_disable_suppresses_hot_path_counters() {
+        let (mut sim, _net, a, b) = setup(NicProfile::efa);
+        a.set_telemetry(false);
+        let (src, _) = a.alloc_mr(0, 4096);
+        let (_dh, dd) = b.alloc_mr(0, 4096);
+        a.submit_single_write(&mut sim, (&src, 0), 256, (&dd, 0), None, OnDone::Noop)
+            .unwrap();
+        sim.run();
+        let snap = a.telemetry();
+        assert_eq!(snap.total_submissions(), 0);
+        assert_eq!(snap.total_bytes(), 0);
+        assert!(a.take_traces().is_empty(), "no spans captured while off");
+        assert_eq!(snap.trace_dropped, 0, "disabled capture is not a drop");
+        // Re-enable: counting resumes mid-run.
+        a.set_telemetry(true);
+        a.submit_single_write(&mut sim, (&src, 0), 256, (&dd, 64), None, OnDone::Noop)
+            .unwrap();
+        sim.run();
+        let snap = a.telemetry();
+        assert_eq!(snap.sub_single, 1);
+        assert_eq!(snap.total_bytes(), 256);
+        assert_eq!(a.take_traces().len(), 1);
+    }
+
+    #[test]
+    fn trace_ring_overflow_counts_drops() {
+        let (mut sim, _net, a, b) = setup(NicProfile::efa);
+        a.set_trace_capacity(2);
+        let (src, _) = a.alloc_mr(0, 4096);
+        let (_dh, dd) = b.alloc_mr(0, 4096);
+        for i in 0..5u64 {
+            a.submit_single_write(&mut sim, (&src, 0), 64, (&dd, i * 64), None, OnDone::Noop)
+                .unwrap();
+            sim.run();
+        }
+        assert_eq!(a.telemetry().trace_dropped, 3);
+        let spans = a.take_traces();
+        assert_eq!(spans.len(), 2, "ring holds only the newest spans");
+        assert!(
+            spans.iter().all(|t| t.outcome == TraceOutcome::Retired),
+            "surviving spans were still closed by their CQEs"
+        );
+        // Every transfer completed before the next submit pushed a
+        // span, so all five were closed while still live and bucketed
+        // — recycling later does not retract a recorded latency.
+        assert_eq!(a.telemetry().lat_us_pow2.iter().sum::<u64>(), 5);
     }
 
     #[test]

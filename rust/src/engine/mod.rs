@@ -17,9 +17,10 @@
 //!   [`traits`] — the dyn-safe Fig-2 trait + `Cx`/`Notify`/`Cluster`,
 //!        │ plus the chaos/health surface: `inject_chaos`,
 //!        │ `set_nic_health`, `set_failover_policy`,
-//!        │ `transport_errors`, and the per-link layer:
+//!        │ `transport_errors`, the per-link layer:
 //!        │ `link_health_mask`, `report_remote_health`,
-//!        │ `set_gossip_peers`
+//!        │ `set_gossip_peers`, and the observability surface:
+//!        │ `telemetry` (counter snapshot) + `take_traces` (spans)
 //!        │
 //!        ├── [`des_engine::Engine`]      (virtual clock, deterministic)
 //!        └── [`threaded::ThreadedEngine`] (pinned threads, wall clock)
@@ -104,12 +105,12 @@ pub use api::{
     EngineCosts, MrDesc, MrHandle, NetAddr, Pages, PeerGroupHandle, ScatterDst, TemplatedDst,
 };
 pub use self::core::{FailoverPolicy, GroupTemplate, NicHealth, PeerTemplate, RouteSet, RoutedWrite};
-pub use des_engine::{Engine, OnDone, SubmitTrace, UvmWatcherHandle};
+pub use des_engine::{Engine, OnDone, UvmWatcherHandle};
 pub use imm_counter::{ImmCounter, ImmEvent};
 pub use model::{
     BarrierModel, ComputeModel, Cont, Fired, NvlinkModel, Reactor, SerialResource, WakeSender,
 };
-pub use threaded::{OnDoneT, ThreadedEngine, TraceT};
+pub use threaded::{OnDoneT, ThreadedEngine};
 pub use traits::{
     expect_flag, new_flag, run_on_both, Cluster, Cx, Notify, OnRecv, OnWatch, RuntimeKind,
     SharedFlag, TransferEngine, UvmWatcher,

@@ -15,8 +15,12 @@
 //! OnDone notifications. A dedicated watcher thread polls UVM words.
 //!
 //! This runtime backs the runnable examples and the *measured* CPU
-//! overhead numbers (Table 8): `TraceT` records real monotonic
-//! timestamps from `submit_*()` to the last posted WRITE.
+//! overhead numbers (Table 8): each submission records a
+//! [`TraceEvent`] span with real monotonic timestamps from
+//! `submit_*()` through the last posted WRITE to retirement, and the
+//! engine-wide [`EngineMetrics`] ledger (cache-line-padded atomics)
+//! counts submissions, per-lane wire traffic and failure
+//! attributions. See `util::telemetry` for the counter taxonomy.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, Sender};
@@ -44,6 +48,10 @@ use crate::fabric::topology::DeviceId;
 use crate::util::err::Result;
 use crate::util::fasthash::FastMap;
 use crate::util::smallvec::SmallVec;
+use crate::util::telemetry::{
+    Cell64, EngineMetrics, EngineSnapshot, PaddedAtomic, SubmitKind, TraceEvent, TraceOutcome,
+    TraceRing, DEFAULT_TRACE_CAP, NO_TRACE,
+};
 
 /// [`FailoverPolicy`] packed into an atomic for lock-free reads on the
 /// worker threads.
@@ -58,14 +66,14 @@ fn policy_code(p: FailoverPolicy) -> u8 {
 }
 
 /// Shared failover state handed to each group's worker: the group's
-/// link-health table, the engine-wide policy/error counter, the armed
-/// flag that switches in-flight WR tracking on, and the group's
+/// link-health table, the engine-wide policy/metrics ledger, the
+/// armed flag that switches in-flight WR tracking on, and the group's
 /// gossip neighborhood.
 #[derive(Clone)]
 struct FailCtx {
     health: Arc<NicHealth>,
     policy: Arc<AtomicU8>,
-    errors: Arc<AtomicU64>,
+    metrics: Arc<EngineMetrics<PaddedAtomic>>,
     armed: Arc<AtomicBool>,
     gossip: Arc<Mutex<Vec<NetAddr>>>,
     /// Engine start: death marks are stamped `epoch.elapsed()` so the
@@ -104,16 +112,6 @@ fn fire_on_done_t(on_done: OnDoneT) {
         OnDoneT::Flag(f) => f.store(true, Ordering::Release),
         OnDoneT::Noop => {}
     }
-}
-
-/// Real-time submission trace (ns since engine start).
-#[derive(Debug, Clone, Copy)]
-pub struct TraceT {
-    pub submitted_ns: u64,
-    pub worker_ns: u64,
-    pub first_post_ns: u64,
-    pub last_post_ns: u64,
-    pub wrs: usize,
 }
 
 /// Number of cache-line-padded lanes in a [`ShardedRotation`]: enough
@@ -193,6 +191,7 @@ enum Cmd {
         src: DmaBuf,
         tid: u64,
         submitted_ns: u64,
+        kind: SubmitKind,
     },
     Send {
         dst: NicAddr,
@@ -213,7 +212,9 @@ struct GroupShared {
     /// (poisoned on recv-pool overflow so the submitter can
     /// distinguish truncation from completion).
     recv_cb: Option<Arc<dyn Fn(Fired) + Send + Sync>>,
-    traces: Vec<TraceT>,
+    /// Bounded ring of submission spans (drained by `take_traces`,
+    /// overflow counted — never an unbounded buffer).
+    trace: TraceRing,
     /// In-flight WRs by id, kept only once failover is armed, so a
     /// fabric `WrError` can resubmit them on a surviving NIC.
     retry: FastMap<u64, RetryT>,
@@ -249,8 +250,10 @@ struct Inner {
     watcher_thread: Mutex<Option<JoinHandle<()>>>,
     /// Engine-wide failover policy (see [`FailoverPolicy`]).
     policy: Arc<AtomicU8>,
-    /// Transport-level failures observed (dead-NIC WRs).
-    errors: Arc<AtomicU64>,
+    /// Engine-wide telemetry ledger: submission kinds, per-lane wire
+    /// accounting and the always-on transport-error attribution
+    /// counters (shared with every group's worker).
+    metrics: Arc<EngineMetrics<PaddedAtomic>>,
     /// True once chaos was injected or a health override landed.
     armed: Arc<AtomicBool>,
 }
@@ -267,7 +270,7 @@ impl ThreadedEngine {
     pub fn new(fabric: &LocalFabric, node: u16, gpus: u8, nics_per_gpu: u8) -> Self {
         let epoch = Instant::now();
         let policy = Arc::new(AtomicU8::new(POLICY_RESUBMIT));
-        let errors = Arc::new(AtomicU64::new(0));
+        let metrics = Arc::new(EngineMetrics::new());
         let armed = Arc::new(AtomicBool::new(false));
         let mut groups = Vec::new();
         for gpu in 0..gpus {
@@ -297,7 +300,7 @@ impl ThreadedEngine {
                 transfers: TransferTable::new(),
                 recvs: RecvPool::new(),
                 recv_cb: None,
-                traces: Vec::new(),
+                trace: TraceRing::new(DEFAULT_TRACE_CAP),
                 retry: FastMap::default(),
             }));
             let (tx, rx) = mpsc::channel::<Cmd>();
@@ -308,7 +311,7 @@ impl ThreadedEngine {
             let fo = FailCtx {
                 health: health.clone(),
                 policy: policy.clone(),
-                errors: errors.clone(),
+                metrics: metrics.clone(),
                 armed: armed.clone(),
                 gossip: gossip.clone(),
                 epoch,
@@ -339,7 +342,7 @@ impl ThreadedEngine {
                 watcher_stop: Arc::new(AtomicBool::new(false)),
                 watcher_thread: Mutex::new(None),
                 policy,
-                errors,
+                metrics,
                 armed,
             }),
         };
@@ -432,9 +435,51 @@ impl ThreadedEngine {
         self.inner.policy.store(policy_code(policy), Ordering::Release);
     }
 
-    /// Transport-level failures observed so far.
+    /// Transport-level failures observed so far — derived from the
+    /// structured error ledger (`wr_err_total + rejected_all_down`),
+    /// one source of truth with [`ThreadedEngine::telemetry`].
     pub fn transport_errors(&self) -> u64 {
-        self.inner.errors.load(Ordering::Acquire)
+        self.inner.metrics.transport_errors()
+    }
+
+    /// Enable/disable hot-path telemetry: submission-kind counters,
+    /// per-lane wire accounting, imm/recv/latency stats and trace
+    /// spans. The transport-error ledger and gossip/MR counters ALWAYS
+    /// count regardless — `transport_errors()` semantics never depend
+    /// on this switch.
+    pub fn set_telemetry(&self, on: bool) {
+        self.inner.metrics.set_enabled(on);
+    }
+
+    /// Resize every group's trace ring (existing spans beyond the new
+    /// capacity are dropped oldest-first and counted).
+    pub fn set_trace_capacity(&self, cap: usize) {
+        for g in &self.inner.groups {
+            g.shared.lock().unwrap().trace.set_capacity(cap);
+        }
+    }
+
+    /// Snapshot the engine-wide counter ledger (lock-free reads of the
+    /// padded atomics; `trace_dropped` summed over the groups' rings).
+    pub fn telemetry(&self) -> EngineSnapshot {
+        let mut snap = self.inner.metrics.snapshot();
+        snap.trace_dropped = self
+            .inner
+            .groups
+            .iter()
+            .map(|g| g.shared.lock().unwrap().trace.dropped())
+            .sum();
+        snap
+    }
+
+    /// Drain the recorded submission spans from every group's ring
+    /// (Table 8 real measurement; chrome-trace export feed).
+    pub fn take_traces(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for g in &self.inner.groups {
+            out.append(&mut g.shared.lock().unwrap().trace.drain());
+        }
+        out
     }
 
     fn spawn_watcher_thread(&self) {
@@ -525,11 +570,12 @@ impl ThreadedEngine {
     /// Register an existing buffer on `gpu`.
     pub fn reg_mr(&self, gpu: u8, buf: &DmaBuf) -> (MrHandle, MrDesc) {
         let mem = self.inner.fabric.mem();
-        let rkeys = self.inner.groups[gpu as usize]
+        let rkeys: Vec<_> = self.inner.groups[gpu as usize]
             .nics
             .iter()
             .map(|&n| (n, mem.register(buf).0))
             .collect();
+        self.inner.metrics.mr_regs.add(rkeys.len() as u64);
         (
             MrHandle {
                 buf: buf.clone(),
@@ -553,6 +599,7 @@ impl ThreadedEngine {
     /// refcounted and lives as long as any handle does.
     pub fn dereg_mr(&self, desc: &MrDesc) {
         let mem = self.inner.fabric.mem();
+        self.inner.metrics.mr_deregs.add(desc.rkeys.len() as u64);
         for &(_, rkey) in &desc.rkeys {
             mem.deregister(RKey(rkey));
         }
@@ -582,6 +629,7 @@ impl ThreadedEngine {
     ) {
         let g = &self.inner.groups[gpu as usize];
         let mem = self.inner.fabric.mem();
+        self.inner.metrics.recv_posts(cnt as u64);
         let mut bufs = Vec::with_capacity(cnt);
         {
             let mut sh = g.shared.lock().unwrap();
@@ -610,7 +658,7 @@ impl ThreadedEngine {
         let gpu = h.device.gpu;
         let g = &self.inner.groups[gpu as usize];
         let routed = route_single_write(g.nics.len(), g.rotation.next(), src_off, len, dst, imm)?;
-        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns)?;
+        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns, SubmitKind::Single)?;
         g.rotation.bump();
         Ok(())
     }
@@ -629,7 +677,7 @@ impl ThreadedEngine {
         let gpu = h.device.gpu;
         let g = &self.inner.groups[gpu as usize];
         let routed = route_paged_writes(g.nics.len(), g.rotation.next(), page_len, sp, dst, imm)?;
-        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns)?;
+        self.dispatch_writes(gpu, h, routed, on_done, submitted_ns, SubmitKind::Paged)?;
         g.rotation.bump();
         Ok(())
     }
@@ -711,7 +759,7 @@ impl ThreadedEngine {
         }
         let g = &self.inner.groups[gpu as usize];
         let routed = route_scatter(g.nics.len(), g.rotation.next(), dsts, imm)?;
-        self.dispatch_writes(gpu, src, routed, on_done, submitted_ns)?;
+        self.dispatch_writes(gpu, src, routed, on_done, submitted_ns, SubmitKind::Scatter)?;
         g.rotation.bump();
         Ok(())
     }
@@ -744,7 +792,9 @@ impl ThreadedEngine {
         let g = &self.inner.groups[gpu as usize];
         let routed = route_barrier(g.nics.len(), g.rotation.next(), dsts, imm)?;
         if g.health.up_count() == 0 {
-            self.inner.errors.fetch_add(1, Ordering::Relaxed);
+            // An all-NICs-down rejection is a transport failure too:
+            // counted in the ledger so scenarios observe the outage.
+            self.inner.metrics.rejected_all_down.add(1);
             crate::bail!(
                 "all {} NICs of the domain group are down; \
                  submission rejected (see FailoverPolicy docs)",
@@ -752,7 +802,9 @@ impl ThreadedEngine {
             );
         }
         let (scratch, scratch_desc) = self.alloc_mr(gpu, 1);
-        if let Err(e) = self.dispatch_writes(gpu, &scratch, routed, on_done, submitted_ns) {
+        if let Err(e) =
+            self.dispatch_writes(gpu, &scratch, routed, on_done, submitted_ns, SubmitKind::Barrier)
+        {
             self.dereg_mr(&scratch_desc);
             return Err(e);
         }
@@ -780,7 +832,7 @@ impl ThreadedEngine {
         let (h, src_off) = src;
         let routed =
             route_single_write_templated(&t, t.rotation.next(), peer, src_off, len, dst_off, imm)?;
-        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns)?;
+        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns, SubmitKind::SingleTpl)?;
         t.rotation.bump();
         Ok(())
     }
@@ -808,7 +860,7 @@ impl ThreadedEngine {
             dst_pages,
             imm,
         )?;
-        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns)?;
+        self.dispatch_writes(h.device.gpu, h, routed, on_done, submitted_ns, SubmitKind::PagedTpl)?;
         t.rotation.bump();
         Ok(())
     }
@@ -826,7 +878,14 @@ impl ThreadedEngine {
         let submitted_ns = self.now_ns();
         let t = self.template(group)?;
         let routed = route_scatter_templated(&t, t.rotation.next(), dsts, imm)?;
-        self.dispatch_writes(src.device.gpu, src, routed, on_done, submitted_ns)?;
+        self.dispatch_writes(
+            src.device.gpu,
+            src,
+            routed,
+            on_done,
+            submitted_ns,
+            SubmitKind::ScatterTpl,
+        )?;
         t.rotation.bump();
         Ok(())
     }
@@ -843,7 +902,14 @@ impl ThreadedEngine {
         let t = self.template(group)?;
         let routed = route_barrier_templated(&t, t.rotation.next(), imm);
         let scratch = t.scratch.clone();
-        self.dispatch_writes(scratch.device.gpu, &scratch, routed, on_done, submitted_ns)?;
+        self.dispatch_writes(
+            scratch.device.gpu,
+            &scratch,
+            routed,
+            on_done,
+            submitted_ns,
+            SubmitKind::BarrierTpl,
+        )?;
         t.rotation.bump();
         Ok(())
     }
@@ -875,7 +941,7 @@ impl ThreadedEngine {
         let gpu = src.device.gpu;
         let g = &self.inner.groups[gpu as usize];
         let routed = route_write_batch(g.nics.len(), g.rotation.next(), dsts, imm_base)?;
-        self.dispatch_writes(gpu, src, routed, on_done, submitted_ns)?;
+        self.dispatch_writes(gpu, src, routed, on_done, submitted_ns, SubmitKind::Batch)?;
         g.rotation.bump_n(dsts.len());
         Ok(())
     }
@@ -904,7 +970,14 @@ impl ThreadedEngine {
             return Ok(());
         }
         let routed = route_batch_templated(&t, t.rotation.next(), dsts, imm_base)?;
-        self.dispatch_writes(src.device.gpu, src, routed, on_done, submitted_ns)?;
+        self.dispatch_writes(
+            src.device.gpu,
+            src,
+            routed,
+            on_done,
+            submitted_ns,
+            SubmitKind::BatchTpl,
+        )?;
         t.rotation.bump_n(dsts.len());
         Ok(())
     }
@@ -921,6 +994,12 @@ impl ThreadedEngine {
             let mut sh = self.inner.groups[gpu as usize].shared.lock().unwrap();
             sh.imm.expect(imm, count, Box::new(cb))
         };
+        if self.inner.metrics.enabled() {
+            self.inner.metrics.imm_arms.add(1);
+            if ready.is_some() {
+                self.inner.metrics.imm_retires.add(1);
+            }
+        }
         if let Some(cb) = ready {
             cb();
         }
@@ -976,16 +1055,6 @@ impl ThreadedEngine {
         }
     }
 
-    /// Collect submission traces from all groups (Table 8 real
-    /// measurement).
-    pub fn traces(&self) -> Vec<TraceT> {
-        let mut out = Vec::new();
-        for g in &self.inner.groups {
-            out.extend(g.shared.lock().unwrap().traces.iter().copied());
-        }
-        out
-    }
-
     fn alloc_transfer(&self, gpu: u8, remaining: usize, on_done: OnDoneT) -> u64 {
         self.inner.groups[gpu as usize]
             .shared
@@ -1002,6 +1071,7 @@ impl ThreadedEngine {
         mut routed: RoutedVec,
         on_done: OnDoneT,
         submitted_ns: u64,
+        kind: SubmitKind,
     ) -> Result<()> {
         assert!(!routed.is_empty(), "empty transfer");
         // Unhealthy paths are masked here — at patch time, after
@@ -1019,10 +1089,11 @@ impl ThreadedEngine {
             if let Err(e) = remap_routed(&mut routed, &g.health) {
                 // An all-NICs-down rejection is a transport failure
                 // too: count it so scenarios can observe the outage.
-                self.inner.errors.fetch_add(1, Ordering::Relaxed);
+                self.inner.metrics.rejected_all_down.add(1);
                 return Err(e);
             }
         }
+        self.inner.metrics.submission(kind);
         let tid = self.alloc_transfer(gpu, routed.len(), on_done);
         g.tx
             .send(Cmd::Writes {
@@ -1030,6 +1101,7 @@ impl ThreadedEngine {
                 src: src.buf.clone(),
                 tid,
                 submitted_ns,
+                kind,
             })
             .expect("worker gone");
         Ok(())
@@ -1057,6 +1129,7 @@ fn worker_loop(
                 src,
                 tid,
                 submitted_ns,
+                kind,
             }) => {
                 let worker_ns = epoch.elapsed().as_nanos() as u64;
                 let n = routed.len();
@@ -1091,6 +1164,19 @@ fn worker_loop(
                         )
                     })
                     .collect();
+                // Wire accounting (gated): one bump per WR on its
+                // egress lane; the span's bytes are the payload sum.
+                let mut bytes = 0u64;
+                let mut lane0 = 0u8;
+                for (i, (lane, _, wr)) in wrs.iter().enumerate() {
+                    if let WrOp::Write { src, .. } = &wr.op {
+                        bytes += src.len as u64;
+                        fo.metrics.wire(*lane, 1, src.len as u64);
+                    }
+                    if i == 0 {
+                        lane0 = *lane as u8;
+                    }
+                }
                 {
                     let mut sh = shared.lock().unwrap();
                     let armed = fo.armed.load(Ordering::Acquire);
@@ -1118,13 +1204,31 @@ fn worker_loop(
                     fabric.post(nics[lane], wr);
                 }
                 let last_post_ns = epoch.elapsed().as_nanos() as u64;
-                shared.lock().unwrap().traces.push(TraceT {
-                    submitted_ns,
-                    worker_ns,
-                    first_post_ns,
-                    last_post_ns,
-                    wrs: n,
-                });
+                // Open the span AFTER the posts (the ring needs the
+                // last-post stamp) — safe against completion races
+                // because THIS thread also polls the group's CQs, so
+                // no CQE for these WRs is handled before this point.
+                // On this runtime the app thread enqueues directly:
+                // `enqueued` coincides with `submitted`.
+                let mut sh = shared.lock().unwrap();
+                let seq = if fo.metrics.enabled() {
+                    sh.trace.push(TraceEvent {
+                        kind,
+                        lane: lane0,
+                        wrs: n as u32,
+                        bytes,
+                        submitted: submitted_ns,
+                        enqueued: submitted_ns,
+                        worker_start: worker_ns,
+                        first_post: first_post_ns,
+                        last_post: last_post_ns,
+                        retired: 0,
+                        outcome: TraceOutcome::Posted,
+                    })
+                } else {
+                    NO_TRACE
+                };
+                sh.transfers.set_trace(tid, seq);
             }
             Ok(Cmd::Send { dst, payload, tid }) => {
                 let id = next_wr;
@@ -1199,16 +1303,25 @@ fn handle_cqe(
 ) {
     match cqe.kind {
         CqeKind::SendDone | CqeKind::WriteDone => {
+            let now = fo.epoch.elapsed().as_nanos() as u64;
             let done = {
                 let mut sh = shared.lock().unwrap();
                 if fo.armed.load(Ordering::Acquire) {
                     sh.retry.remove(&cqe.wr_id);
                 }
-                sh.transfers.complete_wr(cqe.wr_id)
+                let done = sh.transfers.complete_wr(cqe.wr_id);
+                // Last WR of a transfer: retire the span and feed the
+                // end-to-end latency histogram from its submit stamp.
+                if let Some((_, seq)) = &done {
+                    if let Some(sub) = sh.trace.close(*seq, now, TraceOutcome::Retired) {
+                        fo.metrics.observe_latency(now.saturating_sub(sub));
+                    }
+                }
+                done
             };
             match done {
-                Some(OnDoneT::Callback(cb)) => cb(),
-                Some(OnDoneT::Flag(f)) => f.store(true, Ordering::Release),
+                Some((OnDoneT::Callback(cb), _)) => cb(),
+                Some((OnDoneT::Flag(f), _)) => f.store(true, Ordering::Release),
                 _ => {}
             }
         }
@@ -1224,12 +1337,26 @@ fn handle_cqe(
             // commit — no duplication possible); otherwise count the
             // error and complete the transfer undelivered so waiters
             // don't hang (trait docs spell out the contract).
-            fo.errors.fetch_add(1, Ordering::Relaxed);
+            // Ledger invariants (always on): every WrError bumps the
+            // total plus exactly one of {link, nic}; a remote-death
+            // conclusion bumps `wr_err_remote` ADDITIONALLY; and the
+            // error resolves as exactly one of resubmit / error-out.
+            fo.metrics.wr_err_total.add(1);
             let entry = shared.lock().unwrap().retry.remove(&cqe.wr_id);
             let mut gossip_dead: Option<NicAddr> = None;
             let retried = match entry {
                 Some(mut e) => {
                     let remote = e.wr.op.dst();
+                    if remote.is_some() {
+                        // Routable WR with a live retry entry: the
+                        // failure is attributed to the (lane → remote
+                        // NIC) link.
+                        fo.metrics.wr_err_link.add(1);
+                    } else {
+                        // SEND-path WR (no destination NIC to blame a
+                        // link on): attributed to the local NIC.
+                        fo.metrics.wr_err_nic.add(1);
+                    }
                     if let Some(r) = remote {
                         fo.health.set_link(e.cur_lane, r, false);
                         // Conclude remote death only from full link
@@ -1243,6 +1370,7 @@ fn handle_cqe(
                         {
                             let now = fo.epoch.elapsed().as_nanos() as u64;
                             fo.health.set_remote_at(r, false, now);
+                            fo.metrics.wr_err_remote.add(1);
                             gossip_dead = Some(r);
                         }
                     }
@@ -1269,6 +1397,14 @@ fn handle_cqe(
                                 // attributed failure.
                                 e.cur_lane = lane;
                                 let wr = e.wr.clone();
+                                // The repost is real wire traffic:
+                                // account it on the retry lane (gated;
+                                // SEND retries carry no payload WR and
+                                // are not wire-counted).
+                                fo.metrics.resubmits.add(1);
+                                if let WrOp::Write { src, .. } = &wr.op {
+                                    fo.metrics.wire(lane, 1, src.len as u64);
+                                }
                                 shared.lock().unwrap().retry.insert(cqe.wr_id, e);
                                 fabric.post(nics[lane], wr);
                                 true
@@ -1279,7 +1415,12 @@ fn handle_cqe(
                         false
                     }
                 }
-                None => false,
+                None => {
+                    // No retry entry (failover never armed): nothing
+                    // links this WR to a route — attribute locally.
+                    fo.metrics.wr_err_nic.add(1);
+                    false
+                }
             };
             // Gossip outside the retry bookkeeping: one control SEND
             // per configured peer (fire-and-forget, peers owning the
@@ -1288,6 +1429,7 @@ fn handle_cqe(
                 let peers = fo.gossip.lock().unwrap().clone();
                 let msg = wire::encode_nic_health(r, false);
                 for p in peers.iter().filter(|p| !p.nics.contains(&r)) {
+                    fo.metrics.gossip_sent.add(1);
                     let id = *next_wr;
                     *next_wr += 1;
                     fabric.post(
@@ -1302,16 +1444,33 @@ fn handle_cqe(
                 }
             }
             if !retried {
-                let done = shared.lock().unwrap().transfers.complete_wr(cqe.wr_id);
+                fo.metrics.error_outs.add(1);
+                let now = fo.epoch.elapsed().as_nanos() as u64;
+                let done = {
+                    let mut sh = shared.lock().unwrap();
+                    let done = sh.transfers.complete_wr(cqe.wr_id);
+                    // A transfer concluded by an errored WR closes its
+                    // span as Failed — no latency sample.
+                    if let Some((_, seq)) = &done {
+                        sh.trace.close(*seq, now, TraceOutcome::Failed);
+                    }
+                    done
+                };
                 match done {
-                    Some(OnDoneT::Callback(cb)) => cb(),
-                    Some(OnDoneT::Flag(f)) => f.store(true, Ordering::Release),
+                    Some((OnDoneT::Callback(cb), _)) => cb(),
+                    Some((OnDoneT::Flag(f), _)) => f.store(true, Ordering::Release),
                     _ => {}
                 }
             }
         }
         CqeKind::ImmRecvd { imm, .. } => {
             let waiter = shared.lock().unwrap().imm.on_imm(imm);
+            if fo.metrics.enabled() {
+                fo.metrics.imm_bumps.add(1);
+                if waiter.is_some() {
+                    fo.metrics.imm_retires.add(1);
+                }
+            }
             if let Some(cb) = waiter {
                 cb();
             }
@@ -1337,6 +1496,10 @@ fn handle_cqe(
                 let cb = sh.recv_cb.clone();
                 (msg, cb, (new_id, buf))
             };
+            if fo.metrics.enabled() {
+                fo.metrics.recv_completed.add(1);
+            }
+            fo.metrics.recv_posts(1);
             fabric.post(
                 nic,
                 WorkRequest {
@@ -1353,6 +1516,7 @@ fn handle_cqe(
             // to the group's link table, never delivered to
             // application callbacks.
             if wire::is_nic_health(&msg.data) {
+                fo.metrics.gossip_received.add(1);
                 if let Ok((dead, up)) = wire::decode_nic_health(&msg.data) {
                     fo.armed.store(true, Ordering::Release);
                     // Stamp the gossiped death at receive time so the
@@ -1360,6 +1524,7 @@ fn handle_cqe(
                     // started believing it.
                     let now = fo.epoch.elapsed().as_nanos() as u64;
                     fo.health.set_remote_at(dead, up, now);
+                    fo.metrics.gossip_applied.add(1);
                 }
                 return;
             }
@@ -1633,6 +1798,22 @@ impl TransferEngine for ThreadedEngine {
 
     fn transport_errors(&self) -> u64 {
         ThreadedEngine::transport_errors(self)
+    }
+
+    fn telemetry(&self) -> EngineSnapshot {
+        ThreadedEngine::telemetry(self)
+    }
+
+    fn take_traces(&self) -> Vec<TraceEvent> {
+        ThreadedEngine::take_traces(self)
+    }
+
+    fn set_telemetry(&self, on: bool) {
+        ThreadedEngine::set_telemetry(self, on)
+    }
+
+    fn set_trace_capacity(&self, cap: usize) {
+        ThreadedEngine::set_trace_capacity(self, cap)
     }
 
     fn link_health_mask(&self, gpu: u8, remote: NicAddr) -> u64 {
@@ -2202,13 +2383,55 @@ mod tests {
         a.submit_single_write((&src, 0), 4096, (&dd, 0), None, OnDoneT::Flag(done.clone()))
             .unwrap();
         wait_flag(&done);
-        let traces = a.traces();
+        let traces = a.take_traces();
         assert!(!traces.is_empty());
-        let t = traces[0];
-        assert!(t.submitted_ns <= t.worker_ns);
-        assert!(t.worker_ns <= t.first_post_ns);
-        assert!(t.first_post_ns <= t.last_post_ns);
+        let t = &traces[0];
+        assert_eq!(t.kind, SubmitKind::Single);
+        assert!(t.submitted <= t.worker_start);
+        assert!(t.worker_start <= t.first_post);
+        assert!(t.first_post <= t.last_post);
+        assert!(t.last_post <= t.retired, "span retired after the last post");
+        assert_eq!(t.outcome, TraceOutcome::Retired);
         assert_eq!(t.wrs, 1);
+        assert_eq!(t.bytes, 4096);
+        let snap = a.telemetry();
+        assert_eq!(snap.sub_single, 1);
+        assert_eq!(snap.total_bytes(), 4096);
+        assert_eq!(snap.transport_errors(), 0);
+        assert_eq!(snap.trace_dropped, 0);
+        assert_eq!(snap.lat_us_pow2.iter().sum::<u64>(), 1, "one latency sample");
+        assert!(a.take_traces().is_empty(), "drain consumes the ring");
+        a.shutdown();
+        b.shutdown();
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn threaded_telemetry_disable_suppresses_hot_path_counters() {
+        let fabric = LocalFabric::new(TransportKind::Rc, 15);
+        let a = ThreadedEngine::new(&fabric, 0, 1, 1);
+        let b = ThreadedEngine::new(&fabric, 1, 1, 1);
+        let (src, _) = a.alloc_mr(0, 64);
+        let (_dh, dd) = b.alloc_mr(0, 64);
+        a.set_telemetry(false);
+        let done = Arc::new(AtomicBool::new(false));
+        a.submit_single_write((&src, 0), 64, (&dd, 0), None, OnDoneT::Flag(done.clone()))
+            .unwrap();
+        wait_flag(&done);
+        let snap = a.telemetry();
+        assert_eq!(snap.total_submissions(), 0, "kind counters gated off");
+        assert_eq!(snap.total_bytes(), 0, "wire accounting gated off");
+        assert!(a.take_traces().is_empty(), "no spans captured while off");
+        assert_eq!(snap.trace_dropped, 0, "disabled spans are skipped, not dropped");
+        // The always-on ledger still works while gated off.
+        assert_eq!(snap.transport_errors(), 0);
+        a.set_telemetry(true);
+        let done2 = Arc::new(AtomicBool::new(false));
+        a.submit_single_write((&src, 0), 64, (&dd, 0), None, OnDoneT::Flag(done2.clone()))
+            .unwrap();
+        wait_flag(&done2);
+        assert_eq!(a.telemetry().sub_single, 1, "re-enable resumes counting");
+        assert_eq!(a.take_traces().len(), 1);
         a.shutdown();
         b.shutdown();
         fabric.shutdown();

@@ -59,6 +59,7 @@ use crate::fabric::simnet::SimNet;
 use crate::sim::time::{Duration, Instant};
 use crate::sim::Sim;
 use crate::util::err::Result;
+use crate::util::telemetry::{EngineSnapshot, TraceEvent};
 
 /// Which runtime backs an engine or context.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -715,8 +716,51 @@ pub trait TransferEngine {
 
     /// Transport-level failures observed so far (WRs that died on a
     /// downed NIC or a partitioned link), whether transparently
-    /// resubmitted or errored out.
+    /// resubmitted or errored out. Derived from the structured
+    /// telemetry registry: always equals
+    /// `telemetry().wr_err_total + telemetry().rejected_all_down`.
     fn transport_errors(&self) -> u64;
+
+    // -- telemetry ----------------------------------------------------
+    //
+    // Both runtimes maintain one engine-wide
+    // [`crate::util::telemetry::EngineMetrics`] registry (plain cells
+    // on DES, cache-line-padded relaxed atomics on the threaded
+    // runtime) plus a bounded trace ring of submission spans. The
+    // counter taxonomy and the accounting identities the engines
+    // maintain are documented in `util/telemetry.rs` and
+    // `docs/ARCHITECTURE.md` ("Observability").
+
+    /// Point-in-time copy of the engine-wide telemetry registry:
+    /// submissions by kind, per-lane WR/byte totals, the WrError
+    /// attribution ledger, gossip/imm/recv/MR accounting, the
+    /// submit→retire latency histogram, and the trace ring's overflow
+    /// drop count. Cheap (a few dozen relaxed loads), callable at any
+    /// point in a run; on the threaded runtime concurrent workers may
+    /// still be counting, so mid-run reads are monotonic lower bounds
+    /// and post-settle reads are exact.
+    fn telemetry(&self) -> EngineSnapshot;
+
+    /// Drain the engine's bounded trace ring(s): every buffered
+    /// submission span, oldest first, leaving the ring empty (the
+    /// overflow-drop counter and span numbering carry on). Spans whose
+    /// transfer has retired carry `retired`/`outcome`; spans still in
+    /// flight read `Posted`. Feed the result to
+    /// [`crate::util::telemetry::chrome_trace_json`] for a
+    /// chrome://tracing view (`fabricctl ... --trace-out` does).
+    fn take_traces(&self) -> Vec<TraceEvent>;
+
+    /// Enable/disable hot-path telemetry (submission kinds, lane wire
+    /// counters, latency samples, trace capture). The error ledger,
+    /// gossip and MR counters always count — `transport_errors` and
+    /// chaos accounting stay exact with telemetry off. On by default.
+    fn set_telemetry(&self, on: bool);
+
+    /// Resize the bounded trace ring(s) (default
+    /// [`crate::util::telemetry::DEFAULT_TRACE_CAP`] spans). Shrinking
+    /// below the buffered count drops oldest spans into the overflow
+    /// counter.
+    fn set_trace_capacity(&self, cap: usize);
 
     // -- per-link health + remote-health gossip -----------------------
     //

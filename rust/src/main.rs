@@ -9,13 +9,16 @@
 //!
 //! Examples:
 //!   fabricctl kvcache --seq 8192
+//!   fabricctl kvcache --seq 8192 --metrics-json
+//!   fabricctl kvcache --seq 8192 --trace-out trace.json   # chrome://tracing
 //!   fabricctl moe --ep 32 --impl ours --nic efa --iters 4
 //!   fabricctl rl --ranks 16
 
 use fabric_lib::bail;
-use fabric_lib::util::err::Result;
+use fabric_lib::util::err::{Context, Result};
+use fabric_lib::util::telemetry::chrome_trace_json;
 
-use fabric_lib::apps::kvcache::run_table3_row;
+use fabric_lib::apps::kvcache::{run_table3_row, run_table3_row_with_telemetry};
 use fabric_lib::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};
 use fabric_lib::apps::rlweights::{run_p2p_transfer, RlModelSpec};
 use fabric_lib::fabric::profile::NicProfile;
@@ -40,7 +43,26 @@ fn main() -> Result<()> {
         }
         Some("kvcache") => {
             let seq = args.u64_or("seq", 4096)? as u32;
-            let row = run_table3_row(seq);
+            let metrics_json = args.flag("metrics-json");
+            let trace_out = args.str_opt("trace-out");
+            let row = if metrics_json || trace_out.is_some() {
+                let (row, snap, traces) = run_table3_row_with_telemetry(seq);
+                if metrics_json {
+                    print!("{}", snap.to_json().to_pretty(2));
+                }
+                if let Some(path) = trace_out {
+                    let json = chrome_trace_json(&traces);
+                    std::fs::write(&path, json.to_pretty(2))
+                        .with_context(|| format!("writing trace to {path}"))?;
+                    eprintln!(
+                        "wrote {} spans to {path} (open in chrome://tracing or ui.perfetto.dev)",
+                        traces.len()
+                    );
+                }
+                row
+            } else {
+                run_table3_row(seq)
+            };
             println!(
                 "seq {}: TTFT non-disagg {:.0} ms, disagg {:.0} ms \
                  (per-layer compute {:.3} ms, transfer {:.3} ms, {} steps, {} pages)",

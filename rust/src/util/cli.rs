@@ -57,6 +57,11 @@ impl Args {
         self.flags.get(k).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// Optional string option (`None` when the flag is absent).
+    pub fn str_opt(&self, k: &str) -> Option<String> {
+        self.flags.get(k).cloned()
+    }
+
     /// Required string option.
     pub fn str_req(&self, k: &str) -> Result<String> {
         self.flags
@@ -136,7 +141,10 @@ mod tests {
         let a = parse("");
         assert_eq!(a.u64_or("n", 7).unwrap(), 7);
         assert_eq!(a.str_or("mode", "sim"), "sim");
+        assert_eq!(a.str_opt("mode"), None);
         assert!(a.str_req("missing").is_err());
+        let b = parse("--out trace.json");
+        assert_eq!(b.str_opt("out").as_deref(), Some("trace.json"));
     }
 
     #[test]

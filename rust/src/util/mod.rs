@@ -10,5 +10,6 @@ pub mod json;
 pub mod prop;
 pub mod smallvec;
 pub mod table;
+pub mod telemetry;
 
 pub use json::Json;

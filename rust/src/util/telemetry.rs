@@ -1,0 +1,988 @@
+//! Zero-dependency engine telemetry shared by BOTH runtimes: a
+//! counter/gauge/histogram registry ([`EngineMetrics`]), an immutable
+//! point-in-time view of it ([`EngineSnapshot`]), and a bounded ring
+//! of submission trace spans ([`TraceRing`] of [`TraceEvent`])
+//! exportable as chrome://tracing JSON ([`chrome_trace_json`]).
+//!
+//! Design constraints, in order:
+//!
+//! * **Allocation-free on the steady-state hot path.** Every counter
+//!   is a fixed field of a flat struct; per-lane accounting is a
+//!   fixed-size array indexed by NIC lane; the trace ring reaches its
+//!   capacity once and then recycles slots. No map lookups, no string
+//!   keys, no boxing per event.
+//! * **One generic registry, two cell types.** The DES runtime is
+//!   single-threaded behind `Rc<RefCell<..>>`, so its counters are
+//!   plain [`Cell`]s ([`PlainCell`]). The threaded runtime bumps
+//!   counters from the submit thread and per-GPU workers
+//!   concurrently, so its cells are cache-line-padded relaxed
+//!   atomics ([`PaddedAtomic`]) — one counter per line, no false
+//!   sharing with its neighbors. [`EngineMetrics`] is generic over
+//!   [`Cell64`] so both runtimes share one field list and one
+//!   snapshot path, and the two can never drift apart.
+//! * **Error accounting is NOT optional.** `set_enabled(false)`
+//!   (surfaced as `set_telemetry(false)` on the engines) turns off
+//!   the hot-path instrumentation — submission-kind counters, wire
+//!   counters, imm/recv/latency accounting, trace capture — but the
+//!   error ledger (`wr_err_*`, `rejected_all_down`, `resubmits`,
+//!   `error_outs`) always counts: `transport_errors()` is derived
+//!   from it and is part of the failover contract
+//!   (`docs/ARCHITECTURE.md`, "The failover/gossip contract").
+//!
+//! Accounting identities the engines maintain (pinned by
+//! `tests/telemetry_accounting.rs` on both runtimes):
+//!
+//! * `transport_errors() == wr_err_total + rejected_all_down`;
+//! * every WrError CQE resolves to exactly one of `resubmits` /
+//!   `error_outs`, so `resubmits + error_outs == wr_err_total`;
+//! * every WrError CQE is attributed, so
+//!   `wr_err_link + wr_err_nic == wr_err_total` (`wr_err_remote` is
+//!   an *additional* conclusion drawn on top of link evidence, not a
+//!   third bucket) — fabric-lint rule R8 statically enforces that
+//!   every `CqeKind::WrError` handling path reaches an attribution
+//!   increment;
+//! * on a clean (chaos-free) run, `sum(lane_bytes) ==` total payload
+//!   bytes of every write-family submission, and batched vs looped
+//!   submission of the same workload produce identical
+//!   [`EngineSnapshot::wire_footprint`]s on same-seed DES clusters.
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Per-lane accounting width. Lanes at index `>= MAX_LANES` (no
+/// shipped profile has them; the paper testbeds top out at 4) lump
+/// into the last slot rather than growing the registry.
+pub const MAX_LANES: usize = 8;
+
+/// Submit→retire latency histogram width: power-of-two microsecond
+/// buckets, `bucket b` covering `[2^b, 2^(b+1))` µs (bucket 0 is
+/// `< 2` µs, the last bucket is open-ended).
+pub const HIST_BUCKETS: usize = 16;
+
+/// Sentinel trace sequence for untraced work (SENDs, runs with
+/// telemetry disabled): [`TraceRing::close`] ignores it.
+pub const NO_TRACE: u64 = u64::MAX;
+
+/// Default capacity of an engine's trace ring: big enough to hold
+/// every span of the shipped benches/scenarios, small enough
+/// (~100 B/span) that a thousand-engine DES cluster stays cheap.
+pub const DEFAULT_TRACE_CAP: usize = 4096;
+
+/// One monotonically-growing 64-bit telemetry cell. The two impls
+/// pick the cheapest primitive their runtime allows; both are
+/// interior-mutable so the registry is bumped through `&self` from
+/// hot paths that never take `&mut`.
+pub trait Cell64: Default {
+    /// Add `v` (relaxed on the atomic impl).
+    fn add(&self, v: u64);
+    /// Overwrite with `v` (gauges, the enable flag).
+    fn set(&self, v: u64);
+    /// Raise to `v` if `v` is larger (high-water gauges).
+    fn set_max(&self, v: u64);
+    /// Current value. Relaxed on the atomic impl: exact once the
+    /// reader synchronizes with the writers (join/settle/lock), a
+    /// monotonic lower bound while they are still running.
+    fn get(&self) -> u64;
+}
+
+/// Single-threaded cell for the DES runtime: a plain [`Cell`], one
+/// untyped load/store per bump.
+#[derive(Default)]
+pub struct PlainCell(Cell<u64>);
+
+impl Cell64 for PlainCell {
+    fn add(&self, v: u64) {
+        self.0.set(self.0.get().wrapping_add(v));
+    }
+    fn set(&self, v: u64) {
+        self.0.set(v);
+    }
+    fn set_max(&self, v: u64) {
+        if v > self.0.get() {
+            self.0.set(v);
+        }
+    }
+    fn get(&self) -> u64 {
+        self.0.get()
+    }
+}
+
+/// Cache-line-padded relaxed atomic for the threaded runtime: the
+/// alignment gives every counter its own line so submit-thread and
+/// worker-thread bumps never false-share (same idiom as the padded
+/// rotation shards in `engine/threaded.rs`).
+#[derive(Default)]
+#[repr(align(64))]
+pub struct PaddedAtomic(AtomicU64);
+
+impl Cell64 for PaddedAtomic {
+    fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+    fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Which engine entry point a submission came through — the write
+/// family only (SEND/RECV are control-plane and stay untraced).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitKind {
+    /// `submit_single_write`.
+    Single,
+    /// `submit_paged_writes`.
+    Paged,
+    /// `submit_scatter`.
+    Scatter,
+    /// `submit_barrier`.
+    Barrier,
+    /// `submit_write_batch`.
+    Batch,
+    /// `submit_single_write_templated`.
+    SingleTpl,
+    /// `submit_paged_writes_templated`.
+    PagedTpl,
+    /// `submit_scatter_templated`.
+    ScatterTpl,
+    /// `submit_barrier_templated`.
+    BarrierTpl,
+    /// `submit_batch_templated`.
+    BatchTpl,
+}
+
+impl SubmitKind {
+    /// Stable label used as the chrome-trace event name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SubmitKind::Single => "single",
+            SubmitKind::Paged => "paged",
+            SubmitKind::Scatter => "scatter",
+            SubmitKind::Barrier => "barrier",
+            SubmitKind::Batch => "batch",
+            SubmitKind::SingleTpl => "single_tpl",
+            SubmitKind::PagedTpl => "paged_tpl",
+            SubmitKind::ScatterTpl => "scatter_tpl",
+            SubmitKind::BarrierTpl => "barrier_tpl",
+            SubmitKind::BatchTpl => "batch_tpl",
+        }
+    }
+}
+
+/// Lifecycle state of a trace span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOutcome {
+    /// WRs posted; completion not (yet) observed.
+    Posted,
+    /// Every WR of the transfer completed.
+    Retired,
+    /// The transfer's `on_done` fired on the error path (error-out or
+    /// exhausted retargeting).
+    Failed,
+}
+
+impl TraceOutcome {
+    /// Stable label for JSON export.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceOutcome::Posted => "posted",
+            TraceOutcome::Retired => "retired",
+            TraceOutcome::Failed => "failed",
+        }
+    }
+}
+
+/// One submission span, runtime-neutral. Timestamps are nanoseconds
+/// on the owning engine's clock — virtual sim time on DES, epoch-
+/// relative monotonic time on the threaded runtime — so deltas are
+/// meaningful, absolutes are only comparable within one engine.
+///
+/// The five submit-phase stamps mirror the paper's Table 8 pipeline
+/// (API call → queue → worker pickup → first/last ibv_post): on the
+/// threaded runtime the queue hop is not separately observable, so
+/// `enqueued == submitted` there. `retired`/`outcome` close the span
+/// when the transfer's last CQE lands (0/`Posted` while in flight or
+/// if the ring recycled the slot first).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Entry point the submission came through.
+    pub kind: SubmitKind,
+    /// Lane (NIC index in the group) of the first WR; with sharding
+    /// a span covers sibling lanes too — per-lane totals live in the
+    /// counters, the trace keeps the primary egress.
+    pub lane: u8,
+    /// Work requests posted for this submission.
+    pub wrs: u32,
+    /// Total payload bytes across those WRs.
+    pub bytes: u64,
+    /// API entry timestamp.
+    pub submitted: u64,
+    /// Queued to the proxy/worker (DES model stage; `== submitted`
+    /// on the threaded runtime).
+    pub enqueued: u64,
+    /// Worker picked the submission up.
+    pub worker_start: u64,
+    /// First WR posted to the NIC.
+    pub first_post: u64,
+    /// Last WR posted to the NIC.
+    pub last_post: u64,
+    /// Last CQE of the transfer (0 while in flight).
+    pub retired: u64,
+    /// Span lifecycle state.
+    pub outcome: TraceOutcome,
+}
+
+/// Bounded ring of [`TraceEvent`]s. Push never allocates once the
+/// ring has filled: the oldest span is recycled and counted in
+/// [`TraceRing::dropped`] — bounded memory with an explicit loss
+/// ledger instead of the old unbounded `Vec<SubmitTrace>` sink.
+///
+/// Spans are addressed by a monotonically increasing sequence number
+/// so completion handlers can [`close`](TraceRing::close) a span
+/// later without holding a reference into the ring; closing a span
+/// the ring already recycled (or [`NO_TRACE`]) is a silent no-op.
+#[derive(Default)]
+pub struct TraceRing {
+    buf: VecDeque<TraceEvent>,
+    /// Sequence number the next push will get.
+    next_seq: u64,
+    dropped: u64,
+    cap: usize,
+}
+
+impl TraceRing {
+    /// Ring with room for `cap` spans (`cap == 0` drops everything).
+    pub fn new(cap: usize) -> Self {
+        TraceRing { buf: VecDeque::with_capacity(cap.min(DEFAULT_TRACE_CAP)), next_seq: 0, dropped: 0, cap }
+    }
+
+    /// Append a span, recycling the oldest if full; returns the new
+    /// span's sequence number for a later [`close`](TraceRing::close).
+    pub fn push(&mut self, e: TraceEvent) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        if self.cap == 0 {
+            self.dropped += 1;
+            return seq;
+        }
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(e);
+        seq
+    }
+
+    /// Close span `seq` with its retire timestamp and final outcome,
+    /// returning the span's submit stamp so the caller can observe a
+    /// submit→retire latency. No-op (returning `None`) for
+    /// [`NO_TRACE`] and for spans the ring has recycled.
+    pub fn close(&mut self, seq: u64, retired: u64, outcome: TraceOutcome) -> Option<u64> {
+        if seq == NO_TRACE {
+            return None;
+        }
+        let base = self.next_seq - self.buf.len() as u64;
+        if seq < base || seq >= self.next_seq {
+            return None;
+        }
+        let e = &mut self.buf[(seq - base) as usize];
+        e.retired = retired;
+        e.outcome = outcome;
+        Some(e.submitted)
+    }
+
+    /// Remove and return every buffered span, oldest first. The drop
+    /// counter and sequence numbering carry on across drains.
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        self.buf.drain(..).collect()
+    }
+
+    /// Spans recycled (or refused at `cap == 0`) so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Buffered span count.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Resize the ring, recycling oldest spans if it shrinks below
+    /// the buffered count.
+    pub fn set_capacity(&mut self, cap: usize) {
+        self.cap = cap;
+        while self.buf.len() > cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+    }
+}
+
+/// The engine-wide counter registry. One instance per engine;
+/// per-lane arrays are indexed by NIC lane within a GPU group and
+/// aggregate across groups. All fields are public so the engines'
+/// hot paths bump them directly (and so fabric-lint R8 can see the
+/// attribution tokens); everything else should read them through
+/// [`EngineMetrics::snapshot`].
+#[derive(Default)]
+pub struct EngineMetrics<C: Cell64> {
+    // -- submissions accepted by the routing core, by entry point --
+    /// `submit_single_write` submissions routed.
+    pub sub_single: C,
+    /// `submit_paged_writes` submissions routed.
+    pub sub_paged: C,
+    /// `submit_scatter` submissions routed.
+    pub sub_scatter: C,
+    /// `submit_barrier` submissions routed.
+    pub sub_barrier: C,
+    /// `submit_write_batch` submissions routed.
+    pub sub_batch: C,
+    /// `submit_single_write_templated` submissions routed.
+    pub sub_single_tpl: C,
+    /// `submit_paged_writes_templated` submissions routed.
+    pub sub_paged_tpl: C,
+    /// `submit_scatter_templated` submissions routed.
+    pub sub_scatter_tpl: C,
+    /// `submit_barrier_templated` submissions routed.
+    pub sub_barrier_tpl: C,
+    /// `submit_batch_templated` submissions routed.
+    pub sub_batch_tpl: C,
+
+    // -- wire traffic (write-family WRs actually posted) --
+    /// WRs posted per lane, retries included.
+    pub lane_wrs: [C; MAX_LANES],
+    /// Payload bytes posted per lane, retries included.
+    pub lane_bytes: [C; MAX_LANES],
+
+    // -- error ledger: ALWAYS counted, never gated on `enabled` --
+    /// WrError CQEs observed (one per failed WR attempt).
+    pub wr_err_total: C,
+    /// WrErrors attributed to a directed link (the WR carried a
+    /// routable destination; the link was masked).
+    pub wr_err_link: C,
+    /// Remote-death conclusions drawn from link evidence (counted in
+    /// addition to `wr_err_link` for the triggering WR).
+    pub wr_err_remote: C,
+    /// WrErrors with nothing to attribute beyond the egress NIC
+    /// (unarmed WRs, SEND-path failures).
+    pub wr_err_nic: C,
+    /// Submissions rejected synchronously because every NIC of the
+    /// group was masked out.
+    pub rejected_all_down: C,
+    /// Failed WRs transparently reposted on a surviving lane
+    /// (`FailoverPolicy::Resubmit`).
+    pub resubmits: C,
+    /// Failed WRs surfaced to `on_done` as errors (ErrorOut policy or
+    /// exhausted retargeting).
+    pub error_outs: C,
+
+    // -- remote-health gossip --
+    /// Gossip SENDs posted toward peers.
+    pub gossip_sent: C,
+    /// Gossip messages intercepted off the RECV path.
+    pub gossip_received: C,
+    /// Gossip messages applied to the remote-health table.
+    pub gossip_applied: C,
+
+    // -- imm counter lifecycle --
+    /// `expect_imm_count` expectations armed.
+    pub imm_arms: C,
+    /// WRITEIMM immediates delivered to an armed counter.
+    pub imm_bumps: C,
+    /// Expectations satisfied (counter reached target and retired).
+    pub imm_retires: C,
+
+    // -- recv pool --
+    /// RECV buffers posted (initial posts + app posts + reposts).
+    pub recv_posted: C,
+    /// RECVs completed with a delivered message.
+    pub recv_completed: C,
+    /// High-water mark of outstanding RECV buffers.
+    pub recv_pool_hwm: C,
+
+    // -- MR registry --
+    /// Per-NIC rkeys registered through the engine API.
+    pub mr_regs: C,
+    /// Rkeys deregistered. Double-dereg is a safe no-op at the fabric
+    /// but still counts here, so `deregs` may exceed `regs`.
+    pub mr_deregs: C,
+
+    /// Submit→retire latency histogram, power-of-two µs buckets.
+    pub lat_us_pow2: [C; HIST_BUCKETS],
+
+    /// 1 while hot-path instrumentation is on (the default).
+    enabled: C,
+}
+
+impl<C: Cell64> EngineMetrics<C> {
+    /// Fresh registry with instrumentation enabled.
+    pub fn new() -> Self {
+        let m = Self::default();
+        m.enabled.set(1);
+        m
+    }
+
+    /// True while hot-path instrumentation is on.
+    pub fn enabled(&self) -> bool {
+        self.enabled.get() != 0
+    }
+
+    /// Toggle hot-path instrumentation. The error ledger is exempt —
+    /// see the module docs.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.set(on as u64);
+    }
+
+    /// Count one accepted submission of `kind` (gated on `enabled`).
+    pub fn submission(&self, kind: SubmitKind) {
+        if !self.enabled() {
+            return;
+        }
+        let c = match kind {
+            SubmitKind::Single => &self.sub_single,
+            SubmitKind::Paged => &self.sub_paged,
+            SubmitKind::Scatter => &self.sub_scatter,
+            SubmitKind::Barrier => &self.sub_barrier,
+            SubmitKind::Batch => &self.sub_batch,
+            SubmitKind::SingleTpl => &self.sub_single_tpl,
+            SubmitKind::PagedTpl => &self.sub_paged_tpl,
+            SubmitKind::ScatterTpl => &self.sub_scatter_tpl,
+            SubmitKind::BarrierTpl => &self.sub_barrier_tpl,
+            SubmitKind::BatchTpl => &self.sub_batch_tpl,
+        };
+        c.add(1);
+    }
+
+    /// Account `wrs` posted WRs carrying `bytes` payload on `lane`
+    /// (gated on `enabled`; lanes past the array lump into the last
+    /// slot).
+    pub fn wire(&self, lane: usize, wrs: u64, bytes: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let l = lane.min(MAX_LANES - 1);
+        self.lane_wrs[l].add(wrs);
+        self.lane_bytes[l].add(bytes);
+    }
+
+    /// Bucket a submit→retire latency (gated on `enabled`).
+    pub fn observe_latency(&self, ns: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.lat_us_pow2[latency_bucket(ns)].add(1);
+    }
+
+    /// Account `n` freshly posted RECV buffers and refresh the
+    /// outstanding high-water mark (gated on `enabled`).
+    pub fn recv_posts(&self, n: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.recv_posted.add(n);
+        let outstanding = self.recv_posted.get().saturating_sub(self.recv_completed.get());
+        self.recv_pool_hwm.set_max(outstanding);
+    }
+
+    /// `wr_err_total + rejected_all_down` — the failover contract's
+    /// single error counter, now derived instead of stored.
+    pub fn transport_errors(&self) -> u64 {
+        self.wr_err_total.get() + self.rejected_all_down.get()
+    }
+
+    /// Materialize a point-in-time copy of every counter.
+    pub fn snapshot(&self) -> EngineSnapshot {
+        let lanes = |a: &[C; MAX_LANES]| {
+            let mut out = [0u64; MAX_LANES];
+            for (o, c) in out.iter_mut().zip(a.iter()) {
+                *o = c.get();
+            }
+            out
+        };
+        let mut hist = [0u64; HIST_BUCKETS];
+        for (o, c) in hist.iter_mut().zip(self.lat_us_pow2.iter()) {
+            *o = c.get();
+        }
+        EngineSnapshot {
+            sub_single: self.sub_single.get(),
+            sub_paged: self.sub_paged.get(),
+            sub_scatter: self.sub_scatter.get(),
+            sub_barrier: self.sub_barrier.get(),
+            sub_batch: self.sub_batch.get(),
+            sub_single_tpl: self.sub_single_tpl.get(),
+            sub_paged_tpl: self.sub_paged_tpl.get(),
+            sub_scatter_tpl: self.sub_scatter_tpl.get(),
+            sub_barrier_tpl: self.sub_barrier_tpl.get(),
+            sub_batch_tpl: self.sub_batch_tpl.get(),
+            lane_wrs: lanes(&self.lane_wrs),
+            lane_bytes: lanes(&self.lane_bytes),
+            wr_err_total: self.wr_err_total.get(),
+            wr_err_link: self.wr_err_link.get(),
+            wr_err_remote: self.wr_err_remote.get(),
+            wr_err_nic: self.wr_err_nic.get(),
+            rejected_all_down: self.rejected_all_down.get(),
+            resubmits: self.resubmits.get(),
+            error_outs: self.error_outs.get(),
+            gossip_sent: self.gossip_sent.get(),
+            gossip_received: self.gossip_received.get(),
+            gossip_applied: self.gossip_applied.get(),
+            imm_arms: self.imm_arms.get(),
+            imm_bumps: self.imm_bumps.get(),
+            imm_retires: self.imm_retires.get(),
+            recv_posted: self.recv_posted.get(),
+            recv_completed: self.recv_completed.get(),
+            recv_pool_hwm: self.recv_pool_hwm.get(),
+            mr_regs: self.mr_regs.get(),
+            mr_deregs: self.mr_deregs.get(),
+            lat_us_pow2: hist,
+            trace_dropped: 0,
+        }
+    }
+}
+
+/// Power-of-two µs bucket index for a nanosecond latency.
+fn latency_bucket(ns: u64) -> usize {
+    let mut us = ns / 1000;
+    let mut b = 0;
+    while us >= 2 && b < HIST_BUCKETS - 1 {
+        us >>= 1;
+        b += 1;
+    }
+    b
+}
+
+/// Point-in-time copy of an engine's [`EngineMetrics`] (plain `u64`s,
+/// `Clone`/`Eq` — safe to hold across engine shutdown, cheap to diff
+/// in tests). Produced by `TransferEngine::telemetry()`; the engine
+/// fills [`trace_dropped`](EngineSnapshot::trace_dropped) from its
+/// trace ring(s) on the way out.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[allow(missing_docs)] // field-for-field mirror of EngineMetrics, documented there
+pub struct EngineSnapshot {
+    pub sub_single: u64,
+    pub sub_paged: u64,
+    pub sub_scatter: u64,
+    pub sub_barrier: u64,
+    pub sub_batch: u64,
+    pub sub_single_tpl: u64,
+    pub sub_paged_tpl: u64,
+    pub sub_scatter_tpl: u64,
+    pub sub_barrier_tpl: u64,
+    pub sub_batch_tpl: u64,
+    pub lane_wrs: [u64; MAX_LANES],
+    pub lane_bytes: [u64; MAX_LANES],
+    pub wr_err_total: u64,
+    pub wr_err_link: u64,
+    pub wr_err_remote: u64,
+    pub wr_err_nic: u64,
+    pub rejected_all_down: u64,
+    pub resubmits: u64,
+    pub error_outs: u64,
+    pub gossip_sent: u64,
+    pub gossip_received: u64,
+    pub gossip_applied: u64,
+    pub imm_arms: u64,
+    pub imm_bumps: u64,
+    pub imm_retires: u64,
+    pub recv_posted: u64,
+    pub recv_completed: u64,
+    pub recv_pool_hwm: u64,
+    pub mr_regs: u64,
+    pub mr_deregs: u64,
+    pub lat_us_pow2: [u64; HIST_BUCKETS],
+    /// Trace spans the bounded ring recycled before they were read.
+    pub trace_dropped: u64,
+}
+
+/// The wire-observable projection of a snapshot: what actually hit
+/// the fabric, independent of HOW it was submitted. Batched vs
+/// looped submission of the same workload on same-seed DES clusters
+/// must agree on this exactly (submission-kind counters legitimately
+/// differ: one batch is one submission, N singles are N).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[allow(missing_docs)] // field subset of EngineSnapshot
+pub struct WireFootprint {
+    pub lane_wrs: [u64; MAX_LANES],
+    pub lane_bytes: [u64; MAX_LANES],
+    pub imm_bumps: u64,
+    pub imm_retires: u64,
+    pub wr_err_total: u64,
+    pub rejected_all_down: u64,
+    pub resubmits: u64,
+    pub error_outs: u64,
+}
+
+impl EngineSnapshot {
+    /// `wr_err_total + rejected_all_down`, matching
+    /// `TransferEngine::transport_errors()` at snapshot time.
+    pub fn transport_errors(&self) -> u64 {
+        self.wr_err_total + self.rejected_all_down
+    }
+
+    /// Total write-family WRs posted across all lanes.
+    pub fn total_wrs(&self) -> u64 {
+        self.lane_wrs.iter().sum()
+    }
+
+    /// Total payload bytes posted across all lanes.
+    pub fn total_bytes(&self) -> u64 {
+        self.lane_bytes.iter().sum()
+    }
+
+    /// Total submissions accepted across every entry point.
+    pub fn total_submissions(&self) -> u64 {
+        self.sub_single
+            + self.sub_paged
+            + self.sub_scatter
+            + self.sub_barrier
+            + self.sub_batch
+            + self.sub_single_tpl
+            + self.sub_paged_tpl
+            + self.sub_scatter_tpl
+            + self.sub_barrier_tpl
+            + self.sub_batch_tpl
+    }
+
+    /// Project the wire-observable counters (see [`WireFootprint`]).
+    pub fn wire_footprint(&self) -> WireFootprint {
+        WireFootprint {
+            lane_wrs: self.lane_wrs,
+            lane_bytes: self.lane_bytes,
+            imm_bumps: self.imm_bumps,
+            imm_retires: self.imm_retires,
+            wr_err_total: self.wr_err_total,
+            rejected_all_down: self.rejected_all_down,
+            resubmits: self.resubmits,
+            error_outs: self.error_outs,
+        }
+    }
+
+    /// Structured JSON view (the `--metrics-json` payload): counters
+    /// grouped by taxonomy, lanes as parallel arrays trimmed to the
+    /// highest lane that saw traffic.
+    pub fn to_json(&self) -> Json {
+        let obj = |pairs: Vec<(&str, Json)>| {
+            Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+        };
+        let used = (0..MAX_LANES)
+            .rev()
+            .find(|&l| self.lane_wrs[l] != 0 || self.lane_bytes[l] != 0)
+            .map_or(0, |l| l + 1);
+        let arr = |a: &[u64]| Json::Arr(a.iter().map(|&v| Json::from(v)).collect());
+        obj(vec![
+            (
+                "submissions",
+                obj(vec![
+                    ("single", self.sub_single.into()),
+                    ("paged", self.sub_paged.into()),
+                    ("scatter", self.sub_scatter.into()),
+                    ("barrier", self.sub_barrier.into()),
+                    ("batch", self.sub_batch.into()),
+                    ("single_tpl", self.sub_single_tpl.into()),
+                    ("paged_tpl", self.sub_paged_tpl.into()),
+                    ("scatter_tpl", self.sub_scatter_tpl.into()),
+                    ("barrier_tpl", self.sub_barrier_tpl.into()),
+                    ("batch_tpl", self.sub_batch_tpl.into()),
+                    ("total", self.total_submissions().into()),
+                ]),
+            ),
+            (
+                "lanes",
+                obj(vec![
+                    ("wrs", arr(&self.lane_wrs[..used])),
+                    ("bytes", arr(&self.lane_bytes[..used])),
+                ]),
+            ),
+            (
+                "errors",
+                obj(vec![
+                    ("wr_err_total", self.wr_err_total.into()),
+                    ("wr_err_link", self.wr_err_link.into()),
+                    ("wr_err_remote", self.wr_err_remote.into()),
+                    ("wr_err_nic", self.wr_err_nic.into()),
+                    ("rejected_all_down", self.rejected_all_down.into()),
+                    ("resubmits", self.resubmits.into()),
+                    ("error_outs", self.error_outs.into()),
+                    ("transport_errors", self.transport_errors().into()),
+                ]),
+            ),
+            (
+                "gossip",
+                obj(vec![
+                    ("sent", self.gossip_sent.into()),
+                    ("received", self.gossip_received.into()),
+                    ("applied", self.gossip_applied.into()),
+                ]),
+            ),
+            (
+                "imm",
+                obj(vec![
+                    ("arms", self.imm_arms.into()),
+                    ("bumps", self.imm_bumps.into()),
+                    ("retires", self.imm_retires.into()),
+                ]),
+            ),
+            (
+                "recv",
+                obj(vec![
+                    ("posted", self.recv_posted.into()),
+                    ("completed", self.recv_completed.into()),
+                    ("hwm", self.recv_pool_hwm.into()),
+                ]),
+            ),
+            (
+                "mr",
+                obj(vec![
+                    ("regs", self.mr_regs.into()),
+                    ("deregs", self.mr_deregs.into()),
+                    ("live", self.mr_regs.saturating_sub(self.mr_deregs).into()),
+                ]),
+            ),
+            ("latency_us_pow2", arr(&self.lat_us_pow2)),
+            ("trace_dropped", self.trace_dropped.into()),
+        ])
+    }
+}
+
+/// Render trace spans as a chrome://tracing `trace_event` document
+/// (JSON object format). Each span becomes one complete ("X") event:
+/// `ts`/`dur` in microseconds as the format requires, lanes mapped
+/// to tids so the per-NIC timelines stack, and the full nanosecond
+/// phase breakdown preserved under `args`.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut evs = Vec::with_capacity(events.len());
+    for e in events {
+        let end = if e.retired > 0 { e.retired } else { e.last_post };
+        let mut args = BTreeMap::new();
+        args.insert("wrs".to_string(), Json::from(e.wrs as u64));
+        args.insert("bytes".to_string(), Json::from(e.bytes));
+        args.insert("outcome".to_string(), Json::from(e.outcome.as_str()));
+        args.insert("submitted_ns".to_string(), Json::from(e.submitted));
+        args.insert("enqueued_ns".to_string(), Json::from(e.enqueued));
+        args.insert("worker_start_ns".to_string(), Json::from(e.worker_start));
+        args.insert("first_post_ns".to_string(), Json::from(e.first_post));
+        args.insert("last_post_ns".to_string(), Json::from(e.last_post));
+        args.insert("retired_ns".to_string(), Json::from(e.retired));
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::from(e.kind.as_str()));
+        o.insert("cat".to_string(), Json::from("submit"));
+        o.insert("ph".to_string(), Json::from("X"));
+        o.insert("ts".to_string(), Json::from(e.submitted as f64 / 1000.0));
+        o.insert(
+            "dur".to_string(),
+            Json::from(end.saturating_sub(e.submitted) as f64 / 1000.0),
+        );
+        o.insert("pid".to_string(), Json::from(0u64));
+        o.insert("tid".to_string(), Json::from(e.lane as u64));
+        o.insert("args".to_string(), Json::Obj(args));
+        evs.push(Json::Obj(o));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(evs));
+    root.insert("displayTimeUnit".to_string(), Json::from("ns"));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SubmitKind, t: u64) -> TraceEvent {
+        TraceEvent {
+            kind,
+            lane: 1,
+            wrs: 2,
+            bytes: 4096,
+            submitted: t,
+            enqueued: t + 10,
+            worker_start: t + 20,
+            first_post: t + 30,
+            last_post: t + 40,
+            retired: 0,
+            outcome: TraceOutcome::Posted,
+        }
+    }
+
+    #[test]
+    fn plain_cell_semantics() {
+        let c = PlainCell::default();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+        c.set_max(5);
+        assert_eq!(c.get(), 7, "set_max never lowers");
+        c.set_max(9);
+        assert_eq!(c.get(), 9);
+        c.set(1);
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn padded_atomic_semantics_and_layout() {
+        let c = PaddedAtomic::default();
+        c.add(3);
+        c.set_max(10);
+        c.set_max(2);
+        assert_eq!(c.get(), 10);
+        assert_eq!(std::mem::align_of::<PaddedAtomic>(), 64, "one counter per cache line");
+    }
+
+    #[test]
+    fn metrics_enable_gates_hot_path_but_not_errors() {
+        let m: EngineMetrics<PlainCell> = EngineMetrics::new();
+        m.set_enabled(false);
+        m.submission(SubmitKind::BatchTpl);
+        m.wire(0, 4, 1 << 20);
+        m.recv_posts(8);
+        m.observe_latency(10_000);
+        // The error ledger is bumped directly at the engines' error
+        // sites, so it is unaffected by the flag by construction.
+        m.wr_err_total.add(1);
+        m.wr_err_link.add(1);
+        let s = m.snapshot();
+        assert_eq!(s.total_submissions(), 0);
+        assert_eq!(s.total_wrs(), 0);
+        assert_eq!(s.recv_posted, 0);
+        assert_eq!(s.lat_us_pow2.iter().sum::<u64>(), 0);
+        assert_eq!(s.wr_err_total, 1);
+        assert_eq!(s.transport_errors(), 1);
+    }
+
+    #[test]
+    fn lane_overflow_lumps_into_last_slot() {
+        let m: EngineMetrics<PlainCell> = EngineMetrics::new();
+        m.wire(MAX_LANES + 5, 1, 100);
+        let s = m.snapshot();
+        assert_eq!(s.lane_wrs[MAX_LANES - 1], 1);
+        assert_eq!(s.lane_bytes[MAX_LANES - 1], 100);
+    }
+
+    #[test]
+    fn latency_buckets_are_pow2_us() {
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1_999), 0); // < 2 µs
+        assert_eq!(latency_bucket(2_000), 1); // [2, 4) µs
+        assert_eq!(latency_bucket(3_999), 1);
+        assert_eq!(latency_bucket(250_000), 7); // [128, 256) µs
+        assert_eq!(latency_bucket(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn ring_bounds_recycles_and_counts_drops() {
+        let mut r = TraceRing::new(3);
+        for i in 0..5u64 {
+            r.push(span(SubmitKind::Single, i * 100));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let spans = r.drain();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].submitted, 200, "oldest surviving span is #2");
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 2, "drain does not count as loss");
+    }
+
+    #[test]
+    fn ring_close_patches_live_spans_and_ignores_recycled() {
+        let mut r = TraceRing::new(2);
+        let s0 = r.push(span(SubmitKind::Scatter, 0));
+        let s1 = r.push(span(SubmitKind::Scatter, 100));
+        let s2 = r.push(span(SubmitKind::Scatter, 200)); // evicts s0
+        r.close(s0, 999, TraceOutcome::Retired); // recycled: no-op
+        r.close(NO_TRACE, 999, TraceOutcome::Retired); // sentinel: no-op
+        r.close(s1, 500, TraceOutcome::Retired);
+        r.close(s2, 600, TraceOutcome::Failed);
+        let spans = r.drain();
+        assert_eq!(spans[0].retired, 500);
+        assert_eq!(spans[0].outcome, TraceOutcome::Retired);
+        assert_eq!(spans[1].retired, 600);
+        assert_eq!(spans[1].outcome, TraceOutcome::Failed);
+    }
+
+    #[test]
+    fn ring_shrink_recycles_oldest() {
+        let mut r = TraceRing::new(4);
+        for i in 0..4u64 {
+            r.push(span(SubmitKind::Paged, i));
+        }
+        r.set_capacity(1);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 3);
+        assert_eq!(r.drain()[0].submitted, 3);
+    }
+
+    #[test]
+    fn wire_footprint_ignores_submission_shape() {
+        let batched: EngineMetrics<PlainCell> = EngineMetrics::new();
+        batched.submission(SubmitKind::BatchTpl);
+        batched.wire(0, 4, 4096);
+        let looped: EngineMetrics<PlainCell> = EngineMetrics::new();
+        for _ in 0..4 {
+            looped.submission(SubmitKind::SingleTpl);
+            looped.wire(0, 1, 1024);
+        }
+        let (b, l) = (batched.snapshot(), looped.snapshot());
+        assert_ne!(b, l, "kind counters differ");
+        assert_eq!(b.wire_footprint(), l.wire_footprint(), "wire view agrees");
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let m: EngineMetrics<PlainCell> = EngineMetrics::new();
+        m.submission(SubmitKind::Scatter);
+        m.wire(1, 3, 3000);
+        m.wr_err_total.add(2);
+        m.wr_err_link.add(2);
+        let mut s = m.snapshot();
+        s.trace_dropped = 7;
+        let j = s.to_json();
+        // Round-trip through the parser: the export is valid JSON.
+        let back = Json::parse(&j.to_pretty(2)).expect("valid JSON");
+        let field = |a: &str, b: &str| back.get(a).and_then(|o| o.get(b)).and_then(Json::u64);
+        assert_eq!(field("submissions", "scatter"), Some(1));
+        assert_eq!(field("errors", "transport_errors"), Some(2));
+        assert_eq!(back.get("trace_dropped").and_then(Json::u64), Some(7));
+        let lanes = back.get("lanes").and_then(|l| l.get("wrs")).expect("lanes.wrs");
+        assert_eq!(lanes.items().len(), 2, "trimmed to highest used lane");
+    }
+
+    #[test]
+    fn chrome_trace_export_shape() {
+        let mut done = span(SubmitKind::BatchTpl, 1000);
+        done.retired = 9000;
+        done.outcome = TraceOutcome::Retired;
+        let j = chrome_trace_json(&[done, span(SubmitKind::Single, 2000)]);
+        let back = Json::parse(&j.to_pretty(2)).expect("valid JSON");
+        let evs = back.get("traceEvents").expect("traceEvents").items();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").and_then(Json::str), Some("X"));
+        assert_eq!(evs[0].get("name").and_then(Json::str), Some("batch_tpl"));
+        assert_eq!(evs[0].get("ts").and_then(Json::f64), Some(1.0));
+        assert_eq!(
+            evs[0].get("dur").and_then(Json::f64),
+            Some(8.0),
+            "retired span runs to retire"
+        );
+        assert_eq!(
+            evs[1].get("dur").and_then(Json::f64),
+            Some(0.04),
+            "open span runs to last post"
+        );
+        let outcome = evs[0].get("args").and_then(|a| a.get("outcome")).and_then(Json::str);
+        assert_eq!(outcome, Some("retired"));
+        assert_eq!(evs[0].get("tid").and_then(Json::u64), Some(1), "lane maps to tid");
+    }
+}

@@ -1,0 +1,283 @@
+//! Accounting identities of the engine-wide telemetry registry,
+//! cross-runtime:
+//!
+//! * conservation — on a clean (chaos-free) parity workload the
+//!   per-lane byte counters sum to exactly the payload bytes the app
+//!   submitted, on BOTH runtimes;
+//! * batching transparency — batched vs looped submission of the same
+//!   workload on identically-seeded DES clusters produce identical
+//!   [`WireFootprint`]s (submission-kind counters legitimately
+//!   differ: one batch is one submission, N singles are N);
+//! * `chaos_` error-ledger reconciliation — every `WrError` is
+//!   attributed to exactly one of link/NIC, every error either
+//!   resubmits or errors out, and `transport_errors()` equals the
+//!   derived `wr_err_total + rejected_all_down` on BOTH runtimes;
+//! * the bounded trace ring drops oldest-first into an exact overflow
+//!   counter, on BOTH runtimes.
+
+use fabric_lib::engine::api::{MrDesc, ScatterDst, TemplatedDst};
+use fabric_lib::engine::traits::{
+    expect_flag, new_flag, run_on_both, Cluster, Notify, RuntimeKind, TransferEngine,
+};
+use fabric_lib::fabric::chaos::ChaosProfile;
+use fabric_lib::util::telemetry::{EngineSnapshot, TraceOutcome};
+
+const IMM: u32 = 0xACC;
+
+fn templated_entries() -> Vec<TemplatedDst> {
+    vec![
+        TemplatedDst { peer: 0, len: 300, src: 0, dst: 100 },
+        TemplatedDst { peer: 1, len: 1024, src: 512, dst: 0 },
+        TemplatedDst { peer: 0, len: 200, src: 1536, dst: 3000 },
+        TemplatedDst { peer: 1, len: 64, src: 2048, dst: 4096 },
+    ]
+}
+
+/// Conservation: whatever mix of entry points the app used — a
+/// sharded single write, a templated batch, an untemplated scatter
+/// batch — the lane byte counters account for every submitted payload
+/// byte exactly, and for nothing else. Runs on both runtimes.
+#[test]
+fn accounting_lane_bytes_sum_to_payload_on_both_runtimes() {
+    run_on_both(3, 1, 2, 0xACC0, |cx, engines| {
+        let sender = engines[0];
+        let (src, _) = sender.alloc_mr(0, 4096);
+        src.buf.write(0, &vec![3u8; 4096]);
+        let regions: Vec<_> = engines[1..].iter().map(|e| e.alloc_mr(0, 8192)).collect();
+        let descs: Vec<MrDesc> = regions.iter().map(|(_, d)| d.clone()).collect();
+        let group =
+            sender.add_peer_group(engines[1..].iter().map(|e| e.main_address()).collect());
+        sender.bind_peer_group_mrs(0, group, &descs).unwrap();
+
+        // 4096 B sharded single write + 1588 B templated batch +
+        // 896 B untemplated scatter batch.
+        let done = new_flag();
+        sender
+            .submit_single_write(
+                cx,
+                (&src, 0),
+                4096,
+                (&descs[0], 0),
+                None,
+                Notify::Flag(done.clone()),
+            )
+            .unwrap();
+        cx.wait(&done);
+        let got0 = expect_flag(engines[1], cx, 0, IMM, 2);
+        let got1 = expect_flag(engines[2], cx, 0, IMM, 2);
+        sender
+            .submit_batch_templated(cx, &src, group, &templated_entries(), Some(IMM), Notify::Noop)
+            .unwrap();
+        cx.wait(&got0);
+        cx.wait(&got1);
+        let scatter: Vec<ScatterDst> = vec![
+            ScatterDst { len: 512, src: 0, dst: (descs[0].clone(), 5000) },
+            ScatterDst { len: 256, src: 1024, dst: (descs[1].clone(), 6000) },
+            ScatterDst { len: 128, src: 3000, dst: (descs[0].clone(), 7000) },
+        ];
+        sender.submit_write_batch(cx, &src, &scatter, None, Notify::Noop).unwrap();
+        cx.settle();
+
+        let snap = sender.telemetry();
+        let payload = 4096 + (300 + 1024 + 200 + 64) + (512 + 256 + 128);
+        assert_eq!(snap.total_bytes(), payload, "lane bytes lost or invented payload");
+        assert_eq!(
+            snap.lane_bytes.iter().sum::<u64>(),
+            snap.total_bytes(),
+            "total_bytes is the lane sum by definition"
+        );
+        assert_eq!(snap.sub_single, 1);
+        assert_eq!(snap.sub_batch_tpl, 1);
+        assert_eq!(snap.sub_batch, 1);
+        assert_eq!(snap.total_submissions(), 3);
+        // Clean run: the error ledger is all zeros and the identities
+        // hold trivially.
+        assert_eq!(snap.transport_errors(), 0);
+        assert_eq!(snap.transport_errors(), sender.transport_errors());
+        assert_eq!(snap.resubmits + snap.error_outs, snap.wr_err_total);
+        assert!(sender.remove_peer_group(group));
+    });
+}
+
+/// Run the shared workload on a fresh same-seed DES cluster, batched
+/// or looped, and return (landed payloads, sender snapshot).
+fn run_des_workload(batched: bool) -> (Vec<Vec<u8>>, EngineSnapshot) {
+    let mut cluster = Cluster::new(RuntimeKind::Des, 3, 1, 2, 0xACC1);
+    let out = {
+        let (mut cx, engines) = cluster.parts();
+        let sender = engines[0];
+        let (src, _) = sender.alloc_mr(0, 4096);
+        src.buf.write(0, &(0..4096u32).map(|i| (i % 249) as u8 + 1).collect::<Vec<_>>());
+        let regions: Vec<_> = engines[1..].iter().map(|e| e.alloc_mr(0, 8192)).collect();
+        let descs: Vec<MrDesc> = regions.iter().map(|(_, d)| d.clone()).collect();
+        let group =
+            sender.add_peer_group(engines[1..].iter().map(|e| e.main_address()).collect());
+        sender.bind_peer_group_mrs(0, group, &descs).unwrap();
+        let got0 = expect_flag(engines[1], &mut cx, 0, IMM, 2);
+        let got1 = expect_flag(engines[2], &mut cx, 0, IMM, 2);
+        let entries = templated_entries();
+        if batched {
+            sender
+                .submit_batch_templated(&mut cx, &src, group, &entries, Some(IMM), Notify::Noop)
+                .unwrap();
+        } else {
+            for d in &entries {
+                sender
+                    .submit_single_write_templated(
+                        &mut cx,
+                        (&src, d.src),
+                        d.len,
+                        group,
+                        d.peer,
+                        d.dst,
+                        Some(IMM),
+                        Notify::Noop,
+                    )
+                    .unwrap();
+            }
+        }
+        cx.wait(&got0);
+        cx.wait(&got1);
+        cx.settle();
+        assert!(sender.remove_peer_group(group));
+        let payloads: Vec<Vec<u8>> = regions.iter().map(|(h, _)| h.buf.to_vec()).collect();
+        (payloads, sender.telemetry())
+    };
+    cluster.shutdown();
+    out
+}
+
+/// Batching transparency at the counter level: one batch and N looped
+/// singles put the SAME thing on the wire — identical
+/// `wire_footprint()`s on identically-seeded DES clusters — while the
+/// submission-kind counters tell the two apart.
+#[test]
+fn accounting_batch_vs_loop_footprint_identical_des() {
+    let (loop_payloads, loop_snap) = run_des_workload(false);
+    let (batch_payloads, batch_snap) = run_des_workload(true);
+    assert_eq!(loop_payloads, batch_payloads, "landed bytes diverged");
+    assert_eq!(
+        loop_snap.wire_footprint(),
+        batch_snap.wire_footprint(),
+        "batched and looped submission diverged on the wire"
+    );
+    assert_eq!(loop_snap.sub_single_tpl, 4);
+    assert_eq!(loop_snap.sub_batch_tpl, 0);
+    assert_eq!(batch_snap.sub_batch_tpl, 1);
+    assert_eq!(batch_snap.sub_single_tpl, 0);
+}
+
+/// Error-ledger reconciliation under chaos, on BOTH runtimes: cut one
+/// directed link from t=0, push a sharded write across it, and check
+/// that every WrError was attributed exactly once
+/// (`wr_err_link + wr_err_nic == wr_err_total`), dispatched exactly
+/// once (`resubmits + error_outs == wr_err_total`), and that the
+/// derived `transport_errors()` agrees with the engine's own — then
+/// that an all-remote-NICs-down rejection lands in
+/// `rejected_all_down` and reconciles too.
+#[test]
+fn chaos_accounting_reconciles_wr_error_ledger_on_both_runtimes() {
+    run_on_both(2, 1, 2, 0xACC2, |cx, engines| {
+        let sender = engines[0];
+        let receiver = engines[1];
+        let a1 = sender.group_address(0).nics[1];
+        let b0 = receiver.group_address(0).nics[0];
+        let b1 = receiver.group_address(0).nics[1];
+        // Cut A's lane-1 path to B's NIC 1: not locally observable, so
+        // the lane-1 WRs post, die with WrError, and resubmit over the
+        // surviving link.
+        sender.inject_chaos(cx, &ChaosProfile::new(0xACC3).link_down(0, (a1, b1)));
+
+        let len = 2usize << 20;
+        let (src, _) = sender.alloc_mr(0, len);
+        let pat: Vec<u8> = (0..len).map(|i| (i % 239) as u8 + 1).collect();
+        src.buf.write(0, &pat);
+        let (dst_h, dst_d) = receiver.alloc_mr(0, len);
+        let done = new_flag();
+        sender
+            .submit_single_write(
+                cx,
+                (&src, 0),
+                len as u64,
+                (&dst_d, 0),
+                None,
+                Notify::Flag(done.clone()),
+            )
+            .unwrap();
+        cx.wait(&done);
+        cx.settle();
+        assert_eq!(dst_h.buf.to_vec(), pat, "failover lost payload");
+
+        let snap = sender.telemetry();
+        assert!(snap.wr_err_total >= 1, "the cut link produced no WrError: {snap:?}");
+        assert_eq!(
+            snap.wr_err_link + snap.wr_err_nic,
+            snap.wr_err_total,
+            "every WrError attributes to exactly one of link|nic: {snap:?}"
+        );
+        assert_eq!(
+            snap.resubmits + snap.error_outs,
+            snap.wr_err_total,
+            "every WrError either resubmits or errors out: {snap:?}"
+        );
+        assert_eq!(snap.rejected_all_down, 0);
+        assert_eq!(snap.transport_errors(), sender.transport_errors());
+
+        // Believe BOTH remote NICs dead: the next submission has no
+        // lane toward the destination and is rejected whole — a
+        // transport failure the derived counter must cover.
+        sender.report_remote_health(0, b0, false);
+        sender.report_remote_health(0, b1, false);
+        assert!(sender
+            .submit_single_write(cx, (&src, 0), 64, (&dst_d, 0), None, Notify::Noop)
+            .is_err());
+        let snap2 = sender.telemetry();
+        assert_eq!(snap2.rejected_all_down, 1, "{snap2:?}");
+        assert_eq!(snap2.transport_errors(), snap2.wr_err_total + 1);
+        assert_eq!(snap2.transport_errors(), sender.transport_errors());
+    });
+}
+
+/// The bounded trace ring keeps the newest spans and counts evictions
+/// exactly, on BOTH runtimes.
+#[test]
+fn trace_ring_overflow_accounts_drops_on_both_runtimes() {
+    run_on_both(2, 1, 2, 0xACC4, |cx, engines| {
+        let sender = engines[0];
+        sender.set_trace_capacity(2);
+        let (src, _) = sender.alloc_mr(0, 1024);
+        src.buf.write(0, &[9u8; 1024]);
+        let (_dst_h, dst_d) = engines[1].alloc_mr(0, 4096);
+        let mut flags = Vec::new();
+        for i in 0..5u64 {
+            let done = new_flag();
+            sender
+                .submit_single_write(
+                    cx,
+                    (&src, 0),
+                    64,
+                    (&dst_d, i * 64),
+                    None,
+                    Notify::Flag(done.clone()),
+                )
+                .unwrap();
+            flags.push(done);
+        }
+        for f in &flags {
+            cx.wait(f);
+        }
+        cx.settle();
+        let spans = sender.take_traces();
+        assert_eq!(spans.len(), 2, "capacity-2 ring holds the newest 2 spans");
+        for s in &spans {
+            assert_eq!(s.outcome, TraceOutcome::Retired, "{s:?}");
+            assert_eq!(s.bytes, 64);
+        }
+        let snap = sender.telemetry();
+        assert_eq!(snap.trace_dropped, 3, "3 oldest spans evicted");
+        // Submission counting is ring-independent.
+        assert_eq!(snap.sub_single, 5);
+        // Drained is drained.
+        assert!(sender.take_traces().is_empty());
+    });
+}

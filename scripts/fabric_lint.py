@@ -47,6 +47,14 @@ R7  no panics on the release submit surface: `submit_*`, `bind_*`,
     `.unwrap()`, `.expect(`, `panic!`, `unreachable!` or `assert!`
     (`debug_assert*` is fine). Documented loud-asserts go in the
     allowlist with a reason string.
+R8  WrError attribution: every non-test `CqeKind::WrError` handling
+    site in `rust/src/engine/` must reach the telemetry attribution
+    ledger — the enclosing function's body mentions an attribution
+    counter (`wr_err_link`/`wr_err_remote`/`wr_err_nic`, or a
+    `record_wr_error` helper), or calls (one level, same file set) a
+    function whose body does. An unattributed WrError path breaks the
+    `wr_err_link + wr_err_nic == wr_err_total` accounting identity
+    the chaos tests assert.
 
 Findings print as `file:line RULE message`; exit code 1 when any
 finding survives the allowlist, 0 otherwise. Intentional exceptions
@@ -847,6 +855,79 @@ def check_r7(src, findings):
 
 
 # ---------------------------------------------------------------------
+# R8: every WrError handling path reaches the attribution ledger
+# ---------------------------------------------------------------------
+
+WR_ERROR_SITE_RE = re.compile(r"\bCqeKind\s*::\s*WrError\b")
+ATTR_RE = re.compile(r"\bwr_err_(?:link|remote|nic)\b|\brecord_wr_error\b")
+CALL_RE = re.compile(r"\b([a-z_][a-z0-9_]*)\s*\(")
+
+
+def enclosing_fn(src, idx):
+    """Innermost function whose body contains byte offset `idx`, as
+    (name, bo, bc), or None when idx sits outside every fn body (enum
+    declarations, use statements)."""
+    best = None
+    for name, _sig, bo, bc in find_functions(src):
+        if bo != -1 and bo < idx < bc:
+            if best is None or bo > best[1]:
+                best = (name, bo, bc)
+    return best
+
+
+def check_r8(root, sources, findings):
+    engine = [
+        s for s in sources if "/engine/" in "/" + s.rel.replace(os.sep, "/")
+    ]
+    if not engine:
+        return
+    # Function table over the engine file set (non-test bodies only):
+    # the one-level call-graph hop resolves callee names against it.
+    fn_bodies = {}
+    for s in engine:
+        tests = test_mod_spans(s)
+        for name, sig, bo, bc in find_functions(s):
+            if bo == -1 or in_spans(sig, tests):
+                continue
+            fn_bodies.setdefault(name, []).append(s.masked[bo:bc])
+    for s in engine:
+        tests = test_mod_spans(s)
+        for m in WR_ERROR_SITE_RE.finditer(s.masked):
+            if in_spans(m.start(), tests):
+                continue
+            enc = enclosing_fn(s, m.start())
+            if enc is None:
+                continue  # type position outside any body
+            name, bo, bc = enc
+            body = s.masked[bo:bc]
+            if ATTR_RE.search(body):
+                continue
+            attributed = False
+            for cm in CALL_RE.finditer(body):
+                for callee_body in fn_bodies.get(cm.group(1), []):
+                    if ATTR_RE.search(callee_body):
+                        attributed = True
+                        break
+                if attributed:
+                    break
+            if not attributed:
+                line = s.line_of(m.start())
+                findings.append(
+                    Finding(
+                        "R8",
+                        s.rel,
+                        line,
+                        "`CqeKind::WrError` handled in `%s` without reaching "
+                        "an attribution counter (wr_err_link/remote/nic) "
+                        "directly or via a called helper: unattributed "
+                        "errors break `wr_err_link + wr_err_nic == "
+                        "wr_err_total`" % name,
+                        s.raw_line(line),
+                    )
+                )
+
+
+# ---------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------
 
@@ -876,6 +957,7 @@ def run(root, allowlist):
     check_r4(root, sources, findings)
     check_r5(root, sources, findings)
     check_r6(root, sources, allowlist.lock_order if allowlist else [], findings)
+    check_r8(root, sources, findings)
     notes = []
     if allowlist:
         findings = allowlist.filter(findings)

@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """Tests for fabric_lint.py: one passing and one failing fixture per
-rule R1–R7, plus allowlist round-trip and CLI exit codes.
+rule R1–R8, plus allowlist round-trip and CLI exit codes.
 
 Run directly (`python3 scripts/test_fabric_lint.py`) or via the CI
 `lint-invariants` job. Stdlib-only, like the linter.
@@ -455,6 +455,130 @@ mod tests {
 """
         findings, _ = lint_tree({ENGINE: src})
         self.assertEqual(findings, [])
+
+
+class TestR8WrErrorAttribution(unittest.TestCase):
+    def test_fail_unattributed_handler(self):
+        src = """
+fn handle_cqe(&self, cqe: Cqe) {
+    match cqe.kind {
+        CqeKind::WrError => {
+            self.retry(cqe.wr_id);
+        }
+        _ => {}
+    }
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(rules_of(findings), ["R8"])
+        self.assertIn("attribution counter", findings[0].message)
+
+    def test_pass_inline_attribution(self):
+        src = """
+fn handle_cqe(&self, cqe: Cqe) {
+    match cqe.kind {
+        CqeKind::WrError => {
+            if routable { m.wr_err_link.add(1); } else { m.wr_err_nic.add(1); }
+            self.retry(cqe.wr_id);
+        }
+        _ => {}
+    }
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+    def test_pass_one_level_call_attribution(self):
+        # The DES shape: the match arm delegates to a helper that does
+        # the attribution.
+        src = """
+fn on_cqe(&self, cqe: Cqe) {
+    match cqe.kind {
+        CqeKind::WrError => self.on_wr_error(cqe.wr_id),
+        _ => {}
+    }
+}
+
+fn on_wr_error(&self, wr_id: u64) {
+    if let Some(e) = self.entry(wr_id) {
+        m.wr_err_link.add(1);
+    } else {
+        m.wr_err_nic.add(1);
+    }
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+    def test_fail_two_level_call_not_followed(self):
+        # The hop is one level deep by design: attribution buried two
+        # calls down is flagged (keep the ledger near the handler).
+        src = """
+fn on_cqe(&self, cqe: Cqe) {
+    match cqe.kind {
+        CqeKind::WrError => self.level_one(cqe.wr_id),
+        _ => {}
+    }
+}
+
+fn level_one(&self, wr_id: u64) {
+    self.level_two(wr_id);
+}
+
+fn level_two(&self, wr_id: u64) {
+    m.wr_err_nic.add(1);
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(rules_of(findings), ["R8"])
+
+    def test_pass_record_helper_name(self):
+        src = """
+fn handle(&self, cqe: Cqe) {
+    if cqe.kind == CqeKind::WrError {
+        self.record_wr_error(cqe.wr_id);
+    }
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+    def test_type_position_and_tests_ignored(self):
+        src = """
+pub enum CqeKind {
+    WrError,
+}
+
+#[cfg(test)]
+mod tests {
+    fn probe(&self) {
+        match k {
+            CqeKind::WrError => {}
+            _ => {}
+        }
+    }
+}
+"""
+        findings, _ = lint_tree({ENGINE: src})
+        self.assertEqual(findings, [])
+
+    def test_non_engine_files_ignored(self):
+        src = """
+fn deliver(&self) {
+    let kind = CqeKind::WrError;
+    self.cq.push(Cqe { wr_id, kind });
+}
+"""
+        findings, _ = lint_tree({"rust/src/fabric/fixture.rs": src})
+        self.assertEqual(findings, [])
+
+    def test_real_tree_is_clean(self):
+        # Both runtimes' real WrError handlers must satisfy R8 as
+        # written — the rule gates CI against the live sources.
+        sources = fabric_lint.collect_sources(REPO_ROOT)
+        findings = []
+        fabric_lint.check_r8(REPO_ROOT, sources, findings)
+        self.assertEqual([str(f) for f in findings], [])
 
 
 class TestAllowlist(unittest.TestCase):
