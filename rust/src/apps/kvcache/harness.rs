@@ -353,6 +353,30 @@ pub fn run_kv_failover_on(
     nic_down_at: Instant,
 ) -> FailoverOutcome {
     assert!(engines.len() >= 3, "two prefillers + one decoder");
+    // Chaos: kill the whole fabric of prefiller 0 at `nic_down_at`.
+    let mut profile = ChaosProfile::new(0xFA11);
+    for nic in engines[0].group_address(0).nics {
+        profile = profile.nic_down(nic_down_at, nic);
+    }
+    engines[0].inject_chaos(cx, &profile);
+    run_kv_fleet_on(cx, engines, gpu_profile, requests)
+}
+
+/// The chaos-free core of [`run_kv_failover_on`]: the prefiller-fleet
+/// serving loop (scheduler + heartbeats + monitor + supervisor) with
+/// no opinion about *what* perturbation, if any, was injected — the
+/// caller arms a [`ChaosProfile`] (or none) *before* this call. Both
+/// the hand-written failover wrapper above and the declarative
+/// scenario executor (`scenario::exec`, `kv_fleet` step) drive this
+/// one function, which is what makes a committed spec file bit-compa-
+/// rable with the hand-written harness on a same-seed cluster.
+pub fn run_kv_fleet_on(
+    cx: &mut Cx,
+    engines: &[Rc<dyn TransferEngine>],
+    gpu_profile: GpuProfile,
+    requests: usize,
+) -> FailoverOutcome {
+    assert!(engines.len() >= 3, "two prefillers + one decoder");
     let workload = ServingWorkload::tiny();
     let compute = ComputeModel::new(gpu_profile);
     let p0 = Prefiller::new(cx, engines[0].clone(), 0, &compute, workload.clone(), 0);
@@ -367,13 +391,6 @@ pub fn run_kv_failover_on(
     p0.start_heartbeats(cx, vec![decoder.address()], MS);
     p1.start_heartbeats(cx, vec![decoder.address()], MS);
     decoder.start_monitor(cx, 2 * MS);
-
-    // Chaos: kill the whole fabric of prefiller 0 at `nic_down_at`.
-    let mut profile = ChaosProfile::new(0xFA11);
-    for nic in engines[0].group_address(0).nics {
-        profile = profile.nic_down(nic_down_at, nic);
-    }
-    engines[0].inject_chaos(cx, &profile);
 
     let st = Rc::new(SupState {
         sched: sched.clone(),
@@ -424,6 +441,64 @@ pub fn run_kv_failover(requests: usize, nic_down_at: Instant) -> FailoverOutcome
     out
 }
 
+/// Outcome of one disaggregated KV request driven through the
+/// chaos-agnostic [`run_kv_request_on`] core: the prefiller engine's
+/// transport-error count and health masks, plus the decoder-side
+/// page-pool integrity bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvRequestOutcome {
+    /// `transport_errors()` of the prefiller engine after the run.
+    pub transport_errors: u64,
+    /// The prefiller's NIC health mask for group 0 after the run.
+    pub nic_mask: u64,
+    /// The prefiller's per-link health mask toward the decoder's LAST
+    /// lane NIC (the one the link-partition scenario cuts).
+    pub link_mask: u64,
+    /// True when the decoder's page pool drained back to its initial
+    /// size — no page leaked across the request.
+    pub no_lost_pages: bool,
+}
+
+/// The chaos-free core under [`run_kv_nic_failover_on`] and
+/// [`run_kv_link_partition_on`] (and the scenario executor's
+/// `kv_request` step): one disaggregated request of `seq` tokens from
+/// `eng_d`'s decoder against `eng_p`'s prefiller, driven to
+/// completion. Whatever perturbation should apply is injected by the
+/// caller *before* this call; the core reads the masks afterwards.
+pub fn run_kv_request_on(
+    cx: &mut Cx,
+    eng_p: Rc<dyn TransferEngine>,
+    eng_d: Rc<dyn TransferEngine>,
+    gpu_profile: GpuProfile,
+    seq: u32,
+) -> KvRequestOutcome {
+    let workload = ServingWorkload::tiny();
+    let compute = ComputeModel::new(gpu_profile);
+    let prefiller = Prefiller::new(cx, eng_p.clone(), 0, &compute, workload.clone(), 0);
+    let decoder = Decoder::new(cx, eng_d.clone(), 0, workload);
+    let free0 = decoder.free_slot_count();
+
+    let input: Vec<u32> = (0..seq).map(|i| i % 997).collect();
+    let id = decoder.submit_request(cx, &eng_p.group_address(0), input, 1);
+    let reports = decoder.reports();
+    {
+        let reports = reports.clone();
+        cx.drive_until("kv request completion", move || {
+            reports.borrow().len() == 1
+        });
+    }
+    assert_eq!(reports.borrow()[0].req_id, id);
+    let lanes = eng_d.nics_per_gpu() as usize;
+    let toward = eng_d.group_address(0).nics[lanes - 1];
+    let _keep = prefiller;
+    KvRequestOutcome {
+        transport_errors: eng_p.transport_errors(),
+        nic_mask: eng_p.nic_health_mask(0),
+        link_mask: eng_p.link_health_mask(0, toward),
+        no_lost_pages: decoder.free_slot_count() == free0,
+    }
+}
+
 /// Engine-level NIC failover scenario: a multi-NIC prefiller loses
 /// its LAST NIC mid-transfer. NIC 0 survives, so heartbeats and
 /// control traffic continue; in-flight writes on the dead NIC fail
@@ -442,32 +517,14 @@ pub fn run_kv_nic_failover_on(
     nic_down_at: Instant,
 ) -> (u64, u64) {
     assert!(eng_p.nics_per_gpu() >= 2, "failover needs a surviving NIC");
-    let workload = ServingWorkload::tiny();
-    let compute = ComputeModel::new(gpu_profile);
-    let prefiller = Prefiller::new(cx, eng_p.clone(), 0, &compute, workload.clone(), 0);
-    let decoder = Decoder::new(cx, eng_d.clone(), 0, workload);
-    let free0 = decoder.free_slot_count();
-
     let dying = eng_p.group_address(0).nics[eng_p.nics_per_gpu() as usize - 1];
     eng_p.inject_chaos(cx, &ChaosProfile::new(0xFA12).nic_down(nic_down_at, dying));
-
-    let input: Vec<u32> = (0..seq).map(|i| i % 997).collect();
-    let id = decoder.submit_request(cx, &eng_p.group_address(0), input, 1);
-    let reports = decoder.reports();
-    {
-        let reports = reports.clone();
-        cx.drive_until("NIC-failover request completion", move || {
-            reports.borrow().len() == 1
-        });
-    }
-    assert_eq!(reports.borrow()[0].req_id, id);
-    assert_eq!(
-        decoder.free_slot_count(),
-        free0,
+    let out = run_kv_request_on(cx, eng_p, eng_d, gpu_profile, seq);
+    assert!(
+        out.no_lost_pages,
         "every page returned to the pool after failover"
     );
-    let _keep = prefiller;
-    (eng_p.transport_errors(), eng_p.nic_health_mask(0))
+    (out.transport_errors, out.nic_mask)
 }
 
 /// Per-link partition scenario (the ROADMAP chaos follow-on): one
@@ -491,38 +548,16 @@ pub fn run_kv_link_partition_on(
     cut_at: Instant,
 ) -> (u64, u64, u64) {
     assert!(eng_p.nics_per_gpu() >= 2, "a surviving link needs a second lane");
-    let workload = ServingWorkload::tiny();
-    let compute = ComputeModel::new(gpu_profile);
-    let prefiller = Prefiller::new(cx, eng_p.clone(), 0, &compute, workload.clone(), 0);
-    let decoder = Decoder::new(cx, eng_d.clone(), 0, workload);
-    let free0 = decoder.free_slot_count();
-
     let lanes = eng_p.nics_per_gpu() as usize;
     let src = eng_p.group_address(0).nics[lanes - 1];
     let dst = eng_d.group_address(0).nics[lanes - 1];
     eng_p.inject_chaos(cx, &ChaosProfile::new(0xFA13).link_down(cut_at, (src, dst)));
-
-    let input: Vec<u32> = (0..seq).map(|i| i % 997).collect();
-    let id = decoder.submit_request(cx, &eng_p.group_address(0), input, 1);
-    let reports = decoder.reports();
-    {
-        let reports = reports.clone();
-        cx.drive_until("link-partition request completion", move || {
-            reports.borrow().len() == 1
-        });
-    }
-    assert_eq!(reports.borrow()[0].req_id, id);
-    assert_eq!(
-        decoder.free_slot_count(),
-        free0,
+    let out = run_kv_request_on(cx, eng_p, eng_d, gpu_profile, seq);
+    assert!(
+        out.no_lost_pages,
         "every page returned to the pool across the partition"
     );
-    let _keep = prefiller;
-    (
-        eng_p.transport_errors(),
-        eng_p.nic_health_mask(0),
-        eng_p.link_health_mask(0, dst),
-    )
+    (out.transport_errors, out.nic_mask, out.link_mask)
 }
 
 /// DES convenience wrapper for [`run_kv_link_partition_on`]: a 2-node

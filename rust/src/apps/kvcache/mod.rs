@@ -28,9 +28,10 @@ pub mod workload;
 pub use arrivals::{Arrival, Arrivals, PoissonArrivals, TraceArrivals};
 pub use decoder::Decoder;
 pub use harness::{
-    run_generic_kv_push, run_kv_failover, run_kv_failover_on, run_kv_link_partition,
-    run_kv_link_partition_on, run_kv_nic_failover_on, run_table3_row, run_table3_row_on,
-    run_table3_row_with_telemetry, FailoverOutcome, Table3Row,
+    run_generic_kv_push, run_kv_failover, run_kv_failover_on, run_kv_fleet_on,
+    run_kv_link_partition, run_kv_link_partition_on, run_kv_nic_failover_on, run_kv_request_on,
+    run_table3_row, run_table3_row_on, run_table3_row_with_telemetry, FailoverOutcome,
+    KvRequestOutcome, Table3Row,
 };
 pub use layout::KvLayout;
 pub use prefiller::Prefiller;

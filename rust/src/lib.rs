@@ -10,5 +10,6 @@ pub mod collectives;
 pub mod engine;
 pub mod fabric;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;

@@ -5,6 +5,9 @@
 //!   kvcache  disaggregated TTFT for one sequence length (Table 3 row)
 //!   rl       RL weight transfer (P2P pipeline) with stage breakdown
 //!   moe      one MoE decode epoch, dispatch/combine latency summary
+//!   run      execute a declarative scenario spec (scenarios/*.json)
+//!   serve    serving sweep with Poisson or trace-replay arrivals
+//!   fuzz     seeded scenario fuzzing with failure shrinking
 //!   info     print engine/cluster configuration defaults
 //!
 //! Examples:
@@ -13,17 +16,27 @@
 //!   fabricctl kvcache --seq 8192 --trace-out trace.json   # chrome://tracing
 //!   fabricctl moe --ep 32 --impl ours --nic efa --iters 4
 //!   fabricctl rl --ranks 16
+//!   fabricctl run scenarios/kv_nic_failover.json --json
+//!   fabricctl serve --trace arrivals.txt
+//!   fabricctl serve --rate-ms 0.2 --seqs 4096,8192 --requests 200
+//!   fabricctl fuzz --start 0 --count 25 --quick --out target/fuzz
 
 use fabric_lib::bail;
 use fabric_lib::util::err::{Context, Result};
 use fabric_lib::util::telemetry::chrome_trace_json;
 
-use fabric_lib::apps::kvcache::{run_table3_row, run_table3_row_with_telemetry};
+use fabric_lib::apps::kvcache::{
+    run_serving, run_table3_row, run_table3_row_with_telemetry, Arrivals, PoissonArrivals,
+    ServingConfig, TraceArrivals,
+};
 use fabric_lib::apps::moe::{run_decode_epoch, MoeConfig, MoeImpl};
 use fabric_lib::apps::rlweights::{run_p2p_transfer, RlModelSpec};
+use fabric_lib::engine::traits::RuntimeKind;
 use fabric_lib::fabric::profile::NicProfile;
 use fabric_lib::fabric::topology::ClusterSpec;
+use fabric_lib::scenario::{fuzz_sweep, run_scenario, RunOptions, ScenarioSpec};
 use fabric_lib::util::cli::Args;
+use fabric_lib::util::json::Json;
 
 fn nic_of(name: &str) -> Result<(NicProfile, u8)> {
     match name {
@@ -115,6 +128,99 @@ fn main() -> Result<()> {
                 lat.combine.percentile(99.0) as f64 / 1e3,
             );
         }
+        Some("run") => {
+            let path = args
+                .positional()
+                .get(1)
+                .context("usage: fabricctl run <scenario.json> [--runtime des|threaded] [--quick] [--json]")?;
+            let spec = ScenarioSpec::load(path)?;
+            let runtime = match args.str_or("runtime", "des").as_str() {
+                "des" => RuntimeKind::Des,
+                "threaded" => RuntimeKind::Threaded,
+                other => bail!("unknown runtime '{other}' (des|threaded)"),
+            };
+            let opts = RunOptions {
+                runtime,
+                quick: args.flag("quick"),
+            };
+            let report = run_scenario(&spec, &opts)?;
+            if args.flag("json") {
+                print!("{}", report.to_json().to_pretty(2));
+            } else {
+                println!(
+                    "scenario '{}' on {:?}: served {}, redispatched {}, \
+                     transport_errors {:?}, end {} us",
+                    report.name,
+                    report.runtime,
+                    report.served,
+                    report.redispatched,
+                    report.transport_errors,
+                    report.end_ns / 1_000
+                );
+                for f in &report.failures {
+                    eprintln!("FAIL: {f}");
+                }
+            }
+            if !report.passed() {
+                bail!("scenario '{}': {} assertion(s) failed", report.name, report.failures.len());
+            }
+        }
+        Some("serve") => {
+            let requests = args.u64_or("requests", 200)? as usize;
+            let mut cfg = ServingConfig::small(requests);
+            cfg.prefillers = args.u64_or("prefillers", cfg.prefillers as u64)? as usize;
+            cfg.decoders = args.u64_or("decoders", cfg.decoders as u64)? as usize;
+            let arrivals = match args.str_opt("trace") {
+                Some(path) => {
+                    let trace = TraceArrivals::load(&path)
+                        .with_context(|| format!("loading arrival trace {path}"))?;
+                    eprintln!("replaying {} arrivals from {path}", trace.len());
+                    Arrivals::Trace(trace)
+                }
+                None => {
+                    let rate_ms = args.f64_or("rate-ms", 0.2)?;
+                    if rate_ms <= 0.0 {
+                        bail!("--rate-ms must be positive");
+                    }
+                    let seqs: Vec<u32> = args
+                        .u64_list_or("seqs", &[4096, 8192])?
+                        .iter()
+                        .map(|&s| s as u32)
+                        .collect();
+                    let seed = args.u64_or("seed", 1)?;
+                    Arrivals::Poisson(PoissonArrivals::new(seed, (rate_ms * 1e6) as u64, seqs))
+                }
+            };
+            let report = run_serving(cfg, arrivals);
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("completed".to_string(), Json::from(report.completed));
+            m.insert("timeouts".to_string(), Json::from(report.timeouts));
+            m.insert("ttft".to_string(), report.ttft.headline_json());
+            m.insert("end_ns".to_string(), Json::from(report.end_ns));
+            print!("{}", Json::Obj(m).to_pretty(2));
+        }
+        Some("fuzz") => {
+            let start = args.u64_or("start", 0)?;
+            let count = args.u64_or("count", 25)?;
+            let quick = args.flag("quick");
+            let out = args.str_or("out", "target/fuzz");
+            let failures = fuzz_sweep(start, count, quick, &out)?;
+            if failures.is_empty() {
+                println!(
+                    "fuzz sweep clean: seeds {start}..{} ({count} specs, 2 runs each)",
+                    start.saturating_add(count)
+                );
+            } else {
+                for f in &failures {
+                    eprintln!("seed {}: {}", f.seed, f.failure);
+                    eprintln!("  shrunk reproducer: {} ({})", f.path, f.shrunk_failure);
+                }
+                bail!(
+                    "{}/{count} fuzz seeds failed; replay with `fabricctl run <file>`",
+                    failures.len()
+                );
+            }
+        }
         Some("info") | None => {
             for spec in [ClusterSpec::h200_efa(8), ClusterSpec::h100_cx7(8)] {
                 println!(
@@ -127,7 +233,7 @@ fn main() -> Result<()> {
                     spec.gpu_net_gbps()
                 );
             }
-            println!("\nsubcommands: p2p | kvcache | rl | moe | info");
+            println!("\nsubcommands: p2p | kvcache | rl | moe | run | serve | fuzz | info");
         }
         Some(other) => bail!("unknown subcommand '{other}'"),
     }

@@ -1,0 +1,647 @@
+//! Scenario executor: materialize a [`ScenarioSpec`] into a live
+//! [`Cluster`] + [`ChaosProfile`](crate::fabric::chaos::ChaosProfile)
+//! on either runtime, drive its workload steps, and check the
+//! declarative assertions against engine telemetry.
+//!
+//! Assertion failures are **recorded**, not panicked: a spec whose
+//! postconditions do not hold still produces a [`ScenarioReport`]
+//! with a non-empty `failures` list, so `fabricctl run` can print
+//! them and the fuzzer can shrink the spec that caused them.
+//! Workload steps themselves still use the app harnesses' internal
+//! integrity asserts (payload equality, protocol invariants) — a
+//! panic there means the *engine* misbehaved, which the fuzzer
+//! treats as a failure via `catch_unwind`.
+//!
+//! Determinism contract: on the DES runtime, `run_scenario` on equal
+//! specs produces equal [`ScenarioReport::fingerprint`]s — the same
+//! property the hand-written chaos harnesses pin, now available for
+//! every spec the fuzzer can sample.
+
+use std::rc::Rc;
+
+use crate::apps::kvcache::{
+    run_generic_kv_push, run_kv_fleet_on, run_kv_request_on, run_serving, Arrivals,
+    PoissonArrivals, ServingConfig,
+};
+use crate::apps::moe::run_generic_dispatch_round;
+use crate::apps::rlweights::run_generic_rank0_fanout;
+use crate::engine::traits::{new_flag, Cluster, Cx, Notify, OnRecv, RuntimeKind, TransferEngine};
+use crate::scenario::spec::{AssertionSpec, ScenarioSpec, WorkloadStep};
+use crate::sim::Summary;
+use crate::util::err::Result;
+use crate::util::json::Json;
+use crate::util::telemetry::EngineSnapshot;
+
+/// How to run a scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct RunOptions {
+    /// Which runtime backs the cluster.
+    pub runtime: RuntimeKind,
+    /// Clamp workload magnitudes to CI-sized budgets (used by the
+    /// `scenario-sweep` CI job and the fuzzer's inner runs).
+    pub quick: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            runtime: RuntimeKind::Des,
+            quick: false,
+        }
+    }
+}
+
+/// Everything a scenario run observed, plus the assertion verdicts.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    /// Scenario name (from the spec).
+    pub name: String,
+    /// Runtime the run executed on.
+    pub runtime: RuntimeKind,
+    /// Requests served to completion (kv_fleet + serving steps).
+    pub served: u64,
+    /// Supervisor re-dispatches across kv_fleet steps.
+    pub redispatched: u64,
+    /// Prefillers alive at drain of the last kv_fleet step (0 when no
+    /// fleet step ran).
+    pub live_prefillers: u64,
+    /// True when every KV step returned its pages to the pool (and
+    /// trivially true when no KV step ran).
+    pub no_lost_pages: bool,
+    /// TTFT distribution of the last serving step, if any.
+    pub ttft: Option<Summary>,
+    /// `transport_errors()` per engine, post-settle.
+    pub transport_errors: Vec<u64>,
+    /// `nic_health_mask(0)` per engine, post-settle.
+    pub nic_masks: Vec<u64>,
+    /// Full telemetry snapshot per engine, post-settle.
+    pub snapshots: Vec<EngineSnapshot>,
+    /// Human-readable assertion/step failures; empty means the
+    /// scenario passed.
+    pub failures: Vec<String>,
+    /// Virtual end-of-run time (fabric clock, ns).
+    pub end_ns: u64,
+}
+
+fn mix(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x100_0000_01b3);
+}
+
+impl ScenarioReport {
+    /// True when every declarative assertion (and every step) held.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// FNV-style digest of everything observable: two same-seed DES
+    /// runs of the same spec must agree on this exactly (the fuzzer's
+    /// determinism check).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        mix(&mut h, self.served);
+        mix(&mut h, self.redispatched);
+        mix(&mut h, self.live_prefillers);
+        mix(&mut h, self.no_lost_pages as u64);
+        mix(&mut h, self.end_ns);
+        if let Some(t) = &self.ttft {
+            mix(&mut h, t.n as u64);
+            mix(&mut h, t.p50);
+            mix(&mut h, t.p99);
+        }
+        let lanes = self
+            .transport_errors
+            .iter()
+            .zip(&self.nic_masks)
+            .zip(&self.snapshots);
+        for ((te, mask), s) in lanes {
+            mix(&mut h, *te);
+            mix(&mut h, *mask);
+            mix(&mut h, s.imm_bumps);
+            mix(&mut h, s.wr_err_total);
+            mix(&mut h, s.rejected_all_down);
+            mix(&mut h, s.total_wrs());
+            mix(&mut h, s.total_bytes());
+        }
+        for f in &self.failures {
+            for b in f.as_bytes() {
+                mix(&mut h, *b as u64);
+            }
+        }
+        h
+    }
+
+    /// Machine-readable report (what `fabricctl run --json` prints).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::from(self.name.as_str()));
+        m.insert(
+            "runtime".to_string(),
+            Json::from(match self.runtime {
+                RuntimeKind::Des => "des",
+                RuntimeKind::Threaded => "threaded",
+            }),
+        );
+        m.insert("passed".to_string(), Json::Bool(self.passed()));
+        m.insert("served".to_string(), Json::from(self.served));
+        m.insert("redispatched".to_string(), Json::from(self.redispatched));
+        m.insert("no_lost_pages".to_string(), Json::Bool(self.no_lost_pages));
+        m.insert(
+            "transport_errors".to_string(),
+            Json::Arr(self.transport_errors.iter().map(|&e| Json::from(e)).collect()),
+        );
+        m.insert(
+            "nic_masks".to_string(),
+            Json::Arr(self.nic_masks.iter().map(|&e| Json::from(e)).collect()),
+        );
+        m.insert(
+            "failures".to_string(),
+            Json::Arr(self.failures.iter().map(|f| Json::from(f.as_str())).collect()),
+        );
+        m.insert("end_ns".to_string(), Json::from(self.end_ns));
+        m.insert(
+            "ttft".to_string(),
+            match &self.ttft {
+                Some(t) => t.headline_json(),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "fingerprint".to_string(),
+            Json::from(format!("{:016x}", self.fingerprint())),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Clamp a spec's workload magnitudes to CI-sized budgets. Topology,
+/// seeds, chaos schedule and assertions are untouched — only the
+/// *volume* knobs shrink, so a `--quick` run exercises the same
+/// code paths in bounded virtual time.
+pub fn clamp_quick(spec: &ScenarioSpec) -> ScenarioSpec {
+    let mut s = spec.clone();
+    for step in &mut s.workload {
+        match step {
+            WorkloadStep::PostRecvs { len, count, .. } => {
+                *len = (*len).min(4096);
+                *count = (*count).min(16);
+            }
+            WorkloadStep::Write { bytes, .. } => *bytes = (*bytes).min(1 << 20),
+            WorkloadStep::KvPush {
+                pages, page_len, ..
+            } => {
+                *pages = (*pages).min(8);
+                *page_len = (*page_len).min(1 << 16);
+            }
+            WorkloadStep::KvRequest { seq, .. } => *seq = (*seq).min(128),
+            WorkloadStep::KvFleet { requests } => *requests = (*requests).min(4),
+            WorkloadStep::MoeDispatch {
+                tokens_per_peer,
+                token_bytes,
+            } => {
+                *tokens_per_peer = (*tokens_per_peer).min(4);
+                *token_bytes = (*token_bytes).min(4096);
+            }
+            WorkloadStep::RlFanout { bytes } => *bytes = (*bytes).min(1 << 20),
+            WorkloadStep::Serving { requests, seqs, .. } => {
+                *requests = (*requests).min(8);
+                for q in seqs.iter_mut() {
+                    *q = (*q).min(1024);
+                }
+            }
+        }
+    }
+    s
+}
+
+/// Materialize and run one scenario. `Err` means the spec could not
+/// be *run* (invalid references, unknown profile); assertion failures
+/// are reported in [`ScenarioReport::failures`] instead.
+pub fn run_scenario(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioReport> {
+    spec.validate()?;
+    let spec = if opts.quick {
+        clamp_quick(spec)
+    } else {
+        spec.clone()
+    };
+    let t = &spec.topology;
+    let gpu_profile = t.gpu()?;
+    let mut cluster = Cluster::new_with(
+        opts.runtime,
+        t.nodes,
+        t.gpus,
+        t.nics_per_gpu,
+        t.seed,
+        t.nic()?,
+        gpu_profile.clone(),
+    );
+    let rc_engines = cluster.engines_rc();
+    let report = {
+        let (mut cx, engines) = cluster.parts();
+        let mut failures: Vec<String> = Vec::new();
+        let mut served: u64 = 0;
+        let mut redispatched: u64 = 0;
+        let mut live_prefillers: u64 = 0;
+        let mut no_lost_pages = true;
+        let mut ttft: Option<Summary> = None;
+
+        for g in &spec.gossip {
+            let peers = g
+                .peers
+                .iter()
+                .map(|&p| engines[p as usize].group_address(0))
+                .collect();
+            engines[g.from as usize].set_gossip_peers(0, peers);
+        }
+        // Chaos is fabric-wide: injecting on engine 0 arms every
+        // engine's failover bookkeeping and schedules the shared
+        // event timeline (same contract the hand harnesses rely on).
+        if !spec.chaos.is_quiet() {
+            engines[0].inject_chaos(&mut cx, &spec.chaos.profile());
+        }
+
+        for (i, step) in spec.workload.iter().enumerate() {
+            match step {
+                WorkloadStep::PostRecvs { node, len, count } => {
+                    engines[*node as usize].submit_recvs(
+                        &mut cx,
+                        0,
+                        *len as usize,
+                        *count as usize,
+                        OnRecv::handler(|_m| {}),
+                    );
+                }
+                WorkloadStep::Write { src, dst, bytes } => {
+                    let sender = engines[*src as usize];
+                    let receiver = engines[*dst as usize];
+                    let len = *bytes as usize;
+                    let pat: Vec<u8> = (0..len).map(|b| (b * 3 % 251) as u8).collect();
+                    let (src_mr, _) = sender.alloc_mr(0, len);
+                    let (dst_h, dst_d) = receiver.alloc_mr(0, len);
+                    src_mr.buf.write(0, &pat);
+                    let done = new_flag();
+                    match sender.submit_single_write(
+                        &mut cx,
+                        (&src_mr, 0),
+                        *bytes,
+                        (&dst_d, 0),
+                        None,
+                        Notify::Flag(done.clone()),
+                    ) {
+                        Ok(()) => {
+                            cx.wait(&done);
+                            cx.settle();
+                            if dst_h.buf.to_vec() != pat {
+                                failures.push(format!(
+                                    "workload[{i}] write: payload mismatch after delivery"
+                                ));
+                            }
+                        }
+                        Err(e) => {
+                            failures.push(format!("workload[{i}] write: rejected: {e}"));
+                        }
+                    }
+                }
+                WorkloadStep::KvPush {
+                    prefiller,
+                    decoder,
+                    pages,
+                    page_len,
+                } => {
+                    run_generic_kv_push(
+                        &mut cx,
+                        engines[*prefiller as usize],
+                        engines[*decoder as usize],
+                        *pages,
+                        *page_len,
+                    );
+                }
+                WorkloadStep::KvRequest {
+                    prefiller,
+                    decoder,
+                    seq,
+                } => {
+                    let out = run_kv_request_on(
+                        &mut cx,
+                        rc_engines[*prefiller as usize].clone(),
+                        rc_engines[*decoder as usize].clone(),
+                        gpu_profile.clone(),
+                        *seq,
+                    );
+                    no_lost_pages &= out.no_lost_pages;
+                }
+                WorkloadStep::KvFleet { requests } => {
+                    let out = run_kv_fleet_on(
+                        &mut cx,
+                        &rc_engines,
+                        gpu_profile.clone(),
+                        *requests as usize,
+                    );
+                    served += out.served as u64;
+                    redispatched += out.redispatched as u64;
+                    live_prefillers = out.live_prefillers as u64;
+                    no_lost_pages &= out.no_lost_pages;
+                }
+                WorkloadStep::MoeDispatch {
+                    tokens_per_peer,
+                    token_bytes,
+                } => {
+                    run_generic_dispatch_round(&mut cx, &engines, *tokens_per_peer, *token_bytes);
+                }
+                WorkloadStep::RlFanout { bytes } => {
+                    run_generic_rank0_fanout(&mut cx, &engines, *bytes);
+                }
+                WorkloadStep::Serving {
+                    requests,
+                    rate_ns,
+                    seqs,
+                } => {
+                    // Model-level sweep on its own DES scheduler —
+                    // independent of the cluster fabric, seeded from
+                    // the topology seed so it replays with the spec.
+                    let cfg = ServingConfig::small(*requests as usize);
+                    let arrivals = Arrivals::Poisson(PoissonArrivals::new(
+                        t.seed,
+                        *rate_ns,
+                        seqs.clone(),
+                    ));
+                    let rep = run_serving(cfg, arrivals);
+                    served += rep.completed;
+                    ttft = Some(rep.ttft);
+                }
+            }
+        }
+        cx.settle();
+        let end_ns = cx.now();
+
+        let transport_errors: Vec<u64> = engines.iter().map(|e| e.transport_errors()).collect();
+        let nic_masks: Vec<u64> = engines.iter().map(|e| e.nic_health_mask(0)).collect();
+        let snapshots: Vec<EngineSnapshot> = engines.iter().map(|e| e.telemetry()).collect();
+
+        for (i, a) in spec.assertions.iter().enumerate() {
+            check_assertion(
+                a,
+                i,
+                &engines,
+                &transport_errors,
+                &nic_masks,
+                &snapshots,
+                served,
+                redispatched,
+                no_lost_pages,
+                &ttft,
+                &mut failures,
+            );
+        }
+
+        ScenarioReport {
+            name: spec.name.clone(),
+            runtime: opts.runtime,
+            served,
+            redispatched,
+            live_prefillers,
+            no_lost_pages,
+            ttft,
+            transport_errors,
+            nic_masks,
+            snapshots,
+            failures,
+            end_ns,
+        }
+    };
+    cluster.shutdown();
+    Ok(report)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_assertion(
+    a: &AssertionSpec,
+    i: usize,
+    engines: &[&dyn TransferEngine],
+    transport_errors: &[u64],
+    nic_masks: &[u64],
+    snapshots: &[EngineSnapshot],
+    served: u64,
+    redispatched: u64,
+    no_lost_pages: bool,
+    ttft: &Option<Summary>,
+    failures: &mut Vec<String>,
+) {
+    let mut fail = |msg: String| failures.push(format!("assertions[{i}]: {msg}"));
+    match a {
+        AssertionSpec::TransportErrorsMax { node, value } => {
+            let got = transport_errors[*node as usize];
+            if got > *value {
+                fail(format!("transport_errors of node {node} is {got}, want <= {value}"));
+            }
+        }
+        AssertionSpec::TransportErrorsMin { node, value } => {
+            let got = transport_errors[*node as usize];
+            if got < *value {
+                fail(format!("transport_errors of node {node} is {got}, want >= {value}"));
+            }
+        }
+        AssertionSpec::NicMask { node, value } => {
+            let got = nic_masks[*node as usize];
+            if got != *value {
+                fail(format!(
+                    "nic_health_mask of node {node} is {got:#b}, want {value:#b}"
+                ));
+            }
+        }
+        AssertionSpec::LinkMask {
+            node,
+            toward,
+            value,
+        } => {
+            let got = engines[*node as usize].link_health_mask(0, *toward);
+            if got != *value {
+                fail(format!(
+                    "link_health_mask of node {node} toward {toward:?} is {got:#b}, want {value:#b}"
+                ));
+            }
+        }
+        AssertionSpec::ZeroLostPages => {
+            if !no_lost_pages {
+                fail("a KV step leaked pages from the decoder pool".to_string());
+            }
+        }
+        AssertionSpec::Served { value } => {
+            if served != *value {
+                fail(format!("served {served} requests, want exactly {value}"));
+            }
+        }
+        AssertionSpec::RedispatchedMin { value } => {
+            if redispatched < *value {
+                fail(format!("redispatched {redispatched}, want >= {value}"));
+            }
+        }
+        AssertionSpec::RedispatchedMax { value } => {
+            if redispatched > *value {
+                fail(format!("redispatched {redispatched}, want <= {value}"));
+            }
+        }
+        AssertionSpec::ImmTotalMin { node, value } => {
+            let got = snapshots[*node as usize].imm_bumps;
+            if got < *value {
+                fail(format!("imm_bumps of node {node} is {got}, want >= {value}"));
+            }
+        }
+        AssertionSpec::TtftP50MaxMs { value } => match ttft {
+            Some(t) => {
+                let got_ms = t.p50 as f64 / 1e6;
+                if got_ms > *value {
+                    fail(format!("TTFT p50 is {got_ms:.3} ms, want <= {value} ms"));
+                }
+            }
+            None => fail("no serving step produced a TTFT distribution".to_string()),
+        },
+        AssertionSpec::TtftP99MaxMs { value } => match ttft {
+            Some(t) => {
+                let got_ms = t.p99 as f64 / 1e6;
+                if got_ms > *value {
+                    fail(format!("TTFT p99 is {got_ms:.3} ms, want <= {value} ms"));
+                }
+            }
+            None => fail("no serving step produced a TTFT distribution".to_string()),
+        },
+        AssertionSpec::LedgerIdentities => {
+            for (n, s) in snapshots.iter().enumerate() {
+                if s.resubmits + s.error_outs != s.wr_err_total {
+                    fail(format!(
+                        "node {n}: resubmits({}) + error_outs({}) != wr_err_total({})",
+                        s.resubmits, s.error_outs, s.wr_err_total
+                    ));
+                }
+                if s.wr_err_link + s.wr_err_nic != s.wr_err_total {
+                    fail(format!(
+                        "node {n}: wr_err_link({}) + wr_err_nic({}) != wr_err_total({})",
+                        s.wr_err_link, s.wr_err_nic, s.wr_err_total
+                    ));
+                }
+                let te = transport_errors[n];
+                if te != s.wr_err_total + s.rejected_all_down {
+                    fail(format!(
+                        "node {n}: transport_errors({te}) != wr_err_total({}) + rejected_all_down({})",
+                        s.wr_err_total, s.rejected_all_down
+                    ));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::{ChaosSpec, TopologySpec};
+
+    fn quiet_write_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "exec-smoke".to_string(),
+            topology: TopologySpec {
+                nodes: 2,
+                gpus: 1,
+                nics_per_gpu: 2,
+                seed: 0xE0E0,
+                nic_profile: "efa".to_string(),
+                gpu_profile: "h100".to_string(),
+            },
+            gossip: vec![],
+            chaos: ChaosSpec::quiet(1),
+            workload: vec![WorkloadStep::Write {
+                src: 0,
+                dst: 1,
+                bytes: 1 << 16,
+            }],
+            assertions: vec![
+                AssertionSpec::TransportErrorsMax { node: 0, value: 0 },
+                AssertionSpec::LedgerIdentities,
+            ],
+        }
+    }
+
+    #[test]
+    fn executor_runs_quiet_write_spec_clean() {
+        let report = run_scenario(&quiet_write_spec(), &RunOptions::default()).unwrap();
+        assert!(report.passed(), "failures: {:?}", report.failures);
+        assert_eq!(report.transport_errors, vec![0, 0]);
+        assert!(report.end_ns > 0);
+    }
+
+    #[test]
+    fn executor_records_assertion_failures_instead_of_panicking() {
+        let mut spec = quiet_write_spec();
+        spec.assertions.push(AssertionSpec::TransportErrorsMin {
+            node: 0,
+            value: 1_000,
+        });
+        let report = run_scenario(&spec, &RunOptions::default()).unwrap();
+        assert!(!report.passed());
+        assert_eq!(report.failures.len(), 1);
+        assert!(
+            report.failures[0].contains("want >= 1000"),
+            "{:?}",
+            report.failures
+        );
+    }
+
+    #[test]
+    fn executor_is_deterministic_on_des() {
+        let spec = quiet_write_spec();
+        let a = run_scenario(&spec, &RunOptions::default()).unwrap();
+        let b = run_scenario(&spec, &RunOptions::default()).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.end_ns, b.end_ns);
+    }
+
+    #[test]
+    fn executor_runs_on_both_runtimes() {
+        for runtime in [RuntimeKind::Des, RuntimeKind::Threaded] {
+            let opts = RunOptions {
+                runtime,
+                quick: true,
+            };
+            let report = run_scenario(&quiet_write_spec(), &opts).unwrap();
+            assert!(report.passed(), "{runtime:?}: {:?}", report.failures);
+        }
+    }
+
+    #[test]
+    fn quick_clamp_bounds_magnitudes_only() {
+        let mut spec = quiet_write_spec();
+        spec.workload = vec![
+            WorkloadStep::Write {
+                src: 0,
+                dst: 1,
+                bytes: 1 << 30,
+            },
+            WorkloadStep::Serving {
+                requests: 10_000,
+                rate_ns: 200_000,
+                seqs: vec![8192],
+            },
+        ];
+        let clamped = clamp_quick(&spec);
+        assert_eq!(
+            clamped.workload[0],
+            WorkloadStep::Write {
+                src: 0,
+                dst: 1,
+                bytes: 1 << 20
+            }
+        );
+        assert_eq!(
+            clamped.workload[1],
+            WorkloadStep::Serving {
+                requests: 8,
+                rate_ns: 200_000,
+                seqs: vec![1024]
+            }
+        );
+        // Topology, chaos and assertions untouched.
+        assert_eq!(clamped.topology, spec.topology);
+        assert_eq!(clamped.chaos, spec.chaos);
+        assert_eq!(clamped.assertions.len(), spec.assertions.len());
+    }
+}

@@ -1,0 +1,504 @@
+//! Seeded scenario fuzzing with failure shrinking.
+//!
+//! [`gen_spec`] samples a random topology × traffic × chaos
+//! [`ScenarioSpec`] from one seed — the whole spec derives from that
+//! seed, so every sampled scenario is replayable by number.
+//! [`check_spec`] runs a spec **twice** on the DES runtime and
+//! reports any of three failure classes: a run error/panic, recorded
+//! assertion failures, or a determinism divergence between the two
+//! runs (same-seed DES runs must agree on the full report
+//! fingerprint).
+//!
+//! On failure, [`shrink`] greedily minimizes the spec — drop chaos
+//! events, drop workload steps, halve magnitudes, shed nodes — while
+//! re-checking that the shrunk candidate *still fails*. Every
+//! candidate strictly reduces [`ScenarioSpec::size`], so shrinking
+//! terminates and the reproducer is never larger than the original.
+//! [`fuzz_sweep`] drives the whole loop and writes each shrunk
+//! reproducer to disk as a plain spec file replayable with
+//! `fabricctl run`.
+
+use crate::engine::traits::RuntimeKind;
+use crate::fabric::nic::NicAddr;
+use crate::scenario::exec::{run_scenario, RunOptions};
+use crate::scenario::spec::{
+    AssertionSpec, ChaosSpec, GossipSpec, LinkEventSpec, NicEventSpec, ScenarioSpec, TopologySpec,
+    WorkloadStep,
+};
+use crate::sim::Rng;
+use crate::util::err::{Context, Result};
+
+/// Sample one scenario from a seed. `quick` bounds node count and
+/// workload magnitudes to CI-sized budgets (the CI sweep runs with
+/// it; local soak runs may drop it).
+///
+/// The sampled space is deliberately *survivable*: chaos only ever
+/// downs a single NIC or link on a multi-NIC topology, so a healthy
+/// engine must always complete the traffic — any failure the checker
+/// reports is an engine bug (or a broken ledger/determinism
+/// contract), not an impossible scenario.
+pub fn gen_spec(seed: u64, quick: bool) -> ScenarioSpec {
+    let mut rng = Rng::new(seed ^ 0x5CE7_A210);
+    let nodes: u16 = if quick {
+        rng.range(2, 3) as u16
+    } else {
+        rng.range(2, 4) as u16
+    };
+    let nics_per_gpu: u8 = rng.range(1, 2) as u8;
+    let nic_profile = if nics_per_gpu > 1 { "efa" } else { "cx7" };
+    let topo_seed = rng.below(1 << 32);
+
+    let mut chaos = ChaosSpec::quiet(rng.below(1 << 16));
+    if rng.below(2) == 1 {
+        if rng.below(2) == 1 {
+            chaos.jitter_median_ns = rng.range(500, 3_000);
+        }
+        if rng.below(2) == 1 {
+            chaos.reorder_ns = rng.range(10_000, 50_000);
+            chaos.reorder_window = rng.range(8, 24);
+        }
+        // Victim events only on multi-NIC groups, one victim, never
+        // the last surviving lane.
+        if nics_per_gpu == 2 {
+            let at = rng.range(10_000, 50_000);
+            let victim = rng.below(nodes as u64) as u16;
+            match rng.below(3) {
+                1 => chaos.nic_events.push(NicEventSpec {
+                    at,
+                    nic: NicAddr {
+                        node: victim,
+                        gpu: 0,
+                        nic: 1,
+                    },
+                    up: false,
+                }),
+                2 => {
+                    let other = (victim + 1 + rng.below(nodes as u64 - 1) as u16) % nodes;
+                    chaos.link_events.push(LinkEventSpec {
+                        at,
+                        src: NicAddr {
+                            node: victim,
+                            gpu: 0,
+                            nic: 1,
+                        },
+                        dst: NicAddr {
+                            node: other,
+                            gpu: 0,
+                            nic: 1,
+                        },
+                        up: false,
+                    });
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let gossip = if rng.below(4) == 0 {
+        vec![GossipSpec {
+            from: 0,
+            peers: vec![nodes - 1],
+        }]
+    } else {
+        Vec::new()
+    };
+
+    // 1–3 bulk steps plus at most one KV protocol step. KV steps are
+    // exclusive per spec: each materializes prefiller/decoder actors
+    // with their own control-plane recv pools, and two actors on one
+    // engine would steal each other's messages.
+    let mut workload: Vec<WorkloadStep> = Vec::new();
+    let mut pick_pair = |rng: &mut Rng| {
+        let a = rng.below(nodes as u64) as u16;
+        let b = (a + 1 + rng.below(nodes as u64 - 1) as u16) % nodes;
+        (a, b)
+    };
+    let n_bulk = rng.range(1, 3);
+    for _ in 0..n_bulk {
+        match rng.below(3) {
+            0 => {
+                let (src, dst) = pick_pair(&mut rng);
+                workload.push(WorkloadStep::Write {
+                    src,
+                    dst,
+                    bytes: 1024 * rng.range(4, if quick { 256 } else { 1024 }),
+                });
+            }
+            1 => workload.push(WorkloadStep::MoeDispatch {
+                tokens_per_peer: rng.range(1, 4) as u32,
+                token_bytes: 256 * rng.range(1, 8),
+            }),
+            _ => workload.push(WorkloadStep::RlFanout {
+                bytes: 1024 * rng.range(4, 256),
+            }),
+        }
+    }
+    let mut has_kv = false;
+    if rng.below(2) == 1 {
+        has_kv = true;
+        match rng.below(if nodes >= 3 { 3 } else { 2 }) {
+            0 => {
+                let (p, d) = pick_pair(&mut rng);
+                workload.push(WorkloadStep::KvPush {
+                    prefiller: p,
+                    decoder: d,
+                    pages: rng.range(1, 8) as u32,
+                    page_len: 1024 * rng.range(1, 64),
+                });
+            }
+            1 => {
+                let (p, d) = pick_pair(&mut rng);
+                workload.push(WorkloadStep::KvRequest {
+                    prefiller: p,
+                    decoder: d,
+                    seq: rng.range(16, 128) as u32,
+                });
+            }
+            _ => workload.push(WorkloadStep::KvFleet {
+                requests: rng.range(1, 4) as u32,
+            }),
+        }
+    }
+
+    let mut assertions = vec![AssertionSpec::LedgerIdentities];
+    if has_kv {
+        assertions.push(AssertionSpec::ZeroLostPages);
+    }
+
+    ScenarioSpec {
+        name: format!("fuzz-{seed}"),
+        topology: TopologySpec {
+            nodes,
+            gpus: 1,
+            nics_per_gpu,
+            seed: topo_seed,
+            nic_profile: nic_profile.to_string(),
+            gpu_profile: "h100".to_string(),
+        },
+        gossip,
+        chaos,
+        workload,
+        assertions,
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One guarded DES run: `Ok((fingerprint, assertion_failures))`, or
+/// `Err(message)` when the spec could not run or the engine panicked
+/// mid-run (a protocol integrity assert, a DES quiesce with work
+/// still gated, ...).
+fn run_caught(spec: &ScenarioSpec, quick: bool) -> std::result::Result<(u64, Vec<String>), String> {
+    let opts = RunOptions {
+        runtime: RuntimeKind::Des,
+        quick,
+    };
+    let spec = spec.clone();
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        run_scenario(&spec, &opts)
+    })) {
+        Ok(Ok(report)) => Ok((report.fingerprint(), report.failures)),
+        Ok(Err(e)) => Err(format!("spec rejected: {e}")),
+        Err(p) => Err(format!("panic: {}", panic_message(p.as_ref()))),
+    }
+}
+
+/// Run a spec twice on same-seed DES clusters. `None` means it
+/// passed cleanly and deterministically; `Some(reason)` is the
+/// failure the shrinker will preserve.
+pub fn check_spec(spec: &ScenarioSpec, quick: bool) -> Option<String> {
+    match (run_caught(spec, quick), run_caught(spec, quick)) {
+        (Err(e), _) | (Ok(_), Err(e)) => Some(e),
+        (Ok((fa, fails_a)), Ok((fb, fails_b))) => {
+            if fa != fb || fails_a != fails_b {
+                Some(format!(
+                    "determinism divergence: {fa:016x} vs {fb:016x} on same-seed DES runs"
+                ))
+            } else if !fails_a.is_empty() {
+                Some(fails_a.join("; "))
+            } else {
+                None
+            }
+        }
+    }
+}
+
+fn halved(x: u64) -> u64 {
+    (x / 2).max(1)
+}
+
+/// Candidate replacements for one workload step with strictly
+/// smaller [`WorkloadStep::weight`] (empty when already minimal).
+fn halve_step(step: &WorkloadStep) -> Option<WorkloadStep> {
+    let smaller = match step {
+        WorkloadStep::PostRecvs { node, len, count } => WorkloadStep::PostRecvs {
+            node: *node,
+            len: halved(*len),
+            count: halved(*count),
+        },
+        WorkloadStep::Write { src, dst, bytes } => WorkloadStep::Write {
+            src: *src,
+            dst: *dst,
+            bytes: halved(*bytes),
+        },
+        WorkloadStep::KvPush {
+            prefiller,
+            decoder,
+            pages,
+            page_len,
+        } => WorkloadStep::KvPush {
+            prefiller: *prefiller,
+            decoder: *decoder,
+            pages: halved(*pages as u64) as u32,
+            page_len: halved(*page_len),
+        },
+        WorkloadStep::KvRequest {
+            prefiller,
+            decoder,
+            seq,
+        } => WorkloadStep::KvRequest {
+            prefiller: *prefiller,
+            decoder: *decoder,
+            seq: halved(*seq as u64) as u32,
+        },
+        WorkloadStep::KvFleet { requests } => WorkloadStep::KvFleet {
+            requests: halved(*requests as u64) as u32,
+        },
+        WorkloadStep::MoeDispatch {
+            tokens_per_peer,
+            token_bytes,
+        } => WorkloadStep::MoeDispatch {
+            tokens_per_peer: halved(*tokens_per_peer as u64) as u32,
+            token_bytes: halved(*token_bytes),
+        },
+        WorkloadStep::RlFanout { bytes } => WorkloadStep::RlFanout {
+            bytes: halved(*bytes),
+        },
+        WorkloadStep::Serving {
+            requests,
+            rate_ns,
+            seqs,
+        } => {
+            let keep = (seqs.len() / 2).max(1);
+            WorkloadStep::Serving {
+                requests: halved(*requests as u64) as u32,
+                rate_ns: *rate_ns,
+                seqs: seqs[..keep].to_vec(),
+            }
+        }
+    };
+    (smaller.weight() < step.weight()).then_some(smaller)
+}
+
+/// Strictly-smaller candidate specs, most aggressive first. Every
+/// candidate satisfies `cand.size() < spec.size()`; structural
+/// validity is re-checked by the caller (`validate()`), so
+/// candidates may dangle references (e.g. after shedding a node) —
+/// those are simply skipped.
+fn candidates(spec: &ScenarioSpec) -> Vec<ScenarioSpec> {
+    let mut out = Vec::new();
+    // Drop a whole workload step (keep at least one — an empty
+    // workload exercises nothing).
+    if spec.workload.len() > 1 {
+        for i in 0..spec.workload.len() {
+            let mut c = spec.clone();
+            c.workload.remove(i);
+            out.push(c);
+        }
+    }
+    // Silence all chaos at once, then event-by-event.
+    if !spec.chaos.is_quiet() {
+        let mut c = spec.clone();
+        c.chaos = ChaosSpec::quiet(spec.chaos.seed);
+        out.push(c);
+    }
+    for i in 0..spec.chaos.nic_events.len() {
+        let mut c = spec.clone();
+        c.chaos.nic_events.remove(i);
+        out.push(c);
+    }
+    for i in 0..spec.chaos.link_events.len() {
+        let mut c = spec.clone();
+        c.chaos.link_events.remove(i);
+        out.push(c);
+    }
+    if spec.chaos.jitter_median_ns > 0 {
+        let mut c = spec.clone();
+        c.chaos.jitter_median_ns = 0;
+        out.push(c);
+    }
+    if spec.chaos.reorder_ns > 0 || spec.chaos.reorder_window > 0 {
+        let mut c = spec.clone();
+        c.chaos.reorder_ns = 0;
+        c.chaos.reorder_window = 0;
+        out.push(c);
+    }
+    // Shed a node / a NIC lane (validate() filters dangling refs).
+    if spec.topology.nodes > 2 {
+        let mut c = spec.clone();
+        c.topology.nodes -= 1;
+        out.push(c);
+    }
+    if spec.topology.nics_per_gpu > 1 {
+        let mut c = spec.clone();
+        c.topology.nics_per_gpu -= 1;
+        out.push(c);
+    }
+    for i in 0..spec.gossip.len() {
+        let mut c = spec.clone();
+        c.gossip.remove(i);
+        out.push(c);
+    }
+    // Halve one step's magnitudes.
+    for (i, step) in spec.workload.iter().enumerate() {
+        if let Some(smaller) = halve_step(step) {
+            let mut c = spec.clone();
+            c.workload[i] = smaller;
+            out.push(c);
+        }
+    }
+    // Drop an assertion (keep at least one — a spec without
+    // assertions is not a reproducer of anything).
+    if spec.assertions.len() > 1 {
+        for i in 0..spec.assertions.len() {
+            let mut c = spec.clone();
+            c.assertions.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Greedily shrink a failing spec to a smaller spec that still fails
+/// `check_spec`. `max_checks` bounds the number of candidate runs
+/// (each candidate costs two DES runs); the current best reproducer
+/// is returned when the budget runs out or no candidate helps.
+pub fn shrink(spec: &ScenarioSpec, quick: bool, max_checks: usize) -> ScenarioSpec {
+    let mut cur = spec.clone();
+    let mut checks = 0;
+    'outer: loop {
+        for cand in candidates(&cur) {
+            if cand.validate().is_err() {
+                continue;
+            }
+            debug_assert!(cand.size() < cur.size());
+            if checks >= max_checks {
+                return cur;
+            }
+            checks += 1;
+            if check_spec(&cand, quick).is_some() {
+                cur = cand;
+                continue 'outer;
+            }
+        }
+        return cur;
+    }
+}
+
+/// One failing seed from a sweep, with its shrunk reproducer.
+#[derive(Debug, Clone)]
+pub struct SweepFailure {
+    /// Generator seed that produced the failing spec.
+    pub seed: u64,
+    /// What the original spec failed with.
+    pub failure: String,
+    /// What the shrunk spec fails with (normally the same class).
+    pub shrunk_failure: String,
+    /// Where the replayable shrunk spec was written.
+    pub path: String,
+}
+
+/// Fuzz `count` seeds starting at `start`; every failure is shrunk
+/// and written to `out_dir/shrunk_seed_<seed>.json` as a plain spec
+/// file replayable with `fabricctl run`. Returns the failure list
+/// (empty = sweep clean).
+pub fn fuzz_sweep(start: u64, count: u64, quick: bool, out_dir: &str) -> Result<Vec<SweepFailure>> {
+    let mut failures = Vec::new();
+    for seed in start..start.saturating_add(count) {
+        let spec = gen_spec(seed, quick);
+        let Some(failure) = check_spec(&spec, quick) else {
+            continue;
+        };
+        let small = shrink(&spec, quick, 200);
+        let shrunk_failure = check_spec(&small, quick)
+            .unwrap_or_else(|| "shrunk spec no longer fails (flaky failure?)".to_string());
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("creating reproducer dir {out_dir:?}"))?;
+        let path = format!("{out_dir}/shrunk_seed_{seed}.json");
+        std::fs::write(&path, small.to_pretty_string())
+            .with_context(|| format!("writing reproducer {path:?}"))?;
+        failures.push(SweepFailure {
+            seed,
+            failure,
+            shrunk_failure,
+            path,
+        });
+    }
+    Ok(failures)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_spec_is_deterministic_and_valid() {
+        for seed in 0..40 {
+            let a = gen_spec(seed, true);
+            let b = gen_spec(seed, true);
+            assert_eq!(a, b, "seed {seed} must sample identically");
+            a.validate()
+                .unwrap_or_else(|e| panic!("seed {seed} generated an invalid spec: {e}"));
+            assert!(!a.workload.is_empty());
+            assert!(!a.assertions.is_empty());
+        }
+    }
+
+    #[test]
+    fn gen_spec_round_trips_through_json() {
+        for seed in 0..10 {
+            let spec = gen_spec(seed, true);
+            let text = spec.to_pretty_string();
+            assert_eq!(ScenarioSpec::parse(&text).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn candidates_strictly_reduce_size() {
+        for seed in 0..20 {
+            let spec = gen_spec(seed, true);
+            for cand in candidates(&spec) {
+                assert!(
+                    cand.size() < spec.size(),
+                    "seed {seed}: candidate did not shrink ({} -> {})",
+                    spec.size(),
+                    cand.size()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn check_then_shrink_on_one_sampled_seed() {
+        // Either outcome is a pass: a clean deterministic run, or a
+        // failure whose shrunk reproducer (a) still fails and (b) is
+        // no larger — the shrinker's core guarantees.
+        let spec = gen_spec(0, true);
+        if let Some(f) = check_spec(&spec, true) {
+            let small = shrink(&spec, true, 60);
+            assert!(small.size() <= spec.size());
+            assert!(
+                check_spec(&small, true).is_some(),
+                "shrinking lost the failure: {f}"
+            );
+        }
+    }
+}

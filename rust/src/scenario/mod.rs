@@ -1,0 +1,22 @@
+//! Declarative scenario engine: topology × traffic × chaos from
+//! config.
+//!
+//! The test matrix this repo cares about — cluster shape × NIC/GPU
+//! profile × workload mix × chaos schedule — is data, not code:
+//! [`spec`] defines the JSON `ScenarioSpec`, [`exec`] materializes
+//! one into a live cluster on either runtime and checks its
+//! declarative assertions, and [`fuzz`] samples random specs by seed
+//! and shrinks any failure to a minimal replayable reproducer.
+//! `fabricctl run scenario.json` is the CLI front door; committed
+//! specs live under `scenarios/` at the repo root.
+
+pub mod exec;
+pub mod fuzz;
+pub mod spec;
+
+pub use exec::{clamp_quick, run_scenario, RunOptions, ScenarioReport};
+pub use fuzz::{check_spec, fuzz_sweep, gen_spec, shrink, SweepFailure};
+pub use spec::{
+    AssertionSpec, ChaosSpec, GossipSpec, LinkEventSpec, NicEventSpec, ScenarioSpec, TopologySpec,
+    WorkloadStep,
+};

@@ -1,0 +1,1232 @@
+//! `ScenarioSpec`: a declarative, zero-dependency JSON description of
+//! one full fabric scenario — cluster topology + NIC/GPU profiles, a
+//! workload mix, a chaos schedule, and the assertions the run must
+//! satisfy.
+//!
+//! The spec is data, not code: everything a hand-written harness
+//! function pins in Rust (cluster shape, seeds, chaos events, traffic
+//! steps, expected counters) lives in one JSON document that
+//! `fabricctl run scenario.json` can execute and the fuzzer
+//! ([`crate::scenario::fuzz`]) can sample and shrink. Committed specs
+//! live under `scenarios/` at the repo root (fabric-lint R9 requires
+//! each to parse and carry at least one assertion).
+//!
+//! Serialization is **canonical**: [`ScenarioSpec::to_json`] emits
+//! every field (no optional-key elision) into the deterministic
+//! [`Json`] serializer (BTreeMap key order, integral numbers without
+//! fractions), so `parse ∘ serialize ≡ id` holds bit-for-bit on
+//! canonical documents — the committed corpus is stored in exactly
+//! this form and a test pins it.
+
+use std::collections::BTreeMap;
+
+use crate::bail;
+use crate::fabric::chaos::ChaosProfile;
+use crate::fabric::nic::NicAddr;
+use crate::fabric::profile::{GpuProfile, NicProfile};
+use crate::sim::rng::Jitter;
+use crate::util::err::{Context, Result};
+use crate::util::json::Json;
+
+/// One full declarative scenario: topology × gossip × chaos ×
+/// workload × assertions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Human-readable scenario name (reported, not semantic).
+    pub name: String,
+    /// Cluster shape and hardware profiles.
+    pub topology: TopologySpec,
+    /// Health-gossip group wiring (`set_gossip_peers`), may be empty.
+    pub gossip: Vec<GossipSpec>,
+    /// Transport perturbation schedule (may be quiet).
+    pub chaos: ChaosSpec,
+    /// Traffic steps, executed in order; each is driven to completion
+    /// before the next starts.
+    pub workload: Vec<WorkloadStep>,
+    /// Declarative postconditions checked against engine telemetry
+    /// after the run drains.
+    pub assertions: Vec<AssertionSpec>,
+}
+
+/// Cluster topology + hardware profiles (`Cluster::new_with` inputs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologySpec {
+    /// Node count; workload/assertion `node` fields index engines,
+    /// one engine per node.
+    pub nodes: u16,
+    /// GPUs per node (domain groups per engine).
+    pub gpus: u8,
+    /// NICs per GPU (§3.2 equal-count invariant).
+    pub nics_per_gpu: u8,
+    /// Cluster base seed (fabric RNG streams).
+    pub seed: u64,
+    /// NIC profile name: `"cx7"`, `"efa"`, or `"erdma"`.
+    pub nic_profile: String,
+    /// GPU profile name: `"h100"` or `"h200"`.
+    pub gpu_profile: String,
+}
+
+impl TopologySpec {
+    /// Materialize the named NIC profile.
+    pub fn nic(&self) -> Result<NicProfile> {
+        match self.nic_profile.as_str() {
+            "cx7" => Ok(NicProfile::connectx7()),
+            "efa" => Ok(NicProfile::efa()),
+            "erdma" => Ok(NicProfile::erdma()),
+            other => bail!("unknown nic_profile {other:?} (want cx7|efa|erdma)"),
+        }
+    }
+
+    /// Materialize the named GPU profile.
+    pub fn gpu(&self) -> Result<GpuProfile> {
+        match self.gpu_profile.as_str() {
+            "h100" => Ok(GpuProfile::h100()),
+            "h200" => Ok(GpuProfile::h200()),
+            other => bail!("unknown gpu_profile {other:?} (want h100|h200)"),
+        }
+    }
+}
+
+/// One gossip-group edge set: engine `from` sends health gossip to
+/// `peers` (group 0 addresses).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GossipSpec {
+    /// Sending engine (node index).
+    pub from: u16,
+    /// Receiving engines (node indices).
+    pub peers: Vec<u16>,
+}
+
+/// Declarative [`ChaosProfile`]: seed, timing perturbation, and the
+/// NIC/link event schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChaosSpec {
+    /// Chaos RNG stream seed.
+    pub seed: u64,
+    /// Median of a [`Jitter::tight`] extra-delay distribution
+    /// (0 disables the component).
+    pub jitter_median_ns: u64,
+    /// Bounded-reorder commit delay (0 disables).
+    pub reorder_ns: u64,
+    /// Reorder window for the threaded fabric (0 = backend default).
+    pub reorder_window: u64,
+    /// Scheduled NIC down/up events.
+    pub nic_events: Vec<NicEventSpec>,
+    /// Scheduled directed-link cut/heal events.
+    pub link_events: Vec<LinkEventSpec>,
+}
+
+/// One scheduled NIC lifecycle event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NicEventSpec {
+    /// Model time (ns).
+    pub at: u64,
+    /// The NIC whose state flips.
+    pub nic: NicAddr,
+    /// `false` = down, `true` = up.
+    pub up: bool,
+}
+
+/// One scheduled directed-link partition/heal event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkEventSpec {
+    /// Model time (ns).
+    pub at: u64,
+    /// Sender-side NIC of the directed path.
+    pub src: NicAddr,
+    /// Receiver-side NIC of the directed path.
+    pub dst: NicAddr,
+    /// `false` = cut, `true` = heal.
+    pub up: bool,
+}
+
+impl ChaosSpec {
+    /// A quiet schedule (no perturbation).
+    pub fn quiet(seed: u64) -> Self {
+        ChaosSpec {
+            seed,
+            jitter_median_ns: 0,
+            reorder_ns: 0,
+            reorder_window: 0,
+            nic_events: Vec::new(),
+            link_events: Vec::new(),
+        }
+    }
+
+    /// True when the schedule perturbs nothing.
+    pub fn is_quiet(&self) -> bool {
+        self.jitter_median_ns == 0
+            && self.reorder_ns == 0
+            && self.reorder_window == 0
+            && self.nic_events.is_empty()
+            && self.link_events.is_empty()
+    }
+
+    /// Materialize the runnable [`ChaosProfile`].
+    pub fn profile(&self) -> ChaosProfile {
+        let mut p = ChaosProfile::new(self.seed);
+        if self.jitter_median_ns > 0 {
+            p = p.with_extra_jitter(Jitter::tight(self.jitter_median_ns as f64));
+        }
+        if self.reorder_ns > 0 || self.reorder_window > 0 {
+            p = p.with_reorder(self.reorder_ns, self.reorder_window as usize);
+        }
+        for e in &self.nic_events {
+            p = if e.up {
+                p.nic_up(e.at, e.nic)
+            } else {
+                p.nic_down(e.at, e.nic)
+            };
+        }
+        for e in &self.link_events {
+            p = if e.up {
+                p.link_up(e.at, (e.src, e.dst))
+            } else {
+                p.link_down(e.at, (e.src, e.dst))
+            };
+        }
+        p
+    }
+}
+
+/// One traffic step. Steps run in order; each drives the runtime to
+/// completion of its own gate before returning.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkloadStep {
+    /// Post a control-plane recv pool on `node` (gossip/heartbeats
+    /// ride on these; app callback counts but drops payloads).
+    PostRecvs {
+        /// Posting engine.
+        node: u16,
+        /// Buffer length in bytes.
+        len: u64,
+        /// Pool size.
+        count: u64,
+    },
+    /// One contiguous one-sided write `src → dst` with a payload
+    /// integrity check at the destination.
+    Write {
+        /// Sending engine.
+        src: u16,
+        /// Receiving engine.
+        dst: u16,
+        /// Payload length.
+        bytes: u64,
+    },
+    /// The bare §4 KV page-push protocol
+    /// ([`crate::apps::kvcache::run_generic_kv_push`]).
+    KvPush {
+        /// Prefiller engine.
+        prefiller: u16,
+        /// Decoder engine.
+        decoder: u16,
+        /// KV pages to push.
+        pages: u32,
+        /// Bytes per page.
+        page_len: u64,
+    },
+    /// One full disaggregated request
+    /// ([`crate::apps::kvcache::run_kv_request_on`]).
+    KvRequest {
+        /// Prefiller engine.
+        prefiller: u16,
+        /// Decoder engine.
+        decoder: u16,
+        /// Prompt length in tokens.
+        seq: u32,
+    },
+    /// The prefiller-fleet serving loop with scheduler, heartbeats and
+    /// supervisor re-dispatch ([`crate::apps::kvcache::run_kv_fleet_on`]):
+    /// engines 0/1 prefill, engine 2 decodes.
+    KvFleet {
+        /// Requests to submit through the scheduler.
+        requests: u32,
+    },
+    /// One MoE all-to-all dispatch round across every engine
+    /// ([`crate::apps::moe::run_generic_dispatch_round`]).
+    MoeDispatch {
+        /// Tokens each rank sends to each peer.
+        tokens_per_peer: u32,
+        /// Bytes per token.
+        token_bytes: u64,
+    },
+    /// RL weight fan-out from engine 0 to every other engine
+    /// ([`crate::apps::rlweights::run_generic_rank0_fanout`]).
+    RlFanout {
+        /// Shard bytes per replica.
+        bytes: u64,
+    },
+    /// Model-level serving sweep with seeded Poisson arrivals
+    /// ([`crate::apps::kvcache::run_serving`]). Runs on its own DES
+    /// scheduler (independent of the cluster fabric); feeds the TTFT
+    /// assertions.
+    Serving {
+        /// Open-loop requests to play.
+        requests: u32,
+        /// Mean inter-arrival time (ns).
+        rate_ns: u64,
+        /// Prompt-length choice set for the arrival process.
+        seqs: Vec<u32>,
+    },
+}
+
+/// One declarative postcondition, checked after the run drains.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AssertionSpec {
+    /// `transport_errors()` of `node` is at most `value`.
+    TransportErrorsMax {
+        /// Engine to read.
+        node: u16,
+        /// Inclusive upper bound.
+        value: u64,
+    },
+    /// `transport_errors()` of `node` is at least `value`.
+    TransportErrorsMin {
+        /// Engine to read.
+        node: u16,
+        /// Inclusive lower bound.
+        value: u64,
+    },
+    /// `nic_health_mask(0)` of `node` equals `value` exactly.
+    NicMask {
+        /// Engine to read.
+        node: u16,
+        /// Expected bitmask.
+        value: u64,
+    },
+    /// `link_health_mask(0, toward)` of `node` equals `value`.
+    LinkMask {
+        /// Engine to read.
+        node: u16,
+        /// Remote NIC the belief is about.
+        toward: NicAddr,
+        /// Expected bitmask.
+        value: u64,
+    },
+    /// Every KV step returned its pages to the decoder pool.
+    ZeroLostPages,
+    /// Total requests served (kv_fleet + serving) equals `value`.
+    Served {
+        /// Expected completion count.
+        value: u64,
+    },
+    /// Supervisor re-dispatches are at least `value`.
+    RedispatchedMin {
+        /// Inclusive lower bound.
+        value: u64,
+    },
+    /// Supervisor re-dispatches are at most `value`.
+    RedispatchedMax {
+        /// Inclusive upper bound.
+        value: u64,
+    },
+    /// `imm_bumps` of `node` (delivered write-immediates) is at least
+    /// `value`.
+    ImmTotalMin {
+        /// Engine to read.
+        node: u16,
+        /// Inclusive lower bound.
+        value: u64,
+    },
+    /// Serving TTFT p50 is at most `value` milliseconds.
+    TtftP50MaxMs {
+        /// Ceiling in ms.
+        value: f64,
+    },
+    /// Serving TTFT p99 is at most `value` milliseconds.
+    TtftP99MaxMs {
+        /// Ceiling in ms.
+        value: f64,
+    },
+    /// The telemetry-ledger identities hold on every engine:
+    /// `resubmits + error_outs == wr_err_total`,
+    /// `wr_err_link + wr_err_nic == wr_err_total`, and
+    /// `transport_errors() == wr_err_total + rejected_all_down`.
+    LedgerIdentities,
+}
+
+// ---------------------------------------------------------------------
+// JSON (de)serialization
+// ---------------------------------------------------------------------
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn nic_json(n: &NicAddr) -> Json {
+    Json::Arr(vec![
+        Json::from(n.node as u64),
+        Json::from(n.gpu as u64),
+        Json::from(n.nic as u64),
+    ])
+}
+
+/// Integral non-negative number (rejects fractions, negatives,
+/// non-finite — `Json::u64` alone would silently truncate).
+fn num_u64(j: &Json) -> Option<u64> {
+    let n = j.f64()?;
+    if n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n <= 1.8e19 {
+        Some(n as u64)
+    } else {
+        None
+    }
+}
+
+fn req_u64(j: &Json, key: &str, what: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(num_u64)
+        .with_context(|| format!("{what}: missing or invalid integer field {key:?}"))
+}
+
+fn req_u32(j: &Json, key: &str, what: &str) -> Result<u32> {
+    let v = req_u64(j, key, what)?;
+    if v > u32::MAX as u64 {
+        bail!("{what}: {key:?} = {v} out of u32 range");
+    }
+    Ok(v as u32)
+}
+
+fn req_u16(j: &Json, key: &str, what: &str) -> Result<u16> {
+    let v = req_u64(j, key, what)?;
+    if v > u16::MAX as u64 {
+        bail!("{what}: {key:?} = {v} out of u16 range");
+    }
+    Ok(v as u16)
+}
+
+fn req_u8(j: &Json, key: &str, what: &str) -> Result<u8> {
+    let v = req_u64(j, key, what)?;
+    if v > u8::MAX as u64 {
+        bail!("{what}: {key:?} = {v} out of u8 range");
+    }
+    Ok(v as u8)
+}
+
+fn req_f64(j: &Json, key: &str, what: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::f64)
+        .with_context(|| format!("{what}: missing or invalid number field {key:?}"))
+}
+
+fn req_str(j: &Json, key: &str, what: &str) -> Result<String> {
+    Ok(j.get(key)
+        .and_then(Json::str)
+        .with_context(|| format!("{what}: missing or invalid string field {key:?}"))?
+        .to_string())
+}
+
+fn req_bool(j: &Json, key: &str, what: &str) -> Result<bool> {
+    match j.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => bail!("{what}: missing or invalid bool field {key:?}"),
+    }
+}
+
+fn req_arr<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a [Json]> {
+    match j.get(key) {
+        Some(Json::Arr(v)) => Ok(v),
+        _ => bail!("{what}: missing or invalid array field {key:?}"),
+    }
+}
+
+fn nic_from(j: &Json, what: &str) -> Result<NicAddr> {
+    let parts = j.items();
+    if parts.len() != 3 {
+        bail!("{what}: a NIC address is [node, gpu, nic]");
+    }
+    let get = |i: usize, cap: u64, label: &str| -> Result<u64> {
+        let v = num_u64(&parts[i])
+            .with_context(|| format!("{what}: NIC address {label} must be an integer"))?;
+        if v > cap {
+            bail!("{what}: NIC address {label} {v} out of range");
+        }
+        Ok(v)
+    };
+    Ok(NicAddr {
+        node: get(0, u16::MAX as u64, "node")? as u16,
+        gpu: get(1, u8::MAX as u64, "gpu")? as u8,
+        nic: get(2, u8::MAX as u64, "nic")? as u8,
+    })
+}
+
+impl ScenarioSpec {
+    /// Parse a spec from JSON text (the `fabricctl run` front door).
+    pub fn parse(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    /// Load and parse a spec file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario spec {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("in scenario spec {path:?}"))
+    }
+
+    /// Decode from a parsed [`Json`] document.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        if j.obj().is_none() {
+            bail!("scenario spec must be a JSON object");
+        }
+        let name = req_str(j, "name", "spec")?;
+        let topology = TopologySpec::from_json(
+            j.get("topology").context("spec: missing \"topology\"")?,
+        )?;
+        let mut gossip = Vec::new();
+        for (i, g) in req_arr(j, "gossip", "spec")?.iter().enumerate() {
+            let what = format!("gossip[{i}]");
+            let peers = req_arr(g, "peers", &what)?
+                .iter()
+                .map(|p| {
+                    num_u64(p)
+                        .filter(|&v| v <= u16::MAX as u64)
+                        .with_context(|| format!("{what}: peers must be node indices"))
+                        .map(|v| v as u16)
+                })
+                .collect::<Result<Vec<u16>>>()?;
+            gossip.push(GossipSpec {
+                from: req_u16(g, "from", &what)?,
+                peers,
+            });
+        }
+        let chaos = ChaosSpec::from_json(j.get("chaos").context("spec: missing \"chaos\"")?)?;
+        let mut workload = Vec::new();
+        for (i, s) in req_arr(j, "workload", "spec")?.iter().enumerate() {
+            workload.push(WorkloadStep::from_json(s, &format!("workload[{i}]"))?);
+        }
+        let mut assertions = Vec::new();
+        for (i, a) in req_arr(j, "assertions", "spec")?.iter().enumerate() {
+            assertions.push(AssertionSpec::from_json(a, &format!("assertions[{i}]"))?);
+        }
+        let spec = ScenarioSpec {
+            name,
+            topology,
+            gossip,
+            chaos,
+            workload,
+            assertions,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Encode to canonical [`Json`] (every field present, no elision).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("topology", self.topology.to_json()),
+            (
+                "gossip",
+                Json::Arr(
+                    self.gossip
+                        .iter()
+                        .map(|g| {
+                            obj(vec![
+                                ("from", Json::from(g.from as u64)),
+                                (
+                                    "peers",
+                                    Json::Arr(
+                                        g.peers.iter().map(|&p| Json::from(p as u64)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("chaos", self.chaos.to_json()),
+            (
+                "workload",
+                Json::Arr(self.workload.iter().map(WorkloadStep::to_json).collect()),
+            ),
+            (
+                "assertions",
+                Json::Arr(self.assertions.iter().map(AssertionSpec::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Canonical on-disk form: 2-space pretty JSON with a trailing
+    /// newline — exactly what the committed corpus is stored as.
+    pub fn to_pretty_string(&self) -> String {
+        self.to_json().to_pretty(2)
+    }
+
+    /// Cross-field sanity: every engine/NIC reference is in range and
+    /// every step's shape requirement is met. Called by `from_json`,
+    /// so a spec that parses is a spec that can run.
+    pub fn validate(&self) -> Result<()> {
+        let t = &self.topology;
+        if t.nodes == 0 || t.gpus == 0 || t.nics_per_gpu == 0 {
+            bail!("topology: nodes, gpus and nics_per_gpu must all be >= 1");
+        }
+        t.nic()?;
+        t.gpu()?;
+        let nodes = t.nodes;
+        let node_ok = |n: u16, what: &str| -> Result<()> {
+            if n >= nodes {
+                bail!("{what}: node {n} out of range (topology has {nodes} nodes)");
+            }
+            Ok(())
+        };
+        let nic_ok = |a: &NicAddr, what: &str| -> Result<()> {
+            if a.node >= nodes || a.gpu >= t.gpus || a.nic >= t.nics_per_gpu {
+                bail!("{what}: NIC {a:?} out of range for the topology");
+            }
+            Ok(())
+        };
+        for (i, g) in self.gossip.iter().enumerate() {
+            node_ok(g.from, &format!("gossip[{i}].from"))?;
+            for &p in &g.peers {
+                node_ok(p, &format!("gossip[{i}].peers"))?;
+            }
+        }
+        for (i, e) in self.chaos.nic_events.iter().enumerate() {
+            nic_ok(&e.nic, &format!("chaos.nic_events[{i}]"))?;
+        }
+        for (i, e) in self.chaos.link_events.iter().enumerate() {
+            nic_ok(&e.src, &format!("chaos.link_events[{i}].src"))?;
+            nic_ok(&e.dst, &format!("chaos.link_events[{i}].dst"))?;
+        }
+        for (i, s) in self.workload.iter().enumerate() {
+            let what = format!("workload[{i}]");
+            match s {
+                WorkloadStep::PostRecvs { node, len, count } => {
+                    node_ok(*node, &what)?;
+                    if *len == 0 || *count == 0 {
+                        bail!("{what}: len and count must be >= 1");
+                    }
+                }
+                WorkloadStep::Write { src, dst, bytes } => {
+                    node_ok(*src, &what)?;
+                    node_ok(*dst, &what)?;
+                    if src == dst {
+                        bail!("{what}: src and dst must differ");
+                    }
+                    if *bytes == 0 {
+                        bail!("{what}: bytes must be >= 1");
+                    }
+                }
+                WorkloadStep::KvPush {
+                    prefiller,
+                    decoder,
+                    pages,
+                    page_len,
+                } => {
+                    node_ok(*prefiller, &what)?;
+                    node_ok(*decoder, &what)?;
+                    if prefiller == decoder {
+                        bail!("{what}: prefiller and decoder must differ");
+                    }
+                    if *pages == 0 || *page_len == 0 {
+                        bail!("{what}: pages and page_len must be >= 1");
+                    }
+                }
+                WorkloadStep::KvRequest {
+                    prefiller,
+                    decoder,
+                    seq,
+                } => {
+                    node_ok(*prefiller, &what)?;
+                    node_ok(*decoder, &what)?;
+                    if prefiller == decoder {
+                        bail!("{what}: prefiller and decoder must differ");
+                    }
+                    if *seq == 0 {
+                        bail!("{what}: seq must be >= 1");
+                    }
+                }
+                WorkloadStep::KvFleet { requests } => {
+                    if nodes < 3 {
+                        bail!("{what}: kv_fleet needs >= 3 nodes (2 prefillers + decoder)");
+                    }
+                    if *requests == 0 {
+                        bail!("{what}: requests must be >= 1");
+                    }
+                }
+                WorkloadStep::MoeDispatch {
+                    tokens_per_peer,
+                    token_bytes,
+                } => {
+                    if nodes < 2 {
+                        bail!("{what}: moe_dispatch needs >= 2 nodes");
+                    }
+                    if *tokens_per_peer == 0 || *token_bytes == 0 {
+                        bail!("{what}: tokens_per_peer and token_bytes must be >= 1");
+                    }
+                }
+                WorkloadStep::RlFanout { bytes } => {
+                    if nodes < 2 {
+                        bail!("{what}: rl_fanout needs >= 2 nodes");
+                    }
+                    if *bytes == 0 {
+                        bail!("{what}: bytes must be >= 1");
+                    }
+                }
+                WorkloadStep::Serving {
+                    requests,
+                    rate_ns,
+                    seqs,
+                } => {
+                    if *requests == 0 || *rate_ns == 0 {
+                        bail!("{what}: requests and rate_ns must be >= 1");
+                    }
+                    if seqs.is_empty() || seqs.iter().any(|&s| s == 0) {
+                        bail!("{what}: seqs must be non-empty, all >= 1");
+                    }
+                }
+            }
+        }
+        for (i, a) in self.assertions.iter().enumerate() {
+            let what = format!("assertions[{i}]");
+            match a {
+                AssertionSpec::TransportErrorsMax { node, .. }
+                | AssertionSpec::TransportErrorsMin { node, .. }
+                | AssertionSpec::NicMask { node, .. }
+                | AssertionSpec::ImmTotalMin { node, .. } => node_ok(*node, &what)?,
+                AssertionSpec::LinkMask { node, toward, .. } => {
+                    node_ok(*node, &what)?;
+                    nic_ok(toward, &what)?;
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Shrinking metric: every shrink candidate the fuzzer proposes
+    /// (drop an event/step/assertion, halve a parameter, reduce
+    /// nodes) strictly reduces this, so greedy shrinking terminates
+    /// and the reproducer is never larger than the original.
+    pub fn size(&self) -> u64 {
+        let mut s = self.topology.nodes as u64
+            + self.topology.nics_per_gpu as u64
+            + self.gossip.len() as u64
+            + self.assertions.len() as u64
+            + self.chaos.nic_events.len() as u64
+            + self.chaos.link_events.len() as u64
+            + (self.chaos.reorder_ns > 0) as u64
+            + (self.chaos.jitter_median_ns > 0) as u64;
+        for step in &self.workload {
+            s += 1_000_000 + step.weight();
+        }
+        s
+    }
+}
+
+impl TopologySpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TopologySpec {
+            nodes: req_u16(j, "nodes", "topology")?,
+            gpus: req_u8(j, "gpus", "topology")?,
+            nics_per_gpu: req_u8(j, "nics_per_gpu", "topology")?,
+            seed: req_u64(j, "seed", "topology")?,
+            nic_profile: req_str(j, "nic_profile", "topology")?,
+            gpu_profile: req_str(j, "gpu_profile", "topology")?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("nodes", Json::from(self.nodes as u64)),
+            ("gpus", Json::from(self.gpus as u64)),
+            ("nics_per_gpu", Json::from(self.nics_per_gpu as u64)),
+            ("seed", Json::from(self.seed)),
+            ("nic_profile", Json::from(self.nic_profile.as_str())),
+            ("gpu_profile", Json::from(self.gpu_profile.as_str())),
+        ])
+    }
+}
+
+impl ChaosSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut nic_events = Vec::new();
+        for (i, e) in req_arr(j, "nic_events", "chaos")?.iter().enumerate() {
+            let what = format!("chaos.nic_events[{i}]");
+            nic_events.push(NicEventSpec {
+                at: req_u64(e, "at", &what)?,
+                nic: nic_from(e.get("nic").context(format!("{what}: missing \"nic\""))?, &what)?,
+                up: req_bool(e, "up", &what)?,
+            });
+        }
+        let mut link_events = Vec::new();
+        for (i, e) in req_arr(j, "link_events", "chaos")?.iter().enumerate() {
+            let what = format!("chaos.link_events[{i}]");
+            link_events.push(LinkEventSpec {
+                at: req_u64(e, "at", &what)?,
+                src: nic_from(e.get("src").context(format!("{what}: missing \"src\""))?, &what)?,
+                dst: nic_from(e.get("dst").context(format!("{what}: missing \"dst\""))?, &what)?,
+                up: req_bool(e, "up", &what)?,
+            });
+        }
+        Ok(ChaosSpec {
+            seed: req_u64(j, "seed", "chaos")?,
+            jitter_median_ns: req_u64(j, "jitter_median_ns", "chaos")?,
+            reorder_ns: req_u64(j, "reorder_ns", "chaos")?,
+            reorder_window: req_u64(j, "reorder_window", "chaos")?,
+            nic_events,
+            link_events,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("seed", Json::from(self.seed)),
+            ("jitter_median_ns", Json::from(self.jitter_median_ns)),
+            ("reorder_ns", Json::from(self.reorder_ns)),
+            ("reorder_window", Json::from(self.reorder_window)),
+            (
+                "nic_events",
+                Json::Arr(
+                    self.nic_events
+                        .iter()
+                        .map(|e| {
+                            obj(vec![
+                                ("at", Json::from(e.at)),
+                                ("nic", nic_json(&e.nic)),
+                                ("up", Json::Bool(e.up)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "link_events",
+                Json::Arr(
+                    self.link_events
+                        .iter()
+                        .map(|e| {
+                            obj(vec![
+                                ("at", Json::from(e.at)),
+                                ("src", nic_json(&e.src)),
+                                ("dst", nic_json(&e.dst)),
+                                ("up", Json::Bool(e.up)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl WorkloadStep {
+    fn from_json(j: &Json, what: &str) -> Result<Self> {
+        let op = req_str(j, "op", what)?;
+        Ok(match op.as_str() {
+            "post_recvs" => WorkloadStep::PostRecvs {
+                node: req_u16(j, "node", what)?,
+                len: req_u64(j, "len", what)?,
+                count: req_u64(j, "count", what)?,
+            },
+            "write" => WorkloadStep::Write {
+                src: req_u16(j, "src", what)?,
+                dst: req_u16(j, "dst", what)?,
+                bytes: req_u64(j, "bytes", what)?,
+            },
+            "kv_push" => WorkloadStep::KvPush {
+                prefiller: req_u16(j, "prefiller", what)?,
+                decoder: req_u16(j, "decoder", what)?,
+                pages: req_u32(j, "pages", what)?,
+                page_len: req_u64(j, "page_len", what)?,
+            },
+            "kv_request" => WorkloadStep::KvRequest {
+                prefiller: req_u16(j, "prefiller", what)?,
+                decoder: req_u16(j, "decoder", what)?,
+                seq: req_u32(j, "seq", what)?,
+            },
+            "kv_fleet" => WorkloadStep::KvFleet {
+                requests: req_u32(j, "requests", what)?,
+            },
+            "moe_dispatch" => WorkloadStep::MoeDispatch {
+                tokens_per_peer: req_u32(j, "tokens_per_peer", what)?,
+                token_bytes: req_u64(j, "token_bytes", what)?,
+            },
+            "rl_fanout" => WorkloadStep::RlFanout {
+                bytes: req_u64(j, "bytes", what)?,
+            },
+            "serving" => WorkloadStep::Serving {
+                requests: req_u32(j, "requests", what)?,
+                rate_ns: req_u64(j, "rate_ns", what)?,
+                seqs: req_arr(j, "seqs", what)?
+                    .iter()
+                    .map(|s| {
+                        num_u64(s)
+                            .filter(|&v| v <= u32::MAX as u64)
+                            .with_context(|| format!("{what}: seqs must be integers"))
+                            .map(|v| v as u32)
+                    })
+                    .collect::<Result<Vec<u32>>>()?,
+            },
+            other => bail!("{what}: unknown op {other:?}"),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            WorkloadStep::PostRecvs { node, len, count } => obj(vec![
+                ("op", Json::from("post_recvs")),
+                ("node", Json::from(*node as u64)),
+                ("len", Json::from(*len)),
+                ("count", Json::from(*count)),
+            ]),
+            WorkloadStep::Write { src, dst, bytes } => obj(vec![
+                ("op", Json::from("write")),
+                ("src", Json::from(*src as u64)),
+                ("dst", Json::from(*dst as u64)),
+                ("bytes", Json::from(*bytes)),
+            ]),
+            WorkloadStep::KvPush {
+                prefiller,
+                decoder,
+                pages,
+                page_len,
+            } => obj(vec![
+                ("op", Json::from("kv_push")),
+                ("prefiller", Json::from(*prefiller as u64)),
+                ("decoder", Json::from(*decoder as u64)),
+                ("pages", Json::from(*pages as u64)),
+                ("page_len", Json::from(*page_len)),
+            ]),
+            WorkloadStep::KvRequest {
+                prefiller,
+                decoder,
+                seq,
+            } => obj(vec![
+                ("op", Json::from("kv_request")),
+                ("prefiller", Json::from(*prefiller as u64)),
+                ("decoder", Json::from(*decoder as u64)),
+                ("seq", Json::from(*seq as u64)),
+            ]),
+            WorkloadStep::KvFleet { requests } => obj(vec![
+                ("op", Json::from("kv_fleet")),
+                ("requests", Json::from(*requests as u64)),
+            ]),
+            WorkloadStep::MoeDispatch {
+                tokens_per_peer,
+                token_bytes,
+            } => obj(vec![
+                ("op", Json::from("moe_dispatch")),
+                ("tokens_per_peer", Json::from(*tokens_per_peer as u64)),
+                ("token_bytes", Json::from(*token_bytes)),
+            ]),
+            WorkloadStep::RlFanout { bytes } => obj(vec![
+                ("op", Json::from("rl_fanout")),
+                ("bytes", Json::from(*bytes)),
+            ]),
+            WorkloadStep::Serving {
+                requests,
+                rate_ns,
+                seqs,
+            } => obj(vec![
+                ("op", Json::from("serving")),
+                ("requests", Json::from(*requests as u64)),
+                ("rate_ns", Json::from(*rate_ns)),
+                (
+                    "seqs",
+                    Json::Arr(seqs.iter().map(|&s| Json::from(s as u64)).collect()),
+                ),
+            ]),
+        }
+    }
+
+    /// Parameter-magnitude component of [`ScenarioSpec::size`]:
+    /// halving any numeric parameter strictly reduces it.
+    pub fn weight(&self) -> u64 {
+        match self {
+            WorkloadStep::PostRecvs { len, count, .. } => len + count,
+            WorkloadStep::Write { bytes, .. } => *bytes,
+            WorkloadStep::KvPush { pages, page_len, .. } => *pages as u64 + page_len,
+            WorkloadStep::KvRequest { seq, .. } => *seq as u64,
+            WorkloadStep::KvFleet { requests } => *requests as u64,
+            WorkloadStep::MoeDispatch {
+                tokens_per_peer,
+                token_bytes,
+            } => *tokens_per_peer as u64 + token_bytes,
+            WorkloadStep::RlFanout { bytes } => *bytes,
+            WorkloadStep::Serving { requests, seqs, .. } => *requests as u64 + seqs.len() as u64,
+        }
+    }
+}
+
+impl AssertionSpec {
+    fn from_json(j: &Json, what: &str) -> Result<Self> {
+        let check = req_str(j, "check", what)?;
+        Ok(match check.as_str() {
+            "transport_errors_max" => AssertionSpec::TransportErrorsMax {
+                node: req_u16(j, "node", what)?,
+                value: req_u64(j, "value", what)?,
+            },
+            "transport_errors_min" => AssertionSpec::TransportErrorsMin {
+                node: req_u16(j, "node", what)?,
+                value: req_u64(j, "value", what)?,
+            },
+            "nic_mask" => AssertionSpec::NicMask {
+                node: req_u16(j, "node", what)?,
+                value: req_u64(j, "value", what)?,
+            },
+            "link_mask" => AssertionSpec::LinkMask {
+                node: req_u16(j, "node", what)?,
+                toward: nic_from(
+                    j.get("toward").context(format!("{what}: missing \"toward\""))?,
+                    what,
+                )?,
+                value: req_u64(j, "value", what)?,
+            },
+            "zero_lost_pages" => AssertionSpec::ZeroLostPages,
+            "served" => AssertionSpec::Served {
+                value: req_u64(j, "value", what)?,
+            },
+            "redispatched_min" => AssertionSpec::RedispatchedMin {
+                value: req_u64(j, "value", what)?,
+            },
+            "redispatched_max" => AssertionSpec::RedispatchedMax {
+                value: req_u64(j, "value", what)?,
+            },
+            "imm_total_min" => AssertionSpec::ImmTotalMin {
+                node: req_u16(j, "node", what)?,
+                value: req_u64(j, "value", what)?,
+            },
+            "ttft_p50_max_ms" => AssertionSpec::TtftP50MaxMs {
+                value: req_f64(j, "value", what)?,
+            },
+            "ttft_p99_max_ms" => AssertionSpec::TtftP99MaxMs {
+                value: req_f64(j, "value", what)?,
+            },
+            "ledger_identities" => AssertionSpec::LedgerIdentities,
+            other => bail!("{what}: unknown check {other:?}"),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            AssertionSpec::TransportErrorsMax { node, value } => obj(vec![
+                ("check", Json::from("transport_errors_max")),
+                ("node", Json::from(*node as u64)),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::TransportErrorsMin { node, value } => obj(vec![
+                ("check", Json::from("transport_errors_min")),
+                ("node", Json::from(*node as u64)),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::NicMask { node, value } => obj(vec![
+                ("check", Json::from("nic_mask")),
+                ("node", Json::from(*node as u64)),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::LinkMask {
+                node,
+                toward,
+                value,
+            } => obj(vec![
+                ("check", Json::from("link_mask")),
+                ("node", Json::from(*node as u64)),
+                ("toward", nic_json(toward)),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::ZeroLostPages => obj(vec![("check", Json::from("zero_lost_pages"))]),
+            AssertionSpec::Served { value } => obj(vec![
+                ("check", Json::from("served")),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::RedispatchedMin { value } => obj(vec![
+                ("check", Json::from("redispatched_min")),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::RedispatchedMax { value } => obj(vec![
+                ("check", Json::from("redispatched_max")),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::ImmTotalMin { node, value } => obj(vec![
+                ("check", Json::from("imm_total_min")),
+                ("node", Json::from(*node as u64)),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::TtftP50MaxMs { value } => obj(vec![
+                ("check", Json::from("ttft_p50_max_ms")),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::TtftP99MaxMs { value } => obj(vec![
+                ("check", Json::from("ttft_p99_max_ms")),
+                ("value", Json::from(*value)),
+            ]),
+            AssertionSpec::LedgerIdentities => {
+                obj(vec![("check", Json::from("ledger_identities"))])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small but every-feature spec used by the round-trip tests.
+    fn sample_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "sample".to_string(),
+            topology: TopologySpec {
+                nodes: 3,
+                gpus: 1,
+                nics_per_gpu: 2,
+                seed: 24661,
+                nic_profile: "efa".to_string(),
+                gpu_profile: "h100".to_string(),
+            },
+            gossip: vec![GossipSpec {
+                from: 0,
+                peers: vec![1],
+            }],
+            chaos: ChaosSpec {
+                seed: 24670,
+                jitter_median_ns: 0,
+                reorder_ns: 20000,
+                reorder_window: 8,
+                nic_events: vec![NicEventSpec {
+                    at: 15000,
+                    nic: NicAddr {
+                        node: 0,
+                        gpu: 0,
+                        nic: 1,
+                    },
+                    up: false,
+                }],
+                link_events: vec![LinkEventSpec {
+                    at: 50000,
+                    src: NicAddr {
+                        node: 1,
+                        gpu: 0,
+                        nic: 0,
+                    },
+                    dst: NicAddr {
+                        node: 2,
+                        gpu: 0,
+                        nic: 0,
+                    },
+                    up: false,
+                }],
+            },
+            workload: vec![
+                WorkloadStep::Write {
+                    src: 0,
+                    dst: 2,
+                    bytes: 65536,
+                },
+                WorkloadStep::KvRequest {
+                    prefiller: 0,
+                    decoder: 1,
+                    seq: 128,
+                },
+            ],
+            assertions: vec![
+                AssertionSpec::ZeroLostPages,
+                AssertionSpec::TransportErrorsMax { node: 1, value: 0 },
+                AssertionSpec::LedgerIdentities,
+            ],
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_through_json() {
+        let spec = sample_spec();
+        let text = spec.to_pretty_string();
+        let back = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+        // Canonical form is a fixpoint: serialize ∘ parse ∘ serialize
+        // is bit-identical.
+        assert_eq!(back.to_pretty_string(), text);
+        // Compact form round-trips too.
+        let compact = spec.to_json().to_string();
+        assert_eq!(ScenarioSpec::parse(&compact).unwrap(), spec);
+    }
+
+    /// The canonical rendering is pinned byte-for-byte: if either the
+    /// JSON serializer or the spec schema changes shape, this fails
+    /// loudly (the committed corpus under `scenarios/` is stored in
+    /// exactly this form).
+    #[test]
+    fn spec_canonical_form_is_pinned() {
+        let spec = ScenarioSpec {
+            name: "pin".to_string(),
+            topology: TopologySpec {
+                nodes: 2,
+                gpus: 1,
+                nics_per_gpu: 1,
+                seed: 7,
+                nic_profile: "cx7".to_string(),
+                gpu_profile: "h100".to_string(),
+            },
+            gossip: vec![],
+            chaos: ChaosSpec::quiet(9),
+            workload: vec![WorkloadStep::Write {
+                src: 0,
+                dst: 1,
+                bytes: 4096,
+            }],
+            assertions: vec![AssertionSpec::TransportErrorsMax { node: 0, value: 0 }],
+        };
+        let want = "{\n  \"assertions\": [\n    {\n      \"check\": \"transport_errors_max\",\n      \"node\": 0,\n      \"value\": 0\n    }\n  ],\n  \"chaos\": {\n    \"jitter_median_ns\": 0,\n    \"link_events\": [],\n    \"nic_events\": [],\n    \"reorder_ns\": 0,\n    \"reorder_window\": 0,\n    \"seed\": 9\n  },\n  \"gossip\": [],\n  \"name\": \"pin\",\n  \"topology\": {\n    \"gpu_profile\": \"h100\",\n    \"gpus\": 1,\n    \"nic_profile\": \"cx7\",\n    \"nics_per_gpu\": 1,\n    \"nodes\": 2,\n    \"seed\": 7\n  },\n  \"workload\": [\n    {\n      \"bytes\": 4096,\n      \"dst\": 1,\n      \"op\": \"write\",\n      \"src\": 0\n    }\n  ]\n}\n";
+        assert_eq!(spec.to_pretty_string(), want);
+        assert_eq!(ScenarioSpec::parse(want).unwrap(), spec);
+    }
+
+    #[test]
+    fn spec_rejects_out_of_range_references() {
+        let mut spec = sample_spec();
+        spec.workload.push(WorkloadStep::Write {
+            src: 0,
+            dst: 9,
+            bytes: 64,
+        });
+        let text = spec.to_pretty_string();
+        let err = ScenarioSpec::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn spec_rejects_unknown_ops_and_profiles() {
+        let good = sample_spec().to_pretty_string();
+        let bad_op = good.replace("\"kv_request\"", "\"teleport\"");
+        let err = ScenarioSpec::parse(&bad_op).unwrap_err().to_string();
+        assert!(err.contains("unknown op"), "{err}");
+        let bad_nic = good.replace("\"efa\"", "\"warp\"");
+        let err = ScenarioSpec::parse(&bad_nic).unwrap_err().to_string();
+        assert!(err.contains("unknown nic_profile"), "{err}");
+    }
+
+    #[test]
+    fn spec_chaos_materializes_profile() {
+        let spec = sample_spec();
+        let p = spec.chaos.profile();
+        assert_eq!(p.seed, 24670);
+        assert_eq!(p.reorder_ns, 20000);
+        assert_eq!(p.reorder_window, 8);
+        assert_eq!(p.nic_events.len(), 1);
+        assert_eq!(p.link_events.len(), 1);
+        assert!(!p.nic_events[0].up);
+        assert!(ChaosSpec::quiet(1).profile().is_quiet());
+    }
+
+    #[test]
+    fn spec_size_orders_shrink_candidates() {
+        let spec = sample_spec();
+        let mut fewer_steps = spec.clone();
+        fewer_steps.workload.pop();
+        assert!(fewer_steps.size() < spec.size());
+        let mut smaller_write = spec.clone();
+        smaller_write.workload[0] = WorkloadStep::Write {
+            src: 0,
+            dst: 2,
+            bytes: 32768,
+        };
+        assert!(smaller_write.size() < spec.size());
+        let mut no_chaos = spec.clone();
+        no_chaos.chaos = ChaosSpec::quiet(no_chaos.chaos.seed);
+        assert!(no_chaos.size() < spec.size());
+    }
+}

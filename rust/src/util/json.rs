@@ -4,9 +4,11 @@
 //!
 //! Supports the full JSON grammar minus exotic number forms; numbers
 //! parse as f64. Strict: trailing garbage, unterminated strings and
-//! bad escapes are errors. Serialization is deterministic: object
-//! keys come out in `BTreeMap` order, so the same value always
-//! renders the same bytes (diffable bench baselines).
+//! bad escapes are errors, reported with 1-based line/column context
+//! (scenario spec files are hand-edited; "offset 417" is useless in
+//! an editor). Serialization is deterministic: object keys come out
+//! in `BTreeMap` order, so the same value always renders the same
+//! bytes (diffable bench baselines and committed scenario specs).
 
 use std::collections::BTreeMap;
 
@@ -35,7 +37,7 @@ impl Json {
         let v = p.value()?;
         p.ws();
         if p.i != p.b.len() {
-            bail!("trailing bytes at offset {}", p.i);
+            bail!("trailing bytes at {}", p.pos(p.i));
         }
         Ok(v)
     }
@@ -242,6 +244,16 @@ struct Parser<'a> {
 }
 
 impl<'a> Parser<'a> {
+    /// Human-readable position of byte offset `i`: 1-based line and
+    /// (byte) column. Computed only on the error path by rescanning
+    /// the prefix, so the happy path carries no bookkeeping.
+    fn pos(&self, i: usize) -> String {
+        let upto = &self.b[..i.min(self.b.len())];
+        let line = 1 + upto.iter().filter(|&&c| c == b'\n').count();
+        let col = 1 + upto.iter().rev().take_while(|&&c| c != b'\n').count();
+        format!("line {line} col {col}")
+    }
+
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -258,9 +270,9 @@ impl<'a> Parser<'a> {
             Ok(())
         } else {
             bail!(
-                "expected '{}' at offset {}, found {:?}",
+                "expected '{}' at {}, found {:?}",
                 c as char,
-                self.i,
+                self.pos(self.i),
                 self.peek().map(|x| x as char)
             )
         }
@@ -275,7 +287,11 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => bail!("unexpected {:?} at offset {}", other.map(|x| x as char), self.i),
+            other => bail!(
+                "unexpected {:?} at {}",
+                other.map(|x| x as char),
+                self.pos(self.i)
+            ),
         }
     }
 
@@ -284,7 +300,7 @@ impl<'a> Parser<'a> {
             self.i += word.len();
             Ok(v)
         } else {
-            bail!("bad literal at offset {}", self.i)
+            bail!("bad literal at {}", self.pos(self.i))
         }
     }
 
@@ -300,15 +316,19 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Json::Num(s.parse::<f64>()?))
+        match s.parse::<f64>() {
+            Ok(n) => Ok(Json::Num(n)),
+            Err(_) => bail!("bad number {:?} at {}", s, self.pos(start)),
+        }
     }
 
     fn string(&mut self) -> Result<String> {
+        let start = self.i;
         self.expect(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
-                None => bail!("unterminated string"),
+                None => bail!("unterminated string starting at {}", self.pos(start)),
                 Some(b'"') => {
                     self.i += 1;
                     return Ok(out);
@@ -326,14 +346,18 @@ impl<'a> Parser<'a> {
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
                             if self.i + 4 >= self.b.len() {
-                                bail!("truncated \\u escape");
+                                bail!("truncated \\u escape at {}", self.pos(self.i - 1));
                             }
                             let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])?;
                             let cp = u32::from_str_radix(hex, 16)?;
                             out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                             self.i += 4;
                         }
-                        other => bail!("bad escape {:?}", other.map(|x| x as char)),
+                        other => bail!(
+                            "bad escape {:?} at {}",
+                            other.map(|x| x as char),
+                            self.pos(self.i - 1)
+                        ),
                     }
                     self.i += 1;
                 }
@@ -371,7 +395,11 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(v));
                 }
-                other => bail!("expected , or ] found {:?}", other.map(|x| x as char)),
+                other => bail!(
+                    "expected , or ] at {}, found {:?}",
+                    self.pos(self.i),
+                    other.map(|x| x as char)
+                ),
             }
         }
     }
@@ -399,7 +427,11 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                other => bail!("expected , or }} found {:?}", other.map(|x| x as char)),
+                other => bail!(
+                    "expected , or }} at {}, found {:?}",
+                    self.pos(self.i),
+                    other.map(|x| x as char)
+                ),
             }
         }
     }
@@ -485,5 +517,103 @@ mod tests {
     fn nonfinite_numbers_serialize_as_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    /// Every parse error names the line and (byte) column where the
+    /// grammar broke — scenario specs are hand-edited multi-line
+    /// files, so "offset 417" is not an acceptable diagnostic.
+    #[test]
+    fn errors_carry_line_and_column() {
+        let cases: &[(&str, &str)] = &[
+            // Missing ':' after the "b" key on line 3, column 7.
+            ("{\n  \"a\": 1,\n  \"b\" 2\n}", "expected ':' at line 3 col 7"),
+            // Trailing comma: value() hits ']' on line 2, column 4.
+            ("[1,\n 2,]", "unexpected Some(']') at line 2 col 4"),
+            // Two top-level values.
+            ("1 2", "trailing bytes at line 1 col 3"),
+            // The opening quote is the useful anchor for runaways.
+            ("{\n \"a\": \"runs off", "unterminated string starting at line 2 col 7"),
+            ("nul", "bad literal at line 1 col 1"),
+            ("[1, 1e+]", "bad number \"1e+\" at line 1 col 5"),
+            ("\"a\\q\"", "bad escape Some('q') at line 1 col 3"),
+            ("\"a\\u00", "truncated \\u escape at line 1 col 3"),
+            ("[1 2]", "expected , or ] at line 1 col 4"),
+            ("{\"a\": 1 \"b\": 2}", "expected , or } at line 1 col 9"),
+        ];
+        for (doc, want) in cases {
+            let err = Json::parse(doc).unwrap_err().to_string();
+            assert!(
+                err.contains(want),
+                "doc {doc:?}: error {err:?} should contain {want:?}"
+            );
+        }
+    }
+
+    /// Random `Json` value generator for the round-trip property:
+    /// finite numbers only (non-finite serialize as null by design),
+    /// strings stressing the escape table and multi-byte UTF-8.
+    fn gen_value(rng: &mut crate::sim::Rng, depth: u32) -> Json {
+        let choices = if depth == 0 { 4 } else { 6 };
+        match rng.below(choices) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => match rng.below(3) {
+                // Integral (the common case: counts, nanoseconds) …
+                0 => Json::Num(rng.below(1 << 40) as f64 - (1 << 39) as f64),
+                // … small fractions, and full-range finite doubles
+                // (f64 Display is shortest-round-trip, so these must
+                // survive parse ∘ serialize bit-exactly too).
+                1 => Json::Num(rng.below(1_000_000) as f64 / 1024.0),
+                _ => Json::Num(f64::from_bits(rng.next_u64() >> 2)),
+            },
+            3 => {
+                let alphabet: &[char] =
+                    &['a', 'Z', '0', ' ', '"', '\\', '\n', '\t', '\u{1}', 'é', '—', '日'];
+                let n = rng.below(12) as usize;
+                Json::Str(
+                    (0..n)
+                        .map(|_| alphabet[rng.below(alphabet.len() as u64) as usize])
+                        .collect(),
+                )
+            }
+            4 => {
+                let n = rng.below(4) as usize;
+                Json::Arr((0..n).map(|_| gen_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.below(4) as usize;
+                Json::Obj(
+                    (0..n)
+                        .map(|i| {
+                            let key = format!("k{}", rng.below(10) * 10 + i as u64);
+                            (key, gen_value(rng, depth - 1))
+                        })
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    /// parse ∘ serialize ≡ id, for both the compact and the pretty
+    /// form, over randomly generated documents.
+    #[test]
+    fn prop_parse_serialize_round_trips() {
+        crate::util::prop::check(
+            "json parse∘serialize ≡ id",
+            |rng| gen_value(rng, 3),
+            |j| {
+                let compact = Json::parse(&j.to_string())
+                    .map_err(|e| format!("compact reparse failed: {e}"))?;
+                if &compact != j {
+                    return Err(format!("compact round trip drifted: {compact:?}"));
+                }
+                let pretty = Json::parse(&j.to_pretty(2))
+                    .map_err(|e| format!("pretty reparse failed: {e}"))?;
+                if &pretty != j {
+                    return Err(format!("pretty round trip drifted: {pretty:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,0 +1,201 @@
+//! Committed-corpus scenario tests: every spec under `scenarios/` at
+//! the repo root parses, is stored in exact canonical form, runs
+//! green on the DES runtime, and reproduces the outcome of the
+//! hand-written chaos harness it was ported from on a same-seed
+//! cluster — the spec file and the Rust harness are two spellings of
+//! the same experiment.
+
+use fabric_lib::apps::kvcache::{run_kv_failover, run_kv_link_partition, run_kv_nic_failover_on};
+use fabric_lib::engine::traits::{new_flag, Cluster, Notify, OnRecv, RuntimeKind};
+use fabric_lib::fabric::chaos::ChaosProfile;
+use fabric_lib::fabric::nic::NicAddr;
+use fabric_lib::fabric::profile::{GpuProfile, NicProfile};
+use fabric_lib::scenario::{run_scenario, RunOptions, ScenarioReport, ScenarioSpec};
+
+const CORPUS: [&str; 4] = [
+    "gossip_second_sender.json",
+    "kv_fleet_failover.json",
+    "kv_link_partition.json",
+    "kv_nic_failover.json",
+];
+
+fn corpus_path(name: &str) -> String {
+    format!("{}/../scenarios/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load(name: &str) -> ScenarioSpec {
+    ScenarioSpec::load(&corpus_path(name))
+        .unwrap_or_else(|e| panic!("corpus spec {name} must load: {e}"))
+}
+
+/// Run one corpus spec on the DES runtime; every committed spec must
+/// pass its own declared assertions.
+fn run(name: &str) -> ScenarioReport {
+    let report = run_scenario(&load(name), &RunOptions::default())
+        .unwrap_or_else(|e| panic!("corpus spec {name} must run: {e}"));
+    assert!(report.passed(), "{name} failed: {:?}", report.failures);
+    report
+}
+
+#[test]
+fn corpus_specs_are_canonical_and_carry_assertions() {
+    for name in CORPUS {
+        let text = std::fs::read_to_string(corpus_path(name))
+            .unwrap_or_else(|e| panic!("reading corpus spec {name}: {e}"));
+        let spec = ScenarioSpec::parse(&text)
+            .unwrap_or_else(|e| panic!("corpus spec {name} must parse: {e}"));
+        assert!(
+            !spec.assertions.is_empty(),
+            "{name}: committed specs must assert something (fabric-lint R9)"
+        );
+        // The committed bytes are the canonical serialization — a
+        // spec edited by hand into a non-canonical shape fails here.
+        assert_eq!(
+            spec.to_pretty_string(),
+            text,
+            "{name} is not stored in canonical to_pretty(2) form"
+        );
+    }
+}
+
+#[test]
+fn corpus_runs_are_deterministic_on_des() {
+    for name in CORPUS {
+        let a = run(name);
+        let b = run(name);
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "{name}: same-seed DES runs must agree exactly"
+        );
+        assert_eq!(a.end_ns, b.end_ns, "{name}");
+    }
+}
+
+/// Ported from `chaos_kv_single_nic_failover_completes_without_redispatch`:
+/// the spec run and the hand harness on a same-seed cluster agree on
+/// the NIC mask and the transport-error count.
+#[test]
+fn spec_kv_nic_failover_matches_hand_harness() {
+    let report = run("kv_nic_failover.json");
+    let mut cluster = Cluster::new_with(
+        RuntimeKind::Des,
+        2,
+        1,
+        2,
+        0xFA2,
+        NicProfile::efa(),
+        GpuProfile::h100(),
+    );
+    let engines = cluster.engines_rc();
+    let (errors, mask) = {
+        let (mut cx, _) = cluster.parts();
+        run_kv_nic_failover_on(
+            &mut cx,
+            engines[0].clone(),
+            engines[1].clone(),
+            GpuProfile::h100(),
+            128,
+            15_000,
+        )
+    };
+    cluster.shutdown();
+    assert_eq!(mask, 0b01, "NIC 1 masked out of the prefiller's group");
+    assert_eq!(report.nic_masks[0], mask, "spec and harness masks agree");
+    assert_eq!(
+        report.transport_errors[0], errors,
+        "spec and harness transport errors agree"
+    );
+    assert!(report.no_lost_pages);
+}
+
+/// Ported from `chaos_kv_link_partition_completes_without_redispatch`:
+/// a directed-link cut is not a local NIC failure — the mask stays
+/// full on both spellings, and error counts agree.
+#[test]
+fn spec_kv_link_partition_matches_hand_harness() {
+    let report = run("kv_link_partition.json");
+    let (errors, mask, link_mask) = run_kv_link_partition(128, 15_000);
+    assert_eq!(mask, 0b11, "a path failure is not a local NIC failure");
+    assert_eq!(report.nic_masks[0], mask, "spec and harness masks agree");
+    assert_eq!(
+        report.transport_errors[0], errors,
+        "spec and harness transport errors agree"
+    );
+    if errors > 0 {
+        assert_eq!(link_mask, 0b01, "only the cut link's lane is masked");
+    }
+    assert!(report.no_lost_pages);
+}
+
+/// Ported from `chaos_kv_failover_redispatches_and_completes_every_request`:
+/// the fleet spec reproduces served / redispatched / live-prefiller
+/// counts of the hand harness on a same-seed cluster.
+#[test]
+fn spec_kv_fleet_failover_matches_hand_harness() {
+    let report = run("kv_fleet_failover.json");
+    let out = run_kv_failover(6, 10_000);
+    assert_eq!(out.served, 6, "{out:?}");
+    assert_eq!(report.served, out.served as u64);
+    assert_eq!(report.redispatched, out.redispatched as u64);
+    assert_eq!(report.live_prefillers, out.live_prefillers as u64);
+    assert_eq!(report.transport_errors[0], out.transport_errors);
+    assert!(report.no_lost_pages && out.no_lost_pages, "{out:?}");
+}
+
+/// Ported from `chaos_gossip_second_sender_completes_clean`: sender A
+/// pays the error round-trips for the partitioned destination NIC and
+/// gossips; sender B completes with zero transport errors. The inline
+/// hand run below issues the exact call sequence the executor issues,
+/// so the counters must agree number-for-number.
+#[test]
+fn spec_gossip_second_sender_matches_hand_harness() {
+    let report = run("gossip_second_sender.json");
+    let mut cluster = Cluster::new(RuntimeKind::Des, 3, 1, 2, 0x6055);
+    let (a_errors, b_errors) = {
+        let (mut cx, engines) = cluster.parts();
+        let (a, b, d) = (engines[0], engines[1], engines[2]);
+        let d0 = NicAddr {
+            node: 2,
+            gpu: 0,
+            nic: 0,
+        };
+        a.set_gossip_peers(0, vec![b.group_address(0)]);
+        let mut profile = ChaosProfile::new(0x605E);
+        for node in [0u16, 1] {
+            for nic in 0..2u8 {
+                profile = profile.link_down(50_000, (NicAddr { node, gpu: 0, nic }, d0));
+            }
+        }
+        a.inject_chaos(&mut cx, &profile);
+        b.submit_recvs(&mut cx, 0, 64, 4, OnRecv::handler(|_m| {}));
+        let len: usize = 8 << 20;
+        let pat: Vec<u8> = (0..len).map(|i| (i * 3 % 251) as u8).collect();
+        for sender in [a, b] {
+            let (src, _) = sender.alloc_mr(0, len);
+            let (dst_h, dst_d) = d.alloc_mr(0, len);
+            src.buf.write(0, &pat);
+            let done = new_flag();
+            sender
+                .submit_single_write(
+                    &mut cx,
+                    (&src, 0),
+                    len as u64,
+                    (&dst_d, 0),
+                    None,
+                    Notify::Flag(done.clone()),
+                )
+                .unwrap();
+            cx.wait(&done);
+            cx.settle();
+            assert_eq!(dst_h.buf.to_vec(), pat, "zero lost payload");
+        }
+        cx.settle();
+        (a.transport_errors(), b.transport_errors())
+    };
+    cluster.shutdown();
+    assert!(a_errors >= 2, "A paid the error round-trips");
+    assert_eq!(b_errors, 0, "B never increments transport_errors");
+    assert_eq!(report.transport_errors[0], a_errors, "spec matches A's count");
+    assert_eq!(report.transport_errors[1], b_errors, "spec matches B's count");
+}

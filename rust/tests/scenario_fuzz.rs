@@ -1,0 +1,108 @@
+//! Fuzz-and-shrink integration: a spec with a postcondition below
+//! what the system can achieve must fail, shrink to a no-larger spec
+//! that still fails, and replay bit-identically; and the CI-sized
+//! 25-seed quick sweep completes with every failure written as a
+//! replayable reproducer spec file.
+
+use fabric_lib::engine::traits::RuntimeKind;
+use fabric_lib::scenario::{
+    check_spec, fuzz_sweep, gen_spec, run_scenario, shrink, AssertionSpec, ChaosSpec, RunOptions,
+    ScenarioSpec, TopologySpec, WorkloadStep,
+};
+
+/// A spec that must fail: the TTFT p50 ceiling (1 µs) is far below
+/// what any prefill can achieve, so the serving step's distribution
+/// always violates it. The extra write step and ledger assertion give
+/// the shrinker structure to strip away.
+fn impossible_ttft_spec() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "impossible-ttft".to_string(),
+        topology: TopologySpec {
+            nodes: 2,
+            gpus: 1,
+            nics_per_gpu: 1,
+            seed: 11,
+            nic_profile: "cx7".to_string(),
+            gpu_profile: "h100".to_string(),
+        },
+        gossip: vec![],
+        chaos: ChaosSpec::quiet(3),
+        workload: vec![
+            WorkloadStep::Write {
+                src: 0,
+                dst: 1,
+                bytes: 1 << 16,
+            },
+            WorkloadStep::Serving {
+                requests: 50,
+                rate_ns: 200_000,
+                seqs: vec![512],
+            },
+        ],
+        assertions: vec![
+            AssertionSpec::LedgerIdentities,
+            AssertionSpec::TtftP50MaxMs { value: 0.001 },
+        ],
+    }
+}
+
+#[test]
+fn shrinking_preserves_failure_and_replays_deterministically() {
+    let spec = impossible_ttft_spec();
+    let failure = check_spec(&spec, true).expect("a TTFT ceiling below achievable must fail");
+    assert!(
+        failure.contains("TTFT"),
+        "the failure is the TTFT assertion: {failure}"
+    );
+
+    let small = shrink(&spec, true, 80);
+    assert!(
+        small.size() <= spec.size(),
+        "the reproducer is never larger than the original"
+    );
+    check_spec(&small, true).expect("the shrunk reproducer must still fail");
+
+    // Replayable: the reproducer round-trips through its on-disk form
+    // and two direct runs agree on the full report fingerprint.
+    assert_eq!(ScenarioSpec::parse(&small.to_pretty_string()).unwrap(), small);
+    let opts = RunOptions {
+        runtime: RuntimeKind::Des,
+        quick: true,
+    };
+    let a = run_scenario(&small, &opts).unwrap();
+    let b = run_scenario(&small, &opts).unwrap();
+    assert_eq!(a.fingerprint(), b.fingerprint(), "replay must be exact");
+    assert!(!a.passed(), "the replayed reproducer still fails");
+}
+
+#[test]
+fn quick_fuzz_sweep_shrinks_every_failure_to_a_replayable_spec() {
+    let out_dir = format!("{}/target/fuzz-sweep-test", env!("CARGO_MANIFEST_DIR"));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let failures = fuzz_sweep(0, 25, true, &out_dir).unwrap();
+    // The sampled space is survivable by construction, so a healthy
+    // engine sweeps clean; any failure must have left behind a
+    // loadable, no-larger, assertion-carrying reproducer spec.
+    for f in &failures {
+        let spec = ScenarioSpec::load(&f.path)
+            .unwrap_or_else(|e| panic!("seed {}: reproducer must reload: {e}", f.seed));
+        assert!(
+            spec.size() <= gen_spec(f.seed, true).size(),
+            "seed {}: reproducer grew during shrinking",
+            f.seed
+        );
+        assert!(!spec.assertions.is_empty(), "seed {}", f.seed);
+        // check_spec runs guarded (panics caught), so a reproducer
+        // that crashes the engine still yields a diagnosis here.
+        assert!(
+            check_spec(&spec, true).is_some(),
+            "seed {}: reloaded reproducer no longer fails ({})",
+            f.seed,
+            f.shrunk_failure
+        );
+    }
+    assert!(
+        failures.is_empty(),
+        "engine bugs surfaced by the sweep (reproducers in {out_dir}): {failures:?}"
+    );
+}

@@ -55,6 +55,11 @@ R8  WrError attribution: every non-test `CqeKind::WrError` handling
     function whose body does. An unattributed WrError path breaks the
     `wr_err_link + wr_err_nic == wr_err_total` accounting identity
     the chaos tests assert.
+R9  scenario corpus: every committed spec under `scenarios/*.json`
+    parses as a JSON object and carries a non-empty `assertions`
+    array — a committed spec that asserts nothing reproduces
+    nothing. (The executor in rust/src/scenario/ enforces the full
+    schema; this gate keeps the corpus loadable with no toolchain.)
 
 Findings print as `file:line RULE message`; exit code 1 when any
 finding survives the allowlist, 0 otherwise. Intentional exceptions
@@ -68,6 +73,7 @@ toolchain at all.
 """
 
 import argparse
+import json
 import os
 import re
 import sys
@@ -928,6 +934,51 @@ def check_r8(root, sources, findings):
 
 
 # ---------------------------------------------------------------------
+# R9: committed scenario specs parse and assert something
+# ---------------------------------------------------------------------
+
+
+def check_r9(root, findings):
+    scen_dir = os.path.join(root, "scenarios")
+    if not os.path.isdir(scen_dir):
+        return
+    for fname in sorted(os.listdir(scen_dir)):
+        if not fname.endswith(".json"):
+            continue
+        rel = os.path.join("scenarios", fname)
+        with open(os.path.join(scen_dir, fname), encoding="utf-8") as fh:
+            text = fh.read()
+        try:
+            doc = json.loads(text)
+        except json.JSONDecodeError as e:
+            findings.append(
+                Finding(
+                    "R9",
+                    rel,
+                    e.lineno,
+                    "committed scenario spec is not valid JSON: %s" % e.msg,
+                )
+            )
+            continue
+        if not isinstance(doc, dict):
+            findings.append(
+                Finding("R9", rel, 1, "a scenario spec must be a JSON object")
+            )
+            continue
+        assertions = doc.get("assertions")
+        if not isinstance(assertions, list) or not assertions:
+            findings.append(
+                Finding(
+                    "R9",
+                    rel,
+                    1,
+                    "scenario spec carries no assertions — a committed spec "
+                    "must declare at least one postcondition",
+                )
+            )
+
+
+# ---------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------
 
@@ -958,6 +1009,7 @@ def run(root, allowlist):
     check_r5(root, sources, findings)
     check_r6(root, sources, allowlist.lock_order if allowlist else [], findings)
     check_r8(root, sources, findings)
+    check_r9(root, findings)
     notes = []
     if allowlist:
         findings = allowlist.filter(findings)

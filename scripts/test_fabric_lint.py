@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """Tests for fabric_lint.py: one passing and one failing fixture per
-rule R1–R8, plus allowlist round-trip and CLI exit codes.
+rule R1–R9, plus allowlist round-trip and CLI exit codes.
 
 Run directly (`python3 scripts/test_fabric_lint.py`) or via the CI
 `lint-invariants` job. Stdlib-only, like the linter.
@@ -578,6 +578,47 @@ fn deliver(&self) {
         sources = fabric_lint.collect_sources(REPO_ROOT)
         findings = []
         fabric_lint.check_r8(REPO_ROOT, sources, findings)
+        self.assertEqual([str(f) for f in findings], [])
+
+
+class TestR9ScenarioCorpus(unittest.TestCase):
+    GOOD = (
+        '{\n  "assertions": [{"check": "ledger_identities"}],\n'
+        '  "name": "ok"\n}\n'
+    )
+
+    def test_pass_spec_with_assertions(self):
+        findings, _ = lint_tree({"scenarios/ok.json": self.GOOD})
+        self.assertEqual(findings, [])
+
+    def test_fail_invalid_json(self):
+        findings, _ = lint_tree({"scenarios/broken.json": '{"assertions": [,]}'})
+        self.assertEqual(rules_of(findings), ["R9"])
+        self.assertIn("not valid JSON", findings[0].message)
+
+    def test_fail_empty_assertions(self):
+        findings, _ = lint_tree({"scenarios/hollow.json": '{"assertions": []}'})
+        self.assertEqual(rules_of(findings), ["R9"])
+        self.assertIn("no assertions", findings[0].message)
+
+    def test_fail_missing_assertions_and_non_object(self):
+        findings, _ = lint_tree(
+            {
+                "scenarios/none.json": '{"name": "x"}',
+                "scenarios/list.json": "[1, 2]",
+            }
+        )
+        self.assertEqual([f.rule for f in findings], ["R9", "R9"])
+
+    def test_non_json_files_ignored(self):
+        findings, _ = lint_tree({"scenarios/README.md": "# corpus\n"})
+        self.assertEqual(findings, [])
+
+    def test_real_corpus_is_clean(self):
+        # The committed corpus under scenarios/ must satisfy R9 as
+        # written — the rule gates CI against the live spec files.
+        findings = []
+        fabric_lint.check_r9(REPO_ROOT, findings)
         self.assertEqual([str(f) for f in findings], [])
 
 
